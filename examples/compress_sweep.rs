@@ -1,0 +1,69 @@
+//! Compression sweep in pure Rust: cluster the trained ViT weights at
+//! every (scheme, cluster-count) with the Rust K-means toolkit — no
+//! Python needed — and report size, reconstruction error, and the
+//! accuracy of the c=64 point through the runtime.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_sweep
+//! ```
+
+use clusterformer::clustering::{ClusterScheme, Quantizer};
+use clusterformer::coordinator::eval::evaluate;
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let mut registry = Registry::load("artifacts")?;
+    let entry = registry.manifest.model("vit")?.clone();
+    let names = entry.clustered_names();
+    let weights = registry.weights("vit")?.clone();
+
+    println!("== Rust-side compression sweep (vit, {} tensors) ==", names.len());
+    println!(
+        "{:<10} {:>5} {:>10} {:>10} {:>8} {:>12} {:>10}",
+        "scheme", "c", "orig MB", "comp MB", "ratio", "table B", "mse"
+    );
+    for scheme in [ClusterScheme::Entire, ClusterScheme::PerLayer] {
+        for c in [8usize, 16, 32, 64, 128, 256] {
+            let t0 = std::time::Instant::now();
+            let ct = Quantizer::new(c, scheme).run(&names, &weights)?;
+            let mse = ct.quantization_mse(&weights)?;
+            println!(
+                "{:<10} {:>5} {:>10.2} {:>10.2} {:>7.2}x {:>12} {:>10.2e}  ({:.2}s)",
+                scheme.name(),
+                c,
+                ct.original_bytes() as f64 / 1e6,
+                ct.compressed_bytes() as f64 / 1e6,
+                ct.original_bytes() as f64 / ct.compressed_bytes() as f64,
+                ct.table_bytes(),
+                mse,
+                t0.elapsed().as_secs_f64(),
+            );
+        }
+    }
+
+    // Cross-check: the Rust-clustered representation should match the
+    // Python-clustered artifact in reconstruction error.
+    let ct = Quantizer::new(64, ClusterScheme::PerLayer).run(&names, &weights)?;
+    let py = registry.clustered("vit", ClusterScheme::PerLayer, 64)?;
+    let mse_rs = ct.quantization_mse(&weights)?;
+    let mse_py = py.quantization_mse(&weights)?;
+    println!(
+        "\ncross-validation vs python artifact (perlayer, c=64): rust mse {mse_rs:.3e} vs python mse {mse_py:.3e} ({:+.2}%)",
+        (mse_rs / mse_py - 1.0) * 100.0
+    );
+
+    // And the c=64 accuracy through the actual runtime.
+    let engine = Engine::cpu()?;
+    for key in [
+        VariantKey::Baseline,
+        VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
+    ] {
+        let r = evaluate(&engine, &mut registry, "vit", key, 256)?;
+        println!(
+            "runtime accuracy {}: top1={:.4} top5={:.4} ({:.1} img/s)",
+            r.variant, r.top1, r.top5, r.images_per_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Profile a model the way the paper's §III-A does: a per-op-category
+//! breakdown of compute (Fig. 2) and memory (Fig. 3), from both the
+//! static HLO cost analysis and measured micro-module wall times.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example profile_model
+//! ```
+
+use std::time::Instant;
+
+use clusterformer::hlo::{CostAnalysis, HloModule};
+use clusterformer::model::Registry;
+use clusterformer::runtime::Engine;
+use clusterformer::tensor::{Dtype, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::load("artifacts")?;
+    let engine = Engine::cpu()?;
+
+    for model in ["vit", "deit"] {
+        let entry = registry.manifest.model(model)?;
+        let file = &entry.hlo_baseline[&8];
+        let module = HloModule::parse_file(registry.manifest.path(file))?;
+        let cost = CostAnalysis::of(&module)?;
+        println!(
+            "\n== {model} (batch 8): static HLO analysis — {:.1} MFLOP/pass, {} instructions ==",
+            cost.total_flops() / 1e6,
+            cost.opcode_counts.values().sum::<usize>()
+        );
+        println!("{:<16} {:>8} {:>8}", "category", "flops%", "bytes%");
+        let tb = cost.total_bytes().max(1.0);
+        for (cat, frac) in cost.flop_breakdown() {
+            println!(
+                "{:<16} {:>7.1}% {:>7.1}%",
+                cat.name(),
+                frac * 100.0,
+                cost.bytes.get(&cat).copied().unwrap_or(0.0) / tb * 100.0
+            );
+        }
+    }
+
+    // Measured micro-module wall times at model shapes (Fig. 2 companion).
+    println!("\n== measured micro-kernel times (model shapes, batch 8) ==");
+    let mut rows = Vec::new();
+    for (op, (file, shapes)) in &registry.manifest.micro_hlo {
+        let exe = engine.load_hlo(registry.manifest.path(file))?;
+        let inputs: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| Tensor::zeros(Dtype::F32, s.clone()))
+            .collect();
+        // warmup + measure
+        exe.run(&inputs)?;
+        let t0 = Instant::now();
+        let iters = 50;
+        for _ in 0..iters {
+            exe.run(&inputs)?;
+        }
+        rows.push((op.clone(), t0.elapsed().as_secs_f64() / iters as f64));
+    }
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let total: f64 = rows.iter().map(|(_, t)| t).sum();
+    for (op, t) in &rows {
+        println!(
+            "{:<16} {:>9.1} µs  {:>5.1}% of micro total",
+            op,
+            t * 1e6,
+            t / total * 100.0
+        );
+    }
+    Ok(())
+}

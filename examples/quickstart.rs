@@ -1,0 +1,71 @@
+//! Quickstart: load the AOT artifacts, classify a few validation images
+//! with the FP32 baseline and the clustered-64 model, and compare.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::worker::VariantExecutor;
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let mut registry = Registry::load("artifacts")?;
+    let class_names = registry.manifest.class_names.clone();
+    let (images, labels) = registry.val_set()?;
+
+    println!("== clusterformer quickstart ==");
+    println!("platform: {}", engine.platform());
+
+    // Load both representations of the ViT.
+    let baseline =
+        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)?;
+    let clustered = VariantExecutor::load(
+        &engine,
+        &mut registry,
+        "vit",
+        VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
+    )?;
+    println!(
+        "baseline weight stream: {:.2} MB | clustered-64: {:.2} MB ({:.2}x) + {} B table",
+        baseline.weight_stream_bytes as f64 / 1e6,
+        clustered.weight_stream_bytes as f64 / 1e6,
+        baseline.weight_stream_bytes as f64 / clustered.weight_stream_bytes as f64,
+        clustered.table_bytes,
+    );
+
+    // Classify the first 8 validation images with both.
+    let batch = images.slice_rows(0, 8)?;
+    let (rows_b, _) = baseline.execute(&batch)?;
+    let (rows_c, _) = clustered.execute(&batch)?;
+    println!("\n{:<4} {:<10} {:<22} {:<22}", "img", "truth", "baseline", "clustered-64");
+    let mut agree = 0;
+    for i in 0..8 {
+        let pick = |row: &[f32]| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, &v)| (c, v))
+                .unwrap()
+        };
+        let (cb, vb) = pick(&rows_b[i]);
+        let (cc, vc) = pick(&rows_c[i]);
+        if cb == cc {
+            agree += 1;
+        }
+        let name = |c: usize| {
+            class_names.get(c).cloned().unwrap_or_else(|| c.to_string())
+        };
+        println!(
+            "{:<4} {:<10} {:<22} {:<22}",
+            i,
+            name(labels[i] as usize),
+            format!("{} ({vb:.2})", name(cb)),
+            format!("{} ({vc:.2})", name(cc)),
+        );
+    }
+    println!("\nbaseline and clustered agree on {agree}/8 predictions");
+    Ok(())
+}

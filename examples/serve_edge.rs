@@ -1,0 +1,123 @@
+//! End-to-end serving driver (DESIGN.md E7) — the required proof that all
+//! layers compose: Pallas kernels (L1) lowered into the HLO artifacts
+//! (L2) are served by the Rust coordinator (L3) on a real workload.
+//!
+//! Starts the server with the ViT baseline AND the clustered-64 variant,
+//! drives an open-loop Poisson request stream from the validation set at
+//! increasing rates, and reports per-variant latency percentiles,
+//! throughput, accuracy-on-served-traffic, and the memory footprint each
+//! representation streams per inference.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_edge
+//! ```
+
+use std::time::{Duration, Instant};
+
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::{
+    BatchPolicy, BatcherConfig, Server, ServerConfig,
+};
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::tensor::Tensor;
+use clusterformer::util::rng::Pcg32;
+
+const RATES: &[f64] = &[20.0, 60.0, 120.0];
+const DURATION_S: f64 = 6.0;
+
+fn main() -> anyhow::Result<()> {
+    let clustered =
+        VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 };
+    println!("== serve_edge: e2e serving driver ==");
+    println!("starting server (compiles 2 variants x 3 batch sizes)...");
+    let server = Server::start(ServerConfig {
+        artifacts_dir: "artifacts".into(),
+        targets: vec![
+            ("vit".to_string(), VariantKey::Baseline),
+            ("vit".to_string(), clustered),
+        ],
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(15),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 512,
+        },
+    })?;
+
+    let registry = Registry::load("artifacts")?;
+    let (images, labels) = registry.val_set()?;
+    let n_val = images.shape()[0];
+
+    println!(
+        "\n{:<22} {:>7} {:>9} {:>9} {:>9} {:>10} {:>8}",
+        "target", "rate", "p50", "p99", "thruput", "accuracy", "done"
+    );
+    for &target in &["vit/baseline", "vit/perlayer_64"] {
+        for &rate in RATES {
+            let mut rng = Pcg32::new(42);
+            let t0 = Instant::now();
+            let mut pending = Vec::new();
+            let mut truth = Vec::new();
+            let mut i = 0usize;
+            while t0.elapsed().as_secs_f64() < DURATION_S {
+                std::thread::sleep(Duration::from_secs_f64(
+                    rng.exponential(rate).min(0.5),
+                ));
+                let row = i % n_val;
+                let img = single_image(&images, row)?;
+                pending.push(server.router.submit(target, img)?.1);
+                truth.push(labels[row]);
+                i += 1;
+            }
+            let mut lat = Vec::new();
+            let mut correct = 0usize;
+            let mut done = 0usize;
+            for (rx, label) in pending.iter().zip(&truth) {
+                if let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
+                    if !resp.logits.is_empty() {
+                        done += 1;
+                        lat.push(resp.latency_s);
+                        if resp.predicted == *label as usize {
+                            correct += 1;
+                        }
+                    }
+                }
+            }
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let pct = |q: f64| {
+                clusterformer::util::stats::percentile_sorted(&lat, q) * 1e3
+            };
+            println!(
+                "{:<22} {:>6.0}/s {:>8.2}ms {:>8.2}ms {:>7.1}/s {:>9.4} {:>5}/{}",
+                target,
+                rate,
+                pct(0.50),
+                pct(0.99),
+                done as f64 / t0.elapsed().as_secs_f64(),
+                correct as f64 / done.max(1) as f64,
+                done,
+                i
+            );
+        }
+    }
+
+    println!("\n== coordinator metrics ==\n{}", server.snapshot().markdown());
+    let mut reg = Registry::load("artifacts")?;
+    let base = reg.variant("vit", VariantKey::Baseline)?;
+    let clus = reg.variant("vit", clustered)?;
+    println!(
+        "weight stream per inference: baseline {:.2} MB -> clustered {:.2} MB ({:.2}x reduction)",
+        base.weight_stream_bytes as f64 / 1e6,
+        clus.weight_stream_bytes as f64 / 1e6,
+        base.weight_stream_bytes as f64 / clus.weight_stream_bytes as f64
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn single_image(images: &Tensor, row: usize) -> anyhow::Result<Tensor> {
+    let mut img = images.slice_rows(row, row + 1)?;
+    let shape = img.shape()[1..].to_vec();
+    img.reshape(shape)?;
+    Ok(img)
+}

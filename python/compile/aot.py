@@ -1,0 +1,313 @@
+"""AOT pipeline: train -> cluster -> lower -> export artifacts.
+
+Runs once under `make artifacts`; the Rust binary is self-contained
+afterwards. Produces, under ``artifacts/``:
+
+  * ``manifest.json``            — the contract consumed by rust/src/model
+  * ``{model}_weights.tpak``     — trained FP32 parameters
+  * ``{model}_clustered_{scheme}_{c}.tpak`` — u8 indices + padded codebooks
+  * ``{model}_{batch}_baseline.hlo.txt``   — kernel-path forward, FP32
+  * ``{model}_{batch}_clustered.hlo.txt``  — kernel-path forward, clustered
+  * ``micro_{op}.hlo.txt``       — per-op-category micro modules (Fig. 2)
+  * ``val.tpak``                 — validation images + labels
+  * ``{model}_goldens.tpak``     — logits oracles for Rust integration tests
+  * ``accuracy_python.json``     — python-side accuracy sweep (cross-check)
+
+HLO is exported as **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import kmeans as K
+from . import model as M
+from . import tnsr
+from . import train as T
+from .kernels import ref
+
+BATCH_SIZES = (1, 8, 32)
+GOLDEN_N = 32  # images in the golden logits fixtures
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def model_configs() -> dict[str, M.ModelConfig]:
+    dim = _env_int("CLUSTERFORMER_DIM", 192)
+    depth = _env_int("CLUSTERFORMER_DEPTH", 6)
+    heads = _env_int("CLUSTERFORMER_HEADS", 3)
+    return {
+        "vit": M.ModelConfig(name="vit", dim=dim, depth=depth, heads=heads),
+        "deit": M.ModelConfig(
+            name="deit", dim=dim, depth=depth, heads=heads, distilled=True
+        ),
+    }
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_baseline(cfg: M.ModelConfig, batch: int) -> str:
+    fn = M.make_baseline_fn(cfg, use_kernels=True)
+    img = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, 3), jnp.float32)
+    flat = [
+        jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in M.param_manifest(cfg)
+    ]
+    return to_hlo_text(jax.jit(fn).lower(img, *flat))
+
+
+def lower_clustered(cfg: M.ModelConfig, batch: int) -> str:
+    fn = M.make_clustered_fn(cfg)
+    img = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, 3), jnp.float32)
+    n_cl = len(M.clustered_names(cfg))
+    cbs = jax.ShapeDtypeStruct((n_cl, K.CODEBOOK_PAD), jnp.float32)
+    flat = [
+        jax.ShapeDtypeStruct(s.shape, jnp.uint8 if s.clustered else jnp.float32)
+        for s in M.param_manifest(cfg)
+    ]
+    return to_hlo_text(jax.jit(fn).lower(img, cbs, *flat))
+
+
+def lower_micro_modules(cfg: M.ModelConfig, batch: int) -> dict[str, dict]:
+    """Per-op-category micro modules at model shapes, for the Fig. 2
+    measured execution-time breakdown."""
+    t, d, mlp = cfg.n_tokens, cfg.dim, cfg.dim * cfg.mlp_ratio
+    rows = batch * t
+    f32 = jnp.float32
+
+    def spec(*shape):
+        return jax.ShapeDtypeStruct(shape, f32)
+
+    mods = {
+        "matmul_qkv": (
+            lambda x, w: (ref.matmul(x, w),),
+            [spec(rows, d), spec(d, 3 * d)],
+        ),
+        "matmul_mlp": (
+            lambda x, w: (ref.matmul(x, w),),
+            [spec(rows, d), spec(d, mlp)],
+        ),
+        "softmax": (
+            lambda s: (ref.softmax(s, axis=-1),),
+            [spec(batch * cfg.heads, t, t)],
+        ),
+        "layernorm": (
+            lambda x, g, b: (ref.layernorm(x, g, b),),
+            [spec(rows, d), spec(d), spec(d)],
+        ),
+        "gelu": (lambda x: (ref.gelu(x),), [spec(rows, mlp)]),
+    }
+    out = {}
+    for name, (fn, args) in mods.items():
+        out[name] = {
+            "hlo": to_hlo_text(jax.jit(fn).lower(*args)),
+            "shapes": [list(a.shape) for a in args],
+        }
+    return out
+
+
+def accuracy_sweep(
+    params: dict[str, np.ndarray],
+    cfg: M.ModelConfig,
+    val_x: np.ndarray,
+    val_y: np.ndarray,
+    log=print,
+) -> dict:
+    """Python-side Figs. 7/8 cross-check: accuracy for every (scheme, c)."""
+    out: dict = {"baseline": {}}
+    jp = {k: jnp.asarray(v) for k, v in params.items()}
+    top1, top5, _ = T.eval_model(jp, cfg, val_x, val_y)
+    out["baseline"] = {"top1": top1, "top5": top5}
+    for scheme in K.SCHEMES:
+        for c in K.CLUSTER_SWEEP:
+            cm = K.cluster_params(params, cfg, c, scheme)
+            deq = {
+                k: jnp.asarray(v)
+                for k, v in K.dequantize_params(params, cm, cfg).items()
+            }
+            t1, t5, _ = T.eval_model(deq, cfg, val_x, val_y)
+            out[f"{scheme}_{c}"] = {
+                "top1": t1,
+                "top5": t5,
+                "mse": K.quantization_error(params, cm, cfg),
+            }
+            log(f"[sweep:{cfg.name}] {scheme} c={c}: top1={t1:.4f} top5={t5:.4f}")
+    return out
+
+
+def run(out_dir: str, quick: bool = False, log=print) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+    cfgs = model_configs()
+    if quick:
+        cfgs = {
+            name: M.ModelConfig(
+                name=name, dim=64, depth=2, heads=2, distilled=(name == "deit")
+            )
+            for name in cfgs
+        }
+    steps = _env_int("CLUSTERFORMER_STEPS", 60 if quick else 1000)
+    n_train = _env_int("CLUSTERFORMER_NTRAIN", 1024 if quick else 8192)
+    n_val = _env_int("CLUSTERFORMER_NVAL", 128 if quick else 512)
+
+    (train_x, train_y), (val_x, val_y) = T.make_splits(n_train, n_val)
+    tnsr.write_tpak(
+        os.path.join(out_dir, "val.tpak"), {"images": val_x, "labels": val_y}
+    )
+
+    manifest: dict = {
+        "version": 1,
+        "quick": quick,
+        "data": {
+            "val": "val.tpak",
+            "n_val": int(n_val),
+            "n_classes": int(val_y.max()) + 1 if len(val_y) else 10,
+            "img_size": int(val_x.shape[1]),
+            "class_names": __import__(
+                "compile.data", fromlist=["CLASS_NAMES"]
+            ).CLASS_NAMES,
+        },
+        "cluster_sweep": list(K.CLUSTER_SWEEP),
+        "schemes": list(K.SCHEMES),
+        "codebook_pad": K.CODEBOOK_PAD,
+        "batch_sizes": list(BATCH_SIZES),
+        "golden_n": GOLDEN_N,
+        "models": {},
+        "micro_hlo": {},
+    }
+
+    teacher_logits = None
+    accuracy_all: dict = {}
+    for name, cfg in cfgs.items():
+        log(f"=== {name}: train ({steps} steps) ===")
+        params, curve = T.train_model(
+            cfg,
+            train_x,
+            train_y,
+            steps=steps,
+            teacher_logits=teacher_logits if cfg.distilled else None,
+            log=log,
+        )
+        pn = {k: np.asarray(v) for k, v in params.items()}
+        top1, top5, val_logits = T.eval_model(params, cfg, val_x, val_y)
+        log(f"[{name}] baseline top1={top1:.4f} top5={top5:.4f}")
+        if name == "vit":
+            # teacher for DeiT distillation: ViT logits on the train set
+            fwd = jax.jit(lambda p, x: M.forward(p, x, cfg))
+            outs = [
+                np.asarray(fwd(params, jnp.asarray(train_x[i : i + 64])))
+                for i in range(0, n_train, 64)
+            ]
+            teacher_logits = np.concatenate(outs, axis=0)
+
+        tnsr.write_tpak(os.path.join(out_dir, f"{name}_weights.tpak"), pn)
+
+        entry: dict = {
+            "config": cfg.to_dict(),
+            "params": [
+                {"name": s.name, "shape": list(s.shape), "clustered": s.clustered}
+                for s in M.param_manifest(cfg)
+            ],
+            "weights": f"{name}_weights.tpak",
+            "clustered": {},
+            "hlo": {"baseline": {}, "clustered": {}},
+            "loss_curve": curve,
+            "baseline_top1": top1,
+            "baseline_top5": top5,
+        }
+
+        # ---- clustered variants ----
+        for scheme in K.SCHEMES:
+            for c in K.CLUSTER_SWEEP:
+                cm = K.cluster_params(pn, cfg, c, scheme)
+                fname = f"{name}_clustered_{scheme}_{c}.tpak"
+                pack = {f"idx/{k}": v for k, v in cm.indices.items()}
+                pack["codebooks"] = cm.codebooks
+                tnsr.write_tpak(os.path.join(out_dir, fname), pack)
+                entry["clustered"][f"{scheme}_{c}"] = {
+                    "file": fname,
+                    "table_bytes": cm.table_of_centroids_bytes(),
+                }
+        log(f"[{name}] clustered variants written")
+
+        # ---- HLO lowering ----
+        for b in BATCH_SIZES:
+            fb = f"{name}_{b}_baseline.hlo.txt"
+            fc = f"{name}_{b}_clustered.hlo.txt"
+            with open(os.path.join(out_dir, fb), "w") as f:
+                f.write(lower_baseline(cfg, b))
+            with open(os.path.join(out_dir, fc), "w") as f:
+                f.write(lower_clustered(cfg, b))
+            entry["hlo"]["baseline"][str(b)] = fb
+            entry["hlo"]["clustered"][str(b)] = fc
+            log(f"[{name}] lowered HLO batch={b}")
+
+        # ---- goldens (ref-path logits for Rust integration tests) ----
+        gx = val_x[:GOLDEN_N]
+        goldens = {
+            "images": gx,
+            "labels": val_y[:GOLDEN_N],
+            "baseline_logits": val_logits[:GOLDEN_N],
+        }
+        cm64 = K.cluster_params(pn, cfg, 64, "perlayer")
+        deq = {
+            k: jnp.asarray(v) for k, v in K.dequantize_params(pn, cm64, cfg).items()
+        }
+        _, _, cl_logits = T.eval_model(deq, cfg, gx, val_y[:GOLDEN_N])
+        goldens["clustered_perlayer_64_logits"] = cl_logits
+        tnsr.write_tpak(os.path.join(out_dir, f"{name}_goldens.tpak"), goldens)
+        entry["goldens"] = f"{name}_goldens.tpak"
+
+        # ---- python-side accuracy sweep (Figs. 7/8 cross-check) ----
+        accuracy_all[name] = accuracy_sweep(pn, cfg, val_x, val_y, log=log)
+        manifest["models"][name] = entry
+
+    # ---- micro modules for the Fig. 2 breakdown (model-shape ops) ----
+    any_cfg = cfgs["vit"]
+    micro = lower_micro_modules(any_cfg, batch=8)
+    for op, m in micro.items():
+        fname = f"micro_{op}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(m["hlo"])
+        manifest["micro_hlo"][op] = {"file": fname, "shapes": m["shapes"]}
+
+    with open(os.path.join(out_dir, "accuracy_python.json"), "w") as f:
+        json.dump(accuracy_all, f, indent=1)
+    manifest["accuracy_python"] = "accuracy_python.json"
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"artifacts complete in {time.time() - t_start:.0f}s -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="tiny models + few steps (CI / pytest fixture)",
+    )
+    args = ap.parse_args()
+    run(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

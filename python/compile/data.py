@@ -1,0 +1,110 @@
+"""Synthetic procedurally-generated shape-classification dataset.
+
+Substitution for the ImageNet-1k validation set the paper uses
+(DESIGN.md §Substitutions): the accuracy-vs-cluster-count *shape* depends
+on the quantization error of the weight distribution, not on the dataset,
+so a learnable 10-class dataset with controlled difficulty is sufficient
+to reproduce Figs. 7/8.
+
+All generation is seeded and pure-numpy: `make artifacts` is bit-for-bit
+reproducible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG_SIZE = 32
+N_CLASSES = 10
+
+CLASS_NAMES = [
+    "circle",
+    "square",
+    "triangle",
+    "cross",
+    "ring",
+    "hstripes",
+    "vstripes",
+    "checker",
+    "diagonal",
+    "dots",
+]
+
+
+def _grid(size: int):
+    y, x = np.mgrid[0:size, 0:size].astype(np.float32)
+    return x, y
+
+
+def _draw(cls: int, rng: np.random.Generator, size: int) -> np.ndarray:
+    """Render one [size, size] mask for a class with randomized geometry."""
+    x, y = _grid(size)
+    cx = rng.uniform(size * 0.35, size * 0.65)
+    cy = rng.uniform(size * 0.35, size * 0.65)
+    r = rng.uniform(size * 0.18, size * 0.32)
+    if cls == 0:  # circle
+        return ((x - cx) ** 2 + (y - cy) ** 2 <= r**2).astype(np.float32)
+    if cls == 1:  # square
+        return (
+            (np.abs(x - cx) <= r) & (np.abs(y - cy) <= r)
+        ).astype(np.float32)
+    if cls == 2:  # triangle (upward)
+        h = r * 1.6
+        return (
+            (y >= cy - h / 2)
+            & (y <= cy + h / 2)
+            & (np.abs(x - cx) <= (y - (cy - h / 2)) / 2)
+        ).astype(np.float32)
+    if cls == 3:  # cross
+        w = r * 0.45
+        return (
+            ((np.abs(x - cx) <= w) & (np.abs(y - cy) <= r))
+            | ((np.abs(y - cy) <= w) & (np.abs(x - cx) <= r))
+        ).astype(np.float32)
+    if cls == 4:  # ring
+        d2 = (x - cx) ** 2 + (y - cy) ** 2
+        return ((d2 <= r**2) & (d2 >= (r * 0.55) ** 2)).astype(np.float32)
+    if cls == 5:  # horizontal stripes
+        period = rng.uniform(4.0, 8.0)
+        phase = rng.uniform(0, period)
+        return (((y + phase) % period) < period / 2).astype(np.float32)
+    if cls == 6:  # vertical stripes
+        period = rng.uniform(4.0, 8.0)
+        phase = rng.uniform(0, period)
+        return (((x + phase) % period) < period / 2).astype(np.float32)
+    if cls == 7:  # checkerboard
+        period = rng.uniform(5.0, 9.0)
+        return (
+            (((x // (period / 2)) + (y // (period / 2))) % 2) == 0
+        ).astype(np.float32)
+    if cls == 8:  # diagonal stripes
+        period = rng.uniform(5.0, 10.0)
+        phase = rng.uniform(0, period)
+        return (((x + y + phase) % period) < period / 2).astype(np.float32)
+    if cls == 9:  # dot grid
+        period = rng.uniform(6.0, 10.0)
+        rr = period * 0.28
+        return (
+            ((x % period - period / 2) ** 2 + (y % period - period / 2) ** 2)
+            <= rr**2
+        ).astype(np.float32)
+    raise ValueError(f"unknown class {cls}")
+
+
+def make_dataset(
+    n: int, seed: int, size: int = IMG_SIZE, noise: float = 0.15
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` images [n, size, size, 3] f32 in [0,1] + labels [n] i32."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, N_CLASSES, size=n).astype(np.int32)
+    images = np.empty((n, size, size, 3), dtype=np.float32)
+    for i in range(n):
+        mask = _draw(int(labels[i]), rng, size)
+        fg = rng.uniform(0.55, 1.0, size=3).astype(np.float32)
+        bg = rng.uniform(0.0, 0.35, size=3).astype(np.float32)
+        img = mask[:, :, None] * fg[None, None, :] + (1 - mask[:, :, None]) * (
+            bg[None, None, :]
+        )
+        img += rng.normal(0, noise, size=img.shape).astype(np.float32)
+        images[i] = np.clip(img, 0.0, 1.0)
+    return images, labels

@@ -1,0 +1,102 @@
+"""Supplementary lowerings for the §Perf L2 study (no retraining).
+
+Loads the already-trained weights from `artifacts/` and lowers additional
+module variants used by the performance pass:
+
+  * `{model}_{b}_refpath.hlo.txt` — the pure-jnp forward (no Pallas
+    interpret loops): XLA is free to fuse, which on the CPU PJRT backend
+    is the relevant roofline for the L2 graph. Comparing its wall time
+    against the kernel-path module isolates the cost of interpret-mode
+    Pallas (grid while-loops) from the model itself.
+  * `{model}_{b}_clustered_refpath.hlo.txt` — same, clustered: dequantize
+    (gather) + matmul as plain jnp ops.
+
+Run: cd python && python -m compile.extra_lowering [--out ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kmeans as K
+from . import model as M
+from . import tnsr
+from .aot import to_hlo_text
+from .kernels import ref
+
+
+def make_refpath_fn(cfg: M.ModelConfig):
+    def fn(images, *flat):
+        params = M.flat_to_params(list(flat), cfg)
+        return (M.forward(params, images, cfg, use_kernels=False),)
+
+    return fn
+
+
+def make_clustered_refpath_fn(cfg: M.ModelConfig):
+    """Clustered forward with plain-jnp dequantize + matmul (no Pallas)."""
+    cb_index = {n: i for i, n in enumerate(M.clustered_names(cfg))}
+
+    def fn(images, codebooks, *flat):
+        params = dict(M.flat_to_params(list(flat), cfg))
+        for name, row in cb_index.items():
+            params[name] = ref.dequantize(params[name], codebooks[row])
+        return (M.forward(params, images, cfg, use_kernels=False),)
+
+    return fn
+
+
+def lower(cfg: M.ModelConfig, batch: int, clustered: bool) -> str:
+    img = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, 3), jnp.float32)
+    if clustered:
+        n_cl = len(M.clustered_names(cfg))
+        cbs = jax.ShapeDtypeStruct((n_cl, K.CODEBOOK_PAD), jnp.float32)
+        flat = [
+            jax.ShapeDtypeStruct(s.shape, jnp.uint8 if s.clustered else jnp.float32)
+            for s in M.param_manifest(cfg)
+        ]
+        return to_hlo_text(jax.jit(make_clustered_refpath_fn(cfg)).lower(img, cbs, *flat))
+    flat = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in M.param_manifest(cfg)]
+    return to_hlo_text(jax.jit(make_refpath_fn(cfg)).lower(img, *flat))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batches", default="8")
+    args = ap.parse_args()
+    import json
+
+    manifest = json.load(open(os.path.join(args.out, "manifest.json")))
+    for name, entry in manifest["models"].items():
+        cfg = M.ModelConfig(**entry["config"])
+        # sanity: weights exist and match the manifest
+        weights = tnsr.read_tpak(os.path.join(args.out, entry["weights"]))
+        assert set(weights) == {p["name"] for p in entry["params"]}
+        for b in [int(x) for x in args.batches.split(",")]:
+            for clustered, tag in [(False, "refpath"), (True, "clustered_refpath")]:
+                path = os.path.join(args.out, f"{name}_{b}_{tag}.hlo.txt")
+                with open(path, "w") as f:
+                    f.write(lower(cfg, b, clustered))
+                print(f"wrote {path}")
+    # correctness spot-check: refpath logits == ref forward on 2 images
+    entry = manifest["models"]["vit"]
+    cfg = M.ModelConfig(**entry["config"])
+    weights = tnsr.read_tpak(os.path.join(args.out, entry["weights"]))
+    params = {k: jnp.asarray(v) for k, v in weights.items()}
+    val = tnsr.read_tpak(os.path.join(args.out, "val.tpak"))
+    imgs = jnp.asarray(val["images"][:2])
+    want = M.forward(params, imgs, cfg)
+    fn = make_refpath_fn(cfg)
+    got = fn(imgs, *M.params_to_flat(params, cfg))[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+    print("refpath spot-check OK")
+
+
+if __name__ == "__main__":
+    main()

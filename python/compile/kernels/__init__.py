@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for the paper's compute hot spots.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are checked against the pure-jnp oracles in ``ref.py``.
+"""
+
+from .attention import attention, attention_batched  # noqa: F401
+from .clustered_matmul import (  # noqa: F401
+    clustered_matmul,
+    clustered_matmul_bias_gelu,
+    matmul,
+)
+from .kmeans import kmeans_assign  # noqa: F401
+from .layernorm import layernorm  # noqa: F401

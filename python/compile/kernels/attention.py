@@ -1,0 +1,102 @@
+"""Pallas fused scaled-dot-product-attention kernel (flash-style).
+
+Single head: q,k,v [T, D] -> [T, D]. The grid tiles the query axis; for
+each query tile the kernel streams KV tiles through an online-softmax
+accumulator (running max `m`, running denominator `l`, weighted-value
+accumulator `acc`), so the full [T, T] score matrix never materializes in
+VMEM — the same trick FlashAttention uses for CUDA shared memory, mapped
+here onto the Pallas BlockSpec/VMEM model.
+
+Batch/head axes are handled with jax.vmap at the call site (model.py),
+which in Pallas becomes leading grid dimensions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bkv: int, n_kv: int):
+    q = q_ref[...]  # [bq, D]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    q = q * scale
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        kt = pl.load(k_ref, (pl.dslice(i * bkv, bkv), slice(None)))  # [bkv, D]
+        vt = pl.load(v_ref, (pl.dslice(i * bkv, bkv), slice(None)))
+        s = jnp.dot(q, kt.T, preferred_element_type=jnp.float32)  # [bq, bkv]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, vt, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    bq, d = q.shape
+    init = (
+        jnp.full((bq,), _NEG_INF, dtype=jnp.float32),
+        jnp.zeros((bq,), dtype=jnp.float32),
+        jnp.zeros((bq, d), dtype=jnp.float32),
+    )
+    _, l, acc = jax.lax.fori_loop(0, n_kv, body, init)
+    o_ref[...] = acc / l[:, None]
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    cap = min(n, cap)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv", "interpret"))
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Fused softmax(q·kᵀ/√d)·v for one head; see module docstring."""
+    t, d = q.shape
+    assert k.shape == (t, d) and v.shape == (t, d)
+    bq = _largest_divisor(t, bq)
+    bkv = _largest_divisor(t, bkv)
+    n_kv = t // bkv
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bkv=bkv, n_kv=n_kv),
+        grid=(t // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            # K and V are not blocked: the kernel slices its own KV tiles so
+            # the online-softmax loop controls the stream order.
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def attention_batched(q, k, v, **kw):
+    """vmap over leading (batch, head) axes: [..., T, D] -> [..., T, D]."""
+    fn = functools.partial(attention, **kw)
+    for _ in range(q.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(q, k, v)

@@ -1,0 +1,226 @@
+"""Pallas kernel for matmul over K-means-clustered weights.
+
+This is the paper's "specific kernel to operate on clustered data"
+(§V-B): instead of streaming FP32 weights from HBM, the kernel streams
+**uint8 centroid indices** (4x less traffic) and keeps the small table of
+centroids resident in VMEM for the whole grid, performing the indirect
+fetch (Fig. 5 of the paper) on-chip.
+
+TPU adaptation of the paper's CUDA design (DESIGN.md §Hardware-Adaptation):
+
+  * the CUDA version parks the table of centroids in shared memory; here
+    the codebook BlockSpec maps every grid step to the same (0,) block so
+    it stays pinned in VMEM (256 x f32 = 1 KiB);
+  * the weight tile dequantization is a VPU gather (or, see
+    `one_hot=True`, an MXU-friendly one-hot matmul), after which the
+    dequantized tile feeds the MXU exactly like the baseline kernel;
+  * BlockSpec expresses the HBM->VMEM schedule the CUDA kernel expressed
+    with threadblock tiling: grid = (M/bm, N/bn, K/bk) with the K axis
+    innermost so the f32 accumulator tile stays in place.
+
+All pallas_calls use interpret=True: the CPU PJRT client cannot execute
+Mosaic custom-calls, so the kernel lowers to plain HLO (correctness path);
+real-TPU efficiency is estimated structurally in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (block sizes must tile exactly)."""
+    cap = min(n, cap)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def _dequant_tile(idx_tile, cb, one_hot: bool):
+    """Dequantize a u8 index tile against the in-VMEM codebook."""
+    ii = idx_tile.astype(jnp.int32)
+    if one_hot:
+        # MXU-friendly variant: [bk*bn, C] one-hot @ [C] -> gather as matmul.
+        oh = jax.nn.one_hot(ii, cb.shape[0], dtype=cb.dtype)
+        return jnp.einsum("knc,c->kn", oh, cb)
+    return cb[ii]
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, *, n_k_blocks: int, one_hot: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_tile = _dequant_tile(idx_ref[...], cb_ref[...], one_hot)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_tile, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "one_hot", "interpret")
+)
+def clustered_matmul(
+    x: jnp.ndarray,
+    indices: jnp.ndarray,
+    codebook: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    one_hot: bool = False,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """x[M,K] @ dequantize(indices[K,N] u8, codebook[C] f32) -> [M,N] f32."""
+    m, k = x.shape
+    k2, n = indices.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _largest_divisor(m, bm)
+    bn = _largest_divisor(n, bn)
+    bk = _largest_divisor(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k_blocks=grid[2], one_hot=one_hot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # Codebook: same (whole) block at every grid step -> pinned in
+            # VMEM, fetched from HBM once. This is the paper's table of
+            # centroids living in on-chip memory.
+            pl.BlockSpec((codebook.shape[0],), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, indices, codebook)
+
+
+def _fused_kernel(
+    x_ref, idx_ref, cb_ref, b_ref, o_ref, *, n_k_blocks: int,
+    one_hot: bool, apply_gelu: bool
+):
+    # The output tile has the same (i, j) index map at every k step, so it
+    # stays resident in VMEM and doubles as the accumulator; the epilogue
+    # rewrites it in place on the final k step.
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_tile = _dequant_tile(idx_ref[...], cb_ref[...], one_hot)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_tile, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k_blocks - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...][None, :]
+        if apply_gelu:
+            c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+            y = 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+        o_ref[...] = y
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "one_hot", "apply_gelu", "interpret"),
+)
+def clustered_matmul_bias_gelu(
+    x: jnp.ndarray,
+    indices: jnp.ndarray,
+    codebook: jnp.ndarray,
+    bias: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    one_hot: bool = False,
+    apply_gelu: bool = True,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Fused clustered matmul + bias (+ GELU) — the MLP-block hot path.
+
+    Fusing the epilogue into the kernel keeps the [bm, bn] output tile in
+    VMEM across accumulate -> bias -> GELU instead of a round trip to HBM
+    between three HLO ops.
+    """
+    m, k = x.shape
+    k2, n = indices.shape
+    assert k == k2 and bias.shape == (n,)
+    bm = _largest_divisor(m, bm)
+    bn = _largest_divisor(n, bn)
+    bk = _largest_divisor(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            n_k_blocks=grid[2],
+            one_hot=one_hot,
+            apply_gelu=apply_gelu,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((codebook.shape[0],), lambda i, j, kk: (0,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, indices, codebook, bias)
+
+
+def _plain_kernel(x_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Baseline FP32 tiled matmul — identical schedule to clustered_matmul,
+    but streaming 4x the weight bytes. The comparison kernel for Fig. 9."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm = _largest_divisor(m, bm)
+    bn = _largest_divisor(n, bn)
+    bk = _largest_divisor(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _plain_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

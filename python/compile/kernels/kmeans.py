@@ -1,0 +1,58 @@
+"""Pallas kernel for the K-means assignment step on scalar parameters.
+
+The compression pipeline (compile/kmeans.py) clusters millions of scalar
+weights against <=256 centroids; the assignment step is the O(N*C) hot
+loop. The kernel tiles the point stream through VMEM while the centroid
+table (like the inference-side table of centroids) stays pinned across the
+whole grid.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _assign_kernel(p_ref, c_ref, o_ref):
+    p = p_ref[...]  # [bp]
+    c = c_ref[...]  # [C]
+    d = jnp.abs(p[:, None] - c[None, :])  # [bp, C]
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    cap = min(n, cap)
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "interpret"))
+def kmeans_assign(
+    points: jnp.ndarray,
+    centroids: jnp.ndarray,
+    *,
+    bp: int = 4096,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Nearest-centroid index (int32) for each scalar point."""
+    (n,) = points.shape
+    (c,) = centroids.shape
+    bp = _largest_divisor(n, bp)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(points, centroids)

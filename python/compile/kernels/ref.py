@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the single source of correctness truth: `python/tests/` sweeps the
+Pallas kernels (interpret mode) against these with hypothesis-generated
+shapes and asserts allclose, and `aot.py` exports goldens computed through
+the L2 model built on these references so the Rust integration tests can
+check end-to-end numerics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequantize(indices: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct an FP32 weight tensor from u8 indices + table of centroids.
+
+    indices : uint8, any shape.
+    codebook: float32 [C] (C <= 256; padded tables simply carry unused rows).
+    """
+    return codebook[indices.astype(jnp.int32)]
+
+
+def clustered_matmul(
+    x: jnp.ndarray, indices: jnp.ndarray, codebook: jnp.ndarray
+) -> jnp.ndarray:
+    """x @ dequantize(indices, codebook).
+
+    x      : float32 [M, K]
+    indices: uint8   [K, N]
+    codebook: float32 [C]
+    """
+    w = dequantize(indices, codebook)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def clustered_matmul_bias_gelu(
+    x: jnp.ndarray,
+    indices: jnp.ndarray,
+    codebook: jnp.ndarray,
+    bias: jnp.ndarray,
+    apply_gelu: bool = True,
+) -> jnp.ndarray:
+    """Fused clustered matmul + bias (+ tanh-approx GELU)."""
+    y = clustered_matmul(x, indices, codebook) + bias
+    return gelu(y) if apply_gelu else y
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh-approximation GELU (matches the kernel's polynomial)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def softmax(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def layernorm(
+    x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    """Row-wise layer norm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Single-head scaled dot-product attention.
+
+    q, k, v: float32 [T, D] -> [T, D]
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], dtype=q.dtype))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    return jnp.dot(softmax(scores, axis=-1), v, preferred_element_type=jnp.float32)
+
+
+def kmeans_assign(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Assignment step of Lloyd's algorithm on scalar weights.
+
+    points   : float32 [N]   (flattened parameters)
+    centroids: float32 [C]
+    returns  : int32  [N]  index of the nearest centroid.
+    """
+    d = jnp.abs(points[:, None] - centroids[None, :])
+    return jnp.argmin(d, axis=1).astype(jnp.int32)

@@ -1,0 +1,169 @@
+"""K-means clustering of model parameters (the paper's §III-B).
+
+Scalar (1-D) K-means over parameter values, two scopes:
+
+  * ``entire``   — one codebook shared by every clustered tensor
+                   (paper Fig. 6a);
+  * ``perlayer`` — one codebook per clustered tensor (paper Fig. 6b).
+
+Implementation notes
+--------------------
+For 1-D points Lloyd's algorithm is done exactly and fast with a
+sort/`digitize` sweep: the nearest-centroid regions of sorted centroids
+are the half-open intervals between midpoints, so assignment is a binary
+search (O(N log C) per iteration) instead of an O(N*C) distance matrix.
+The Pallas ``kmeans_assign`` kernel computes the same assignment and is
+cross-checked against this in python/tests; the Rust `clustering` module
+re-implements this pipeline and is cross-validated against the `.tpak`
+artifacts this module writes.
+
+Initialization is deterministic (quantiles of the empirical distribution),
+which for 1-D data both avoids empty clusters and makes `make artifacts`
+reproducible without seed plumbing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .model import ModelConfig, clustered_names
+
+CODEBOOK_PAD = 256  # paper §III-B: always 8-bit indices, even for c < 256
+
+SCHEMES = ("entire", "perlayer")
+CLUSTER_SWEEP = (8, 16, 32, 64, 128, 256)
+
+
+def lloyd_1d(
+    points: np.ndarray, n_clusters: int, iters: int = 40, tol: float = 1e-7
+) -> np.ndarray:
+    """Exact 1-D Lloyd iterations from quantile init; returns sorted centroids."""
+    pts = np.asarray(points, dtype=np.float64).ravel()
+    if pts.size == 0:
+        raise ValueError("cannot cluster zero points")
+    n_clusters = min(n_clusters, np.unique(pts).size)
+    # Quantile init: equal-mass intervals of the empirical distribution.
+    qs = (np.arange(n_clusters) + 0.5) / n_clusters
+    centroids = np.quantile(pts, qs)
+    order = np.argsort(pts, kind="stable")
+    sorted_pts = pts[order]
+    csum = np.concatenate([[0.0], np.cumsum(sorted_pts)])
+    for _ in range(iters):
+        centroids = np.unique(centroids)  # collapse duplicates
+        bounds = (centroids[1:] + centroids[:-1]) / 2.0
+        # Index of first sorted point in each centroid's region.
+        starts = np.concatenate(
+            [[0], np.searchsorted(sorted_pts, bounds), [pts.size]]
+        )
+        counts = np.diff(starts)
+        sums = csum[starts[1:]] - csum[starts[:-1]]
+        new = np.where(counts > 0, sums / np.maximum(counts, 1), centroids)
+        shift = np.max(np.abs(new - centroids)) if new.size == centroids.size else np.inf
+        centroids = new
+        if shift < tol:
+            break
+    return np.sort(centroids).astype(np.float64)
+
+
+def assign_1d(points: np.ndarray, centroids: np.ndarray) -> np.ndarray:
+    """Nearest-centroid (ties -> lower index) via midpoint binary search."""
+    c = np.sort(np.asarray(centroids, dtype=np.float64))
+    bounds = (c[1:] + c[:-1]) / 2.0
+    return np.searchsorted(bounds, np.asarray(points, dtype=np.float64)).astype(
+        np.int64
+    )
+
+
+def inertia(points: np.ndarray, centroids: np.ndarray) -> float:
+    idx = assign_1d(points, centroids)
+    c = np.sort(np.asarray(centroids, dtype=np.float64))
+    return float(np.sum((points.astype(np.float64) - c[idx]) ** 2))
+
+
+@dataclasses.dataclass
+class ClusteredModel:
+    """Clustered representation of one model's parameters."""
+
+    scheme: str  # "entire" | "perlayer"
+    n_clusters: int
+    # u8 index tensor per clustered parameter (same shape as the original).
+    indices: dict[str, np.ndarray]
+    # [n_clustered_tensors, 256] f32, row order = clustered_names(cfg);
+    # for "entire" every row is the same table.
+    codebooks: np.ndarray
+
+    def table_of_centroids_bytes(self) -> int:
+        """Real (unpadded) storage of the table(s) of centroids, paper §V-C."""
+        n_tables = 1 if self.scheme == "entire" else self.codebooks.shape[0]
+        return n_tables * self.n_clusters * 4
+
+
+def _pad_codebook(centroids: np.ndarray) -> np.ndarray:
+    cb = np.zeros(CODEBOOK_PAD, dtype=np.float32)
+    cb[: centroids.size] = centroids.astype(np.float32)
+    return cb
+
+
+def cluster_params(
+    params: dict[str, np.ndarray],
+    cfg: ModelConfig,
+    n_clusters: int,
+    scheme: str,
+    iters: int = 40,
+) -> ClusteredModel:
+    """Cluster the model's matmul parameters into `n_clusters` centroids."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme!r}")
+    if not 2 <= n_clusters <= CODEBOOK_PAD:
+        raise ValueError(f"n_clusters must be in [2, {CODEBOOK_PAD}]")
+    names = clustered_names(cfg)
+    indices: dict[str, np.ndarray] = {}
+    rows: list[np.ndarray] = []
+    if scheme == "entire":
+        allpts = np.concatenate(
+            [np.asarray(params[n], dtype=np.float32).ravel() for n in names]
+        )
+        centroids = lloyd_1d(allpts, n_clusters, iters)
+        cb = _pad_codebook(centroids)
+        for n in names:
+            w = np.asarray(params[n], dtype=np.float32)
+            indices[n] = assign_1d(w.ravel(), centroids).astype(np.uint8).reshape(w.shape)
+            rows.append(cb)
+    else:
+        for n in names:
+            w = np.asarray(params[n], dtype=np.float32)
+            centroids = lloyd_1d(w.ravel(), n_clusters, iters)
+            indices[n] = assign_1d(w.ravel(), centroids).astype(np.uint8).reshape(w.shape)
+            rows.append(_pad_codebook(centroids))
+    return ClusteredModel(
+        scheme=scheme,
+        n_clusters=n_clusters,
+        indices=indices,
+        codebooks=np.stack(rows, axis=0),
+    )
+
+
+def dequantize_params(
+    params: dict[str, np.ndarray], cm: ClusteredModel, cfg: ModelConfig
+) -> dict[str, np.ndarray]:
+    """Reconstruct an FP32 parameter dict from a clustered model (oracle for
+    the clustered forward pass and source of the Rust goldens)."""
+    out = dict(params)
+    for i, n in enumerate(clustered_names(cfg)):
+        out[n] = cm.codebooks[i][cm.indices[n].astype(np.int32)]
+    return out
+
+
+def quantization_error(
+    params: dict[str, np.ndarray], cm: ClusteredModel, cfg: ModelConfig
+) -> float:
+    """Mean squared reconstruction error over all clustered parameters."""
+    deq = dequantize_params(params, cm, cfg)
+    num, den = 0.0, 0
+    for n in clustered_names(cfg):
+        d = np.asarray(params[n], dtype=np.float64) - deq[n].astype(np.float64)
+        num += float(np.sum(d * d))
+        den += d.size
+    return num / max(den, 1)

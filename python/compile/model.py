@@ -1,0 +1,334 @@
+"""L2: ViT / DeiT in JAX, with a kernel-backed path for AOT lowering.
+
+Two forward implementations share one parameter layout:
+
+  * ``forward(..., use_kernels=False)`` — pure jnp (fast on CPU); used for
+    training and as the oracle for goldens.
+  * ``forward(..., use_kernels=True)`` — every matmul / layernorm /
+    attention goes through the L1 Pallas kernels; this is the graph that
+    ``aot.py`` lowers to HLO for the Rust runtime.
+
+The **parameter manifest** (``param_manifest``) is the contract with the
+Rust side: a stable, ordered list of (name, shape, clustered?) that defines
+the flat argument order of every AOT-lowered entry point and the layout of
+the ``.tpak`` weight files.
+
+DeiT here is the paper's DeiT: identical encoder plus a distillation token
+and a second classification head trained against a teacher (train.py); at
+inference the two head outputs are averaged (Touvron et al., 2020).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernels
+from .kernels import ref
+
+# Parameters with at least this many elements get clustered; the paper
+# clusters the (large) matmul parameters — biases/LN vectors are left FP32
+# and are accounted as such by the Rust memory model.
+CLUSTER_MIN_ELEMS = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "vit"
+    img_size: int = 32
+    patch: int = 8
+    dim: int = 192
+    depth: int = 6
+    heads: int = 3
+    mlp_ratio: int = 4
+    n_classes: int = 10
+    distilled: bool = False  # True -> DeiT (distillation token + 2nd head)
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def n_tokens(self) -> int:
+        return self.n_patches + 1 + (1 if self.distilled else 0)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+VIT_TINY = ModelConfig(name="vit", distilled=False)
+DEIT_TINY = ModelConfig(name="deit", distilled=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    clustered: bool
+
+
+def param_manifest(cfg: ModelConfig) -> list[ParamSpec]:
+    """Stable ordered parameter list — the AOT/Rust interface contract."""
+    d, mlp = cfg.dim, cfg.dim * cfg.mlp_ratio
+    specs: list[ParamSpec] = []
+
+    def add(name: str, *shape: int, force_fp: bool = False):
+        n_elems = int(np.prod(shape))
+        clustered = (not force_fp) and n_elems >= CLUSTER_MIN_ELEMS
+        specs.append(ParamSpec(name, tuple(shape), clustered))
+
+    add("patch_embed/w", cfg.patch_dim, d)
+    add("patch_embed/b", d)
+    # Embedding-type parameters stay FP32 (they are read once per image,
+    # not per matmul, and are small).
+    add("pos_embed", cfg.n_tokens, d, force_fp=True)
+    add("cls_token", d)
+    if cfg.distilled:
+        add("dist_token", d)
+    for i in range(cfg.depth):
+        p = f"blocks/{i}"
+        add(f"{p}/ln1/g", d)
+        add(f"{p}/ln1/b", d)
+        add(f"{p}/qkv/w", d, 3 * d)
+        add(f"{p}/qkv/b", 3 * d)
+        add(f"{p}/proj/w", d, d)
+        add(f"{p}/proj/b", d)
+        add(f"{p}/ln2/g", d)
+        add(f"{p}/ln2/b", d)
+        add(f"{p}/fc1/w", d, mlp)
+        add(f"{p}/fc1/b", mlp)
+        add(f"{p}/fc2/w", mlp, d)
+        add(f"{p}/fc2/b", d)
+    add("ln_f/g", d)
+    add("ln_f/b", d)
+    add("head/w", d, cfg.n_classes, force_fp=cfg.n_classes * d < CLUSTER_MIN_ELEMS)
+    add("head/b", cfg.n_classes)
+    if cfg.distilled:
+        add(
+            "head_dist/w",
+            d,
+            cfg.n_classes,
+            force_fp=cfg.n_classes * d < CLUSTER_MIN_ELEMS,
+        )
+        add("head_dist/b", cfg.n_classes)
+    return specs
+
+
+def clustered_names(cfg: ModelConfig) -> list[str]:
+    return [s.name for s in param_manifest(cfg) if s.clustered]
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict[str, jnp.ndarray]:
+    """Truncated-normal(0.02) weights, zero biases, unit LN gains."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, jnp.ndarray] = {}
+    for spec in param_manifest(cfg):
+        last = spec.name.rsplit("/", 1)[-1]
+        if last in ("b",):
+            v = np.zeros(spec.shape, dtype=np.float32)
+        elif last == "g":
+            v = np.ones(spec.shape, dtype=np.float32)
+        elif spec.name in ("cls_token", "dist_token", "pos_embed"):
+            v = (rng.standard_normal(spec.shape) * 0.02).astype(np.float32)
+        else:
+            v = np.clip(
+                rng.standard_normal(spec.shape) * 0.02, -0.04, 0.04
+            ).astype(np.float32)
+        params[spec.name] = jnp.asarray(v)
+    return params
+
+
+def patchify(images: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[B, H, W, 3] -> [B, n_patches, patch*patch*3]."""
+    b = images.shape[0]
+    p, g = cfg.patch, cfg.img_size // cfg.patch
+    x = images.reshape(b, g, p, g, p, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, p * p * 3)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (shared skeleton, pluggable primitive ops)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Ops:
+    """Primitive op set: either pure-jnp reference or Pallas kernels."""
+
+    matmul: Callable  # (x2d, name) -> y2d  (weight lookup internal)
+    layernorm: Callable  # (x2d, g, b) -> y2d
+    attention: Callable  # (q, k, v) [B, h, T, hd] -> same
+
+
+def _ref_ops(params: dict[str, jnp.ndarray]) -> _Ops:
+    return _Ops(
+        matmul=lambda x, name: ref.matmul(x, params[name]),
+        layernorm=ref.layernorm,
+        attention=jax.vmap(jax.vmap(ref.attention)),
+    )
+
+
+def _kernel_ops(params: dict[str, jnp.ndarray]) -> _Ops:
+    return _Ops(
+        matmul=lambda x, name: kernels.matmul(x, params[name]),
+        layernorm=kernels.layernorm,
+        attention=kernels.attention_batched,
+    )
+
+
+def _clustered_ops(
+    params: dict[str, jnp.ndarray],
+    codebooks: jnp.ndarray,
+    cb_index: dict[str, int],
+) -> _Ops:
+    """Clustered inference ops: matmul weights are u8 indices + codebook."""
+
+    def matmul(x, name):
+        if name in cb_index:
+            return kernels.clustered_matmul(
+                x, params[name], codebooks[cb_index[name]]
+            )
+        return kernels.matmul(x, params[name])
+
+    return _Ops(
+        matmul=matmul,
+        layernorm=kernels.layernorm,
+        attention=kernels.attention_batched,
+    )
+
+
+def _encoder(
+    x: jnp.ndarray, params: dict[str, jnp.ndarray], cfg: ModelConfig, ops: _Ops
+) -> jnp.ndarray:
+    """Transformer encoder over token embeddings x [B, T, D]."""
+    b, t, d = x.shape
+
+    def mm(x2d, name):
+        return ops.matmul(x2d, name)
+
+    for i in range(cfg.depth):
+        p = f"blocks/{i}"
+        # --- MHSA ---
+        h = ops.layernorm(
+            x.reshape(b * t, d), params[f"{p}/ln1/g"], params[f"{p}/ln1/b"]
+        )
+        qkv = mm(h, f"{p}/qkv/w") + params[f"{p}/qkv/b"]
+        qkv = qkv.reshape(b, t, 3, cfg.heads, cfg.head_dim)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)  # [B, h, T, hd]
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        a = ops.attention(q, k, v)  # [B, h, T, hd]
+        a = a.transpose(0, 2, 1, 3).reshape(b * t, d)
+        x = x + (mm(a, f"{p}/proj/w") + params[f"{p}/proj/b"]).reshape(b, t, d)
+        # --- MLP ---
+        h = ops.layernorm(
+            x.reshape(b * t, d), params[f"{p}/ln2/g"], params[f"{p}/ln2/b"]
+        )
+        h = ref.gelu(mm(h, f"{p}/fc1/w") + params[f"{p}/fc1/b"])
+        x = x + (mm(h, f"{p}/fc2/w") + params[f"{p}/fc2/b"]).reshape(b, t, d)
+    return x
+
+
+def _forward_with_ops(
+    params: dict[str, jnp.ndarray],
+    images: jnp.ndarray,
+    cfg: ModelConfig,
+    ops: _Ops,
+    train_heads: bool = False,
+):
+    b = images.shape[0]
+    patches = patchify(images, cfg)  # [B, P, pd]
+    x = ops.matmul(patches.reshape(b * cfg.n_patches, cfg.patch_dim), "patch_embed/w")
+    x = (x + params["patch_embed/b"]).reshape(b, cfg.n_patches, cfg.dim)
+    toks = [jnp.broadcast_to(params["cls_token"], (b, 1, cfg.dim))]
+    if cfg.distilled:
+        toks.append(jnp.broadcast_to(params["dist_token"], (b, 1, cfg.dim)))
+    x = jnp.concatenate(toks + [x], axis=1) + params["pos_embed"][None]
+    x = _encoder(x, params, cfg, ops)
+    x = ops.layernorm(
+        x.reshape(b * cfg.n_tokens, cfg.dim), params["ln_f/g"], params["ln_f/b"]
+    ).reshape(b, cfg.n_tokens, cfg.dim)
+    logits_cls = ops.matmul(x[:, 0], "head/w") + params["head/b"]
+    if not cfg.distilled:
+        return logits_cls
+    logits_dist = ops.matmul(x[:, 1], "head_dist/w") + params["head_dist/b"]
+    if train_heads:
+        return logits_cls, logits_dist
+    return (logits_cls + logits_dist) / 2.0
+
+
+def forward(
+    params: dict[str, jnp.ndarray],
+    images: jnp.ndarray,
+    cfg: ModelConfig,
+    use_kernels: bool = False,
+    train_heads: bool = False,
+):
+    """Baseline (FP32-weight) forward pass -> logits [B, n_classes]."""
+    ops = _kernel_ops(params) if use_kernels else _ref_ops(params)
+    return _forward_with_ops(params, images, cfg, ops, train_heads)
+
+
+def forward_clustered(
+    params: dict[str, jnp.ndarray],
+    codebooks: jnp.ndarray,
+    images: jnp.ndarray,
+    cfg: ModelConfig,
+):
+    """Clustered forward: `params[name]` for clustered entries holds the u8
+    index tensor; `codebooks` is [n_clustered, 256] f32 (padded), row order
+    = `clustered_names(cfg)`. One lowered module serves every
+    (scheme x cluster-count): smaller tables simply occupy a prefix of the
+    256 rows, exactly like the paper's always-8-bit indices (§III-B)."""
+    cb_index = {n: i for i, n in enumerate(clustered_names(cfg))}
+    ops = _clustered_ops(params, codebooks, cb_index)
+    return _forward_with_ops(params, images, cfg, ops)
+
+
+# ---------------------------------------------------------------------------
+# Flat entry points for AOT lowering (argument order = manifest order)
+# ---------------------------------------------------------------------------
+
+
+def params_to_flat(
+    params: dict[str, jnp.ndarray], cfg: ModelConfig
+) -> list[jnp.ndarray]:
+    return [params[s.name] for s in param_manifest(cfg)]
+
+
+def flat_to_params(
+    flat: list[jnp.ndarray], cfg: ModelConfig
+) -> dict[str, jnp.ndarray]:
+    specs = param_manifest(cfg)
+    assert len(flat) == len(specs)
+    return {s.name: a for s, a in zip(specs, flat)}
+
+
+def make_baseline_fn(cfg: ModelConfig, use_kernels: bool = True):
+    def fn(images, *flat):
+        params = flat_to_params(list(flat), cfg)
+        return (forward(params, images, cfg, use_kernels=use_kernels),)
+
+    return fn
+
+
+def make_clustered_fn(cfg: ModelConfig):
+    def fn(images, codebooks, *flat):
+        params = flat_to_params(list(flat), cfg)
+        return (forward_clustered(params, codebooks, images, cfg),)
+
+    return fn

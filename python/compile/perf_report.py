@@ -1,0 +1,102 @@
+"""L1 structural performance report (EXPERIMENTS.md §Perf).
+
+interpret=True wallclock is CPU-numpy time, not a TPU proxy, so the
+Pallas kernels are optimized *structurally*: this script computes, for
+each kernel at the model's shapes, the per-grid-step VMEM footprint, the
+HBM traffic per output tile, the arithmetic intensity delta vs the FP32
+baseline, and an MXU-utilization estimate from tile alignment.
+
+Run: cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU = 128  # systolic array edge
+
+
+@dataclasses.dataclass
+class MatmulSpec:
+    name: str
+    m: int
+    k: int
+    n: int
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+
+    def tiles(self):
+        ceil = lambda a, b: -(-a // b)
+        return ceil(self.m, self.bm), ceil(self.n, self.bn), ceil(self.k, self.bk)
+
+
+def report_clustered_matmul(spec: MatmulSpec, codebook_rows: int = 256):
+    """Per-grid-step accounting for the clustered vs baseline kernel."""
+    bm, bn, bk = min(spec.bm, spec.m), min(spec.bn, spec.n), min(spec.bk, spec.k)
+    # VMEM residency per step
+    x_tile = bm * bk * 4
+    idx_tile = bk * bn * 1          # u8 index stream
+    w_tile_fp32 = bk * bn * 4       # baseline weight stream
+    cb = codebook_rows * 4          # pinned for the whole grid
+    deq_tile = bk * bn * 4          # dequantized tile (VPU output)
+    out_tile = bm * bn * 4
+    vmem_clustered = x_tile + idx_tile + cb + deq_tile + out_tile
+    vmem_baseline = x_tile + w_tile_fp32 + out_tile
+    # HBM traffic for the whole matmul (weight stream only; x reused)
+    mt, nt, kt = spec.tiles()
+    weight_traffic_base = spec.k * spec.n * 4 * mt  # re-fetched per m-tile
+    weight_traffic_clus = spec.k * spec.n * 1 * mt + cb
+    # MXU utilization estimate: fraction of the 128x128 array covered
+    util = (min(bm, MXU) / MXU) * (min(bn, MXU) / MXU)
+    flops = 2 * spec.m * spec.k * spec.n
+    return {
+        "name": spec.name,
+        "grid": (mt, nt, kt),
+        "vmem_clustered_B": vmem_clustered,
+        "vmem_baseline_B": vmem_baseline,
+        "vmem_fits": vmem_clustered * 2 <= VMEM_BYTES,  # x2 for double-buffer
+        "weight_traffic_reduction": weight_traffic_base / weight_traffic_clus,
+        "intensity_base": flops / (weight_traffic_base + spec.m * spec.k * 4),
+        "intensity_clus": flops / (weight_traffic_clus + spec.m * spec.k * 4),
+        "mxu_utilization": util,
+    }
+
+
+def model_matmuls(batch: int, t: int = 17, d: int = 192, mlp: int = 768):
+    rows = batch * t
+    return [
+        MatmulSpec("patch_embed", batch * 16, 192, d),
+        MatmulSpec("qkv", rows, d, 3 * d),
+        MatmulSpec("proj", rows, d, d),
+        MatmulSpec("fc1", rows, d, mlp),
+        MatmulSpec("fc2", rows, mlp, d),
+    ]
+
+
+def main() -> None:
+    print(f"{'kernel':<14} {'grid':>10} {'VMEM clus':>10} {'fits':>5} "
+          f"{'Wtraffic x':>10} {'AI base':>8} {'AI clus':>8} {'MXU':>6}")
+    for batch in (1, 8):
+        print(f"-- batch {batch} --")
+        for spec in model_matmuls(batch):
+            r = report_clustered_matmul(spec)
+            print(
+                f"{r['name']:<14} {str(r['grid']):>10} "
+                f"{r['vmem_clustered_B']:>10,} {str(r['vmem_fits']):>5} "
+                f"{r['weight_traffic_reduction']:>9.2f}x "
+                f"{r['intensity_base']:>8.2f} {r['intensity_clus']:>8.2f} "
+                f"{r['mxu_utilization']:>5.1%}"
+            )
+    print(
+        "\nNotes: codebook (1 KiB) pinned in VMEM across the grid; index"
+        "\nstream is u8 so HBM weight traffic drops ~4x; M-dim tiles are"
+        "\nbatch*17 tokens, so MXU row coverage grows with batch (the"
+        "\nedge-serving batcher's job). Double-buffered footprint stays"
+        "\norders of magnitude under the 16 MiB VMEM budget."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""`.tnsr` / `.tpak` binary tensor interchange format (Python writer/reader).
+
+The Rust side (`rust/src/tensor/io.rs`) implements the same format; this is
+the only data channel between the build-time Python layer and the runtime
+Rust layer besides HLO text.
+
+tpak layout (little-endian):
+
+    magic   b"TPAK"
+    u32     version (1)
+    u32     n_entries
+    entries:
+        u16     name_len, name bytes (utf-8)
+        u8      dtype (0=f32, 1=u8, 2=i32, 3=i64)
+        u8      ndim
+        u64*ndim dims
+        u64     payload bytes
+        payload
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TPAK"
+VERSION = 1
+
+_DTYPES = {0: np.float32, 1: np.uint8, 2: np.int32, 3: np.int64}
+_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+
+def write_tpak(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            # ascontiguousarray promotes 0-d to 1-d; restore the shape
+            arr = np.ascontiguousarray(arr).reshape(arr.shape)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}Q", *arr.shape))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read_tpak(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        for _ in range(count):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = f.read(nbytes)
+            arr = np.frombuffer(data, dtype=_DTYPES[code]).reshape(dims)
+            out[name] = arr
+    return out

@@ -1,0 +1,149 @@
+"""Build-time training of the ViT and DeiT models on the synthetic dataset.
+
+Runs once inside `make artifacts`; never on the request path. The optimizer
+is a from-scratch Adam with cosine decay (optax is deliberately not a
+dependency). DeiT uses hard-label distillation from the trained ViT
+teacher, as in Touvron et al. (2020): the class-token head learns the
+ground truth while the distillation-token head learns the teacher's
+argmax.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as M
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy_topk(logits: np.ndarray, labels: np.ndarray, k: int) -> float:
+    topk = np.argsort(-logits, axis=1)[:, :k]
+    return float(np.mean(np.any(topk == labels[:, None], axis=1)))
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.05):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mhat_scale = 1.0 / (1 - b1**t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2**t.astype(jnp.float32))
+    new_params = {}
+    for k in params:
+        upd = (m[k] * mhat_scale) / (jnp.sqrt(v[k] * vhat_scale) + eps)
+        # decoupled weight decay on matmul weights only
+        if k.endswith("/w"):
+            upd = upd + wd * params[k]
+        new_params[k] = params[k] - lr * upd
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base=1e-3, warmup=50, floor=1e-5):
+    warm = base * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def train_model(
+    cfg: M.ModelConfig,
+    train_images: np.ndarray,
+    train_labels: np.ndarray,
+    steps: int,
+    batch: int = 64,
+    seed: int = 0,
+    teacher_logits: np.ndarray | None = None,
+    log_every: int = 100,
+    log=print,
+) -> tuple[dict[str, jnp.ndarray], list[tuple[int, float]]]:
+    """Train one model; returns (params, loss curve [(step, loss)])."""
+    params = M.init_params(cfg, seed)
+    state = adam_init(params)
+    distilled = cfg.distilled and teacher_logits is not None
+    teacher_labels = (
+        np.argmax(teacher_logits, axis=1).astype(np.int32) if distilled else None
+    )
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step_fn(params, state, images, labels, tlabels, lr):
+        def loss_fn(p):
+            if distilled:
+                lc, ld = M.forward(p, images, cfg, train_heads=True)
+                return 0.5 * cross_entropy(lc, labels) + 0.5 * cross_entropy(
+                    ld, tlabels
+                )
+            logits = M.forward(p, images, cfg)
+            return cross_entropy(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed + 1)
+    n = train_images.shape[0]
+    curve: list[tuple[int, float]] = []
+    t0 = time.time()
+    for step in range(steps):
+        sel = rng.integers(0, n, size=batch)
+        lr = cosine_lr(step, steps)
+        tl = (
+            jnp.asarray(teacher_labels[sel])
+            if distilled
+            else jnp.zeros(batch, jnp.int32)
+        )
+        params, state, loss = step_fn(
+            params,
+            state,
+            jnp.asarray(train_images[sel]),
+            jnp.asarray(train_labels[sel]),
+            tl,
+            lr,
+        )
+        if step % log_every == 0 or step == steps - 1:
+            lv = float(loss)
+            curve.append((step, lv))
+            log(
+                f"[train:{cfg.name}] step {step:5d}/{steps} "
+                f"loss {lv:.4f} ({time.time() - t0:.0f}s)"
+            )
+    return params, curve
+
+
+def eval_model(
+    params: dict[str, jnp.ndarray],
+    cfg: M.ModelConfig,
+    images: np.ndarray,
+    labels: np.ndarray,
+    batch: int = 64,
+) -> tuple[float, float, np.ndarray]:
+    """Returns (top1, top5, logits) on the given split (pure-jnp path)."""
+    fwd = jax.jit(lambda p, x: M.forward(p, x, cfg))
+    outs = []
+    for i in range(0, images.shape[0], batch):
+        outs.append(np.asarray(fwd(params, jnp.asarray(images[i : i + batch]))))
+    logits = np.concatenate(outs, axis=0)
+    return (
+        accuracy_topk(logits, labels, 1),
+        accuracy_topk(logits, labels, 5),
+        logits,
+    )
+
+
+def make_splits(n_train: int, n_val: int, seed: int = 1234):
+    train_x, train_y = data_mod.make_dataset(n_train, seed=seed)
+    val_x, val_y = data_mod.make_dataset(n_val, seed=seed + 999)
+    return (train_x, train_y), (val_x, val_y)

@@ -1,0 +1,32 @@
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let mut registry = Registry::load("artifacts")?;
+    let variant = registry.variant("vit", VariantKey::Baseline)?;
+    let (images, _labels) = registry.val_set()?;
+    let img1 = images.slice_rows(0, 1)?;
+    println!("img1 shape {:?} bytes {}", img1.shape(), img1.nbytes());
+    for (i, t) in variant.weight_inputs.iter().enumerate().take(4) {
+        println!("w[{i}] shape {:?} bytes {}", t.shape(), t.nbytes());
+    }
+    // literal path
+    let exe = engine.load_hlo(&variant.hlo_paths[&1])?;
+    let mut inputs = vec![img1.clone()];
+    inputs.extend(variant.weight_inputs.iter().cloned());
+    println!("n inputs {}", inputs.len());
+    let out = exe.run(&inputs)?;
+    println!("literal path OK: out shape {:?}", out[0].shape());
+    // resident path
+    let res = exe.with_resident(1, &variant.weight_inputs)?;
+    let out2 = res.run(std::slice::from_ref(&img1))?;
+    println!("resident path OK: out {:?}", out2[0].shape());
+    let a = out[0].as_f32()?;
+    let b = out2[0].as_f32()?;
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert!((x - y).abs() < 1e-5);
+    }
+    println!("match");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+"""AOT lowering: HLO text generation and module interfaces."""
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import kmeans as K
+from compile import model as M
+
+CFG = M.ModelConfig(name="vit", dim=32, depth=1, heads=2)
+CFG_D = M.ModelConfig(name="deit", dim=32, depth=1, heads=2, distilled=True)
+
+
+class TestLowering:
+    def test_baseline_hlo_text(self):
+        text = aot.lower_baseline(CFG, batch=2)
+        assert text.startswith("HloModule")
+        assert "f32[2,32,32,3]" in text  # image input shape present
+
+    def test_clustered_hlo_text(self):
+        text = aot.lower_clustered(CFG_D, batch=1)
+        assert text.startswith("HloModule")
+        assert "u8[" in text  # uint8 index inputs present
+        n_cl = len(M.clustered_names(CFG_D))
+        assert f"f32[{n_cl},{K.CODEBOOK_PAD}]" in text  # codebook stack input
+
+    def test_parameter_count_matches_manifest(self):
+        text = aot.lower_baseline(CFG, batch=1)
+        # Count entry parameters from the header layout (subcomputations
+        # like while bodies carry their own `parameter(0)` instructions).
+        layout = text.split("entry_computation_layout={(", 1)[1]
+        depth, n_params, i = 0, 1, 0
+        while i < len(layout):
+            c = layout[i]
+            if c in "([{":
+                depth += 1
+            elif c == ")" and depth == 0:
+                break
+            elif c in ")]}":
+                depth -= 1
+            elif c == "," and depth == 0:
+                n_params += 1
+            i += 1
+        assert n_params == 1 + len(M.param_manifest(CFG))  # images + params
+
+    def test_micro_modules(self):
+        mods = aot.lower_micro_modules(CFG, batch=2)
+        assert set(mods) == {
+            "matmul_qkv",
+            "matmul_mlp",
+            "softmax",
+            "layernorm",
+            "gelu",
+        }
+        for name, m in mods.items():
+            assert m["hlo"].startswith("HloModule"), name
+            assert all(isinstance(s, list) for s in m["shapes"])
+
+
+class TestConfigPlumbing:
+    def test_model_configs_env(self, monkeypatch):
+        monkeypatch.setenv("CLUSTERFORMER_DIM", "96")
+        monkeypatch.setenv("CLUSTERFORMER_DEPTH", "3")
+        cfgs = aot.model_configs()
+        assert cfgs["vit"].dim == 96 and cfgs["vit"].depth == 3
+        assert cfgs["deit"].distilled and not cfgs["vit"].distilled
+
+    def test_batch_sizes_sane(self):
+        assert 1 in aot.BATCH_SIZES and max(aot.BATCH_SIZES) <= 64

@@ -1,0 +1,99 @@
+"""Dataset determinism/coverage and training-loop machinery."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+class TestData:
+    def test_deterministic(self):
+        a, la = D.make_dataset(32, seed=7)
+        b, lb = D.make_dataset(32, seed=7)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+    def test_seed_changes_data(self):
+        a, _ = D.make_dataset(16, seed=1)
+        b, _ = D.make_dataset(16, seed=2)
+        assert not np.array_equal(a, b)
+
+    def test_shapes_range(self):
+        x, y = D.make_dataset(64, seed=3)
+        assert x.shape == (64, D.IMG_SIZE, D.IMG_SIZE, 3)
+        assert x.dtype == np.float32
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert y.min() >= 0 and y.max() < D.N_CLASSES
+
+    def test_all_classes_reachable(self):
+        _, y = D.make_dataset(500, seed=4)
+        assert set(np.unique(y)) == set(range(D.N_CLASSES))
+
+    @given(st.integers(0, 9), st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_draw_masks_binary(self, cls, seed):
+        rng = np.random.default_rng(seed)
+        m = D._draw(cls, rng, D.IMG_SIZE)
+        assert m.shape == (D.IMG_SIZE, D.IMG_SIZE)
+        assert set(np.unique(m)).issubset({0.0, 1.0})
+
+
+class TestTrainMachinery:
+    def test_cross_entropy_perfect_prediction(self):
+        logits = jnp.asarray([[100.0, 0, 0], [0, 100.0, 0]])
+        labels = jnp.asarray([0, 1])
+        assert float(T.cross_entropy(logits, labels)) < 1e-3
+
+    def test_accuracy_topk(self):
+        logits = np.asarray(
+            [[0.9, 0.1, 0.0], [0.2, 0.3, 0.5], [0.6, 0.3, 0.1]], dtype=np.float32
+        )
+        labels = np.asarray([0, 1, 2])
+        assert T.accuracy_topk(logits, labels, 1) == 1 / 3
+        assert T.accuracy_topk(logits, labels, 2) == 2 / 3
+        assert T.accuracy_topk(logits, labels, 3) == 1.0
+
+    def test_cosine_lr_schedule(self):
+        total = 200
+        lrs = [float(T.cosine_lr(s, total)) for s in (0, 49, 50, 125, 199)]
+        assert lrs[0] < lrs[1]  # warmup rises
+        assert lrs[2] >= lrs[3] >= lrs[4]  # cosine decays
+        assert lrs[4] >= 1e-5
+
+    def test_adam_moves_toward_gradient(self):
+        params = {"x/w": jnp.asarray([1.0, -1.0])}
+        grads = {"x/w": jnp.asarray([1.0, -1.0])}
+        state = T.adam_init(params)
+        new, state = T.adam_update(params, grads, state, lr=0.1, wd=0.0)
+        assert float(new["x/w"][0]) < 1.0
+        assert float(new["x/w"][1]) > -1.0
+
+    def test_short_training_reduces_loss(self):
+        cfg = M.ModelConfig(name="vit", dim=32, depth=1, heads=2)
+        (tx, ty), _ = T.make_splits(256, 32)
+        _, curve = T.train_model(
+            cfg, tx, ty, steps=60, batch=32, log_every=59, log=lambda *a: None
+        )
+        assert curve[-1][1] < curve[0][1]
+
+    def test_distillation_path_runs(self):
+        cfg = M.ModelConfig(name="deit", dim=32, depth=1, heads=2, distilled=True)
+        (tx, ty), _ = T.make_splits(128, 16)
+        teacher = np.random.default_rng(0).standard_normal(
+            (128, 10)
+        ).astype(np.float32)
+        params, curve = T.train_model(
+            cfg,
+            tx,
+            ty,
+            steps=5,
+            batch=16,
+            teacher_logits=teacher,
+            log_every=4,
+            log=lambda *a: None,
+        )
+        assert len(curve) >= 1
+        assert "dist_token" in params

@@ -1,0 +1,202 @@
+"""L1 correctness: Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, block sizes and index distributions; every
+property asserts allclose against `kernels.ref`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@st.composite
+def matmul_case(draw):
+    m = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 24))
+    n = draw(st.integers(1, 24))
+    bm = draw(st.integers(1, 16))
+    bn = draw(st.integers(1, 16))
+    bk = draw(st.integers(1, 16))
+    c = draw(st.sampled_from([2, 8, 64, 256]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, k, n, bm, bn, bk, c, seed
+
+
+class TestClusteredMatmul:
+    @given(matmul_case())
+    @settings(**SETTINGS)
+    def test_matches_ref(self, case):
+        m, k, n, bm, bn, bk, c, seed = case
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        idx = jnp.asarray(rng.integers(0, c, size=(k, n)), dtype=jnp.uint8)
+        cb = rand(rng, 256)
+        got = kernels.clustered_matmul(x, idx, cb, bm=bm, bn=bn, bk=bk)
+        want = ref.clustered_matmul(x, idx, cb)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(matmul_case())
+    @settings(max_examples=10, deadline=None)
+    def test_one_hot_variant(self, case):
+        m, k, n, bm, bn, bk, c, seed = case
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        idx = jnp.asarray(rng.integers(0, c, size=(k, n)), dtype=jnp.uint8)
+        cb = rand(rng, 256)
+        got = kernels.clustered_matmul(
+            x, idx, cb, bm=bm, bn=bn, bk=bk, one_hot=True
+        )
+        want = ref.clustered_matmul(x, idx, cb)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @given(matmul_case(), st.booleans())
+    @settings(**SETTINGS)
+    def test_fused_bias_gelu(self, case, apply_gelu):
+        m, k, n, bm, bn, bk, c, seed = case
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        idx = jnp.asarray(rng.integers(0, c, size=(k, n)), dtype=jnp.uint8)
+        cb = rand(rng, 256)
+        b = rand(rng, n)
+        got = kernels.clustered_matmul_bias_gelu(
+            x, idx, cb, b, bm=bm, bn=bn, bk=bk, apply_gelu=apply_gelu
+        )
+        want = ref.clustered_matmul_bias_gelu(x, idx, cb, b, apply_gelu)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_uses_only_referenced_centroids(self):
+        """Padded codebook rows beyond max(idx) must not affect the result."""
+        rng = np.random.default_rng(0)
+        x = rand(rng, 4, 8)
+        idx = jnp.asarray(rng.integers(0, 16, size=(8, 6)), dtype=jnp.uint8)
+        cb1 = np.asarray(rand(rng, 256))
+        cb2 = cb1.copy()
+        cb2[16:] = 1e6  # poison the unused tail
+        y1 = kernels.clustered_matmul(x, idx, jnp.asarray(cb1))
+        y2 = kernels.clustered_matmul(x, idx, jnp.asarray(cb2))
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    @given(matmul_case())
+    @settings(max_examples=10, deadline=None)
+    def test_plain_matmul(self, case):
+        m, k, n, bm, bn, bk, _, seed = case
+        rng = np.random.default_rng(seed)
+        x = rand(rng, m, k)
+        w = rand(rng, k, n)
+        got = kernels.matmul(x, w, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(got, ref.matmul(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_shape_mismatch_raises(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 4, 8)
+        idx = jnp.zeros((9, 6), dtype=jnp.uint8)
+        with pytest.raises(AssertionError):
+            kernels.clustered_matmul(x, idx, rand(rng, 256))
+
+
+class TestAttention:
+    @given(
+        st.integers(1, 20),
+        st.integers(1, 16),
+        st.integers(1, 8),
+        st.integers(1, 8),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, t, d, bq, bkv, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = (rand(rng, t, d) for _ in range(3))
+        got = kernels.attention(q, k, v, bq=bq, bkv=bkv)
+        np.testing.assert_allclose(
+            got, ref.attention(q, k, v), rtol=1e-4, atol=1e-4
+        )
+
+    def test_batched_heads(self):
+        rng = np.random.default_rng(7)
+        q = rand(rng, 2, 3, 8, 16)
+        k = rand(rng, 2, 3, 8, 16)
+        v = rand(rng, 2, 3, 8, 16)
+        got = kernels.attention_batched(q, k, v, bq=4, bkv=4)
+        want = np.stack(
+            [
+                np.stack(
+                    [
+                        np.asarray(ref.attention(q[b, h], k[b, h], v[b, h]))
+                        for h in range(3)
+                    ]
+                )
+                for b in range(2)
+            ]
+        )
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    def test_softmax_rows_sum_to_one_effect(self):
+        """attention(q,k,const_v) == const_v for any q,k (softmax rows sum=1)."""
+        rng = np.random.default_rng(3)
+        q, k = rand(rng, 6, 4), rand(rng, 6, 4)
+        v = jnp.ones((6, 4), jnp.float32) * 3.25
+        got = kernels.attention(q, k, v, bq=2, bkv=3)
+        np.testing.assert_allclose(np.asarray(got), 3.25, rtol=1e-5)
+
+
+class TestLayerNorm:
+    @given(
+        st.integers(1, 32),
+        st.integers(2, 48),
+        st.integers(1, 8),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, r, d, br, seed):
+        rng = np.random.default_rng(seed)
+        x, g, b = rand(rng, r, d), rand(rng, d), rand(rng, d)
+        got = kernels.layernorm(x, g, b, br=br)
+        np.testing.assert_allclose(
+            got, ref.layernorm(x, g, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_normalizes_rows(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, 8, 64) * 10 + 3
+        y = kernels.layernorm(
+            x, jnp.ones(64, jnp.float32), jnp.zeros(64, jnp.float32)
+        )
+        np.testing.assert_allclose(np.mean(np.asarray(y), axis=1), 0, atol=1e-4)
+        np.testing.assert_allclose(np.std(np.asarray(y), axis=1), 1, atol=1e-3)
+
+
+class TestKmeansAssign:
+    @given(
+        st.integers(1, 512),
+        st.integers(1, 64),
+        st.integers(1, 128),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(**SETTINGS)
+    def test_matches_ref(self, n, c, bp, seed):
+        rng = np.random.default_rng(seed)
+        p = rand(rng, n)
+        cents = rand(rng, c)
+        got = kernels.kmeans_assign(p, cents, bp=bp)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.kmeans_assign(p, cents))
+        )
+
+    def test_assignment_is_nearest(self):
+        rng = np.random.default_rng(11)
+        p = rand(rng, 300)
+        cents = rand(rng, 17)
+        idx = np.asarray(kernels.kmeans_assign(p, cents))
+        d = np.abs(np.asarray(p)[:, None] - np.asarray(cents)[None, :])
+        chosen = d[np.arange(300), idx]
+        assert np.all(chosen <= d.min(axis=1) + 1e-6)

@@ -1,0 +1,146 @@
+"""Compression pipeline invariants: 1-D Lloyd, assignment, schemes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kmeans as K
+from compile import model as M
+
+SETTINGS = dict(max_examples=30, deadline=None)
+CFG = M.ModelConfig(name="vit", dim=64, depth=2, heads=2)
+
+
+@st.composite
+def points(draw):
+    n = draw(st.integers(4, 2000))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 10.0))
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+class TestLloyd1D:
+    @given(points(), st.sampled_from([2, 4, 16, 64]))
+    @settings(**SETTINGS)
+    def test_centroids_sorted_within_range(self, pts, c):
+        cents = K.lloyd_1d(pts, c)
+        assert np.all(np.diff(cents) >= 0)
+        assert cents.min() >= pts.min() - 1e-9
+        assert cents.max() <= pts.max() + 1e-9
+
+    @given(points(), st.sampled_from([2, 8, 32]))
+    @settings(**SETTINGS)
+    def test_lloyd_improves_on_init(self, pts, c):
+        qs = (np.arange(min(c, np.unique(pts).size)) + 0.5) / c
+        init = np.quantile(pts.astype(np.float64), qs)
+        assert K.inertia(pts, K.lloyd_1d(pts, c)) <= K.inertia(pts, init) + 1e-6
+
+    @given(points())
+    @settings(**SETTINGS)
+    def test_more_clusters_not_worse(self, pts):
+        i8 = K.inertia(pts, K.lloyd_1d(pts, 8))
+        i64 = K.inertia(pts, K.lloyd_1d(pts, 64))
+        assert i64 <= i8 + 1e-6
+
+    def test_exact_when_clusters_cover_uniques(self):
+        pts = np.asarray([1.0, 1.0, 5.0, 5.0, 9.0], dtype=np.float32)
+        cents = K.lloyd_1d(pts, 3)
+        assert K.inertia(pts, cents) < 1e-12
+
+    def test_empty_raises(self):
+        with pytest.raises(ValueError):
+            K.lloyd_1d(np.zeros(0, dtype=np.float32), 4)
+
+
+class TestAssign1D:
+    @given(points(), st.sampled_from([2, 8, 64]))
+    @settings(**SETTINGS)
+    def test_assignment_is_nearest(self, pts, c):
+        cents = K.lloyd_1d(pts, c)
+        idx = K.assign_1d(pts, cents)
+        d = np.abs(pts[:, None].astype(np.float64) - cents[None, :])
+        best = d.min(axis=1)
+        chosen = d[np.arange(len(pts)), idx]
+        np.testing.assert_allclose(chosen, best, atol=1e-12)
+
+    def test_index_range(self):
+        pts = np.linspace(-1, 1, 100).astype(np.float32)
+        cents = K.lloyd_1d(pts, 16)
+        idx = K.assign_1d(pts, cents)
+        assert idx.min() >= 0 and idx.max() < len(cents)
+
+
+class TestClusterParams:
+    def _params(self, seed=0):
+        return {k: np.asarray(v) for k, v in M.init_params(CFG, seed).items()}
+
+    @pytest.mark.parametrize("scheme", K.SCHEMES)
+    def test_shapes_and_dtypes(self, scheme):
+        pn = self._params()
+        cm = K.cluster_params(pn, CFG, 16, scheme)
+        names = M.clustered_names(CFG)
+        assert set(cm.indices) == set(names)
+        assert cm.codebooks.shape == (len(names), K.CODEBOOK_PAD)
+        assert cm.codebooks.dtype == np.float32
+        for n in names:
+            assert cm.indices[n].dtype == np.uint8
+            assert cm.indices[n].shape == pn[n].shape
+            assert cm.indices[n].max() < 16
+
+    def test_entire_shares_one_table(self):
+        cm = K.cluster_params(self._params(), CFG, 32, "entire")
+        for row in cm.codebooks[1:]:
+            np.testing.assert_array_equal(row, cm.codebooks[0])
+
+    def test_perlayer_tables_differ(self):
+        cm = K.cluster_params(self._params(), CFG, 32, "perlayer")
+        assert not all(
+            np.array_equal(cm.codebooks[0], r) for r in cm.codebooks[1:]
+        )
+
+    def test_error_decreases_with_clusters(self):
+        pn = self._params()
+        errs = [
+            K.quantization_error(pn, K.cluster_params(pn, CFG, c, "perlayer"), CFG)
+            for c in (8, 32, 128)
+        ]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_perlayer_competitive_with_entire(self):
+        # Per-layer is not a strict theorem per-value (quantile init can
+        # favour the pooled distribution at high c), but it must be
+        # competitive everywhere and clearly better in the low-c regime
+        # (the paper's Fig. 7 point).
+        pn = self._params()
+        for c in (8, 64):
+            e_ent = K.quantization_error(pn, K.cluster_params(pn, CFG, c, "entire"), CFG)
+            e_pl = K.quantization_error(pn, K.cluster_params(pn, CFG, c, "perlayer"), CFG)
+            assert e_pl <= e_ent * 1.10, f"c={c}: {e_pl} vs {e_ent}"
+
+    def test_table_bytes(self):
+        pn = self._params()
+        cm_e = K.cluster_params(pn, CFG, 64, "entire")
+        assert cm_e.table_of_centroids_bytes() == 64 * 4  # paper §V-C: 256 B
+        cm_p = K.cluster_params(pn, CFG, 64, "perlayer")
+        assert cm_p.table_of_centroids_bytes() == len(M.clustered_names(CFG)) * 64 * 4
+
+    def test_invalid_args(self):
+        pn = self._params()
+        with pytest.raises(ValueError):
+            K.cluster_params(pn, CFG, 64, "bogus")
+        with pytest.raises(ValueError):
+            K.cluster_params(pn, CFG, 1, "entire")
+        with pytest.raises(ValueError):
+            K.cluster_params(pn, CFG, 512, "entire")
+
+    def test_dequantize_reconstruction(self):
+        pn = self._params()
+        cm = K.cluster_params(pn, CFG, 256, "perlayer")
+        deq = K.dequantize_params(pn, cm, CFG)
+        for n in M.clustered_names(CFG):
+            err = np.max(np.abs(deq[n] - pn[n]))
+            assert err < 0.01, f"{n}: {err}"
+        # non-clustered params pass through untouched
+        for n in ("pos_embed", "cls_token"):
+            np.testing.assert_array_equal(deq[n], pn[n])

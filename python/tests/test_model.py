@@ -1,0 +1,148 @@
+"""L2 correctness: model forward passes, manifest contract, clustered path."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import kmeans as K
+from compile import model as M
+
+CFG_V = M.ModelConfig(name="vit", dim=64, depth=2, heads=2)
+CFG_D = M.ModelConfig(name="deit", dim=64, depth=2, heads=2, distilled=True)
+
+
+def _imgs(b, cfg=CFG_V, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(0, 1, (b, cfg.img_size, cfg.img_size, 3)).astype(np.float32)
+    )
+
+
+class TestConfig:
+    def test_token_counts(self):
+        assert CFG_V.n_patches == 16
+        assert CFG_V.n_tokens == 17
+        assert CFG_D.n_tokens == 18
+
+    def test_head_dim_divides(self):
+        with pytest.raises(AssertionError):
+            _ = M.ModelConfig(dim=65, heads=2).head_dim
+
+
+class TestManifest:
+    def test_is_stable_and_ordered(self):
+        a = M.param_manifest(CFG_V)
+        b = M.param_manifest(CFG_V)
+        assert a == b
+        names = [s.name for s in a]
+        assert len(names) == len(set(names)), "duplicate parameter names"
+
+    def test_deit_has_distillation_params(self):
+        names = {s.name for s in M.param_manifest(CFG_D)}
+        assert "dist_token" in names and "head_dist/w" in names
+        vit_names = {s.name for s in M.param_manifest(CFG_V)}
+        assert "dist_token" not in vit_names
+
+    def test_clustered_selection(self):
+        for spec in M.param_manifest(CFG_V):
+            n_elems = int(np.prod(spec.shape))
+            if spec.clustered:
+                assert n_elems >= M.CLUSTER_MIN_ELEMS
+                assert spec.name.endswith("/w")
+            if spec.name in ("pos_embed", "cls_token"):
+                assert not spec.clustered
+
+    def test_flat_roundtrip(self):
+        params = M.init_params(CFG_D, 0)
+        flat = M.params_to_flat(params, CFG_D)
+        back = M.flat_to_params(flat, CFG_D)
+        assert set(back) == set(params)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(params[k]))
+
+
+class TestPatchify:
+    def test_shape(self):
+        x = M.patchify(_imgs(3), CFG_V)
+        assert x.shape == (3, CFG_V.n_patches, CFG_V.patch_dim)
+
+    def test_preserves_pixels(self):
+        imgs = _imgs(1)
+        patches = M.patchify(imgs, CFG_V)
+        # first patch = top-left 8x8 block, row-major
+        want = np.asarray(imgs)[0, :8, :8, :].reshape(-1)
+        np.testing.assert_array_equal(np.asarray(patches)[0, 0], want)
+
+
+class TestForward:
+    def test_logit_shapes(self):
+        for cfg in (CFG_V, CFG_D):
+            params = M.init_params(cfg, 0)
+            out = M.forward(params, _imgs(4, cfg), cfg)
+            assert out.shape == (4, cfg.n_classes)
+
+    def test_kernel_path_matches_ref_path(self):
+        for cfg in (CFG_V, CFG_D):
+            params = M.init_params(cfg, 1)
+            imgs = _imgs(2, cfg, seed=2)
+            lr = M.forward(params, imgs, cfg, use_kernels=False)
+            lk = M.forward(params, imgs, cfg, use_kernels=True)
+            np.testing.assert_allclose(
+                np.asarray(lr), np.asarray(lk), rtol=3e-4, atol=3e-4
+            )
+
+    def test_deit_train_heads(self):
+        params = M.init_params(CFG_D, 0)
+        lc, ld = M.forward(params, _imgs(2, CFG_D), CFG_D, train_heads=True)
+        assert lc.shape == ld.shape == (2, CFG_D.n_classes)
+        avg = M.forward(params, _imgs(2, CFG_D), CFG_D)
+        np.testing.assert_allclose(
+            np.asarray(avg), (np.asarray(lc) + np.asarray(ld)) / 2, rtol=1e-5
+        )
+
+    def test_batch_invariance(self):
+        """Same image gives the same logits regardless of batch context."""
+        params = M.init_params(CFG_V, 4)
+        imgs = _imgs(3, seed=5)
+        full = np.asarray(M.forward(params, imgs, CFG_V))
+        one = np.asarray(M.forward(params, imgs[1:2], CFG_V))
+        np.testing.assert_allclose(full[1:2], one, rtol=1e-4, atol=1e-5)
+
+
+class TestClusteredForward:
+    @pytest.mark.parametrize("scheme", K.SCHEMES)
+    @pytest.mark.parametrize("cfg", [CFG_V, CFG_D], ids=["vit", "deit"])
+    def test_matches_dequantized_oracle(self, scheme, cfg):
+        params = M.init_params(cfg, 3)
+        pn = {k: np.asarray(v) for k, v in params.items()}
+        cm = K.cluster_params(pn, cfg, 32, scheme)
+        cp = {
+            k: (jnp.asarray(cm.indices[k]) if k in cm.indices else params[k])
+            for k in pn
+        }
+        imgs = _imgs(2, cfg, seed=9)
+        got = M.forward_clustered(cp, jnp.asarray(cm.codebooks), imgs, cfg)
+        deq = {
+            k: jnp.asarray(v) for k, v in K.dequantize_params(pn, cm, cfg).items()
+        }
+        want = M.forward(deq, imgs, cfg)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4
+        )
+
+    def test_c256_padding_identity(self):
+        """With c=256 (no padding), clustered fwd ~= baseline fwd."""
+        cfg = CFG_V
+        params = M.init_params(cfg, 6)
+        pn = {k: np.asarray(v) for k, v in params.items()}
+        cm = K.cluster_params(pn, cfg, 256, "perlayer")
+        cp = {
+            k: (jnp.asarray(cm.indices[k]) if k in cm.indices else params[k])
+            for k in pn
+        }
+        imgs = _imgs(2, seed=10)
+        got = np.asarray(M.forward_clustered(cp, jnp.asarray(cm.codebooks), imgs, cfg))
+        want = np.asarray(M.forward(params, imgs, cfg))
+        # 256 clusters on an init'ed (dense-near-zero) model is a fine grid:
+        # logits should be close but not identical.
+        np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)

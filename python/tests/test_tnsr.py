@@ -1,0 +1,66 @@
+"""`.tpak` interchange format: roundtrips and error handling."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tnsr
+
+
+@st.composite
+def tensor(draw):
+    dtype = draw(st.sampled_from([np.float32, np.uint8, np.int32, np.int64]))
+    ndim = draw(st.integers(0, 4))
+    shape = tuple(draw(st.integers(1, 6)) for _ in range(ndim))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if dtype == np.float32:
+        return rng.standard_normal(shape).astype(dtype)
+    return rng.integers(0, 100, size=shape).astype(dtype)
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=40), tensor(), max_size=6))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip(tmp_path_factory, tensors):
+    path = str(tmp_path_factory.mktemp("tpak") / "x.tpak")
+    tnsr.write_tpak(path, tensors)
+    back = tnsr.read_tpak(path)
+    assert set(back) == set(tensors)
+    for k, v in tensors.items():
+        assert back[k].dtype == v.dtype
+        assert back[k].shape == v.shape
+        np.testing.assert_array_equal(back[k], v)
+
+
+def test_empty_pack(tmp_path):
+    path = str(tmp_path / "e.tpak")
+    tnsr.write_tpak(path, {})
+    assert tnsr.read_tpak(path) == {}
+
+def test_scalar_tensor(tmp_path):
+    path = str(tmp_path / "s.tpak")
+    tnsr.write_tpak(path, {"s": np.float32(3.5).reshape(())})
+    back = tnsr.read_tpak(path)
+    assert back["s"].shape == ()
+    assert back["s"] == np.float32(3.5)
+
+
+def test_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.tpak")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="bad magic"):
+        tnsr.read_tpak(path)
+
+
+def test_unsupported_dtype(tmp_path):
+    path = str(tmp_path / "f.tpak")
+    with pytest.raises(TypeError):
+        tnsr.write_tpak(path, {"x": np.zeros(3, dtype=np.float64)})
+
+
+def test_non_contiguous_input(tmp_path):
+    path = str(tmp_path / "nc.tpak")
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6)[:, ::2]
+    tnsr.write_tpak(path, {"x": arr})
+    np.testing.assert_array_equal(tnsr.read_tpak(path)["x"], arr)

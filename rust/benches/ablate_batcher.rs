@@ -1,0 +1,102 @@
+//! Ablation A1: dynamic-batcher policy (size-only vs deadline vs
+//! adaptive) under low/medium/high Poisson load, measured end-to-end on
+//! the real serving stack.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::{
+    BatchPolicy, BatcherConfig, Server, ServerConfig,
+};
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::tensor::Tensor;
+use clusterformer::util::rng::Pcg32;
+use clusterformer::util::stats::percentile_sorted;
+
+const DURATION_S: f64 = 4.0;
+
+fn main() -> anyhow::Result<()> {
+    let registry = Registry::load("artifacts")?;
+    let (images, _) = registry.val_set()?;
+    println!("# A1 — batcher policy ablation (vit/perlayer_64, {DURATION_S}s per point)\n");
+    println!("| policy | rate | p50 | p99 | throughput | mean batch |");
+    println!("|---|---|---|---|---|---|");
+    for policy in [BatchPolicy::SizeOnly, BatchPolicy::Deadline, BatchPolicy::Adaptive] {
+        // One server per policy so metrics are isolated.
+        let server = Server::start(ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            targets: vec![(
+                "vit".to_string(),
+                VariantKey::Clustered {
+                    scheme: ClusterScheme::PerLayer,
+                    clusters: 64,
+                },
+            )],
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(15),
+                policy,
+                queue_cap: 4096,
+            },
+        })?;
+        let router = Arc::new(server.router.clone());
+        for rate in [15.0, 60.0, 150.0] {
+            let mut rng = Pcg32::new(99);
+            let mut pending = Vec::new();
+            let t0 = Instant::now();
+            let mut n = 0usize;
+            while t0.elapsed().as_secs_f64() < DURATION_S {
+                std::thread::sleep(Duration::from_secs_f64(
+                    rng.exponential(rate).min(0.5),
+                ));
+                let row = n % images.shape()[0];
+                let mut img = images.slice_rows(row, row + 1)?;
+                let s = img.shape()[1..].to_vec();
+                img.reshape(s)?;
+                pending.push(router.submit("vit/perlayer_64", img)?.1);
+                n += 1;
+            }
+            let mut lat: Vec<f64> = Vec::new();
+            // Short timeout: under SizeOnly the final partial batch is
+            // (by design) stuck until shutdown — don't wait a minute per
+            // stranded request, just count it out of the throughput.
+            for rx in pending {
+                if let Ok(r) = rx.recv_timeout(Duration::from_secs(3)) {
+                    if !r.logits.is_empty() {
+                        lat.push(r.latency_s);
+                    }
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let snap = server.snapshot();
+            let mean_batch = snap
+                .per_variant
+                .values()
+                .map(|v| v.mean_batch_size())
+                .next()
+                .unwrap_or(0.0);
+            println!(
+                "| {:?} | {:.0}/s | {:.2}ms | {:.2}ms | {:.1}/s | {:.2} |",
+                policy,
+                rate,
+                percentile_sorted(&lat, 0.5) * 1e3,
+                percentile_sorted(&lat, 0.99) * 1e3,
+                lat.len() as f64 / wall,
+                mean_batch,
+            );
+        }
+        server.shutdown();
+    }
+    println!(
+        "\nexpected shape: SizeOnly has pathological tail latency at low rate \
+         (batches never fill); Adaptive matches Deadline's tail while \
+         forming larger batches at high rate."
+    );
+    Ok(())
+}
+
+// keep Tensor import used in signature position
+#[allow(unused)]
+fn _t(_: &Tensor) {}

@@ -1,0 +1,69 @@
+//! Shared engine for the Fig. 7 / Fig. 8 accuracy sweeps: run every
+//! (scheme, cluster-count) variant of one model through the *Rust
+//! runtime* (the clustered HLO with the in-kernel indirect fetch) over
+//! the validation set and emit the paper-style accuracy table.
+
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::eval::evaluate;
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+pub fn run_sweep(model: &str, fig: &str, n_images: usize) -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let mut registry = Registry::load("artifacts")?;
+    let sweep = registry.manifest.cluster_sweep.clone();
+
+    println!("# {fig} — {model} top-1/top-5 vs number of clusters ({n_images} images, Rust runtime)\n");
+    let base = evaluate(&engine, &mut registry, model, VariantKey::Baseline, n_images)?;
+    println!(
+        "baseline: top1={:.4} top5={:.4} ({:.1} img/s)\n",
+        base.top1, base.top5, base.images_per_s
+    );
+    println!("| scheme | clusters | top1 | Δtop1 (pt) | top5 | Δtop5 (pt) |");
+    println!("|---|---|---|---|---|---|");
+    let mut low_c: Vec<(String, f64)> = Vec::new();
+    let mut max_loss_at_64 = 0.0f64;
+    for scheme in [ClusterScheme::Entire, ClusterScheme::PerLayer] {
+        for &c in &sweep {
+            let key = VariantKey::Clustered { scheme, clusters: c };
+            let r = evaluate(&engine, &mut registry, model, key, n_images)?;
+            println!(
+                "| {} | {} | {:.4} | {:+.2} | {:.4} | {:+.2} |",
+                scheme.name(),
+                c,
+                r.top1,
+                (r.top1 - base.top1) * 100.0,
+                r.top5,
+                (r.top5 - base.top5) * 100.0,
+            );
+            if c == sweep[0] {
+                low_c.push((scheme.name().to_string(), r.top1));
+            }
+            if c == 64 {
+                max_loss_at_64 = max_loss_at_64.max(base.top1 - r.top1);
+            }
+        }
+    }
+    if let [(_, entire), (_, perlayer)] = &low_c[..] {
+        let per_layer_beats_entire_low_c = perlayer >= entire;
+        println!(
+            "\npaper check: per-layer ≥ entire at the lowest cluster count \
+             ({perlayer:.4} vs {entire:.4}): {}",
+            if per_layer_beats_entire_low_c { "REPRODUCED" } else { "NOT reproduced" }
+        );
+    }
+    println!(
+        "paper check: ≤0.3pt top-1 loss at 64 clusters (measured {:.2}pt): {}",
+        max_loss_at_64 * 100.0,
+        if max_loss_at_64 <= 0.005 { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    Ok(())
+}
+
+/// Image count for the sweep (override with SWEEP_N).
+pub fn sweep_n() -> usize {
+    std::env::var("SWEEP_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}

@@ -1,0 +1,10 @@
+//! Fig. 7 reproduction: DeiT top-1/top-5 accuracy vs number of clusters,
+//! entire-model vs per-layer, through the Rust runtime (clustered HLO
+//! with the in-kernel indirect fetch).
+
+#[path = "accuracy_sweep.rs"]
+mod accuracy_sweep;
+
+fn main() -> anyhow::Result<()> {
+    accuracy_sweep::run_sweep("deit", "Fig. 7", accuracy_sweep::sweep_n())
+}

@@ -1,0 +1,9 @@
+//! Fig. 8 reproduction: ViT top-1/top-5 accuracy vs number of clusters,
+//! entire-model vs per-layer, through the Rust runtime.
+
+#[path = "accuracy_sweep.rs"]
+mod accuracy_sweep;
+
+fn main() -> anyhow::Result<()> {
+    accuracy_sweep::run_sweep("vit", "Fig. 8", accuracy_sweep::sweep_n())
+}

@@ -1,0 +1,169 @@
+//! §Perf instrumentation (EXPERIMENTS.md §Perf):
+//!
+//! * L2 — kernel-path (interpret-Pallas while-loops) vs refpath (plain
+//!   jnp, XLA-fused) module wall time and fusion counts on the CPU PJRT
+//!   backend;
+//! * L3 — resident-weights executable vs re-uploading weights per call;
+//! * L3 — coordinator overhead: through-server round trip vs raw
+//!   executor call at the same batch size.
+
+use std::time::{Duration, Instant};
+
+use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::worker::VariantExecutor;
+use clusterformer::coordinator::{
+    BatchPolicy, BatcherConfig, Server, ServerConfig,
+};
+use clusterformer::hlo::{CostAnalysis, HloModule};
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu()?;
+    let mut registry = Registry::load("artifacts")?;
+    let (images, _) = registry.val_set()?;
+    let batch8 = images.slice_rows(0, 8)?;
+    let mut runner = BenchRunner::new(BenchConfig::heavy());
+
+    println!("# §Perf measurements\n");
+
+    // ---- L2: kernel path vs XLA-fused refpath --------------------------
+    println!("## L2: interpret-Pallas kernel path vs XLA-fused refpath (batch 8, CPU)\n");
+    let variant = registry.variant("vit", VariantKey::Baseline)?;
+    let clustered_variant = registry.variant(
+        "vit",
+        VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
+    )?;
+    let mut l2_rows = Vec::new();
+    for (label, file, inputs) in [
+        (
+            "baseline/kernelpath",
+            "artifacts/vit_8_baseline.hlo.txt".to_string(),
+            {
+                let mut v = vec![batch8.clone()];
+                v.extend(variant.weight_inputs.iter().cloned());
+                v
+            },
+        ),
+        (
+            "baseline/refpath",
+            "artifacts/vit_8_refpath.hlo.txt".to_string(),
+            {
+                let mut v = vec![batch8.clone()];
+                v.extend(variant.weight_inputs.iter().cloned());
+                v
+            },
+        ),
+        (
+            "clustered/kernelpath",
+            "artifacts/vit_8_clustered.hlo.txt".to_string(),
+            {
+                let mut v = vec![batch8.clone()];
+                v.extend(clustered_variant.weight_inputs.iter().cloned());
+                v
+            },
+        ),
+        (
+            "clustered/refpath",
+            "artifacts/vit_8_clustered_refpath.hlo.txt".to_string(),
+            {
+                let mut v = vec![batch8.clone()];
+                v.extend(clustered_variant.weight_inputs.iter().cloned());
+                v
+            },
+        ),
+    ] {
+        let module = HloModule::parse_file(&file)?;
+        let cost = CostAnalysis::of(&module)?;
+        let n_instr: usize = cost.opcode_counts.values().sum();
+        let exe = engine.load_hlo(&file)?;
+        let r = runner.bench_items(label, 8.0, || exe.run(&inputs).unwrap());
+        l2_rows.push((label, r.summary.mean, n_instr, cost.fusion_count()));
+    }
+    println!("\n| module | mean | instructions | fusions |\n|---|---|---|---|");
+    for (label, mean, n, fus) in &l2_rows {
+        println!("| {label} | {} | {n} | {fus} |", fmt_time(*mean));
+    }
+    println!(
+        "\nkernel-path / refpath slowdown: baseline {:.2}x, clustered {:.2}x \
+         (the price of interpret-mode grid loops on CPU; on real TPU the \
+         kernel path is the optimized one — see the structural L1 report)\n",
+        l2_rows[0].1 / l2_rows[1].1,
+        l2_rows[2].1 / l2_rows[3].1
+    );
+
+    // ---- L3: resident weights vs per-call upload ------------------------
+    println!("## L3: resident device weights vs per-call weight upload (batch 8)\n");
+    let exe = engine.load_hlo("artifacts/vit_8_baseline.hlo.txt")?;
+    let resident = exe.with_resident(1, &variant.weight_inputs)?;
+    let mut full_inputs = vec![batch8.clone()];
+    full_inputs.extend(variant.weight_inputs.iter().cloned());
+    let r_upload = runner
+        .bench_items("upload-weights-per-call", 8.0, || exe.run(&full_inputs).unwrap())
+        .summary
+        .mean;
+    let r_resident = runner
+        .bench_items("resident-weights", 8.0, || {
+            resident.run(std::slice::from_ref(&batch8)).unwrap()
+        })
+        .summary
+        .mean;
+    println!(
+        "\nresident weights save {:.1}% per call ({} -> {})\n",
+        (1.0 - r_resident / r_upload) * 100.0,
+        fmt_time(r_upload),
+        fmt_time(r_resident)
+    );
+
+    // ---- L3: coordinator overhead ---------------------------------------
+    println!("## L3: coordinator overhead vs raw executor (batch 8, closed loop)\n");
+    let exec =
+        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)?;
+    exec.warmup(&[8])?;
+    let raw = runner
+        .bench_items("raw-executor-batch8", 8.0, || exec.execute(&batch8).unwrap())
+        .summary
+        .mean;
+
+    let server = Server::start(ServerConfig {
+        artifacts_dir: "artifacts".into(),
+        targets: vec![("vit".to_string(), VariantKey::Baseline)],
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(100),
+            policy: BatchPolicy::SizeOnly, // force full batches
+            queue_cap: 64,
+        },
+    })?;
+    let mut through = Vec::new();
+    for _ in 0..20 {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let mut img = images.slice_rows(i, i + 1).unwrap();
+                let s = img.shape()[1..].to_vec();
+                img.reshape(s).unwrap();
+                server.router.submit("vit/baseline", img).unwrap().1
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        through.push(t0.elapsed().as_secs_f64());
+    }
+    server.shutdown();
+    let through_mean = through.iter().sum::<f64>() / through.len() as f64;
+    println!(
+        "raw batch-8 execute: {} | through coordinator: {} | overhead {:.1}%\n",
+        fmt_time(raw),
+        fmt_time(through_mean),
+        (through_mean / raw - 1.0) * 100.0
+    );
+    println!(
+        "target: coordinator overhead <5% of a batch execute — {}",
+        if through_mean / raw < 1.05 { "MET" } else { "NOT met (see §Perf log)" }
+    );
+    runner.finish("perf pass");
+    Ok(())
+}

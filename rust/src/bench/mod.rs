@@ -1,0 +1,236 @@
+//! Micro-benchmark harness (criterion replacement).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that build a
+//! [`BenchRunner`], register closures, and emit a markdown/CSV report.
+//! Each bench performs warmup iterations, then timed batches until both a
+//! minimum iteration count and a minimum measurement time are reached.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark's measured result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub summary: Summary,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.summary.mean
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n / self.summary.mean)
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Quick config for expensive end-to-end benches.
+impl BenchConfig {
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            min_time: Duration::from_millis(200),
+        }
+    }
+}
+
+#[derive(Default)]
+pub struct BenchRunner {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchRunner {
+    pub fn new(config: BenchConfig) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Time `f` and record under `name`. The closure should return a value
+    /// that depends on the computation so the optimizer cannot elide it;
+    /// use `std::hint::black_box` inside when in doubt.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        self.bench_with_items(name, None, move || {
+            let _ = std::hint::black_box(f());
+        })
+    }
+
+    /// Like [`bench`], with a throughput denominator (e.g. images/iter).
+    pub fn bench_items<R>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> R,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), move || {
+            let _ = std::hint::black_box(f());
+        })
+    }
+
+    fn bench_with_items(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while times.len() < self.config.min_iters
+            || (start.elapsed() < self.config.min_time
+                && times.len() < self.config.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            summary: Summary::of(&times),
+            items_per_iter: items,
+        };
+        eprintln!("  bench {:<44} {}", name, fmt_result(&result));
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Markdown table of all results.
+    pub fn markdown(&self, title: &str) -> String {
+        let mut s = format!("## {title}\n\n");
+        s.push_str("| benchmark | iters | mean | p50 | p99 | throughput |\n");
+        s.push_str("|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                r.name,
+                r.iters,
+                fmt_time(r.summary.mean),
+                fmt_time(r.summary.p50),
+                fmt_time(r.summary.p99),
+                r.throughput()
+                    .map(|t| format!("{t:.1}/s"))
+                    .unwrap_or_else(|| "-".into()),
+            ));
+        }
+        s
+    }
+
+    /// CSV rows: name,iters,mean_s,p50_s,p99_s,throughput_per_s
+    pub fn csv(&self) -> String {
+        let mut s = String::from("name,iters,mean_s,p50_s,p99_s,throughput_per_s\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{}\n",
+                r.name,
+                r.iters,
+                r.summary.mean,
+                r.summary.p50,
+                r.summary.p99,
+                r.throughput().map(|t| format!("{t:.3}")).unwrap_or_default(),
+            ));
+        }
+        s
+    }
+
+    /// Write the report files under `reports/` and print the markdown.
+    pub fn finish(&self, title: &str) {
+        let md = self.markdown(title);
+        println!("\n{md}");
+        let dir = std::path::Path::new("reports");
+        let _ = std::fs::create_dir_all(dir);
+        let slug: String = title
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let _ = std::fs::write(dir.join(format!("{slug}.md")), &md);
+        let _ = std::fs::write(dir.join(format!("{slug}.csv")), self.csv());
+    }
+}
+
+/// Human formatting for seconds.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+fn fmt_result(r: &BenchResult) -> String {
+    format!(
+        "mean {} p50 {} p99 {} ({} iters){}",
+        fmt_time(r.summary.mean),
+        fmt_time(r.summary.p50),
+        fmt_time(r.summary.p99),
+        r.iters,
+        r.throughput()
+            .map(|t| format!(" {t:.1}/s"))
+            .unwrap_or_default()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut r = BenchRunner::new(BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 5,
+            min_time: Duration::from_millis(1),
+        });
+        r.bench("noop", || 1 + 1);
+        r.bench_items("items", 10.0, || std::thread::sleep(Duration::from_micros(50)));
+        assert_eq!(r.results.len(), 2);
+        assert_eq!(r.results[0].iters, 5);
+        assert!(r.results[1].throughput().unwrap() > 0.0);
+        let md = r.markdown("t");
+        assert!(md.contains("noop") && md.contains("items"));
+        let csv = r.csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

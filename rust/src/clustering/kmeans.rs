@@ -1,0 +1,266 @@
+//! Exact 1-D K-means (Lloyd's algorithm) over scalar parameters.
+//!
+//! For 1-D points the assignment step is a binary search over sorted
+//! centroid midpoints (O(N log C) per iteration, no N x C distance
+//! matrix), and the update step is a prefix-sum sweep — the same scheme
+//! as the Python pipeline, so centroids agree to float tolerance.
+
+use anyhow::{bail, Result};
+
+/// Initialization strategies (the ablation bench compares them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KmeansInit {
+    /// Quantiles of the empirical distribution (deterministic; default —
+    /// matches the Python pipeline).
+    Quantile,
+    /// Uniformly spaced over [min, max].
+    Uniform,
+    /// Random distinct points (seeded).
+    Random { seed: u64 },
+}
+
+/// Run Lloyd's algorithm; returns sorted centroids (f32 to match the
+/// on-disk codebook format).
+pub fn lloyd_1d(
+    points: &[f32],
+    n_clusters: usize,
+    iters: usize,
+    init: KmeansInit,
+) -> Result<Vec<f32>> {
+    if points.is_empty() {
+        bail!("cannot cluster zero points");
+    }
+    if n_clusters == 0 {
+        bail!("n_clusters must be >= 1");
+    }
+    let mut sorted: Vec<f64> = points.iter().map(|&p| p as f64).collect();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let n_unique = count_unique(&sorted);
+    let k = n_clusters.min(n_unique);
+
+    let mut centroids = initial_centroids(&sorted, k, init);
+    // prefix sums for O(1) range means
+    let mut csum = Vec::with_capacity(sorted.len() + 1);
+    csum.push(0.0f64);
+    for &p in &sorted {
+        csum.push(csum.last().unwrap() + p);
+    }
+
+    for _ in 0..iters {
+        centroids.sort_by(|a, b| a.total_cmp(b));
+        centroids.dedup_by(|a, b| *a == *b);
+        let m = centroids.len();
+        // region starts via midpoint binary search
+        let mut starts = Vec::with_capacity(m + 1);
+        starts.push(0usize);
+        for w in centroids.windows(2) {
+            let mid = (w[0] + w[1]) / 2.0;
+            starts.push(sorted.partition_point(|&p| p <= mid));
+        }
+        starts.push(sorted.len());
+        let mut shift = 0.0f64;
+        let mut new = Vec::with_capacity(m);
+        for i in 0..m {
+            let (lo, hi) = (starts[i], starts[i + 1]);
+            if hi > lo {
+                let mean = (csum[hi] - csum[lo]) / (hi - lo) as f64;
+                shift = shift.max((mean - centroids[i]).abs());
+                new.push(mean);
+            } else {
+                new.push(centroids[i]); // keep empty-region centroid
+            }
+        }
+        centroids = new;
+        if shift < 1e-7 {
+            break;
+        }
+    }
+    centroids.sort_by(|a, b| a.total_cmp(b));
+    Ok(centroids.into_iter().map(|c| c as f32).collect())
+}
+
+fn count_unique(sorted: &[f64]) -> usize {
+    let mut n = 1;
+    for w in sorted.windows(2) {
+        if w[0] != w[1] {
+            n += 1;
+        }
+    }
+    n
+}
+
+fn initial_centroids(sorted: &[f64], k: usize, init: KmeansInit) -> Vec<f64> {
+    match init {
+        KmeansInit::Quantile => (0..k)
+            .map(|i| {
+                let q = (i as f64 + 0.5) / k as f64;
+                quantile_sorted(sorted, q)
+            })
+            .collect(),
+        KmeansInit::Uniform => {
+            let (lo, hi) = (sorted[0], *sorted.last().unwrap());
+            if lo == hi {
+                return vec![lo; k];
+            }
+            (0..k)
+                .map(|i| lo + (hi - lo) * (i as f64 + 0.5) / k as f64)
+                .collect()
+        }
+        KmeansInit::Random { seed } => {
+            let mut rng = crate::util::rng::Pcg32::new(seed);
+            let mut picks: Vec<f64> = (0..k)
+                .map(|_| sorted[rng.below(sorted.len() as u64) as usize])
+                .collect();
+            picks.sort_by(|a, b| a.total_cmp(b));
+            picks
+        }
+    }
+}
+
+/// Linear-interpolated quantile of an ascending slice.
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Nearest-centroid assignment (ties -> lower index). `centroids` must be
+/// ascending (as returned by [`lloyd_1d`]).
+pub fn assign_1d(points: &[f32], centroids: &[f32]) -> Vec<u8> {
+    assert!(!centroids.is_empty());
+    assert!(centroids.len() <= 256, "u8 index space");
+    debug_assert!(centroids.windows(2).all(|w| w[0] <= w[1]));
+    let mids: Vec<f64> = centroids
+        .windows(2)
+        .map(|w| (w[0] as f64 + w[1] as f64) / 2.0)
+        .collect();
+    points
+        .iter()
+        .map(|&p| mids.partition_point(|&m| m < p as f64) as u8)
+        .collect()
+}
+
+/// Sum of squared distances to the assigned centroid.
+pub fn inertia(points: &[f32], centroids: &[f32]) -> f64 {
+    let idx = assign_1d(points, centroids);
+    points
+        .iter()
+        .zip(&idx)
+        .map(|(&p, &i)| {
+            let d = p as f64 - centroids[i as usize] as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut pts = Vec::new();
+        let mut rng = Pcg32::new(1);
+        for center in [-10.0f32, 0.0, 10.0] {
+            for _ in 0..200 {
+                pts.push(center + rng.normal() as f32 * 0.1);
+            }
+        }
+        let c = lloyd_1d(&pts, 3, 50, KmeansInit::Quantile).unwrap();
+        assert!((c[0] + 10.0).abs() < 0.2, "{c:?}");
+        assert!(c[1].abs() < 0.2, "{c:?}");
+        assert!((c[2] - 10.0).abs() < 0.2, "{c:?}");
+    }
+
+    #[test]
+    fn exact_when_k_covers_uniques() {
+        let pts = [1.0f32, 1.0, 5.0, 5.0, 9.0];
+        let c = lloyd_1d(&pts, 3, 20, KmeansInit::Quantile).unwrap();
+        assert!(inertia(&pts, &c) < 1e-12);
+    }
+
+    #[test]
+    fn constant_input() {
+        let pts = [2.5f32; 100];
+        let c = lloyd_1d(&pts, 8, 10, KmeansInit::Quantile).unwrap();
+        assert_eq!(c, vec![2.5]);
+        assert!(assign_1d(&pts, &c).iter().all(|&i| i == 0));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(lloyd_1d(&[], 4, 10, KmeansInit::Quantile).is_err());
+        assert!(lloyd_1d(&[1.0], 0, 10, KmeansInit::Quantile).is_err());
+    }
+
+    #[test]
+    fn prop_assignment_is_nearest() {
+        check("assignment is nearest", 60, |g| {
+            let pts = g.vec_f32(1, 400);
+            let k = g.usize(1, 32);
+            let c = lloyd_1d(&pts, k, 25, KmeansInit::Quantile).unwrap();
+            let idx = assign_1d(&pts, &c);
+            for (p, &i) in pts.iter().zip(&idx) {
+                let chosen = (p - c[i as usize]).abs();
+                let best = c
+                    .iter()
+                    .map(|&cc| (p - cc).abs())
+                    .fold(f32::INFINITY, f32::min);
+                assert!(
+                    chosen <= best + 1e-5,
+                    "p={p} chosen={chosen} best={best}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_lloyd_not_worse_than_init() {
+        check("lloyd improves on init", 40, |g| {
+            let pts = g.vec_f32(2, 500);
+            let k = g.usize(1, 16);
+            let sorted: Vec<f64> = {
+                let mut s: Vec<f64> = pts.iter().map(|&p| p as f64).collect();
+                s.sort_by(|a, b| a.total_cmp(b));
+                s
+            };
+            let init: Vec<f32> = (0..k.min(count_unique(&sorted)))
+                .map(|i| quantile_sorted(&sorted, (i as f64 + 0.5) / k as f64) as f32)
+                .collect();
+            let fit = lloyd_1d(&pts, k, 30, KmeansInit::Quantile).unwrap();
+            assert!(inertia(&pts, &fit) <= inertia(&pts, &init) + 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_more_clusters_not_worse() {
+        check("more clusters not worse", 30, |g| {
+            let pts = g.vec_f32(4, 400);
+            let c8 = lloyd_1d(&pts, 8, 30, KmeansInit::Quantile).unwrap();
+            let c64 = lloyd_1d(&pts, 64, 30, KmeansInit::Quantile).unwrap();
+            assert!(inertia(&pts, &c64) <= inertia(&pts, &c8) + 1e-4);
+        });
+    }
+
+    #[test]
+    fn init_strategies_all_converge() {
+        let mut rng = Pcg32::new(3);
+        let pts: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        for init in [
+            KmeansInit::Quantile,
+            KmeansInit::Uniform,
+            KmeansInit::Random { seed: 7 },
+        ] {
+            let c = lloyd_1d(&pts, 16, 50, init).unwrap();
+            let per_point = inertia(&pts, &c) / pts.len() as f64;
+            assert!(per_point < 0.01, "{init:?}: {per_point}");
+        }
+    }
+}

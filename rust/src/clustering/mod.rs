@@ -1,0 +1,11 @@
+//! K-means compression toolkit — the Rust mirror of
+//! `python/compile/kmeans.py`, so downstream users can cluster new weight
+//! files without the Python toolchain. Cross-validated against the Python
+//! artifacts in `rust/tests/clustering_crossval.rs`.
+
+pub mod kmeans;
+pub mod packing;
+pub mod quantizer;
+
+pub use kmeans::{assign_1d, inertia, lloyd_1d, KmeansInit};
+pub use quantizer::{ClusterScheme, ClusteredTensors, Quantizer};

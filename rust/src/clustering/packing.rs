@@ -1,0 +1,115 @@
+//! Sub-byte index packing — the paper's §III-B aside made concrete.
+//!
+//! The paper notes that c<256 clusters would in theory need fewer index
+//! bits (6 bits for 64, 5 for 32) but that sub-byte formats are "rarely
+//! used" because of alignment/handling complexity. This module implements
+//! dense b-bit packing so the A2 ablation bench can quantify the actual
+//! trade: additional compression vs unpack overhead.
+
+use anyhow::{bail, Result};
+
+/// Pack u8 indices (each `< 2^bits`) densely at `bits` bits per index.
+pub fn pack_indices(indices: &[u8], bits: u32) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits must be in 1..=8");
+    }
+    let limit = 1u16 << bits;
+    let mut out = vec![0u8; packed_len(indices.len(), bits)];
+    let mut bitpos = 0usize;
+    for &idx in indices {
+        if (idx as u16) >= limit {
+            bail!("index {idx} does not fit in {bits} bits");
+        }
+        let byte = bitpos / 8;
+        let off = (bitpos % 8) as u32;
+        out[byte] |= idx << off;
+        if off + bits > 8 {
+            out[byte + 1] |= idx >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_indices`].
+pub fn unpack_indices(packed: &[u8], n: usize, bits: u32) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&bits) {
+        bail!("bits must be in 1..=8");
+    }
+    if packed.len() < packed_len(n, bits) {
+        bail!("packed buffer too short: {} < {}", packed.len(), packed_len(n, bits));
+    }
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = (bitpos % 8) as u32;
+        let mut v = packed[byte] >> off;
+        if off + bits > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    Ok(out)
+}
+
+/// Bytes needed to pack `n` indices at `bits` bits each.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Minimum bits for `n_clusters` distinct indices.
+pub fn bits_for_clusters(n_clusters: usize) -> u32 {
+    (usize::BITS - (n_clusters.max(1) - 1).leading_zeros()).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn bits_for_clusters_table() {
+        assert_eq!(bits_for_clusters(2), 1);
+        assert_eq!(bits_for_clusters(16), 4);
+        assert_eq!(bits_for_clusters(32), 5);
+        assert_eq!(bits_for_clusters(64), 6);
+        assert_eq!(bits_for_clusters(128), 7);
+        assert_eq!(bits_for_clusters(256), 8);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_widths() {
+        check("pack/unpack roundtrip", 80, |g| {
+            let bits = g.usize(1, 8) as u32;
+            let n = g.usize(0, 600);
+            let max = (1usize << bits) - 1;
+            let xs: Vec<u8> =
+                (0..n).map(|_| g.usize(0, max) as u8).collect();
+            let packed = pack_indices(&xs, bits).unwrap();
+            assert_eq!(packed.len(), packed_len(n, bits));
+            let back = unpack_indices(&packed, n, bits).unwrap();
+            assert_eq!(back, xs);
+        });
+    }
+
+    #[test]
+    fn compression_ratio_is_8_over_bits() {
+        let xs = vec![3u8; 8000];
+        for bits in [5u32, 6, 8] {
+            let packed = pack_indices(&xs, bits).unwrap();
+            let ratio = xs.len() as f64 / packed.len() as f64;
+            assert!((ratio - 8.0 / bits as f64).abs() < 0.01, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        assert!(pack_indices(&[32], 5).is_err());
+        assert!(pack_indices(&[31], 5).is_ok());
+        assert!(pack_indices(&[0], 0).is_err());
+        assert!(unpack_indices(&[0], 9, 8).is_err());
+    }
+}

@@ -1,0 +1,376 @@
+//! Codebook quantizer: clusters a set of named FP32 tensors into u8
+//! indices + padded tables of centroids, matching the artifact layout the
+//! Python pipeline writes (`{model}_clustered_{scheme}_{c}.tpak`).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::kmeans::{assign_1d, lloyd_1d, KmeansInit};
+use crate::tensor::{io::TensorPack, Dtype, Tensor};
+
+/// Codebooks are always padded to 256 rows — the paper's always-8-bit
+/// indices (§III-B: sub-byte packing is "rarely used" for alignment).
+pub const CODEBOOK_PAD: usize = 256;
+
+/// Clustering scope (paper Fig. 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ClusterScheme {
+    /// One codebook for every tensor (Fig. 6a).
+    Entire,
+    /// One codebook per tensor (Fig. 6b).
+    PerLayer,
+}
+
+impl ClusterScheme {
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterScheme::Entire => "entire",
+            ClusterScheme::PerLayer => "perlayer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "entire" => ClusterScheme::Entire,
+            "perlayer" => ClusterScheme::PerLayer,
+            _ => bail!("unknown scheme {s:?} (entire|perlayer)"),
+        })
+    }
+}
+
+/// The clustered representation of a tensor set.
+#[derive(Debug, Clone)]
+pub struct ClusteredTensors {
+    pub scheme: ClusterScheme,
+    pub n_clusters: usize,
+    /// Tensor order follows the input order given to [`Quantizer::run`].
+    pub names: Vec<String>,
+    /// u8 index tensor per name (original shape).
+    pub indices: HashMap<String, Tensor>,
+    /// `[names.len(), 256]` f32 padded codebook stack (row i = names[i]).
+    pub codebooks: Tensor,
+}
+
+impl ClusteredTensors {
+    /// Real (unpadded) table-of-centroids bytes (paper §V-C).
+    pub fn table_bytes(&self) -> usize {
+        let tables = match self.scheme {
+            ClusterScheme::Entire => 1,
+            ClusterScheme::PerLayer => self.names.len(),
+        };
+        tables * self.n_clusters * 4
+    }
+
+    /// Compressed payload bytes: u8 indices + real tables.
+    pub fn compressed_bytes(&self) -> usize {
+        self.indices.values().map(|t| t.nbytes()).sum::<usize>()
+            + self.table_bytes()
+    }
+
+    /// Original FP32 bytes of the clustered tensors.
+    pub fn original_bytes(&self) -> usize {
+        self.indices.values().map(|t| t.elems() * 4).sum()
+    }
+
+    /// Dequantize one tensor back to FP32.
+    pub fn dequantize(&self, name: &str) -> Result<Tensor> {
+        let Some(idx) = self.indices.get(name) else {
+            bail!("{name:?} is not a clustered tensor");
+        };
+        let row = self
+            .names
+            .iter()
+            .position(|n| n == name)
+            .expect("names/indices in sync");
+        let cb = self.codebooks.as_f32()?;
+        let table = &cb[row * CODEBOOK_PAD..(row + 1) * CODEBOOK_PAD];
+        let vals: Vec<f32> = idx
+            .as_u8()?
+            .iter()
+            .map(|&i| table[i as usize])
+            .collect();
+        Tensor::from_f32(idx.shape().to_vec(), &vals)
+    }
+
+    /// Mean squared reconstruction error against the originals.
+    pub fn quantization_mse(
+        &self,
+        originals: &HashMap<String, Tensor>,
+    ) -> Result<f64> {
+        let mut num = 0.0;
+        let mut den = 0usize;
+        for name in &self.names {
+            let orig = originals
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing original {name:?}"))?
+                .as_f32()?;
+            let deq = self.dequantize(name)?.as_f32()?;
+            for (a, b) in orig.iter().zip(&deq) {
+                let d = (*a - *b) as f64;
+                num += d * d;
+            }
+            den += orig.len();
+        }
+        Ok(num / den.max(1) as f64)
+    }
+
+    /// Serialize in the Python pipeline's `.tpak` layout
+    /// (`idx/{name}` entries + a `codebooks` stack).
+    pub fn to_pack(&self) -> TensorPack {
+        let mut pack = TensorPack::new();
+        for name in &self.names {
+            pack.insert(format!("idx/{name}"), self.indices[name].clone());
+        }
+        pack.insert("codebooks", self.codebooks.clone());
+        pack
+    }
+
+    /// Parse from the `.tpak` layout. `names` supplies row order (from the
+    /// manifest); `scheme`/`n_clusters` come from the variant key.
+    pub fn from_pack(
+        pack: &TensorPack,
+        names: &[String],
+        scheme: ClusterScheme,
+        n_clusters: usize,
+    ) -> Result<Self> {
+        let codebooks = pack.req("codebooks")?.clone();
+        if codebooks.shape() != [names.len(), CODEBOOK_PAD] {
+            bail!(
+                "codebooks shape {:?} != [{}, {CODEBOOK_PAD}]",
+                codebooks.shape(),
+                names.len()
+            );
+        }
+        let mut indices = HashMap::new();
+        for name in names {
+            let t = pack.req(&format!("idx/{name}"))?;
+            if t.dtype() != Dtype::U8 {
+                bail!("index tensor {name:?} is {}, not u8", t.dtype().name());
+            }
+            indices.insert(name.clone(), t.clone());
+        }
+        Ok(Self {
+            scheme,
+            n_clusters,
+            names: names.to_vec(),
+            indices,
+            codebooks,
+        })
+    }
+}
+
+/// K-means quantizer over named tensors.
+#[derive(Debug, Clone)]
+pub struct Quantizer {
+    pub n_clusters: usize,
+    pub scheme: ClusterScheme,
+    pub iters: usize,
+    pub init: KmeansInit,
+}
+
+impl Quantizer {
+    pub fn new(n_clusters: usize, scheme: ClusterScheme) -> Self {
+        Self { n_clusters, scheme, iters: 40, init: KmeansInit::Quantile }
+    }
+
+    /// Cluster `tensors` (order defines codebook row order).
+    pub fn run(
+        &self,
+        names: &[String],
+        tensors: &HashMap<String, Tensor>,
+    ) -> Result<ClusteredTensors> {
+        if !(2..=CODEBOOK_PAD).contains(&self.n_clusters) {
+            bail!("n_clusters must be in [2, {CODEBOOK_PAD}]");
+        }
+        let mut values: HashMap<&str, Vec<f32>> = HashMap::new();
+        for name in names {
+            let t = tensors
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing tensor {name:?}"))?;
+            values.insert(name, t.as_f32()?);
+        }
+        let mut indices = HashMap::new();
+        let mut cb_rows: Vec<f32> = Vec::with_capacity(names.len() * CODEBOOK_PAD);
+        match self.scheme {
+            ClusterScheme::Entire => {
+                let all: Vec<f32> = names
+                    .iter()
+                    .flat_map(|n| values[n.as_str()].iter().copied())
+                    .collect();
+                let centroids =
+                    lloyd_1d(&all, self.n_clusters, self.iters, self.init)?;
+                let padded = pad(&centroids);
+                for name in names {
+                    let idx = assign_1d(&values[name.as_str()], &centroids);
+                    indices.insert(
+                        name.clone(),
+                        Tensor::from_u8(tensors[name].shape().to_vec(), &idx)?,
+                    );
+                    cb_rows.extend_from_slice(&padded);
+                }
+            }
+            ClusterScheme::PerLayer => {
+                for name in names {
+                    let centroids = lloyd_1d(
+                        &values[name.as_str()],
+                        self.n_clusters,
+                        self.iters,
+                        self.init,
+                    )?;
+                    let idx = assign_1d(&values[name.as_str()], &centroids);
+                    indices.insert(
+                        name.clone(),
+                        Tensor::from_u8(tensors[name].shape().to_vec(), &idx)?,
+                    );
+                    cb_rows.extend_from_slice(&pad(&centroids));
+                }
+            }
+        }
+        Ok(ClusteredTensors {
+            scheme: self.scheme,
+            n_clusters: self.n_clusters,
+            names: names.to_vec(),
+            indices,
+            codebooks: Tensor::from_f32(
+                vec![names.len(), CODEBOOK_PAD],
+                &cb_rows,
+            )?,
+        })
+    }
+}
+
+fn pad(centroids: &[f32]) -> Vec<f32> {
+    let mut row = vec![0.0f32; CODEBOOK_PAD];
+    row[..centroids.len()].copy_from_slice(centroids);
+    row
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn fixtures() -> (Vec<String>, HashMap<String, Tensor>) {
+        let mut rng = Pcg32::new(11);
+        let mut tensors = HashMap::new();
+        let names: Vec<String> = vec!["a/w".into(), "b/w".into()];
+        for (i, n) in names.iter().enumerate() {
+            let vals: Vec<f32> = (0..600)
+                .map(|_| rng.normal() as f32 * (i + 1) as f32)
+                .collect();
+            tensors.insert(n.clone(), Tensor::from_f32(vec![20, 30], &vals).unwrap());
+        }
+        (names, tensors)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let (names, tensors) = fixtures();
+        let ct = Quantizer::new(16, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        assert_eq!(ct.codebooks.shape(), &[2, 256]);
+        for n in &names {
+            let idx = ct.indices[n].as_u8().unwrap();
+            assert_eq!(ct.indices[n].shape(), tensors[n].shape());
+            assert!(idx.iter().all(|&i| (i as usize) < 16));
+        }
+    }
+
+    #[test]
+    fn entire_rows_identical_perlayer_differ() {
+        let (names, tensors) = fixtures();
+        let e = Quantizer::new(32, ClusterScheme::Entire)
+            .run(&names, &tensors)
+            .unwrap();
+        let cb = e.codebooks.as_f32().unwrap();
+        assert_eq!(&cb[..256], &cb[256..]);
+        let p = Quantizer::new(32, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        let cbp = p.codebooks.as_f32().unwrap();
+        assert_ne!(&cbp[..256], &cbp[256..]);
+    }
+
+    #[test]
+    fn mse_decreases_with_clusters_and_perlayer_wins() {
+        let (names, tensors) = fixtures();
+        let mse = |c: usize, s: ClusterScheme| {
+            Quantizer::new(c, s)
+                .run(&names, &tensors)
+                .unwrap()
+                .quantization_mse(&tensors)
+                .unwrap()
+        };
+        assert!(mse(64, ClusterScheme::PerLayer) < mse(8, ClusterScheme::PerLayer));
+        assert!(
+            mse(16, ClusterScheme::PerLayer) <= mse(16, ClusterScheme::Entire) * 1.001
+        );
+    }
+
+    #[test]
+    fn compression_accounting() {
+        let (names, tensors) = fixtures();
+        let ct = Quantizer::new(64, ClusterScheme::Entire)
+            .run(&names, &tensors)
+            .unwrap();
+        assert_eq!(ct.original_bytes(), 1200 * 4);
+        assert_eq!(ct.table_bytes(), 64 * 4); // paper: 256 B at c=64
+        assert_eq!(ct.compressed_bytes(), 1200 + 256);
+        let pl = Quantizer::new(64, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        assert_eq!(pl.table_bytes(), 2 * 64 * 4);
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let (names, tensors) = fixtures();
+        let ct = Quantizer::new(16, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        let pack = ct.to_pack();
+        let back =
+            ClusteredTensors::from_pack(&pack, &names, ClusterScheme::PerLayer, 16)
+                .unwrap();
+        assert_eq!(back.codebooks, ct.codebooks);
+        for n in &names {
+            assert_eq!(back.indices[n], ct.indices[n]);
+        }
+    }
+
+    #[test]
+    fn dequantize_bounded_error() {
+        let (names, tensors) = fixtures();
+        let ct = Quantizer::new(256, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        for n in &names {
+            let orig = tensors[n].as_f32().unwrap();
+            let deq = ct.dequantize(n).unwrap().as_f32().unwrap();
+            let spread = orig.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+                - orig.iter().fold(f32::INFINITY, |m, &v| m.min(v));
+            // 256 quantile-seeded clusters over 600 points: tail regions
+            // are wide, but every point stays within a small fraction of
+            // the spread of its centroid.
+            for (a, b) in orig.iter().zip(&deq) {
+                assert!((a - b).abs() <= spread / 16.0, "{n}: {a} vs {b}");
+            }
+        }
+        let coarse = Quantizer::new(16, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        assert!(
+            ct.quantization_mse(&tensors).unwrap()
+                < coarse.quantization_mse(&tensors).unwrap() / 10.0
+        );
+    }
+
+    #[test]
+    fn rejects_bad_cluster_counts() {
+        let (names, tensors) = fixtures();
+        assert!(Quantizer::new(1, ClusterScheme::Entire).run(&names, &tensors).is_err());
+        assert!(Quantizer::new(512, ClusterScheme::Entire).run(&names, &tensors).is_err());
+    }
+}

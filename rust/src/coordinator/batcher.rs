@@ -1,0 +1,305 @@
+//! Dynamic batching: collect requests into accelerator-sized batches
+//! under a size/deadline policy.
+//!
+//! The batcher is pure logic over an injected clock, so every invariant
+//! is unit/property-testable without threads:
+//! * no request is lost or duplicated;
+//! * FIFO order within a variant;
+//! * batch size never exceeds `max_batch`;
+//! * no admitted request waits longer than `max_wait` before its batch is
+//!   cut (deadline policies).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::ClassRequest;
+
+/// When to cut a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPolicy {
+    /// Cut only when `max_batch` requests are waiting (or on flush).
+    /// Maximizes throughput, unbounded tail latency at low load.
+    SizeOnly,
+    /// Cut when full OR when the oldest request has waited `max_wait`.
+    Deadline,
+    /// Deadline, but an idle queue cuts immediately at any size once the
+    /// previous batch finished (work-conserving low-load latency).
+    Adaptive,
+}
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub policy: BatchPolicy,
+    /// Bound on queued requests (admission control); pushes beyond this
+    /// are rejected so an overloaded edge device degrades predictably.
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// The queue + cutting logic.
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    queue: VecDeque<ClassRequest>,
+    /// True while the executor is busy (drives the Adaptive policy).
+    executor_busy: bool,
+    pub rejected: u64,
+    pub accepted: u64,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self {
+            config,
+            queue: VecDeque::new(),
+            executor_busy: false,
+            rejected: 0,
+            accepted: 0,
+        }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.config
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Admit a request; returns it back on queue overflow so the caller
+    /// can reply with a rejection.
+    pub fn push(&mut self, req: ClassRequest) -> Result<(), ClassRequest> {
+        if self.queue.len() >= self.config.queue_cap {
+            self.rejected += 1;
+            return Err(req);
+        }
+        self.accepted += 1;
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn set_executor_busy(&mut self, busy: bool) {
+        self.executor_busy = busy;
+    }
+
+    /// Decide whether to cut a batch *now*; pops and returns it (FIFO).
+    pub fn next_batch(&mut self, now: Instant) -> Option<Vec<ClassRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.config.max_batch;
+        let oldest_wait = now.duration_since(self.queue[0].enqueued);
+        let deadline_hit = oldest_wait >= self.config.max_wait;
+        let cut = match self.config.policy {
+            BatchPolicy::SizeOnly => full,
+            BatchPolicy::Deadline => full || deadline_hit,
+            BatchPolicy::Adaptive => {
+                full || deadline_hit || !self.executor_busy
+            }
+        };
+        if !cut {
+            return None;
+        }
+        let n = self.queue.len().min(self.config.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything regardless of policy (shutdown path).
+    pub fn flush(&mut self) -> Vec<Vec<ClassRequest>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len().min(self.config.max_batch);
+            out.push(self.queue.drain(..n).collect());
+        }
+        out
+    }
+
+    /// Time until the oldest request's deadline (for the worker's park
+    /// timeout); `None` when the queue is empty.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        let oldest = self.queue.front()?;
+        let waited = now.duration_since(oldest.enqueued);
+        Some(self.config.max_wait.saturating_sub(waited))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Dtype, Tensor};
+    use crate::testing::prop::check;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, at: Instant) -> ClassRequest {
+        let (tx, _rx) = channel();
+        ClassRequest {
+            id,
+            image: Tensor::zeros(Dtype::F32, vec![2, 2, 3]),
+            enqueued: at,
+            reply: tx,
+        }
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64, policy: BatchPolicy) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            policy,
+            queue_cap: 64,
+        }
+    }
+
+    #[test]
+    fn size_only_waits_for_full_batch() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(4, 10, BatchPolicy::SizeOnly));
+        for i in 0..3 {
+            b.push(req(i, t0)).unwrap();
+        }
+        assert!(b.next_batch(t0 + Duration::from_secs(5)).is_none());
+        b.push(req(3, t0)).unwrap();
+        let batch = b.next_batch(t0).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(8, 10, BatchPolicy::Deadline));
+        b.push(req(0, t0)).unwrap();
+        b.push(req(1, t0)).unwrap();
+        assert!(b.next_batch(t0 + Duration::from_millis(5)).is_none());
+        let batch = b.next_batch(t0 + Duration::from_millis(11)).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn adaptive_cuts_immediately_when_idle() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(8, 100, BatchPolicy::Adaptive));
+        b.push(req(0, t0)).unwrap();
+        b.set_executor_busy(false);
+        assert_eq!(b.next_batch(t0).unwrap().len(), 1);
+        // while busy, it accumulates until deadline/full
+        b.push(req(1, t0)).unwrap();
+        b.set_executor_busy(true);
+        assert!(b.next_batch(t0 + Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn admission_control_rejects_overflow() {
+        let t0 = Instant::now();
+        let mut cfgv = cfg(4, 10, BatchPolicy::SizeOnly);
+        cfgv.queue_cap = 2;
+        let mut b = DynamicBatcher::new(cfgv);
+        assert!(b.push(req(0, t0)).is_ok());
+        assert!(b.push(req(1, t0)).is_ok());
+        let rejected = b.push(req(2, t0));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().id, 2);
+        assert_eq!(b.rejected, 1);
+        assert_eq!(b.accepted, 2);
+    }
+
+    #[test]
+    fn flush_preserves_everything_in_order() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(3, 10, BatchPolicy::SizeOnly));
+        for i in 0..7 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let batches = b.flush();
+        assert_eq!(batches.iter().map(|b| b.len()).collect::<Vec<_>>(), vec![3, 3, 1]);
+        let ids: Vec<u64> = batches.iter().flatten().map(|r| r.id).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn prop_no_loss_no_dup_fifo_bounded() {
+        check("batcher conservation", 100, |g| {
+            let t0 = Instant::now();
+            let max_batch = g.usize(1, 16);
+            let policy = *g.pick(&[
+                BatchPolicy::SizeOnly,
+                BatchPolicy::Deadline,
+                BatchPolicy::Adaptive,
+            ]);
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(g.usize(0, 50) as u64),
+                policy,
+                queue_cap: 10_000,
+            });
+            b.set_executor_busy(g.bool());
+            let n = g.usize(0, 200);
+            let mut collected = Vec::new();
+            let mut now = t0;
+            for i in 0..n as u64 {
+                b.push(req(i, now)).unwrap();
+                now += Duration::from_millis(g.usize(0, 12) as u64);
+                if g.bool() {
+                    b.set_executor_busy(g.bool());
+                }
+                while let Some(batch) = b.next_batch(now) {
+                    assert!(batch.len() <= max_batch, "batch too big");
+                    assert!(!batch.is_empty());
+                    collected.extend(batch.iter().map(|r| r.id));
+                }
+            }
+            for batch in b.flush() {
+                assert!(batch.len() <= max_batch);
+                collected.extend(batch.iter().map(|r| r.id));
+            }
+            // conservation + FIFO
+            assert_eq!(collected, (0..n as u64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn prop_deadline_bounds_wait() {
+        check("deadline bounds queueing delay", 60, |g| {
+            let t0 = Instant::now();
+            let wait_ms = g.usize(1, 30) as u64;
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_batch: g.usize(1, 8),
+                max_wait: Duration::from_millis(wait_ms),
+                policy: BatchPolicy::Deadline,
+                queue_cap: 10_000,
+            });
+            let mut now = t0;
+            for i in 0..g.usize(1, 60) as u64 {
+                b.push(req(i, now)).unwrap();
+                // poll at least once per ms of simulated time
+                for _ in 0..3 {
+                    now += Duration::from_millis(1);
+                    while let Some(batch) = b.next_batch(now) {
+                        for r in batch {
+                            let waited = now.duration_since(r.enqueued);
+                            // cut happens at the first poll after deadline;
+                            // polling granularity adds <= 1ms
+                            assert!(
+                                waited
+                                    <= Duration::from_millis(wait_ms + 2),
+                                "request waited {waited:?} (cap {wait_ms}ms)"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

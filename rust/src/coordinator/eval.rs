@@ -1,0 +1,69 @@
+//! Offline accuracy evaluation: run the validation set through a variant
+//! synchronously (no server) — the engine behind the Fig. 7/8 benches and
+//! the `eval` CLI command.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::worker::VariantExecutor;
+use crate::model::registry::topk_accuracy;
+use crate::model::{Registry, VariantKey};
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Accuracy + timing for one variant over a validation set.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub model: String,
+    pub variant: String,
+    pub n: usize,
+    pub top1: f64,
+    pub top5: f64,
+    pub total_s: f64,
+    pub images_per_s: f64,
+    /// Weight-stream bytes for this representation (memory accounting).
+    pub weight_stream_bytes: usize,
+}
+
+/// Evaluate `model`/`key` on `n` images of the validation set (0 = all),
+/// batching at the largest compiled batch size.
+pub fn evaluate(
+    engine: &Engine,
+    registry: &mut Registry,
+    model: &str,
+    key: VariantKey,
+    n: usize,
+) -> Result<EvalResult> {
+    let (images, labels) = registry.val_set()?;
+    let total = images.shape()[0];
+    let n = if n == 0 { total } else { n.min(total) };
+    let exec = VariantExecutor::load(engine, registry, model, key)?;
+    let batch = *exec.batch_sizes.last().unwrap();
+
+    let t0 = Instant::now();
+    let mut all_logits: Vec<f32> = Vec::with_capacity(n * exec.n_classes);
+    let mut i = 0;
+    while i < n {
+        let hi = (i + batch).min(n);
+        let chunk = images.slice_rows(i, hi)?;
+        let (rows, _) = exec.execute(&chunk)?;
+        for r in rows {
+            all_logits.extend_from_slice(&r);
+        }
+        i = hi;
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let logits = Tensor::from_f32(vec![n, exec.n_classes], &all_logits)?;
+    let labels = &labels[..n];
+    Ok(EvalResult {
+        model: model.to_string(),
+        variant: key.label(),
+        n,
+        top1: topk_accuracy(&logits, labels, 1)?,
+        top5: topk_accuracy(&logits, labels, 5)?,
+        total_s,
+        images_per_s: n as f64 / total_s,
+        weight_stream_bytes: exec.weight_stream_bytes,
+    })
+}

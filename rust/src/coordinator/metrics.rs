@@ -1,0 +1,172 @@
+//! Serving metrics: per-variant latency histograms, counters, and a
+//! throughput window. Shared across threads behind a mutex (recording is
+//! a histogram bump — nanoseconds next to a multi-ms inference).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::LogHistogram;
+
+#[derive(Debug, Default, Clone)]
+pub struct VariantMetrics {
+    /// End-to-end latency in microseconds.
+    pub latency_us: LogHistogram,
+    /// Queue wait in microseconds.
+    pub queue_us: LogHistogram,
+    /// Pure execute() time per batch in microseconds.
+    pub execute_us: LogHistogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub batch_size_sum: u64,
+}
+
+impl VariantMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_size_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// A snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub per_variant: HashMap<String, VariantMetrics>,
+    pub elapsed_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn total_requests(&self) -> u64 {
+        self.per_variant.values().map(|v| v.requests).sum()
+    }
+
+    pub fn throughput(&self) -> f64 {
+        self.total_requests() as f64 / self.elapsed_s.max(1e-9)
+    }
+
+    /// Markdown report (used by `serve` CLI and the e2e example).
+    pub fn markdown(&self) -> String {
+        let mut s = String::from(
+            "| variant | reqs | batches | mean batch | p50 lat | p99 lat | mean exec/batch | rejected |\n|---|---|---|---|---|---|---|---|\n",
+        );
+        let mut keys: Vec<_> = self.per_variant.keys().collect();
+        keys.sort();
+        for k in keys {
+            let v = &self.per_variant[k];
+            s.push_str(&format!(
+                "| {} | {} | {} | {:.2} | {:.2}ms | {:.2}ms | {:.2}ms | {} |\n",
+                k,
+                v.requests,
+                v.batches,
+                v.mean_batch_size(),
+                v.latency_us.percentile(0.5) / 1e3,
+                v.latency_us.percentile(0.99) / 1e3,
+                v.execute_us.mean() / 1e3,
+                v.rejected,
+            ));
+        }
+        s.push_str(&format!(
+            "\ntotal: {} requests in {:.2}s = {:.1} req/s\n",
+            self.total_requests(),
+            self.elapsed_s,
+            self.throughput()
+        ));
+        s
+    }
+}
+
+/// Thread-safe metrics registry.
+pub struct Metrics {
+    inner: Mutex<HashMap<String, VariantMetrics>>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(HashMap::new()), started: Instant::now() }
+    }
+
+    pub fn record_batch(
+        &self,
+        variant: &str,
+        batch_size: usize,
+        execute_s: f64,
+        latencies_s: &[f64],
+        queue_s: &[f64],
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        let v = m.entry(variant.to_string()).or_default();
+        v.batches += 1;
+        v.requests += batch_size as u64;
+        v.batch_size_sum += batch_size as u64;
+        v.execute_us.record(execute_s * 1e6);
+        for &l in latencies_s {
+            v.latency_us.record(l * 1e6);
+        }
+        for &q in queue_s {
+            v.queue_us.record(q * 1e6);
+        }
+    }
+
+    pub fn record_rejection(&self, variant: &str) {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(variant.to_string()).or_default().rejected += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            per_variant: self.inner.lock().unwrap().clone(),
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch("vit/baseline", 4, 0.010, &[0.012, 0.013, 0.011, 0.014], &[0.001; 4]);
+        m.record_batch("vit/baseline", 2, 0.006, &[0.007, 0.008], &[0.0; 2]);
+        m.record_rejection("vit/baseline");
+        let s = m.snapshot();
+        let v = &s.per_variant["vit/baseline"];
+        assert_eq!(v.requests, 6);
+        assert_eq!(v.batches, 2);
+        assert_eq!(v.rejected, 1);
+        assert!((v.mean_batch_size() - 3.0).abs() < 1e-9);
+        assert_eq!(s.total_requests(), 6);
+        assert!(s.markdown().contains("vit/baseline"));
+    }
+
+    #[test]
+    fn multithreaded_recording() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    m.record_batch(&format!("v{t}"), 1, 0.001, &[0.002], &[0.0005]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.total_requests(), 400);
+    }
+}

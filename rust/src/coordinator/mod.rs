@@ -1,0 +1,25 @@
+//! The serving coordinator — the L3 system contribution adapted to this
+//! paper: an edge-device inference server whose hot path runs clustered
+//! models through the PJRT runtime.
+//!
+//! Pipeline: [`server::Server`] accepts requests → admission control →
+//! per-variant queues → [`batcher::DynamicBatcher`] forms batches under a
+//! size/deadline policy → a worker thread (one per simulated accelerator;
+//! PJRT objects are not `Send`, and an edge SoC has one accelerator)
+//! executes via [`crate::runtime::ResidentExecutable`] → responses flow
+//! back through per-request channels while [`metrics::Metrics`] records
+//! latency histograms and throughput.
+
+pub mod batcher;
+pub mod eval;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{BatchPolicy, BatcherConfig, DynamicBatcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{ClassRequest, ClassResponse, RequestId};
+pub use router::Router;
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,71 @@
+//! Request/response types for the classification service.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+
+pub type RequestId = u64;
+
+/// One classification request: a single image `[H, W, 3]` f32.
+#[derive(Debug)]
+pub struct ClassRequest {
+    pub id: RequestId,
+    pub image: Tensor,
+    pub enqueued: Instant,
+    pub reply: Sender<ClassResponse>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct ClassResponse {
+    pub id: RequestId,
+    /// Class logits (len = n_classes).
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub predicted: usize,
+    /// Wall time from submit to reply.
+    pub latency_s: f64,
+    /// Size of the executed batch this request rode in.
+    pub batch_size: usize,
+    /// Which model variant served it (e.g. "vit/perlayer_64").
+    pub served_by: String,
+}
+
+impl ClassResponse {
+    pub fn from_logits(
+        id: RequestId,
+        logits: Vec<f32>,
+        latency_s: f64,
+        batch_size: usize,
+        served_by: String,
+    ) -> Self {
+        let predicted = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Self { id, logits, predicted, latency_s, batch_size, served_by }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_prediction() {
+        let r = ClassResponse::from_logits(
+            1,
+            vec![0.1, 2.0, -1.0],
+            0.001,
+            8,
+            "vit/baseline".into(),
+        );
+        assert_eq!(r.predicted, 1);
+        let empty =
+            ClassResponse::from_logits(2, vec![], 0.0, 1, "x".into());
+        assert_eq!(empty.predicted, 0);
+    }
+}

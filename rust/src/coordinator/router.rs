@@ -1,0 +1,105 @@
+//! Request router: maps "model/variant" targets to worker queues.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::request::{ClassRequest, ClassResponse};
+use super::worker::WorkerMsg;
+use crate::tensor::Tensor;
+
+/// Routes requests to per-variant worker queues.
+pub struct Router {
+    targets: HashMap<String, Sender<WorkerMsg>>,
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn new(targets: HashMap<String, Sender<WorkerMsg>>) -> Self {
+        Self { targets, next_id: AtomicU64::new(1) }
+    }
+
+    pub fn targets(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.targets.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Submit an image to a target ("model/variant"); returns the
+    /// response channel and the assigned request id.
+    pub fn submit(
+        &self,
+        target: &str,
+        image: Tensor,
+    ) -> Result<(u64, Receiver<ClassResponse>)> {
+        let tx = self
+            .targets
+            .get(target)
+            .ok_or_else(|| {
+                anyhow!("unknown target {target:?} (have {:?})", self.targets())
+            })?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        tx.send(WorkerMsg::Request(ClassRequest {
+            id,
+            image,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        }))
+        .map_err(|_| anyhow!("worker for {target:?} has shut down"))?;
+        Ok((id, reply_rx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dtype;
+
+    #[test]
+    fn routes_and_rejects_unknown() {
+        let (tx, rx) = channel();
+        let mut targets = HashMap::new();
+        targets.insert("vit/baseline".to_string(), tx);
+        let router = Router::new(targets);
+        assert_eq!(router.targets(), vec!["vit/baseline"]);
+
+        let img = Tensor::zeros(Dtype::F32, vec![2, 2, 3]);
+        let (id, _reply) = router.submit("vit/baseline", img.clone()).unwrap();
+        assert_eq!(id, 1);
+        match rx.try_recv().unwrap() {
+            WorkerMsg::Request(r) => assert_eq!(r.id, 1),
+            _ => panic!("expected request"),
+        }
+        assert!(router.submit("nope", img).is_err());
+    }
+
+    #[test]
+    fn ids_are_unique_across_threads() {
+        let (tx, rx) = channel();
+        let mut targets = HashMap::new();
+        targets.insert("t".to_string(), tx);
+        let router = std::sync::Arc::new(Router::new(targets));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let r = router.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut ids = Vec::new();
+                for _ in 0..50 {
+                    let img = Tensor::zeros(Dtype::F32, vec![1]);
+                    ids.push(r.submit("t", img).unwrap().0);
+                }
+                ids
+            }));
+        }
+        let mut all: Vec<u64> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        drop(rx);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 200);
+    }
+}

@@ -1,0 +1,92 @@
+//! The serving front end: spawns one worker per served variant, wires the
+//! router, owns metrics and shutdown.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::batcher::BatcherConfig;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::router::Router;
+use super::worker::{run_worker, WorkerConfig, WorkerMsg};
+use crate::model::VariantKey;
+
+/// What to serve.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    /// (model, variant) pairs; each gets a dedicated worker.
+    pub targets: Vec<(String, VariantKey)>,
+    pub batcher: BatcherConfig,
+}
+
+/// A running server.
+pub struct Server {
+    pub router: Arc<Router>,
+    pub metrics: Arc<Metrics>,
+    senders: Vec<Sender<WorkerMsg>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start all workers; blocks until every worker has compiled its
+    /// executables (so first-request latency is steady-state).
+    pub fn start(config: ServerConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+        let mut targets = HashMap::new();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        let mut readiness = Vec::new();
+        for (model, variant) in &config.targets {
+            let (tx, rx) = channel();
+            let (ready_tx, ready_rx) = channel();
+            let wc = WorkerConfig {
+                artifacts_dir: config.artifacts_dir.clone(),
+                model: model.clone(),
+                variant: *variant,
+                batcher: config.batcher.clone(),
+            };
+            let m = metrics.clone();
+            let label = format!("{model}/{}", variant.label());
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{label}"))
+                .spawn(move || run_worker(wc, rx, m, ready_tx))
+                .context("spawning worker thread")?;
+            targets.insert(label.clone(), tx.clone());
+            senders.push(tx);
+            handles.push(handle);
+            readiness.push((label, ready_rx));
+        }
+        for (label, ready) in readiness {
+            ready
+                .recv()
+                .with_context(|| format!("worker {label} died during startup"))?
+                .with_context(|| format!("worker {label} failed to load"))?;
+            crate::log_info!("worker {label} ready");
+        }
+        Ok(Self {
+            router: Arc::new(Router::new(targets)),
+            metrics,
+            senders,
+            handles,
+        })
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: flush queues, join workers.
+    pub fn shutdown(self) {
+        for tx in &self.senders {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}

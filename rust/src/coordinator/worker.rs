@@ -1,0 +1,387 @@
+//! Variant worker: one thread that owns the PJRT state for one model
+//! variant and drains its request queue through the dynamic batcher.
+//!
+//! PJRT objects are not `Send` (the xla crate wraps `Rc` handles), so all
+//! runtime state is constructed *inside* the worker thread — which also
+//! matches the hardware reality: an edge SoC has a single accelerator.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{ClassRequest, ClassResponse};
+use crate::model::{Registry, VariantKey};
+use crate::runtime::{Engine, ResidentExecutable};
+use crate::tensor::Tensor;
+
+/// Messages into a worker.
+pub enum WorkerMsg {
+    Request(ClassRequest),
+    /// Flush queues and stop.
+    Shutdown,
+}
+
+/// Worker configuration.
+#[derive(Clone)]
+pub struct WorkerConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    pub model: String,
+    pub variant: VariantKey,
+    pub batcher: BatcherConfig,
+}
+
+/// The compiled execution state for one variant (lives on the worker
+/// thread). Public so benches/examples can drive it synchronously.
+///
+/// Executables are compiled **lazily per batch size** on first use:
+/// interpret-mode Pallas modules are large and PJRT compilation takes
+/// tens of seconds each, so an eval that only ever runs batch-32 should
+/// not pay for batch-1 and batch-8 (§Perf: 3x startup reduction).
+pub struct VariantExecutor {
+    pub label: String,
+    /// Batch sizes with an available HLO artifact, ascending.
+    pub batch_sizes: Vec<usize>,
+    engine: Engine,
+    hlo_paths: Vec<std::path::PathBuf>,
+    weight_inputs: Vec<Tensor>,
+    executables: std::cell::RefCell<Vec<Option<std::rc::Rc<ResidentExecutable>>>>,
+    pub img_shape: [usize; 3],
+    pub n_classes: usize,
+    pub weight_stream_bytes: usize,
+    pub table_bytes: usize,
+}
+
+impl VariantExecutor {
+    /// Load artifacts; compilation is deferred to first use per batch
+    /// size. Use [`VariantExecutor::warmup`] to pre-compile.
+    pub fn load(
+        engine: &Engine,
+        registry: &mut Registry,
+        model: &str,
+        key: VariantKey,
+    ) -> Result<Self> {
+        let variant = registry.variant(model, key)?;
+        let entry = registry.manifest.model(model)?;
+        let img = entry.config.img_size;
+        let mut batch_sizes: Vec<usize> =
+            variant.hlo_paths.keys().copied().collect();
+        batch_sizes.sort_unstable();
+        if batch_sizes.is_empty() {
+            return Err(anyhow!("{model}/{}: no HLO artifacts", key.label()));
+        }
+        let hlo_paths = batch_sizes
+            .iter()
+            .map(|b| variant.hlo_paths[b].clone())
+            .collect();
+        Ok(Self {
+            label: format!("{model}/{}", key.label()),
+            executables: std::cell::RefCell::new(vec![None; batch_sizes.len()]),
+            batch_sizes,
+            engine: engine.clone(),
+            hlo_paths,
+            weight_inputs: variant.weight_inputs,
+            img_shape: [img, img, 3],
+            n_classes: entry.config.n_classes,
+            weight_stream_bytes: variant.weight_stream_bytes,
+            table_bytes: variant.table_bytes,
+        })
+    }
+
+    /// Pre-compile the executable(s) for the given batch sizes (all if
+    /// empty) so first-request latency is steady-state.
+    pub fn warmup(&self, batch_sizes: &[usize]) -> Result<()> {
+        let sizes: Vec<usize> = if batch_sizes.is_empty() {
+            self.batch_sizes.clone()
+        } else {
+            batch_sizes.to_vec()
+        };
+        for b in sizes {
+            self.executable_for(b)?;
+        }
+        Ok(())
+    }
+
+    /// Smallest available batch size >= n (or the largest available).
+    pub fn pick_batch_size(&self, n: usize) -> usize {
+        *self
+            .batch_sizes
+            .iter()
+            .find(|&&b| b >= n)
+            .unwrap_or(self.batch_sizes.last().unwrap())
+    }
+
+    fn executable_for(&self, b: usize) -> Result<std::rc::Rc<ResidentExecutable>> {
+        let idx = self
+            .batch_sizes
+            .iter()
+            .position(|&x| x == b)
+            .ok_or_else(|| anyhow!("{}: no executable for batch {b}", self.label))?;
+        if let Some(exe) = &self.executables.borrow()[idx] {
+            return Ok(exe.clone());
+        }
+        let t0 = std::time::Instant::now();
+        let exe = self
+            .engine
+            .load_hlo(&self.hlo_paths[idx])
+            .with_context(|| format!("loading {} b={b}", self.label))?;
+        // dynamic inputs: just the image batch (1 tensor)
+        let resident =
+            std::rc::Rc::new(exe.with_resident(1, &self.weight_inputs)?);
+        crate::log_debug!(
+            "{}: compiled batch-{b} executable in {:.2}s",
+            self.label,
+            t0.elapsed().as_secs_f64()
+        );
+        self.executables.borrow_mut()[idx] = Some(resident.clone());
+        Ok(resident)
+    }
+
+    /// Run `images` (a [n, H, W, 3] batch, n <= max batch size) and return
+    /// per-image logits rows. Pads to the compiled batch size.
+    pub fn execute(&self, images: &Tensor) -> Result<(Vec<Vec<f32>>, usize)> {
+        let n = images.shape()[0];
+        let b = self.pick_batch_size(n);
+        let exe = self.executable_for(b)?;
+        // Skip the pad copy when the batch already matches a compiled size.
+        let out = if n == b {
+            exe.run(std::slice::from_ref(images))?
+        } else {
+            let padded = pad_batch(images, b)?;
+            exe.run(std::slice::from_ref(&padded))?
+        };
+        let logits = out
+            .first()
+            .ok_or_else(|| anyhow!("no output from {}", self.label))?;
+        let vals = logits.as_f32()?;
+        let classes = logits.shape()[1];
+        Ok((
+            (0..n)
+                .map(|i| vals[i * classes..(i + 1) * classes].to_vec())
+                .collect(),
+            b,
+        ))
+    }
+}
+
+/// Zero-pad an [n, ...] batch up to [b, ...].
+pub fn pad_batch(images: &Tensor, b: usize) -> Result<Tensor> {
+    let n = images.shape()[0];
+    if n == b {
+        return Ok(images.clone());
+    }
+    if n > b {
+        return Err(anyhow!("batch {n} exceeds compiled size {b}"));
+    }
+    let mut shape = images.shape().to_vec();
+    shape[0] = b - n;
+    let pad = Tensor::zeros(images.dtype(), shape);
+    Tensor::concat_rows(&[images, &pad])
+}
+
+/// Stack single-image tensors [H,W,3] into a batch [n,H,W,3].
+pub fn stack_images(images: &[&Tensor]) -> Result<Tensor> {
+    let mut parts = Vec::with_capacity(images.len());
+    let mut owned = Vec::with_capacity(images.len());
+    for img in images {
+        let mut t = (*img).clone();
+        let mut shape = vec![1];
+        shape.extend_from_slice(t.shape());
+        t.reshape(shape)?;
+        owned.push(t);
+    }
+    for t in &owned {
+        parts.push(t);
+    }
+    Tensor::concat_rows(&parts)
+}
+
+/// The worker loop: runs until `Shutdown` or sender disconnect.
+pub fn run_worker(
+    config: WorkerConfig,
+    rx: Receiver<WorkerMsg>,
+    metrics: Arc<Metrics>,
+    ready: Sender<Result<()>>,
+) {
+    // All PJRT state is built on this thread.
+    let setup = (|| -> Result<(VariantExecutor, DynamicBatcher)> {
+        let engine = Engine::cpu()?;
+        let mut registry = Registry::load(&config.artifacts_dir)?;
+        let exec = VariantExecutor::load(
+            &engine,
+            &mut registry,
+            &config.model,
+            config.variant,
+        )?;
+        // Pre-compile every batch size the batcher can produce so
+        // first-request latency is steady-state.
+        let mut warm: Vec<usize> = (1..=config.batcher.max_batch)
+            .map(|n| exec.pick_batch_size(n))
+            .collect();
+        warm.dedup();
+        exec.warmup(&warm)?;
+        Ok((exec, DynamicBatcher::new(config.batcher.clone())))
+    })();
+    let (exec, mut batcher) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut running = true;
+    while running {
+        // Park until a message or the oldest deadline.
+        let timeout = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(WorkerMsg::Request(req)) => {
+                if let Err(rejected) = batcher.push(req) {
+                    metrics.record_rejection(&exec.label);
+                    // Reply with an empty-logits rejection so the client
+                    // does not hang.
+                    let resp = ClassResponse::from_logits(
+                        rejected.id,
+                        vec![],
+                        rejected.enqueued.elapsed().as_secs_f64(),
+                        0,
+                        format!("{} (rejected)", exec.label),
+                    );
+                    let _ = rejected.reply.send(resp);
+                }
+                // Opportunistically drain whatever is already queued.
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        WorkerMsg::Request(r) => {
+                            if let Err(rej) = batcher.push(r) {
+                                metrics.record_rejection(&exec.label);
+                                let resp = ClassResponse::from_logits(
+                                    rej.id,
+                                    vec![],
+                                    rej.enqueued.elapsed().as_secs_f64(),
+                                    0,
+                                    format!("{} (rejected)", exec.label),
+                                );
+                                let _ = rej.reply.send(resp);
+                            }
+                        }
+                        WorkerMsg::Shutdown => {
+                            running = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            Ok(WorkerMsg::Shutdown) => running = false,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => running = false,
+        }
+        // Cut and execute ready batches.
+        while let Some(batch) = batcher.next_batch(Instant::now()) {
+            batcher.set_executor_busy(true);
+            execute_batch(&exec, batch, &metrics);
+        }
+        batcher.set_executor_busy(false);
+    }
+    // Drain remaining work before exiting.
+    for batch in batcher.flush() {
+        execute_batch(&exec, batch, &metrics);
+    }
+}
+
+fn execute_batch(
+    exec: &VariantExecutor,
+    batch: Vec<ClassRequest>,
+    metrics: &Metrics,
+) {
+    let t_exec = Instant::now();
+    let imgs: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
+    let stacked = match stack_images(&imgs) {
+        Ok(s) => s,
+        Err(e) => {
+            crate::log_error!("{}: stacking failed: {e}", exec.label);
+            return;
+        }
+    };
+    match exec.execute(&stacked) {
+        Ok((rows, b)) => {
+            let exec_s = t_exec.elapsed().as_secs_f64();
+            let now = Instant::now();
+            let mut latencies = Vec::with_capacity(batch.len());
+            let mut queue_waits = Vec::with_capacity(batch.len());
+            for req in &batch {
+                let latency = now.duration_since(req.enqueued).as_secs_f64();
+                latencies.push(latency);
+                queue_waits.push((latency - exec_s).max(0.0));
+            }
+            // Record *before* replying: clients may snapshot metrics the
+            // moment their response arrives.
+            metrics.record_batch(
+                &exec.label,
+                latencies.len(),
+                exec_s,
+                &latencies,
+                &queue_waits,
+            );
+            for ((req, logits), latency) in
+                batch.into_iter().zip(rows).zip(latencies)
+            {
+                let resp = ClassResponse::from_logits(
+                    req.id,
+                    logits,
+                    latency,
+                    b,
+                    exec.label.clone(),
+                );
+                let _ = req.reply.send(resp);
+            }
+        }
+        Err(e) => {
+            crate::log_error!("{}: execute failed: {e}", exec.label);
+            for req in batch {
+                let resp = ClassResponse::from_logits(
+                    req.id,
+                    vec![],
+                    req.enqueued.elapsed().as_secs_f64(),
+                    0,
+                    format!("{} (error)", exec.label),
+                );
+                let _ = req.reply.send(resp);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Dtype;
+
+    #[test]
+    fn pad_batch_shapes() {
+        let t = Tensor::zeros(Dtype::F32, vec![3, 4, 4, 3]);
+        let p = pad_batch(&t, 8).unwrap();
+        assert_eq!(p.shape(), &[8, 4, 4, 3]);
+        assert!(pad_batch(&t, 2).is_err());
+        assert_eq!(pad_batch(&t, 3).unwrap().shape(), &[3, 4, 4, 3]);
+    }
+
+    #[test]
+    fn stack_images_shapes() {
+        let a = Tensor::from_f32(vec![2, 2, 3], &[1.0; 12]).unwrap();
+        let b = Tensor::from_f32(vec![2, 2, 3], &[2.0; 12]).unwrap();
+        let s = stack_images(&[&a, &b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2, 2, 3]);
+        let v = s.as_f32().unwrap();
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[12], 2.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Static FLOP/byte cost analysis over parsed HLO.
+//!
+//! Drives the Fig. 2 (time) and Fig. 3 (memory) breakdown benches and
+//! feeds the platform simulator with per-inference traffic estimates.
+//! Loop bodies are counted once (static single-pass estimate); the
+//! measured micro-module benches complement this with wall-clock numbers.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::parser::{HloInstruction, HloModule};
+
+/// Paper-aligned op categories (Figs. 2/3 x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpCategory {
+    /// `dot` — the matrix multiplications (>50% of time in the paper).
+    MatMul,
+    /// exp/divide/reduce chains — softmax and friends.
+    Softmax,
+    /// Normalization arithmetic (rsqrt, mean/variance chains).
+    Normalization,
+    /// Elementwise arithmetic (GELU polynomials, bias adds, residuals).
+    Elementwise,
+    /// Reshapes, transposes, broadcasts, copies, slices, concatenates.
+    DataMovement,
+    /// while/call/fusion/tuple plumbing.
+    ControlFlow,
+    Other,
+}
+
+impl OpCategory {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCategory::MatMul => "MatMul",
+            OpCategory::Softmax => "Softmax",
+            OpCategory::Normalization => "Normalization",
+            OpCategory::Elementwise => "Elementwise",
+            OpCategory::DataMovement => "DataMovement",
+            OpCategory::ControlFlow => "ControlFlow",
+            OpCategory::Other => "Other",
+        }
+    }
+
+    pub fn all() -> [OpCategory; 7] {
+        [
+            OpCategory::MatMul,
+            OpCategory::Softmax,
+            OpCategory::Normalization,
+            OpCategory::Elementwise,
+            OpCategory::DataMovement,
+            OpCategory::ControlFlow,
+            OpCategory::Other,
+        ]
+    }
+}
+
+/// Classify an opcode into a category.
+pub fn categorize(opcode: &str) -> OpCategory {
+    match opcode {
+        "dot" | "convolution" => OpCategory::MatMul,
+        "exponential" | "log" | "divide" => OpCategory::Softmax,
+        "rsqrt" | "sqrt" | "power" => OpCategory::Normalization,
+        "add" | "subtract" | "multiply" | "tanh" | "maximum" | "minimum"
+        | "abs" | "negate" | "select" | "compare" | "convert" | "floor"
+        | "ceil" | "sign" | "and" | "or" | "not" | "xor" | "clamp"
+        | "is-finite" => OpCategory::Elementwise,
+        "reshape" | "transpose" | "broadcast" | "copy" | "slice"
+        | "concatenate" | "pad" | "reverse" | "gather" | "scatter"
+        | "dynamic-slice" | "dynamic-update-slice" | "iota" => {
+            OpCategory::DataMovement
+        }
+        "while" | "call" | "fusion" | "tuple" | "get-tuple-element"
+        | "conditional" | "parameter" | "constant" | "after-all"
+        | "custom-call" => OpCategory::ControlFlow,
+        "reduce" | "reduce-window" | "sort" | "argmax" | "argmin" | "map" => {
+            OpCategory::Softmax // reductions in these models are softmax/LN sums
+        }
+        _ => OpCategory::Other,
+    }
+}
+
+/// Aggregated costs for one module.
+#[derive(Debug, Clone, Default)]
+pub struct CostAnalysis {
+    /// FLOPs per category.
+    pub flops: HashMap<OpCategory, f64>,
+    /// Bytes written per category (output sizes — activation traffic proxy).
+    pub bytes: HashMap<OpCategory, f64>,
+    /// Total bytes of entry parameters (the weight + input stream).
+    pub parameter_bytes: usize,
+    /// Bytes of the entry result.
+    pub result_bytes: usize,
+    /// Number of instructions per opcode (fusion auditing).
+    pub opcode_counts: HashMap<String, usize>,
+}
+
+impl CostAnalysis {
+    pub fn of(module: &HloModule) -> Result<Self> {
+        let mut a = CostAnalysis::default();
+        // operand shape lookup across all computations
+        for comp in &module.computations {
+            let shapes: HashMap<&str, &HloInstruction> = comp
+                .instructions
+                .iter()
+                .map(|i| (i.name.as_str(), i))
+                .collect();
+            for inst in &comp.instructions {
+                let cat = categorize(&inst.opcode);
+                let flops = instruction_flops(inst, &shapes);
+                *a.flops.entry(cat).or_default() += flops;
+                if inst.opcode != "parameter" {
+                    *a.bytes.entry(cat).or_default() += inst.shape.bytes() as f64;
+                }
+                *a.opcode_counts.entry(inst.opcode.clone()).or_default() += 1;
+            }
+        }
+        a.parameter_bytes = module
+            .parameters()?
+            .iter()
+            .map(|(_, s)| s.bytes())
+            .sum();
+        a.result_bytes = module.result_shape()?.bytes();
+        Ok(a)
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.flops.values().sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes.values().sum()
+    }
+
+    /// Fraction of FLOPs per category, descending.
+    pub fn flop_breakdown(&self) -> Vec<(OpCategory, f64)> {
+        let total = self.total_flops().max(1.0);
+        let mut v: Vec<_> = OpCategory::all()
+            .into_iter()
+            .map(|c| (c, self.flops.get(&c).copied().unwrap_or(0.0) / total))
+            .collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v
+    }
+
+    /// Count of `fusion` instructions (L2 perf audit).
+    pub fn fusion_count(&self) -> usize {
+        self.opcode_counts.get("fusion").copied().unwrap_or(0)
+    }
+}
+
+/// FLOPs for one instruction given a same-computation operand lookup.
+fn instruction_flops(
+    inst: &HloInstruction,
+    shapes: &HashMap<&str, &HloInstruction>,
+) -> f64 {
+    let out = inst.shape.elems() as f64;
+    match categorize(&inst.opcode) {
+        OpCategory::MatMul => {
+            // flops = 2 * |out| * contraction_size
+            let k = contraction_size(inst, shapes).unwrap_or(1) as f64;
+            2.0 * out * k
+        }
+        OpCategory::Softmax | OpCategory::Normalization => {
+            if inst.opcode == "reduce" {
+                inst.operands
+                    .first()
+                    .and_then(|o| shapes.get(o.as_str()))
+                    .map(|i| i.shape.elems() as f64)
+                    .unwrap_or(out)
+            } else {
+                out
+            }
+        }
+        OpCategory::Elementwise => out,
+        OpCategory::DataMovement | OpCategory::ControlFlow => 0.0,
+        OpCategory::Other => out,
+    }
+}
+
+/// Contraction length of a dot from its lhs shape + contracting dims attr.
+fn contraction_size(
+    inst: &HloInstruction,
+    shapes: &HashMap<&str, &HloInstruction>,
+) -> Option<usize> {
+    let lhs = shapes.get(inst.operands.first()?.as_str())?;
+    let dims_attr = inst
+        .attrs
+        .split("lhs_contracting_dims={")
+        .nth(1)?
+        .split('}')
+        .next()?;
+    let mut k = 1;
+    for d in dims_attr.split(',') {
+        let di: usize = d.trim().parse().ok()?;
+        k *= lhs.shape.dims.get(di).copied().unwrap_or(1);
+    }
+    Some(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule m
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  %dot.1 = f32[4,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %exp.2 = f32[4,16]{1,0} exponential(%dot.1)
+  ROOT %add.3 = f32[4,16]{1,0} add(%dot.1, %exp.2)
+}
+"#;
+
+    #[test]
+    fn dot_flops_exact() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let a = CostAnalysis::of(&m).unwrap();
+        // dot: 2*4*16*8 = 1024; exp: 64; add: 64
+        assert_eq!(a.flops[&OpCategory::MatMul], 1024.0);
+        assert_eq!(a.flops[&OpCategory::Softmax], 64.0);
+        assert_eq!(a.flops[&OpCategory::Elementwise], 64.0);
+        assert_eq!(a.total_flops(), 1152.0);
+    }
+
+    #[test]
+    fn parameter_and_result_bytes() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let a = CostAnalysis::of(&m).unwrap();
+        assert_eq!(a.parameter_bytes, (4 * 8 + 8 * 16) * 4);
+        assert_eq!(a.result_bytes, 4 * 16 * 4);
+    }
+
+    #[test]
+    fn breakdown_sorted_and_normalized() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let a = CostAnalysis::of(&m).unwrap();
+        let b = a.flop_breakdown();
+        assert_eq!(b[0].0, OpCategory::MatMul);
+        let sum: f64 = b.iter().map(|(_, f)| f).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn categorize_covers_common_ops() {
+        assert_eq!(categorize("dot"), OpCategory::MatMul);
+        assert_eq!(categorize("exponential"), OpCategory::Softmax);
+        assert_eq!(categorize("rsqrt"), OpCategory::Normalization);
+        assert_eq!(categorize("tanh"), OpCategory::Elementwise);
+        assert_eq!(categorize("transpose"), OpCategory::DataMovement);
+        assert_eq!(categorize("while"), OpCategory::ControlFlow);
+        assert_eq!(categorize("somethingweird"), OpCategory::Other);
+    }
+}

@@ -1,0 +1,12 @@
+//! HLO-text parsing and cost analysis.
+//!
+//! The AOT artifacts are HLO *text* modules; this module parses enough of
+//! that text to (a) validate artifacts before PJRT compilation, (b) count
+//! FLOPs and bytes per op category for the Fig. 2/3 breakdowns, and
+//! (c) feed the platform simulator with per-inference traffic estimates.
+
+pub mod cost;
+pub mod parser;
+
+pub use cost::{CostAnalysis, OpCategory};
+pub use parser::{HloInstruction, HloModule, HloShape};

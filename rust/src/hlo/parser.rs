@@ -1,0 +1,459 @@
+//! Parser for XLA HLO text (the subset jax emits).
+//!
+//! HLO text looks like:
+//!
+//! ```text
+//! HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, ...)->...}
+//!
+//! ENTRY %main.42 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
+//!   %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+//!   %dot.3 = f32[2,2]{1,0} dot(%Arg_0.1, %Arg_1.2),
+//!       lhs_contracting_dims={1}, rhs_contracting_dims={0}
+//!   ROOT %tuple.4 = (f32[2,2]{1,0}) tuple(%dot.3)
+//! }
+//! ```
+//!
+//! We extract instructions (name, opcode, shape, operands, attributes) for
+//! every computation in the module. This is a *structural* parser — it
+//! does not attempt to validate semantics; PJRT does that on compile.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed array shape, e.g. `f32[8,17,192]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloShape {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+    /// Tuple shapes carry elements instead.
+    pub tuple: Vec<HloShape>,
+}
+
+impl HloShape {
+    pub fn is_tuple(&self) -> bool {
+        !self.tuple.is_empty() || self.dtype == "tuple"
+    }
+
+    pub fn elems(&self) -> usize {
+        if self.is_tuple() {
+            return self.tuple.iter().map(|s| s.elems()).sum();
+        }
+        self.dims.iter().product()
+    }
+
+    /// Bytes for this shape (sums tuple elements).
+    pub fn bytes(&self) -> usize {
+        if self.is_tuple() {
+            return self.tuple.iter().map(|s| s.bytes()).sum();
+        }
+        self.elems() * dtype_bytes(&self.dtype)
+    }
+}
+
+/// Element size for HLO dtype strings.
+pub fn dtype_bytes(dtype: &str) -> usize {
+    match dtype {
+        "pred" | "s8" | "u8" => 1,
+        "s16" | "u16" | "f16" | "bf16" => 2,
+        "s32" | "u32" | "f32" => 4,
+        "s64" | "u64" | "f64" | "c64" => 8,
+        "c128" => 16,
+        _ => 4, // unknown: assume word-sized
+    }
+}
+
+/// One HLO instruction.
+#[derive(Debug, Clone)]
+pub struct HloInstruction {
+    pub name: String,
+    pub shape: HloShape,
+    pub opcode: String,
+    pub operands: Vec<String>,
+    /// Raw attribute text after the operand list (e.g. contracting dims).
+    pub attrs: String,
+    pub is_root: bool,
+}
+
+/// One computation (ENTRY or subcomputation, e.g. fused/reduce bodies).
+#[derive(Debug, Clone)]
+pub struct HloComputation {
+    pub name: String,
+    pub instructions: Vec<HloInstruction>,
+    pub is_entry: bool,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<HloComputation>,
+}
+
+impl HloModule {
+    pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().peekable();
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow!("empty HLO text"))?;
+        if !header.starts_with("HloModule") {
+            bail!("not an HLO module (header: {header:?})");
+        }
+        let name = header
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or("unnamed")
+            .trim_end_matches(',')
+            .to_string();
+
+        let mut computations = Vec::new();
+        let mut current: Option<HloComputation> = None;
+        let mut pending = String::new();
+
+        for raw in lines {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            // Computation start — jax emits several header styles:
+            //   "ENTRY %main.7 (Arg_0.1: f32[2,2]) -> (f32[2,2]) {"
+            //   "%fused (p0: f32[2]) -> f32[2] {"
+            //   "region_0.5 {"            (while bodies, reducers)
+            //   "_where.3 {"
+            // i.e. any top-level line ending in '{' begins a computation.
+            if line.ends_with('{') && current.is_none() {
+                let is_entry = line.starts_with("ENTRY");
+                let name = line
+                    .trim_start_matches("ENTRY")
+                    .trim()
+                    .split(['(', ' '])
+                    .next()
+                    .unwrap_or("")
+                    .trim_start_matches('%')
+                    .to_string();
+                current = Some(HloComputation {
+                    name,
+                    instructions: Vec::new(),
+                    is_entry,
+                });
+                continue;
+            }
+            if line == "}" {
+                if let Some(c) = current.take() {
+                    computations.push(c);
+                }
+                pending.clear();
+                continue;
+            }
+            if let Some(c) = current.as_mut() {
+                // Instructions may wrap across lines; join until balanced.
+                if !pending.is_empty() {
+                    pending.push(' ');
+                }
+                pending.push_str(line);
+                if !line_complete(&pending) {
+                    continue;
+                }
+                if let Some(inst) = parse_instruction(&pending)? {
+                    c.instructions.push(inst);
+                }
+                pending.clear();
+            }
+        }
+        if computations.is_empty() {
+            bail!("no computations found");
+        }
+        Ok(Self { name, computations })
+    }
+
+    pub fn entry(&self) -> Result<&HloComputation> {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .or_else(|| self.computations.last())
+            .ok_or_else(|| anyhow!("no entry computation"))
+    }
+
+    /// Entry parameters in positional order: (name, shape).
+    pub fn parameters(&self) -> Result<Vec<(String, HloShape)>> {
+        let entry = self.entry()?;
+        let mut params: Vec<(usize, String, HloShape)> = entry
+            .instructions
+            .iter()
+            .filter(|i| i.opcode == "parameter")
+            .map(|i| {
+                let pos = i
+                    .attrs
+                    .trim_start_matches('(')
+                    .split(')')
+                    .next()
+                    .and_then(|s| s.trim().parse::<usize>().ok())
+                    .unwrap_or(usize::MAX);
+                (pos, i.name.clone(), i.shape.clone())
+            })
+            .collect();
+        params.sort_by_key(|(pos, _, _)| *pos);
+        Ok(params.into_iter().map(|(_, n, s)| (n, s)).collect())
+    }
+
+    /// Shape of the entry root.
+    pub fn result_shape(&self) -> Result<HloShape> {
+        let entry = self.entry()?;
+        entry
+            .instructions
+            .iter()
+            .find(|i| i.is_root)
+            .or_else(|| entry.instructions.last())
+            .map(|i| i.shape.clone())
+            .ok_or_else(|| anyhow!("entry has no instructions"))
+    }
+}
+
+/// True when parens/braces/brackets are balanced (instruction complete).
+fn line_complete(s: &str) -> bool {
+    let mut depth = 0i64;
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => in_str = !in_str,
+            '(' | '{' | '[' if !in_str => depth += 1,
+            ')' | '}' | ']' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    depth <= 0 && !in_str
+}
+
+/// Parse `%name = shape opcode(operands), attrs` (or `ROOT %name = ...`).
+fn parse_instruction(line: &str) -> Result<Option<HloInstruction>> {
+    let mut rest = line.trim();
+    let is_root = rest.starts_with("ROOT ");
+    if is_root {
+        rest = &rest[5..];
+    }
+    if !rest.starts_with('%') && !rest.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) {
+        return Ok(None);
+    }
+    let (lhs, rhs) = rest
+        .split_once('=')
+        .ok_or_else(|| anyhow!("instruction without '=': {line:?}"))?;
+    let name = lhs.trim().trim_start_matches('%').to_string();
+    let rhs = rhs.trim();
+    // rhs = "<shape> <opcode>(<operands>)<attrs>"
+    let (shape_str, after_shape) = split_shape(rhs)?;
+    let shape = parse_shape(shape_str)?;
+    let after_shape = after_shape.trim();
+    let paren = after_shape
+        .find('(')
+        .ok_or_else(|| anyhow!("no opcode call in {line:?}"))?;
+    let opcode = after_shape[..paren].trim().to_string();
+    let close = matching_paren(after_shape, paren)
+        .ok_or_else(|| anyhow!("unbalanced parens in {line:?}"))?;
+    let operands_str = &after_shape[paren + 1..close];
+    let attrs = after_shape[close + 1..]
+        .trim_start_matches(',')
+        .trim()
+        .to_string();
+    let operands = if opcode == "parameter" || opcode == "constant" {
+        Vec::new()
+    } else {
+        split_top_level(operands_str)
+            .into_iter()
+            .map(|s| {
+                s.trim()
+                    .split_whitespace()
+                    .last()
+                    .unwrap_or("")
+                    .trim_start_matches('%')
+                    .to_string()
+            })
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    // parameter index lives in the parens; keep it in attrs for parameters
+    let attrs = if opcode == "parameter" {
+        format!("({operands_str}){attrs}")
+    } else {
+        attrs
+    };
+    Ok(Some(HloInstruction { name, shape, opcode, operands, attrs, is_root }))
+}
+
+/// Split the leading shape token (handles tuples with nested commas and
+/// layout annotations `{1,0}`).
+fn split_shape(s: &str) -> Result<(&str, &str)> {
+    if s.starts_with('(') {
+        let close = matching_paren(s, 0)
+            .ok_or_else(|| anyhow!("unbalanced tuple shape in {s:?}"))?;
+        return Ok((&s[..close + 1], &s[close + 1..]));
+    }
+    // array shape ends at the first space that is not inside {} or []
+    let mut depth = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' | '{' => depth += 1,
+            ']' | '}' => depth -= 1,
+            ' ' if depth == 0 => return Ok((&s[..i], &s[i..])),
+            _ => {}
+        }
+    }
+    Ok((s, ""))
+}
+
+fn matching_paren(s: &str, open: usize) -> Option<usize> {
+    let b = s.as_bytes();
+    let mut depth = 0;
+    for i in open..b.len() {
+        match b[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Split on top-level commas (ignoring nested (), {}, []).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+/// Parse `f32[8,17]{1,0}` or `(f32[2]{0}, u8[3]{0})` or `f32[]`.
+pub fn parse_shape(s: &str) -> Result<HloShape> {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner.strip_suffix(')').unwrap_or(inner);
+        let tuple = split_top_level(inner)
+            .into_iter()
+            .map(|p| parse_shape(p))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(HloShape { dtype: "tuple".into(), dims: vec![], tuple });
+    }
+    let bracket = s.find('[');
+    let (dtype, rest) = match bracket {
+        Some(b) => (&s[..b], &s[b..]),
+        None => (s, ""),
+    };
+    let dims = if rest.is_empty() {
+        vec![]
+    } else {
+        let close = rest
+            .find(']')
+            .ok_or_else(|| anyhow!("unterminated dims in shape {s:?}"))?;
+        let body = &rest[1..close];
+        if body.trim().is_empty() {
+            vec![]
+        } else {
+            body.split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad dim {d:?} in shape {s:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        }
+    };
+    Ok(HloShape { dtype: dtype.to_string(), dims, tuple: vec![] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY %main.7 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
+  %Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  %Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  %dot.3 = f32[2,2]{1,0} dot(%Arg_0.1, %Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %constant.4 = f32[] constant(2)
+  %broadcast.5 = f32[2,2]{1,0} broadcast(%constant.4), dimensions={}
+  ROOT %add.6 = f32[2,2]{1,0} add(%dot.3, %broadcast.5)
+}
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_fn");
+        let e = m.entry().unwrap();
+        assert!(e.is_entry);
+        assert_eq!(e.instructions.len(), 6);
+        let dot = &e.instructions[2];
+        assert_eq!(dot.opcode, "dot");
+        assert_eq!(dot.operands, vec!["Arg_0.1", "Arg_1.2"]);
+        assert!(dot.attrs.contains("lhs_contracting_dims={1}"));
+        assert_eq!(dot.shape.dims, vec![2, 2]);
+        assert!(e.instructions[5].is_root);
+    }
+
+    #[test]
+    fn parameters_ordered() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let ps = m.parameters().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].0, "Arg_0.1");
+        assert_eq!(ps[0].1.dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn shape_parsing() {
+        let s = parse_shape("f32[8,17,192]{2,1,0}").unwrap();
+        assert_eq!(s.dims, vec![8, 17, 192]);
+        assert_eq!(s.bytes(), 8 * 17 * 192 * 4);
+        let t = parse_shape("(f32[2]{0}, u8[3]{0})").unwrap();
+        assert!(t.is_tuple());
+        assert_eq!(t.bytes(), 8 + 3);
+        let scalar = parse_shape("f32[]").unwrap();
+        assert_eq!(scalar.elems(), 1);
+        let u8s = parse_shape("u8[192,576]{1,0}").unwrap();
+        assert_eq!(u8s.bytes(), 192 * 576);
+    }
+
+    #[test]
+    fn multiline_instruction_joined() {
+        let text = "HloModule m\nENTRY %e (a: f32[2]) -> f32[2] {\n  %a = f32[2]{0} parameter(0)\n  ROOT %r = f32[2]{0} add(%a,\n      %a)\n}\n";
+        let m = HloModule::parse(text).unwrap();
+        let e = m.entry().unwrap();
+        assert_eq!(e.instructions[1].operands, vec!["a", "a"]);
+    }
+
+    #[test]
+    fn rejects_non_hlo() {
+        assert!(HloModule::parse("not hlo").is_err());
+        assert!(HloModule::parse("").is_err());
+    }
+
+    #[test]
+    fn result_shape() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        assert_eq!(m.result_shape().unwrap().dims, vec![2, 2]);
+    }
+}

@@ -1,0 +1,48 @@
+//! # clusterformer
+//!
+//! Reproduction of *"Improving the Efficiency of Transformers for
+//! Resource-Constrained Devices"* (Tabani et al., DSD 2021): K-means
+//! clustering of vision-transformer parameters into small codebooks
+//! ("tables of centroids") so the weight stream shrinks from FP32 values
+//! to 8-bit indices, cutting memory traffic ~4x on bandwidth-starved edge
+//! devices.
+//!
+//! Architecture (see `DESIGN.md`): Python/JAX/Pallas authors and AOT-lowers
+//! the models at build time; this crate is the *runtime* — it loads the
+//! HLO artifacts through the PJRT C API and serves batched classification
+//! requests, and it models the paper's three hardware platforms to
+//! reproduce the speedup/energy evaluation.
+//!
+//! Module map:
+//! * [`util`] — std-only substrates (JSON, RNG, CLI, logging, stats).
+//! * [`tensor`] — dtype-tagged tensors + the `.tpak` interchange format.
+//! * [`hlo`] — HLO-text parser and FLOP/byte cost analysis.
+//! * [`runtime`] — PJRT engine: load, compile, execute AOT artifacts.
+//! * [`clustering`] — K-means compression toolkit (mirrors the Python
+//!   pipeline; lets a user compress new weight files without Python).
+//! * [`model`] — artifact manifest and model registry.
+//! * [`simulator`] — platform/memory/energy models for Conf-1/2/3.
+//! * [`coordinator`] — the serving stack: batcher, router, workers,
+//!   metrics, admission control.
+//! * [`bench`] — micro-benchmark harness (criterion replacement).
+//! * [`testing`] — property-testing mini-framework (proptest replacement).
+
+pub mod bench;
+pub mod clustering;
+pub mod coordinator;
+pub mod hlo;
+pub mod model;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Re-export of the PJRT bindings for advanced embedding use cases.
+pub use xla;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";

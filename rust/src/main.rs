@@ -1,0 +1,321 @@
+//! `clusterformer` CLI — the L3 leader binary.
+//!
+//! Subcommands:
+//! * `info`      — inspect the artifact manifest.
+//! * `eval`      — accuracy of a variant over the validation set.
+//! * `serve`     — run the serving coordinator under a synthetic Poisson
+//!                 load and report latency/throughput.
+//! * `compress`  — cluster a model's weights in Rust (no Python needed).
+//! * `profile`   — per-op-category FLOP/byte breakdown of an HLO artifact.
+//! * `simulate`  — project time/energy onto the Conf-1/2/3 platforms.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use clusterformer::clustering::{ClusterScheme, Quantizer};
+use clusterformer::coordinator::{
+    eval::evaluate, BatchPolicy, BatcherConfig, Server, ServerConfig,
+};
+use clusterformer::hlo::{CostAnalysis, HloModule};
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+use clusterformer::simulator::{profile::build_sim, simulate_inference};
+use clusterformer::util::cli::{Cli, Command};
+use clusterformer::util::rng::Pcg32;
+use clusterformer::{log_info, ARTIFACTS_DIR};
+
+fn cli() -> Cli {
+    Cli::new("clusterformer", "clustered-parameter ViT inference for edge devices")
+        .command(
+            Command::new("info", "inspect the artifact manifest")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory"),
+        )
+        .command(
+            Command::new("eval", "evaluate a variant on the validation set")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
+                .opt("model", "vit", "model name (vit|deit)")
+                .opt("variant", "baseline", "baseline | {entire|perlayer}_{c}")
+                .opt("n", "0", "images to evaluate (0 = all)"),
+        )
+        .command(
+            Command::new("serve", "run the coordinator under synthetic load")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
+                .opt("model", "vit", "model name")
+                .opt("variant", "perlayer_64", "variant to serve")
+                .opt("rate", "20", "request rate (req/s)")
+                .opt("duration", "10", "seconds of load")
+                .opt("max-batch", "8", "dynamic batcher max batch")
+                .opt("max-wait-ms", "25", "dynamic batcher deadline")
+                .opt("policy", "adaptive", "sizeonly | deadline | adaptive")
+                .opt("seed", "7", "workload RNG seed"),
+        )
+        .command(
+            Command::new("compress", "cluster weights in Rust and report")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
+                .opt("model", "vit", "model name")
+                .opt("clusters", "64", "number of clusters")
+                .opt("scheme", "perlayer", "entire | perlayer")
+                .opt("out", "", "optional output .tpak path"),
+        )
+        .command(
+            Command::new("profile", "FLOP/byte breakdown of an HLO artifact")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
+                .opt("model", "vit", "model name")
+                .opt("variant", "baseline", "baseline | clustered")
+                .opt("batch", "8", "batch size"),
+        )
+        .command(
+            Command::new("simulate", "project onto Conf-1/2/3 platforms")
+                .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
+                .opt("model", "vit", "model name")
+                .opt("clusters", "64", "cluster count for the variant")
+                .opt("scheme", "perlayer", "entire | perlayer")
+                .opt("contention", "0.5", "background bandwidth fraction [0,1)"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "info" => cmd_info(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "compress" => cmd_compress(&args),
+        "profile" => cmd_profile(&args),
+        "simulate" => cmd_simulate(&args),
+        _ => unreachable!("cli parser validates commands"),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_info(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let registry = Registry::load(args.str("artifacts")?)?;
+    let m = &registry.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!(
+        "dataset: {} val images, {} classes, {}x{}",
+        m.n_val, m.n_classes, m.img_size, m.img_size
+    );
+    println!("cluster sweep: {:?}  schemes: {:?}", m.cluster_sweep, m.schemes);
+    for name in registry.model_names() {
+        let e = m.model(&name)?;
+        println!(
+            "\nmodel {name}: dim={} depth={} heads={} tokens={} distilled={}",
+            e.config.dim,
+            e.config.depth,
+            e.config.heads,
+            e.config.n_tokens(),
+            e.config.distilled
+        );
+        println!(
+            "  params: {} tensors, {:.2} MB fp32 ({} clustered tensors, {:.2} MB)",
+            e.params.len(),
+            e.total_param_bytes() as f64 / 1e6,
+            e.clustered_names().len(),
+            e.clustered_param_bytes() as f64 / 1e6,
+        );
+        println!(
+            "  baseline accuracy: top1={:.4} top5={:.4}",
+            e.baseline_top1, e.baseline_top5
+        );
+        let mut variants: Vec<_> = e.clustered_files.keys().cloned().collect();
+        variants.sort();
+        println!("  clustered variants: {}", variants.join(", "));
+        println!(
+            "  hlo batches: baseline {:?}, clustered {:?}",
+            sorted_keys(&e.hlo_baseline),
+            sorted_keys(&e.hlo_clustered)
+        );
+    }
+    Ok(())
+}
+
+fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
+    let mut v: Vec<usize> = m.keys().copied().collect();
+    v.sort_unstable();
+    v
+}
+
+fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let engine = Engine::cpu()?;
+    let mut registry = Registry::load(args.str("artifacts")?)?;
+    let key = VariantKey::parse(args.str("variant")?)?;
+    let r = evaluate(
+        &engine,
+        &mut registry,
+        args.str("model")?,
+        key,
+        args.usize("n")?,
+    )?;
+    println!(
+        "{}/{}: top1={:.4} top5={:.4} over {} images in {:.2}s ({:.1} img/s), weight stream {:.2} MB",
+        r.model,
+        r.variant,
+        r.top1,
+        r.top5,
+        r.n,
+        r.total_s,
+        r.images_per_s,
+        r.weight_stream_bytes as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let model = args.str("model")?.to_string();
+    let variant = VariantKey::parse(args.str("variant")?)?;
+    let policy = match args.str("policy")? {
+        "sizeonly" => BatchPolicy::SizeOnly,
+        "deadline" => BatchPolicy::Deadline,
+        _ => BatchPolicy::Adaptive,
+    };
+    let server = Server::start(ServerConfig {
+        artifacts_dir: args.str("artifacts")?.into(),
+        targets: vec![(model.clone(), variant)],
+        batcher: BatcherConfig {
+            max_batch: args.usize("max-batch")?,
+            max_wait: Duration::from_millis(args.usize("max-wait-ms")? as u64),
+            policy,
+            queue_cap: 1024,
+        },
+    })?;
+    let target = format!("{model}/{}", variant.label());
+    log_info!("serving {target}");
+
+    // Synthetic Poisson open-loop load from the validation set.
+    let registry = Registry::load(args.str("artifacts")?)?;
+    let (images, _) = registry.val_set()?;
+    let rate = args.f64("rate")?;
+    let duration = args.f64("duration")?;
+    let mut rng = Pcg32::new(args.usize("seed")? as u64);
+    let router = Arc::new(server.router.clone());
+    let mut pending = Vec::new();
+    let t0 = Instant::now();
+    let mut i = 0usize;
+    while t0.elapsed().as_secs_f64() < duration {
+        let gap = rng.exponential(rate);
+        std::thread::sleep(Duration::from_secs_f64(gap.min(1.0)));
+        let row = i % images.shape()[0];
+        let mut img = images.slice_rows(row, row + 1)?;
+        let shape = img.shape()[1..].to_vec();
+        img.reshape(shape)?;
+        pending.push(router.submit(&target, img)?.1);
+        i += 1;
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(30)) {
+            if !resp.logits.is_empty() {
+                ok += 1;
+            }
+        }
+    }
+    let snap = server.snapshot();
+    println!("\n{}", snap.markdown());
+    println!("completed {ok}/{i} requests");
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_compress(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let mut registry = Registry::load(args.str("artifacts")?)?;
+    let model = args.str("model")?.to_string();
+    let scheme = ClusterScheme::parse(args.str("scheme")?)?;
+    let clusters = args.usize("clusters")?;
+    let entry = registry.manifest.model(&model)?.clone();
+    let names = entry.clustered_names();
+    let weights = registry.weights(&model)?.clone();
+    let t0 = Instant::now();
+    let ct = Quantizer::new(clusters, scheme).run(&names, &weights)?;
+    let mse = ct.quantization_mse(&weights)?;
+    println!(
+        "{model} {} c={clusters}: {:.2} MB -> {:.2} MB ({:.2}x), table {} B, mse {:.3e}, {:.2}s",
+        scheme.name(),
+        ct.original_bytes() as f64 / 1e6,
+        ct.compressed_bytes() as f64 / 1e6,
+        ct.original_bytes() as f64 / ct.compressed_bytes() as f64,
+        ct.table_bytes(),
+        mse,
+        t0.elapsed().as_secs_f64()
+    );
+    let out = args.str("out")?;
+    if !out.is_empty() {
+        clusterformer::tensor::io::write_tpak(out, &ct.to_pack())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let registry = Registry::load(args.str("artifacts")?)?;
+    let entry = registry.manifest.model(args.str("model")?)?;
+    let batch = args.usize("batch")?;
+    let files = match args.str("variant")? {
+        "clustered" => &entry.hlo_clustered,
+        _ => &entry.hlo_baseline,
+    };
+    let file = files
+        .get(&batch)
+        .ok_or_else(|| anyhow::anyhow!("no HLO for batch {batch}"))?;
+    let module = HloModule::parse_file(registry.manifest.path(file))?;
+    let cost = CostAnalysis::of(&module)?;
+    println!(
+        "{} — {:.1} MFLOP, params {:.2} MB, result {} B, {} fusions",
+        file,
+        cost.total_flops() / 1e6,
+        cost.parameter_bytes as f64 / 1e6,
+        cost.result_bytes,
+        cost.fusion_count()
+    );
+    println!("\n{:<16} {:>10} {:>10}", "category", "flops%", "bytes%");
+    let total_bytes = cost.total_bytes().max(1.0);
+    for (cat, frac) in cost.flop_breakdown() {
+        let b = cost.bytes.get(&cat).copied().unwrap_or(0.0) / total_bytes;
+        println!("{:<16} {:>9.1}% {:>9.1}%", cat.name(), frac * 100.0, b * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let mut registry = Registry::load(args.str("artifacts")?)?;
+    let model = args.str("model")?.to_string();
+    let scheme = ClusterScheme::parse(args.str("scheme")?)?;
+    let clusters = args.usize("clusters")?;
+    let contention = args.f64("contention")?;
+    let sim = build_sim(&mut registry, &model, scheme, clusters)?;
+    println!(
+        "workload: {:.1} MFLOP, weights {:.2} MB -> {:.2} MB",
+        sim.flops / 1e6,
+        sim.baseline_weight_bytes / 1e6,
+        sim.clustered_weight_bytes / 1e6
+    );
+    println!(
+        "\n{:<34} {:>8} {:>10} {:>8} {:>8}",
+        "platform", "speedup", "ideal", "E-save", "mem-frac"
+    );
+    for r in simulate_inference(&sim, contention) {
+        println!(
+            "{:<34} {:>7.2}x {:>9.2}x {:>7.1}% {:>7.1}%",
+            r.platform.name(),
+            r.speedup,
+            r.ideal_speedup,
+            r.energy_saving * 100.0,
+            r.memory_fraction * 100.0
+        );
+    }
+    Ok(())
+}
+

@@ -1,0 +1,395 @@
+//! `manifest.json` parsing: model configs, the ordered parameter manifest
+//! (the AOT argument-order contract), artifact file names.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One parameter in manifest order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub clustered: bool,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// FP32 bytes of this parameter in the baseline model.
+    pub fn fp32_bytes(&self) -> usize {
+        self.elems() * 4
+    }
+}
+
+/// Model architecture config (mirrors python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub img_size: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub n_classes: usize,
+    pub distilled: bool,
+}
+
+impl ModelConfig {
+    pub fn n_patches(&self) -> usize {
+        (self.img_size / self.patch).pow(2)
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_patches() + 1 + usize::from(self.distilled)
+    }
+
+    /// Analytic FLOPs for one image's forward pass (multiply-accumulate
+    /// counted as 2 FLOPs). Used by the simulator: the static HLO count
+    /// can't see through the interpret-mode Pallas while-loops.
+    pub fn flops_per_image(&self) -> f64 {
+        let d = self.dim as f64;
+        let t = self.n_tokens() as f64;
+        let p = self.n_patches() as f64;
+        let patch_dim = (self.patch * self.patch * 3) as f64;
+        let mlp = (self.mlp_ratio as f64) * d;
+        let embed = 2.0 * p * patch_dim * d;
+        // per block: qkv (2*T*d*3d) + scores/values (2*2*T*T*d) +
+        //            proj (2*T*d*d) + mlp (2*T*d*mlp * 2)
+        let block = 2.0 * t * d * (3.0 * d) + 4.0 * t * t * d
+            + 2.0 * t * d * d
+            + 4.0 * t * d * mlp;
+        let heads = 2.0 * d * self.n_classes as f64
+            * if self.distilled { 2.0 } else { 1.0 };
+        embed + self.depth as f64 * block + heads
+    }
+}
+
+/// One model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    /// variant key ("{scheme}_{c}") -> clustered tpak file
+    pub clustered_files: HashMap<String, String>,
+    /// variant key -> real table-of-centroids bytes
+    pub table_bytes: HashMap<String, usize>,
+    /// batch size -> HLO file (baseline / clustered)
+    pub hlo_baseline: HashMap<usize, String>,
+    pub hlo_clustered: HashMap<usize, String>,
+    pub goldens_file: String,
+    pub loss_curve: Vec<(usize, f64)>,
+    pub baseline_top1: f64,
+    pub baseline_top5: f64,
+}
+
+impl ModelEntry {
+    /// Names of clustered parameters in manifest order (codebook row order).
+    pub fn clustered_names(&self) -> Vec<String> {
+        self.params
+            .iter()
+            .filter(|p| p.clustered)
+            .map(|p| p.name.clone())
+            .collect()
+    }
+
+    /// Total FP32 parameter bytes (baseline model size).
+    pub fn total_param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.fp32_bytes()).sum()
+    }
+
+    /// Bytes of clustered parameters in the baseline representation.
+    pub fn clustered_param_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .filter(|p| p.clustered)
+            .map(|p| p.fp32_bytes())
+            .sum()
+    }
+
+    /// Model bytes under a clustered variant: u8 indices + FP32 leftovers
+    /// + real tables (paper §V-C accounting).
+    pub fn variant_bytes(&self, variant: &str) -> Result<usize> {
+        let table = *self
+            .table_bytes
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {variant:?}"))?;
+        let idx_bytes: usize = self
+            .params
+            .iter()
+            .filter(|p| p.clustered)
+            .map(|p| p.elems())
+            .sum();
+        let fp_bytes: usize = self
+            .params
+            .iter()
+            .filter(|p| !p.clustered)
+            .map(|p| p.fp32_bytes())
+            .sum();
+        Ok(idx_bytes + fp_bytes + table)
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: HashMap<String, ModelEntry>,
+    pub batch_sizes: Vec<usize>,
+    pub cluster_sweep: Vec<usize>,
+    pub schemes: Vec<String>,
+    pub codebook_pad: usize,
+    pub val_file: String,
+    pub n_val: usize,
+    pub n_classes: usize,
+    pub img_size: usize,
+    pub class_names: Vec<String>,
+    pub golden_n: usize,
+    /// micro op name -> (hlo file, arg shapes)
+    pub micro_hlo: HashMap<String, (String, Vec<Vec<usize>>)>,
+    pub quick: bool,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let j = json::parse_file(&path).with_context(|| {
+            format!(
+                "loading manifest {} (run `make artifacts` first)",
+                path.display()
+            )
+        })?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: PathBuf) -> Result<Self> {
+        let data = j.get("data");
+        let mut models = HashMap::new();
+        let models_obj = j
+            .get("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, m) in models_obj.iter() {
+            models.insert(name.clone(), parse_model(m)?);
+        }
+        let micro = j.get("micro_hlo").as_obj();
+        let mut micro_hlo = HashMap::new();
+        if let Some(o) = micro {
+            for (op, v) in o.iter() {
+                let file = v.req_str("file")?.to_string();
+                let shapes = v
+                    .req_arr("shapes")?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|a| {
+                                a.iter().filter_map(|d| d.as_usize()).collect()
+                            })
+                            .ok_or_else(|| anyhow!("bad micro shape"))
+                    })
+                    .collect::<Result<Vec<Vec<usize>>>>()?;
+                micro_hlo.insert(op.clone(), (file, shapes));
+            }
+        }
+        Ok(Self {
+            dir,
+            models,
+            batch_sizes: usizes(j.req_arr("batch_sizes")?),
+            cluster_sweep: usizes(j.req_arr("cluster_sweep")?),
+            schemes: j
+                .req_arr("schemes")?
+                .iter()
+                .filter_map(|s| s.as_str().map(String::from))
+                .collect(),
+            codebook_pad: j.req_usize("codebook_pad")?,
+            val_file: data.req_str("val")?.to_string(),
+            n_val: data.req_usize("n_val")?,
+            n_classes: data.req_usize("n_classes")?,
+            img_size: data.req_usize("img_size")?,
+            class_names: data
+                .get("class_names")
+                .as_arr()
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            golden_n: j.req_usize("golden_n")?,
+            micro_hlo,
+            quick: j.get("quick").as_bool().unwrap_or(false),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} (have: {:?})", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn usizes(a: &[Json]) -> Vec<usize> {
+    a.iter().filter_map(|v| v.as_usize()).collect()
+}
+
+fn parse_model(m: &Json) -> Result<ModelEntry> {
+    let c = m.get("config");
+    let config = ModelConfig {
+        name: c.req_str("name")?.to_string(),
+        img_size: c.req_usize("img_size")?,
+        patch: c.req_usize("patch")?,
+        dim: c.req_usize("dim")?,
+        depth: c.req_usize("depth")?,
+        heads: c.req_usize("heads")?,
+        mlp_ratio: c.req_usize("mlp_ratio")?,
+        n_classes: c.req_usize("n_classes")?,
+        distilled: c.get("distilled").as_bool().unwrap_or(false),
+    };
+    let params = m
+        .req_arr("params")?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.req_str("name")?.to_string(),
+                shape: usizes(p.req_arr("shape")?),
+                clustered: p.get("clustered").as_bool().unwrap_or(false),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut clustered_files = HashMap::new();
+    let mut table_bytes = HashMap::new();
+    if let Some(o) = m.get("clustered").as_obj() {
+        for (k, v) in o.iter() {
+            clustered_files.insert(k.clone(), v.req_str("file")?.to_string());
+            table_bytes.insert(k.clone(), v.req_usize("table_bytes")?);
+        }
+    }
+    let parse_hlo = |key: &str| -> Result<HashMap<usize, String>> {
+        let mut out = HashMap::new();
+        if let Some(o) = m.get("hlo").get(key).as_obj() {
+            for (b, f) in o.iter() {
+                out.insert(
+                    b.parse::<usize>().context("hlo batch key")?,
+                    f.as_str().unwrap_or_default().to_string(),
+                );
+            }
+        }
+        Ok(out)
+    };
+    let loss_curve = m
+        .get("loss_curve")
+        .as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|p| {
+                    let pair = p.as_arr()?;
+                    Some((pair[0].as_usize()?, pair[1].as_f64()?))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(ModelEntry {
+        config,
+        params,
+        weights_file: m.req_str("weights")?.to_string(),
+        clustered_files,
+        table_bytes,
+        hlo_baseline: parse_hlo("baseline")?,
+        hlo_clustered: parse_hlo("clustered")?,
+        goldens_file: m.req_str("goldens")?.to_string(),
+        loss_curve,
+        baseline_top1: m.get("baseline_top1").as_f64().unwrap_or(0.0),
+        baseline_top5: m.get("baseline_top5").as_f64().unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1, "quick": true,
+      "data": {"val": "val.tpak", "n_val": 8, "n_classes": 10, "img_size": 32,
+               "class_names": ["a","b"]},
+      "cluster_sweep": [8, 64], "schemes": ["entire", "perlayer"],
+      "codebook_pad": 256, "batch_sizes": [1, 8], "golden_n": 4,
+      "models": {
+        "vit": {
+          "config": {"name": "vit", "img_size": 32, "patch": 8, "dim": 64,
+                     "depth": 2, "heads": 2, "mlp_ratio": 4, "n_classes": 10,
+                     "distilled": false},
+          "params": [
+            {"name": "patch_embed/w", "shape": [192, 64], "clustered": true},
+            {"name": "patch_embed/b", "shape": [64], "clustered": false}
+          ],
+          "weights": "vit_weights.tpak",
+          "clustered": {"entire_64": {"file": "v.tpak", "table_bytes": 256}},
+          "hlo": {"baseline": {"1": "b1.hlo.txt"}, "clustered": {"8": "c8.hlo.txt"}},
+          "goldens": "vit_goldens.tpak",
+          "loss_curve": [[0, 2.3], [100, 0.9]],
+          "baseline_top1": 0.9, "baseline_top5": 1.0
+        }
+      },
+      "micro_hlo": {"gelu": {"file": "micro_gelu.hlo.txt", "shapes": [[136, 256]]}}
+    }"#;
+
+    fn manifest() -> Manifest {
+        let j = crate::util::json::parse(MINI).unwrap();
+        Manifest::from_json(&j, PathBuf::from("/tmp/x")).unwrap()
+    }
+
+    #[test]
+    fn parses_mini() {
+        let m = manifest();
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+        assert_eq!(m.n_val, 8);
+        let vit = m.model("vit").unwrap();
+        assert_eq!(vit.config.dim, 64);
+        assert_eq!(vit.params.len(), 2);
+        assert!(vit.params[0].clustered);
+        assert_eq!(vit.hlo_baseline[&1], "b1.hlo.txt");
+        assert_eq!(vit.loss_curve[1], (100, 0.9));
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let m = manifest();
+        let vit = m.model("vit").unwrap();
+        assert_eq!(vit.total_param_bytes(), (192 * 64 + 64) * 4);
+        assert_eq!(vit.clustered_param_bytes(), 192 * 64 * 4);
+        // variant: u8 per clustered elem + fp32 leftovers + table
+        assert_eq!(
+            vit.variant_bytes("entire_64").unwrap(),
+            192 * 64 + 64 * 4 + 256
+        );
+        assert!(vit.variant_bytes("bogus").is_err());
+    }
+
+    #[test]
+    fn micro_hlo_parsed() {
+        let m = manifest();
+        let (file, shapes) = &m.micro_hlo["gelu"];
+        assert_eq!(file, "micro_gelu.hlo.txt");
+        assert_eq!(shapes[0], vec![136, 256]);
+    }
+
+    #[test]
+    fn n_tokens() {
+        let m = manifest();
+        assert_eq!(m.model("vit").unwrap().config.n_tokens(), 17);
+    }
+}

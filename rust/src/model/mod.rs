@@ -1,0 +1,8 @@
+//! Artifact manifest and model registry — the Rust half of the contract
+//! written by `python/compile/aot.py`.
+
+pub mod manifest;
+pub mod registry;
+
+pub use manifest::{Manifest, ModelEntry, ParamSpec};
+pub use registry::{ModelVariant, Registry, VariantKey};

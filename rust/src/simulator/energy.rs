@@ -1,0 +1,111 @@
+//! Energy model: DRAM traffic + compute + static + table-of-centroids
+//! lookups (mini-CACTI), mirroring the paper's per-rail decomposition
+//! (§IV-D reads DDR / GPU-SoC rails; we compute the same quantities from
+//! the analytical platform model).
+
+use super::cacti;
+use super::memory::TrafficProfile;
+use super::platform::Platform;
+
+/// Per-inference energy decomposition (joules).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub dram: f64,
+    pub compute: f64,
+    pub static_leak: f64,
+    pub centroid_table: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.dram + self.compute + self.static_leak + self.centroid_table
+    }
+}
+
+/// Energy model over a platform.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    pub platform: Platform,
+}
+
+impl EnergyModel {
+    pub fn new(platform: Platform) -> Self {
+        Self { platform }
+    }
+
+    /// Energy for one inference.
+    ///
+    /// * `traffic` — DRAM bytes moved.
+    /// * `flops` — arithmetic executed.
+    /// * `exec_time` — wall time (for the static-power term).
+    /// * `table_bytes` — real table-of-centroids size (0 for baseline).
+    /// * `table_reads` — centroid lookups (≈ one per clustered weight
+    ///   element per inference).
+    pub fn inference_energy(
+        &self,
+        traffic: &TrafficProfile,
+        flops: f64,
+        exec_time: f64,
+        table_bytes: usize,
+        table_reads: f64,
+    ) -> EnergyBreakdown {
+        EnergyBreakdown {
+            dram: traffic.total() * self.platform.dram_j_per_byte,
+            compute: flops * self.platform.compute_j_per_flop,
+            static_leak: exec_time
+                * (self.platform.static_watts
+                    + cacti::sram_leakage_watts(table_bytes)),
+            centroid_table: cacti::table_lookup_energy(
+                table_bytes.max(1),
+                table_reads,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::platform::PlatformKind;
+
+    fn model() -> EnergyModel {
+        EnergyModel::new(Platform::new(PlatformKind::Conf2Tx2))
+    }
+
+    fn traffic(w: f64) -> TrafficProfile {
+        TrafficProfile { weight_bytes: w, activation_bytes: 1e6, io_bytes: 1e5 }
+    }
+
+    #[test]
+    fn clustered_saves_energy_when_memory_dominates() {
+        let m = model();
+        // baseline: 10 MB weights; clustered: 2.5 MB + table lookups
+        let base = m.inference_energy(&traffic(10e6), 50e6, 20e-3, 0, 0.0);
+        let clus = m.inference_energy(
+            &traffic(2.5e6),
+            50e6 * 1.05,
+            18e-3,
+            256,
+            2.5e6,
+        );
+        assert!(clus.total() < base.total());
+        let saving = 1.0 - clus.total() / base.total();
+        assert!(saving > 0.10, "saving={saving}");
+    }
+
+    #[test]
+    fn table_energy_is_tiny_fraction() {
+        let m = model();
+        let e = m.inference_energy(&traffic(2.5e6), 50e6, 18e-3, 1024, 2.5e6);
+        assert!(e.centroid_table / e.total() < 0.02, "table should be <2%");
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = model();
+        let e = m.inference_energy(&traffic(1e6), 1e6, 1e-3, 256, 1e5);
+        let total = e.dram + e.compute + e.static_leak + e.centroid_table;
+        assert!((e.total() - total).abs() < 1e-18);
+        assert!(e.dram > 0.0 && e.compute > 0.0 && e.static_leak > 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Memory traffic accounting + bandwidth contention.
+//!
+//! The paper's speedup experiments run "while putting maximum pressure on
+//! the memory subsystem" (§V-B): concurrent memory-intensive tasks leave
+//! only a fraction of the peak bandwidth for inference. We model that
+//! with a deterministic contention factor.
+
+/// Per-inference DRAM traffic decomposition (bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TrafficProfile {
+    /// Weight stream (FP32 params, or u8 indices + tables when clustered).
+    pub weight_bytes: f64,
+    /// Activations spilled to DRAM (inputs, outputs, inter-layer).
+    pub activation_bytes: f64,
+    /// Input images + output logits.
+    pub io_bytes: f64,
+}
+
+impl TrafficProfile {
+    pub fn total(&self) -> f64 {
+        self.weight_bytes + self.activation_bytes + self.io_bytes
+    }
+
+    /// Scale the activation/io parts by a batch factor while the weight
+    /// stream is read once per batch.
+    pub fn batched(&self, batch: usize) -> TrafficProfile {
+        TrafficProfile {
+            weight_bytes: self.weight_bytes,
+            activation_bytes: self.activation_bytes * batch as f64,
+            io_bytes: self.io_bytes * batch as f64,
+        }
+    }
+}
+
+/// Bandwidth available to the inference task under background contention.
+#[derive(Debug, Clone, Copy)]
+pub struct ContendedBandwidth {
+    /// Platform peak (bytes/s).
+    pub peak: f64,
+    /// Fraction stolen by background traffic, in [0, 1).
+    pub contention: f64,
+}
+
+impl ContendedBandwidth {
+    pub fn new(peak: f64, contention: f64) -> Self {
+        assert!((0.0..1.0).contains(&contention), "contention in [0,1)");
+        assert!(peak > 0.0);
+        Self { peak, contention }
+    }
+
+    /// Effective bandwidth left for inference.
+    pub fn effective(&self) -> f64 {
+        self.peak * (1.0 - self.contention)
+    }
+
+    /// Time to move `bytes` (seconds).
+    pub fn transfer_time(&self, bytes: f64) -> f64 {
+        bytes / self.effective()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn traffic_total_and_batching() {
+        let t = TrafficProfile {
+            weight_bytes: 100.0,
+            activation_bytes: 10.0,
+            io_bytes: 5.0,
+        };
+        assert_eq!(t.total(), 115.0);
+        let b = t.batched(8);
+        assert_eq!(b.weight_bytes, 100.0);
+        assert_eq!(b.activation_bytes, 80.0);
+        assert_eq!(b.io_bytes, 40.0);
+    }
+
+    #[test]
+    fn contention_reduces_bandwidth() {
+        let c = ContendedBandwidth::new(100e9, 0.6);
+        assert!((c.effective() - 40e9).abs() < 1.0);
+        assert!((c.transfer_time(40e9) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn full_contention_rejected() {
+        ContendedBandwidth::new(100.0, 1.0);
+    }
+
+    #[test]
+    fn prop_more_contention_slower() {
+        check("contention monotone", 50, |g| {
+            let peak = g.f64(1e9, 1e12);
+            let c1 = g.f64(0.0, 0.5);
+            let c2 = c1 + g.f64(0.0, 0.49);
+            let bytes = g.f64(1e3, 1e9);
+            let t1 = ContendedBandwidth::new(peak, c1).transfer_time(bytes);
+            let t2 = ContendedBandwidth::new(peak, c2).transfer_time(bytes);
+            assert!(t2 >= t1 - 1e-15);
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Analytical platform simulator — the substitution for the paper's
+//! physical testbeds (DESIGN.md §Substitutions).
+//!
+//! The paper itself *models* its three platforms ("we model three
+//! platforms with architectural characteristics similar to..."); this
+//! module does the same with public specs: peak compute, memory
+//! bandwidth, and per-operation energies (Horowitz ISSCC'14 / EIE-style
+//! numbers), plus a mini-CACTI SRAM model for the table of centroids.
+
+pub mod cacti;
+pub mod energy;
+pub mod memory;
+pub mod platform;
+pub mod profile;
+pub mod roofline;
+
+pub use energy::{EnergyBreakdown, EnergyModel};
+pub use memory::{ContendedBandwidth, TrafficProfile};
+pub use platform::{Platform, PlatformKind};
+pub use profile::{simulate_inference, InferenceSim};
+pub use roofline::{amdahl_ideal_speedup, roofline_time, RooflinePoint};

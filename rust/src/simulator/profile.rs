@@ -1,0 +1,265 @@
+//! End-to-end inference simulation: combine a workload (FLOPs + traffic,
+//! from the HLO cost analysis and manifest byte accounting) with a
+//! platform model to produce the paper's Fig. 9 quantities.
+
+use super::energy::{EnergyBreakdown, EnergyModel};
+use super::memory::{ContendedBandwidth, TrafficProfile};
+use super::platform::{Platform, PlatformKind};
+use super::roofline::{
+    amdahl_ideal_speedup, roofline_time, serial_fractions, RooflinePoint,
+};
+
+/// Workload description for one model at one batch size.
+#[derive(Debug, Clone, Copy)]
+pub struct InferenceSim {
+    /// Arithmetic per inference (batch) in FLOPs.
+    pub flops: f64,
+    /// FP32 weight-stream bytes (baseline representation).
+    pub baseline_weight_bytes: f64,
+    /// Weight-stream bytes under the clustered representation
+    /// (u8 indices + FP32 leftovers + real tables).
+    pub clustered_weight_bytes: f64,
+    /// DRAM-visible activation bytes per inference.
+    pub activation_bytes: f64,
+    /// Input/output bytes per inference.
+    pub io_bytes: f64,
+    /// Real table-of-centroids bytes.
+    pub table_bytes: usize,
+    /// Centroid lookups per inference (≈ clustered weight elements).
+    pub table_reads: f64,
+    /// Fraction of peak FLOPs the kernel sustains (0 < e <= 1). `None`
+    /// uses the platform's default
+    /// [`Platform::sustained_efficiency`].
+    pub compute_efficiency: Option<f64>,
+    /// Extra instructions for the indirect access (≥ 1.0; paper §V-B).
+    pub clustered_compute_overhead: f64,
+}
+
+impl Default for InferenceSim {
+    fn default() -> Self {
+        Self {
+            flops: 0.0,
+            baseline_weight_bytes: 0.0,
+            clustered_weight_bytes: 0.0,
+            activation_bytes: 0.0,
+            io_bytes: 0.0,
+            table_bytes: 0,
+            table_reads: 0.0,
+            compute_efficiency: None,
+            clustered_compute_overhead: 1.06,
+        }
+    }
+}
+
+/// Simulation result for one (workload, platform, contention) point.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub platform: PlatformKind,
+    pub contention: f64,
+    pub t_baseline: f64,
+    pub t_clustered: f64,
+    pub speedup: f64,
+    pub e_baseline: EnergyBreakdown,
+    pub e_clustered: EnergyBreakdown,
+    /// 1 - E_clustered / E_baseline.
+    pub energy_saving: f64,
+    /// Amdahl bound given the memory-bound fraction and the weight-stream
+    /// compression (paper §V-B "Ideal Case").
+    pub ideal_speedup: f64,
+    /// Memory-bound fraction of the baseline serial execution.
+    pub memory_fraction: f64,
+}
+
+impl InferenceSim {
+    pub fn baseline_traffic(&self) -> TrafficProfile {
+        TrafficProfile {
+            weight_bytes: self.baseline_weight_bytes,
+            activation_bytes: self.activation_bytes,
+            io_bytes: self.io_bytes,
+        }
+    }
+
+    pub fn clustered_traffic(&self) -> TrafficProfile {
+        TrafficProfile {
+            weight_bytes: self.clustered_weight_bytes,
+            activation_bytes: self.activation_bytes,
+            io_bytes: self.io_bytes,
+        }
+    }
+
+    /// Run the model on one platform at a contention level.
+    pub fn run(&self, kind: PlatformKind, contention: f64) -> SimResult {
+        let platform = Platform::new(kind);
+        let bw = ContendedBandwidth::new(platform.peak_bw, contention);
+        let base = self.baseline_traffic();
+        let clus = self.clustered_traffic();
+        let eff = self
+            .compute_efficiency
+            .unwrap_or_else(|| Platform::sustained_efficiency(kind));
+
+        let base_pt = RooflinePoint {
+            flops: self.flops,
+            bytes: base.total(),
+            compute_efficiency: eff,
+        };
+        let clus_pt = RooflinePoint {
+            flops: self.flops * self.clustered_compute_overhead,
+            bytes: clus.total(),
+            compute_efficiency: eff,
+        };
+        let t_baseline = roofline_time(&base_pt, &platform, &bw);
+        let t_clustered = roofline_time(&clus_pt, &platform, &bw);
+
+        let em = EnergyModel::new(platform.clone());
+        let e_baseline =
+            em.inference_energy(&base, self.flops, t_baseline, 0, 0.0);
+        let e_clustered = em.inference_energy(
+            &clus,
+            self.flops * self.clustered_compute_overhead,
+            t_clustered,
+            self.table_bytes,
+            self.table_reads,
+        );
+
+        let (_, f_mem) = serial_fractions(&base_pt, &platform, &bw);
+        let reduction =
+            (base.total() / clus.total()).max(1.0); // whole-stream compression
+        // "Ideal Case" (paper §V-B): compute fully underutilized relative
+        // to memory, so the speedup bound is the traffic reduction itself;
+        // equivalently Amdahl with f_mem -> 1.
+        SimResult {
+            platform: kind,
+            contention,
+            t_baseline,
+            t_clustered,
+            speedup: t_baseline / t_clustered,
+            e_baseline,
+            e_clustered,
+            energy_saving: 1.0 - e_clustered.total() / e_baseline.total(),
+            ideal_speedup: amdahl_ideal_speedup(1.0, reduction),
+            memory_fraction: f_mem,
+        }
+    }
+}
+
+/// Convenience: simulate across all platforms at one contention level.
+pub fn simulate_inference(
+    sim: &InferenceSim,
+    contention: f64,
+) -> Vec<SimResult> {
+    PlatformKind::all()
+        .into_iter()
+        .map(|k| sim.run(k, contention))
+        .collect()
+}
+
+/// Build the batch-1 workload for a clustered model variant from the
+/// manifest byte accounting + the HLO activation-byte estimate. Shared by
+/// the `simulate` CLI and the Fig. 9 bench.
+pub fn build_sim(
+    registry: &mut crate::model::Registry,
+    model: &str,
+    scheme: crate::clustering::ClusterScheme,
+    clusters: usize,
+) -> anyhow::Result<InferenceSim> {
+    use crate::hlo::{CostAnalysis, HloModule};
+    use crate::model::VariantKey;
+
+    let entry = registry.manifest.model(model)?.clone();
+    let variant =
+        registry.variant(model, VariantKey::Clustered { scheme, clusters })?;
+    let clustered_elems: usize = entry
+        .params
+        .iter()
+        .filter(|p| p.clustered)
+        .map(|p| p.elems())
+        .sum();
+    let img_bytes =
+        (entry.config.img_size * entry.config.img_size * 3 * 4) as f64;
+    // Activation-traffic estimate from the HLO (static single pass of the
+    // batch-1 module); a VMEM-resident schedule spills roughly the block
+    // outputs, so we charge a quarter of the produced bytes.
+    let activation_bytes = match entry.hlo_baseline.get(&1) {
+        Some(f) => {
+            let module = HloModule::parse_file(registry.manifest.path(f))?;
+            CostAnalysis::of(&module)?.total_bytes() * 0.25
+        }
+        None => entry.total_param_bytes() as f64 * 0.1,
+    };
+    Ok(InferenceSim {
+        flops: entry.config.flops_per_image(),
+        baseline_weight_bytes: entry.total_param_bytes() as f64,
+        clustered_weight_bytes: variant.weight_stream_bytes as f64,
+        activation_bytes,
+        io_bytes: img_bytes + (entry.config.n_classes * 4) as f64,
+        table_bytes: variant.table_bytes,
+        table_reads: clustered_elems as f64,
+        ..Default::default()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A ViT-tiny-like batch-1 workload: ~92 MFLOP, 10.8 MB weights.
+    fn workload() -> InferenceSim {
+        InferenceSim {
+            flops: 92e6,
+            baseline_weight_bytes: 10.8e6,
+            clustered_weight_bytes: 2.8e6,
+            activation_bytes: 1.2e6,
+            io_bytes: 12e3 + 40.0,
+            table_bytes: 256,
+            table_reads: 2.6e6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fig9_shape_holds() {
+        let w = workload();
+        // with the paper's "controlled traffic" pressure:
+        for kind in PlatformKind::all() {
+            let r = w.run(kind, 0.5);
+            assert!(
+                r.speedup > 1.0,
+                "{kind:?}: clustering should help under contention, got {}",
+                r.speedup
+            );
+            assert!(r.energy_saving > 0.0, "{kind:?} should save energy");
+            assert!(
+                r.ideal_speedup >= r.speedup * 0.99,
+                "{kind:?}: ideal bound {} below achieved {}",
+                r.ideal_speedup,
+                r.speedup
+            );
+        }
+        // the ideal accelerator approaches the full traffic reduction
+        let ideal = w.run(PlatformKind::IdealAccelerator, 0.5);
+        assert!(ideal.speedup > 2.0, "ideal speedup {}", ideal.speedup);
+    }
+
+    #[test]
+    fn contention_increases_speedup_until_saturated() {
+        let w = workload();
+        let s_low = w.run(PlatformKind::Conf1Desktop, 0.0).speedup;
+        let s_high = w.run(PlatformKind::Conf1Desktop, 0.9).speedup;
+        assert!(s_high >= s_low, "contention should amplify the benefit");
+    }
+
+    #[test]
+    fn energy_breakdown_table_negligible() {
+        let r = workload().run(PlatformKind::Conf2Tx2, 0.5);
+        assert!(
+            r.e_clustered.centroid_table / r.e_clustered.total() < 0.05,
+            "table energy must stay small"
+        );
+    }
+
+    #[test]
+    fn simulate_all_platforms() {
+        let rs = simulate_inference(&workload(), 0.5);
+        assert_eq!(rs.len(), 4);
+    }
+}

@@ -1,0 +1,147 @@
+//! Roofline execution-time model + the paper's Amdahl "Ideal Case".
+
+use super::memory::{ContendedBandwidth, TrafficProfile};
+use super::platform::Platform;
+
+/// One (flops, traffic) workload point placed on a platform's roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflinePoint {
+    pub flops: f64,
+    pub bytes: f64,
+    /// Fraction of peak compute actually achievable for this kernel
+    /// (matmul-heavy transformer inference sustains well under peak on
+    /// GPUs; 0.35-0.6 is typical).
+    pub compute_efficiency: f64,
+}
+
+impl RooflinePoint {
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes.max(1.0)
+    }
+}
+
+/// Execution time under the roofline: overlapped compute and memory
+/// streams — the slower one dominates.
+pub fn roofline_time(
+    point: &RooflinePoint,
+    platform: &Platform,
+    bw: &ContendedBandwidth,
+) -> f64 {
+    let t_compute =
+        point.flops / (platform.peak_flops * point.compute_efficiency);
+    let t_memory = bw.transfer_time(point.bytes);
+    t_compute.max(t_memory)
+}
+
+/// Execution-time split: (compute-bound fraction, memory-bound fraction)
+/// of the serial (non-overlapped) execution — the Amdahl decomposition
+/// the paper's §V-B "Ideal Case" applies.
+pub fn serial_fractions(
+    point: &RooflinePoint,
+    platform: &Platform,
+    bw: &ContendedBandwidth,
+) -> (f64, f64) {
+    let t_compute =
+        point.flops / (platform.peak_flops * point.compute_efficiency);
+    let t_memory = bw.transfer_time(point.bytes);
+    let total = t_compute + t_memory;
+    (t_compute / total, t_memory / total)
+}
+
+/// Amdahl's-law ideal speedup (paper §V-B): if the memory-bound fraction
+/// `f_mem` of execution is accelerated by `traffic_reduction` (the 4x
+/// weight-stream compression), the bound is
+/// `1 / ((1 - f_mem) + f_mem / traffic_reduction)`.
+pub fn amdahl_ideal_speedup(f_mem: f64, traffic_reduction: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&f_mem));
+    assert!(traffic_reduction >= 1.0);
+    1.0 / ((1.0 - f_mem) + f_mem / traffic_reduction)
+}
+
+/// Speedup of a clustered traffic profile over baseline on one platform.
+pub fn speedup(
+    flops: f64,
+    baseline: &TrafficProfile,
+    clustered: &TrafficProfile,
+    compute_efficiency: f64,
+    clustered_compute_overhead: f64,
+    platform: &Platform,
+    contention: f64,
+) -> f64 {
+    let bw = ContendedBandwidth::new(platform.peak_bw, contention);
+    let t_base = roofline_time(
+        &RooflinePoint { flops, bytes: baseline.total(), compute_efficiency },
+        platform,
+        &bw,
+    );
+    // The clustered kernel executes extra instructions for the indirect
+    // access (paper §V-B: "despite extra instructions and overhead...").
+    let t_clus = roofline_time(
+        &RooflinePoint {
+            flops: flops * clustered_compute_overhead,
+            bytes: clustered.total(),
+            compute_efficiency,
+        },
+        platform,
+        &bw,
+    );
+    t_base / t_clus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::platform::PlatformKind;
+
+    fn tx2() -> Platform {
+        Platform::new(PlatformKind::Conf2Tx2)
+    }
+
+    #[test]
+    fn memory_bound_point_limited_by_bw() {
+        let p = tx2();
+        let bw = ContendedBandwidth::new(p.peak_bw, 0.0);
+        // 1 FLOP per 100 bytes: hopelessly memory bound
+        let pt = RooflinePoint { flops: 1e6, bytes: 1e8, compute_efficiency: 1.0 };
+        let t = roofline_time(&pt, &p, &bw);
+        assert!((t - 1e8 / p.peak_bw).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn compute_bound_point_limited_by_flops() {
+        let p = tx2();
+        let bw = ContendedBandwidth::new(p.peak_bw, 0.0);
+        let pt = RooflinePoint { flops: 1e12, bytes: 1e3, compute_efficiency: 0.5 };
+        let t = roofline_time(&pt, &p, &bw);
+        assert!((t - 1e12 / (p.peak_flops * 0.5)).abs() / t < 1e-9);
+    }
+
+    #[test]
+    fn amdahl_limits() {
+        assert!((amdahl_ideal_speedup(0.0, 4.0) - 1.0).abs() < 1e-12);
+        assert!((amdahl_ideal_speedup(1.0, 4.0) - 4.0).abs() < 1e-12);
+        let s = amdahl_ideal_speedup(0.8, 4.0);
+        assert!((s - 1.0 / (0.2 + 0.2)).abs() < 1e-12); // 2.5x
+    }
+
+    #[test]
+    fn clustering_speedup_appears_when_memory_bound() {
+        let p = tx2();
+        let base = TrafficProfile {
+            weight_bytes: 10e6,
+            activation_bytes: 1e6,
+            io_bytes: 0.1e6,
+        };
+        let clus = TrafficProfile {
+            weight_bytes: 2.5e6,
+            activation_bytes: 1e6,
+            io_bytes: 0.1e6,
+        };
+        // memory-bound flops (low intensity) + contention
+        let s = speedup(20e6, &base, &clus, 0.5, 1.05, &p, 0.5);
+        assert!(s > 1.5, "expected clear speedup, got {s}");
+        // compute-bound (high flops): clustering stops helping
+        let s2 = speedup(60e9, &base, &clus, 0.5, 1.05, &p, 0.0);
+        assert!(s2 <= 1.0 + 1e-9, "compute-bound should not speed up, got {s2}");
+    }
+}

@@ -1,0 +1,234 @@
+//! `.tpak` reader/writer — byte-compatible with `python/compile/tnsr.py`.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   b"TPAK"
+//! u32     version (1)
+//! u32     n_entries
+//! entries:
+//!     u16      name_len, name bytes (utf-8)
+//!     u8       dtype (0=f32, 1=u8, 2=i32, 3=i64)
+//!     u8       ndim
+//!     u64*ndim dims
+//!     u64      payload bytes
+//!     payload
+//! ```
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Dtype, Tensor};
+
+const MAGIC: &[u8; 4] = b"TPAK";
+const VERSION: u32 = 1;
+
+/// An ordered tensor pack (order preserved for deterministic writes).
+#[derive(Debug, Default, Clone)]
+pub struct TensorPack {
+    names: Vec<String>,
+    map: HashMap<String, Tensor>,
+}
+
+impl TensorPack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        let name = name.into();
+        if !self.map.contains_key(&name) {
+            self.names.push(name.clone());
+        }
+        self.map.insert(name, t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name)
+            .with_context(|| format!("tensor {name:?} missing from pack"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.names.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.map.values().map(|t| t.nbytes()).sum()
+    }
+}
+
+pub fn write_tpak(path: impl AsRef<Path>, pack: &TensorPack) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path.as_ref()).with_context(|| {
+            format!("creating {}", path.as_ref().display())
+        })?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(pack.len() as u32).to_le_bytes())?;
+    for name in pack.names() {
+        let t = &pack.map[name];
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long");
+        }
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.dtype().code(), t.shape().len() as u8])?;
+        for &d in t.shape() {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        f.write_all(&(t.nbytes() as u64).to_le_bytes())?;
+        f.write_all(t.bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_tpak(path: impl AsRef<Path>) -> Result<TensorPack> {
+    let path = path.as_ref();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?,
+    );
+    read_tpak_from(&mut f).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn read_tpak_from(r: &mut impl Read) -> Result<TensorPack> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad magic {magic:?}");
+    }
+    let version = read_u32(r)?;
+    if version != VERSION {
+        bail!("unsupported tpak version {version}");
+    }
+    let count = read_u32(r)? as usize;
+    let mut pack = TensorPack::new();
+    for _ in 0..count {
+        let name_len = read_u16(r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let dtype = Dtype::from_code(hdr[0])?;
+        let ndim = hdr[1] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(r)? as usize);
+        }
+        let nbytes = read_u64(r)? as usize;
+        let expect: usize = shape.iter().product::<usize>() * dtype.size();
+        if nbytes != expect {
+            bail!("{name}: payload {nbytes} bytes != expected {expect}");
+        }
+        let mut data = vec![0u8; nbytes];
+        r.read_exact(&mut data)?;
+        pack.insert(name, Tensor::new(dtype, shape, data)?);
+    }
+    Ok(pack)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("clusterformer-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut pack = TensorPack::new();
+        pack.insert("w", Tensor::from_f32(vec![2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap());
+        pack.insert("idx", Tensor::from_u8(vec![4], &[0, 1, 255, 7]).unwrap());
+        pack.insert("labels", Tensor::from_i32(vec![2], &[-5, 9]).unwrap());
+        let p = tmp("roundtrip.tpak");
+        write_tpak(&p, &pack).unwrap();
+        let back = read_tpak(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.req("w").unwrap(), pack.req("w").unwrap());
+        assert_eq!(back.req("idx").unwrap().as_u8().unwrap(), &[0, 1, 255, 7]);
+        assert_eq!(back.req("labels").unwrap().as_i32().unwrap(), vec![-5, 9]);
+        // order preserved
+        let names: Vec<_> = back.names().cloned().collect();
+        assert_eq!(names, vec!["w", "idx", "labels"]);
+    }
+
+    #[test]
+    fn empty_pack() {
+        let p = tmp("empty.tpak");
+        write_tpak(&p, &TensorPack::new()).unwrap();
+        assert!(read_tpak(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("bad.tpak");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(read_tpak(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut pack = TensorPack::new();
+        pack.insert("x", Tensor::from_f32(vec![128], &[0.5; 128]).unwrap());
+        let p = tmp("trunc.tpak");
+        write_tpak(&p, &pack).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(read_tpak(&p).is_err());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        // hand-craft an entry whose payload length contradicts its shape
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"TPAK");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.push(b'x');
+        buf.push(0); // f32
+        buf.push(1); // ndim 1
+        buf.extend_from_slice(&4u64.to_le_bytes()); // dims [4] -> expect 16 bytes
+        buf.extend_from_slice(&8u64.to_le_bytes()); // but claim 8
+        buf.extend_from_slice(&[0u8; 8]);
+        assert!(read_tpak_from(&mut &buf[..]).is_err());
+    }
+}

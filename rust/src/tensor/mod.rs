@@ -1,0 +1,262 @@
+//! Dtype-tagged host tensors and the `.tpak` interchange format shared
+//! with the Python build layer (`python/compile/tnsr.py`).
+
+pub mod io;
+
+use anyhow::{bail, Result};
+
+/// Element types supported by the interchange format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+    I64,
+}
+
+impl Dtype {
+    pub fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::U8 => 1,
+            Dtype::I32 => 2,
+            Dtype::I64 => 3,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<Self> {
+        Ok(match code {
+            0 => Dtype::F32,
+            1 => Dtype::U8,
+            2 => Dtype::I32,
+            3 => Dtype::I64,
+            c => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+            Dtype::I64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::U8 => "u8",
+            Dtype::I32 => "i32",
+            Dtype::I64 => "i64",
+        }
+    }
+}
+
+/// A host tensor: shape + dtype + contiguous little-endian bytes.
+///
+/// Data is kept as raw bytes so it can be handed to
+/// `xla::Literal::create_from_shape_and_untyped_data` without a copy of
+/// interpretation; typed views are provided for computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dtype: Dtype,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn new(dtype: Dtype, shape: Vec<usize>, data: Vec<u8>) -> Result<Self> {
+        let elems: usize = shape.iter().product();
+        if data.len() != elems * dtype.size() {
+            bail!(
+                "tensor data length {} != {} elements x {} bytes ({:?})",
+                data.len(),
+                elems,
+                dtype.size(),
+                shape
+            );
+        }
+        Ok(Self { dtype, shape, data })
+    }
+
+    pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(Dtype::F32, shape, data)
+    }
+
+    pub fn from_u8(shape: Vec<usize>, values: &[u8]) -> Result<Self> {
+        Self::new(Dtype::U8, shape, values.to_vec())
+    }
+
+    pub fn from_i32(shape: Vec<usize>, values: &[i32]) -> Result<Self> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::new(Dtype::I32, shape, data)
+    }
+
+    pub fn zeros(dtype: Dtype, shape: Vec<usize>) -> Self {
+        let elems: usize = shape.iter().product();
+        Self { dtype, shape, data: vec![0; elems * dtype.size()] }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Typed f32 view (copies; little-endian decode).
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("tensor is {}, not f32", self.dtype.name());
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        if self.dtype != Dtype::U8 {
+            bail!("tensor is {}, not u8", self.dtype.name());
+        }
+        Ok(&self.data)
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != Dtype::I32 {
+            bail!("tensor is {}, not i32", self.dtype.name());
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i64(&self) -> Result<Vec<i64>> {
+        if self.dtype != Dtype::I64 {
+            bail!("tensor is {}, not i64", self.dtype.name());
+        }
+        Ok(self
+            .data
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(&mut self, shape: Vec<usize>) -> Result<()> {
+        let new: usize = shape.iter().product();
+        if new != self.elems() {
+            bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(())
+    }
+
+    /// Row-major slice of the leading axis: rows `[lo, hi)`.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Tensor> {
+        if self.shape.is_empty() {
+            bail!("cannot row-slice a scalar");
+        }
+        if lo > hi || hi > self.shape[0] {
+            bail!("slice [{lo}, {hi}) out of bounds for {}", self.shape[0]);
+        }
+        let row: usize =
+            self.shape[1..].iter().product::<usize>() * self.dtype.size();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::new(self.dtype, shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Concatenate along the leading axis.
+    pub fn concat_rows(parts: &[&Tensor]) -> Result<Tensor> {
+        let Some(first) = parts.first() else { bail!("concat of nothing") };
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            if p.dtype != first.dtype || p.shape[1..] != first.shape[1..] {
+                bail!("concat shape/dtype mismatch");
+            }
+            rows += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut shape = first.shape.clone();
+        shape[0] = rows;
+        Tensor::new(first.dtype, shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_length() {
+        assert!(Tensor::new(Dtype::F32, vec![2, 2], vec![0; 16]).is_ok());
+        assert!(Tensor::new(Dtype::F32, vec![2, 2], vec![0; 15]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.0])
+            .unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.0]);
+        assert_eq!(t.elems(), 6);
+        assert_eq!(t.nbytes(), 24);
+        assert!(t.as_u8().is_err());
+    }
+
+    #[test]
+    fn reshape_and_slice() {
+        let mut t = Tensor::from_f32(vec![4, 2], &(0..8).map(|i| i as f32).collect::<Vec<_>>()).unwrap();
+        t.reshape(vec![2, 4]).unwrap();
+        assert!(t.reshape(vec![3, 3]).is_err());
+        let s = t.slice_rows(1, 2).unwrap();
+        assert_eq!(s.shape(), &[1, 4]);
+        assert_eq!(s.as_f32().unwrap(), vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn concat() {
+        let a = Tensor::from_f32(vec![1, 2], &[1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2, 2], &[3.0, 4.0, 5.0, 6.0]).unwrap();
+        let c = Tensor::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let bad = Tensor::from_u8(vec![1, 2], &[1, 2]).unwrap();
+        assert!(Tensor::concat_rows(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::from_f32(vec![], &[7.0]).unwrap();
+        assert_eq!(t.elems(), 1);
+        assert!(t.slice_rows(0, 0).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Property-testing mini-framework (proptest replacement).
+
+pub mod prop;
+
+pub use prop::{check, Gen};

@@ -1,0 +1,176 @@
+//! Property-based testing with random case generation and greedy
+//! shrinking — a small, std-only stand-in for `proptest`.
+//!
+//! Usage:
+//! ```
+//! use clusterformer::testing::prop::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut xs = g.vec_usize(0..=64, 0, 100);
+//!     xs.sort_unstable();
+//!     let once = xs.clone();
+//!     xs.sort_unstable();
+//!     assert_eq!(once, xs);
+//! });
+//! ```
+//!
+//! A failing case panics with the seed that reproduces it; set
+//! `CLUSTERFORMER_PROP_SEED` to replay a single seed, and
+//! `CLUSTERFORMER_PROP_CASES` to scale case counts globally.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::util::rng::Pcg32;
+
+/// Value generator handed to property closures.
+pub struct Gen {
+    rng: Pcg32,
+    /// Shrink factor in (0, 1]; sizes are scaled down by it during
+    /// shrinking so "smaller" cases are explored on failure.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: Pcg32::new(seed), scale }
+    }
+
+    fn scaled(&self, n: usize) -> usize {
+        ((n as f64) * self.scale).round() as usize
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_s = lo + self.scaled(hi - lo);
+        self.rng.range(lo, hi_s.max(lo))
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+
+    /// Vec of usizes in `range` with length in `[min_len, max_len]`.
+    pub fn vec_usize(
+        &mut self,
+        range: std::ops::RangeInclusive<usize>,
+        min_len: usize,
+        max_len: usize,
+    ) -> Vec<usize> {
+        let len = self.usize(min_len, max_len);
+        (0..len)
+            .map(|_| self.rng.range(*range.start(), *range.end()))
+            .collect()
+    }
+
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let len = self.usize(min_len.max(1), max_len);
+        (0..len).map(|_| self.f32_normal()).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok()?.parse().ok()
+}
+
+/// Run `property` against `cases` random generators. On failure, retries
+/// the failing seed at smaller size scales (shrinking) and panics with
+/// the smallest failing seed/scale for reproduction.
+pub fn check(name: &str, cases: usize, property: impl Fn(&mut Gen)) {
+    let cases = env_usize("CLUSTERFORMER_PROP_CASES").unwrap_or(cases);
+    if let Some(seed) = env_usize("CLUSTERFORMER_PROP_SEED") {
+        let mut g = Gen::new(seed as u64, 1.0);
+        property(&mut g);
+        return;
+    }
+    // Base seed derives from the property name so distinct properties
+    // explore distinct streams but remain reproducible run-to-run.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let failed = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, 1.0);
+            property(&mut g);
+        }))
+        .is_err();
+        if failed {
+            // Greedy shrink: find the smallest scale that still fails.
+            let mut best_scale = 1.0;
+            for &scale in &[0.02, 0.05, 0.1, 0.25, 0.5] {
+                let fails = catch_unwind(AssertUnwindSafe(|| {
+                    let mut g = Gen::new(seed, scale);
+                    property(&mut g);
+                }))
+                .is_err();
+                if fails {
+                    best_scale = scale;
+                    break;
+                }
+            }
+            // Re-run un-caught so the original assertion message surfaces.
+            eprintln!(
+                "property {name:?} failed: seed={seed} scale={best_scale} \
+                 (replay: CLUSTERFORMER_PROP_SEED={seed})"
+            );
+            let mut g = Gen::new(seed, best_scale);
+            property(&mut g);
+            unreachable!("property failed under catch_unwind but passed on replay");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0);
+        check("always true", 50, |g| {
+            let _ = g.usize(0, 10);
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("finds failure", 100, |g| {
+            let v = g.vec_usize(0..=100, 0, 20);
+            assert!(v.len() < 15, "vector too long: {}", v.len());
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.usize(3, 9);
+            assert!((3..=9).contains(&n));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_usize(5..=6, 2, 4);
+            assert!(v.len() >= 2 && v.len() <= 4);
+            assert!(v.iter().all(|&x| x == 5 || x == 6));
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Tiny declarative CLI parser (clap replacement).
+//!
+//! Supports subcommands, `--key value`, `--key=value`, boolean `--flag`,
+//! and positional arguments, with generated `--help` text.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A declared subcommand with its options.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positionals: Vec<(&'static str, &'static str)>, // (name, help)
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+}
+
+/// Parsed arguments for one invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    values: HashMap<String, String>,
+    flags: HashMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing --{name}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.str(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} expects an integer"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.str(name)?
+            .parse()
+            .map_err(|_| anyhow!("--{name} expects a number"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// Top-level CLI: a set of subcommands.
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Self { bin, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<16} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `<command> --help` for command options.\n");
+        s
+    }
+
+    pub fn command_usage(&self, c: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, c.name, c.about);
+        for o in &c.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => "[flag]".to_string(),
+                (Some(d), _) => format!("[default: {d}]"),
+                (None, _) => "[required]".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {} {}\n", o.name, o.help, d));
+        }
+        for (name, help) in &c.positionals {
+            s.push_str(&format!("  <{name}>  {help}\n"));
+        }
+        s
+    }
+
+    /// Parse argv (excluding the binary name). Returns Err with a usage
+    /// message for `--help` / unknown input.
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let Some(cmd_name) = argv.first() else {
+            bail!("{}", self.usage());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            bail!("{}", self.usage());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| anyhow!("unknown command {cmd_name:?}\n\n{}", self.usage()))?;
+
+        let mut args = Args { command: cmd.name.to_string(), ..Default::default() };
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.command_usage(cmd));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| {
+                        anyhow!("unknown option --{key}\n\n{}", self.command_usage(cmd))
+                    })?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("--{key} is a flag and takes no value");
+                    }
+                    args.flags.insert(key.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow!("--{key} expects a value"))?
+                                .clone()
+                        }
+                    };
+                    args.values.insert(key.to_string(), val);
+                }
+            } else {
+                args.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+
+        for o in &cmd.opts {
+            if !o.is_flag && o.default.is_none() && !args.values.contains_key(o.name)
+            {
+                bail!("missing required --{}\n\n{}", o.name, self.command_usage(cmd));
+            }
+        }
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test").command(
+            Command::new("run", "run things")
+                .opt("count", "3", "how many")
+                .req("name", "who")
+                .flag("fast", "go fast")
+                .positional("file", "input"),
+        )
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = cli()
+            .parse(&argv(&["run", "--name", "x", "--fast", "f.txt", "--count=7"]))
+            .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.str("name").unwrap(), "x");
+        assert_eq!(a.usize("count").unwrap(), 7);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positionals, vec!["f.txt"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&argv(&["run", "--name", "x"])).unwrap();
+        assert_eq!(a.usize("count").unwrap(), 3);
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&argv(&["run"])).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(cli().parse(&argv(&["run", "--name", "x", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&argv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("COMMANDS"));
+        let err = cli().parse(&argv(&["run", "--help"])).unwrap_err().to_string();
+        assert!(err.contains("--count"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Leveled stderr logger controlled by `CLUSTERFORMER_LOG`
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    fn from_env() -> Self {
+        match std::env::var("CLUSTERFORMER_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn start_time() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let l = Level::from_env();
+        LEVEL.store(l as u8, Ordering::Relaxed);
+        return l;
+    }
+    // Safety: only valid discriminants are ever stored.
+    unsafe { std::mem::transmute(raw) }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = start_time().elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {:5} {module}] {msg}", l.as_str());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+
+    #[test]
+    fn macros_compile() {
+        set_level(Level::Error);
+        log_info!("hidden {}", 1);
+        log_error!("shown {}", 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Std-only substrates for crates that are unavailable offline:
+//! [`json`] (serde), [`rng`] (rand), [`cli`] (clap), [`log`] (env_logger),
+//! [`stats`] (statistical helpers shared by bench/metrics/simulator).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,224 @@
+//! Statistical helpers shared by the bench harness, coordinator metrics
+//! and the simulator: summary statistics and a streaming histogram with
+//! bounded memory (HdrHistogram-style log-linear buckets).
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        Self {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            p50: percentile_sorted(&sorted, 0.50),
+            p90: percentile_sorted(&sorted, 0.90),
+            p99: percentile_sorted(&sorted, 0.99),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Log-linear streaming histogram: ~1.04x relative error, O(1) record,
+/// fixed 2 KiB footprint. Records non-negative values (e.g. latencies in
+/// microseconds).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const SUB_BUCKETS: usize = 16; // per power of two
+const MAX_EXP: usize = 40; // values up to 2^40
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; SUB_BUCKETS * MAX_EXP],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v < 1.0 {
+            return (v * SUB_BUCKETS as f64) as usize % SUB_BUCKETS;
+        }
+        let exp = (v.log2().floor() as usize).min(MAX_EXP - 2);
+        let base = 2f64.powi(exp as i32);
+        let sub = (((v - base) / base) * SUB_BUCKETS as f64) as usize;
+        (exp + 1) * SUB_BUCKETS + sub.min(SUB_BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        let exp = i / SUB_BUCKETS;
+        let sub = i % SUB_BUCKETS;
+        if exp == 0 {
+            return (sub as f64 + 0.5) / SUB_BUCKETS as f64;
+        }
+        let base = 2f64.powi(exp as i32 - 1);
+        base + (sub as f64 + 0.5) / SUB_BUCKETS as f64 * base
+    }
+
+    pub fn record(&mut self, v: f64) {
+        assert!(v >= 0.0 && v.is_finite(), "LogHistogram records >= 0");
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max }
+    }
+
+    /// Approximate percentile (within one bucket's width).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_close_to_exact() {
+        let mut h = LogHistogram::new();
+        let mut vals = Vec::new();
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        for _ in 0..50_000 {
+            let v = rng.exponential(0.001); // mean 1000
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_by(|a, b| a.total_cmp(b));
+        for q in [0.5, 0.9, 0.99] {
+            let exact = percentile_sorted(&vals, q);
+            let approx = h.percentile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.10, "q={q} exact={exact} approx={approx}");
+        }
+        assert!((h.mean() - vals.iter().sum::<f64>() / 50_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(1.0);
+        a.record(100.0);
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 100.0);
+        assert_eq!(a.min(), 1.0);
+    }
+
+    #[test]
+    fn histogram_small_values() {
+        let mut h = LogHistogram::new();
+        for _ in 0..100 {
+            h.record(0.25);
+        }
+        let p = h.percentile(0.5);
+        assert!((p - 0.25).abs() < 0.1, "p={p}");
+    }
+}

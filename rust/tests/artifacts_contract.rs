@@ -1,0 +1,180 @@
+//! Integration: the artifact contract between `python/compile/aot.py` and
+//! the Rust side — manifest consistency, tpak layouts, HLO parameter
+//! signatures matching the manifest order.
+
+use clusterformer::hlo::HloModule;
+use clusterformer::model::Registry;
+use clusterformer::tensor::Dtype;
+
+#[test]
+fn manifest_and_packs_are_consistent() {
+    let mut registry = Registry::load("artifacts").expect("run `make artifacts`");
+    let models = registry.model_names();
+    assert_eq!(models, vec!["deit", "vit"]);
+    for model in models {
+        let entry = registry.manifest.model(&model).unwrap().clone();
+        // every manifest param exists in the weights pack at its shape
+        let weights = registry.weights(&model).unwrap();
+        assert_eq!(weights.len(), entry.params.len());
+        for spec in &entry.params {
+            assert_eq!(weights[&spec.name].shape(), spec.shape.as_slice());
+            assert_eq!(weights[&spec.name].dtype(), Dtype::F32);
+        }
+        // deit has the distillation extras, vit does not
+        let has_dist = entry.params.iter().any(|p| p.name == "dist_token");
+        assert_eq!(has_dist, entry.config.distilled);
+    }
+}
+
+#[test]
+fn hlo_signatures_match_manifest_order() {
+    let registry = Registry::load("artifacts").unwrap();
+    for model in ["vit", "deit"] {
+        let entry = registry.manifest.model(model).unwrap();
+        for (&batch, file) in &entry.hlo_baseline {
+            let module = HloModule::parse_file(registry.manifest.path(file)).unwrap();
+            let params = module.parameters().unwrap();
+            // (images, *manifest params)
+            assert_eq!(params.len(), 1 + entry.params.len(), "{file}");
+            assert_eq!(
+                params[0].1.dims,
+                vec![batch, entry.config.img_size, entry.config.img_size, 3],
+                "{file}: images shape"
+            );
+            for (spec, (_, shape)) in entry.params.iter().zip(&params[1..]) {
+                assert_eq!(
+                    shape.dims, spec.shape,
+                    "{file}: {} shape mismatch",
+                    spec.name
+                );
+                assert_eq!(shape.dtype, "f32", "{file}: {}", spec.name);
+            }
+        }
+        for (&batch, file) in &entry.hlo_clustered {
+            let module = HloModule::parse_file(registry.manifest.path(file)).unwrap();
+            let params = module.parameters().unwrap();
+            // (images, codebooks, *leaves)
+            assert_eq!(params.len(), 2 + entry.params.len(), "{file}");
+            assert_eq!(params[0].1.dims[0], batch, "{file}");
+            assert_eq!(
+                params[1].1.dims,
+                vec![
+                    entry.clustered_names().len(),
+                    registry.manifest.codebook_pad
+                ],
+                "{file}: codebook stack"
+            );
+            for (spec, (_, shape)) in entry.params.iter().zip(&params[2..]) {
+                assert_eq!(shape.dims, spec.shape, "{file}: {}", spec.name);
+                let want = if spec.clustered { "u8" } else { "f32" };
+                assert_eq!(shape.dtype, want, "{file}: {} dtype", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn val_set_matches_manifest() {
+    let registry = Registry::load("artifacts").unwrap();
+    let (images, labels) = registry.val_set().unwrap();
+    assert_eq!(images.shape()[0], registry.manifest.n_val);
+    assert_eq!(labels.len(), registry.manifest.n_val);
+    assert_eq!(images.shape()[1], registry.manifest.img_size);
+    let max = labels.iter().copied().max().unwrap();
+    assert!((max as usize) < registry.manifest.n_classes);
+    // images are normalized to [0, 1]
+    let v = images.slice_rows(0, 4).unwrap().as_f32().unwrap();
+    assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+}
+
+#[test]
+fn clustered_packs_complete_for_whole_sweep() {
+    let registry = Registry::load("artifacts").unwrap();
+    for model in ["vit", "deit"] {
+        let entry = registry.manifest.model(model).unwrap();
+        for scheme in &registry.manifest.schemes {
+            for &c in &registry.manifest.cluster_sweep {
+                let key = format!("{scheme}_{c}");
+                assert!(
+                    entry.clustered_files.contains_key(&key),
+                    "{model}: missing clustered variant {key}"
+                );
+                let scheme = clusterformer::clustering::ClusterScheme::parse(scheme).unwrap();
+                let ct = registry.clustered(model, scheme, c).unwrap();
+                assert_eq!(ct.names, entry.clustered_names());
+            }
+        }
+    }
+}
+
+#[test]
+fn every_hlo_artifact_parses_with_sane_costs() {
+    // Robustness sweep of the HLO parser + cost analysis over every
+    // artifact the AOT pipeline produced.
+    use clusterformer::hlo::{CostAnalysis, OpCategory};
+    let mut checked = 0;
+    for file in std::fs::read_dir("artifacts").unwrap() {
+        let path = file.unwrap().path();
+        if path.extension().is_none_or(|e| e != "txt") {
+            continue;
+        }
+        let module = HloModule::parse_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let cost = CostAnalysis::of(&module)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert!(cost.parameter_bytes > 0, "{}", path.display());
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        if name.contains("baseline") || name.contains("clustered") {
+            // full forward passes must show matmul work
+            let mm = cost.flops.get(&OpCategory::MatMul).copied().unwrap_or(0.0);
+            assert!(mm > 0.0, "{name}: no matmul flops found");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 17, "expected all HLO artifacts, checked {checked}");
+}
+
+#[test]
+fn clustered_stream_is_about_4x_smaller() {
+    // The headline §V-C claim as a regression test.
+    let mut registry = Registry::load("artifacts").unwrap();
+    for model in ["vit", "deit"] {
+        use clusterformer::model::VariantKey;
+        let base = registry
+            .variant(model, VariantKey::Baseline)
+            .unwrap()
+            .weight_stream_bytes as f64;
+        let clus = registry
+            .variant(
+                model,
+                VariantKey::Clustered {
+                    scheme: clusterformer::clustering::ClusterScheme::Entire,
+                    clusters: 64,
+                },
+            )
+            .unwrap()
+            .weight_stream_bytes as f64;
+        let ratio = base / clus;
+        assert!(
+            (3.5..=4.0).contains(&ratio),
+            "{model}: compression ratio {ratio}"
+        );
+    }
+}
+
+#[test]
+fn registry_error_paths() {
+    use clusterformer::model::VariantKey;
+    let mut registry = Registry::load("artifacts").unwrap();
+    assert!(registry.manifest.model("nope").is_err());
+    assert!(registry
+        .variant(
+            "vit",
+            VariantKey::Clustered {
+                scheme: clusterformer::clustering::ClusterScheme::Entire,
+                clusters: 7, // not in the sweep
+            },
+        )
+        .is_err());
+    assert!(Registry::load("/nonexistent-dir").is_err());
+}

@@ -1,0 +1,83 @@
+//! Integration: the Rust K-means toolkit against the Python pipeline's
+//! artifacts. Same algorithm (quantile-init 1-D Lloyd), same data —
+//! centroids and reconstruction quality must agree.
+
+use clusterformer::clustering::{ClusterScheme, Quantizer};
+use clusterformer::model::Registry;
+
+#[test]
+fn rust_quantizer_matches_python_artifacts() {
+    let mut registry = Registry::load("artifacts").expect("run `make artifacts`");
+    let entry = registry.manifest.model("vit").unwrap().clone();
+    let names = entry.clustered_names();
+    let weights = registry.weights("vit").unwrap().clone();
+
+    for (scheme, c) in [
+        (ClusterScheme::PerLayer, 64),
+        (ClusterScheme::Entire, 16),
+    ] {
+        let rust = Quantizer::new(c, scheme).run(&names, &weights).unwrap();
+        let python = registry.clustered("vit", scheme, c).unwrap();
+
+        // Reconstruction error must agree closely (identical algorithm,
+        // float32 vs float64 accumulation differences only).
+        let mse_rs = rust.quantization_mse(&weights).unwrap();
+        let mse_py = python.quantization_mse(&weights).unwrap();
+        let rel = (mse_rs - mse_py).abs() / mse_py;
+        assert!(
+            rel < 0.05,
+            "{} c={c}: rust mse {mse_rs:.4e} vs python {mse_py:.4e} ({rel:.3} rel)",
+            scheme.name()
+        );
+
+        // Centroid tables must align row-by-row.
+        let cb_rs = rust.codebooks.as_f32().unwrap();
+        let cb_py = python.codebooks.as_f32().unwrap();
+        assert_eq!(cb_rs.len(), cb_py.len());
+        let spread = cb_py
+            .iter()
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+            .max(1e-6);
+        let mut worst = 0.0f32;
+        for (a, b) in cb_rs.iter().zip(&cb_py) {
+            worst = worst.max((a - b).abs());
+        }
+        assert!(
+            worst < spread * 0.05,
+            "{} c={c}: centroid tables diverge (max |Δ| {worst}, spread {spread})",
+            scheme.name()
+        );
+    }
+}
+
+#[test]
+fn table_bytes_match_manifest() {
+    let mut registry = Registry::load("artifacts").unwrap();
+    let entry = registry.manifest.model("vit").unwrap().clone();
+    let names = entry.clustered_names();
+    let weights = registry.weights("vit").unwrap().clone();
+    for (scheme, c, key) in [
+        (ClusterScheme::Entire, 64, "entire_64"),
+        (ClusterScheme::PerLayer, 64, "perlayer_64"),
+    ] {
+        let rust = Quantizer::new(c, scheme).run(&names, &weights).unwrap();
+        assert_eq!(
+            rust.table_bytes(),
+            entry.table_bytes[key],
+            "table accounting must match the python manifest for {key}"
+        );
+    }
+}
+
+#[test]
+fn python_indices_reference_only_live_rows() {
+    // Every u8 index in the python artifact must be < n_clusters.
+    let registry = Registry::load("artifacts").unwrap();
+    let ct = registry
+        .clustered("vit", ClusterScheme::PerLayer, 16)
+        .unwrap();
+    for (name, t) in &ct.indices {
+        let max = t.as_u8().unwrap().iter().copied().max().unwrap_or(0);
+        assert!(max < 16, "{name}: index {max} out of range for c=16");
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration: the Rust runtime's numerics against the Python goldens.
+//!
+//! `aot.py` exported the first 32 validation images with logits computed
+//! through the pure-jnp reference model. Here the same images go through
+//! the PJRT-compiled kernel-path HLO; logits must agree to float
+//! tolerance for both the baseline and the clustered representation.
+
+use clusterformer::clustering::ClusterScheme;
+use clusterformer::coordinator::worker::VariantExecutor;
+use clusterformer::model::{Registry, VariantKey};
+use clusterformer::runtime::Engine;
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn check_model(model: &str) {
+    let engine = Engine::cpu().expect("pjrt cpu client");
+    let mut registry = Registry::load("artifacts").expect("artifacts (run `make artifacts`)");
+    let (images, _labels, base_golden, clus_golden) =
+        registry.goldens(model).expect("goldens");
+    let n = images.shape()[0];
+    let classes = base_golden.shape()[1];
+
+    // --- baseline ---
+    let exec = VariantExecutor::load(&engine, &mut registry, model, VariantKey::Baseline)
+        .expect("load baseline");
+    let golden = base_golden.as_f32().unwrap();
+    let mut worst = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + 8).min(n);
+        let chunk = images.slice_rows(i, hi).unwrap();
+        let (rows, _) = exec.execute(&chunk).expect("execute baseline");
+        for (j, row) in rows.iter().enumerate() {
+            let g = &golden[(i + j) * classes..(i + j + 1) * classes];
+            worst = worst.max(max_abs_diff(row, g));
+        }
+        i = hi;
+    }
+    assert!(
+        worst < 2e-3,
+        "{model} baseline logits diverge from python goldens: max |Δ| = {worst}"
+    );
+
+    // --- clustered perlayer/64 ---
+    let exec = VariantExecutor::load(
+        &engine,
+        &mut registry,
+        model,
+        VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
+    )
+    .expect("load clustered");
+    let golden = clus_golden.as_f32().unwrap();
+    let mut worst = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + 8).min(n);
+        let chunk = images.slice_rows(i, hi).unwrap();
+        let (rows, _) = exec.execute(&chunk).expect("execute clustered");
+        for (j, row) in rows.iter().enumerate() {
+            let g = &golden[(i + j) * classes..(i + j + 1) * classes];
+            worst = worst.max(max_abs_diff(row, g));
+        }
+        i = hi;
+    }
+    assert!(
+        worst < 2e-3,
+        "{model} clustered logits diverge from python goldens: max |Δ| = {worst}"
+    );
+}
+
+#[test]
+fn vit_matches_python_goldens() {
+    check_model("vit");
+}
+
+#[test]
+fn deit_matches_python_goldens() {
+    check_model("deit");
+}
+
+#[test]
+fn batch_padding_does_not_change_logits() {
+    // A 3-image batch rides in the 8-slot executable zero-padded; its
+    // logits must equal the same images in a full batch.
+    let engine = Engine::cpu().unwrap();
+    let mut registry = Registry::load("artifacts").unwrap();
+    let (images, _, _, _) = registry.goldens("vit").unwrap();
+    let exec =
+        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)
+            .unwrap();
+    let full = images.slice_rows(0, 8).unwrap();
+    let (rows_full, b_full) = exec.execute(&full).unwrap();
+    assert_eq!(b_full, 8);
+    let small = images.slice_rows(0, 3).unwrap();
+    let (rows_small, b_small) = exec.execute(&small).unwrap();
+    assert_eq!(b_small, 8); // padded to the 8-slot executable
+    assert_eq!(rows_small.len(), 3);
+    for (a, b) in rows_small.iter().zip(rows_full.iter().take(3)) {
+        assert!(max_abs_diff(a, b) < 1e-4);
+    }
+}
+
+#[test]
+fn single_image_batch_works() {
+    let engine = Engine::cpu().unwrap();
+    let mut registry = Registry::load("artifacts").unwrap();
+    let (images, _, _, _) = registry.goldens("vit").unwrap();
+    let exec =
+        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)
+            .unwrap();
+    let one = images.slice_rows(0, 1).unwrap();
+    let (rows, b) = exec.execute(&one).unwrap();
+    assert_eq!(b, 1); // the batch-1 executable, no padding
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].len(), exec.n_classes);
+}
