@@ -10,7 +10,7 @@
 use clusterformer::clustering::{ClusterScheme, Quantizer};
 use clusterformer::coordinator::eval::evaluate;
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::default_backend;
 
 fn main() -> anyhow::Result<()> {
     let mut registry = Registry::load("artifacts")?;
@@ -54,12 +54,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     // And the c=64 accuracy through the actual runtime.
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
     for key in [
         VariantKey::Baseline,
         VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
     ] {
-        let r = evaluate(&engine, &mut registry, "vit", key, 256)?;
+        let r = evaluate(backend.as_ref(), &mut registry, "vit", key, 256)?;
         println!(
             "runtime accuracy {}: top1={:.4} top5={:.4} ({:.1} img/s)",
             r.variant, r.top1, r.top5, r.images_per_s

@@ -10,12 +10,12 @@ use std::time::Instant;
 
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::Registry;
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{default_backend, Backend as _, Executor as _};
 use clusterformer::tensor::{Dtype, Tensor};
 
 fn main() -> anyhow::Result<()> {
     let registry = Registry::load("artifacts")?;
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
 
     for model in ["vit", "deit"] {
         let entry = registry.manifest.model(model)?;
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n== measured micro-kernel times (model shapes, batch 8) ==");
     let mut rows = Vec::new();
     for (op, (file, shapes)) in &registry.manifest.micro_hlo {
-        let exe = engine.load_hlo(registry.manifest.path(file))?;
+        let exe = backend.load_hlo(&registry.manifest.path(file))?;
         let inputs: Vec<Tensor> = shapes
             .iter()
             .map(|s| Tensor::zeros(Dtype::F32, s.clone()))

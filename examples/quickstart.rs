@@ -8,22 +8,22 @@
 use clusterformer::clustering::ClusterScheme;
 use clusterformer::coordinator::worker::VariantExecutor;
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{default_backend, Backend as _};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
     let mut registry = Registry::load("artifacts")?;
     let class_names = registry.manifest.class_names.clone();
     let (images, labels) = registry.val_set()?;
 
     println!("== clusterformer quickstart ==");
-    println!("platform: {}", engine.platform());
+    println!("backend: {}", backend.name());
 
     // Load both representations of the ViT.
     let baseline =
-        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)?;
+        VariantExecutor::load(backend.as_ref(), &mut registry, "vit", VariantKey::Baseline)?;
     let clustered = VariantExecutor::load(
-        &engine,
+        backend.as_ref(),
         &mut registry,
         "vit",
         VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },

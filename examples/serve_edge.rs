@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
     println!("starting server (compiles 2 variants x 3 batch sizes)...");
     let server = Server::start(ServerConfig {
         artifacts_dir: "artifacts".into(),
+        backend: clusterformer::runtime::BackendKind::from_env()?,
         targets: vec![
             ("vit".to_string(), VariantKey::Baseline),
             ("vit".to_string(), clustered),

@@ -1,8 +1,8 @@
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{default_backend, Backend as _, Executor as _, ResidentExecutor as _};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
     let mut registry = Registry::load("artifacts")?;
     let variant = registry.variant("vit", VariantKey::Baseline)?;
     let (images, _labels) = registry.val_set()?;
@@ -12,14 +12,14 @@ fn main() -> anyhow::Result<()> {
         println!("w[{i}] shape {:?} bytes {}", t.shape(), t.nbytes());
     }
     // literal path
-    let exe = engine.load_hlo(&variant.hlo_paths[&1])?;
+    let exe = backend.load_hlo(&variant.hlo_paths[&1])?;
     let mut inputs = vec![img1.clone()];
     inputs.extend(variant.weight_inputs.iter().cloned());
     println!("n inputs {}", inputs.len());
     let out = exe.run(&inputs)?;
     println!("literal path OK: out shape {:?}", out[0].shape());
     // resident path
-    let res = exe.with_resident(1, &variant.weight_inputs)?;
+    let res = exe.with_resident(1, std::sync::Arc::new(variant.weight_inputs.clone()))?;
     let out2 = res.run(std::slice::from_ref(&img1))?;
     println!("resident path OK: out {:?}", out2[0].shape());
     let a = out[0].as_f32()?;

@@ -26,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         // One server per policy so metrics are isolated.
         let server = Server::start(ServerConfig {
             artifacts_dir: "artifacts".into(),
+            backend: clusterformer::runtime::BackendKind::from_env()?,
             targets: vec![(
                 "vit".to_string(),
                 VariantKey::Clustered {

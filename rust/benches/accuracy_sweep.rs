@@ -6,15 +6,21 @@
 use clusterformer::clustering::ClusterScheme;
 use clusterformer::coordinator::eval::evaluate;
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::default_backend;
 
 pub fn run_sweep(model: &str, fig: &str, n_images: usize) -> anyhow::Result<()> {
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
     let mut registry = Registry::load("artifacts")?;
     let sweep = registry.manifest.cluster_sweep.clone();
 
     println!("# {fig} — {model} top-1/top-5 vs number of clusters ({n_images} images, Rust runtime)\n");
-    let base = evaluate(&engine, &mut registry, model, VariantKey::Baseline, n_images)?;
+    let base = evaluate(
+        backend.as_ref(),
+        &mut registry,
+        model,
+        VariantKey::Baseline,
+        n_images,
+    )?;
     println!(
         "baseline: top1={:.4} top5={:.4} ({:.1} img/s)\n",
         base.top1, base.top5, base.images_per_s
@@ -26,7 +32,7 @@ pub fn run_sweep(model: &str, fig: &str, n_images: usize) -> anyhow::Result<()> 
     for scheme in [ClusterScheme::Entire, ClusterScheme::PerLayer] {
         for &c in &sweep {
             let key = VariantKey::Clustered { scheme, clusters: c };
-            let r = evaluate(&engine, &mut registry, model, key, n_images)?;
+            let r = evaluate(backend.as_ref(), &mut registry, model, key, n_images)?;
             println!(
                 "| {} | {} | {:.4} | {:+.2} | {:.4} | {:+.2} |",
                 scheme.name(),

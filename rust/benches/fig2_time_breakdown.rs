@@ -12,12 +12,12 @@
 use clusterformer::bench::{BenchConfig, BenchRunner};
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::Registry;
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{default_backend, Backend as _, Executor as _};
 use clusterformer::tensor::{Dtype, Tensor};
 
 fn main() -> anyhow::Result<()> {
     let registry = Registry::load("artifacts")?;
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
 
     println!("# Fig. 2 — execution-time breakdown\n");
     for model in ["deit", "vit"] {
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     names.sort();
     for op in &names {
         let (file, shapes) = &registry.manifest.micro_hlo[op];
-        let exe = engine.load_hlo(registry.manifest.path(file))?;
+        let exe = backend.load_hlo(&registry.manifest.path(file))?;
         let inputs: Vec<Tensor> = shapes
             .iter()
             .map(|s| Tensor::zeros(Dtype::F32, s.clone()))

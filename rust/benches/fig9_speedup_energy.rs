@@ -14,7 +14,7 @@ use clusterformer::bench::{BenchConfig, BenchRunner};
 use clusterformer::clustering::ClusterScheme;
 use clusterformer::coordinator::worker::VariantExecutor;
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::default_backend;
 use clusterformer::simulator::profile::build_sim;
 use clusterformer::simulator::PlatformKind;
 
@@ -66,8 +66,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Measured CPU data point: clustered vs baseline HLO wall time.
-    println!("## measured CPU-runtime sanity point (batch 8, PJRT CPU)\n");
-    let engine = Engine::cpu()?;
+    println!("## measured CPU-runtime sanity point (batch 8)\n");
+    let backend = default_backend()?;
     let (images, _) = registry.val_set()?;
     let batch = images.slice_rows(0, 8)?;
     let mut runner = BenchRunner::new(BenchConfig::heavy());
@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
         ),
     ] {
-        let exec = VariantExecutor::load(&engine, &mut registry, "vit", key)?;
+        let exec = VariantExecutor::load(backend.as_ref(), &mut registry, "vit", key)?;
         runner.bench_items(label, 8.0, || exec.execute(&batch).unwrap());
     }
     let base = runner.results[0].summary.mean;

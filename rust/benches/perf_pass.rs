@@ -17,10 +17,10 @@ use clusterformer::coordinator::{
 };
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{default_backend, Backend as _, Executor as _, ResidentExecutor as _};
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::cpu()?;
+    let backend = default_backend()?;
     let mut registry = Registry::load("artifacts")?;
     let (images, _) = registry.val_set()?;
     let batch8 = images.slice_rows(0, 8)?;
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         let module = HloModule::parse_file(&file)?;
         let cost = CostAnalysis::of(&module)?;
         let n_instr: usize = cost.opcode_counts.values().sum();
-        let exe = engine.load_hlo(&file)?;
+        let exe = backend.load_hlo(std::path::Path::new(&file))?;
         let r = runner.bench_items(label, 8.0, || exe.run(&inputs).unwrap());
         l2_rows.push((label, r.summary.mean, n_instr, cost.fusion_count()));
     }
@@ -95,8 +95,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---- L3: resident weights vs per-call upload ------------------------
     println!("## L3: resident device weights vs per-call weight upload (batch 8)\n");
-    let exe = engine.load_hlo("artifacts/vit_8_baseline.hlo.txt")?;
-    let resident = exe.with_resident(1, &variant.weight_inputs)?;
+    let exe = backend.load_hlo(std::path::Path::new("artifacts/vit_8_baseline.hlo.txt"))?;
+    let resident =
+        exe.with_resident(1, std::sync::Arc::new(variant.weight_inputs.clone()))?;
+    resident.warmup()?;
     let mut full_inputs = vec![batch8.clone()];
     full_inputs.extend(variant.weight_inputs.iter().cloned());
     let r_upload = runner
@@ -118,8 +120,12 @@ fn main() -> anyhow::Result<()> {
 
     // ---- L3: coordinator overhead ---------------------------------------
     println!("## L3: coordinator overhead vs raw executor (batch 8, closed loop)\n");
-    let exec =
-        VariantExecutor::load(&engine, &mut registry, "vit", VariantKey::Baseline)?;
+    let exec = VariantExecutor::load(
+        backend.as_ref(),
+        &mut registry,
+        "vit",
+        VariantKey::Baseline,
+    )?;
     exec.warmup(&[8])?;
     let raw = runner
         .bench_items("raw-executor-batch8", 8.0, || exec.execute(&batch8).unwrap())
@@ -129,6 +135,7 @@ fn main() -> anyhow::Result<()> {
     let server = Server::start(ServerConfig {
         artifacts_dir: "artifacts".into(),
         targets: vec![("vit".to_string(), VariantKey::Baseline)],
+        backend: clusterformer::runtime::BackendKind::from_env()?,
         batcher: BatcherConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(100),

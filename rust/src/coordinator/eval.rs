@@ -9,7 +9,7 @@ use anyhow::Result;
 use super::worker::VariantExecutor;
 use crate::model::registry::topk_accuracy;
 use crate::model::{Registry, VariantKey};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 
 /// Accuracy + timing for one variant over a validation set.
@@ -29,7 +29,7 @@ pub struct EvalResult {
 /// Evaluate `model`/`key` on `n` images of the validation set (0 = all),
 /// batching at the largest compiled batch size.
 pub fn evaluate(
-    engine: &Engine,
+    backend: &dyn Backend,
     registry: &mut Registry,
     model: &str,
     key: VariantKey,
@@ -38,7 +38,7 @@ pub fn evaluate(
     let (images, labels) = registry.val_set()?;
     let total = images.shape()[0];
     let n = if n == 0 { total } else { n.min(total) };
-    let exec = VariantExecutor::load(engine, registry, model, key)?;
+    let exec = VariantExecutor::load(backend, registry, model, key)?;
     let batch = *exec.batch_sizes.last().unwrap();
 
     let t0 = Instant::now();

@@ -1,12 +1,13 @@
 //! The serving coordinator — the L3 system contribution adapted to this
 //! paper: an edge-device inference server whose hot path runs clustered
-//! models through the PJRT runtime.
+//! models through a pluggable execution backend (the pure-Rust HLO
+//! interpreter by default, PJRT behind the `pjrt` feature).
 //!
 //! Pipeline: [`server::Server`] accepts requests → admission control →
 //! per-variant queues → [`batcher::DynamicBatcher`] forms batches under a
 //! size/deadline policy → a worker thread (one per simulated accelerator;
 //! PJRT objects are not `Send`, and an edge SoC has one accelerator)
-//! executes via [`crate::runtime::ResidentExecutable`] → responses flow
+//! executes via [`crate::runtime::ResidentExecutor`] → responses flow
 //! back through per-request channels while [`metrics::Metrics`] records
 //! latency histograms and throughput.
 

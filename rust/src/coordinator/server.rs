@@ -14,6 +14,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::Router;
 use super::worker::{run_worker, WorkerConfig, WorkerMsg};
 use crate::model::VariantKey;
+use crate::runtime::BackendKind;
 
 /// What to serve.
 #[derive(Clone)]
@@ -21,6 +22,8 @@ pub struct ServerConfig {
     pub artifacts_dir: PathBuf,
     /// (model, variant) pairs; each gets a dedicated worker.
     pub targets: Vec<(String, VariantKey)>,
+    /// Execution backend every worker uses (default: the interpreter).
+    pub backend: BackendKind,
     pub batcher: BatcherConfig,
 }
 
@@ -48,6 +51,7 @@ impl Server {
                 artifacts_dir: config.artifacts_dir.clone(),
                 model: model.clone(),
                 variant: *variant,
+                backend: config.backend,
                 batcher: config.batcher.clone(),
             };
             let m = metrics.clone();

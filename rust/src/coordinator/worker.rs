@@ -1,21 +1,24 @@
-//! Variant worker: one thread that owns the PJRT state for one model
-//! variant and drains its request queue through the dynamic batcher.
+//! Variant worker: one thread that owns the execution state for one
+//! model variant and drains its request queue through the dynamic
+//! batcher.
 //!
-//! PJRT objects are not `Send` (the xla crate wraps `Rc` handles), so all
-//! runtime state is constructed *inside* the worker thread — which also
-//! matches the hardware reality: an edge SoC has a single accelerator.
+//! All runtime state is constructed *inside* the worker thread: PJRT
+//! objects are not `Send` (the xla crate wraps `Rc` handles), and the
+//! layout also matches the hardware reality — an edge SoC has a single
+//! accelerator. The interpreter backend has no such constraint but uses
+//! the same single-owner layout.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{ClassRequest, ClassResponse};
 use crate::model::{Registry, VariantKey};
-use crate::runtime::{Engine, ResidentExecutable};
+use crate::runtime::{backend, Backend, BackendKind, Executor as _, ResidentExecutor};
 use crate::tensor::Tensor;
 
 /// Messages into a worker.
@@ -31,24 +34,22 @@ pub struct WorkerConfig {
     pub artifacts_dir: std::path::PathBuf,
     pub model: String,
     pub variant: VariantKey,
+    pub backend: BackendKind,
     pub batcher: BatcherConfig,
 }
 
-/// The compiled execution state for one variant (lives on the worker
-/// thread). Public so benches/examples can drive it synchronously.
+/// The execution state for one variant (lives on the worker thread).
+/// Public so benches/examples can drive it synchronously.
 ///
-/// Executables are compiled **lazily per batch size** on first use:
-/// interpret-mode Pallas modules are large and PJRT compilation takes
-/// tens of seconds each, so an eval that only ever runs batch-32 should
-/// not pay for batch-1 and batch-8 (§Perf: 3x startup reduction).
+/// One weight-resident executor per available batch size, created at
+/// load time through the [`Backend`] trait. Expensive compilation is the
+/// backend's business (PJRT defers it per batch size until first use —
+/// see `runtime::pjrt`); call [`VariantExecutor::warmup`] to force it.
 pub struct VariantExecutor {
     pub label: String,
     /// Batch sizes with an available HLO artifact, ascending.
     pub batch_sizes: Vec<usize>,
-    engine: Engine,
-    hlo_paths: Vec<std::path::PathBuf>,
-    weight_inputs: Vec<Tensor>,
-    executables: std::cell::RefCell<Vec<Option<std::rc::Rc<ResidentExecutable>>>>,
+    residents: Vec<Box<dyn ResidentExecutor>>,
     pub img_shape: [usize; 3],
     pub n_classes: usize,
     pub weight_stream_bytes: usize,
@@ -56,10 +57,9 @@ pub struct VariantExecutor {
 }
 
 impl VariantExecutor {
-    /// Load artifacts; compilation is deferred to first use per batch
-    /// size. Use [`VariantExecutor::warmup`] to pre-compile.
+    /// Load artifacts and bind the weight inputs through `backend`.
     pub fn load(
-        engine: &Engine,
+        backend: &dyn Backend,
         registry: &mut Registry,
         model: &str,
         key: VariantKey,
@@ -67,23 +67,23 @@ impl VariantExecutor {
         let variant = registry.variant(model, key)?;
         let entry = registry.manifest.model(model)?;
         let img = entry.config.img_size;
-        let mut batch_sizes: Vec<usize> =
-            variant.hlo_paths.keys().copied().collect();
+        let mut batch_sizes: Vec<usize> = variant.hlo_paths.keys().copied().collect();
         batch_sizes.sort_unstable();
         if batch_sizes.is_empty() {
             return Err(anyhow!("{model}/{}: no HLO artifacts", key.label()));
         }
-        let hlo_paths = batch_sizes
-            .iter()
-            .map(|b| variant.hlo_paths[b].clone())
-            .collect();
+        // One shared host copy of the weights for every batch size.
+        let weights = Arc::new(variant.weight_inputs);
+        let mut residents = Vec::with_capacity(batch_sizes.len());
+        for b in &batch_sizes {
+            let exe = backend.load_hlo(&variant.hlo_paths[b])?;
+            // dynamic inputs: just the image batch (1 tensor)
+            residents.push(exe.with_resident(1, weights.clone())?);
+        }
         Ok(Self {
             label: format!("{model}/{}", key.label()),
-            executables: std::cell::RefCell::new(vec![None; batch_sizes.len()]),
             batch_sizes,
-            engine: engine.clone(),
-            hlo_paths,
-            weight_inputs: variant.weight_inputs,
+            residents,
             img_shape: [img, img, 3],
             n_classes: entry.config.n_classes,
             weight_stream_bytes: variant.weight_stream_bytes,
@@ -91,8 +91,8 @@ impl VariantExecutor {
         })
     }
 
-    /// Pre-compile the executable(s) for the given batch sizes (all if
-    /// empty) so first-request latency is steady-state.
+    /// Force compilation/upload for the given batch sizes (all if empty)
+    /// so first-request latency is steady-state.
     pub fn warmup(&self, batch_sizes: &[usize]) -> Result<()> {
         let sizes: Vec<usize> = if batch_sizes.is_empty() {
             self.batch_sizes.clone()
@@ -100,7 +100,7 @@ impl VariantExecutor {
             batch_sizes.to_vec()
         };
         for b in sizes {
-            self.executable_for(b)?;
+            self.resident_for(b)?.warmup()?;
         }
         Ok(())
     }
@@ -114,30 +114,13 @@ impl VariantExecutor {
             .unwrap_or(self.batch_sizes.last().unwrap())
     }
 
-    fn executable_for(&self, b: usize) -> Result<std::rc::Rc<ResidentExecutable>> {
+    fn resident_for(&self, b: usize) -> Result<&dyn ResidentExecutor> {
         let idx = self
             .batch_sizes
             .iter()
             .position(|&x| x == b)
             .ok_or_else(|| anyhow!("{}: no executable for batch {b}", self.label))?;
-        if let Some(exe) = &self.executables.borrow()[idx] {
-            return Ok(exe.clone());
-        }
-        let t0 = std::time::Instant::now();
-        let exe = self
-            .engine
-            .load_hlo(&self.hlo_paths[idx])
-            .with_context(|| format!("loading {} b={b}", self.label))?;
-        // dynamic inputs: just the image batch (1 tensor)
-        let resident =
-            std::rc::Rc::new(exe.with_resident(1, &self.weight_inputs)?);
-        crate::log_debug!(
-            "{}: compiled batch-{b} executable in {:.2}s",
-            self.label,
-            t0.elapsed().as_secs_f64()
-        );
-        self.executables.borrow_mut()[idx] = Some(resident.clone());
-        Ok(resident)
+        Ok(self.residents[idx].as_ref())
     }
 
     /// Run `images` (a [n, H, W, 3] batch, n <= max batch size) and return
@@ -145,7 +128,7 @@ impl VariantExecutor {
     pub fn execute(&self, images: &Tensor) -> Result<(Vec<Vec<f32>>, usize)> {
         let n = images.shape()[0];
         let b = self.pick_batch_size(n);
-        let exe = self.executable_for(b)?;
+        let exe = self.resident_for(b)?;
         // Skip the pad copy when the batch already matches a compiled size.
         let out = if n == b {
             exe.run(std::slice::from_ref(images))?
@@ -206,12 +189,12 @@ pub fn run_worker(
     metrics: Arc<Metrics>,
     ready: Sender<Result<()>>,
 ) {
-    // All PJRT state is built on this thread.
+    // All backend state is built on this thread (PJRT is not Send).
     let setup = (|| -> Result<(VariantExecutor, DynamicBatcher)> {
-        let engine = Engine::cpu()?;
+        let backend = backend(config.backend)?;
         let mut registry = Registry::load(&config.artifacts_dir)?;
         let exec = VariantExecutor::load(
-            &engine,
+            backend.as_ref(),
             &mut registry,
             &config.model,
             config.variant,

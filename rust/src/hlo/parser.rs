@@ -49,16 +49,32 @@ impl HloShape {
     }
 }
 
-/// Element size for HLO dtype strings.
-pub fn dtype_bytes(dtype: &str) -> usize {
-    match dtype {
+/// Element size for HLO dtype strings; `None` for dtypes this parser
+/// does not know.
+pub fn try_dtype_bytes(dtype: &str) -> Option<usize> {
+    Some(match dtype {
         "pred" | "s8" | "u8" => 1,
         "s16" | "u16" | "f16" | "bf16" => 2,
         "s32" | "u32" | "f32" => 4,
         "s64" | "u64" | "f64" | "c64" => 8,
         "c128" => 16,
-        _ => 4, // unknown: assume word-sized
-    }
+        _ => return None,
+    })
+}
+
+/// Element size for HLO dtype strings. Unknown dtypes fall back to 4
+/// bytes but log a loud warning — a silent guess here would quietly
+/// mis-size every downstream traffic/memory estimate (the quantity the
+/// paper's whole evaluation hinges on). Prefer [`try_dtype_bytes`] when
+/// an unknown dtype should be an error.
+pub fn dtype_bytes(dtype: &str) -> usize {
+    try_dtype_bytes(dtype).unwrap_or_else(|| {
+        crate::log_warn!(
+            "unknown HLO dtype {dtype:?}: assuming 4 bytes — cost analysis \
+             and traffic estimates involving this dtype are unreliable"
+        );
+        4
+    })
 }
 
 /// One HLO instruction.
@@ -275,8 +291,10 @@ fn parse_instruction(line: &str) -> Result<Option<HloInstruction>> {
             .filter(|s| !s.is_empty())
             .collect()
     };
-    // parameter index lives in the parens; keep it in attrs for parameters
-    let attrs = if opcode == "parameter" {
+    // The parens carry the parameter index for `parameter` and the
+    // literal payload for `constant`; keep both in attrs (the runtime
+    // interpreter materializes constants from it).
+    let attrs = if opcode == "parameter" || opcode == "constant" {
         format!("({operands_str}){attrs}")
     } else {
         attrs
@@ -412,6 +430,19 @@ ENTRY %main.7 (Arg_0.1: f32[2,2], Arg_1.2: f32[2,2]) -> (f32[2,2]) {
         assert!(dot.attrs.contains("lhs_contracting_dims={1}"));
         assert_eq!(dot.shape.dims, vec![2, 2]);
         assert!(e.instructions[5].is_root);
+        // constants keep their literal payload in attrs
+        let c = &e.instructions[3];
+        assert_eq!(c.opcode, "constant");
+        assert!(c.attrs.starts_with("(2)"), "attrs = {:?}", c.attrs);
+    }
+
+    #[test]
+    fn dtype_bytes_unknown_is_not_silent() {
+        assert_eq!(try_dtype_bytes("f32"), Some(4));
+        assert_eq!(try_dtype_bytes("bf16"), Some(2));
+        assert_eq!(try_dtype_bytes("f8e4m3"), None);
+        // the lenient path still answers (with a logged warning)
+        assert_eq!(dtype_bytes("f8e4m3"), 4);
     }
 
     #[test]

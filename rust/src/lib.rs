@@ -9,15 +9,25 @@
 //!
 //! Architecture (see `DESIGN.md`): Python/JAX/Pallas authors and AOT-lowers
 //! the models at build time; this crate is the *runtime* — it loads the
-//! HLO artifacts through the PJRT C API and serves batched classification
-//! requests, and it models the paper's three hardware platforms to
-//! reproduce the speedup/energy evaluation.
+//! HLO artifacts through a pluggable execution backend and serves batched
+//! classification requests, and it models the paper's three hardware
+//! platforms to reproduce the speedup/energy evaluation.
+//!
+//! Execution backends (`--backend interp|pjrt`):
+//! * **interp** (default) — a pure-Rust HLO interpreter with zero native
+//!   dependencies: the self-contained CPU path a resource-constrained
+//!   edge device can actually run.
+//! * **pjrt** (cargo feature `pjrt`) — the XLA-compiled path for
+//!   machines with a native XLA install.
 //!
 //! Module map:
 //! * [`util`] — std-only substrates (JSON, RNG, CLI, logging, stats).
 //! * [`tensor`] — dtype-tagged tensors + the `.tpak` interchange format.
 //! * [`hlo`] — HLO-text parser and FLOP/byte cost analysis.
-//! * [`runtime`] — PJRT engine: load, compile, execute AOT artifacts.
+//! * [`runtime`] — pluggable execution backends behind the
+//!   `Backend`/`Executor`/`ResidentExecutor` traits: `runtime::interp`
+//!   (pure-Rust HLO interpreter, default) and `runtime::pjrt` (feature
+//!   `pjrt`).
 //! * [`clustering`] — K-means compression toolkit (mirrors the Python
 //!   pipeline; lets a user compress new weight files without Python).
 //! * [`model`] — artifact manifest and model registry.
@@ -38,7 +48,9 @@ pub mod tensor;
 pub mod testing;
 pub mod util;
 
-/// Re-export of the PJRT bindings for advanced embedding use cases.
+/// Re-export of the PJRT bindings for advanced embedding use cases
+/// (only with the `pjrt` cargo feature).
+#[cfg(feature = "pjrt")]
 pub use xla;
 
 /// Crate-wide result type.

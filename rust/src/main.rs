@@ -20,7 +20,7 @@ use clusterformer::coordinator::{
 };
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::Engine;
+use clusterformer::runtime::{backend, BackendKind};
 use clusterformer::simulator::{profile::build_sim, simulate_inference};
 use clusterformer::util::cli::{Cli, Command};
 use clusterformer::util::rng::Pcg32;
@@ -37,6 +37,7 @@ fn cli() -> Cli {
                 .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
                 .opt("model", "vit", "model name (vit|deit)")
                 .opt("variant", "baseline", "baseline | {entire|perlayer}_{c}")
+                .opt("backend", "interp", "execution backend: interp | pjrt")
                 .opt("n", "0", "images to evaluate (0 = all)"),
         )
         .command(
@@ -44,6 +45,7 @@ fn cli() -> Cli {
                 .opt("artifacts", ARTIFACTS_DIR, "artifacts directory")
                 .opt("model", "vit", "model name")
                 .opt("variant", "perlayer_64", "variant to serve")
+                .opt("backend", "interp", "execution backend: interp | pjrt")
                 .opt("rate", "20", "request rate (req/s)")
                 .opt("duration", "10", "seconds of load")
                 .opt("max-batch", "8", "dynamic batcher max batch")
@@ -150,11 +152,11 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
 }
 
 fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
-    let engine = Engine::cpu()?;
+    let backend = backend(BackendKind::parse(args.str("backend")?)?)?;
     let mut registry = Registry::load(args.str("artifacts")?)?;
     let key = VariantKey::parse(args.str("variant")?)?;
     let r = evaluate(
-        &engine,
+        backend.as_ref(),
         &mut registry,
         args.str("model")?,
         key,
@@ -185,6 +187,7 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
     let server = Server::start(ServerConfig {
         artifacts_dir: args.str("artifacts")?.into(),
         targets: vec![(model.clone(), variant)],
+        backend: BackendKind::parse(args.str("backend")?)?,
         batcher: BatcherConfig {
             max_batch: args.usize("max-batch")?,
             max_wait: Duration::from_millis(args.usize("max-wait-ms")? as u64),

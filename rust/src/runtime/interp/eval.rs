@@ -1,0 +1,709 @@
+//! The evaluation loop: walk the entry computation in program order,
+//! binding each instruction's result in an environment keyed by
+//! instruction name. HLO text is already topologically ordered, so a
+//! single forward pass suffices.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ops;
+use crate::hlo::parser::{HloInstruction, HloModule};
+use crate::tensor::{Dtype, Tensor};
+
+/// Ops the interpreter evaluates. Kept adjacent to the dispatch match in
+/// [`eval_instruction`]; update both together.
+const SUPPORTED: &[&str] = &[
+    "parameter",
+    "constant",
+    "copy",
+    "reshape",
+    "convert",
+    "exponential",
+    "log",
+    "sqrt",
+    "rsqrt",
+    "tanh",
+    "negate",
+    "abs",
+    "logistic",
+    "erf",
+    "floor",
+    "ceil",
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "maximum",
+    "minimum",
+    "power",
+    "and",
+    "or",
+    "xor",
+    "compare",
+    "select",
+    "broadcast",
+    "transpose",
+    "slice",
+    "concatenate",
+    "dot",
+    "convolution",
+    "reduce",
+    "gather",
+    "iota",
+    "tuple",
+    "get-tuple-element",
+];
+
+/// Reject modules using ops outside the supported subset, listing the
+/// offenders, before any evaluation starts.
+pub(crate) fn preflight(module: &HloModule) -> Result<()> {
+    let entry = module.entry()?;
+    let mut unsupported: Vec<&str> = entry
+        .instructions
+        .iter()
+        .map(|i| i.opcode.as_str())
+        .filter(|op| !SUPPORTED.contains(op))
+        .collect();
+    if !unsupported.is_empty() {
+        unsupported.sort_unstable();
+        unsupported.dedup();
+        bail!(
+            "interp backend does not support opcodes: {} (build with \
+             --features pjrt and run --backend pjrt for full HLO coverage)",
+            unsupported.join(", ")
+        );
+    }
+    Ok(())
+}
+
+/// Map an HLO dtype string onto the host tensor dtype.
+pub(crate) fn host_dtype(s: &str) -> Result<Dtype> {
+    Ok(match s {
+        "f32" => Dtype::F32,
+        "u8" | "pred" => Dtype::U8,
+        "s32" => Dtype::I32,
+        "s64" => Dtype::I64,
+        other => bail!("interp: unsupported HLO dtype {other:?}"),
+    })
+}
+
+/// One evaluated value. Almost everything is a single array; tuples
+/// appear at the root (`return_tuple=True`) and at explicit `tuple` /
+/// `get-tuple-element` instructions. Parameters stay **borrowed** from
+/// the caller's input slice so a run never copies the resident weight
+/// set (which dwarfs the activations for these models).
+#[derive(Debug)]
+enum Value<'a> {
+    Borrowed(&'a Tensor),
+    Owned(Tensor),
+    Tuple(Vec<Tensor>),
+}
+
+impl Value<'_> {
+    fn tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::Borrowed(t) => Ok(t),
+            Value::Owned(t) => Ok(t),
+            Value::Tuple(_) => Err(anyhow!("expected an array value, got a tuple")),
+        }
+    }
+}
+
+/// Evaluate the module's entry computation on positional `inputs`;
+/// returns the decomposed root tuple (or the single root array).
+pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let entry = module.entry()?;
+    let params = module.parameters()?;
+    if inputs.len() != params.len() {
+        bail!(
+            "{}: expected {} inputs, got {}",
+            module.name,
+            params.len(),
+            inputs.len()
+        );
+    }
+    let mut env: HashMap<&str, Value<'_>> =
+        HashMap::with_capacity(entry.instructions.len());
+    for ((name, shape), &input) in params.iter().zip(inputs) {
+        if input.shape() != shape.dims.as_slice() {
+            bail!(
+                "parameter {name}: expected shape {:?}, got {:?}",
+                shape.dims,
+                input.shape()
+            );
+        }
+        let want = host_dtype(&shape.dtype)?;
+        if input.dtype() != want {
+            bail!(
+                "parameter {name}: expected dtype {}, got {}",
+                want.name(),
+                input.dtype().name()
+            );
+        }
+        env.insert(name.as_str(), Value::Borrowed(input));
+    }
+
+    let mut root: Option<&HloInstruction> = None;
+    for inst in &entry.instructions {
+        if inst.opcode != "parameter" {
+            let value = eval_instruction(module, inst, &env)
+                .with_context(|| format!("evaluating %{} = {}", inst.name, inst.opcode))?;
+            check_declared_shape(inst, &value)?;
+            env.insert(inst.name.as_str(), value);
+        }
+        if inst.is_root {
+            root = Some(inst);
+        }
+    }
+    let root = root
+        .or_else(|| entry.instructions.last())
+        .ok_or_else(|| anyhow!("entry computation has no instructions"))?;
+    match env.remove(root.name.as_str()) {
+        Some(Value::Tuple(ts)) => Ok(ts),
+        Some(Value::Owned(t)) => Ok(vec![t]),
+        Some(Value::Borrowed(t)) => Ok(vec![t.clone()]),
+        None => bail!("root %{} was never evaluated", root.name),
+    }
+}
+
+/// Every kernel's result is checked against the instruction's declared
+/// shape/dtype — this turns kernel bugs and unsupported attribute
+/// variants into loud errors instead of silent numeric drift.
+fn check_declared_shape(inst: &HloInstruction, value: &Value<'_>) -> Result<()> {
+    match value {
+        Value::Tuple(ts) => {
+            if inst.shape.is_tuple() && inst.shape.tuple.len() != ts.len() {
+                bail!(
+                    "%{}: produced {} tuple elements, declared {}",
+                    inst.name,
+                    ts.len(),
+                    inst.shape.tuple.len()
+                );
+            }
+        }
+        value => {
+            let t = value.tensor()?;
+            if t.shape() != inst.shape.dims.as_slice() {
+                bail!(
+                    "%{}: produced shape {:?}, declared {:?}",
+                    inst.name,
+                    t.shape(),
+                    inst.shape.dims
+                );
+            }
+            let want = host_dtype(&inst.shape.dtype)?;
+            if t.dtype() != want {
+                bail!(
+                    "%{}: produced dtype {}, declared {}",
+                    inst.name,
+                    t.dtype().name(),
+                    want.name()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn lookup<'e, 'a>(
+    env: &'e HashMap<&str, Value<'a>>,
+    inst: &HloInstruction,
+    i: usize,
+) -> Result<&'e Value<'a>> {
+    let name = inst
+        .operands
+        .get(i)
+        .ok_or_else(|| anyhow!("missing operand {i}"))?;
+    env.get(name.as_str())
+        .ok_or_else(|| anyhow!("undefined operand %{name}"))
+}
+
+fn eval_instruction<'a>(
+    module: &HloModule,
+    inst: &HloInstruction,
+    env: &HashMap<&str, Value<'a>>,
+) -> Result<Value<'a>> {
+    let value = |i: usize| lookup(env, inst, i);
+    let operand = |i: usize| lookup(env, inst, i).and_then(Value::tensor);
+    let attrs = inst.attrs.as_str();
+
+    // Non-array results first.
+    match inst.opcode.as_str() {
+        "tuple" => {
+            let mut ts = Vec::with_capacity(inst.operands.len());
+            for i in 0..inst.operands.len() {
+                ts.push(operand(i)?.clone());
+            }
+            return Ok(Value::Tuple(ts));
+        }
+        "get-tuple-element" => {
+            let idx = attr_int(attrs, "index")
+                .ok_or_else(|| anyhow!("get-tuple-element without index"))?
+                as usize;
+            return match value(0)? {
+                Value::Tuple(ts) => ts
+                    .get(idx)
+                    .cloned()
+                    .map(Value::Owned)
+                    .ok_or_else(|| anyhow!("tuple index {idx} out of range")),
+                _ => bail!("get-tuple-element of a non-tuple"),
+            };
+        }
+        _ => {}
+    }
+
+    let t = match inst.opcode.as_str() {
+        "constant" => ops::constant(&inst.shape, attrs)?,
+        "copy" | "reshape" => {
+            let mut t = operand(0)?.clone();
+            t.reshape(inst.shape.dims.clone())?;
+            t
+        }
+        "convert" => ops::convert(operand(0)?, host_dtype(&inst.shape.dtype)?)?,
+        "exponential" => ops::unary_f32(operand(0)?, f32::exp)?,
+        "log" => ops::unary_f32(operand(0)?, f32::ln)?,
+        "sqrt" => ops::unary_f32(operand(0)?, f32::sqrt)?,
+        "rsqrt" => ops::unary_f32(operand(0)?, |x| 1.0 / x.sqrt())?,
+        "tanh" => ops::unary_f32(operand(0)?, f32::tanh)?,
+        "negate" => ops::unary_f32(operand(0)?, |x| -x)?,
+        "abs" => ops::unary_f32(operand(0)?, f32::abs)?,
+        "logistic" => ops::unary_f32(operand(0)?, |x| 1.0 / (1.0 + (-x).exp()))?,
+        "erf" => ops::unary_f32(operand(0)?, ops::erf)?,
+        "floor" => ops::unary_f32(operand(0)?, f32::floor)?,
+        "ceil" => ops::unary_f32(operand(0)?, f32::ceil)?,
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+        | "and" | "or" | "xor" => ops::binary(operand(0)?, operand(1)?, &inst.opcode)?,
+        "compare" => {
+            let direction = attr_str(attrs, "direction")
+                .ok_or_else(|| anyhow!("compare without direction"))?;
+            ops::compare(operand(0)?, operand(1)?, direction)?
+        }
+        "select" => ops::select(operand(0)?, operand(1)?, operand(2)?)?,
+        "broadcast" => ops::broadcast(
+            operand(0)?,
+            &inst.shape.dims,
+            &attr_list(attrs, "dimensions").unwrap_or_default(),
+        )?,
+        "transpose" => {
+            let perm = attr_list(attrs, "dimensions")
+                .ok_or_else(|| anyhow!("transpose without dimensions"))?;
+            ops::transpose(operand(0)?, &perm)?
+        }
+        "slice" => ops::slice(operand(0)?, attrs)?,
+        "concatenate" => {
+            let dim = attr_list(attrs, "dimensions")
+                .and_then(|d| d.first().copied())
+                .ok_or_else(|| anyhow!("concatenate without dimensions"))?;
+            let mut parts = Vec::with_capacity(inst.operands.len());
+            for i in 0..inst.operands.len() {
+                parts.push(operand(i)?);
+            }
+            ops::concatenate(&parts, dim)?
+        }
+        "dot" => ops::dot(operand(0)?, operand(1)?, attrs)?,
+        "convolution" => ops::convolution(operand(0)?, operand(1)?, attrs)?,
+        "reduce" => {
+            if inst.operands.len() != 2 {
+                bail!("interp: only single-array reduce is supported");
+            }
+            let dims = attr_list(attrs, "dimensions")
+                .ok_or_else(|| anyhow!("reduce without dimensions"))?;
+            let to_apply = attr_str(attrs, "to_apply")
+                .ok_or_else(|| anyhow!("reduce without to_apply"))?;
+            let op = reducer_op(module, to_apply)?;
+            ops::reduce(operand(0)?, operand(1)?, &dims, op)?
+        }
+        "gather" => ops::gather(operand(0)?, operand(1)?, attrs)?,
+        "iota" => {
+            let dim = attr_int(attrs, "iota_dimension").unwrap_or(0) as usize;
+            ops::iota(&inst.shape, dim)?
+        }
+        op => bail!("interp backend does not support opcode {op:?}"),
+    };
+    Ok(Value::Owned(t))
+}
+
+/// Classify a reduce body structurally: the subcomputation's root must be
+/// a single supported binary op over its two parameters.
+fn reducer_op(module: &HloModule, to_apply: &str) -> Result<ops::ReduceOp> {
+    let name = to_apply.trim_start_matches('%');
+    let comp = module
+        .computations
+        .iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow!("reduce body {name:?} not found"))?;
+    let root = comp
+        .instructions
+        .iter()
+        .find(|i| i.is_root)
+        .or_else(|| comp.instructions.last())
+        .ok_or_else(|| anyhow!("reduce body {name:?} is empty"))?;
+    Ok(match root.opcode.as_str() {
+        "add" => ops::ReduceOp::Add,
+        "multiply" => ops::ReduceOp::Mul,
+        "maximum" => ops::ReduceOp::Max,
+        "minimum" => ops::ReduceOp::Min,
+        op => bail!("interp: unsupported reduce body op {op:?} in {name:?}"),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Attribute-text helpers. `HloInstruction::attrs` is the raw text after
+// the operand list, e.g. `dimensions={0,1}, to_apply=%region_0.7`.
+// ---------------------------------------------------------------------
+
+/// Position of `pat` in `attrs` at a key boundary (not mid-identifier,
+/// so `index=` does not match inside `start_index_map=`).
+fn find_key(attrs: &str, pat: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(pos) = attrs[from..].find(pat).map(|p| p + from) {
+        let at_boundary = pos == 0 || {
+            let c = attrs.as_bytes()[pos - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if at_boundary {
+            return Some(pos);
+        }
+        from = pos + 1;
+    }
+    None
+}
+
+/// Parse `key={a,b,c}` into a list (empty braces -> empty list).
+pub(crate) fn attr_list(attrs: &str, key: &str) -> Option<Vec<usize>> {
+    let pat = format!("{key}={{");
+    let start = find_key(attrs, &pat)? + pat.len();
+    let end = start + attrs[start..].find('}')?;
+    let body = attrs[start..end].trim();
+    if body.is_empty() {
+        return Some(Vec::new());
+    }
+    body.split(',')
+        .map(|t| t.trim().parse::<usize>().ok())
+        .collect()
+}
+
+/// Parse `key=N`.
+pub(crate) fn attr_int(attrs: &str, key: &str) -> Option<i64> {
+    let pat = format!("{key}=");
+    let start = find_key(attrs, &pat)? + pat.len();
+    let rest = &attrs[start..];
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '-'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse `key=value` up to the next comma or whitespace.
+pub(crate) fn attr_str<'a>(attrs: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("{key}=");
+    let start = find_key(attrs, &pat)? + pat.len();
+    let rest = &attrs[start..];
+    let end = rest
+        .find(|c: char| c == ',' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    Some(&rest[..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(super) fn run(hlo: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let module = HloModule::parse(hlo)?;
+        preflight(&module)?;
+        evaluate(&module, inputs)
+    }
+
+    fn f32t(shape: &[usize], vals: &[f32]) -> Tensor {
+        Tensor::from_f32(shape.to_vec(), vals).unwrap()
+    }
+
+    #[test]
+    fn attr_helpers() {
+        let attrs = "dimensions={0,2}, to_apply=%add.7, index_vector_dim=1, slice_sizes={1,64}";
+        assert_eq!(attr_list(attrs, "dimensions").unwrap(), vec![0, 2]);
+        assert_eq!(attr_list(attrs, "slice_sizes").unwrap(), vec![1, 64]);
+        assert_eq!(attr_int(attrs, "index_vector_dim"), Some(1));
+        assert_eq!(attr_str(attrs, "to_apply"), Some("%add.7"));
+        // key-boundary: "index=" must not match inside "index_vector_dim="
+        assert_eq!(attr_int(attrs, "index"), None);
+        assert_eq!(attr_list(attrs, "missing"), None);
+        assert_eq!(attr_list("dimensions={}", "dimensions").unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn elementwise_binary_chain() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[4], b: f32[4]) -> f32[4] {\n  \
+            %a = f32[4]{0} parameter(0)\n  \
+            %b = f32[4]{0} parameter(1)\n  \
+            %s = f32[4]{0} subtract(%a, %b)\n  \
+            %m = f32[4]{0} multiply(%s, %b)\n  \
+            ROOT %d = f32[4]{0} divide(%m, %a)\n}\n";
+        let a = f32t(&[4], &[2.0, 4.0, 8.0, 16.0]);
+        let b = f32t(&[4], &[1.0, 2.0, 2.0, 4.0]);
+        let out = run(hlo, &[&a, &b]).unwrap();
+        // ((a-b)*b)/a
+        assert_eq!(out[0].as_f32().unwrap(), vec![0.5, 1.0, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn unary_and_maximum() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[3]) -> f32[3] {\n  \
+            %a = f32[3]{0} parameter(0)\n  \
+            %z = f32[] constant(0)\n  \
+            %zb = f32[3]{0} broadcast(%z), dimensions={}\n  \
+            %r = f32[3]{0} maximum(%a, %zb)\n  \
+            ROOT %x = f32[3]{0} exponential(%r)\n}\n";
+        let a = f32t(&[3], &[-1.0, 0.0, 1.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        let v = out[0].as_f32().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-6);
+        assert!((v[1] - 1.0).abs() < 1e-6);
+        assert!((v[2] - std::f32::consts::E).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dot_2d() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2,3], b: f32[3,2]) -> f32[2,2] {\n  \
+            %a = f32[2,3]{1,0} parameter(0)\n  \
+            %b = f32[3,2]{1,0} parameter(1)\n  \
+            ROOT %d = f32[2,2]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let a = f32t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = f32t(&[3, 2], &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let out = run(hlo, &[&a, &b]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn dot_batched() {
+        // [2,2,2] x [2,2,2] batch matmul over the leading dim
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2,2,2], b: f32[2,2,2]) -> f32[2,2,2] {\n  \
+            %a = f32[2,2,2]{2,1,0} parameter(0)\n  \
+            %b = f32[2,2,2]{2,1,0} parameter(1)\n  \
+            ROOT %d = f32[2,2,2]{2,1,0} dot(%a, %b), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={1}\n}\n";
+        let a = f32t(&[2, 2, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = f32t(&[2, 2, 2], &[1.0, 0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 2.0]);
+        let out = run(hlo, &[&a, &b]).unwrap();
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            vec![1.0, 2.0, 3.0, 4.0, 10.0, 12.0, 14.0, 16.0]
+        );
+    }
+
+    #[test]
+    fn broadcast_with_dim_map() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[3]) -> f32[2,3] {\n  \
+            %a = f32[3]{0} parameter(0)\n  \
+            ROOT %b = f32[2,3]{1,0} broadcast(%a), dimensions={1}\n}\n";
+        let a = f32t(&[3], &[1.0, 2.0, 3.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_reshape_slice_concat() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2,3]) -> f32[4,2] {\n  \
+            %a = f32[2,3]{1,0} parameter(0)\n  \
+            %t = f32[3,2]{1,0} transpose(%a), dimensions={1,0}\n  \
+            %s = f32[1,2]{1,0} slice(%t), slice={[1:2], [0:2]}\n  \
+            ROOT %c = f32[4,2]{1,0} concatenate(%t, %s), dimensions={0}\n}\n";
+        let a = f32t(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        // transpose -> [[1,4],[2,5],[3,6]]; slice row 1 -> [[2,5]]
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0, 2.0, 5.0]
+        );
+    }
+
+    #[test]
+    fn reduce_sum_and_max() {
+        let hlo = "HloModule m\n\
+            %add_f32 (p0: f32[], p1: f32[]) -> f32[] {\n  \
+            %p0 = f32[] parameter(0)\n  \
+            %p1 = f32[] parameter(1)\n  \
+            ROOT %r = f32[] add(%p0, %p1)\n}\n\
+            %max_f32 (q0: f32[], q1: f32[]) -> f32[] {\n  \
+            %q0 = f32[] parameter(0)\n  \
+            %q1 = f32[] parameter(1)\n  \
+            ROOT %r2 = f32[] maximum(%q0, %q1)\n}\n\
+            ENTRY %e (a: f32[2,3]) -> (f32[2], f32[2]) {\n  \
+            %a = f32[2,3]{1,0} parameter(0)\n  \
+            %zero = f32[] constant(0)\n  \
+            %ninf = f32[] constant(-inf)\n  \
+            %s = f32[2]{0} reduce(%a, %zero), dimensions={1}, to_apply=%add_f32\n  \
+            %m = f32[2]{0} reduce(%a, %ninf), dimensions={1}, to_apply=%max_f32\n  \
+            ROOT %t = (f32[2]{0}, f32[2]{0}) tuple(%s, %m)\n}\n";
+        let a = f32t(&[2, 3], &[1.0, 2.0, 3.0, -1.0, -5.0, 2.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![6.0, -4.0]);
+        assert_eq!(out[1].as_f32().unwrap(), vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_shape_pattern() {
+        // exp(a - max(a)) / sum(exp(a - max(a))) along dim 1
+        let hlo = "HloModule m\n\
+            %max_f (p0: f32[], p1: f32[]) -> f32[] {\n  \
+            %p0 = f32[] parameter(0)\n  \
+            %p1 = f32[] parameter(1)\n  \
+            ROOT %r = f32[] maximum(%p0, %p1)\n}\n\
+            %add_f (q0: f32[], q1: f32[]) -> f32[] {\n  \
+            %q0 = f32[] parameter(0)\n  \
+            %q1 = f32[] parameter(1)\n  \
+            ROOT %r2 = f32[] add(%q0, %q1)\n}\n\
+            ENTRY %e (a: f32[2,3]) -> f32[2,3] {\n  \
+            %a = f32[2,3]{1,0} parameter(0)\n  \
+            %ninf = f32[] constant(-inf)\n  \
+            %mx = f32[2]{0} reduce(%a, %ninf), dimensions={1}, to_apply=%max_f\n  \
+            %mxb = f32[2,3]{1,0} broadcast(%mx), dimensions={0}\n  \
+            %c = f32[2,3]{1,0} subtract(%a, %mxb)\n  \
+            %x = f32[2,3]{1,0} exponential(%c)\n  \
+            %zero = f32[] constant(0)\n  \
+            %sm = f32[2]{0} reduce(%x, %zero), dimensions={1}, to_apply=%add_f\n  \
+            %smb = f32[2,3]{1,0} broadcast(%sm), dimensions={0}\n  \
+            ROOT %o = f32[2,3]{1,0} divide(%x, %smb)\n}\n";
+        let a = f32t(&[2, 3], &[1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        let v = out[0].as_f32().unwrap();
+        let row0: f32 = v[..3].iter().sum();
+        let row1: f32 = v[3..].iter().sum();
+        assert!((row0 - 1.0).abs() < 1e-6 && (row1 - 1.0).abs() < 1e-6);
+        assert!((v[3] - 1.0 / 3.0).abs() < 1e-6);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn gather_codebook_lookup() {
+        // The clustered-matmul pattern: u8 indices -> s32 -> gather rows
+        // of a [16] codebook.
+        let hlo = "HloModule m\n\
+            ENTRY %e (cb: f32[4], idx: u8[2,3]) -> f32[2,3] {\n  \
+            %cb = f32[4]{0} parameter(0)\n  \
+            %idx = u8[2,3]{1,0} parameter(1)\n  \
+            %i32 = s32[2,3]{1,0} convert(%idx)\n  \
+            ROOT %g = f32[2,3]{1,0} gather(%cb, %i32), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}\n}\n";
+        let cb = f32t(&[4], &[10.0, 20.0, 30.0, 40.0]);
+        let idx = Tensor::from_u8(vec![2, 3], &[0, 3, 1, 2, 2, 0]).unwrap();
+        let out = run(hlo, &[&cb, &idx]).unwrap();
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            vec![10.0, 40.0, 20.0, 30.0, 30.0, 10.0]
+        );
+    }
+
+    #[test]
+    fn gather_rows_with_offset_dims() {
+        // Row gather: operand [3,2], take rows [2,0] -> [2,2]
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[3,2], i: s32[2]) -> f32[2,2] {\n  \
+            %a = f32[3,2]{1,0} parameter(0)\n  \
+            %i = s32[2]{0} parameter(1)\n  \
+            ROOT %g = f32[2,2]{1,0} gather(%a, %i), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,2}\n}\n";
+        let a = f32t(&[3, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i = Tensor::from_i32(vec![2], &[2, 0]).unwrap();
+        let out = run(hlo, &[&a, &i]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![5.0, 6.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn compare_select_iota_convert() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[4]) -> f32[4] {\n  \
+            %a = f32[4]{0} parameter(0)\n  \
+            %i = s32[4]{0} iota(), iota_dimension=0\n  \
+            %f = f32[4]{0} convert(%i)\n  \
+            %p = pred[4]{0} compare(%a, %f), direction=GT\n  \
+            ROOT %s = f32[4]{0} select(%p, %a, %f)\n}\n";
+        let a = f32t(&[4], &[5.0, 0.5, 3.0, -1.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        // iota = [0,1,2,3]; a>iota -> [t,f,t,f] -> [5,1,3,3]
+        assert_eq!(out[0].as_f32().unwrap(), vec![5.0, 1.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn constant_array_payload() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2,2]) -> f32[2,2] {\n  \
+            %a = f32[2,2]{1,0} parameter(0)\n  \
+            %c = f32[2,2]{1,0} constant({ { 1, 2 }, { 3, 4 } })\n  \
+            ROOT %s = f32[2,2]{1,0} add(%a, %c)\n}\n";
+        let a = f32t(&[2, 2], &[10.0, 10.0, 10.0, 10.0]);
+        let out = run(hlo, &[&a]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn convolution_patchify() {
+        // The ViT patch-embedding pattern: stride == kernel size, no
+        // padding. lhs [1,2,2,2] (NHWC), kernel [1,1,2,3] (HWIO): each
+        // 1x1 patch of 2 channels -> 3 features.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[1,2,2,2], k: f32[1,1,2,3]) -> f32[1,2,2,3] {\n  \
+            %x = f32[1,2,2,2]{3,2,1,0} parameter(0)\n  \
+            %k = f32[1,1,2,3]{3,2,1,0} parameter(1)\n  \
+            ROOT %c = f32[1,2,2,3]{3,2,1,0} convolution(%x, %k), window={size=1x1}, dim_labels=b01f_01io->b01f\n}\n";
+        let x = f32t(&[1, 2, 2, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        // kernel: channel c -> feature f weight = (c+1) * 10^f pattern
+        let k = f32t(&[1, 1, 2, 3], &[1.0, 10.0, 100.0, 2.0, 20.0, 200.0]);
+        let out = run(hlo, &[&x, &k]).unwrap();
+        // pixel (0,0): [1,2] -> 1*1+2*2=5, 1*10+2*20=50, 500
+        assert_eq!(
+            out[0].as_f32().unwrap(),
+            vec![
+                5.0, 50.0, 500.0, 11.0, 110.0, 1100.0, 17.0, 170.0, 1700.0,
+                23.0, 230.0, 2300.0
+            ]
+        );
+    }
+
+    #[test]
+    fn strided_convolution_patchify() {
+        // 4x4 single-channel image, 2x2 patches, stride 2: each output is
+        // the weighted sum of one non-overlapping patch.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[1,4,4,1], k: f32[2,2,1,1]) -> f32[1,2,2,1] {\n  \
+            %x = f32[1,4,4,1]{3,2,1,0} parameter(0)\n  \
+            %k = f32[2,2,1,1]{3,2,1,0} parameter(1)\n  \
+            ROOT %c = f32[1,2,2,1]{3,2,1,0} convolution(%x, %k), window={size=2x2 stride=2x2}, dim_labels=b01f_01io->b01f\n}\n";
+        let x = f32t(&[1, 4, 4, 1], &(1..=16).map(|i| i as f32).collect::<Vec<_>>());
+        let k = f32t(&[2, 2, 1, 1], &[1.0, 1.0, 1.0, 1.0]);
+        let out = run(hlo, &[&x, &k]).unwrap();
+        // patch sums: (1+2+5+6), (3+4+7+8), (9+10+13+14), (11+12+15+16)
+        assert_eq!(out[0].as_f32().unwrap(), vec![14.0, 22.0, 46.0, 54.0]);
+    }
+
+    #[test]
+    fn declared_shape_mismatch_is_loud() {
+        // The instruction declares [3] but add produces [2].
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2]) -> f32[3] {\n  \
+            %a = f32[2]{0} parameter(0)\n  \
+            ROOT %s = f32[3]{0} add(%a, %a)\n}\n";
+        let a = f32t(&[2], &[1.0, 2.0]);
+        let err = run(hlo, &[&a]).unwrap_err();
+        assert!(format!("{err:#}").contains("declared"));
+    }
+
+    #[test]
+    fn input_arity_and_shape_checked() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2]) -> f32[2] {\n  \
+            %a = f32[2]{0} parameter(0)\n  \
+            ROOT %s = f32[2]{0} add(%a, %a)\n}\n";
+        let a = f32t(&[2], &[1.0, 2.0]);
+        assert!(run(hlo, &[]).is_err());
+        let wrong = f32t(&[3], &[1.0, 2.0, 3.0]);
+        assert!(run(hlo, &[&wrong]).is_err());
+        let wrong_dtype = Tensor::from_u8(vec![2], &[1, 2]).unwrap();
+        assert!(run(hlo, &[&wrong_dtype]).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Pure-Rust HLO interpreter backend.
+//!
+//! Walks the parsed [`HloModule`] graph and evaluates the op subset jax
+//! emits for these models (dot, convolution-as-patchify, elementwise
+//! arithmetic, reduce, broadcast/reshape/transpose/slice/concatenate,
+//! gather — the op behind the clustered codebook lookup — select,
+//! compare, convert, iota, tuple) directly on host [`Tensor`]s.
+//!
+//! This is the default execution backend: no PJRT, no native XLA, no
+//! external crates — exactly the self-contained CPU path a
+//! resource-constrained edge device can run. It trades peak throughput
+//! for zero dependencies; the `pjrt` feature recovers the compiled path
+//! on machines that have XLA.
+
+mod eval;
+mod ops;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::{Backend, Executor, ResidentExecutor};
+use crate::hlo::HloModule;
+use crate::tensor::Tensor;
+
+/// The interpreter backend (stateless factory).
+pub struct InterpBackend;
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    /// "Compilation" here is parsing plus a preflight pass that rejects
+    /// modules using ops outside the supported subset up front.
+    fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>> {
+        let module = HloModule::parse_file(path)?;
+        eval::preflight(&module)?;
+        let n_params = module.parameters()?.len();
+        Ok(Box::new(InterpExecutor {
+            module: Arc::new(module),
+            n_params,
+            name: path.display().to_string(),
+        }))
+    }
+}
+
+/// A loaded module, ready to evaluate.
+pub struct InterpExecutor {
+    module: Arc<HloModule>,
+    n_params: usize,
+    name: String,
+}
+
+impl Executor for InterpExecutor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let outputs = eval::evaluate(&self.module, &refs)?;
+        crate::runtime::single_replica(vec![outputs], &self.name)
+    }
+
+    fn with_resident(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+    ) -> Result<Box<dyn ResidentExecutor>> {
+        if n_dynamic + fixed.len() != self.n_params {
+            bail!(
+                "{}: {n_dynamic} dynamic + {} fixed inputs != {} module parameters",
+                self.name,
+                fixed.len(),
+                self.n_params
+            );
+        }
+        Ok(Box::new(InterpResident {
+            module: self.module.clone(),
+            name: self.name.clone(),
+            n_dynamic,
+            fixed,
+        }))
+    }
+}
+
+/// Weight-resident evaluation: the fixed inputs are pre-bound host-side
+/// behind a shared `Arc` (the interpreter's analogue of device-resident
+/// buffers — one host copy no matter how many batch sizes reference
+/// it), so each call supplies only the dynamic image batch.
+pub struct InterpResident {
+    module: Arc<HloModule>,
+    name: String,
+    n_dynamic: usize,
+    fixed: Arc<Vec<Tensor>>,
+}
+
+impl ResidentExecutor for InterpResident {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, dynamic: &[Tensor]) -> Result<Vec<Tensor>> {
+        if dynamic.len() != self.n_dynamic {
+            bail!(
+                "{}: expected {} dynamic inputs, got {}",
+                self.name,
+                self.n_dynamic,
+                dynamic.len()
+            );
+        }
+        let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
+        let outputs = eval::evaluate(&self.module, &refs)?;
+        crate::runtime::single_replica(vec![outputs], &self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    const ADD_ONE: &str = "HloModule m\n\
+        ENTRY %e (x: f32[2], w: f32[2]) -> (f32[2]) {\n  \
+        %x = f32[2]{0} parameter(0)\n  \
+        %w = f32[2]{0} parameter(1)\n  \
+        %s = f32[2]{0} add(%x, %w)\n  \
+        ROOT %t = (f32[2]{0}) tuple(%s)\n}\n";
+
+    fn load(hlo: &str) -> Box<dyn Executor> {
+        let dir = std::env::temp_dir().join(format!(
+            "clusterformer-interp-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+        InterpBackend.load_hlo(&path).unwrap()
+    }
+
+    #[test]
+    fn executor_runs_and_decomposes_tuple() {
+        let exe = load(ADD_ONE);
+        let x = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let w = Tensor::from_f32(vec![2], &[10.0, 20.0]).unwrap();
+        let out = exe.run(&[x, w]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn resident_binds_trailing_weights() {
+        let exe = load(ADD_ONE);
+        let w = Tensor::from_f32(vec![2], &[5.0, 5.0]).unwrap();
+        let fixed = Arc::new(vec![w]);
+        let resident = exe.with_resident(1, fixed.clone()).unwrap();
+        resident.warmup().unwrap();
+        let x = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let out = resident.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![6.0, 7.0]);
+        // wrong dynamic arity is rejected
+        assert!(resident.run(&[x.clone(), x]).is_err());
+        // wrong resident arity is rejected
+        assert!(exe.with_resident(2, fixed).is_err());
+    }
+
+    #[test]
+    fn unsupported_ops_rejected_at_load() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2]) -> f32[2] {\n  \
+            %x = f32[2]{0} parameter(0)\n  \
+            ROOT %s = f32[2]{0} custom-call(%x), custom_call_target=\"foo\"\n}\n";
+        let dir = std::env::temp_dir().join(format!(
+            "clusterformer-interp-test-unsup-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.hlo.txt");
+        std::fs::write(&path, hlo).unwrap();
+        let err = InterpBackend.load_hlo(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("custom-call"));
+    }
+}

@@ -1,0 +1,1132 @@
+//! Op kernels for the HLO interpreter.
+//!
+//! Every kernel is shape-generic and byte-oriented where the op is pure
+//! data movement (broadcast, transpose, slice, concatenate, gather,
+//! select), and f32/i32-typed where it is arithmetic. Layout is always
+//! row-major ("descending" HLO default); the parser drops layout
+//! annotations, which is correct for the artifacts this repo produces.
+
+#![allow(clippy::needless_range_loop)]
+
+use anyhow::{anyhow, bail, Result};
+
+use super::eval::{attr_int, attr_list, attr_str, host_dtype};
+use crate::hlo::parser::HloShape;
+use crate::tensor::{Dtype, Tensor};
+
+/// Row-major strides for `dims`.
+pub(crate) fn strides(dims: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; dims.len()];
+    for i in (0..dims.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * dims[i + 1];
+    }
+    s
+}
+
+/// Row-major odometer increment. Returns false once the index wraps
+/// (i.e. after the last element). Call in a `loop { body; if !advance {
+/// break } }` shape so scalars (empty `dims`) run the body exactly once.
+pub(crate) fn advance(idx: &mut [usize], dims: &[usize]) -> bool {
+    for d in (0..dims.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < dims[d] {
+            return true;
+        }
+        idx[d] = 0;
+    }
+    false
+}
+
+fn elem_count(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Lift any tensor to f64 values (lossless for f32/i32/u8; i64 above
+/// 2^53 loses precision, which no model in this repo produces).
+fn to_f64_vec(t: &Tensor) -> Result<Vec<f64>> {
+    Ok(match t.dtype() {
+        Dtype::F32 => t.as_f32()?.iter().map(|&x| x as f64).collect(),
+        Dtype::I32 => t.as_i32()?.iter().map(|&x| x as f64).collect(),
+        Dtype::I64 => t.as_i64()?.iter().map(|&x| x as f64).collect(),
+        Dtype::U8 => t.as_u8()?.iter().map(|&x| x as f64).collect(),
+    })
+}
+
+fn to_i64_vec(t: &Tensor) -> Result<Vec<i64>> {
+    Ok(match t.dtype() {
+        Dtype::U8 => t.as_u8()?.iter().map(|&x| x as i64).collect(),
+        Dtype::I32 => t.as_i32()?.iter().map(|&x| x as i64).collect(),
+        Dtype::I64 => t.as_i64()?,
+        Dtype::F32 => bail!("indices must be integral, got f32"),
+    })
+}
+
+/// Build a tensor of `dtype` from f64 values (the shared materialization
+/// path for constant/convert/iota).
+pub(crate) fn tensor_from_f64(dtype: Dtype, shape: Vec<usize>, vals: &[f64]) -> Result<Tensor> {
+    match dtype {
+        Dtype::F32 => {
+            Tensor::from_f32(shape, &vals.iter().map(|&v| v as f32).collect::<Vec<_>>())
+        }
+        Dtype::U8 => Tensor::from_u8(shape, &vals.iter().map(|&v| v as u8).collect::<Vec<_>>()),
+        Dtype::I32 => {
+            Tensor::from_i32(shape, &vals.iter().map(|&v| v as i32).collect::<Vec<_>>())
+        }
+        Dtype::I64 => {
+            let mut data = Vec::with_capacity(vals.len() * 8);
+            for &v in vals {
+                data.extend_from_slice(&(v as i64).to_le_bytes());
+            }
+            Tensor::new(Dtype::I64, shape, data)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Elementwise
+// ---------------------------------------------------------------------
+
+pub(crate) fn unary_f32(t: &Tensor, f: impl Fn(f32) -> f32) -> Result<Tensor> {
+    let v: Vec<f32> = t.as_f32()?.iter().map(|&x| f(x)).collect();
+    Tensor::from_f32(t.shape().to_vec(), &v)
+}
+
+/// Abramowitz & Stegun 7.1.26 polynomial approximation (|err| < 1.5e-7,
+/// well inside f32 noise) — jax lowers exact GELU through `erf`.
+pub(crate) fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.327_591_1 * x);
+    let poly = ((((1.061_405_4 * t - 1.453_152_f32) * t + 1.421_413_7) * t - 0.284_496_74)
+        * t
+        + 0.254_829_6)
+        * t;
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Output shape for a binary op: XLA requires equal shapes (broadcasts
+/// are explicit instructions), but a scalar on either side is accepted
+/// for robustness.
+fn binary_shape<'a>(a: &'a Tensor, b: &'a Tensor, op: &str) -> Result<&'a [usize]> {
+    if a.shape() == b.shape() {
+        Ok(a.shape())
+    } else if a.elems() == 1 {
+        Ok(b.shape())
+    } else if b.elems() == 1 {
+        Ok(a.shape())
+    } else {
+        bail!(
+            "{op}: shape mismatch {:?} vs {:?} (HLO binary ops are same-shape)",
+            a.shape(),
+            b.shape()
+        )
+    }
+}
+
+/// Pair up the operands of a same-shape binary op, expanding a scalar on
+/// either side. Branching once here keeps the hot per-element loops free
+/// of modulo/bounds work.
+fn zip_map<T: Copy, R>(av: &[T], bv: &[T], f: impl Fn(T, T) -> R) -> Vec<R> {
+    if av.len() == bv.len() {
+        av.iter().zip(bv).map(|(&x, &y)| f(x, y)).collect()
+    } else if av.len() == 1 {
+        let x = av[0];
+        bv.iter().map(|&y| f(x, y)).collect()
+    } else {
+        let y = bv[0];
+        av.iter().map(|&x| f(x, y)).collect()
+    }
+}
+
+pub(crate) fn binary(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
+    if a.dtype() != b.dtype() {
+        bail!(
+            "{op}: dtype mismatch {} vs {}",
+            a.dtype().name(),
+            b.dtype().name()
+        );
+    }
+    let shape = binary_shape(a, b, op)?.to_vec();
+    match a.dtype() {
+        Dtype::F32 => {
+            let f: fn(f32, f32) -> f32 = match op {
+                "add" => |x, y| x + y,
+                "subtract" => |x, y| x - y,
+                "multiply" => |x, y| x * y,
+                "divide" => |x, y| x / y,
+                "maximum" => f32::max,
+                "minimum" => f32::min,
+                "power" => f32::powf,
+                _ => bail!("{op}: not supported for f32"),
+            };
+            Tensor::from_f32(shape, &zip_map(&a.as_f32()?, &b.as_f32()?, f))
+        }
+        Dtype::I32 => {
+            let f: fn(i32, i32) -> i32 = match op {
+                "add" => |x, y| x.wrapping_add(y),
+                "subtract" => |x, y| x.wrapping_sub(y),
+                "multiply" => |x, y| x.wrapping_mul(y),
+                "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
+                "maximum" => std::cmp::max,
+                "minimum" => std::cmp::min,
+                "and" => |x, y| x & y,
+                "or" => |x, y| x | y,
+                "xor" => |x, y| x ^ y,
+                _ => bail!("{op}: not supported for s32"),
+            };
+            Tensor::from_i32(shape, &zip_map(&a.as_i32()?, &b.as_i32()?, f))
+        }
+        Dtype::U8 => {
+            let f: fn(u8, u8) -> u8 = match op {
+                "add" => |x, y| x.wrapping_add(y),
+                "multiply" => |x, y| x.wrapping_mul(y),
+                "maximum" => std::cmp::max,
+                "minimum" => std::cmp::min,
+                "and" => |x, y| x & y,
+                "or" => |x, y| x | y,
+                "xor" => |x, y| x ^ y,
+                _ => bail!("{op}: not supported for u8/pred"),
+            };
+            Tensor::from_u8(shape, &zip_map(a.as_u8()?, b.as_u8()?, f))
+        }
+        Dtype::I64 => bail!("{op}: s64 elementwise arithmetic not supported"),
+    }
+}
+
+pub(crate) fn compare(a: &Tensor, b: &Tensor, direction: &str) -> Result<Tensor> {
+    let shape = binary_shape(a, b, "compare")?.to_vec();
+    let f: fn(f64, f64) -> bool = match direction {
+        "EQ" => |x, y| x == y,
+        "NE" => |x, y| x != y,
+        "LT" => |x, y| x < y,
+        "LE" => |x, y| x <= y,
+        "GT" => |x, y| x > y,
+        "GE" => |x, y| x >= y,
+        other => bail!("compare: unknown direction {other:?}"),
+    };
+    let out = zip_map(&to_f64_vec(a)?, &to_f64_vec(b)?, |x, y| u8::from(f(x, y)));
+    Tensor::from_u8(shape, &out)
+}
+
+pub(crate) fn select(pred: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> {
+    if on_true.shape() != on_false.shape() || on_true.dtype() != on_false.dtype() {
+        bail!(
+            "select: branch mismatch {:?}/{} vs {:?}/{}",
+            on_true.shape(),
+            on_true.dtype().name(),
+            on_false.shape(),
+            on_false.dtype().name()
+        );
+    }
+    if pred.shape() != on_true.shape() && pred.elems() != 1 {
+        bail!(
+            "select: pred shape {:?} does not match branches {:?}",
+            pred.shape(),
+            on_true.shape()
+        );
+    }
+    let p = pred.as_u8()?;
+    let es = on_true.dtype().size();
+    let (tb, fb) = (on_true.bytes(), on_false.bytes());
+    let mut data = vec![0u8; tb.len()];
+    for i in 0..on_true.elems() {
+        let src = if p[i % p.len()] != 0 { tb } else { fb };
+        data[i * es..(i + 1) * es].copy_from_slice(&src[i * es..(i + 1) * es]);
+    }
+    Tensor::new(on_true.dtype(), on_true.shape().to_vec(), data)
+}
+
+pub(crate) fn convert(t: &Tensor, to: Dtype) -> Result<Tensor> {
+    let vals = to_f64_vec(t)?;
+    tensor_from_f64(to, t.shape().to_vec(), &vals)
+}
+
+// ---------------------------------------------------------------------
+// Constants and iota
+// ---------------------------------------------------------------------
+
+/// Materialize a `constant` from the literal payload the parser keeps in
+/// `attrs` as `(payload)...`.
+pub(crate) fn constant(shape: &HloShape, attrs: &str) -> Result<Tensor> {
+    let rest = attrs
+        .strip_prefix('(')
+        .ok_or_else(|| anyhow!("constant without a literal payload"))?;
+    let end = rest
+        .find(')')
+        .ok_or_else(|| anyhow!("unterminated constant payload"))?;
+    let payload = &rest[..end];
+    let dtype = host_dtype(&shape.dtype)?;
+    let elems = elem_count(&shape.dims);
+    let cleaned = payload.replace(['{', '}'], " ");
+    let mut vals = Vec::with_capacity(elems);
+    for tok in cleaned.split([',', ' ']).map(str::trim).filter(|s| !s.is_empty()) {
+        let v = match tok {
+            "true" => 1.0,
+            "false" => 0.0,
+            "inf" => f64::INFINITY,
+            "-inf" => f64::NEG_INFINITY,
+            "nan" | "-nan" => f64::NAN,
+            _ => tok
+                .parse::<f64>()
+                .map_err(|_| anyhow!("bad constant token {tok:?}"))?,
+        };
+        vals.push(v);
+    }
+    if vals.len() != elems {
+        bail!(
+            "constant: {} values for a shape with {} elements",
+            vals.len(),
+            elems
+        );
+    }
+    tensor_from_f64(dtype, shape.dims.clone(), &vals)
+}
+
+pub(crate) fn iota(shape: &HloShape, dim: usize) -> Result<Tensor> {
+    let dims = &shape.dims;
+    if dim >= dims.len() {
+        bail!("iota: dimension {dim} out of range for {dims:?}");
+    }
+    let st = strides(dims);
+    let n = elem_count(dims);
+    let vals: Vec<f64> = (0..n).map(|i| ((i / st[dim]) % dims[dim]) as f64).collect();
+    tensor_from_f64(host_dtype(&shape.dtype)?, dims.clone(), &vals)
+}
+
+// ---------------------------------------------------------------------
+// Data movement
+// ---------------------------------------------------------------------
+
+/// `broadcast` with a `dimensions` map: operand dim `i` feeds output dim
+/// `dims_map[i]`; unmapped output dims replicate. Size-1 operand dims
+/// may expand (BroadcastInDim semantics).
+pub(crate) fn broadcast(t: &Tensor, out_dims: &[usize], dims_map: &[usize]) -> Result<Tensor> {
+    let in_dims = t.shape();
+    if dims_map.len() != in_dims.len() {
+        bail!(
+            "broadcast: dimensions {dims_map:?} rank-mismatch operand {in_dims:?}"
+        );
+    }
+    for (i, &od) in dims_map.iter().enumerate() {
+        if od >= out_dims.len() {
+            bail!("broadcast: mapped dim {od} out of range for {out_dims:?}");
+        }
+        if in_dims[i] != out_dims[od] && in_dims[i] != 1 {
+            bail!(
+                "broadcast: operand dim {i} (size {}) incompatible with output dim {od} (size {})",
+                in_dims[i],
+                out_dims[od]
+            );
+        }
+    }
+    let es = t.dtype().size();
+    let out_elems = elem_count(out_dims);
+    let mut data = vec![0u8; out_elems * es];
+    if out_elems > 0 && t.elems() > 0 {
+        let in_strides = strides(in_dims);
+        let src = t.bytes();
+        let mut idx = vec![0usize; out_dims.len()];
+        let mut o = 0usize;
+        loop {
+            let mut s = 0usize;
+            for (i, &od) in dims_map.iter().enumerate() {
+                let coord = if in_dims[i] == 1 { 0 } else { idx[od] };
+                s += coord * in_strides[i];
+            }
+            data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
+            o += 1;
+            if !advance(&mut idx, out_dims) {
+                break;
+            }
+        }
+    }
+    Tensor::new(t.dtype(), out_dims.to_vec(), data)
+}
+
+/// `transpose`: output dim `i` takes operand dim `perm[i]`.
+pub(crate) fn transpose(t: &Tensor, perm: &[usize]) -> Result<Tensor> {
+    let in_dims = t.shape();
+    if perm.len() != in_dims.len() || perm.iter().any(|&p| p >= in_dims.len()) {
+        bail!("transpose: bad permutation {perm:?} for {in_dims:?}");
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let es = t.dtype().size();
+    let src = t.bytes();
+    let mut data = vec![0u8; src.len()];
+    if t.elems() > 0 {
+        let in_strides = strides(in_dims);
+        let mut idx = vec![0usize; out_dims.len()];
+        let mut o = 0usize;
+        loop {
+            let mut s = 0usize;
+            for (i, &p) in perm.iter().enumerate() {
+                s += idx[i] * in_strides[p];
+            }
+            data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
+            o += 1;
+            if !advance(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    Tensor::new(t.dtype(), out_dims, data)
+}
+
+/// `slice` with the `slice={[lo:hi], [lo:hi:step]}` attribute.
+pub(crate) fn slice(t: &Tensor, attrs: &str) -> Result<Tensor> {
+    let pat = "slice={";
+    let start = attrs
+        .find(pat)
+        .ok_or_else(|| anyhow!("slice without a slice attribute"))?
+        + pat.len();
+    let end = start
+        + attrs[start..]
+            .find('}')
+            .ok_or_else(|| anyhow!("unterminated slice attribute"))?;
+    let body = &attrs[start..end];
+    let in_dims = t.shape();
+    let mut starts = Vec::new();
+    let mut limits = Vec::new();
+    let mut steps = Vec::new();
+    for part in body.split(',') {
+        let p = part.trim().trim_start_matches('[').trim_end_matches(']');
+        let nums: Vec<usize> = p
+            .split(':')
+            .map(|x| {
+                x.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("bad slice bound {x:?}"))
+            })
+            .collect::<Result<_>>()?;
+        match nums.len() {
+            2 => {
+                starts.push(nums[0]);
+                limits.push(nums[1]);
+                steps.push(1);
+            }
+            3 => {
+                starts.push(nums[0]);
+                limits.push(nums[1]);
+                steps.push(nums[2].max(1));
+            }
+            _ => bail!("bad slice spec {part:?}"),
+        }
+    }
+    if starts.len() != in_dims.len() {
+        bail!(
+            "slice: {} specs for rank-{} operand",
+            starts.len(),
+            in_dims.len()
+        );
+    }
+    for d in 0..in_dims.len() {
+        if starts[d] > limits[d] || limits[d] > in_dims[d] {
+            bail!(
+                "slice: [{}:{}] out of bounds for dim {d} (size {})",
+                starts[d],
+                limits[d],
+                in_dims[d]
+            );
+        }
+    }
+    let out_dims: Vec<usize> = (0..in_dims.len())
+        .map(|d| (limits[d] - starts[d]).div_ceil(steps[d]))
+        .collect();
+    let es = t.dtype().size();
+    let out_elems = elem_count(&out_dims);
+    let mut data = vec![0u8; out_elems * es];
+    if out_elems > 0 {
+        let in_strides = strides(in_dims);
+        let src = t.bytes();
+        let mut idx = vec![0usize; out_dims.len()];
+        let mut o = 0usize;
+        loop {
+            let mut s = 0usize;
+            for d in 0..out_dims.len() {
+                s += (starts[d] + idx[d] * steps[d]) * in_strides[d];
+            }
+            data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
+            o += 1;
+            if !advance(&mut idx, &out_dims) {
+                break;
+            }
+        }
+    }
+    Tensor::new(t.dtype(), out_dims, data)
+}
+
+pub(crate) fn concatenate(parts: &[&Tensor], dim: usize) -> Result<Tensor> {
+    let first = *parts.first().ok_or_else(|| anyhow!("concatenate of nothing"))?;
+    let rank = first.shape().len();
+    if dim >= rank {
+        bail!("concatenate: dim {dim} out of range for rank {rank}");
+    }
+    let mut cat_size = 0usize;
+    for p in parts {
+        if p.dtype() != first.dtype() || p.shape().len() != rank {
+            bail!("concatenate: dtype/rank mismatch");
+        }
+        for d in 0..rank {
+            if d != dim && p.shape()[d] != first.shape()[d] {
+                bail!(
+                    "concatenate: shape mismatch {:?} vs {:?} outside dim {dim}",
+                    p.shape(),
+                    first.shape()
+                );
+            }
+        }
+        cat_size += p.shape()[dim];
+    }
+    let es = first.dtype().size();
+    let outer: usize = first.shape()[..dim].iter().product();
+    let mut out_shape = first.shape().to_vec();
+    out_shape[dim] = cat_size;
+    let mut data = Vec::with_capacity(elem_count(&out_shape) * es);
+    for o in 0..outer {
+        for p in parts {
+            let block: usize = p.shape()[dim..].iter().product::<usize>() * es;
+            data.extend_from_slice(&p.bytes()[o * block..(o + 1) * block]);
+        }
+    }
+    Tensor::new(first.dtype(), out_shape, data)
+}
+
+// ---------------------------------------------------------------------
+// Contractions
+// ---------------------------------------------------------------------
+
+/// General `dot` (XLA DotGeneral): output dims are batch dims, then lhs
+/// free dims, then rhs free dims, accumulated in f32 like the XLA CPU
+/// backend.
+pub(crate) fn dot(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
+    let lc = attr_list(attrs, "lhs_contracting_dims").unwrap_or_default();
+    let rc = attr_list(attrs, "rhs_contracting_dims").unwrap_or_default();
+    let lb = attr_list(attrs, "lhs_batch_dims").unwrap_or_default();
+    let rb = attr_list(attrs, "rhs_batch_dims").unwrap_or_default();
+    if lc.len() != rc.len() || lb.len() != rb.len() {
+        bail!("dot: contracting/batch dim arity mismatch");
+    }
+    let a = lhs.as_f32()?;
+    let b = rhs.as_f32()?;
+    let ld = lhs.shape();
+    let rd = rhs.shape();
+    for (&l, &r) in lb.iter().zip(&rb) {
+        if ld[l] != rd[r] {
+            bail!("dot: batch dim size mismatch ({} vs {})", ld[l], rd[r]);
+        }
+    }
+    for (&l, &r) in lc.iter().zip(&rc) {
+        if ld[l] != rd[r] {
+            bail!("dot: contracting dim size mismatch ({} vs {})", ld[l], rd[r]);
+        }
+    }
+    let lfree: Vec<usize> = (0..ld.len())
+        .filter(|d| !lb.contains(d) && !lc.contains(d))
+        .collect();
+    let rfree: Vec<usize> = (0..rd.len())
+        .filter(|d| !rb.contains(d) && !rc.contains(d))
+        .collect();
+    let batch_sizes: Vec<usize> = lb.iter().map(|&d| ld[d]).collect();
+    let lfree_sizes: Vec<usize> = lfree.iter().map(|&d| ld[d]).collect();
+    let rfree_sizes: Vec<usize> = rfree.iter().map(|&d| rd[d]).collect();
+    let c_sizes: Vec<usize> = lc.iter().map(|&d| ld[d]).collect();
+
+    let mut out_dims = batch_sizes.clone();
+    out_dims.extend_from_slice(&lfree_sizes);
+    out_dims.extend_from_slice(&rfree_sizes);
+    let out_elems = elem_count(&out_dims);
+    if out_elems == 0 {
+        return Tensor::from_f32(out_dims, &[]);
+    }
+    let ls = strides(ld);
+    let rs = strides(rd);
+    let c_empty = c_sizes.iter().any(|&s| s == 0);
+    let mut out = Vec::with_capacity(out_elems);
+
+    let mut bidx = vec![0usize; lb.len()];
+    loop {
+        let lb_off: usize = bidx.iter().zip(&lb).map(|(&i, &d)| i * ls[d]).sum();
+        let rb_off: usize = bidx.iter().zip(&rb).map(|(&i, &d)| i * rs[d]).sum();
+        let mut lidx = vec![0usize; lfree.len()];
+        loop {
+            let l_off =
+                lb_off + lidx.iter().zip(&lfree).map(|(&i, &d)| i * ls[d]).sum::<usize>();
+            let mut ridx = vec![0usize; rfree.len()];
+            loop {
+                let r_off = rb_off
+                    + ridx.iter().zip(&rfree).map(|(&i, &d)| i * rs[d]).sum::<usize>();
+                let mut acc = 0.0f32;
+                if !c_empty {
+                    let mut cidx = vec![0usize; lc.len()];
+                    loop {
+                        let la =
+                            l_off + cidx.iter().zip(&lc).map(|(&i, &d)| i * ls[d]).sum::<usize>();
+                        let rbo =
+                            r_off + cidx.iter().zip(&rc).map(|(&i, &d)| i * rs[d]).sum::<usize>();
+                        acc += a[la] * b[rbo];
+                        if !advance(&mut cidx, &c_sizes) {
+                            break;
+                        }
+                    }
+                }
+                out.push(acc);
+                if !advance(&mut ridx, &rfree_sizes) {
+                    break;
+                }
+            }
+            if !advance(&mut lidx, &lfree_sizes) {
+                break;
+            }
+        }
+        if !advance(&mut bidx, &batch_sizes) {
+            break;
+        }
+    }
+    Tensor::from_f32(out_dims, &out)
+}
+
+/// Positions of the special and spatial dims within one side of a
+/// convolution's `dim_labels` (for the input: d0=batch, d1=feature; for
+/// the kernel: d0=input feature, d1=output feature; for the output:
+/// d0=batch, d1=feature).
+struct DimSpec {
+    d0: usize,
+    d1: usize,
+    spatial: Vec<usize>,
+}
+
+fn parse_label_part(part: &str, c0: char, c1: char) -> Result<DimSpec> {
+    let mut d0 = None;
+    let mut d1 = None;
+    let n_spatial = part.chars().filter(|c| c.is_ascii_digit()).count();
+    let mut spatial = vec![usize::MAX; n_spatial];
+    for (pos, c) in part.chars().enumerate() {
+        if c == c0 {
+            d0 = Some(pos);
+        } else if c == c1 {
+            d1 = Some(pos);
+        } else if let Some(d) = c.to_digit(10) {
+            let d = d as usize;
+            if d >= n_spatial {
+                bail!("dim_labels: non-contiguous spatial digits in {part:?}");
+            }
+            spatial[d] = pos;
+        } else {
+            bail!("dim_labels: unexpected char {c:?} in {part:?}");
+        }
+    }
+    // exactly one of each letter plus the spatial digits, so every
+    // recorded position is a valid dim index (rank = 2 + n_spatial)
+    if part.len() != 2 + n_spatial {
+        bail!("dim_labels: malformed part {part:?}");
+    }
+    match (d0, d1) {
+        (Some(d0), Some(d1)) if spatial.iter().all(|&p| p != usize::MAX) => {
+            Ok(DimSpec { d0, d1, spatial })
+        }
+        _ => bail!("dim_labels: malformed part {part:?}"),
+    }
+}
+
+fn parse_dim_labels(s: &str) -> Result<(DimSpec, DimSpec, DimSpec)> {
+    let (input, rest) = s
+        .split_once('_')
+        .ok_or_else(|| anyhow!("bad dim_labels {s:?}"))?;
+    let (kernel, output) = rest
+        .split_once("->")
+        .ok_or_else(|| anyhow!("bad dim_labels {s:?}"))?;
+    Ok((
+        parse_label_part(input, 'b', 'f')?,
+        parse_label_part(kernel, 'i', 'o')?,
+        parse_label_part(output, 'b', 'f')?,
+    ))
+}
+
+/// Parse `window={size=AxB stride=AxB pad=lo_hixlo_hi}` -> (sizes,
+/// strides, pad_lo, pad_hi). Dilations other than 1 are rejected.
+fn parse_window(attrs: &str, n_sp: usize) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>, Vec<usize>)> {
+    let pat = "window={";
+    let start = attrs
+        .find(pat)
+        .ok_or_else(|| anyhow!("convolution without a window attribute"))?
+        + pat.len();
+    let end = start
+        + attrs[start..]
+            .find('}')
+            .ok_or_else(|| anyhow!("unterminated window attribute"))?;
+    let body = &attrs[start..end];
+    let mut sizes = None;
+    let mut win_strides = vec![1usize; n_sp];
+    let mut pad_lo = vec![0usize; n_sp];
+    let mut pad_hi = vec![0usize; n_sp];
+    let parse_xs = |val: &str| -> Result<Vec<usize>> {
+        val.split('x')
+            .map(|x| x.parse::<usize>().map_err(|_| anyhow!("bad window value {x:?}")))
+            .collect()
+    };
+    for tok in body.split_whitespace() {
+        let Some((key, val)) = tok.split_once('=') else {
+            bail!("bad window token {tok:?}");
+        };
+        match key {
+            "size" => sizes = Some(parse_xs(val)?),
+            "stride" => win_strides = parse_xs(val)?,
+            "pad" => {
+                pad_lo.clear();
+                pad_hi.clear();
+                for p in val.split('x') {
+                    let (lo, hi) = p
+                        .split_once('_')
+                        .ok_or_else(|| anyhow!("bad pad token {p:?}"))?;
+                    pad_lo.push(lo.parse().map_err(|_| anyhow!("bad pad {lo:?}"))?);
+                    pad_hi.push(hi.parse().map_err(|_| anyhow!("bad pad {hi:?}"))?);
+                }
+            }
+            "lhs_dilate" | "rhs_dilate" => {
+                if parse_xs(val)?.iter().any(|&d| d != 1) {
+                    bail!("interp: dilated convolution not supported");
+                }
+            }
+            _ => {}
+        }
+    }
+    let sizes = sizes.ok_or_else(|| anyhow!("window without size"))?;
+    if sizes.len() != n_sp || win_strides.len() != n_sp || pad_lo.len() != n_sp {
+        bail!("window arity does not match {n_sp} spatial dims");
+    }
+    Ok((sizes, win_strides, pad_lo, pad_hi))
+}
+
+/// Direct convolution — for these models this is the ViT patch
+/// embedding (stride == kernel size, "patchify"), so the naive loop nest
+/// touches each input pixel exactly once.
+pub(crate) fn convolution(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
+    if attr_int(attrs, "feature_group_count").unwrap_or(1) != 1
+        || attr_int(attrs, "batch_group_count").unwrap_or(1) != 1
+    {
+        bail!("interp: grouped convolution not supported");
+    }
+    let labels = attr_str(attrs, "dim_labels")
+        .ok_or_else(|| anyhow!("convolution without dim_labels"))?;
+    let (li, lk, lo) = parse_dim_labels(labels)?;
+    let n_sp = li.spatial.len();
+    if lk.spatial.len() != n_sp || lo.spatial.len() != n_sp {
+        bail!("dim_labels spatial rank mismatch");
+    }
+    let (k_sizes, win_strides, pad_lo, pad_hi) = parse_window(attrs, n_sp)?;
+    let a = lhs.as_f32()?;
+    let k = rhs.as_f32()?;
+    let ld = lhs.shape();
+    let rd = rhs.shape();
+    let batch = ld[li.d0];
+    let in_f = ld[li.d1];
+    if rd[lk.d0] != in_f {
+        bail!(
+            "convolution: kernel input features {} != lhs features {in_f}",
+            rd[lk.d0]
+        );
+    }
+    let out_f = rd[lk.d1];
+    let in_sp: Vec<usize> = li.spatial.iter().map(|&p| ld[p]).collect();
+    let k_sp: Vec<usize> = lk.spatial.iter().map(|&p| rd[p]).collect();
+    for i in 0..n_sp {
+        if k_sp[i] != k_sizes[i] {
+            bail!(
+                "convolution: window size {:?} != kernel spatial dims {:?}",
+                k_sizes,
+                k_sp
+            );
+        }
+    }
+    let out_sp: Vec<usize> = (0..n_sp)
+        .map(|i| {
+            let padded = in_sp[i] + pad_lo[i] + pad_hi[i];
+            if padded < k_sp[i] {
+                0
+            } else {
+                (padded - k_sp[i]) / win_strides[i] + 1
+            }
+        })
+        .collect();
+    let mut out_dims = vec![0usize; 2 + n_sp];
+    out_dims[lo.d0] = batch;
+    out_dims[lo.d1] = out_f;
+    for i in 0..n_sp {
+        out_dims[lo.spatial[i]] = out_sp[i];
+    }
+    let out_elems = elem_count(&out_dims);
+    let mut out = vec![0.0f32; out_elems];
+    if out_elems > 0 && lhs.elems() > 0 && rhs.elems() > 0 {
+        let ls = strides(ld);
+        let rs = strides(rd);
+        let os = strides(&out_dims);
+        let mut osp = vec![0usize; n_sp];
+        loop {
+            for bi in 0..batch {
+                for oc in 0..out_f {
+                    let mut acc = 0.0f32;
+                    let mut ksp = vec![0usize; n_sp];
+                    loop {
+                        let mut in_off = bi * ls[li.d0];
+                        let mut k_off = oc * rs[lk.d1];
+                        let mut valid = true;
+                        for i in 0..n_sp {
+                            let c = (osp[i] * win_strides[i] + ksp[i]) as i64
+                                - pad_lo[i] as i64;
+                            if c < 0 || c >= in_sp[i] as i64 {
+                                valid = false;
+                                break;
+                            }
+                            in_off += (c as usize) * ls[li.spatial[i]];
+                            k_off += ksp[i] * rs[lk.spatial[i]];
+                        }
+                        if valid {
+                            for ic in 0..in_f {
+                                acc += a[in_off + ic * ls[li.d1]]
+                                    * k[k_off + ic * rs[lk.d0]];
+                            }
+                        }
+                        if !advance(&mut ksp, &k_sp) {
+                            break;
+                        }
+                    }
+                    let mut o_off = bi * os[lo.d0] + oc * os[lo.d1];
+                    for i in 0..n_sp {
+                        o_off += osp[i] * os[lo.spatial[i]];
+                    }
+                    out[o_off] = acc;
+                }
+            }
+            if !advance(&mut osp, &out_sp) {
+                break;
+            }
+        }
+    }
+    Tensor::from_f32(out_dims, &out)
+}
+
+// ---------------------------------------------------------------------
+// Reduce
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ReduceOp {
+    Add,
+    Mul,
+    Max,
+    Min,
+}
+
+pub(crate) fn reduce(
+    data: &Tensor,
+    init: &Tensor,
+    dims: &[usize],
+    op: ReduceOp,
+) -> Result<Tensor> {
+    if init.elems() != 1 {
+        bail!("reduce: init value must be a scalar");
+    }
+    let in_dims = data.shape();
+    if dims.iter().any(|&d| d >= in_dims.len()) {
+        bail!("reduce: dimensions {dims:?} out of range for {in_dims:?}");
+    }
+    let keep: Vec<usize> = (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| in_dims[d]).collect();
+    let out_strides = strides(&out_dims);
+    match data.dtype() {
+        Dtype::F32 => {
+            let v = data.as_f32()?;
+            let init_v = init.as_f32()?[0];
+            let f: fn(f32, f32) -> f32 = match op {
+                ReduceOp::Add => |x, y| x + y,
+                ReduceOp::Mul => |x, y| x * y,
+                ReduceOp::Max => f32::max,
+                ReduceOp::Min => f32::min,
+            };
+            let mut out = vec![init_v; elem_count(&out_dims)];
+            if !v.is_empty() && !out.is_empty() {
+                let mut idx = vec![0usize; in_dims.len()];
+                let mut flat = 0usize;
+                loop {
+                    let mut o = 0usize;
+                    for (j, &d) in keep.iter().enumerate() {
+                        o += idx[d] * out_strides[j];
+                    }
+                    out[o] = f(out[o], v[flat]);
+                    flat += 1;
+                    if !advance(&mut idx, in_dims) {
+                        break;
+                    }
+                }
+            }
+            Tensor::from_f32(out_dims, &out)
+        }
+        Dtype::I32 => {
+            let v = data.as_i32()?;
+            let init_v = init.as_i32()?[0];
+            let f: fn(i32, i32) -> i32 = match op {
+                ReduceOp::Add => |x, y| x.wrapping_add(y),
+                ReduceOp::Mul => |x, y| x.wrapping_mul(y),
+                ReduceOp::Max => std::cmp::max,
+                ReduceOp::Min => std::cmp::min,
+            };
+            let mut out = vec![init_v; elem_count(&out_dims)];
+            if !v.is_empty() && !out.is_empty() {
+                let mut idx = vec![0usize; in_dims.len()];
+                let mut flat = 0usize;
+                loop {
+                    let mut o = 0usize;
+                    for (j, &d) in keep.iter().enumerate() {
+                        o += idx[d] * out_strides[j];
+                    }
+                    out[o] = f(out[o], v[flat]);
+                    flat += 1;
+                    if !advance(&mut idx, in_dims) {
+                        break;
+                    }
+                }
+            }
+            Tensor::from_i32(out_dims, &out)
+        }
+        other => bail!("reduce: dtype {} not supported", other.name()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gather
+// ---------------------------------------------------------------------
+
+/// XLA gather — the op behind the clustered codebook lookup
+/// (`codebook[indices]`). Implements the standard attribute set:
+/// `offset_dims`, `collapsed_slice_dims`, `start_index_map`,
+/// `index_vector_dim`, `slice_sizes`; start indices are clamped like the
+/// spec requires.
+pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> Result<Tensor> {
+    let offset_dims = attr_list(attrs, "offset_dims").unwrap_or_default();
+    let collapsed = attr_list(attrs, "collapsed_slice_dims").unwrap_or_default();
+    let start_map = attr_list(attrs, "start_index_map")
+        .ok_or_else(|| anyhow!("gather without start_index_map"))?;
+    let ivd = attr_int(attrs, "index_vector_dim")
+        .ok_or_else(|| anyhow!("gather without index_vector_dim"))? as usize;
+    let slice_sizes = attr_list(attrs, "slice_sizes")
+        .ok_or_else(|| anyhow!("gather without slice_sizes"))?;
+    let od = operand.shape();
+    let id = start_indices.shape();
+    if slice_sizes.len() != od.len() {
+        bail!(
+            "gather: slice_sizes {slice_sizes:?} rank-mismatch operand {od:?}"
+        );
+    }
+    for (d, &s) in slice_sizes.iter().enumerate() {
+        if s > od[d] {
+            bail!("gather: slice size {s} exceeds operand dim {d} (size {})", od[d]);
+        }
+    }
+    if ivd > id.len() {
+        bail!("gather: index_vector_dim {ivd} out of range for {id:?}");
+    }
+    let index_vector_len = if ivd == id.len() { 1 } else { id[ivd] };
+    if start_map.len() != index_vector_len {
+        bail!(
+            "gather: start_index_map {start_map:?} does not match index vector length {index_vector_len}"
+        );
+    }
+    let batch_sizes: Vec<usize> = (0..id.len())
+        .filter(|&d| d != ivd)
+        .map(|d| id[d])
+        .collect();
+    let offset_src: Vec<usize> = (0..od.len()).filter(|d| !collapsed.contains(d)).collect();
+    if offset_src.len() != offset_dims.len() {
+        bail!(
+            "gather: offset_dims {offset_dims:?} do not match non-collapsed operand dims {offset_src:?}"
+        );
+    }
+    let out_rank = batch_sizes.len() + offset_dims.len();
+    let mut out_dims = vec![0usize; out_rank];
+    for (j, &p) in offset_dims.iter().enumerate() {
+        if p >= out_rank {
+            bail!("gather: offset dim {p} out of range for output rank {out_rank}");
+        }
+        out_dims[p] = slice_sizes[offset_src[j]];
+    }
+    let batch_out: Vec<usize> = (0..out_rank).filter(|p| !offset_dims.contains(p)).collect();
+    for (j, &p) in batch_out.iter().enumerate() {
+        out_dims[p] = batch_sizes[j];
+    }
+    let idx_vals = to_i64_vec(start_indices)?;
+    let op_strides = strides(od);
+    let idx_strides = strides(id);
+    let es = operand.dtype().size();
+    let out_elems = elem_count(&out_dims);
+    let mut data = vec![0u8; out_elems * es];
+    if out_elems > 0 {
+        let src = operand.bytes();
+        let mut oidx = vec![0usize; out_rank];
+        let mut o = 0usize;
+        loop {
+            let mut operand_idx = vec![0usize; od.len()];
+            for (j, &p) in offset_dims.iter().enumerate() {
+                operand_idx[offset_src[j]] = oidx[p];
+            }
+            for (k, &dim) in start_map.iter().enumerate() {
+                // flat position of this start-index component
+                let mut flat = 0usize;
+                let mut bj = 0usize;
+                for d in 0..id.len() {
+                    let coord = if d == ivd {
+                        k
+                    } else {
+                        let c = oidx[batch_out[bj]];
+                        bj += 1;
+                        c
+                    };
+                    flat += coord * idx_strides[d];
+                }
+                let max_start = (od[dim] - slice_sizes[dim]) as i64;
+                operand_idx[dim] += idx_vals[flat].clamp(0, max_start) as usize;
+            }
+            let s: usize = operand_idx
+                .iter()
+                .zip(&op_strides)
+                .map(|(&i, &st)| i * st)
+                .sum();
+            data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
+            o += 1;
+            if !advance(&mut oidx, &out_dims) {
+                break;
+            }
+        }
+    }
+    Tensor::new(operand.dtype(), out_dims, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_advance() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[]), Vec::<usize>::new());
+        let dims = [2, 2];
+        let mut idx = vec![0, 0];
+        let mut seen = vec![idx.clone()];
+        while advance(&mut idx, &dims) {
+            seen.push(idx.clone());
+        }
+        assert_eq!(seen, vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]);
+        // scalar: one iteration
+        let mut s: Vec<usize> = vec![];
+        assert!(!advance(&mut s, &[]));
+    }
+
+    #[test]
+    fn binary_scalar_broadcast() {
+        let a = Tensor::from_f32(vec![3], &[1.0, 2.0, 3.0]).unwrap();
+        let s = Tensor::from_f32(vec![], &[10.0]).unwrap();
+        let out = binary(&a, &s, "multiply").unwrap();
+        assert_eq!(out.as_f32().unwrap(), vec![10.0, 20.0, 30.0]);
+        let out = binary(&s, &a, "subtract").unwrap();
+        assert_eq!(out.as_f32().unwrap(), vec![9.0, 8.0, 7.0]);
+        let bad = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        assert!(binary(&a, &bad, "add").is_err());
+    }
+
+    #[test]
+    fn binary_int_ops() {
+        let a = Tensor::from_i32(vec![3], &[6, 7, 8]).unwrap();
+        let b = Tensor::from_i32(vec![3], &[3, 2, 16]).unwrap();
+        assert_eq!(binary(&a, &b, "divide").unwrap().as_i32().unwrap(), vec![2, 3, 0]);
+        assert_eq!(binary(&a, &b, "maximum").unwrap().as_i32().unwrap(), vec![6, 7, 16]);
+        assert!(binary(&a, &b, "power").is_err());
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        assert!(erf(0.0).abs() < 1e-6);
+        assert!((erf(1.0) - 0.8427_f32).abs() < 1e-4);
+        assert!((erf(-1.0) + 0.8427_f32).abs() < 1e-4);
+        assert!((erf(3.0) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn select_with_scalar_pred() {
+        let p = Tensor::from_u8(vec![], &[1]).unwrap();
+        let t = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let f = Tensor::from_f32(vec![2], &[3.0, 4.0]).unwrap();
+        assert_eq!(select(&p, &t, &f).unwrap().as_f32().unwrap(), vec![1.0, 2.0]);
+        let p0 = Tensor::from_u8(vec![], &[0]).unwrap();
+        assert_eq!(select(&p0, &t, &f).unwrap().as_f32().unwrap(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn convert_roundtrips() {
+        let u = Tensor::from_u8(vec![3], &[0, 7, 255]).unwrap();
+        let f = convert(&u, Dtype::F32).unwrap();
+        assert_eq!(f.as_f32().unwrap(), vec![0.0, 7.0, 255.0]);
+        let i = convert(&f, Dtype::I32).unwrap();
+        assert_eq!(i.as_i32().unwrap(), vec![0, 7, 255]);
+    }
+
+    #[test]
+    fn reduce_keeps_init_for_empty_axis() {
+        let data = Tensor::from_f32(vec![2, 0], &[]).unwrap();
+        let init = Tensor::from_f32(vec![], &[5.0]).unwrap();
+        let out = reduce(&data, &init, &[1], ReduceOp::Add).unwrap();
+        assert_eq!(out.as_f32().unwrap(), vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn reduce_multiple_dims() {
+        let data =
+            Tensor::from_f32(vec![2, 2, 2], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0])
+                .unwrap();
+        let init = Tensor::from_f32(vec![], &[0.0]).unwrap();
+        let out = reduce(&data, &init, &[0, 2], ReduceOp::Add).unwrap();
+        // keep dim 1: [1+2+5+6, 3+4+7+8]
+        assert_eq!(out.shape(), &[2]);
+        assert_eq!(out.as_f32().unwrap(), vec![14.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_3d() {
+        let t = Tensor::from_f32(vec![1, 2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let out = transpose(&t, &[2, 0, 1]).unwrap();
+        assert_eq!(out.shape(), &[3, 1, 2]);
+        assert_eq!(out.as_f32().unwrap(), vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn concatenate_inner_dim() {
+        let a = Tensor::from_f32(vec![2, 1], &[1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2, 2], &[3.0, 4.0, 5.0, 6.0]).unwrap();
+        let out = concatenate(&[&a, &b], 1).unwrap();
+        assert_eq!(out.shape(), &[2, 3]);
+        assert_eq!(out.as_f32().unwrap(), vec![1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn constant_scalar_and_bool() {
+        let shape = crate::hlo::parser::parse_shape("f32[]").unwrap();
+        let t = constant(&shape, "(2.5)").unwrap();
+        assert_eq!(t.as_f32().unwrap(), vec![2.5]);
+        let shape = crate::hlo::parser::parse_shape("pred[]").unwrap();
+        let t = constant(&shape, "(true)").unwrap();
+        assert_eq!(t.as_u8().unwrap(), &[1]);
+        let shape = crate::hlo::parser::parse_shape("f32[2]").unwrap();
+        assert!(constant(&shape, "(1)").is_err()); // element count mismatch
+    }
+
+    #[test]
+    fn gather_clamps_out_of_range_starts() {
+        let cb = Tensor::from_f32(vec![2], &[10.0, 20.0]).unwrap();
+        let idx = Tensor::from_i32(vec![2], &[5, -3]).unwrap();
+        let out = gather(
+            &cb,
+            &idx,
+            "offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1}",
+        )
+        .unwrap();
+        assert_eq!(out.as_f32().unwrap(), vec![20.0, 10.0]);
+    }
+}

@@ -1,10 +1,185 @@
-//! PJRT runtime: load AOT-lowered HLO text, compile once, execute many.
+//! Pluggable execution backends: load AOT-lowered HLO text, compile once,
+//! execute many.
 //!
-//! This is the only module that touches the `xla` crate. Pattern follows
-//! `/opt/xla-example/load_hlo/`: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`.
+//! Two implementations of the [`Backend`] / [`Executor`] /
+//! [`ResidentExecutor`] trait family:
+//!
+//! * [`interp`] — a pure-Rust HLO interpreter (the **default**): walks the
+//!   parsed [`crate::hlo::HloModule`] graph and evaluates the op subset
+//!   jax emits for these models on host [`Tensor`]s. Zero native
+//!   dependencies — this is what lets the runtime execute self-contained
+//!   on the resource-constrained CPUs the paper targets.
+//! * [`pjrt`] — the PJRT engine (behind the `pjrt` cargo feature): the
+//!   original XLA-compiled path, for machines with a native XLA install.
+//!
+//! Select at runtime with [`backend`] / [`default_backend`] (CLI
+//! `--backend interp|pjrt`, env `CLUSTERFORMER_BACKEND`).
 
-pub mod engine;
-pub mod literal;
+pub mod interp;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use engine::{Engine, Executable, ResidentExecutable};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+pub use interp::InterpBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, PjrtBackend, ResidentExecutable};
+
+/// A factory for executors: one per execution strategy.
+pub trait Backend {
+    /// Short stable name ("interp", "pjrt") for logs and labels.
+    fn name(&self) -> &'static str;
+
+    /// Load an HLO-text artifact and prepare it for execution. Expensive
+    /// work (PJRT compilation) may be deferred until first run.
+    fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>>;
+}
+
+/// A loaded module. The jax lowering uses `return_tuple=True`, so the
+/// single logical output is a tuple that implementations decompose into
+/// per-output tensors.
+pub trait Executor {
+    /// Label for error messages (usually the artifact path).
+    fn name(&self) -> &str;
+
+    /// Execute with the full positional input list; returns the
+    /// decomposed output tuple.
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Pin the trailing weight inputs so later calls supply only the
+    /// leading `n_dynamic` inputs (the image batch). `fixed` occupies
+    /// input positions `[n_dynamic, n_dynamic + fixed.len())`. This is
+    /// the deployment reality the paper assumes: the model lives in
+    /// device memory and only activations cross the boundary. The
+    /// weights arrive as a shared `Arc` so residents for several batch
+    /// sizes reference ONE host copy instead of cloning the model.
+    fn with_resident(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+    ) -> Result<Box<dyn ResidentExecutor>>;
+}
+
+/// An executor with its weight inputs resident (uploaded / pre-bound).
+pub trait ResidentExecutor {
+    fn name(&self) -> &str;
+
+    /// Execute with only the dynamic inputs (e.g. the image batch).
+    fn run(&self, dynamic: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Force any deferred compilation or upload now, so first-request
+    /// latency is steady-state. No-op for backends that compile eagerly.
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Which execution backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust HLO interpreter (no native dependencies).
+    #[default]
+    Interp,
+    /// XLA PJRT engine (`pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "interp" => Ok(BackendKind::Interp),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (expected interp|pjrt)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Interp => "interp",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Kind selected by the `CLUSTERFORMER_BACKEND` env var
+    /// (`interp|pjrt`, default `interp`).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("CLUSTERFORMER_BACKEND") {
+            Ok(s) => Self::parse(&s),
+            Err(_) => Ok(Self::default()),
+        }
+    }
+}
+
+/// Construct a backend of the given kind.
+pub fn backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Interp => Ok(Box::new(interp::InterpBackend)),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::cpu()?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => bail!(
+            "this build does not include the PJRT backend; rebuild with \
+             `--features pjrt` or use the default interpreter backend"
+        ),
+    }
+}
+
+/// Backend selected by the `CLUSTERFORMER_BACKEND` env var
+/// (`interp|pjrt`, default `interp`). Benches and tools without CLI
+/// plumbing use this.
+pub fn default_backend() -> Result<Box<dyn Backend>> {
+    backend(BackendKind::from_env()?)
+}
+
+/// Shared output-decomposition helper: executions produce a per-replica
+/// list of outputs; this runtime is single-replica, so anything else is
+/// a contract violation we refuse to guess about (an earlier version
+/// silently dropped extra replicas/buffers).
+pub(crate) fn single_replica<T>(mut replicas: Vec<Vec<T>>, name: &str) -> Result<Vec<T>> {
+    if replicas.len() != 1 {
+        bail!(
+            "{name}: expected outputs from exactly 1 replica, got {}",
+            replicas.len()
+        );
+    }
+    let outputs = replicas.pop().unwrap();
+    if outputs.is_empty() {
+        bail!("{name}: execution produced no outputs");
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse() {
+        assert_eq!(BackendKind::parse("interp").unwrap(), BackendKind::Interp);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Interp);
+        assert_eq!(BackendKind::Interp.name(), "interp");
+    }
+
+    #[test]
+    fn interp_backend_always_available() {
+        let b = backend(BackendKind::Interp).unwrap();
+        assert_eq!(b.name(), "interp");
+        let b = default_backend().unwrap();
+        assert_eq!(b.name(), "interp");
+    }
+
+    #[test]
+    fn single_replica_rejects_extras() {
+        assert_eq!(single_replica(vec![vec![1, 2]], "t").unwrap(), vec![1, 2]);
+        assert!(single_replica::<u8>(vec![], "t").is_err());
+        assert!(single_replica(vec![vec![1], vec![2]], "t").is_err());
+        assert!(single_replica::<u8>(vec![vec![]], "t").is_err());
+    }
+}

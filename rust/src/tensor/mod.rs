@@ -54,9 +54,10 @@ impl Dtype {
 
 /// A host tensor: shape + dtype + contiguous little-endian bytes.
 ///
-/// Data is kept as raw bytes so it can be handed to
-/// `xla::Literal::create_from_shape_and_untyped_data` without a copy of
-/// interpretation; typed views are provided for computation.
+/// Data is kept as raw bytes so execution backends can move it without
+/// reinterpretation (the interpreter's data-movement ops copy bytes; the
+/// PJRT backend hands them to `Literal::create_from_shape_and_untyped_data`
+/// as-is); typed views are provided for computation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     dtype: Dtype,

@@ -2,12 +2,17 @@
 //! the Rust side — manifest consistency, tpak layouts, HLO parameter
 //! signatures matching the manifest order.
 
+mod common;
+
 use clusterformer::hlo::HloModule;
 use clusterformer::model::Registry;
 use clusterformer::tensor::Dtype;
 
 #[test]
 fn manifest_and_packs_are_consistent() {
+    if !common::artifacts_available("manifest_and_packs_are_consistent") {
+        return;
+    }
     let mut registry = Registry::load("artifacts").expect("run `make artifacts`");
     let models = registry.model_names();
     assert_eq!(models, vec!["deit", "vit"]);
@@ -28,6 +33,9 @@ fn manifest_and_packs_are_consistent() {
 
 #[test]
 fn hlo_signatures_match_manifest_order() {
+    if !common::artifacts_available("hlo_signatures_match_manifest_order") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     for model in ["vit", "deit"] {
         let entry = registry.manifest.model(model).unwrap();
@@ -75,6 +83,9 @@ fn hlo_signatures_match_manifest_order() {
 
 #[test]
 fn val_set_matches_manifest() {
+    if !common::artifacts_available("val_set_matches_manifest") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     let (images, labels) = registry.val_set().unwrap();
     assert_eq!(images.shape()[0], registry.manifest.n_val);
@@ -89,6 +100,9 @@ fn val_set_matches_manifest() {
 
 #[test]
 fn clustered_packs_complete_for_whole_sweep() {
+    if !common::artifacts_available("clustered_packs_complete_for_whole_sweep") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     for model in ["vit", "deit"] {
         let entry = registry.manifest.model(model).unwrap();
@@ -109,6 +123,9 @@ fn clustered_packs_complete_for_whole_sweep() {
 
 #[test]
 fn every_hlo_artifact_parses_with_sane_costs() {
+    if !common::artifacts_available("every_hlo_artifact_parses_with_sane_costs") {
+        return;
+    }
     // Robustness sweep of the HLO parser + cost analysis over every
     // artifact the AOT pipeline produced.
     use clusterformer::hlo::{CostAnalysis, OpCategory};
@@ -136,6 +153,9 @@ fn every_hlo_artifact_parses_with_sane_costs() {
 
 #[test]
 fn clustered_stream_is_about_4x_smaller() {
+    if !common::artifacts_available("clustered_stream_is_about_4x_smaller") {
+        return;
+    }
     // The headline §V-C claim as a regression test.
     let mut registry = Registry::load("artifacts").unwrap();
     for model in ["vit", "deit"] {
@@ -164,6 +184,9 @@ fn clustered_stream_is_about_4x_smaller() {
 
 #[test]
 fn registry_error_paths() {
+    if !common::artifacts_available("registry_error_paths") {
+        return;
+    }
     use clusterformer::model::VariantKey;
     let mut registry = Registry::load("artifacts").unwrap();
     assert!(registry.manifest.model("nope").is_err());

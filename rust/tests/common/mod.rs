@@ -1,0 +1,17 @@
+//! Shared helpers for artifact-dependent integration tests.
+
+/// True when the AOT artifacts are present. When they are not (a fresh
+/// clone, a CI box without the Python build step), prints a visible
+/// skip notice and lets the caller return early instead of panicking —
+/// `cargo test` must stay green without artifacts.
+pub fn artifacts_available(test: &str) -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!(
+            "SKIPPED {test}: artifacts/manifest.json not found \
+             (run `make artifacts` to build the AOT artifacts)"
+        );
+        false
+    }
+}

@@ -1,6 +1,10 @@
 //! Integration: the full serving stack — server startup, routing,
 //! batching, execution, metrics, rejection, shutdown — against the real
-//! PJRT runtime and artifacts.
+//! execution backend (`CLUSTERFORMER_BACKEND`, default: the pure-Rust
+//! interpreter) and artifacts. Skips (visibly) when `artifacts/` is
+//! absent.
+
+mod common;
 
 use std::time::Duration;
 
@@ -21,6 +25,7 @@ fn single_image(images: &Tensor, row: usize) -> Tensor {
 fn start_server(policy: BatchPolicy) -> Server {
     Server::start(ServerConfig {
         artifacts_dir: "artifacts".into(),
+        backend: clusterformer::runtime::BackendKind::from_env().unwrap(),
         targets: vec![(
             "vit".to_string(),
             VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: 64 },
@@ -37,6 +42,9 @@ fn start_server(policy: BatchPolicy) -> Server {
 
 #[test]
 fn serves_requests_with_correct_answers() {
+    if !common::artifacts_available("serves_requests_with_correct_answers") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     let (images, labels) = registry.val_set().unwrap();
     let server = start_server(BatchPolicy::Adaptive);
@@ -72,6 +80,9 @@ fn serves_requests_with_correct_answers() {
 
 #[test]
 fn unknown_target_rejected_immediately() {
+    if !common::artifacts_available("unknown_target_rejected_immediately") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     let (images, _) = registry.val_set().unwrap();
     let server = start_server(BatchPolicy::Deadline);
@@ -82,12 +93,16 @@ fn unknown_target_rejected_immediately() {
 
 #[test]
 fn shutdown_flushes_inflight_requests() {
+    if !common::artifacts_available("shutdown_flushes_inflight_requests") {
+        return;
+    }
     let registry = Registry::load("artifacts").unwrap();
     let (images, _) = registry.val_set().unwrap();
     // SizeOnly with a large max_batch: requests sit in the queue until
     // shutdown's flush path executes them.
     let server = Server::start(ServerConfig {
         artifacts_dir: "artifacts".into(),
+        backend: clusterformer::runtime::BackendKind::from_env().unwrap(),
         targets: vec![("vit".to_string(), VariantKey::Baseline)],
         batcher: BatcherConfig {
             max_batch: 8,

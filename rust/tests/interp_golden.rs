@@ -1,0 +1,145 @@
+//! Integration: the pure-Rust HLO interpreter against a hand-written
+//! 2-layer MLP module with logits computed independently in plain Rust.
+//! Runs with **no artifacts** — this is the numeric anchor for the
+//! default backend on a fresh clone.
+
+use clusterformer::runtime::{backend, Backend as _, BackendKind, Executor as _, ResidentExecutor as _};
+use clusterformer::tensor::Tensor;
+
+/// `logits = relu(x @ w1 + b1) @ w2 + b2`, as jax would lower it
+/// (explicit broadcasts, ROOT tuple).
+const MLP_HLO: &str = r#"HloModule mlp_golden, entry_computation_layout={(f32[2,4]{1,0}, f32[4,8]{1,0}, f32[8]{0}, f32[8,3]{1,0}, f32[3]{0})->(f32[2,3]{1,0})}
+
+ENTRY %main.20 (x.1: f32[2,4], w1.2: f32[4,8], b1.3: f32[8], w2.4: f32[8,3], b2.5: f32[3]) -> (f32[2,3]) {
+  %x.1 = f32[2,4]{1,0} parameter(0)
+  %w1.2 = f32[4,8]{1,0} parameter(1)
+  %b1.3 = f32[8]{0} parameter(2)
+  %w2.4 = f32[8,3]{1,0} parameter(3)
+  %b2.5 = f32[3]{0} parameter(4)
+  %dot.6 = f32[2,8]{1,0} dot(%x.1, %w1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %broadcast.7 = f32[2,8]{1,0} broadcast(%b1.3), dimensions={1}
+  %add.8 = f32[2,8]{1,0} add(%dot.6, %broadcast.7)
+  %constant.9 = f32[] constant(0)
+  %broadcast.10 = f32[2,8]{1,0} broadcast(%constant.9), dimensions={}
+  %maximum.11 = f32[2,8]{1,0} maximum(%add.8, %broadcast.10)
+  %dot.12 = f32[2,3]{1,0} dot(%maximum.11, %w2.4), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %broadcast.13 = f32[2,3]{1,0} broadcast(%b2.5), dimensions={1}
+  %add.14 = f32[2,3]{1,0} add(%dot.12, %broadcast.13)
+  ROOT %tuple.15 = (f32[2,3]{1,0}) tuple(%add.14)
+}
+"#;
+
+/// Deterministic but non-trivial weights (signed, non-integer).
+fn weights() -> (Tensor, Tensor, Tensor, Tensor) {
+    let w1: Vec<f32> = (0..4 * 8)
+        .map(|i| ((i as f32) * 0.37).sin() * 0.5)
+        .collect();
+    let b1: Vec<f32> = (0..8).map(|i| 0.1 * (i as f32) - 0.3).collect();
+    let w2: Vec<f32> = (0..8 * 3)
+        .map(|i| ((i as f32) * 0.61).cos() * 0.4)
+        .collect();
+    let b2: Vec<f32> = vec![0.05, -0.2, 0.15];
+    (
+        Tensor::from_f32(vec![4, 8], &w1).unwrap(),
+        Tensor::from_f32(vec![8], &b1).unwrap(),
+        Tensor::from_f32(vec![8, 3], &w2).unwrap(),
+        Tensor::from_f32(vec![3], &b2).unwrap(),
+    )
+}
+
+fn images() -> Tensor {
+    let x: Vec<f32> = (0..2 * 4).map(|i| ((i as f32) * 0.83).sin()).collect();
+    Tensor::from_f32(vec![2, 4], &x).unwrap()
+}
+
+/// Reference logits via plain nested loops (no interpreter code shared).
+fn reference_logits(x: &Tensor, w1: &Tensor, b1: &Tensor, w2: &Tensor, b2: &Tensor) -> Vec<f32> {
+    let (xv, w1v, b1v) = (x.as_f32().unwrap(), w1.as_f32().unwrap(), b1.as_f32().unwrap());
+    let (w2v, b2v) = (w2.as_f32().unwrap(), b2.as_f32().unwrap());
+    let mut hidden = vec![0.0f32; 2 * 8];
+    for r in 0..2 {
+        for c in 0..8 {
+            let mut acc = b1v[c];
+            for k in 0..4 {
+                acc += xv[r * 4 + k] * w1v[k * 8 + c];
+            }
+            hidden[r * 8 + c] = acc.max(0.0);
+        }
+    }
+    let mut logits = vec![0.0f32; 2 * 3];
+    for r in 0..2 {
+        for c in 0..3 {
+            let mut acc = b2v[c];
+            for k in 0..8 {
+                acc += hidden[r * 8 + k] * w2v[k * 3 + c];
+            }
+            logits[r * 3 + c] = acc;
+        }
+    }
+    logits
+}
+
+fn write_module() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "clusterformer-golden-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mlp_golden.hlo.txt");
+    std::fs::write(&path, MLP_HLO).unwrap();
+    path
+}
+
+#[test]
+fn mlp_golden_logits_match_reference() {
+    let path = write_module();
+    let backend = backend(BackendKind::Interp).unwrap();
+    let exe = backend.load_hlo(&path).unwrap();
+
+    let x = images();
+    let (w1, b1, w2, b2) = weights();
+    let expected = reference_logits(&x, &w1, &b1, &w2, &b2);
+
+    // Full-input path.
+    let out = exe
+        .run(&[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()])
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), &[2, 3]);
+    let got = out[0].as_f32().unwrap();
+    for (g, e) in got.iter().zip(&expected) {
+        assert!(
+            (g - e).abs() <= 1e-5,
+            "full-input path diverges: got {g}, expected {e}"
+        );
+    }
+
+    // Weight-resident path must agree exactly with the same module.
+    let resident = exe
+        .with_resident(1, std::sync::Arc::new(vec![w1, b1, w2, b2]))
+        .unwrap();
+    resident.warmup().unwrap();
+    let out2 = resident.run(std::slice::from_ref(&x)).unwrap();
+    assert_eq!(out2[0].shape(), &[2, 3]);
+    let got2 = out2[0].as_f32().unwrap();
+    for (g, e) in got2.iter().zip(&expected) {
+        assert!(
+            (g - e).abs() <= 1e-5,
+            "resident path diverges: got {g}, expected {e}"
+        );
+    }
+}
+
+#[test]
+fn mlp_golden_rejects_bad_inputs() {
+    let path = write_module();
+    let backend = backend(BackendKind::Interp).unwrap();
+    let exe = backend.load_hlo(&path).unwrap();
+    let (w1, b1, w2, b2) = weights();
+    // missing inputs
+    assert!(exe.run(&[images()]).is_err());
+    // shape mismatch on the image input
+    let bad = Tensor::from_f32(vec![2, 5], &[0.0; 10]).unwrap();
+    assert!(exe.run(&[bad, w1, b1, w2, b2]).is_err());
+}

@@ -1,0 +1,179 @@
+//! Offline API stub of the `xla` PJRT bindings (crates.io `xla = "0.1.6"`).
+//!
+//! The build environments this repo targets (edge CI boxes, air-gapped
+//! containers) have neither network access nor a native XLA install, so
+//! the `pjrt` cargo feature resolves to this stub by default: it exposes
+//! the exact API surface `runtime::pjrt` uses, compiles with zero native
+//! dependencies, and fails **at runtime** with an instructive error.
+//!
+//! To execute through a real PJRT client, point the `xla` dependency in
+//! `rust/Cargo.toml` at the real crate (or `[patch]` it) on a machine
+//! with an XLA installation — `runtime::pjrt` compiles unchanged against
+//! either.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `Send + Sync + 'static` bound.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build uses the offline xla API stub; point the `xla` \
+         dependency at the real crate (see rust/README.md) or run with the \
+         default interpreter backend (--backend interp)"
+    )))
+}
+
+/// Element types of the PJRT C API (discriminants irrelevant to the stub).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+    C64,
+    C128,
+}
+
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        stub_err("creating PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("compiling")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        stub_err("uploading buffer")
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        stub_err("parsing HLO text")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("executing")
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("executing")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("downloading buffer")
+    }
+}
+
+pub struct Shape;
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        false
+    }
+}
+
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> Vec<i64> {
+        Vec::new()
+    }
+
+    pub fn ty(&self) -> ElementType {
+        ElementType::F32
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub_err("creating literal")
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        stub_err("reading literal shape")
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        stub_err("reading literal array shape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub_err("decomposing tuple literal")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err("reading literal data")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_instructive() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"));
+        assert!(msg.contains("interp"));
+    }
+}
