@@ -39,20 +39,29 @@ pub fn unpack_indices(packed: &[u8], n: usize, bits: u32) -> Result<Vec<u8>> {
     if packed.len() < packed_len(n, bits) {
         bail!("packed buffer too short: {} < {}", packed.len(), packed_len(n, bits));
     }
+    let mut out = vec![0u8; n];
+    unpack_into(packed, bits, &mut out);
+    Ok(out)
+}
+
+/// Unpack `out.len()` indices into `out` without allocating — the
+/// kernel-loop variant of [`unpack_indices`]. The caller must uphold
+/// `1 <= bits <= 8` and `packed.len() >= packed_len(out.len(), bits)`
+/// (checked by slice indexing, so a violation panics rather than
+/// reading garbage).
+pub fn unpack_into(packed: &[u8], bits: u32, out: &mut [u8]) {
     let mask = ((1u16 << bits) - 1) as u8;
-    let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
-    for _ in 0..n {
+    for slot in out.iter_mut() {
         let byte = bitpos / 8;
         let off = (bitpos % 8) as u32;
         let mut v = packed[byte] >> off;
         if off + bits > 8 {
             v |= packed[byte + 1] << (8 - off);
         }
-        out.push(v & mask);
+        *slot = v & mask;
         bitpos += bits as usize;
     }
-    Ok(out)
 }
 
 /// Bytes needed to pack `n` indices at `bits` bits each.

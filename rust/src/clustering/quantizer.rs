@@ -3,11 +3,18 @@
 //! Python pipeline writes (`{model}_clustered_{scheme}_{c}.tpak`).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::{bail, Result};
 
 use super::kmeans::{assign_1d, lloyd_1d, KmeansInit};
 use crate::tensor::{io::TensorPack, Dtype, Tensor};
+
+/// Process-wide count of full-tensor dequantizations. The runtime's
+/// cluster-native dot path must never dematerialize weights; tests
+/// assert this stays flat across an inference (see
+/// `tests/interp_clustered.rs`).
+static DEQUANT_CALLS: AtomicUsize = AtomicUsize::new(0);
 
 /// Codebooks are always padded to 256 rows — the paper's always-8-bit
 /// indices (§III-B: sub-byte packing is "rarely used" for alignment).
@@ -50,9 +57,30 @@ pub struct ClusteredTensors {
     pub indices: HashMap<String, Tensor>,
     /// `[names.len(), 256]` f32 padded codebook stack (row i = names[i]).
     pub codebooks: Tensor,
+    /// name -> codebook row, built once at construction (dequantize used
+    /// to do an O(n) `names.position()` scan per call).
+    row_of: HashMap<String, usize>,
 }
 
 impl ClusteredTensors {
+    fn index_rows(names: &[String]) -> HashMap<String, usize> {
+        names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect()
+    }
+
+    /// Codebook row for a clustered tensor name.
+    pub fn row(&self, name: &str) -> Option<usize> {
+        self.row_of.get(name).copied()
+    }
+
+    /// How many full-tensor dequantizations have happened process-wide.
+    pub fn dequant_calls() -> usize {
+        DEQUANT_CALLS.load(Ordering::Relaxed)
+    }
+
     /// Real (unpadded) table-of-centroids bytes (paper §V-C).
     pub fn table_bytes(&self) -> usize {
         let tables = match self.scheme {
@@ -73,16 +101,15 @@ impl ClusteredTensors {
         self.indices.values().map(|t| t.elems() * 4).sum()
     }
 
-    /// Dequantize one tensor back to FP32.
+    /// Dequantize one tensor back to FP32. This is the slow path the
+    /// runtime's LUT kernel exists to avoid; every call is counted (see
+    /// [`ClusteredTensors::dequant_calls`]).
     pub fn dequantize(&self, name: &str) -> Result<Tensor> {
         let Some(idx) = self.indices.get(name) else {
             bail!("{name:?} is not a clustered tensor");
         };
-        let row = self
-            .names
-            .iter()
-            .position(|n| n == name)
-            .expect("names/indices in sync");
+        DEQUANT_CALLS.fetch_add(1, Ordering::Relaxed);
+        let row = self.row(name).expect("names/indices in sync");
         let cb = self.codebooks.as_f32()?;
         let table = &cb[row * CODEBOOK_PAD..(row + 1) * CODEBOOK_PAD];
         let vals: Vec<f32> = idx
@@ -153,6 +180,7 @@ impl ClusteredTensors {
         Ok(Self {
             scheme,
             n_clusters,
+            row_of: Self::index_rows(names),
             names: names.to_vec(),
             indices,
             codebooks,
@@ -230,6 +258,7 @@ impl Quantizer {
         Ok(ClusteredTensors {
             scheme: self.scheme,
             n_clusters: self.n_clusters,
+            row_of: ClusteredTensors::index_rows(names),
             names: names.to_vec(),
             indices,
             codebooks: Tensor::from_f32(

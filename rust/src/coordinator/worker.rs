@@ -72,13 +72,23 @@ impl VariantExecutor {
         if batch_sizes.is_empty() {
             return Err(anyhow!("{model}/{}: no HLO artifacts", key.label()));
         }
-        // One shared host copy of the weights for every batch size.
+        // One shared host copy of the raw weights for every batch size;
+        // the clustered representation rides along so cluster-native
+        // backends can bind packed indices instead of dequantizing.
+        // Note each batch size loads its own HLO artifact, so backend
+        // bind-time state (the interpreter's WeightCache) is per batch
+        // size; deduplicating that derived state across executors is an
+        // open ROADMAP item.
         let weights = Arc::new(variant.weight_inputs);
         let mut residents = Vec::with_capacity(batch_sizes.len());
         for b in &batch_sizes {
             let exe = backend.load_hlo(&variant.hlo_paths[b])?;
             // dynamic inputs: just the image batch (1 tensor)
-            residents.push(exe.with_resident(1, weights.clone())?);
+            residents.push(exe.with_resident_clustered(
+                1,
+                weights.clone(),
+                variant.clustered.clone(),
+            )?);
         }
         Ok(Self {
             label: format!("{model}/{}", key.label()),

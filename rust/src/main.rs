@@ -38,7 +38,8 @@ fn cli() -> Cli {
                 .opt("model", "vit", "model name (vit|deit)")
                 .opt("variant", "baseline", "baseline | {entire|perlayer}_{c}")
                 .opt("backend", "interp", "execution backend: interp | pjrt")
-                .opt("n", "0", "images to evaluate (0 = all)"),
+                .opt("n", "0", "images to evaluate (0 = all)")
+                .opt("threads", "0", "interpreter kernel threads (0 = all cores)"),
         )
         .command(
             Command::new("serve", "run the coordinator under synthetic load")
@@ -51,7 +52,8 @@ fn cli() -> Cli {
                 .opt("max-batch", "8", "dynamic batcher max batch")
                 .opt("max-wait-ms", "25", "dynamic batcher deadline")
                 .opt("policy", "adaptive", "sizeonly | deadline | adaptive")
-                .opt("seed", "7", "workload RNG seed"),
+                .opt("seed", "7", "workload RNG seed")
+                .opt("threads", "0", "interpreter kernel threads (0 = all cores)"),
         )
         .command(
             Command::new("compress", "cluster weights in Rust and report")
@@ -151,7 +153,18 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
     v
 }
 
+/// Apply the `--threads` knob by setting `CLUSTERFORMER_THREADS` for the
+/// interpreter's GEMM/LUT kernels (0 leaves the default: all cores).
+fn apply_threads_knob(args: &clusterformer::util::cli::Args) -> Result<()> {
+    let threads = args.usize("threads")?;
+    if threads > 0 {
+        std::env::set_var("CLUSTERFORMER_THREADS", threads.to_string());
+    }
+    Ok(())
+}
+
 fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
+    apply_threads_knob(args)?;
     let backend = backend(BackendKind::parse(args.str("backend")?)?)?;
     let mut registry = Registry::load(args.str("artifacts")?)?;
     let key = VariantKey::parse(args.str("variant")?)?;
@@ -177,6 +190,7 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
+    apply_threads_knob(args)?;
     let model = args.str("model")?.to_string();
     let variant = VariantKey::parse(args.str("variant")?)?;
     let policy = match args.str("policy")? {

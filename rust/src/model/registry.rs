@@ -8,6 +8,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -59,6 +60,10 @@ pub struct ModelVariant {
     pub weight_stream_bytes: usize,
     /// Bytes of the real (unpadded) table(s) of centroids.
     pub table_bytes: usize,
+    /// The clustered representation, kept alive alongside the flat
+    /// inputs so cluster-native backends (the interpreter's LUT matmul)
+    /// can execute on indices + codebooks without ever dequantizing.
+    pub clustered: Option<Arc<ClusteredTensors>>,
 }
 
 /// Loads and caches model artifacts.
@@ -148,6 +153,7 @@ impl Registry {
             hlo_paths: hlo_paths(&self.manifest, &entry.hlo_baseline),
             weight_stream_bytes: stream,
             table_bytes: 0,
+            clustered: None,
         })
     }
 
@@ -179,13 +185,15 @@ impl Registry {
             stream += t.nbytes();
             inputs.push(t);
         }
+        let table_bytes = ct.table_bytes();
         Ok(ModelVariant {
             model: model.to_string(),
             key: VariantKey::Clustered { scheme, clusters },
             weight_inputs: inputs,
             hlo_paths: hlo_paths(&self.manifest, &entry.hlo_clustered),
             weight_stream_bytes: stream,
-            table_bytes: ct.table_bytes(),
+            table_bytes,
+            clustered: Some(Arc::new(ct)),
         })
     }
 

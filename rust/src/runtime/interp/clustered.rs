@@ -1,0 +1,539 @@
+//! Cluster-native matmul: execute `dot` directly on clustered weight
+//! indices + codebook, so compressed weights never dematerialize to a
+//! full f32 tensor on the hot path.
+//!
+//! This is the paper's LUT-accumulation trick (arXiv:2106.16006 §III):
+//! for one output element `out[i,j] = Σ_k x[i,k] * cb[idx[k,j]]`, first
+//! bucket-accumulate the activations by cluster id
+//! (`bucket[c] = Σ_{k: idx[k,j]=c} x[i,k]`), then do **one multiply per
+//! cluster** (`out[i,j] = Σ_c bucket[c] * cb[c]`). The weight stream per
+//! matmul is the index bytes (1 byte per element, or 4/6-bit packed for
+//! prepared resident weights) plus one small table — ≥4x fewer weight
+//! bytes than streaming f32.
+//!
+//! Two entry points:
+//! * [`lut_matmul_u8`] — on a raw row-major u8 index tensor (the
+//!   full-input interpreter path, no preparation step);
+//! * [`prepare`] + [`lut_matmul_packed`] — bind-time packing of indices
+//!   to `bits_for_clusters` bits, column-major, for weight-resident
+//!   executors ([`super::InterpResident`]'s `WeightCache`).
+//!
+//! [`plan`] is the graph pass that recognizes the clustered-matmul
+//! pattern jax lowers (`u8 indices -> convert -> gather(codebook row) ->
+//! reshape* -> dot`) and rewires those `dot`s onto the LUT kernel,
+//! skipping the dequantizing gather entirely.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use super::eval::{attr_int, attr_list};
+use super::gemm::{configured_threads, DotSpec};
+use crate::clustering::packing::{bits_for_clusters, pack_indices, packed_len, unpack_into};
+use crate::hlo::parser::{HloInstruction, HloModule};
+
+/// How many `dot`s were executed through the LUT kernel (process-wide
+/// test/debug observability; not yet wired into serving metrics).
+static LUT_DOTS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn lut_dot_count() -> usize {
+    LUT_DOTS.load(Ordering::Relaxed)
+}
+
+/// Largest codebook the LUT kernel accepts (the paper's padded table).
+pub const MAX_CLUSTERS: usize = 256;
+
+/// Below this much work (bucket adds + cluster multiplies) the scoped
+/// thread spawn overhead dominates and the kernel runs single-threaded.
+const PAR_MIN_WORK: usize = 1 << 20;
+
+// ---------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------
+
+enum LutSrc<'a> {
+    /// Bind-time packed indices: column-major, `row_bytes` bytes per
+    /// output column, `bits` bits per index.
+    Packed { packed: &'a [u8], row_bytes: usize, bits: u32 },
+    /// Raw row-major `[k, n]` u8 indices.
+    Rows(&'a [u8]),
+}
+
+struct LutTask<'a> {
+    x: &'a [f32],
+    k: usize,
+    n: usize,
+    cb: &'a [f32],
+    src: LutSrc<'a>,
+}
+
+/// Compute output rows `[row0, row0 + nrows)` of `out[m, n]`.
+fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32]) {
+    let (k, n) = (t.k, t.n);
+    let mut col = vec![0u8; k];
+    let mut bucket = vec![0.0f32; t.cb.len()];
+    for j in 0..n {
+        match t.src {
+            LutSrc::Packed { packed, row_bytes, bits } => {
+                unpack_into(&packed[j * row_bytes..(j + 1) * row_bytes], bits, &mut col);
+            }
+            LutSrc::Rows(idx) => {
+                for i in 0..k {
+                    col[i] = idx[i * n + j];
+                }
+            }
+        }
+        for r in 0..nrows {
+            let xrow = &t.x[(row0 + r) * k..(row0 + r + 1) * k];
+            bucket.fill(0.0);
+            for i in 0..k {
+                bucket[col[i] as usize] += xrow[i];
+            }
+            let mut acc = 0.0f32;
+            for (&bv, &cv) in bucket.iter().zip(t.cb) {
+                acc += bv * cv;
+            }
+            out[r * n + j] = acc;
+        }
+    }
+}
+
+/// Parallelism is over output *rows*: each thread re-unpacks the shared
+/// index columns, which duplicates the (small, usually LLC-resident)
+/// index stream but streams each activation row exactly once. The dual
+/// split — over columns — would instead duplicate the activation
+/// stream, which for serving-shaped matmuls (m = batch x tokens >> n)
+/// is the larger of the two.
+fn lut_matmul(t: &LutTask<'_>, m: usize, out: &mut [f32]) {
+    LUT_DOTS.fetch_add(1, Ordering::Relaxed);
+    if m == 0 || t.n == 0 {
+        return;
+    }
+    let work = m * t.n * (t.k + t.cb.len());
+    let nt = configured_threads().min(m);
+    if nt <= 1 || work < PAR_MIN_WORK {
+        lut_rows(t, 0, m, out);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * t.n).enumerate() {
+            let nrows = out_chunk.len() / t.n;
+            s.spawn(move || lut_rows(t, ci * chunk, nrows, out_chunk));
+        }
+    });
+}
+
+/// `x[m,k] @ dequantize(idx[k,n], codebook)` without materializing the
+/// dequantized weights: the indices are streamed as 1-byte values.
+pub fn lut_matmul_u8(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    idx: &[u8],
+    codebook: &[f32],
+) -> Result<Vec<f32>> {
+    if x.len() != m * k {
+        bail!("lut_matmul_u8: lhs has {} values, expected {m}x{k}", x.len());
+    }
+    if idx.len() != k * n {
+        bail!("lut_matmul_u8: indices have {} values, expected {k}x{n}", idx.len());
+    }
+    if codebook.is_empty() || codebook.len() > MAX_CLUSTERS {
+        bail!("lut_matmul_u8: codebook length {} not in 1..={MAX_CLUSTERS}", codebook.len());
+    }
+    let used = idx.iter().max().map(|&mx| mx as usize + 1).unwrap_or(0);
+    if used > codebook.len() {
+        bail!(
+            "lut_matmul_u8: index {} out of range for {}-entry codebook",
+            used - 1,
+            codebook.len()
+        );
+    }
+    // The graph's table is always padded to 256 rows; bucketing only the
+    // clusters actually referenced keeps the per-element multiply count
+    // at the real cluster count.
+    let mut out = vec![0.0f32; m * n];
+    let task = LutTask { x, k, n, cb: &codebook[..used], src: LutSrc::Rows(idx) };
+    lut_matmul(&task, m, &mut out);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Prepared (resident) clustered weights
+// ---------------------------------------------------------------------
+
+/// A clustered weight bound into a `WeightCache`: indices bit-packed at
+/// the minimum width for the cluster count (4 bits for c<=16, 6 for
+/// c<=64, ...), column-major so the kernel streams each output column's
+/// indices contiguously. This is the form that stays resident across
+/// calls — the full f32 weight tensor never exists.
+#[derive(Debug, Clone)]
+pub struct PreparedClustered {
+    k: usize,
+    n: usize,
+    bits: u32,
+    row_bytes: usize,
+    packed: Vec<u8>,
+    /// `1 << bits` entries (source codebook padded with zeros).
+    codebook: Vec<f32>,
+}
+
+impl PreparedClustered {
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Weight bytes streamed per matmul call (packed indices + table) —
+    /// the quantity the paper's memory-traffic argument is about.
+    pub fn weight_bytes(&self) -> usize {
+        self.packed.len() + self.codebook.len() * 4
+    }
+
+    /// Weight bytes a dense f32 matmul of the same shape would stream.
+    pub fn dense_bytes(&self) -> usize {
+        self.k * self.n * 4
+    }
+}
+
+/// Pack a row-major `[k, n]` u8 index tensor + codebook for resident
+/// execution. `n_clusters` (from the model's `ClusteredTensors`, when
+/// known) widens the bit width beyond the largest observed index so all
+/// codebook rows of a sweep share one layout.
+pub fn prepare(
+    idx: &[u8],
+    k: usize,
+    n: usize,
+    codebook: &[f32],
+    n_clusters: Option<usize>,
+) -> Result<PreparedClustered> {
+    if idx.len() != k * n {
+        bail!("prepare: indices have {} values, expected {k}x{n}", idx.len());
+    }
+    let max_idx = idx.iter().copied().max().unwrap_or(0) as usize;
+    if max_idx >= codebook.len() {
+        bail!("prepare: index {max_idx} out of range for {}-entry codebook", codebook.len());
+    }
+    let clusters = n_clusters.unwrap_or(0).max(max_idx + 1);
+    if clusters > MAX_CLUSTERS {
+        bail!("prepare: {clusters} clusters exceeds {MAX_CLUSTERS}");
+    }
+    let bits = bits_for_clusters(clusters);
+    let mut cb = vec![0.0f32; 1usize << bits];
+    let copy = codebook.len().min(cb.len());
+    cb[..copy].copy_from_slice(&codebook[..copy]);
+
+    let row_bytes = packed_len(k, bits);
+    let mut packed = vec![0u8; row_bytes * n];
+    let mut col = vec![0u8; k];
+    for j in 0..n {
+        for i in 0..k {
+            col[i] = idx[i * n + j];
+        }
+        let p = pack_indices(&col, bits)?;
+        packed[j * row_bytes..j * row_bytes + p.len()].copy_from_slice(&p);
+    }
+    Ok(PreparedClustered { k, n, bits, row_bytes, packed, codebook: cb })
+}
+
+/// `x[m,k] @ w` where `w` is a [`PreparedClustered`] weight: streams the
+/// packed sub-byte indices, never the f32 weights.
+pub fn lut_matmul_packed(x: &[f32], m: usize, prep: &PreparedClustered) -> Result<Vec<f32>> {
+    if x.len() != m * prep.k {
+        bail!("lut_matmul_packed: lhs has {} values, expected {m}x{}", x.len(), prep.k);
+    }
+    let mut out = vec![0.0f32; m * prep.n];
+    let task = LutTask {
+        x,
+        k: prep.k,
+        n: prep.n,
+        cb: &prep.codebook,
+        src: LutSrc::Packed {
+            packed: &prep.packed,
+            row_bytes: prep.row_bytes,
+            bits: prep.bits,
+        },
+    };
+    lut_matmul(&task, m, &mut out);
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Graph plan: recognize clustered dots, skip the dequantizing gather
+// ---------------------------------------------------------------------
+
+/// One `dot` rewired onto the LUT kernel.
+#[derive(Debug, Clone)]
+pub struct ClusteredDotPlan {
+    /// Instruction whose value is the u8 index tensor.
+    pub idx: String,
+    /// Instruction whose value is the 1-D f32 codebook row.
+    pub table: String,
+    /// rhs logical shape `[k, n]`.
+    pub k: usize,
+    pub n: usize,
+}
+
+/// The interpreter's per-module execution plan: `dot`s to run through
+/// the LUT kernel, and the dequantize-chain instructions (convert /
+/// gather / reshape) that are skipped because the kernel replaces them.
+#[derive(Debug, Default)]
+pub struct ExecPlan {
+    /// Keyed by `dot` instruction name.
+    pub clustered: HashMap<String, ClusteredDotPlan>,
+    pub skip: HashSet<String>,
+}
+
+/// Build the execution plan for a module: every `dot` whose rhs is a
+/// single-use `u8 indices -> convert -> gather(1-D f32 table) ->
+/// reshape*` chain becomes a LUT dot. Unrecognized dots (and chains with
+/// extra consumers) are left on the dense path, so planning is always
+/// safe.
+pub fn plan(module: &HloModule) -> ExecPlan {
+    let mut out = ExecPlan::default();
+    let Ok(entry) = module.entry() else {
+        return out;
+    };
+    let by_name: HashMap<&str, &HloInstruction> = entry
+        .instructions
+        .iter()
+        .map(|i| (i.name.as_str(), i))
+        .collect();
+    let mut consumers: HashMap<&str, usize> = HashMap::new();
+    for inst in &entry.instructions {
+        for op in &inst.operands {
+            *consumers.entry(op.as_str()).or_insert(0) += 1;
+        }
+    }
+    for inst in &entry.instructions {
+        if inst.opcode != "dot" {
+            continue;
+        }
+        if let Some((p, chain)) = match_clustered(inst, &by_name, &consumers) {
+            out.skip.extend(chain);
+            out.clustered.insert(inst.name.clone(), p);
+        }
+    }
+    out
+}
+
+fn single_use(consumers: &HashMap<&str, usize>, name: &str) -> bool {
+    consumers.get(name).copied().unwrap_or(0) == 1
+}
+
+fn match_clustered(
+    dot: &HloInstruction,
+    by_name: &HashMap<&str, &HloInstruction>,
+    consumers: &HashMap<&str, usize>,
+) -> Option<(ClusteredDotPlan, Vec<String>)> {
+    let get = |name: &str| by_name.get(name).copied();
+    // Plain 2-D matmul over the lhs trailing dim (the shape
+    // `kernels.clustered_matmul` lowers to): no batch dims, rhs [k, n]
+    // contracted on dim 0, f32 result.
+    let spec = DotSpec::from_attrs(&dot.attrs);
+    if !spec.lhs_batch.is_empty() || !spec.rhs_batch.is_empty() {
+        return None;
+    }
+    if spec.rhs_contracting != [0] || dot.shape.dtype != "f32" {
+        return None;
+    }
+    let lhs = get(dot.operands.first()?.as_str())?;
+    let lrank = lhs.shape.dims.len();
+    if lrank == 0 || spec.lhs_contracting != [lrank - 1] {
+        return None;
+    }
+    let rhs = get(dot.operands.get(1)?.as_str())?;
+    let rd = &rhs.shape.dims;
+    if rd.len() != 2 {
+        return None;
+    }
+    let (k, n) = (rd[0], rd[1]);
+
+    // Chase the rhs through single-use reshapes/copies to the gather.
+    let mut chain: Vec<String> = Vec::new();
+    let mut cur = rhs;
+    let gather = loop {
+        if cur.is_root || !single_use(consumers, &cur.name) {
+            return None;
+        }
+        match cur.opcode.as_str() {
+            "gather" => break cur,
+            "reshape" | "copy" => {
+                chain.push(cur.name.clone());
+                cur = get(cur.operands.first()?.as_str())?;
+            }
+            _ => return None,
+        }
+    };
+
+    // The gather must be a per-element codebook lookup on a 1-D table.
+    let ga = gather.attrs.as_str();
+    if !attr_list(ga, "offset_dims")?.is_empty()
+        || attr_list(ga, "collapsed_slice_dims")? != [0]
+        || attr_list(ga, "start_index_map")? != [0]
+        || attr_list(ga, "slice_sizes")? != [1]
+    {
+        return None;
+    }
+    let table = get(gather.operands.first()?.as_str())?;
+    if table.shape.dims.len() != 1
+        || table.shape.dtype != "f32"
+        || table.shape.dims[0] == 0
+        || table.shape.dims[0] > MAX_CLUSTERS
+    {
+        return None;
+    }
+    let start = get(gather.operands.get(1)?.as_str())?;
+    if attr_int(ga, "index_vector_dim")? as usize != start.shape.dims.len() {
+        return None;
+    }
+    chain.push(gather.name.clone());
+
+    // Chase the start indices through single-use convert/reshape/copy to
+    // the raw u8 index tensor.
+    let mut cur = start;
+    while cur.shape.dtype != "u8" {
+        if cur.is_root || !single_use(consumers, &cur.name) {
+            return None;
+        }
+        match cur.opcode.as_str() {
+            "convert" | "reshape" | "copy" => {
+                chain.push(cur.name.clone());
+                cur = get(cur.operands.first()?.as_str())?;
+            }
+            _ => return None,
+        }
+    }
+    if cur.shape.dims.iter().product::<usize>() != k * n {
+        return None;
+    }
+    let plan = ClusteredDotPlan { idx: cur.name.clone(), table: table.name.clone(), k, n };
+    Some((plan, chain))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::gemm::dot_general_naive;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn reference(x: &[f32], m: usize, k: usize, n: usize, idx: &[u8], cb: &[f32]) -> Vec<f32> {
+        let w: Vec<f32> = idx.iter().map(|&i| cb[i as usize]).collect();
+        let lhs = Tensor::from_f32(vec![m, k], x).unwrap();
+        let rhs = Tensor::from_f32(vec![k, n], &w).unwrap();
+        let spec = DotSpec {
+            lhs_contracting: vec![1],
+            rhs_contracting: vec![0],
+            ..Default::default()
+        };
+        dot_general_naive(&lhs, &rhs, &spec).unwrap().as_f32().unwrap()
+    }
+
+    fn fixture(m: usize, k: usize, n: usize, clusters: usize) -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+        let mut rng = Pcg32::new(42);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<u8> = (0..k * n).map(|_| rng.range(0, clusters - 1) as u8).collect();
+        let cb: Vec<f32> = (0..clusters).map(|_| rng.normal() as f32).collect();
+        (x, idx, cb)
+    }
+
+    #[test]
+    fn lut_matches_dequantized_reference() {
+        let (m, k, n, c) = (5, 17, 9, 16);
+        let (x, idx, cb) = fixture(m, k, n, c);
+        let want = reference(&x, m, k, n, &idx, &cb);
+        let got = lut_matmul_u8(&x, m, k, n, &idx, &cb).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn packed_matches_u8_path() {
+        let (m, k, n, c) = (4, 23, 7, 64);
+        let (x, idx, cb) = fixture(m, k, n, c);
+        let prep = prepare(&idx, k, n, &cb, Some(c)).unwrap();
+        assert_eq!(prep.bits(), 6);
+        let a = lut_matmul_u8(&x, m, k, n, &idx, &cb).unwrap();
+        let b = lut_matmul_packed(&x, m, &prep).unwrap();
+        // Identical bucket order -> bit-for-bit equal.
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prepared_weight_bytes_shrink() {
+        let (_, idx, cb) = fixture(1, 64, 64, 64);
+        let prep = prepare(&idx, 64, 64, &cb, Some(64)).unwrap();
+        // 6-bit packing: 64*64*6/8 = 3072 index bytes + 64-entry table.
+        assert_eq!(prep.weight_bytes(), 3072 + 64 * 4);
+        assert_eq!(prep.dense_bytes(), 64 * 64 * 4);
+        assert!(prep.dense_bytes() as f64 / prep.weight_bytes() as f64 > 4.0);
+    }
+
+    #[test]
+    fn rejects_out_of_range_indices() {
+        let cb = vec![0.0f32; 4];
+        let idx = vec![7u8; 4];
+        assert!(lut_matmul_u8(&[0.0; 2], 1, 2, 2, &idx, &cb).is_err());
+        assert!(prepare(&idx, 2, 2, &cb, None).is_err());
+    }
+
+    #[test]
+    fn plan_matches_clustered_pattern() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[4,6], cbs: f32[1,256], idx: u8[6,5]) -> (f32[4,5]) {\n  \
+            %x = f32[4,6]{1,0} parameter(0)\n  \
+            %cbs = f32[1,256]{1,0} parameter(1)\n  \
+            %idx = u8[6,5]{1,0} parameter(2)\n  \
+            %sl = f32[1,256]{1,0} slice(%cbs), slice={[0:1], [0:256]}\n  \
+            %row = f32[256]{0} reshape(%sl)\n  \
+            %cvt = s32[6,5]{1,0} convert(%idx)\n  \
+            %w = f32[6,5]{1,0} gather(%row, %cvt), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}\n  \
+            %d = f32[4,5]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+            ROOT %t = (f32[4,5]{1,0}) tuple(%d)\n}\n";
+        let module = HloModule::parse(hlo).unwrap();
+        let p = plan(&module);
+        assert_eq!(p.clustered.len(), 1);
+        let cd = &p.clustered["d"];
+        assert_eq!(cd.idx, "idx");
+        assert_eq!(cd.table, "row");
+        assert_eq!((cd.k, cd.n), (6, 5));
+        assert!(p.skip.contains("w") && p.skip.contains("cvt"));
+        assert!(!p.skip.contains("row") && !p.skip.contains("idx"));
+    }
+
+    #[test]
+    fn plan_leaves_multi_use_gather_dense() {
+        // The gather result feeds the dot AND the root -> no plan.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[4,6], row: f32[256], idx: u8[6,5]) -> (f32[4,5], f32[6,5]) {\n  \
+            %x = f32[4,6]{1,0} parameter(0)\n  \
+            %row = f32[256]{0} parameter(1)\n  \
+            %idx = u8[6,5]{1,0} parameter(2)\n  \
+            %cvt = s32[6,5]{1,0} convert(%idx)\n  \
+            %w = f32[6,5]{1,0} gather(%row, %cvt), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}\n  \
+            %d = f32[4,5]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+            ROOT %t = (f32[4,5]{1,0}, f32[6,5]{1,0}) tuple(%d, %w)\n}\n";
+        let module = HloModule::parse(hlo).unwrap();
+        let p = plan(&module);
+        assert!(p.clustered.is_empty());
+        assert!(p.skip.is_empty());
+    }
+
+    #[test]
+    fn plan_ignores_plain_dots() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (a: f32[2,3], b: f32[3,2]) -> f32[2,2] {\n  \
+            %a = f32[2,3]{1,0} parameter(0)\n  \
+            %b = f32[3,2]{1,0} parameter(1)\n  \
+            ROOT %d = f32[2,2]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let module = HloModule::parse(hlo).unwrap();
+        let p = plan(&module);
+        assert!(p.clustered.is_empty());
+    }
+}

@@ -3,10 +3,11 @@
 //! instruction name. HLO text is already topologically ordered, so a
 //! single forward pass suffices.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::clustered::{self, ClusteredDotPlan, ExecPlan, PreparedClustered};
 use super::ops;
 use crate::hlo::parser::{HloInstruction, HloModule};
 use crate::tensor::{Dtype, Tensor};
@@ -111,8 +112,23 @@ impl Value<'_> {
 }
 
 /// Evaluate the module's entry computation on positional `inputs`;
-/// returns the decomposed root tuple (or the single root array).
+/// returns the decomposed root tuple (or the single root array). Plain
+/// variant with no plan or cache (unit tests only — the executors always
+/// evaluate through a plan).
+#[cfg(test)]
 pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    evaluate_planned(module, inputs, &ExecPlan::default(), None)
+}
+
+/// Evaluate with an execution plan (clustered `dot`s on the LUT kernel,
+/// dequantize chains skipped) and, on the weight-resident path, a
+/// [`WeightCache`] of precomputed weight-only subexpressions.
+pub(crate) fn evaluate_planned<'a>(
+    module: &'a HloModule,
+    inputs: &[&'a Tensor],
+    plan: &ExecPlan,
+    cache: Option<&'a WeightCache>,
+) -> Result<Vec<Tensor>> {
     let entry = module.entry()?;
     let params = module.parameters()?;
     if inputs.len() != params.len() {
@@ -123,7 +139,7 @@ pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Ten
             inputs.len()
         );
     }
-    let mut env: HashMap<&str, Value<'_>> =
+    let mut env: HashMap<&str, Value<'a>> =
         HashMap::with_capacity(entry.instructions.len());
     for ((name, shape), &input) in params.iter().zip(inputs) {
         if input.shape() != shape.dims.as_slice() {
@@ -146,15 +162,33 @@ pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Ten
 
     let mut root: Option<&HloInstruction> = None;
     for inst in &entry.instructions {
-        if inst.opcode != "parameter" {
-            let value = eval_instruction(module, inst, &env)
-                .with_context(|| format!("evaluating %{} = {}", inst.name, inst.opcode))?;
-            check_declared_shape(inst, &value)?;
-            env.insert(inst.name.as_str(), value);
-        }
         if inst.is_root {
             root = Some(inst);
         }
+        if inst.opcode == "parameter" {
+            continue;
+        }
+        // Dequantize-chain nodes replaced by the LUT kernel, and weight
+        // expressions with no runtime reader (fully served by the cache).
+        if plan.skip.contains(&inst.name)
+            || cache.is_some_and(|c| c.skip.contains(&inst.name))
+        {
+            continue;
+        }
+        // Weight-only subexpressions precomputed at residency-bind time.
+        if let Some(t) = cache.and_then(|c| c.values.get(&inst.name)) {
+            env.insert(inst.name.as_str(), Value::Borrowed(t));
+            continue;
+        }
+        let result = if let Some(cd) = plan.clustered.get(&inst.name) {
+            eval_clustered_dot(inst, cd, &env, cache)
+        } else {
+            eval_instruction(module, inst, &env)
+        };
+        let value = result
+            .with_context(|| format!("evaluating %{} = {}", inst.name, inst.opcode))?;
+        check_declared_shape(inst, &value)?;
+        env.insert(inst.name.as_str(), value);
     }
     let root = root
         .or_else(|| entry.instructions.last())
@@ -165,6 +199,215 @@ pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Ten
         Some(Value::Borrowed(t)) => Ok(vec![t.clone()]),
         None => bail!("root %{} was never evaluated", root.name),
     }
+}
+
+/// Run one planned clustered `dot` through the LUT kernel: activations
+/// from the environment, weights as u8 indices (prepared/packed when a
+/// `WeightCache` is bound) — the f32 weight tensor is never built.
+fn eval_clustered_dot<'a>(
+    inst: &HloInstruction,
+    cd: &ClusteredDotPlan,
+    env: &HashMap<&str, Value<'a>>,
+    cache: Option<&WeightCache>,
+) -> Result<Value<'a>> {
+    let lhs = lookup(env, inst, 0)?.tensor()?;
+    let x = lhs.as_f32()?;
+    if cd.k == 0 || lhs.elems() % cd.k != 0 {
+        bail!(
+            "clustered dot %{}: lhs {:?} does not contract over k={}",
+            inst.name,
+            lhs.shape(),
+            cd.k
+        );
+    }
+    let m = lhs.elems() / cd.k;
+    let out = if let Some(prep) = cache.and_then(|c| c.prepared.get(&inst.name)) {
+        clustered::lut_matmul_packed(&x, m, prep)?
+    } else {
+        let idx = env
+            .get(cd.idx.as_str())
+            .ok_or_else(|| anyhow!("clustered dot %{}: indices %{} not evaluated", inst.name, cd.idx))?
+            .tensor()?;
+        let table = env
+            .get(cd.table.as_str())
+            .ok_or_else(|| anyhow!("clustered dot %{}: table %{} not evaluated", inst.name, cd.table))?
+            .tensor()?;
+        clustered::lut_matmul_u8(&x, m, cd.k, cd.n, idx.as_u8()?, &table.as_f32()?)?
+    };
+    Ok(Value::Owned(Tensor::from_f32(inst.shape.dims.clone(), &out)?))
+}
+
+// ---------------------------------------------------------------------
+// Weight cache: residency-time partial evaluation
+// ---------------------------------------------------------------------
+
+/// Precomputed state bound to one weight-resident executor: the values
+/// of weight-only subexpressions (computed once instead of per call) and
+/// the packed cluster-native form of every planned clustered `dot`'s
+/// weights. Built by [`build_weight_cache`].
+#[derive(Debug, Default)]
+pub(crate) struct WeightCache {
+    /// Instruction name -> precomputed value (weight-only frontier nodes
+    /// whose result feeds a dynamic computation).
+    pub values: HashMap<String, Tensor>,
+    /// `dot` instruction name -> bit-packed resident clustered weight.
+    pub prepared: HashMap<String, PreparedClustered>,
+    /// Weight-only nodes no runtime consumer reads (everything they feed
+    /// is cached, plan-skipped, or itself dead) — skipped per call.
+    pub skip: HashSet<String>,
+}
+
+/// Partially evaluate the entry computation over the fixed (weight)
+/// inputs: every instruction that depends only on fixed parameters is
+/// computed once here. Cached are the *frontier* values — fixed-only
+/// nodes with a dynamic consumer — and only when non-expanding
+/// (`|out| <= Σ|operands|`), so weight reshapes/transposes/dequantized
+/// side uses are cached while bias broadcasts to batch shape (cheap but
+/// large) are recomputed per call. Chain nodes skipped by the plan are
+/// never evaluated — that is the whole point of the LUT path.
+pub(crate) fn build_weight_cache(
+    module: &HloModule,
+    n_dynamic: usize,
+    fixed: &[Tensor],
+    plan: &ExecPlan,
+    n_clusters: Option<usize>,
+) -> Result<WeightCache> {
+    let entry = module.entry()?;
+    let params = module.parameters()?;
+    let pos: HashMap<&str, usize> = params
+        .iter()
+        .enumerate()
+        .map(|(i, (n, _))| (n.as_str(), i))
+        .collect();
+
+    let mut env: HashMap<&str, Value<'_>> = HashMap::new();
+    let mut fixed_only: HashSet<&str> = HashSet::new();
+    for inst in &entry.instructions {
+        if plan.skip.contains(&inst.name) || plan.clustered.contains_key(&inst.name) {
+            continue;
+        }
+        if inst.opcode == "parameter" {
+            if let Some(&p) = pos.get(inst.name.as_str()) {
+                if p >= n_dynamic && p - n_dynamic < fixed.len() {
+                    env.insert(inst.name.as_str(), Value::Borrowed(&fixed[p - n_dynamic]));
+                    fixed_only.insert(inst.name.as_str());
+                }
+            }
+            continue;
+        }
+        if inst.is_root {
+            continue;
+        }
+        if !inst.operands.iter().all(|o| fixed_only.contains(o.as_str())) {
+            continue;
+        }
+        let value = eval_instruction(module, inst, &env).with_context(|| {
+            format!("precomputing weight expression %{} = {}", inst.name, inst.opcode)
+        })?;
+        check_declared_shape(inst, &value)?;
+        if matches!(value, Value::Owned(_)) {
+            env.insert(inst.name.as_str(), value);
+            fixed_only.insert(inst.name.as_str());
+        }
+    }
+
+    // Frontier: fixed-only values with at least one consumer that is not
+    // itself fixed-only (so the value is needed at run time).
+    let mut cache = WeightCache::default();
+    let mut wanted: HashSet<&str> = HashSet::new();
+    for inst in &entry.instructions {
+        if fixed_only.contains(inst.name.as_str()) || plan.skip.contains(&inst.name) {
+            continue;
+        }
+        for op in &inst.operands {
+            wanted.insert(op.as_str());
+        }
+    }
+    for inst in &entry.instructions {
+        if inst.opcode == "parameter" || !wanted.contains(inst.name.as_str()) {
+            continue;
+        }
+        let Some(value) = env.get(inst.name.as_str()) else {
+            continue;
+        };
+        let Ok(t) = value.tensor() else { continue };
+        let operand_elems: usize = inst
+            .operands
+            .iter()
+            .filter_map(|o| env.get(o.as_str()))
+            .filter_map(|v| v.tensor().ok())
+            .map(|t| t.elems())
+            .sum();
+        // Zero-operand nodes (constant, iota) are always worth caching:
+        // their size is bounded by the module text / declared shape, and
+        // re-materializing a constant re-parses its literal payload.
+        if inst.operands.is_empty() || t.elems() <= operand_elems {
+            cache.values.insert(inst.name.clone(), t.clone());
+        }
+    }
+
+    // Bind every planned clustered dot whose indices and table are
+    // weight-derived (they always are for real models): bit-pack the
+    // indices at the narrowest width once, here.
+    for (dot_name, cd) in &plan.clustered {
+        let (Some(idx), Some(table)) = (env.get(cd.idx.as_str()), env.get(cd.table.as_str()))
+        else {
+            continue;
+        };
+        let (Ok(idx), Ok(table)) = (idx.tensor(), table.tensor()) else {
+            continue;
+        };
+        let prep = clustered::prepare(
+            idx.as_u8()?,
+            cd.k,
+            cd.n,
+            &table.as_f32()?,
+            n_clusters,
+        )?;
+        cache.prepared.insert(dot_name.clone(), prep);
+    }
+
+    // Dead weight-only nodes: once a clustered dot is prepared, its table
+    // chain (codebook slice/reshape) has no runtime reader; likewise the
+    // interiors feeding only cached frontier values. Skipping them per
+    // call leaves the per-call work touching activations only. A planned
+    // dot *without* a prepared weight still reads its idx/table from the
+    // environment, so those stay pinned.
+    let mut pinned: HashSet<&str> = HashSet::new();
+    for (dot_name, cd) in &plan.clustered {
+        if !cache.prepared.contains_key(dot_name) {
+            pinned.insert(cd.idx.as_str());
+            pinned.insert(cd.table.as_str());
+        }
+    }
+    let mut consumers: HashMap<&str, Vec<&str>> = HashMap::new();
+    for inst in &entry.instructions {
+        for op in &inst.operands {
+            consumers.entry(op.as_str()).or_default().push(inst.name.as_str());
+        }
+    }
+    for inst in entry.instructions.iter().rev() {
+        let name = inst.name.as_str();
+        if inst.opcode == "parameter"
+            || !fixed_only.contains(name)
+            || cache.values.contains_key(name)
+            || pinned.contains(name)
+        {
+            continue;
+        }
+        let dead = match consumers.get(name) {
+            None => true,
+            Some(cs) => cs.iter().all(|c| {
+                plan.skip.contains(*c)
+                    || cache.skip.contains(*c)
+                    || cache.values.contains_key(*c)
+            }),
+        };
+        if dead {
+            cache.skip.insert(name.to_string());
+        }
+    }
+    Ok(cache)
 }
 
 /// Every kernel's result is checked against the instruction's declared

@@ -8,12 +8,26 @@
 //!
 //! This is the default execution backend: no PJRT, no native XLA, no
 //! external crates — exactly the self-contained CPU path a
-//! resource-constrained edge device can run. It trades peak throughput
-//! for zero dependencies; the `pjrt` feature recovers the compiled path
-//! on machines that have XLA.
+//! resource-constrained edge device can run. Since PR 2 the hot matmul
+//! path is a real kernel subsystem rather than an index walk:
+//!
+//! * [`gemm`] — `dot` canonicalized to batched row-major GEMM and run
+//!   through a cache-blocked, register-tiled, `std::thread::scope`-
+//!   parallel f32 microkernel (`CLUSTERFORMER_THREADS` knob);
+//! * [`clustered`] — clustered weights execute `dot` directly on packed
+//!   cluster indices + codebook via the paper's LUT accumulation, so
+//!   compressed weights are never dematerialized to f32;
+//! * a `WeightCache` per resident executor precomputes weight-only
+//!   subexpressions and bit-packs clustered weights once at bind time.
+//!
+//! The `pjrt` feature recovers the XLA-compiled path on machines that
+//! have a native install.
 
 mod eval;
 mod ops;
+
+pub mod clustered;
+pub mod gemm;
 
 use std::path::Path;
 use std::sync::Arc;
@@ -21,6 +35,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use super::{Backend, Executor, ResidentExecutor};
+use crate::clustering::ClusteredTensors;
 use crate::hlo::HloModule;
 use crate::tensor::Tensor;
 
@@ -32,14 +47,17 @@ impl Backend for InterpBackend {
         "interp"
     }
 
-    /// "Compilation" here is parsing plus a preflight pass that rejects
-    /// modules using ops outside the supported subset up front.
+    /// "Compilation" here is parsing, a preflight pass that rejects
+    /// modules using ops outside the supported subset, and the execution
+    /// plan pass that rewires clustered matmuls onto the LUT kernel.
     fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>> {
         let module = HloModule::parse_file(path)?;
         eval::preflight(&module)?;
+        let plan = Arc::new(clustered::plan(&module));
         let n_params = module.parameters()?.len();
         Ok(Box::new(InterpExecutor {
             module: Arc::new(module),
+            plan,
             n_params,
             name: path.display().to_string(),
         }))
@@ -49,6 +67,7 @@ impl Backend for InterpBackend {
 /// A loaded module, ready to evaluate.
 pub struct InterpExecutor {
     module: Arc<HloModule>,
+    plan: Arc<clustered::ExecPlan>,
     n_params: usize,
     name: String,
 }
@@ -60,7 +79,7 @@ impl Executor for InterpExecutor {
 
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         let refs: Vec<&Tensor> = inputs.iter().collect();
-        let outputs = eval::evaluate(&self.module, &refs)?;
+        let outputs = eval::evaluate_planned(&self.module, &refs, &self.plan, None)?;
         crate::runtime::single_replica(vec![outputs], &self.name)
     }
 
@@ -68,6 +87,19 @@ impl Executor for InterpExecutor {
         &self,
         n_dynamic: usize,
         fixed: Arc<Vec<Tensor>>,
+    ) -> Result<Box<dyn ResidentExecutor>> {
+        self.with_resident_clustered(n_dynamic, fixed, None)
+    }
+
+    /// The interpreter's residency step is a partial evaluation: weight-
+    /// only subexpressions are computed once into a `WeightCache`, and
+    /// clustered weights are bit-packed for the LUT kernel — so per-call
+    /// work touches only activations and compressed weights.
+    fn with_resident_clustered(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
     ) -> Result<Box<dyn ResidentExecutor>> {
         if n_dynamic + fixed.len() != self.n_params {
             bail!(
@@ -77,8 +109,17 @@ impl Executor for InterpExecutor {
                 self.n_params
             );
         }
+        let cache = eval::build_weight_cache(
+            &self.module,
+            n_dynamic,
+            &fixed,
+            &self.plan,
+            clustered.as_ref().map(|c| c.n_clusters),
+        )?;
         Ok(Box::new(InterpResident {
             module: self.module.clone(),
+            plan: self.plan.clone(),
+            cache,
             name: self.name.clone(),
             n_dynamic,
             fixed,
@@ -89,9 +130,13 @@ impl Executor for InterpExecutor {
 /// Weight-resident evaluation: the fixed inputs are pre-bound host-side
 /// behind a shared `Arc` (the interpreter's analogue of device-resident
 /// buffers — one host copy no matter how many batch sizes reference
-/// it), so each call supplies only the dynamic image batch.
+/// it), plus the bind-time `WeightCache` of precomputed weight
+/// expressions and packed clustered weights. Each call supplies only the
+/// dynamic image batch.
 pub struct InterpResident {
     module: Arc<HloModule>,
+    plan: Arc<clustered::ExecPlan>,
+    cache: eval::WeightCache,
     name: String,
     n_dynamic: usize,
     fixed: Arc<Vec<Tensor>>,
@@ -112,7 +157,8 @@ impl ResidentExecutor for InterpResident {
             );
         }
         let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
-        let outputs = eval::evaluate(&self.module, &refs)?;
+        let outputs =
+            eval::evaluate_planned(&self.module, &refs, &self.plan, Some(&self.cache))?;
         crate::runtime::single_replica(vec![outputs], &self.name)
     }
 }
@@ -165,6 +211,31 @@ mod tests {
         assert!(resident.run(&[x.clone(), x]).is_err());
         // wrong resident arity is rejected
         assert!(exe.with_resident(2, fixed).is_err());
+    }
+
+    #[test]
+    fn resident_weight_cache_precomputes_weight_chain() {
+        // w is reshaped and transposed before use: both are weight-only
+        // expressions, precomputed at bind time, and the result still
+        // matches the full-input path exactly.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2,2], w: f32[4]) -> (f32[2,2]) {\n  \
+            %x = f32[2,2]{1,0} parameter(0)\n  \
+            %w = f32[4]{0} parameter(1)\n  \
+            %wr = f32[2,2]{1,0} reshape(%w)\n  \
+            %wt = f32[2,2]{1,0} transpose(%wr), dimensions={1,0}\n  \
+            %d = f32[2,2]{1,0} dot(%x, %wt), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+            ROOT %t = (f32[2,2]{1,0}) tuple(%d)\n}\n";
+        let exe = load(hlo);
+        let x = Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let w = Tensor::from_f32(vec![4], &[1.0, 0.0, 0.0, 2.0]).unwrap();
+        let full = exe.run(&[x.clone(), w.clone()]).unwrap();
+        let resident = exe.with_resident(1, Arc::new(vec![w])).unwrap();
+        let res = resident.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(full[0], res[0]);
+        // w reshaped/transposed is diag(1,2) transposed = diag(1,2);
+        // x @ diag(1,2) scales columns.
+        assert_eq!(res[0].as_f32().unwrap(), vec![1.0, 4.0, 3.0, 8.0]);
     }
 
     #[test]

@@ -497,92 +497,12 @@ pub(crate) fn concatenate(parts: &[&Tensor], dim: usize) -> Result<Tensor> {
 
 /// General `dot` (XLA DotGeneral): output dims are batch dims, then lhs
 /// free dims, then rhs free dims, accumulated in f32 like the XLA CPU
-/// backend.
+/// backend. Canonicalized to a batched GEMM and executed by the blocked
+/// microkernel in [`super::gemm`]; the old index-walk survives as
+/// [`super::gemm::dot_general_naive`] (reference + bench baseline).
 pub(crate) fn dot(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
-    let lc = attr_list(attrs, "lhs_contracting_dims").unwrap_or_default();
-    let rc = attr_list(attrs, "rhs_contracting_dims").unwrap_or_default();
-    let lb = attr_list(attrs, "lhs_batch_dims").unwrap_or_default();
-    let rb = attr_list(attrs, "rhs_batch_dims").unwrap_or_default();
-    if lc.len() != rc.len() || lb.len() != rb.len() {
-        bail!("dot: contracting/batch dim arity mismatch");
-    }
-    let a = lhs.as_f32()?;
-    let b = rhs.as_f32()?;
-    let ld = lhs.shape();
-    let rd = rhs.shape();
-    for (&l, &r) in lb.iter().zip(&rb) {
-        if ld[l] != rd[r] {
-            bail!("dot: batch dim size mismatch ({} vs {})", ld[l], rd[r]);
-        }
-    }
-    for (&l, &r) in lc.iter().zip(&rc) {
-        if ld[l] != rd[r] {
-            bail!("dot: contracting dim size mismatch ({} vs {})", ld[l], rd[r]);
-        }
-    }
-    let lfree: Vec<usize> = (0..ld.len())
-        .filter(|d| !lb.contains(d) && !lc.contains(d))
-        .collect();
-    let rfree: Vec<usize> = (0..rd.len())
-        .filter(|d| !rb.contains(d) && !rc.contains(d))
-        .collect();
-    let batch_sizes: Vec<usize> = lb.iter().map(|&d| ld[d]).collect();
-    let lfree_sizes: Vec<usize> = lfree.iter().map(|&d| ld[d]).collect();
-    let rfree_sizes: Vec<usize> = rfree.iter().map(|&d| rd[d]).collect();
-    let c_sizes: Vec<usize> = lc.iter().map(|&d| ld[d]).collect();
-
-    let mut out_dims = batch_sizes.clone();
-    out_dims.extend_from_slice(&lfree_sizes);
-    out_dims.extend_from_slice(&rfree_sizes);
-    let out_elems = elem_count(&out_dims);
-    if out_elems == 0 {
-        return Tensor::from_f32(out_dims, &[]);
-    }
-    let ls = strides(ld);
-    let rs = strides(rd);
-    let c_empty = c_sizes.iter().any(|&s| s == 0);
-    let mut out = Vec::with_capacity(out_elems);
-
-    let mut bidx = vec![0usize; lb.len()];
-    loop {
-        let lb_off: usize = bidx.iter().zip(&lb).map(|(&i, &d)| i * ls[d]).sum();
-        let rb_off: usize = bidx.iter().zip(&rb).map(|(&i, &d)| i * rs[d]).sum();
-        let mut lidx = vec![0usize; lfree.len()];
-        loop {
-            let l_off =
-                lb_off + lidx.iter().zip(&lfree).map(|(&i, &d)| i * ls[d]).sum::<usize>();
-            let mut ridx = vec![0usize; rfree.len()];
-            loop {
-                let r_off = rb_off
-                    + ridx.iter().zip(&rfree).map(|(&i, &d)| i * rs[d]).sum::<usize>();
-                let mut acc = 0.0f32;
-                if !c_empty {
-                    let mut cidx = vec![0usize; lc.len()];
-                    loop {
-                        let la =
-                            l_off + cidx.iter().zip(&lc).map(|(&i, &d)| i * ls[d]).sum::<usize>();
-                        let rbo =
-                            r_off + cidx.iter().zip(&rc).map(|(&i, &d)| i * rs[d]).sum::<usize>();
-                        acc += a[la] * b[rbo];
-                        if !advance(&mut cidx, &c_sizes) {
-                            break;
-                        }
-                    }
-                }
-                out.push(acc);
-                if !advance(&mut ridx, &rfree_sizes) {
-                    break;
-                }
-            }
-            if !advance(&mut lidx, &lfree_sizes) {
-                break;
-            }
-        }
-        if !advance(&mut bidx, &batch_sizes) {
-            break;
-        }
-    }
-    Tensor::from_f32(out_dims, &out)
+    let spec = super::gemm::DotSpec::from_attrs(attrs);
+    super::gemm::dot_general(lhs, rhs, &spec)
 }
 
 /// Positions of the special and spatial dims within one side of a
@@ -761,11 +681,13 @@ pub(crate) fn convolution(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Ten
         let rs = strides(rd);
         let os = strides(&out_dims);
         let mut osp = vec![0usize; n_sp];
+        // Hoisted odometer: `advance` always wraps back to all-zeros, so
+        // one allocation serves every (batch, channel, window) walk.
+        let mut ksp = vec![0usize; n_sp];
         loop {
             for bi in 0..batch {
                 for oc in 0..out_f {
                     let mut acc = 0.0f32;
-                    let mut ksp = vec![0usize; n_sp];
                     loop {
                         let mut in_off = bi * ls[li.d0];
                         let mut k_off = oc * rs[lk.d1];
@@ -962,9 +884,12 @@ pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> R
     if out_elems > 0 {
         let src = operand.bytes();
         let mut oidx = vec![0usize; out_rank];
+        // Hoisted out of the per-element loop (this used to allocate a
+        // fresh Vec for every output element).
+        let mut operand_idx = vec![0usize; od.len()];
         let mut o = 0usize;
         loop {
-            let mut operand_idx = vec![0usize; od.len()];
+            operand_idx.fill(0);
             for (j, &p) in offset_dims.iter().enumerate() {
                 operand_idx[offset_src[j]] = oidx[p];
             }

@@ -24,6 +24,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::clustering::ClusteredTensors;
 use crate::tensor::Tensor;
 
 pub use interp::InterpBackend;
@@ -63,6 +64,22 @@ pub trait Executor {
         n_dynamic: usize,
         fixed: Arc<Vec<Tensor>>,
     ) -> Result<Box<dyn ResidentExecutor>>;
+
+    /// [`Executor::with_resident`] plus the clustered representation of
+    /// the weights, when the model has one. Backends with a
+    /// cluster-native kernel (the interpreter's LUT matmul) use the
+    /// metadata to keep weights compressed end-to-end; the default
+    /// implementation ignores it and binds the fixed inputs as-is, so
+    /// callers can pass it unconditionally.
+    fn with_resident_clustered(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+    ) -> Result<Box<dyn ResidentExecutor>> {
+        let _ = clustered;
+        self.with_resident(n_dynamic, fixed)
+    }
 }
 
 /// An executor with its weight inputs resident (uploaded / pre-bound).

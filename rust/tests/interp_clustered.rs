@@ -1,0 +1,196 @@
+//! End-to-end: the interpreter on a clustered model executes the matmul
+//! cluster-natively — compressed weights (u8 indices + codebook) flow
+//! from `ClusteredTensors` through the resident executor to the LUT
+//! kernel with **zero full-tensor dequantization** on the dot path
+//! (asserted via the counter in `ClusteredTensors`). No artifacts
+//! needed: the module below is the exact pattern jax lowers for
+//! `kernels.clustered_matmul` (codebook row slice + u8 -> s32 convert ->
+//! gather -> dot).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use clusterformer::clustering::{ClusterScheme, ClusteredTensors, Quantizer};
+use clusterformer::runtime::interp::clustered::lut_dot_count;
+use clusterformer::runtime::{backend, Backend as _, BackendKind, Executor as _};
+use clusterformer::tensor::Tensor;
+
+/// `logits = x @ dequant(idx, codebooks[0]) + bias`, lowered the way the
+/// clustered forward pass lowers: the dequantize is an explicit
+/// convert/gather chain in the graph.
+const CLUSTERED_HLO: &str = "HloModule clustered_mlp\n\
+    ENTRY %main (x: f32[4,6], cbs: f32[1,256], idx: u8[6,5], bias: f32[5]) -> (f32[4,5]) {\n  \
+    %x = f32[4,6]{1,0} parameter(0)\n  \
+    %cbs = f32[1,256]{1,0} parameter(1)\n  \
+    %idx = u8[6,5]{1,0} parameter(2)\n  \
+    %bias = f32[5]{0} parameter(3)\n  \
+    %sl = f32[1,256]{1,0} slice(%cbs), slice={[0:1], [0:256]}\n  \
+    %row = f32[256]{0} reshape(%sl)\n  \
+    %cvt = s32[6,5]{1,0} convert(%idx)\n  \
+    %w = f32[6,5]{1,0} gather(%row, %cvt), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}\n  \
+    %d = f32[4,5]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+    %bb = f32[4,5]{1,0} broadcast(%bias), dimensions={1}\n  \
+    %add = f32[4,5]{1,0} add(%d, %bb)\n  \
+    ROOT %t = (f32[4,5]{1,0}) tuple(%add)\n}\n";
+
+/// The LUT/dequant counters are process-wide; serialize the tests in
+/// this binary so their before/after reads don't race.
+static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn write_module() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "clusterformer-clustered-e2e-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("clustered_mlp.hlo.txt");
+    std::fs::write(&path, CLUSTERED_HLO).unwrap();
+    path
+}
+
+/// Cluster a deterministic [6,5] weight into 8 clusters; returns the
+/// representation plus the dense original for reference math.
+fn clustered_fixture() -> (ClusteredTensors, Tensor) {
+    let w: Vec<f32> = (0..30).map(|i| ((i as f32) * 0.47).sin()).collect();
+    let dense = Tensor::from_f32(vec![6, 5], &w).unwrap();
+    let names = vec!["w".to_string()];
+    let mut tensors = HashMap::new();
+    tensors.insert("w".to_string(), dense.clone());
+    let ct = Quantizer::new(8, ClusterScheme::PerLayer)
+        .run(&names, &tensors)
+        .unwrap();
+    (ct, dense)
+}
+
+fn inputs(ct: &ClusteredTensors) -> (Tensor, Tensor, Tensor, Tensor) {
+    let x: Vec<f32> = (0..24).map(|i| ((i as f32) * 0.83).cos()).collect();
+    (
+        Tensor::from_f32(vec![4, 6], &x).unwrap(),
+        ct.codebooks.clone(),
+        ct.indices["w"].clone(),
+        Tensor::from_f32(vec![5], &[0.1, -0.2, 0.3, -0.4, 0.5]).unwrap(),
+    )
+}
+
+/// Plain-Rust reference: x @ dequantized-w + bias (independent of the
+/// interpreter and of the LUT kernel).
+fn reference(x: &Tensor, ct: &ClusteredTensors, bias: &Tensor) -> Vec<f32> {
+    let xv = x.as_f32().unwrap();
+    let idx = ct.indices["w"].as_u8().unwrap().to_vec();
+    let cb = ct.codebooks.as_f32().unwrap();
+    let bv = bias.as_f32().unwrap();
+    let mut out = vec![0.0f32; 4 * 5];
+    for r in 0..4 {
+        for c in 0..5 {
+            let mut acc = 0.0f32;
+            for k in 0..6 {
+                acc += xv[r * 6 + k] * cb[idx[k * 5 + c] as usize];
+            }
+            out[r * 5 + c] = acc + bv[c];
+        }
+    }
+    out
+}
+
+#[test]
+fn clustered_dot_runs_lut_kernel_without_dequantizing() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let path = write_module();
+    let backend = backend(BackendKind::Interp).unwrap();
+    let exe = backend.load_hlo(&path).unwrap();
+    let (ct, _dense) = clustered_fixture();
+    let (x, cbs, idx, bias) = inputs(&ct);
+    let want = reference(&x, &ct, &bias);
+
+    let dequants_before = ClusteredTensors::dequant_calls();
+    let luts_before = lut_dot_count();
+
+    // Full-input path: plan fires, u8 LUT kernel.
+    let out = exe
+        .run(&[x.clone(), cbs.clone(), idx.clone(), bias.clone()])
+        .unwrap();
+    assert_eq!(out[0].shape(), &[4, 5]);
+    let got = out[0].as_f32().unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "full path: {g} vs {w}");
+    }
+
+    // Weight-resident path with clustered metadata: packed LUT kernel.
+    let resident = exe
+        .with_resident_clustered(
+            1,
+            Arc::new(vec![cbs, idx, bias]),
+            Some(Arc::new(ct)),
+        )
+        .unwrap();
+    let out2 = resident.run(std::slice::from_ref(&x)).unwrap();
+    let got2 = out2[0].as_f32().unwrap();
+    for (g, w) in got2.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "resident path: {g} vs {w}");
+    }
+
+    // Both runs went through the LUT kernel...
+    assert!(
+        lut_dot_count() >= luts_before + 2,
+        "expected both dots on the LUT path ({} -> {})",
+        luts_before,
+        lut_dot_count()
+    );
+    // ...and neither ever dematerialized a clustered tensor.
+    assert_eq!(
+        ClusteredTensors::dequant_calls(),
+        dequants_before,
+        "clustered dot path must perform zero full-tensor dequantization"
+    );
+}
+
+#[test]
+fn multi_use_dequantize_falls_back_to_dense_and_matches() {
+    // The gather result feeds the dot AND the root tuple, so the plan
+    // must leave this dot on the dense path (skipping the chain would
+    // starve the second consumer) — and the numbers must still be right.
+    let hlo = "HloModule clustered_multiuse\n\
+        ENTRY %main (x: f32[4,6], cbs: f32[1,256], idx: u8[6,5]) -> (f32[4,5], f32[6,5]) {\n  \
+        %x = f32[4,6]{1,0} parameter(0)\n  \
+        %cbs = f32[1,256]{1,0} parameter(1)\n  \
+        %idx = u8[6,5]{1,0} parameter(2)\n  \
+        %sl = f32[1,256]{1,0} slice(%cbs), slice={[0:1], [0:256]}\n  \
+        %row = f32[256]{0} reshape(%sl)\n  \
+        %cvt = s32[6,5]{1,0} convert(%idx)\n  \
+        %w = f32[6,5]{1,0} gather(%row, %cvt), offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}\n  \
+        %d = f32[4,5]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+        ROOT %t = (f32[4,5]{1,0}, f32[6,5]{1,0}) tuple(%d, %w)\n}\n";
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = std::env::temp_dir().join(format!(
+        "clusterformer-clustered-multiuse-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("multiuse.hlo.txt");
+    std::fs::write(&path, hlo).unwrap();
+
+    let backend = backend(BackendKind::Interp).unwrap();
+    let exe = backend.load_hlo(&path).unwrap();
+    let (ct, _) = clustered_fixture();
+    let (x, cbs, idx, _bias) = inputs(&ct);
+    let zero_bias = Tensor::from_f32(vec![5], &[0.0; 5]).unwrap();
+    let want = reference(&x, &ct, &zero_bias);
+
+    let luts_before = lut_dot_count();
+    let out = exe.run(&[x, cbs, idx]).unwrap();
+    assert_eq!(lut_dot_count(), luts_before, "multi-use chain must stay dense");
+    assert_eq!(out.len(), 2);
+    let got = out[0].as_f32().unwrap();
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+    // The second output is the materialized weight tensor itself.
+    assert_eq!(out[1].shape(), &[6, 5]);
+    let deq = out[1].as_f32().unwrap();
+    let cb = ct.codebooks.as_f32().unwrap();
+    let idxv = ct.indices["w"].as_u8().unwrap();
+    for (d, &i) in deq.iter().zip(idxv) {
+        assert_eq!(*d, cb[i as usize]);
+    }
+}
