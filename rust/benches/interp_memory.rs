@@ -1,0 +1,104 @@
+//! Memory-planner bench: unplanned vs planned execution over a
+//! ViT-shaped synthetic HLO module (no artifacts needed).
+//!
+//! * `unplanned` — the classic evaluator: one fresh buffer per
+//!   instruction, operands cloned on the reshape/tuple paths;
+//! * `planned`   — the arena executor: liveness-reused slots, in-place
+//!   elementwise, zero-copy reshape, kernels writing into planned slots.
+//!
+//! Besides wall time, reports the quantities the paper's memory argument
+//! is about: peak resident intermediate bytes (sum of planned slot
+//! capacities) vs the unplanned sum of all instruction buffers, and
+//! tensor-sized allocation counts per inference.
+//! Acceptance targets (ISSUE 3): planned peak <= 50% of unplanned sum;
+//! planned steady-state allocations = 0.
+
+use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
+use clusterformer::hlo::HloModule;
+use clusterformer::runtime::interp::{evaluate_unplanned, stats, InterpExecutor};
+use clusterformer::runtime::Executor as _;
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::fixtures::vit_shaped_hlo;
+use clusterformer::util::rng::Pcg32;
+
+/// Tokens x model dim of the synthetic activations.
+const M: usize = 64;
+const D: usize = 64;
+const LAYERS: usize = 6;
+
+fn main() -> anyhow::Result<()> {
+    let hlo = vit_shaped_hlo(M, D, LAYERS);
+    let module = HloModule::parse(&hlo)?;
+    let exe = InterpExecutor::load_text(&hlo, "vit-shaped")?;
+    let mem = exe
+        .memory_plan()
+        .expect("the ViT-shaped module must be plannable");
+
+    let mut rng = Pcg32::new(31 * 2106);
+    let mut inputs = Vec::new();
+    inputs.push(Tensor::from_f32(
+        vec![M, D],
+        &(0..M * D).map(|_| rng.normal() as f32 * 0.2).collect::<Vec<_>>(),
+    )?);
+    for _ in 0..LAYERS {
+        for _ in 0..2 {
+            inputs.push(Tensor::from_f32(
+                vec![D, D],
+                &(0..D * D).map(|_| rng.normal() as f32 * 0.1).collect::<Vec<_>>(),
+            )?);
+        }
+    }
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+
+    // Correctness anchor before timing: bit-for-bit equal paths.
+    let planned_out = exe.run(&inputs)?;
+    let unplanned_out = evaluate_unplanned(&module, &refs)?;
+    assert_eq!(planned_out, unplanned_out, "planned must match unplanned");
+
+    // Allocation counts per inference (planned is warm after the run
+    // above, so its steady state should be exactly zero).
+    let before = stats::tensor_allocs();
+    exe.run(&inputs)?;
+    let planned_allocs = stats::tensor_allocs() - before;
+    let before = stats::tensor_allocs();
+    evaluate_unplanned(&module, &refs)?;
+    let unplanned_allocs = stats::tensor_allocs() - before;
+
+    println!(
+        "# Interpreter memory planning — {LAYERS} layers of [{M},{D}] (ViT-shaped)\n"
+    );
+    let mut runner = BenchRunner::new(BenchConfig::default());
+    let unplanned = runner
+        .bench("exec/unplanned", || evaluate_unplanned(&module, &refs).unwrap())
+        .summary
+        .mean;
+    let planned = runner
+        .bench("exec/planned-arena", || exe.run(&inputs).unwrap())
+        .summary
+        .mean;
+
+    let peak = mem.peak_bytes();
+    let naive = mem.naive_bytes();
+    println!("\n| path | mean | intermediate bytes | allocs/inference |");
+    println!("|---|---|---|---|");
+    println!("| unplanned | {} | {naive} | {unplanned_allocs} |", fmt_time(unplanned));
+    println!(
+        "| planned ({} slots) | {} | {peak} | {planned_allocs} |",
+        mem.slot_count(),
+        fmt_time(planned)
+    );
+    println!(
+        "\nplanned peak vs unplanned sum: {:.1}% (target <= 50%: {})",
+        100.0 * peak as f64 / naive.max(1) as f64,
+        if peak * 2 <= naive { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "planned steady-state allocations: {planned_allocs} (target 0: {})",
+        if planned_allocs == 0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "speedup planned vs unplanned: {:.2}x",
+        unplanned / planned
+    );
+    Ok(())
+}

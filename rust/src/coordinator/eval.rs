@@ -24,6 +24,44 @@ pub struct EvalResult {
     pub images_per_s: f64,
     /// Weight-stream bytes for this representation (memory accounting).
     pub weight_stream_bytes: usize,
+    /// Memory-behavior counters over this evaluation (interpreter
+    /// backend): see [`MemStats`]. Zeroes under other backends.
+    pub mem: MemStats,
+}
+
+/// Process-wide interpreter memory counters, snapshotted as a delta over
+/// one evaluation (surfaced by `eval --stats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemStats {
+    /// Arena bytes of the largest memory plan built (slot capacities
+    /// after liveness reuse).
+    pub plan_peak_bytes: usize,
+    /// Per-instruction-buffer bytes the same module would keep resident
+    /// without planning.
+    pub plan_naive_bytes: usize,
+    /// Slot count of that plan.
+    pub plan_slot_count: usize,
+    /// Tensor-sized heap allocations on the execution path during the
+    /// run (planned steady state: 0).
+    pub tensor_allocs: usize,
+    /// Full-tensor dequantizations during the run (LUT path: 0).
+    pub dequant_calls: usize,
+    /// `dot`s executed through the cluster-native LUT kernel.
+    pub lut_dots: usize,
+}
+
+impl MemStats {
+    fn snapshot() -> MemStats {
+        use crate::runtime::interp::{clustered, stats};
+        MemStats {
+            plan_peak_bytes: stats::plan_peak_bytes(),
+            plan_naive_bytes: stats::plan_naive_bytes(),
+            plan_slot_count: stats::plan_slot_count(),
+            tensor_allocs: stats::tensor_allocs(),
+            dequant_calls: crate::clustering::ClusteredTensors::dequant_calls(),
+            lut_dots: clustered::lut_dot_count(),
+        }
+    }
 }
 
 /// Evaluate `model`/`key` on `n` images of the validation set (0 = all),
@@ -41,6 +79,7 @@ pub fn evaluate(
     let exec = VariantExecutor::load(backend, registry, model, key)?;
     let batch = *exec.batch_sizes.last().unwrap();
 
+    let before = MemStats::snapshot();
     let t0 = Instant::now();
     let mut all_logits: Vec<f32> = Vec::with_capacity(n * exec.n_classes);
     let mut i = 0;
@@ -54,6 +93,7 @@ pub fn evaluate(
         i = hi;
     }
     let total_s = t0.elapsed().as_secs_f64();
+    let after = MemStats::snapshot();
     let logits = Tensor::from_f32(vec![n, exec.n_classes], &all_logits)?;
     let labels = &labels[..n];
     Ok(EvalResult {
@@ -65,5 +105,15 @@ pub fn evaluate(
         total_s,
         images_per_s: n as f64 / total_s,
         weight_stream_bytes: exec.weight_stream_bytes,
+        mem: MemStats {
+            // Plan gauges describe the loaded executor; counters are the
+            // delta over the timed run.
+            plan_peak_bytes: after.plan_peak_bytes,
+            plan_naive_bytes: after.plan_naive_bytes,
+            plan_slot_count: after.plan_slot_count,
+            tensor_allocs: after.tensor_allocs.saturating_sub(before.tensor_allocs),
+            dequant_calls: after.dequant_calls.saturating_sub(before.dequant_calls),
+            lut_dots: after.lut_dots.saturating_sub(before.lut_dots),
+        },
     })
 }

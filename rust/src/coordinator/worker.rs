@@ -75,10 +75,11 @@ impl VariantExecutor {
         // One shared host copy of the raw weights for every batch size;
         // the clustered representation rides along so cluster-native
         // backends can bind packed indices instead of dequantizing.
-        // Note each batch size loads its own HLO artifact, so backend
-        // bind-time state (the interpreter's WeightCache) is per batch
-        // size; deduplicating that derived state across executors is an
-        // open ROADMAP item.
+        // Each batch size loads its own HLO artifact, but backend
+        // bind-time state (the interpreter's WeightCache: precomputed
+        // weight expressions + bit-packed clustered indices) is interned
+        // in a process-wide content-addressed pool, so residents whose
+        // weight state coincides share one allocation.
         let weights = Arc::new(variant.weight_inputs);
         let mut residents = Vec::with_capacity(batch_sizes.len());
         for b in &batch_sizes {

@@ -39,7 +39,8 @@ fn cli() -> Cli {
                 .opt("variant", "baseline", "baseline | {entire|perlayer}_{c}")
                 .opt("backend", "interp", "execution backend: interp | pjrt")
                 .opt("n", "0", "images to evaluate (0 = all)")
-                .opt("threads", "0", "interpreter kernel threads (0 = all cores)"),
+                .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
+                .flag("stats", "print memory-planner / allocation counters"),
         )
         .command(
             Command::new("serve", "run the coordinator under synthetic load")
@@ -186,6 +187,21 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
         r.images_per_s,
         r.weight_stream_bytes as f64 / 1e6
     );
+    if args.flag("stats") {
+        let m = &r.mem;
+        let (caches, packed) = clusterformer::runtime::interp::pool::live_counts();
+        println!(
+            "memory: plan_peak_bytes={} plan_slot_count={} (unplanned {} B, {:.1}% kept)",
+            m.plan_peak_bytes,
+            m.plan_slot_count,
+            m.plan_naive_bytes,
+            100.0 * m.plan_peak_bytes as f64 / m.plan_naive_bytes.max(1) as f64
+        );
+        println!(
+            "counters: tensor_allocs={} dequant_calls={} lut_dots={} pooled_caches={} pooled_packed={}",
+            m.tensor_allocs, m.dequant_calls, m.lut_dots, caches, packed
+        );
+    }
     Ok(())
 }
 

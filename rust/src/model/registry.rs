@@ -83,7 +83,9 @@ impl Registry {
         v
     }
 
-    /// Raw FP32 weights for a model (cached).
+    /// Raw FP32 weights for a model (cached). `Tensor` clones out of
+    /// this cache are copy-on-write (shared `Arc` bytes), so assembling
+    /// variants never duplicates the resident weight set.
     pub fn weights(&mut self, model: &str) -> Result<&HashMap<String, Tensor>> {
         if !self.weights_cache.contains_key(model) {
             let entry = self.manifest.model(model)?;

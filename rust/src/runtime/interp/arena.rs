@@ -1,0 +1,877 @@
+//! Arena-backed execution of a [`MemoryPlan`]: every instruction writes
+//! into a preallocated, liveness-reused slot buffer, so steady-state
+//! serving does no tensor-sized heap allocation on the execution path.
+//!
+//! The currency here is typed buffers ([`Buf`]) rather than byte-backed
+//! [`Tensor`]s: operands arrive as `&[f32]`/`&[u8]`/... slices and every
+//! kernel writes into a caller-provided slice (the `*_into` kernels in
+//! [`super::ops`], [`super::gemm::dot_general_into`], the LUT `*_into`
+//! entry points in [`super::clustered`]). Dynamic inputs are decoded once
+//! per call into reusable staging buffers; weight-resident inputs are
+//! served from the pooled `WeightCache`'s typed values (one shared copy
+//! across batch sizes) or, when not cached, staged once at bind time.
+//! Reshape/copy are pure metadata edits (a [`Loc`] copy — no bytes
+//! move), and elementwise ops the planner marked `alias_of` mutate their
+//! dying operand's slot in place.
+//!
+//! The classic per-instruction-buffer evaluator in [`super::eval`] stays
+//! the bit-for-bit reference; `tests/plan_props.rs` checks the two paths
+//! against each other on randomized graphs.
+
+use std::hash::{Hash, Hasher};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::clustered::{self, LutScratch};
+use super::eval::WeightCache;
+use super::gemm::{self, PackScratch};
+use super::ops::{self, IdxRef};
+use super::plan::{Action, MemoryPlan, OpCfg};
+use crate::hlo::parser::{HloInstruction, HloModule};
+use crate::tensor::{Dtype, Tensor};
+
+// ---------------------------------------------------------------------
+// Typed buffers
+// ---------------------------------------------------------------------
+
+/// One typed storage buffer (an arena slot, a staged parameter, or a
+/// cached weight value).
+#[derive(Debug, Clone)]
+pub(crate) enum Buf {
+    F32(Vec<f32>),
+    U8(Vec<u8>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Default for Buf {
+    fn default() -> Self {
+        Buf::F32(Vec::new())
+    }
+}
+
+impl Buf {
+    pub(crate) fn zeroed(dtype: Dtype, elems: usize) -> Buf {
+        match dtype {
+            Dtype::F32 => Buf::F32(vec![0.0; elems]),
+            Dtype::U8 => Buf::U8(vec![0; elems]),
+            Dtype::I32 => Buf::I32(vec![0; elems]),
+            Dtype::I64 => Buf::I64(vec![0; elems]),
+        }
+    }
+
+    pub(crate) fn dtype(&self) -> Dtype {
+        match self {
+            Buf::F32(_) => Dtype::F32,
+            Buf::U8(_) => Dtype::U8,
+            Buf::I32(_) => Dtype::I32,
+            Buf::I64(_) => Dtype::I64,
+        }
+    }
+
+    pub(crate) fn as_ref(&self) -> BufRef<'_> {
+        match self {
+            Buf::F32(v) => BufRef::F32(v),
+            Buf::U8(v) => BufRef::U8(v),
+            Buf::I32(v) => BufRef::I32(v),
+            Buf::I64(v) => BufRef::I64(v),
+        }
+    }
+
+    pub(crate) fn f32_mut(&mut self, n: usize) -> Result<&mut [f32]> {
+        match self {
+            Buf::F32(v) if v.len() >= n => Ok(&mut v[..n]),
+            other => bail!("slot is {} x {}, need f32 x {n}", other.dtype().name(), other.len()),
+        }
+    }
+
+    pub(crate) fn u8_mut(&mut self, n: usize) -> Result<&mut [u8]> {
+        match self {
+            Buf::U8(v) if v.len() >= n => Ok(&mut v[..n]),
+            other => bail!("slot is {} x {}, need u8 x {n}", other.dtype().name(), other.len()),
+        }
+    }
+
+    pub(crate) fn i32_mut(&mut self, n: usize) -> Result<&mut [i32]> {
+        match self {
+            Buf::I32(v) if v.len() >= n => Ok(&mut v[..n]),
+            other => bail!("slot is {} x {}, need i32 x {n}", other.dtype().name(), other.len()),
+        }
+    }
+
+    pub(crate) fn i64_mut(&mut self, n: usize) -> Result<&mut [i64]> {
+        match self {
+            Buf::I64(v) if v.len() >= n => Ok(&mut v[..n]),
+            other => bail!("slot is {} x {}, need i64 x {n}", other.dtype().name(), other.len()),
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::U8(v) => v.len(),
+            Buf::I32(v) => v.len(),
+            Buf::I64(v) => v.len(),
+        }
+    }
+
+    /// Decode a tensor into this buffer, reusing capacity across calls
+    /// (growth is counted as a tensor allocation; a steady-state
+    /// executor never grows its staging).
+    pub(crate) fn stage(&mut self, t: &Tensor) -> Result<()> {
+        let bytes = t.bytes();
+        match t.dtype() {
+            Dtype::F32 => {
+                if !matches!(self, Buf::F32(_)) {
+                    *self = Buf::F32(Vec::new());
+                }
+                if let Buf::F32(v) = self {
+                    super::stats::note_scratch_growth(v, t.elems());
+                    v.clear();
+                    v.extend(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                    );
+                }
+            }
+            Dtype::U8 => {
+                if !matches!(self, Buf::U8(_)) {
+                    *self = Buf::U8(Vec::new());
+                }
+                if let Buf::U8(v) = self {
+                    super::stats::note_scratch_growth(v, t.elems());
+                    v.clear();
+                    v.extend_from_slice(bytes);
+                }
+            }
+            Dtype::I32 => {
+                if !matches!(self, Buf::I32(_)) {
+                    *self = Buf::I32(Vec::new());
+                }
+                if let Buf::I32(v) = self {
+                    super::stats::note_scratch_growth(v, t.elems());
+                    v.clear();
+                    v.extend(
+                        bytes
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+                    );
+                }
+            }
+            Dtype::I64 => {
+                if !matches!(self, Buf::I64(_)) {
+                    *self = Buf::I64(Vec::new());
+                }
+                if let Buf::I64(v) = self {
+                    super::stats::note_scratch_growth(v, t.elems());
+                    v.clear();
+                    v.extend(bytes.chunks_exact(8).map(|c| {
+                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
+                    }));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Bit-exact content hash (f32 hashed by bit pattern) — for the
+    /// content-addressed weight pool.
+    pub(crate) fn hash_content<H: Hasher>(&self, h: &mut H) {
+        match self {
+            Buf::F32(v) => {
+                0u8.hash(h);
+                for &x in v {
+                    x.to_bits().hash(h);
+                }
+            }
+            Buf::U8(v) => {
+                1u8.hash(h);
+                v.hash(h);
+            }
+            Buf::I32(v) => {
+                2u8.hash(h);
+                v.hash(h);
+            }
+            Buf::I64(v) => {
+                3u8.hash(h);
+                v.hash(h);
+            }
+        }
+    }
+
+    /// Bit-exact content equality (hash-collision guard in the pool).
+    pub(crate) fn content_eq(&self, other: &Buf) -> bool {
+        match (self, other) {
+            (Buf::F32(a), Buf::F32(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            }
+            (Buf::U8(a), Buf::U8(b)) => a == b,
+            (Buf::I32(a), Buf::I32(b)) => a == b,
+            (Buf::I64(a), Buf::I64(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+/// Borrowed typed view of a buffer.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum BufRef<'a> {
+    F32(&'a [f32]),
+    U8(&'a [u8]),
+    I32(&'a [i32]),
+    I64(&'a [i64]),
+}
+
+impl<'a> BufRef<'a> {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            BufRef::F32(v) => v.len(),
+            BufRef::U8(v) => v.len(),
+            BufRef::I32(v) => v.len(),
+            BufRef::I64(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            BufRef::F32(_) => Dtype::F32,
+            BufRef::U8(_) => Dtype::U8,
+            BufRef::I32(_) => Dtype::I32,
+            BufRef::I64(_) => Dtype::I64,
+        }
+    }
+
+    /// The leading `n` elements (slot buffers can be larger than the
+    /// value living in them).
+    pub(crate) fn prefix(self, n: usize) -> Result<BufRef<'a>> {
+        if self.len() < n {
+            bail!("buffer holds {} elements, need {n}", self.len());
+        }
+        Ok(match self {
+            BufRef::F32(v) => BufRef::F32(&v[..n]),
+            BufRef::U8(v) => BufRef::U8(&v[..n]),
+            BufRef::I32(v) => BufRef::I32(&v[..n]),
+            BufRef::I64(v) => BufRef::I64(&v[..n]),
+        })
+    }
+
+    pub(crate) fn f32(self) -> Result<&'a [f32]> {
+        match self {
+            BufRef::F32(v) => Ok(v),
+            other => bail!("expected f32 buffer, got {}", other.dtype().name()),
+        }
+    }
+
+    pub(crate) fn u8(self) -> Result<&'a [u8]> {
+        match self {
+            BufRef::U8(v) => Ok(v),
+            other => bail!("expected u8 buffer, got {}", other.dtype().name()),
+        }
+    }
+
+    /// Element `i` widened to f64 (matches the classic evaluator's
+    /// convert semantics exactly).
+    fn get_f64(&self, i: usize) -> f64 {
+        match self {
+            BufRef::F32(v) => v[i] as f64,
+            BufRef::U8(v) => v[i] as f64,
+            BufRef::I32(v) => v[i] as f64,
+            BufRef::I64(v) => v[i] as f64,
+        }
+    }
+
+    /// Copy out as a tensor (the `run() -> Vec<Tensor>` API boundary —
+    /// deliberately outside the `tensor_allocs` contract).
+    pub(crate) fn to_tensor(self, shape: &[usize]) -> Result<Tensor> {
+        match self {
+            BufRef::F32(v) => Tensor::from_f32(shape.to_vec(), v),
+            BufRef::U8(v) => Tensor::from_u8(shape.to_vec(), v),
+            BufRef::I32(v) => Tensor::from_i32(shape.to_vec(), v),
+            BufRef::I64(v) => {
+                let mut data = Vec::with_capacity(v.len() * 8);
+                for &x in v {
+                    data.extend_from_slice(&x.to_le_bytes());
+                }
+                Tensor::new(Dtype::I64, shape.to_vec(), data)
+            }
+        }
+    }
+}
+
+/// A shape-tagged owned buffer: the storage form of cached weight
+/// values and plan-time presets (constants, iota).
+#[derive(Debug, Clone)]
+pub(crate) struct TypedVal {
+    pub(crate) shape: Vec<usize>,
+    pub(crate) buf: Buf,
+}
+
+impl TypedVal {
+    pub(crate) fn from_tensor(t: &Tensor) -> Result<TypedVal> {
+        let mut buf = Buf::zeroed(t.dtype(), 0);
+        buf.stage(t)?;
+        Ok(TypedVal { shape: t.shape().to_vec(), buf })
+    }
+
+    pub(crate) fn to_tensor(&self) -> Result<Tensor> {
+        self.buf.as_ref().to_tensor(&self.shape)
+    }
+
+    pub(crate) fn as_ref(&self) -> BufRef<'_> {
+        self.buf.as_ref()
+    }
+
+    pub(crate) fn hash_content<H: Hasher>(&self, h: &mut H) {
+        self.shape.hash(h);
+        self.buf.hash_content(h);
+    }
+
+    pub(crate) fn content_eq(&self, other: &TypedVal) -> bool {
+        self.shape == other.shape && self.buf.content_eq(&other.buf)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The arena
+// ---------------------------------------------------------------------
+
+/// Where an evaluated instruction's value lives during one execution.
+/// Cached/preset locations carry the *origin* instruction index so a
+/// reshape/copy alias of them still resolves (the alias shares the
+/// origin's storage under its own shape).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Loc {
+    /// Arena slot (a computed value, possibly viewed through aliases).
+    Slot(usize),
+    /// Staged positional input.
+    Param(usize),
+    /// `WeightCache` entry under the origin instruction's name.
+    Cached(usize),
+    /// Plan-time preset (constant / iota) keyed by origin index.
+    Preset(usize),
+}
+
+/// Preallocated execution state for one executor: slot buffers sized by
+/// the plan, staging buffers for the inputs actually read, kernel
+/// scratch, and the per-call value-location table.
+#[derive(Debug)]
+pub(crate) struct Arena {
+    slots: Vec<Buf>,
+    params: Vec<Buf>,
+    locs: Vec<Option<Loc>>,
+    gemm_scratch: PackScratch,
+    lut_scratch: LutScratch,
+}
+
+impl Arena {
+    pub(crate) fn new(plan: &MemoryPlan) -> Arena {
+        Arena {
+            slots: plan
+                .slots
+                .iter()
+                .map(|s| Buf::zeroed(s.dtype, s.elems))
+                .collect(),
+            params: vec![Buf::default(); plan.params.len()],
+            locs: vec![None; plan.actions.len()],
+            gemm_scratch: PackScratch::default(),
+            lut_scratch: LutScratch::default(),
+        }
+    }
+
+    /// Validate and stage `inputs` at positions `base..base+len`. Inputs
+    /// no live instruction reads are validated but not decoded.
+    pub(crate) fn stage_params(
+        &mut self,
+        plan: &MemoryPlan,
+        base: usize,
+        inputs: &[&Tensor],
+    ) -> Result<()> {
+        for (off, &t) in inputs.iter().enumerate() {
+            let pos = base + off;
+            let (dims, dtype) = plan
+                .params
+                .get(pos)
+                .ok_or_else(|| anyhow!("input position {pos} out of range"))?;
+            if t.shape() != dims.as_slice() {
+                bail!("parameter {pos}: expected shape {dims:?}, got {:?}", t.shape());
+            }
+            if t.dtype() != *dtype {
+                bail!(
+                    "parameter {pos}: expected dtype {}, got {}",
+                    dtype.name(),
+                    t.dtype().name()
+                );
+            }
+            if plan.param_read[pos] {
+                self.params[pos].stage(t)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------
+
+/// Read-only view resolution context (free-standing fields so operand
+/// borrows stay disjoint from the mutable output buffer and scratch).
+struct Ctx<'a> {
+    insts: &'a [HloInstruction],
+    plan: &'a MemoryPlan,
+    cache: Option<&'a WeightCache>,
+    slots: &'a [Buf],
+    params: &'a [Buf],
+    locs: &'a [Option<Loc>],
+}
+
+impl<'a> Ctx<'a> {
+    /// Shape + typed data of instruction `oi`'s value.
+    fn view(&self, oi: usize) -> Result<(&'a [usize], BufRef<'a>)> {
+        let inst = &self.insts[oi];
+        let shape = inst.shape.dims.as_slice();
+        let elems: usize = shape.iter().product();
+        let loc = self.locs[oi]
+            .ok_or_else(|| anyhow!("operand %{} has no value", inst.name))?;
+        let r = match loc {
+            Loc::Slot(s) => self.slots[s].as_ref().prefix(elems)?,
+            Loc::Param(p) => self.params[p].as_ref().prefix(elems)?,
+            Loc::Cached(src) => self
+                .cache
+                .and_then(|c| c.values.get(self.insts[src].name.as_str()))
+                .ok_or_else(|| anyhow!("cached value %{} missing", self.insts[src].name))?
+                .as_ref(),
+            Loc::Preset(src) => self
+                .plan
+                .presets
+                .get(&src)
+                .ok_or_else(|| anyhow!("preset %{} missing", self.insts[src].name))?
+                .as_ref(),
+        };
+        Ok((shape, r))
+    }
+
+    /// Shape + data of operand `j` of instruction `i`.
+    fn operand(&self, i: usize, j: usize) -> Result<(&'a [usize], BufRef<'a>)> {
+        let oi = *self
+            .plan
+            .operands[i]
+            .get(j)
+            .ok_or_else(|| anyhow!("missing operand {j}"))?;
+        self.view(oi)
+    }
+}
+
+/// Execute the planned module: stage nothing (the caller staged), walk
+/// the instruction list, materialize the root.
+pub(crate) fn execute(
+    module: &HloModule,
+    plan: &MemoryPlan,
+    cache: Option<&WeightCache>,
+    arena: &mut Arena,
+) -> Result<Vec<Tensor>> {
+    let entry = module.entry()?;
+    let insts = entry.instructions.as_slice();
+    arena.locs.clear();
+    arena.locs.resize(insts.len(), None);
+    for i in 0..insts.len() {
+        match &plan.actions[i] {
+            Action::Skip => {}
+            Action::Param(p) => arena.locs[i] = Some(Loc::Param(*p)),
+            Action::Cached => arena.locs[i] = Some(Loc::Cached(i)),
+            Action::Preset => arena.locs[i] = Some(Loc::Preset(i)),
+            Action::Alias => arena.locs[i] = arena.locs[plan.operands[i][0]],
+            Action::Compute { slot, alias_of, cfg } => {
+                compute(insts, plan, cache, arena, i, *slot, *alias_of, cfg)
+                    .with_context(|| {
+                        format!("evaluating %{} = {} (planned)", insts[i].name, insts[i].opcode)
+                    })?;
+                arena.locs[i] = Some(Loc::Slot(*slot));
+            }
+        }
+    }
+    let root = plan.root;
+    let ctx = Ctx {
+        insts,
+        plan,
+        cache,
+        slots: &arena.slots,
+        params: &arena.params,
+        locs: &arena.locs,
+    };
+    if insts[root].opcode == "tuple" {
+        let mut out = Vec::with_capacity(plan.operands[root].len());
+        for &oi in &plan.operands[root] {
+            let (shape, r) = ctx.view(oi)?;
+            out.push(r.to_tensor(shape)?);
+        }
+        Ok(out)
+    } else {
+        let (shape, r) = ctx.view(root)?;
+        Ok(vec![r.to_tensor(shape)?])
+    }
+}
+
+/// One planned instruction: take the output slot, resolve operands,
+/// dispatch the kernel, put the slot back.
+#[allow(clippy::too_many_arguments)]
+fn compute(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    cache: Option<&WeightCache>,
+    arena: &mut Arena,
+    i: usize,
+    slot: usize,
+    alias_of: Option<usize>,
+    cfg: &OpCfg,
+) -> Result<()> {
+    let mut out = std::mem::take(&mut arena.slots[slot]);
+    let ctx = Ctx {
+        insts,
+        plan,
+        cache,
+        slots: &arena.slots,
+        params: &arena.params,
+        locs: &arena.locs,
+    };
+    let res = run_op(
+        &ctx,
+        i,
+        alias_of,
+        cfg,
+        &mut out,
+        &mut arena.gemm_scratch,
+        &mut arena.lut_scratch,
+    );
+    arena.slots[slot] = out;
+    res
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_op(
+    ctx: &Ctx<'_>,
+    i: usize,
+    alias_of: Option<usize>,
+    cfg: &OpCfg,
+    out: &mut Buf,
+    gemm_scratch: &mut PackScratch,
+    lut_scratch: &mut LutScratch,
+) -> Result<()> {
+    let inst = &ctx.insts[i];
+    let n: usize = inst.shape.dims.iter().product();
+    match cfg {
+        OpCfg::Unary(f) => {
+            if alias_of == Some(0) {
+                ops::unary_inplace(out.f32_mut(n)?, *f);
+            } else {
+                let (_, src) = ctx.operand(i, 0)?;
+                ops::unary_into(src.f32()?, out.f32_mut(n)?, *f);
+            }
+        }
+        OpCfg::BinF32(f) => match alias_of {
+            Some(0) => {
+                let (_, b) = ctx.operand(i, 1)?;
+                ops::binary_inplace_lhs(out.f32_mut(n)?, b.f32()?, *f);
+            }
+            Some(1) => {
+                let (_, a) = ctx.operand(i, 0)?;
+                ops::binary_inplace_rhs(a.f32()?, out.f32_mut(n)?, *f);
+            }
+            _ => {
+                let (_, a) = ctx.operand(i, 0)?;
+                let (_, b) = ctx.operand(i, 1)?;
+                ops::binary_into(a.f32()?, b.f32()?, out.f32_mut(n)?, *f);
+            }
+        },
+        OpCfg::BinI32(f) => match alias_of {
+            Some(0) => {
+                let (_, b) = ctx.operand(i, 1)?;
+                let b = match b {
+                    BufRef::I32(v) => v,
+                    _ => bail!("expected i32 operand"),
+                };
+                ops::binary_inplace_lhs(out.i32_mut(n)?, b, *f);
+            }
+            Some(1) => {
+                let (_, a) = ctx.operand(i, 0)?;
+                let a = match a {
+                    BufRef::I32(v) => v,
+                    _ => bail!("expected i32 operand"),
+                };
+                ops::binary_inplace_rhs(a, out.i32_mut(n)?, *f);
+            }
+            _ => {
+                let (_, a) = ctx.operand(i, 0)?;
+                let (_, b) = ctx.operand(i, 1)?;
+                let (a, b) = match (a, b) {
+                    (BufRef::I32(a), BufRef::I32(b)) => (a, b),
+                    _ => bail!("expected i32 operands"),
+                };
+                ops::binary_into(a, b, out.i32_mut(n)?, *f);
+            }
+        },
+        OpCfg::BinU8(f) => match alias_of {
+            Some(0) => {
+                let (_, b) = ctx.operand(i, 1)?;
+                ops::binary_inplace_lhs(out.u8_mut(n)?, b.u8()?, *f);
+            }
+            Some(1) => {
+                let (_, a) = ctx.operand(i, 0)?;
+                ops::binary_inplace_rhs(a.u8()?, out.u8_mut(n)?, *f);
+            }
+            _ => {
+                let (_, a) = ctx.operand(i, 0)?;
+                let (_, b) = ctx.operand(i, 1)?;
+                ops::binary_into(a.u8()?, b.u8()?, out.u8_mut(n)?, *f);
+            }
+        },
+        OpCfg::Compare(dir) => {
+            let (_, a) = ctx.operand(i, 0)?;
+            let (_, b) = ctx.operand(i, 1)?;
+            let o = out.u8_mut(n)?;
+            match (a, b) {
+                (BufRef::F32(a), BufRef::F32(b)) => ops::compare_into(a, b, *dir, o),
+                (BufRef::I32(a), BufRef::I32(b)) => ops::compare_into(a, b, *dir, o),
+                (BufRef::U8(a), BufRef::U8(b)) => ops::compare_into(a, b, *dir, o),
+                (BufRef::I64(a), BufRef::I64(b)) => ops::compare_into(a, b, *dir, o),
+                _ => bail!("compare: operand dtype mismatch"),
+            }
+        }
+        OpCfg::Select => {
+            let (_, p) = ctx.operand(i, 0)?;
+            let (_, t) = ctx.operand(i, 1)?;
+            let (_, f) = ctx.operand(i, 2)?;
+            let p = p.u8()?;
+            match (t, f) {
+                (BufRef::F32(t), BufRef::F32(f)) => {
+                    ops::select_into(p, t, f, out.f32_mut(n)?)
+                }
+                (BufRef::U8(t), BufRef::U8(f)) => ops::select_into(p, t, f, out.u8_mut(n)?),
+                (BufRef::I32(t), BufRef::I32(f)) => {
+                    ops::select_into(p, t, f, out.i32_mut(n)?)
+                }
+                (BufRef::I64(t), BufRef::I64(f)) => {
+                    ops::select_into(p, t, f, out.i64_mut(n)?)
+                }
+                _ => bail!("select: branch dtype mismatch"),
+            }
+        }
+        OpCfg::Convert => {
+            let (_, src) = ctx.operand(i, 0)?;
+            convert_into(src, out, n)?;
+        }
+        OpCfg::Broadcast { dims_map } => {
+            let (in_dims, src) = ctx.operand(i, 0)?;
+            let out_dims = inst.shape.dims.as_slice();
+            match src {
+                BufRef::F32(s) => {
+                    ops::broadcast_into(s, in_dims, out_dims, dims_map, out.f32_mut(n)?)
+                }
+                BufRef::U8(s) => {
+                    ops::broadcast_into(s, in_dims, out_dims, dims_map, out.u8_mut(n)?)
+                }
+                BufRef::I32(s) => {
+                    ops::broadcast_into(s, in_dims, out_dims, dims_map, out.i32_mut(n)?)
+                }
+                BufRef::I64(s) => {
+                    ops::broadcast_into(s, in_dims, out_dims, dims_map, out.i64_mut(n)?)
+                }
+            }
+        }
+        OpCfg::Transpose { perm } => {
+            let (in_dims, src) = ctx.operand(i, 0)?;
+            match src {
+                BufRef::F32(s) => ops::transpose_into(s, in_dims, perm, out.f32_mut(n)?),
+                BufRef::U8(s) => ops::transpose_into(s, in_dims, perm, out.u8_mut(n)?),
+                BufRef::I32(s) => ops::transpose_into(s, in_dims, perm, out.i32_mut(n)?),
+                BufRef::I64(s) => ops::transpose_into(s, in_dims, perm, out.i64_mut(n)?),
+            }
+        }
+        OpCfg::Slice(spec) => {
+            let (in_dims, src) = ctx.operand(i, 0)?;
+            match src {
+                BufRef::F32(s) => ops::slice_into(s, in_dims, spec, out.f32_mut(n)?),
+                BufRef::U8(s) => ops::slice_into(s, in_dims, spec, out.u8_mut(n)?),
+                BufRef::I32(s) => ops::slice_into(s, in_dims, spec, out.i32_mut(n)?),
+                BufRef::I64(s) => ops::slice_into(s, in_dims, spec, out.i64_mut(n)?),
+            }
+        }
+        OpCfg::Concat { blocks, outer } => {
+            let k = ctx.plan.operands[i].len();
+            match out.dtype() {
+                Dtype::F32 => {
+                    let mut parts: Vec<&[f32]> = Vec::with_capacity(k);
+                    for j in 0..k {
+                        parts.push(ctx.operand(i, j)?.1.f32()?);
+                    }
+                    ops::concat_into(&parts, blocks, *outer, out.f32_mut(n)?);
+                }
+                Dtype::U8 => {
+                    let mut parts: Vec<&[u8]> = Vec::with_capacity(k);
+                    for j in 0..k {
+                        parts.push(ctx.operand(i, j)?.1.u8()?);
+                    }
+                    ops::concat_into(&parts, blocks, *outer, out.u8_mut(n)?);
+                }
+                Dtype::I32 => {
+                    let mut parts: Vec<&[i32]> = Vec::with_capacity(k);
+                    for j in 0..k {
+                        let (_, r) = ctx.operand(i, j)?;
+                        match r {
+                            BufRef::I32(v) => parts.push(v),
+                            _ => bail!("concatenate: dtype mismatch"),
+                        }
+                    }
+                    ops::concat_into(&parts, blocks, *outer, out.i32_mut(n)?);
+                }
+                Dtype::I64 => {
+                    let mut parts: Vec<&[i64]> = Vec::with_capacity(k);
+                    for j in 0..k {
+                        let (_, r) = ctx.operand(i, j)?;
+                        match r {
+                            BufRef::I64(v) => parts.push(v),
+                            _ => bail!("concatenate: dtype mismatch"),
+                        }
+                    }
+                    ops::concat_into(&parts, blocks, *outer, out.i64_mut(n)?);
+                }
+            }
+        }
+        OpCfg::Dot(canon) => {
+            let (ld, a) = ctx.operand(i, 0)?;
+            let (rd, b) = ctx.operand(i, 1)?;
+            gemm::dot_general_into(
+                a.f32()?,
+                ld,
+                b.f32()?,
+                rd,
+                canon,
+                out.f32_mut(n)?,
+                gemm_scratch,
+            );
+        }
+        OpCfg::ClusteredDot { m, k, n: cols, idx, table } => {
+            let (_, x) = ctx.operand(i, 0)?;
+            let x = x.f32()?;
+            let o = out.f32_mut(n)?;
+            let prepared = ctx
+                .cache
+                .and_then(|c| c.prepared.get(inst.name.as_str()));
+            if let Some(prep) = prepared {
+                clustered::lut_matmul_packed_into(x, *m, prep, o, lut_scratch)?;
+            } else {
+                let (_, iv) = ctx.view(*idx)?;
+                let (_, tv) = ctx.view(*table)?;
+                clustered::lut_matmul_u8_into(
+                    x,
+                    *m,
+                    *k,
+                    *cols,
+                    iv.u8()?,
+                    tv.f32()?,
+                    o,
+                    lut_scratch,
+                )?;
+            }
+        }
+        OpCfg::Conv(ccfg) => {
+            let (ld, a) = ctx.operand(i, 0)?;
+            let (rd, kern) = ctx.operand(i, 1)?;
+            ops::convolution_into(
+                ccfg,
+                a.f32()?,
+                ld,
+                kern.f32()?,
+                rd,
+                inst.shape.dims.as_slice(),
+                out.f32_mut(n)?,
+            );
+        }
+        OpCfg::Reduce { dims, op } => {
+            let (in_dims, src) = ctx.operand(i, 0)?;
+            let (_, init) = ctx.operand(i, 1)?;
+            match src {
+                BufRef::F32(s) => {
+                    let init = init.f32()?[0];
+                    let f = ops::reduce_f32_fn(*op);
+                    ops::reduce_into(s, in_dims, dims, init, f, out.f32_mut(n)?);
+                }
+                BufRef::I32(s) => {
+                    let init = match init {
+                        BufRef::I32(v) => v[0],
+                        _ => bail!("reduce: init dtype mismatch"),
+                    };
+                    let f = ops::reduce_i32_fn(*op);
+                    ops::reduce_into(s, in_dims, dims, init, f, out.i32_mut(n)?);
+                }
+                other => bail!("reduce: dtype {} not supported", other.dtype().name()),
+            }
+        }
+        OpCfg::Gather(gcfg) => {
+            let (od, src) = ctx.operand(i, 0)?;
+            let (id, idxr) = ctx.operand(i, 1)?;
+            let idx = match idxr {
+                BufRef::U8(v) => IdxRef::U8(v),
+                BufRef::I32(v) => IdxRef::I32(v),
+                BufRef::I64(v) => IdxRef::I64(v),
+                BufRef::F32(_) => bail!("gather: indices must be integral"),
+            };
+            match src {
+                BufRef::F32(s) => ops::gather_into(gcfg, od, id, idx, s, out.f32_mut(n)?),
+                BufRef::U8(s) => ops::gather_into(gcfg, od, id, idx, s, out.u8_mut(n)?),
+                BufRef::I32(s) => ops::gather_into(gcfg, od, id, idx, s, out.i32_mut(n)?),
+                BufRef::I64(s) => ops::gather_into(gcfg, od, id, idx, s, out.i64_mut(n)?),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Elementwise dtype conversion via an f64 intermediate — the exact
+/// semantics of the classic `convert` kernel.
+fn convert_into(src: BufRef<'_>, out: &mut Buf, n: usize) -> Result<()> {
+    match out.dtype() {
+        Dtype::F32 => {
+            let o = out.f32_mut(n)?;
+            for (j, x) in o.iter_mut().enumerate() {
+                *x = src.get_f64(j) as f32;
+            }
+        }
+        Dtype::U8 => {
+            let o = out.u8_mut(n)?;
+            for (j, x) in o.iter_mut().enumerate() {
+                *x = src.get_f64(j) as u8;
+            }
+        }
+        Dtype::I32 => {
+            let o = out.i32_mut(n)?;
+            for (j, x) in o.iter_mut().enumerate() {
+                *x = src.get_f64(j) as i32;
+            }
+        }
+        Dtype::I64 => {
+            let o = out.i64_mut(n)?;
+            for (j, x) in o.iter_mut().enumerate() {
+                *x = src.get_f64(j) as i64;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate + stage all inputs at `base`, execute, materialize. The
+/// full-input entry point stages everything; residents stage their fixed
+/// inputs once at bind time and pass only the dynamic prefix here.
+pub(crate) fn run_staged(
+    module: &HloModule,
+    plan: &MemoryPlan,
+    cache: Option<&WeightCache>,
+    arena: &mut Arena,
+    base: usize,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    arena.stage_params(plan, base, inputs)?;
+    execute(module, plan, cache, arena)
+}

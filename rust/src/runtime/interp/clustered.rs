@@ -70,11 +70,24 @@ struct LutTask<'a> {
     src: LutSrc<'a>,
 }
 
+/// Reusable per-call scratch for the LUT kernel (one unpacked index
+/// column + one activation bucket per cluster). The arena executor keeps
+/// one across calls so steady-state serial LUT dots allocate nothing;
+/// each spawned thread of the parallel path bootstraps its own
+/// (`k` + ≤256 elements — excluded from the `tensor_allocs` contract).
+#[derive(Debug, Default)]
+pub struct LutScratch {
+    col: Vec<u8>,
+    bucket: Vec<f32>,
+}
+
 /// Compute output rows `[row0, row0 + nrows)` of `out[m, n]`.
-fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32]) {
+fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32], scratch: &mut LutScratch) {
     let (k, n) = (t.k, t.n);
-    let mut col = vec![0u8; k];
-    let mut bucket = vec![0.0f32; t.cb.len()];
+    scratch.col.resize(t.k.max(scratch.col.len()), 0);
+    scratch.bucket.resize(t.cb.len().max(scratch.bucket.len()), 0.0);
+    let col = &mut scratch.col[..k];
+    let bucket = &mut scratch.bucket[..t.cb.len()];
     for j in 0..n {
         match t.src {
             LutSrc::Packed { packed, row_bytes, bits } => {
@@ -107,7 +120,7 @@ fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32]) {
 /// split — over columns — would instead duplicate the activation
 /// stream, which for serving-shaped matmuls (m = batch x tokens >> n)
 /// is the larger of the two.
-fn lut_matmul(t: &LutTask<'_>, m: usize, out: &mut [f32]) {
+fn lut_matmul(t: &LutTask<'_>, m: usize, out: &mut [f32], scratch: Option<&mut LutScratch>) {
     LUT_DOTS.fetch_add(1, Ordering::Relaxed);
     if m == 0 || t.n == 0 {
         return;
@@ -115,28 +128,35 @@ fn lut_matmul(t: &LutTask<'_>, m: usize, out: &mut [f32]) {
     let work = m * t.n * (t.k + t.cb.len());
     let nt = configured_threads().min(m);
     if nt <= 1 || work < PAR_MIN_WORK {
-        lut_rows(t, 0, m, out);
+        match scratch {
+            Some(s) => lut_rows(t, 0, m, out, s),
+            None => lut_rows(t, 0, m, out, &mut LutScratch::default()),
+        }
         return;
     }
     let chunk = m.div_ceil(nt);
     std::thread::scope(|s| {
         for (ci, out_chunk) in out.chunks_mut(chunk * t.n).enumerate() {
             let nrows = out_chunk.len() / t.n;
-            s.spawn(move || lut_rows(t, ci * chunk, nrows, out_chunk));
+            s.spawn(move || lut_rows(t, ci * chunk, nrows, out_chunk, &mut LutScratch::default()));
         }
     });
 }
 
-/// `x[m,k] @ dequantize(idx[k,n], codebook)` without materializing the
-/// dequantized weights: the indices are streamed as 1-byte values.
-pub fn lut_matmul_u8(
+/// [`lut_matmul_u8`] into a caller-provided output slice (`m * n` long,
+/// fully overwritten) with reusable scratch — the planned-slot entry
+/// point, allocation-free in steady state.
+#[allow(clippy::too_many_arguments)]
+pub fn lut_matmul_u8_into(
     x: &[f32],
     m: usize,
     k: usize,
     n: usize,
     idx: &[u8],
     codebook: &[f32],
-) -> Result<Vec<f32>> {
+    out: &mut [f32],
+    scratch: &mut LutScratch,
+) -> Result<()> {
     if x.len() != m * k {
         bail!("lut_matmul_u8: lhs has {} values, expected {m}x{k}", x.len());
     }
@@ -145,6 +165,9 @@ pub fn lut_matmul_u8(
     }
     if codebook.is_empty() || codebook.len() > MAX_CLUSTERS {
         bail!("lut_matmul_u8: codebook length {} not in 1..={MAX_CLUSTERS}", codebook.len());
+    }
+    if out.len() != m * n {
+        bail!("lut_matmul_u8: out has {} values, expected {m}x{n}", out.len());
     }
     let used = idx.iter().max().map(|&mx| mx as usize + 1).unwrap_or(0);
     if used > codebook.len() {
@@ -157,9 +180,23 @@ pub fn lut_matmul_u8(
     // The graph's table is always padded to 256 rows; bucketing only the
     // clusters actually referenced keeps the per-element multiply count
     // at the real cluster count.
-    let mut out = vec![0.0f32; m * n];
     let task = LutTask { x, k, n, cb: &codebook[..used], src: LutSrc::Rows(idx) };
-    lut_matmul(&task, m, &mut out);
+    lut_matmul(&task, m, out, Some(scratch));
+    Ok(())
+}
+
+/// `x[m,k] @ dequantize(idx[k,n], codebook)` without materializing the
+/// dequantized weights: the indices are streamed as 1-byte values.
+pub fn lut_matmul_u8(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    idx: &[u8],
+    codebook: &[f32],
+) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; m * n];
+    lut_matmul_u8_into(x, m, k, n, idx, codebook, &mut out, &mut LutScratch::default())?;
     Ok(out)
 }
 
@@ -186,6 +223,44 @@ pub struct PreparedClustered {
 impl PreparedClustered {
     pub fn bits(&self) -> u32 {
         self.bits
+    }
+
+    /// Contraction size `k` of the packed weight.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output columns `n` of the packed weight.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Content hash over the packed layout (codebook compared bit-exact),
+    /// for the content-addressed weight pool's bucket lookup.
+    pub(crate) fn content_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        (self.k, self.n, self.bits, self.row_bytes).hash(&mut h);
+        self.packed.hash(&mut h);
+        for &v in &self.codebook {
+            v.to_bits().hash(&mut h);
+        }
+        h.finish()
+    }
+
+    /// Bit-exact content equality (hash-collision guard in the pool).
+    pub(crate) fn content_eq(&self, other: &PreparedClustered) -> bool {
+        self.k == other.k
+            && self.n == other.n
+            && self.bits == other.bits
+            && self.row_bytes == other.row_bytes
+            && self.packed == other.packed
+            && self.codebook.len() == other.codebook.len()
+            && self
+                .codebook
+                .iter()
+                .zip(&other.codebook)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
     }
 
     /// Weight bytes streamed per matmul call (packed indices + table) —
@@ -240,13 +315,21 @@ pub fn prepare(
     Ok(PreparedClustered { k, n, bits, row_bytes, packed, codebook: cb })
 }
 
-/// `x[m,k] @ w` where `w` is a [`PreparedClustered`] weight: streams the
-/// packed sub-byte indices, never the f32 weights.
-pub fn lut_matmul_packed(x: &[f32], m: usize, prep: &PreparedClustered) -> Result<Vec<f32>> {
+/// [`lut_matmul_packed`] into a caller-provided output slice (`m * n`
+/// long, fully overwritten) with reusable scratch.
+pub fn lut_matmul_packed_into(
+    x: &[f32],
+    m: usize,
+    prep: &PreparedClustered,
+    out: &mut [f32],
+    scratch: &mut LutScratch,
+) -> Result<()> {
     if x.len() != m * prep.k {
         bail!("lut_matmul_packed: lhs has {} values, expected {m}x{}", x.len(), prep.k);
     }
-    let mut out = vec![0.0f32; m * prep.n];
+    if out.len() != m * prep.n {
+        bail!("lut_matmul_packed: out has {} values, expected {m}x{}", out.len(), prep.n);
+    }
     let task = LutTask {
         x,
         k: prep.k,
@@ -258,7 +341,15 @@ pub fn lut_matmul_packed(x: &[f32], m: usize, prep: &PreparedClustered) -> Resul
             bits: prep.bits,
         },
     };
-    lut_matmul(&task, m, &mut out);
+    lut_matmul(&task, m, out, Some(scratch));
+    Ok(())
+}
+
+/// `x[m,k] @ w` where `w` is a [`PreparedClustered`] weight: streams the
+/// packed sub-byte indices, never the f32 weights.
+pub fn lut_matmul_packed(x: &[f32], m: usize, prep: &PreparedClustered) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; m * prep.n];
+    lut_matmul_packed_into(x, m, prep, &mut out, &mut LutScratch::default())?;
     Ok(out)
 }
 

@@ -4,11 +4,13 @@
 //! single forward pass suffices.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::arena::TypedVal;
 use super::clustered::{self, ClusteredDotPlan, ExecPlan, PreparedClustered};
-use super::ops;
+use super::{ops, pool, stats};
 use crate::hlo::parser::{HloInstruction, HloModule};
 use crate::tensor::{Dtype, Tensor};
 
@@ -120,6 +122,16 @@ pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Ten
     evaluate_planned(module, inputs, &ExecPlan::default(), None)
 }
 
+/// The classic per-instruction-buffer evaluator with the module's own
+/// clustered-dot plan — the bit-for-bit *reference* for the arena
+/// executor (identical kernels, fresh buffer per instruction). Public
+/// for `benches/interp_memory.rs` and `tests/plan_props.rs`.
+pub fn evaluate_unplanned(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    preflight(module)?;
+    let plan = clustered::plan(module);
+    evaluate_planned(module, inputs, &plan, None)
+}
+
 /// Evaluate with an execution plan (clustered `dot`s on the LUT kernel,
 /// dequantize chains skipped) and, on the weight-resident path, a
 /// [`WeightCache`] of precomputed weight-only subexpressions.
@@ -128,6 +140,19 @@ pub(crate) fn evaluate_planned<'a>(
     inputs: &[&'a Tensor],
     plan: &ExecPlan,
     cache: Option<&'a WeightCache>,
+) -> Result<Vec<Tensor>> {
+    evaluate_classic(module, inputs, plan, cache, None)
+}
+
+/// [`evaluate_planned`] with an optional pre-materialized byte-form view
+/// of the cache values (fallback residents build it once at bind time so
+/// per-call evaluation binds cached weights borrowed).
+pub(crate) fn evaluate_classic<'a>(
+    module: &'a HloModule,
+    inputs: &[&'a Tensor],
+    plan: &ExecPlan,
+    cache: Option<&'a WeightCache>,
+    materialized: Option<&'a HashMap<String, Tensor>>,
 ) -> Result<Vec<Tensor>> {
     let entry = module.entry()?;
     let params = module.parameters()?;
@@ -176,8 +201,18 @@ pub(crate) fn evaluate_planned<'a>(
             continue;
         }
         // Weight-only subexpressions precomputed at residency-bind time.
-        if let Some(t) = cache.and_then(|c| c.values.get(&inst.name)) {
-            env.insert(inst.name.as_str(), Value::Borrowed(t));
+        // The cache stores typed buffers (shared by the arena executor);
+        // fallback residents hand in a bind-time byte-form view to bind
+        // borrowed, anything else re-materializes per call (counted).
+        if let Some(tv) = cache.and_then(|c| c.values.get(&inst.name)) {
+            let value = match materialized.and_then(|m| m.get(&inst.name)) {
+                Some(t) => Value::Borrowed(t),
+                None => {
+                    stats::count_tensor_alloc();
+                    Value::Owned(tv.to_tensor()?)
+                }
+            };
+            env.insert(inst.name.as_str(), value);
             continue;
         }
         let result = if let Some(cd) = plan.clustered.get(&inst.name) {
@@ -188,6 +223,9 @@ pub(crate) fn evaluate_planned<'a>(
         let value = result
             .with_context(|| format!("evaluating %{} = {}", inst.name, inst.opcode))?;
         check_declared_shape(inst, &value)?;
+        if matches!(value, Value::Owned(_) | Value::Tuple(_)) {
+            stats::count_tensor_alloc();
+        }
         env.insert(inst.name.as_str(), value);
     }
     let root = root
@@ -244,17 +282,74 @@ fn eval_clustered_dot<'a>(
 /// Precomputed state bound to one weight-resident executor: the values
 /// of weight-only subexpressions (computed once instead of per call) and
 /// the packed cluster-native form of every planned clustered `dot`'s
-/// weights. Built by [`build_weight_cache`].
+/// weights. Built by [`build_weight_cache`], then interned through the
+/// process-wide content-addressed pool ([`super::pool`]) so residents
+/// for different batch sizes whose weight state coincides share ONE
+/// allocation behind an `Arc` — the opaque public type exists so callers
+/// can hold and pointer-compare that `Arc`.
 #[derive(Debug, Default)]
-pub(crate) struct WeightCache {
-    /// Instruction name -> precomputed value (weight-only frontier nodes
-    /// whose result feeds a dynamic computation).
-    pub values: HashMap<String, Tensor>,
-    /// `dot` instruction name -> bit-packed resident clustered weight.
-    pub prepared: HashMap<String, PreparedClustered>,
+pub struct WeightCache {
+    /// Instruction name -> precomputed typed value (weight-only frontier
+    /// nodes whose result feeds a dynamic computation).
+    pub(crate) values: HashMap<String, TypedVal>,
+    /// `dot` instruction name -> bit-packed resident clustered weight,
+    /// itself interned (shared even when whole-cache sharing misses
+    /// because instruction names differ between artifacts).
+    pub(crate) prepared: HashMap<String, Arc<PreparedClustered>>,
     /// Weight-only nodes no runtime consumer reads (everything they feed
     /// is cached, plan-skipped, or itself dead) — skipped per call.
-    pub skip: HashSet<String>,
+    pub(crate) skip: HashSet<String>,
+}
+
+impl WeightCache {
+    /// Content hash over every cached value, packed weight, and skip
+    /// entry (f32 payloads hashed bit-exact) — the pool's bucket key.
+    pub(crate) fn content_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        let mut names: Vec<&String> = self.values.keys().collect();
+        names.sort();
+        for name in names {
+            name.hash(&mut h);
+            self.values[name].hash_content(&mut h);
+        }
+        let mut pnames: Vec<&String> = self.prepared.keys().collect();
+        pnames.sort();
+        for name in pnames {
+            name.hash(&mut h);
+            self.prepared[name].content_hash().hash(&mut h);
+        }
+        let mut skips: Vec<&String> = self.skip.iter().collect();
+        skips.sort();
+        skips.hash(&mut h);
+        h.finish()
+    }
+
+    /// Byte-form tensors for every cached value — built once per
+    /// *fallback* resident so the classic evaluator binds them borrowed
+    /// instead of re-decoding per call (the arena path reads the typed
+    /// form directly and never needs this).
+    pub(crate) fn materialize_values(&self) -> Result<HashMap<String, Tensor>> {
+        self.values
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), v.to_tensor()?)))
+            .collect()
+    }
+
+    /// Bit-exact equality (hash-collision guard in the pool).
+    pub(crate) fn content_eq(&self, other: &WeightCache) -> bool {
+        self.skip == other.skip
+            && self.values.len() == other.values.len()
+            && self.prepared.len() == other.prepared.len()
+            && self
+                .values
+                .iter()
+                .all(|(k, v)| other.values.get(k).is_some_and(|o| v.content_eq(o)))
+            && self
+                .prepared
+                .iter()
+                .all(|(k, v)| other.prepared.get(k).is_some_and(|o| v.content_eq(o)))
+    }
 }
 
 /// Partially evaluate the entry computation over the fixed (weight)
@@ -323,8 +418,11 @@ pub(crate) fn build_weight_cache(
             wanted.insert(op.as_str());
         }
     }
+    // Fixed *parameters* with a dynamic consumer are cached too: the
+    // typed (decoded) form then lives once in the pooled cache instead
+    // of being re-staged privately by every batch size's arena.
     for inst in &entry.instructions {
-        if inst.opcode == "parameter" || !wanted.contains(inst.name.as_str()) {
+        if !wanted.contains(inst.name.as_str()) {
             continue;
         }
         let Some(value) = env.get(inst.name.as_str()) else {
@@ -338,11 +436,22 @@ pub(crate) fn build_weight_cache(
             .filter_map(|v| v.tensor().ok())
             .map(|t| t.elems())
             .sum();
-        // Zero-operand nodes (constant, iota) are always worth caching:
-        // their size is bounded by the module text / declared shape, and
-        // re-materializing a constant re-parses its literal payload.
-        if inst.operands.is_empty() || t.elems() <= operand_elems {
-            cache.values.insert(inst.name.clone(), t.clone());
+        // Cache-content batch-independence matters: the pool shares one
+        // WeightCache across batch sizes only when contents coincide
+        // bit-exact. broadcast/constant/iota outputs can carry the batch
+        // dimension (a [1,5] bias broadcast is "non-expanding" at batch
+        // 1 but not at batch 8), so they are never cached — broadcasts
+        // are a cheap copy pass per call and constants/iota are plan
+        // presets on the arena path anyway. Everything else is cached
+        // when non-expanding (weight reshapes/transposes/dequantized
+        // side uses); parameters (fixed inputs, batch-free) always.
+        let cacheable = match inst.opcode.as_str() {
+            "broadcast" | "constant" | "iota" => false,
+            "parameter" => true,
+            _ => t.elems() <= operand_elems,
+        };
+        if cacheable {
+            cache.values.insert(inst.name.clone(), TypedVal::from_tensor(t)?);
         }
     }
 
@@ -364,7 +473,7 @@ pub(crate) fn build_weight_cache(
             &table.as_f32()?,
             n_clusters,
         )?;
-        cache.prepared.insert(dot_name.clone(), prep);
+        cache.prepared.insert(dot_name.clone(), pool::intern_prepared(prep));
     }
 
     // Dead weight-only nodes: once a clustered dot is prepared, its table
@@ -504,17 +613,11 @@ fn eval_instruction<'a>(
             t
         }
         "convert" => ops::convert(operand(0)?, host_dtype(&inst.shape.dtype)?)?,
-        "exponential" => ops::unary_f32(operand(0)?, f32::exp)?,
-        "log" => ops::unary_f32(operand(0)?, f32::ln)?,
-        "sqrt" => ops::unary_f32(operand(0)?, f32::sqrt)?,
-        "rsqrt" => ops::unary_f32(operand(0)?, |x| 1.0 / x.sqrt())?,
-        "tanh" => ops::unary_f32(operand(0)?, f32::tanh)?,
-        "negate" => ops::unary_f32(operand(0)?, |x| -x)?,
-        "abs" => ops::unary_f32(operand(0)?, f32::abs)?,
-        "logistic" => ops::unary_f32(operand(0)?, |x| 1.0 / (1.0 + (-x).exp()))?,
-        "erf" => ops::unary_f32(operand(0)?, ops::erf)?,
-        "floor" => ops::unary_f32(operand(0)?, f32::floor)?,
-        "ceil" => ops::unary_f32(operand(0)?, f32::ceil)?,
+        "exponential" | "log" | "sqrt" | "rsqrt" | "tanh" | "negate" | "abs"
+        | "logistic" | "erf" | "floor" | "ceil" => {
+            let f = ops::unary_fn(&inst.opcode).expect("listed opcodes have unary kernels");
+            ops::unary_f32(operand(0)?, f)?
+        }
         "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
         | "and" | "or" | "xor" => ops::binary(operand(0)?, operand(1)?, &inst.opcode)?,
         "compare" => {
@@ -569,7 +672,7 @@ fn eval_instruction<'a>(
 
 /// Classify a reduce body structurally: the subcomputation's root must be
 /// a single supported binary op over its two parameters.
-fn reducer_op(module: &HloModule, to_apply: &str) -> Result<ops::ReduceOp> {
+pub(crate) fn reducer_op(module: &HloModule, to_apply: &str) -> Result<ops::ReduceOp> {
     let name = to_apply.trim_start_matches('%');
     let comp = module
         .computations

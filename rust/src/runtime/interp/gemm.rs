@@ -114,14 +114,17 @@ fn is_identity(order: &[usize]) -> bool {
     order.iter().enumerate().all(|(i, &d)| i == d)
 }
 
-/// Repack `vals` (row-major over `dims`) so the axes appear in `order`.
-fn pack(vals: &[f32], dims: &[usize], order: &[usize]) -> Vec<f32> {
+/// Repack `vals` (row-major over `dims`) so the axes appear in `order`,
+/// into `out` (cleared; capacity reused across calls).
+fn pack_into(vals: &[f32], dims: &[usize], order: &[usize], out: &mut Vec<f32>) {
+    super::stats::note_scratch_growth(out, vals.len());
+    out.clear();
     if vals.is_empty() {
-        return Vec::new();
+        return;
     }
     let st = strides(dims);
     let out_dims: Vec<usize> = order.iter().map(|&d| dims[d]).collect();
-    let mut out = Vec::with_capacity(vals.len());
+    out.reserve(vals.len());
     let mut idx = vec![0usize; out_dims.len()];
     loop {
         let src: usize = idx.iter().zip(order).map(|(&i, &d)| i * st[d]).sum();
@@ -130,7 +133,45 @@ fn pack(vals: &[f32], dims: &[usize], order: &[usize]) -> Vec<f32> {
             break;
         }
     }
-    out
+}
+
+/// Reusable canonicalization scratch for [`dot_general_into`]: holds the
+/// repacked lhs/rhs between calls so steady-state dots allocate nothing.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    a: Vec<f32>,
+    w: Vec<f32>,
+}
+
+/// DotGeneral through the blocked GEMM kernel, writing into a
+/// caller-provided output slice (`out.len()` must equal the product of
+/// `canon.out_dims`; it is fully overwritten).
+pub fn dot_general_into(
+    lhs: &[f32],
+    ld: &[usize],
+    rhs: &[f32],
+    rd: &[usize],
+    canon: &Canon,
+    out: &mut [f32],
+    scratch: &mut PackScratch,
+) {
+    if out.is_empty() {
+        return;
+    }
+    let a: &[f32] = if is_identity(&canon.lhs_order) {
+        lhs
+    } else {
+        pack_into(lhs, ld, &canon.lhs_order, &mut scratch.a);
+        &scratch.a
+    };
+    let w: &[f32] = if is_identity(&canon.rhs_order) {
+        rhs
+    } else {
+        pack_into(rhs, rd, &canon.rhs_order, &mut scratch.w);
+        &scratch.w
+    };
+    out.fill(0.0);
+    gemm(canon.b, canon.m, canon.k, canon.n, a, w, out);
 }
 
 /// General `dot` (XLA DotGeneral) through the blocked GEMM kernel.
@@ -142,18 +183,17 @@ pub fn dot_general(lhs: &Tensor, rhs: &Tensor, spec: &DotSpec) -> Result<Tensor>
     }
     let a_vals = lhs.as_f32()?;
     let w_vals = rhs.as_f32()?;
-    let a = if is_identity(&canon.lhs_order) {
-        a_vals
-    } else {
-        pack(&a_vals, lhs.shape(), &canon.lhs_order)
-    };
-    let w = if is_identity(&canon.rhs_order) {
-        w_vals
-    } else {
-        pack(&w_vals, rhs.shape(), &canon.rhs_order)
-    };
     let mut out = vec![0.0f32; out_elems];
-    gemm(canon.b, canon.m, canon.k, canon.n, &a, &w, &mut out);
+    let mut scratch = PackScratch::default();
+    dot_general_into(
+        &a_vals,
+        lhs.shape(),
+        &w_vals,
+        rhs.shape(),
+        &canon,
+        &mut out,
+        &mut scratch,
+    );
     Tensor::from_f32(canon.out_dims, &out)
 }
 

@@ -8,8 +8,8 @@
 //!
 //! This is the default execution backend: no PJRT, no native XLA, no
 //! external crates — exactly the self-contained CPU path a
-//! resource-constrained edge device can run. Since PR 2 the hot matmul
-//! path is a real kernel subsystem rather than an index walk:
+//! resource-constrained edge device can run. PR 2 made the compute side
+//! a real kernel subsystem; PR 3 does the same for memory:
 //!
 //! * [`gemm`] — `dot` canonicalized to batched row-major GEMM and run
 //!   through a cache-blocked, register-tiled, `std::thread::scope`-
@@ -17,20 +17,33 @@
 //! * [`clustered`] — clustered weights execute `dot` directly on packed
 //!   cluster indices + codebook via the paper's LUT accumulation, so
 //!   compressed weights are never dematerialized to f32;
-//! * a `WeightCache` per resident executor precomputes weight-only
-//!   subexpressions and bit-packs clustered weights once at bind time.
+//! * [`MemoryPlan`] + arena execution — at bind time the module gets a
+//!   liveness-based memory plan: instruction outputs are assigned to a
+//!   small set of reusable typed buffer slots (greedy best-fit),
+//!   elementwise ops run in place when their operand dies, and
+//!   reshape/copy are zero-copy aliases. Execution writes every kernel
+//!   result straight into its planned slot, so steady-state serving does
+//!   no tensor-sized heap allocation (see [`stats`]);
+//! * [`pool`] + `WeightCache` — residency-time partial evaluation of
+//!   weight-only subexpressions, bit-packed clustered weights, and a
+//!   process-wide content-addressed pool that shares the resulting
+//!   [`WeightCache`] across executors for different batch sizes.
 //!
 //! The `pjrt` feature recovers the XLA-compiled path on machines that
 //! have a native install.
 
+mod arena;
 mod eval;
 mod ops;
+mod plan;
 
 pub mod clustered;
 pub mod gemm;
+pub mod pool;
+pub mod stats;
 
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -38,6 +51,9 @@ use super::{Backend, Executor, ResidentExecutor};
 use crate::clustering::ClusteredTensors;
 use crate::hlo::HloModule;
 use crate::tensor::Tensor;
+
+pub use eval::{evaluate_unplanned, WeightCache};
+pub use plan::MemoryPlan;
 
 /// The interpreter backend (stateless factory).
 pub struct InterpBackend;
@@ -48,19 +64,42 @@ impl Backend for InterpBackend {
     }
 
     /// "Compilation" here is parsing, a preflight pass that rejects
-    /// modules using ops outside the supported subset, and the execution
-    /// plan pass that rewires clustered matmuls onto the LUT kernel.
+    /// modules using ops outside the supported subset, the execution
+    /// plan pass that rewires clustered matmuls onto the LUT kernel, and
+    /// the memory plan that assigns every instruction a reusable slot.
     fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>> {
-        let module = HloModule::parse_file(path)?;
-        eval::preflight(&module)?;
-        let plan = Arc::new(clustered::plan(&module));
-        let n_params = module.parameters()?.len();
-        Ok(Box::new(InterpExecutor {
-            module: Arc::new(module),
-            plan,
-            n_params,
-            name: path.display().to_string(),
-        }))
+        Ok(Box::new(InterpExecutor::load(path)?))
+    }
+}
+
+/// Memory plan + its preallocated arena. The arena is behind a mutex:
+/// one execution at a time per executor (workers are single-owner
+/// anyway), in exchange for zero steady-state allocation.
+struct PlannedState {
+    mem: MemoryPlan,
+    arena: Mutex<arena::Arena>,
+}
+
+impl PlannedState {
+    fn build(
+        module: &HloModule,
+        exec: &clustered::ExecPlan,
+        cache: Option<&WeightCache>,
+        name: &str,
+    ) -> Option<PlannedState> {
+        match plan::build(module, exec, cache) {
+            Ok(mem) => {
+                let arena = Mutex::new(arena::Arena::new(&mem));
+                Some(PlannedState { mem, arena })
+            }
+            Err(e) => {
+                crate::log_info!(
+                    "{name}: memory planning unavailable ({e:#}); executing with \
+                     per-instruction buffers"
+                );
+                None
+            }
+        }
     }
 }
 
@@ -70,6 +109,116 @@ pub struct InterpExecutor {
     plan: Arc<clustered::ExecPlan>,
     n_params: usize,
     name: String,
+    /// Cache-less memory plan for the full-input path, built lazily on
+    /// first use: residents re-plan against their weight cache anyway,
+    /// so eagerly planning at load would waste a pass and a zeroed
+    /// arena per batch size — and would pollute the `stats` plan gauges
+    /// with an arena that never serves traffic.
+    planned: std::sync::OnceLock<Option<PlannedState>>,
+}
+
+impl InterpExecutor {
+    /// Load and plan an HLO-text artifact.
+    pub fn load(path: &Path) -> Result<Self> {
+        let module = HloModule::parse_file(path)?;
+        Self::from_module(module, path.display().to_string())
+    }
+
+    /// Load and plan from HLO text directly (tests and benches).
+    pub fn load_text(hlo: &str, name: &str) -> Result<Self> {
+        let module = HloModule::parse(hlo)?;
+        Self::from_module(module, name.to_string())
+    }
+
+    fn from_module(module: HloModule, name: String) -> Result<Self> {
+        eval::preflight(&module)?;
+        let plan = Arc::new(clustered::plan(&module));
+        let n_params = module.parameters()?.len();
+        Ok(InterpExecutor {
+            module: Arc::new(module),
+            plan,
+            n_params,
+            name,
+            planned: std::sync::OnceLock::new(),
+        })
+    }
+
+    fn planned_state(&self) -> &Option<PlannedState> {
+        self.planned
+            .get_or_init(|| PlannedState::build(&self.module, &self.plan, None, &self.name))
+    }
+
+    /// The memory plan, when the module was plannable (None means the
+    /// executor fell back to per-instruction buffers).
+    pub fn memory_plan(&self) -> Option<&MemoryPlan> {
+        self.planned_state().as_ref().map(|p| &p.mem)
+    }
+
+    /// Concrete-typed residency bind (the trait method wraps this; tests
+    /// use it to reach [`InterpResident::weight_cache`]).
+    pub fn resident(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+    ) -> Result<InterpResident> {
+        if n_dynamic + fixed.len() != self.n_params {
+            bail!(
+                "{}: {n_dynamic} dynamic + {} fixed inputs != {} module parameters",
+                self.name,
+                fixed.len(),
+                self.n_params
+            );
+        }
+        let cache = eval::build_weight_cache(
+            &self.module,
+            n_dynamic,
+            &fixed,
+            &self.plan,
+            clustered.as_ref().map(|c| c.n_clusters),
+        )?;
+        // Content-addressed interning: residents at other batch sizes
+        // with identical weight state share this allocation.
+        let cache = pool::intern_cache(cache);
+        let planned = PlannedState::build(&self.module, &self.plan, Some(&cache), &self.name);
+        let fallback_values = match &planned {
+            Some(ps) => {
+                // Fixed inputs are validated and staged (decoded to typed
+                // buffers) once, here — per-call staging touches only the
+                // dynamic prefix.
+                let fixed_refs: Vec<&Tensor> = fixed.iter().collect();
+                let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+                arena.stage_params(&ps.mem, n_dynamic, &fixed_refs)?;
+                None
+            }
+            // The classic fallback binds cached weights borrowed from a
+            // byte-form view built once here, not re-decoded per call.
+            // Parameter entries are dropped: the classic evaluator binds
+            // params straight from the fixed inputs and never consults
+            // the cache for them.
+            None => {
+                let params: std::collections::HashSet<String> = self
+                    .module
+                    .parameters()?
+                    .into_iter()
+                    .map(|(n, _)| n)
+                    .collect();
+                let mut values = cache.materialize_values()?;
+                values.retain(|k, _| !params.contains(k));
+                Some(values)
+            }
+        };
+        Ok(InterpResident {
+            module: self.module.clone(),
+            plan: self.plan.clone(),
+            cache,
+            name: self.name.clone(),
+            n_dynamic,
+            fixed,
+            planned,
+            fallback_values,
+        })
+    }
 }
 
 impl Executor for InterpExecutor {
@@ -78,8 +227,21 @@ impl Executor for InterpExecutor {
     }
 
     fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.n_params {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.n_params,
+                inputs.len()
+            );
+        }
         let refs: Vec<&Tensor> = inputs.iter().collect();
-        let outputs = eval::evaluate_planned(&self.module, &refs, &self.plan, None)?;
+        let outputs = if let Some(ps) = self.planned_state() {
+            let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+            arena::run_staged(&self.module, &ps.mem, None, &mut arena, 0, &refs)?
+        } else {
+            eval::evaluate_planned(&self.module, &refs, &self.plan, None)?
+        };
         crate::runtime::single_replica(vec![outputs], &self.name)
     }
 
@@ -101,45 +263,39 @@ impl Executor for InterpExecutor {
         fixed: Arc<Vec<Tensor>>,
         clustered: Option<Arc<ClusteredTensors>>,
     ) -> Result<Box<dyn ResidentExecutor>> {
-        if n_dynamic + fixed.len() != self.n_params {
-            bail!(
-                "{}: {n_dynamic} dynamic + {} fixed inputs != {} module parameters",
-                self.name,
-                fixed.len(),
-                self.n_params
-            );
-        }
-        let cache = eval::build_weight_cache(
-            &self.module,
-            n_dynamic,
-            &fixed,
-            &self.plan,
-            clustered.as_ref().map(|c| c.n_clusters),
-        )?;
-        Ok(Box::new(InterpResident {
-            module: self.module.clone(),
-            plan: self.plan.clone(),
-            cache,
-            name: self.name.clone(),
-            n_dynamic,
-            fixed,
-        }))
+        Ok(Box::new(self.resident(n_dynamic, fixed, clustered)?))
     }
 }
 
 /// Weight-resident evaluation: the fixed inputs are pre-bound host-side
 /// behind a shared `Arc` (the interpreter's analogue of device-resident
-/// buffers — one host copy no matter how many batch sizes reference
-/// it), plus the bind-time `WeightCache` of precomputed weight
-/// expressions and packed clustered weights. Each call supplies only the
-/// dynamic image batch.
+/// buffers — one host copy no matter how many batch sizes reference it),
+/// plus the pooled bind-time [`WeightCache`] of precomputed weight
+/// expressions and packed clustered weights, and the memory-planned
+/// arena. Each call supplies only the dynamic image batch.
 pub struct InterpResident {
     module: Arc<HloModule>,
     plan: Arc<clustered::ExecPlan>,
-    cache: eval::WeightCache,
+    cache: Arc<WeightCache>,
     name: String,
     n_dynamic: usize,
     fixed: Arc<Vec<Tensor>>,
+    planned: Option<PlannedState>,
+    /// Byte-form cache values, present only on the classic fallback path.
+    fallback_values: Option<std::collections::HashMap<String, Tensor>>,
+}
+
+impl InterpResident {
+    /// The pooled weight cache — `Arc::ptr_eq` across residents proves
+    /// batch sizes share one allocation (`tests/memory_resident.rs`).
+    pub fn weight_cache(&self) -> Arc<WeightCache> {
+        self.cache.clone()
+    }
+
+    /// The memory plan, when the module was plannable.
+    pub fn memory_plan(&self) -> Option<&MemoryPlan> {
+        self.planned.as_ref().map(|p| &p.mem)
+    }
 }
 
 impl ResidentExecutor for InterpResident {
@@ -156,9 +312,20 @@ impl ResidentExecutor for InterpResident {
                 dynamic.len()
             );
         }
-        let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
-        let outputs =
-            eval::evaluate_planned(&self.module, &refs, &self.plan, Some(&self.cache))?;
+        let outputs = if let Some(ps) = &self.planned {
+            let refs: Vec<&Tensor> = dynamic.iter().collect();
+            let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+            arena::run_staged(&self.module, &ps.mem, Some(&self.cache), &mut arena, 0, &refs)?
+        } else {
+            let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
+            eval::evaluate_classic(
+                &self.module,
+                &refs,
+                &self.plan,
+                Some(&self.cache),
+                self.fallback_values.as_ref(),
+            )?
+        };
         crate::runtime::single_replica(vec![outputs], &self.name)
     }
 }
@@ -175,26 +342,24 @@ mod tests {
         %s = f32[2]{0} add(%x, %w)\n  \
         ROOT %t = (f32[2]{0}) tuple(%s)\n}\n";
 
-    fn load(hlo: &str) -> Box<dyn Executor> {
-        let dir = std::env::temp_dir().join(format!(
-            "clusterformer-interp-test-{}-{:?}",
-            std::process::id(),
-            std::thread::current().id()
-        ));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("m.hlo.txt");
-        std::fs::write(&path, hlo).unwrap();
-        InterpBackend.load_hlo(&path).unwrap()
+    fn load(hlo: &str) -> InterpExecutor {
+        InterpExecutor::load_text(hlo, "test-module").unwrap()
     }
 
     #[test]
     fn executor_runs_and_decomposes_tuple() {
         let exe = load(ADD_ONE);
+        assert!(exe.memory_plan().is_some(), "trivial module must be plannable");
         let x = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
         let w = Tensor::from_f32(vec![2], &[10.0, 20.0]).unwrap();
         let out = exe.run(&[x, w]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 22.0]);
+        // Repeated runs reuse the arena bit-for-bit.
+        let x2 = Tensor::from_f32(vec![2], &[3.0, 4.0]).unwrap();
+        let w2 = Tensor::from_f32(vec![2], &[30.0, 40.0]).unwrap();
+        let out2 = exe.run(&[x2, w2]).unwrap();
+        assert_eq!(out2[0].as_f32().unwrap(), vec![33.0, 44.0]);
     }
 
     #[test]
@@ -202,7 +367,7 @@ mod tests {
         let exe = load(ADD_ONE);
         let w = Tensor::from_f32(vec![2], &[5.0, 5.0]).unwrap();
         let fixed = Arc::new(vec![w]);
-        let resident = exe.with_resident(1, fixed.clone()).unwrap();
+        let resident = exe.resident(1, fixed.clone(), None).unwrap();
         resident.warmup().unwrap();
         let x = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
         let out = resident.run(std::slice::from_ref(&x)).unwrap();
@@ -210,7 +375,7 @@ mod tests {
         // wrong dynamic arity is rejected
         assert!(resident.run(&[x.clone(), x]).is_err());
         // wrong resident arity is rejected
-        assert!(exe.with_resident(2, fixed).is_err());
+        assert!(exe.resident(2, fixed, None).is_err());
     }
 
     #[test]
@@ -230,7 +395,7 @@ mod tests {
         let x = Tensor::from_f32(vec![2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap();
         let w = Tensor::from_f32(vec![4], &[1.0, 0.0, 0.0, 2.0]).unwrap();
         let full = exe.run(&[x.clone(), w.clone()]).unwrap();
-        let resident = exe.with_resident(1, Arc::new(vec![w])).unwrap();
+        let resident = exe.resident(1, Arc::new(vec![w]), None).unwrap();
         let res = resident.run(std::slice::from_ref(&x)).unwrap();
         assert_eq!(full[0], res[0]);
         // w reshaped/transposed is diag(1,2) transposed = diag(1,2);
@@ -239,19 +404,130 @@ mod tests {
     }
 
     #[test]
+    fn planned_matches_unplanned_on_softmax_shape() {
+        // A softmax-shaped module exercises reduce, broadcast (in-place
+        // candidates), subtract/exponential/divide chains, and the
+        // zero-copy alias path, with long-range reuse of %x.
+        let hlo = "HloModule m\n\
+            %max_f (p0: f32[], p1: f32[]) -> f32[] {\n  \
+            %p0 = f32[] parameter(0)\n  \
+            %p1 = f32[] parameter(1)\n  \
+            ROOT %r = f32[] maximum(%p0, %p1)\n}\n\
+            %add_f (q0: f32[], q1: f32[]) -> f32[] {\n  \
+            %q0 = f32[] parameter(0)\n  \
+            %q1 = f32[] parameter(1)\n  \
+            ROOT %r2 = f32[] add(%q0, %q1)\n}\n\
+            ENTRY %e (a: f32[4,8]) -> f32[4,8] {\n  \
+            %a = f32[4,8]{1,0} parameter(0)\n  \
+            %ninf = f32[] constant(-inf)\n  \
+            %mx = f32[4]{0} reduce(%a, %ninf), dimensions={1}, to_apply=%max_f\n  \
+            %mxb = f32[4,8]{1,0} broadcast(%mx), dimensions={0}\n  \
+            %c = f32[4,8]{1,0} subtract(%a, %mxb)\n  \
+            %x = f32[4,8]{1,0} exponential(%c)\n  \
+            %zero = f32[] constant(0)\n  \
+            %sm = f32[4]{0} reduce(%x, %zero), dimensions={1}, to_apply=%add_f\n  \
+            %smb = f32[4,8]{1,0} broadcast(%sm), dimensions={0}\n  \
+            ROOT %o = f32[4,8]{1,0} divide(%x, %smb)\n}\n";
+        let exe = load(hlo);
+        let mem = exe.memory_plan().expect("softmax must be plannable");
+        assert!(
+            mem.peak_bytes() < mem.naive_bytes(),
+            "slot reuse must shrink residency ({} vs {})",
+            mem.peak_bytes(),
+            mem.naive_bytes()
+        );
+        let vals: Vec<f32> = (0..32).map(|i| ((i as f32) * 0.37).sin() * 3.0).collect();
+        let a = Tensor::from_f32(vec![4, 8], &vals).unwrap();
+        let planned = exe.run(std::slice::from_ref(&a)).unwrap();
+        let module = HloModule::parse(hlo).unwrap();
+        let unplanned = evaluate_unplanned(&module, &[&a]).unwrap();
+        assert_eq!(planned[0], unplanned[0], "planned must be bit-for-bit equal");
+    }
+
+    #[test]
+    fn reshape_of_constant_resolves_through_alias() {
+        // An alias of a plan-time preset must resolve to the preset's
+        // origin (Loc carries the origin index).
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2,2]) -> f32[2,2] {\n  \
+            %x = f32[2,2]{1,0} parameter(0)\n  \
+            %c = f32[4]{0} constant({1, 2, 3, 4})\n  \
+            %r = f32[2,2]{1,0} reshape(%c)\n  \
+            ROOT %o = f32[2,2]{1,0} add(%x, %r)\n}\n";
+        let exe = load(hlo);
+        assert!(exe.memory_plan().is_some());
+        let x = Tensor::from_f32(vec![2, 2], &[10.0; 4]).unwrap();
+        let out = exe.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 12.0, 13.0, 14.0]);
+        // Twice: the arena path must be stable across calls.
+        let out = exe.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn resident_serves_fixed_params_from_pooled_cache() {
+        // A fixed parameter read by a dynamic consumer is served from
+        // the shared WeightCache (one typed copy per pool entry), not
+        // staged privately per arena: only the dynamic input is read as
+        // a parameter.
+        let exe = load(ADD_ONE);
+        let w = Tensor::from_f32(vec![2], &[5.0, 6.0]).unwrap();
+        let resident = exe.resident(1, Arc::new(vec![w]), None).unwrap();
+        let mem = resident.memory_plan().expect("plannable");
+        assert_eq!(mem.param_read, vec![true, false]);
+        let x = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let out = resident.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn fallback_resident_binds_cached_values_once() {
+        // get-tuple-element forces the classic fallback; the resident
+        // must still serve cached weight expressions (borrowed from the
+        // bind-time materialized view) correctly across calls.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2], w: f32[2]) -> f32[2] {\n  \
+            %x = f32[2]{0} parameter(0)\n  \
+            %w = f32[2]{0} parameter(1)\n  \
+            %wn = f32[2]{0} negate(%w)\n  \
+            %t = (f32[2]{0}, f32[2]{0}) tuple(%x, %wn)\n  \
+            %g = f32[2]{0} get-tuple-element(%t), index=1\n  \
+            ROOT %s = f32[2]{0} add(%x, %g)\n}\n";
+        let exe = load(hlo);
+        let w = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let resident = exe.resident(1, Arc::new(vec![w]), None).unwrap();
+        assert!(resident.memory_plan().is_none(), "GTE must fall back");
+        let x = Tensor::from_f32(vec![2], &[10.0, 20.0]).unwrap();
+        for _ in 0..2 {
+            let out = resident.run(std::slice::from_ref(&x)).unwrap();
+            assert_eq!(out[0].as_f32().unwrap(), vec![9.0, 18.0]);
+        }
+    }
+
+    #[test]
     fn unsupported_ops_rejected_at_load() {
         let hlo = "HloModule m\n\
             ENTRY %e (x: f32[2]) -> f32[2] {\n  \
             %x = f32[2]{0} parameter(0)\n  \
             ROOT %s = f32[2]{0} custom-call(%x), custom_call_target=\"foo\"\n}\n";
-        let dir = std::env::temp_dir().join(format!(
-            "clusterformer-interp-test-unsup-{}",
-            std::process::id()
-        ));
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.hlo.txt");
-        std::fs::write(&path, hlo).unwrap();
-        let err = InterpBackend.load_hlo(&path).unwrap_err();
+        let err = InterpExecutor::load_text(hlo, "bad").unwrap_err();
         assert!(format!("{err:#}").contains("custom-call"));
+    }
+
+    #[test]
+    fn get_tuple_element_falls_back_to_classic_path() {
+        // get-tuple-element is outside the planned subset: the executor
+        // must fall back to per-instruction buffers and still be correct.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2]) -> f32[2] {\n  \
+            %x = f32[2]{0} parameter(0)\n  \
+            %t = (f32[2]{0}, f32[2]{0}) tuple(%x, %x)\n  \
+            %g = f32[2]{0} get-tuple-element(%t), index=1\n  \
+            ROOT %s = f32[2]{0} add(%g, %g)\n}\n";
+        let exe = load(hlo);
+        assert!(exe.memory_plan().is_none(), "GTE module must fall back");
+        let x = Tensor::from_f32(vec![2], &[1.5, -2.0]).unwrap();
+        let out = exe.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), vec![3.0, -4.0]);
     }
 }

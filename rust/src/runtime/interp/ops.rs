@@ -91,6 +91,108 @@ pub(crate) fn unary_f32(t: &Tensor, f: impl Fn(f32) -> f32) -> Result<Tensor> {
     Tensor::from_f32(t.shape().to_vec(), &v)
 }
 
+/// The f32 kernel for a unary elementwise opcode — one table shared by
+/// the classic evaluator and the planned-slot executor, so the two paths
+/// cannot drift.
+pub(crate) fn unary_fn(op: &str) -> Option<fn(f32) -> f32> {
+    let f: fn(f32) -> f32 = match op {
+        "exponential" => f32::exp,
+        "log" => f32::ln,
+        "sqrt" => f32::sqrt,
+        "rsqrt" => |x| 1.0 / x.sqrt(),
+        "tanh" => f32::tanh,
+        "negate" => |x| -x,
+        "abs" => f32::abs,
+        "logistic" => |x| 1.0 / (1.0 + (-x).exp()),
+        "erf" => erf,
+        "floor" => f32::floor,
+        "ceil" => f32::ceil,
+        _ => return None,
+    };
+    Some(f)
+}
+
+/// f32 kernel for a binary elementwise opcode (shared table).
+pub(crate) fn binary_f32_fn(op: &str) -> Option<fn(f32, f32) -> f32> {
+    let f: fn(f32, f32) -> f32 = match op {
+        "add" => |x, y| x + y,
+        "subtract" => |x, y| x - y,
+        "multiply" => |x, y| x * y,
+        "divide" => |x, y| x / y,
+        "maximum" => f32::max,
+        "minimum" => f32::min,
+        "power" => f32::powf,
+        _ => return None,
+    };
+    Some(f)
+}
+
+/// s32 kernel for a binary elementwise opcode (shared table).
+pub(crate) fn binary_i32_fn(op: &str) -> Option<fn(i32, i32) -> i32> {
+    let f: fn(i32, i32) -> i32 = match op {
+        "add" => |x, y| x.wrapping_add(y),
+        "subtract" => |x, y| x.wrapping_sub(y),
+        "multiply" => |x, y| x.wrapping_mul(y),
+        "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
+        "maximum" => std::cmp::max,
+        "minimum" => std::cmp::min,
+        "and" => |x, y| x & y,
+        "or" => |x, y| x | y,
+        "xor" => |x, y| x ^ y,
+        _ => return None,
+    };
+    Some(f)
+}
+
+/// u8/pred kernel for a binary elementwise opcode (shared table).
+pub(crate) fn binary_u8_fn(op: &str) -> Option<fn(u8, u8) -> u8> {
+    let f: fn(u8, u8) -> u8 = match op {
+        "add" => |x, y| x.wrapping_add(y),
+        "multiply" => |x, y| x.wrapping_mul(y),
+        "maximum" => std::cmp::max,
+        "minimum" => std::cmp::min,
+        "and" => |x, y| x & y,
+        "or" => |x, y| x | y,
+        "xor" => |x, y| x ^ y,
+        _ => return None,
+    };
+    Some(f)
+}
+
+/// Comparison direction of a `compare` instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum CmpDir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+pub(crate) fn cmp_dir(direction: &str) -> Option<CmpDir> {
+    Some(match direction {
+        "EQ" => CmpDir::Eq,
+        "NE" => CmpDir::Ne,
+        "LT" => CmpDir::Lt,
+        "LE" => CmpDir::Le,
+        "GT" => CmpDir::Gt,
+        "GE" => CmpDir::Ge,
+        _ => return None,
+    })
+}
+
+pub(crate) fn cmp_eval<T: PartialOrd>(dir: CmpDir, x: T, y: T) -> bool {
+    match dir {
+        CmpDir::Eq => x == y,
+        CmpDir::Ne => x != y,
+        CmpDir::Lt => x < y,
+        CmpDir::Le => x <= y,
+        CmpDir::Gt => x > y,
+        CmpDir::Ge => x >= y,
+    }
+}
+
 /// Abramowitz & Stegun 7.1.26 polynomial approximation (|err| < 1.5e-7,
 /// well inside f32 noise) — jax lowers exact GELU through `erf`.
 pub(crate) fn erf(x: f32) -> f32 {
@@ -149,44 +251,18 @@ pub(crate) fn binary(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
     let shape = binary_shape(a, b, op)?.to_vec();
     match a.dtype() {
         Dtype::F32 => {
-            let f: fn(f32, f32) -> f32 = match op {
-                "add" => |x, y| x + y,
-                "subtract" => |x, y| x - y,
-                "multiply" => |x, y| x * y,
-                "divide" => |x, y| x / y,
-                "maximum" => f32::max,
-                "minimum" => f32::min,
-                "power" => f32::powf,
-                _ => bail!("{op}: not supported for f32"),
-            };
+            let f = binary_f32_fn(op)
+                .ok_or_else(|| anyhow!("{op}: not supported for f32"))?;
             Tensor::from_f32(shape, &zip_map(&a.as_f32()?, &b.as_f32()?, f))
         }
         Dtype::I32 => {
-            let f: fn(i32, i32) -> i32 = match op {
-                "add" => |x, y| x.wrapping_add(y),
-                "subtract" => |x, y| x.wrapping_sub(y),
-                "multiply" => |x, y| x.wrapping_mul(y),
-                "divide" => |x, y| if y == 0 { 0 } else { x.wrapping_div(y) },
-                "maximum" => std::cmp::max,
-                "minimum" => std::cmp::min,
-                "and" => |x, y| x & y,
-                "or" => |x, y| x | y,
-                "xor" => |x, y| x ^ y,
-                _ => bail!("{op}: not supported for s32"),
-            };
+            let f = binary_i32_fn(op)
+                .ok_or_else(|| anyhow!("{op}: not supported for s32"))?;
             Tensor::from_i32(shape, &zip_map(&a.as_i32()?, &b.as_i32()?, f))
         }
         Dtype::U8 => {
-            let f: fn(u8, u8) -> u8 = match op {
-                "add" => |x, y| x.wrapping_add(y),
-                "multiply" => |x, y| x.wrapping_mul(y),
-                "maximum" => std::cmp::max,
-                "minimum" => std::cmp::min,
-                "and" => |x, y| x & y,
-                "or" => |x, y| x | y,
-                "xor" => |x, y| x ^ y,
-                _ => bail!("{op}: not supported for u8/pred"),
-            };
+            let f = binary_u8_fn(op)
+                .ok_or_else(|| anyhow!("{op}: not supported for u8/pred"))?;
             Tensor::from_u8(shape, &zip_map(a.as_u8()?, b.as_u8()?, f))
         }
         Dtype::I64 => bail!("{op}: s64 elementwise arithmetic not supported"),
@@ -195,16 +271,11 @@ pub(crate) fn binary(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
 
 pub(crate) fn compare(a: &Tensor, b: &Tensor, direction: &str) -> Result<Tensor> {
     let shape = binary_shape(a, b, "compare")?.to_vec();
-    let f: fn(f64, f64) -> bool = match direction {
-        "EQ" => |x, y| x == y,
-        "NE" => |x, y| x != y,
-        "LT" => |x, y| x < y,
-        "LE" => |x, y| x <= y,
-        "GT" => |x, y| x > y,
-        "GE" => |x, y| x >= y,
-        other => bail!("compare: unknown direction {other:?}"),
-    };
-    let out = zip_map(&to_f64_vec(a)?, &to_f64_vec(b)?, |x, y| u8::from(f(x, y)));
+    let dir = cmp_dir(direction)
+        .ok_or_else(|| anyhow!("compare: unknown direction {direction:?}"))?;
+    let out = zip_map(&to_f64_vec(a)?, &to_f64_vec(b)?, |x, y| {
+        u8::from(cmp_eval(dir, x, y))
+    });
     Tensor::from_u8(shape, &out)
 }
 
@@ -372,8 +443,15 @@ pub(crate) fn transpose(t: &Tensor, perm: &[usize]) -> Result<Tensor> {
     Tensor::new(t.dtype(), out_dims, data)
 }
 
-/// `slice` with the `slice={[lo:hi], [lo:hi:step]}` attribute.
-pub(crate) fn slice(t: &Tensor, attrs: &str) -> Result<Tensor> {
+/// Parsed + validated `slice={[lo:hi], [lo:hi:step]}` attribute.
+#[derive(Debug, Clone)]
+pub(crate) struct SliceSpec {
+    pub starts: Vec<usize>,
+    pub steps: Vec<usize>,
+    pub out_dims: Vec<usize>,
+}
+
+pub(crate) fn slice_spec(attrs: &str, in_dims: &[usize]) -> Result<SliceSpec> {
     let pat = "slice={";
     let start = attrs
         .find(pat)
@@ -384,7 +462,6 @@ pub(crate) fn slice(t: &Tensor, attrs: &str) -> Result<Tensor> {
             .find('}')
             .ok_or_else(|| anyhow!("unterminated slice attribute"))?;
     let body = &attrs[start..end];
-    let in_dims = t.shape();
     let mut starts = Vec::new();
     let mut limits = Vec::new();
     let mut steps = Vec::new();
@@ -432,6 +509,14 @@ pub(crate) fn slice(t: &Tensor, attrs: &str) -> Result<Tensor> {
     let out_dims: Vec<usize> = (0..in_dims.len())
         .map(|d| (limits[d] - starts[d]).div_ceil(steps[d]))
         .collect();
+    Ok(SliceSpec { starts, steps, out_dims })
+}
+
+/// `slice` with the `slice={[lo:hi], [lo:hi:step]}` attribute.
+pub(crate) fn slice(t: &Tensor, attrs: &str) -> Result<Tensor> {
+    let in_dims = t.shape();
+    let spec = slice_spec(attrs, in_dims)?;
+    let SliceSpec { starts, steps, out_dims } = spec;
     let es = t.dtype().size();
     let out_elems = elem_count(&out_dims);
     let mut data = vec![0u8; out_elems * es];
@@ -509,6 +594,7 @@ pub(crate) fn dot(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
 /// convolution's `dim_labels` (for the input: d0=batch, d1=feature; for
 /// the kernel: d0=input feature, d1=output feature; for the output:
 /// d0=batch, d1=feature).
+#[derive(Debug, Clone)]
 struct DimSpec {
     d0: usize,
     d1: usize,
@@ -617,10 +703,20 @@ fn parse_window(attrs: &str, n_sp: usize) -> Result<(Vec<usize>, Vec<usize>, Vec
     Ok((sizes, win_strides, pad_lo, pad_hi))
 }
 
-/// Direct convolution — for these models this is the ViT patch
-/// embedding (stride == kernel size, "patchify"), so the naive loop nest
-/// touches each input pixel exactly once.
-pub(crate) fn convolution(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
+/// Parsed convolution attributes (dim labels + window), independent of
+/// operand shapes. Built once per instruction on the planned path.
+#[derive(Debug, Clone)]
+pub(crate) struct ConvCfg {
+    li: DimSpec,
+    lk: DimSpec,
+    lo: DimSpec,
+    k_sizes: Vec<usize>,
+    win_strides: Vec<usize>,
+    pad_lo: Vec<usize>,
+    pad_hi: Vec<usize>,
+}
+
+pub(crate) fn conv_cfg(attrs: &str) -> Result<ConvCfg> {
     if attr_int(attrs, "feature_group_count").unwrap_or(1) != 1
         || attr_int(attrs, "batch_group_count").unwrap_or(1) != 1
     {
@@ -634,96 +730,135 @@ pub(crate) fn convolution(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Ten
         bail!("dim_labels spatial rank mismatch");
     }
     let (k_sizes, win_strides, pad_lo, pad_hi) = parse_window(attrs, n_sp)?;
-    let a = lhs.as_f32()?;
-    let k = rhs.as_f32()?;
-    let ld = lhs.shape();
-    let rd = rhs.shape();
-    let batch = ld[li.d0];
-    let in_f = ld[li.d1];
-    if rd[lk.d0] != in_f {
+    Ok(ConvCfg { li, lk, lo, k_sizes, win_strides, pad_lo, pad_hi })
+}
+
+/// Validate operand shapes against the config and compute the output
+/// dims (shared by the classic path and plan-time validation).
+pub(crate) fn conv_out_dims(cfg: &ConvCfg, ld: &[usize], rd: &[usize]) -> Result<Vec<usize>> {
+    let n_sp = cfg.li.spatial.len();
+    let in_f = ld[cfg.li.d1];
+    if rd[cfg.lk.d0] != in_f {
         bail!(
             "convolution: kernel input features {} != lhs features {in_f}",
-            rd[lk.d0]
+            rd[cfg.lk.d0]
         );
     }
-    let out_f = rd[lk.d1];
-    let in_sp: Vec<usize> = li.spatial.iter().map(|&p| ld[p]).collect();
-    let k_sp: Vec<usize> = lk.spatial.iter().map(|&p| rd[p]).collect();
+    let in_sp: Vec<usize> = cfg.li.spatial.iter().map(|&p| ld[p]).collect();
+    let k_sp: Vec<usize> = cfg.lk.spatial.iter().map(|&p| rd[p]).collect();
     for i in 0..n_sp {
-        if k_sp[i] != k_sizes[i] {
+        if k_sp[i] != cfg.k_sizes[i] {
             bail!(
                 "convolution: window size {:?} != kernel spatial dims {:?}",
-                k_sizes,
+                cfg.k_sizes,
                 k_sp
             );
         }
     }
     let out_sp: Vec<usize> = (0..n_sp)
         .map(|i| {
-            let padded = in_sp[i] + pad_lo[i] + pad_hi[i];
+            let padded = in_sp[i] + cfg.pad_lo[i] + cfg.pad_hi[i];
             if padded < k_sp[i] {
                 0
             } else {
-                (padded - k_sp[i]) / win_strides[i] + 1
+                (padded - k_sp[i]) / cfg.win_strides[i] + 1
             }
         })
         .collect();
     let mut out_dims = vec![0usize; 2 + n_sp];
-    out_dims[lo.d0] = batch;
-    out_dims[lo.d1] = out_f;
+    out_dims[cfg.lo.d0] = ld[cfg.li.d0];
+    out_dims[cfg.lo.d1] = rd[cfg.lk.d1];
     for i in 0..n_sp {
-        out_dims[lo.spatial[i]] = out_sp[i];
+        out_dims[cfg.lo.spatial[i]] = out_sp[i];
     }
-    let out_elems = elem_count(&out_dims);
-    let mut out = vec![0.0f32; out_elems];
-    if out_elems > 0 && lhs.elems() > 0 && rhs.elems() > 0 {
-        let ls = strides(ld);
-        let rs = strides(rd);
-        let os = strides(&out_dims);
-        let mut osp = vec![0usize; n_sp];
-        // Hoisted odometer: `advance` always wraps back to all-zeros, so
-        // one allocation serves every (batch, channel, window) walk.
-        let mut ksp = vec![0usize; n_sp];
-        loop {
-            for bi in 0..batch {
-                for oc in 0..out_f {
-                    let mut acc = 0.0f32;
-                    loop {
-                        let mut in_off = bi * ls[li.d0];
-                        let mut k_off = oc * rs[lk.d1];
-                        let mut valid = true;
-                        for i in 0..n_sp {
-                            let c = (osp[i] * win_strides[i] + ksp[i]) as i64
-                                - pad_lo[i] as i64;
-                            if c < 0 || c >= in_sp[i] as i64 {
-                                valid = false;
-                                break;
-                            }
-                            in_off += (c as usize) * ls[li.spatial[i]];
-                            k_off += ksp[i] * rs[lk.spatial[i]];
-                        }
-                        if valid {
-                            for ic in 0..in_f {
-                                acc += a[in_off + ic * ls[li.d1]]
-                                    * k[k_off + ic * rs[lk.d0]];
-                            }
-                        }
-                        if !advance(&mut ksp, &k_sp) {
+    Ok(out_dims)
+}
+
+/// The direct-convolution loop nest, writing into a caller-provided
+/// output slice (`out.len()` must equal the product of
+/// [`conv_out_dims`]). For these models this is the ViT patch embedding
+/// (stride == kernel size, "patchify"), so it touches each input pixel
+/// exactly once.
+pub(crate) fn convolution_into(
+    cfg: &ConvCfg,
+    a: &[f32],
+    ld: &[usize],
+    k: &[f32],
+    rd: &[usize],
+    out_dims: &[usize],
+    out: &mut [f32],
+) {
+    let n_sp = cfg.li.spatial.len();
+    let (li, lk, lo) = (&cfg.li, &cfg.lk, &cfg.lo);
+    let batch = ld[li.d0];
+    let in_f = ld[li.d1];
+    let out_f = rd[lk.d1];
+    let in_sp: Vec<usize> = li.spatial.iter().map(|&p| ld[p]).collect();
+    let k_sp: Vec<usize> = lk.spatial.iter().map(|&p| rd[p]).collect();
+    let out_sp: Vec<usize> = lo.spatial.iter().map(|&p| out_dims[p]).collect();
+    if out.is_empty() || a.is_empty() || k.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let ls = strides(ld);
+    let rs = strides(rd);
+    let os = strides(out_dims);
+    let mut osp = vec![0usize; n_sp];
+    // Hoisted odometer: `advance` always wraps back to all-zeros, so
+    // one allocation serves every (batch, channel, window) walk.
+    let mut ksp = vec![0usize; n_sp];
+    loop {
+        for bi in 0..batch {
+            for oc in 0..out_f {
+                let mut acc = 0.0f32;
+                loop {
+                    let mut in_off = bi * ls[li.d0];
+                    let mut k_off = oc * rs[lk.d1];
+                    let mut valid = true;
+                    for i in 0..n_sp {
+                        let c = (osp[i] * cfg.win_strides[i] + ksp[i]) as i64
+                            - cfg.pad_lo[i] as i64;
+                        if c < 0 || c >= in_sp[i] as i64 {
+                            valid = false;
                             break;
                         }
+                        in_off += (c as usize) * ls[li.spatial[i]];
+                        k_off += ksp[i] * rs[lk.spatial[i]];
                     }
-                    let mut o_off = bi * os[lo.d0] + oc * os[lo.d1];
-                    for i in 0..n_sp {
-                        o_off += osp[i] * os[lo.spatial[i]];
+                    if valid {
+                        for ic in 0..in_f {
+                            acc += a[in_off + ic * ls[li.d1]]
+                                * k[k_off + ic * rs[lk.d0]];
+                        }
                     }
-                    out[o_off] = acc;
+                    if !advance(&mut ksp, &k_sp) {
+                        break;
+                    }
                 }
-            }
-            if !advance(&mut osp, &out_sp) {
-                break;
+                let mut o_off = bi * os[lo.d0] + oc * os[lo.d1];
+                for i in 0..n_sp {
+                    o_off += osp[i] * os[lo.spatial[i]];
+                }
+                out[o_off] = acc;
             }
         }
+        if !advance(&mut osp, &out_sp) {
+            break;
+        }
     }
+}
+
+/// Direct convolution (classic path): parse attributes, validate, and
+/// run [`convolution_into`] into a fresh tensor.
+pub(crate) fn convolution(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
+    let cfg = conv_cfg(attrs)?;
+    let ld = lhs.shape();
+    let rd = rhs.shape();
+    let out_dims = conv_out_dims(&cfg, ld, rd)?;
+    let a = lhs.as_f32()?;
+    let k = rhs.as_f32()?;
+    let mut out = vec![0.0f32; elem_count(&out_dims)];
+    convolution_into(&cfg, &a, ld, &k, rd, &out_dims, &mut out);
     Tensor::from_f32(out_dims, &out)
 }
 
@@ -737,6 +872,27 @@ pub(crate) enum ReduceOp {
     Mul,
     Max,
     Min,
+}
+
+/// f32 accumulator kernel for a [`ReduceOp`] — one table shared by the
+/// classic kernel and the planned-slot executor.
+pub(crate) fn reduce_f32_fn(op: ReduceOp) -> fn(f32, f32) -> f32 {
+    match op {
+        ReduceOp::Add => |x, y| x + y,
+        ReduceOp::Mul => |x, y| x * y,
+        ReduceOp::Max => f32::max,
+        ReduceOp::Min => f32::min,
+    }
+}
+
+/// s32 accumulator kernel for a [`ReduceOp`] (shared table).
+pub(crate) fn reduce_i32_fn(op: ReduceOp) -> fn(i32, i32) -> i32 {
+    match op {
+        ReduceOp::Add => |x, y| x.wrapping_add(y),
+        ReduceOp::Mul => |x, y| x.wrapping_mul(y),
+        ReduceOp::Max => std::cmp::max,
+        ReduceOp::Min => std::cmp::min,
+    }
 }
 
 pub(crate) fn reduce(
@@ -759,12 +915,7 @@ pub(crate) fn reduce(
         Dtype::F32 => {
             let v = data.as_f32()?;
             let init_v = init.as_f32()?[0];
-            let f: fn(f32, f32) -> f32 = match op {
-                ReduceOp::Add => |x, y| x + y,
-                ReduceOp::Mul => |x, y| x * y,
-                ReduceOp::Max => f32::max,
-                ReduceOp::Min => f32::min,
-            };
+            let f = reduce_f32_fn(op);
             let mut out = vec![init_v; elem_count(&out_dims)];
             if !v.is_empty() && !out.is_empty() {
                 let mut idx = vec![0usize; in_dims.len()];
@@ -786,12 +937,7 @@ pub(crate) fn reduce(
         Dtype::I32 => {
             let v = data.as_i32()?;
             let init_v = init.as_i32()?[0];
-            let f: fn(i32, i32) -> i32 = match op {
-                ReduceOp::Add => |x, y| x.wrapping_add(y),
-                ReduceOp::Mul => |x, y| x.wrapping_mul(y),
-                ReduceOp::Max => std::cmp::max,
-                ReduceOp::Min => std::cmp::min,
-            };
+            let f = reduce_i32_fn(op);
             let mut out = vec![init_v; elem_count(&out_dims)];
             if !v.is_empty() && !out.is_empty() {
                 let mut idx = vec![0usize; in_dims.len()];
@@ -818,12 +964,21 @@ pub(crate) fn reduce(
 // Gather
 // ---------------------------------------------------------------------
 
-/// XLA gather — the op behind the clustered codebook lookup
-/// (`codebook[indices]`). Implements the standard attribute set:
-/// `offset_dims`, `collapsed_slice_dims`, `start_index_map`,
-/// `index_vector_dim`, `slice_sizes`; start indices are clamped like the
-/// spec requires.
-pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> Result<Tensor> {
+/// Parsed + validated gather attributes, bound to one (operand shape,
+/// indices shape) pair. Built once — at plan time on the planned path —
+/// so the per-call walk does no attribute parsing.
+#[derive(Debug, Clone)]
+pub(crate) struct GatherCfg {
+    offset_dims: Vec<usize>,
+    start_map: Vec<usize>,
+    slice_sizes: Vec<usize>,
+    ivd: usize,
+    offset_src: Vec<usize>,
+    batch_out: Vec<usize>,
+    pub out_dims: Vec<usize>,
+}
+
+pub(crate) fn gather_cfg(attrs: &str, od: &[usize], id: &[usize]) -> Result<GatherCfg> {
     let offset_dims = attr_list(attrs, "offset_dims").unwrap_or_default();
     let collapsed = attr_list(attrs, "collapsed_slice_dims").unwrap_or_default();
     let start_map = attr_list(attrs, "start_index_map")
@@ -832,8 +987,6 @@ pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> R
         .ok_or_else(|| anyhow!("gather without index_vector_dim"))? as usize;
     let slice_sizes = attr_list(attrs, "slice_sizes")
         .ok_or_else(|| anyhow!("gather without slice_sizes"))?;
-    let od = operand.shape();
-    let id = start_indices.shape();
     if slice_sizes.len() != od.len() {
         bail!(
             "gather: slice_sizes {slice_sizes:?} rank-mismatch operand {od:?}"
@@ -875,54 +1028,355 @@ pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> R
     for (j, &p) in batch_out.iter().enumerate() {
         out_dims[p] = batch_sizes[j];
     }
-    let idx_vals = to_i64_vec(start_indices)?;
-    let op_strides = strides(od);
-    let idx_strides = strides(id);
-    let es = operand.dtype().size();
-    let out_elems = elem_count(&out_dims);
-    let mut data = vec![0u8; out_elems * es];
-    if out_elems > 0 {
-        let src = operand.bytes();
-        let mut oidx = vec![0usize; out_rank];
-        // Hoisted out of the per-element loop (this used to allocate a
-        // fresh Vec for every output element).
-        let mut operand_idx = vec![0usize; od.len()];
-        let mut o = 0usize;
-        loop {
-            operand_idx.fill(0);
-            for (j, &p) in offset_dims.iter().enumerate() {
-                operand_idx[offset_src[j]] = oidx[p];
-            }
-            for (k, &dim) in start_map.iter().enumerate() {
-                // flat position of this start-index component
-                let mut flat = 0usize;
-                let mut bj = 0usize;
-                for d in 0..id.len() {
-                    let coord = if d == ivd {
-                        k
-                    } else {
-                        let c = oidx[batch_out[bj]];
-                        bj += 1;
-                        c
-                    };
-                    flat += coord * idx_strides[d];
-                }
-                let max_start = (od[dim] - slice_sizes[dim]) as i64;
-                operand_idx[dim] += idx_vals[flat].clamp(0, max_start) as usize;
-            }
-            let s: usize = operand_idx
-                .iter()
-                .zip(&op_strides)
-                .map(|(&i, &st)| i * st)
-                .sum();
-            data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
-            o += 1;
-            if !advance(&mut oidx, &out_dims) {
-                break;
-            }
+    Ok(GatherCfg { offset_dims, start_map, slice_sizes, ivd, offset_src, batch_out, out_dims })
+}
+
+/// Typed view of a start-indices tensor (avoids the i64 widening copy on
+/// the planned path).
+#[derive(Clone, Copy)]
+pub(crate) enum IdxRef<'a> {
+    U8(&'a [u8]),
+    I32(&'a [i32]),
+    I64(&'a [i64]),
+}
+
+impl IdxRef<'_> {
+    #[inline]
+    fn get(&self, i: usize) -> i64 {
+        match self {
+            IdxRef::U8(v) => v[i] as i64,
+            IdxRef::I32(v) => v[i] as i64,
+            IdxRef::I64(v) => v[i],
         }
     }
-    Tensor::new(operand.dtype(), out_dims, data)
+}
+
+/// The gather index walk, shared by the byte path ([`gather`]) and the
+/// typed planned-slot path ([`gather_into`]): calls `emit` with the
+/// source *element* index for each output element, in output row-major
+/// order. Start indices are clamped like the XLA spec requires.
+fn gather_walk(
+    cfg: &GatherCfg,
+    od: &[usize],
+    id: &[usize],
+    idx: IdxRef<'_>,
+    mut emit: impl FnMut(usize),
+) {
+    let out_elems = elem_count(&cfg.out_dims);
+    if out_elems == 0 {
+        return;
+    }
+    let op_strides = strides(od);
+    let idx_strides = strides(id);
+    let out_rank = cfg.out_dims.len();
+    let mut oidx = vec![0usize; out_rank];
+    // Hoisted out of the per-element loop (this used to allocate a
+    // fresh Vec for every output element).
+    let mut operand_idx = vec![0usize; od.len()];
+    loop {
+        operand_idx.fill(0);
+        for (j, &p) in cfg.offset_dims.iter().enumerate() {
+            operand_idx[cfg.offset_src[j]] = oidx[p];
+        }
+        for (k, &dim) in cfg.start_map.iter().enumerate() {
+            // flat position of this start-index component
+            let mut flat = 0usize;
+            let mut bj = 0usize;
+            for d in 0..id.len() {
+                let coord = if d == cfg.ivd {
+                    k
+                } else {
+                    let c = oidx[cfg.batch_out[bj]];
+                    bj += 1;
+                    c
+                };
+                flat += coord * idx_strides[d];
+            }
+            let max_start = (od[dim] - cfg.slice_sizes[dim]) as i64;
+            operand_idx[dim] += idx.get(flat).clamp(0, max_start) as usize;
+        }
+        let s: usize = operand_idx
+            .iter()
+            .zip(&op_strides)
+            .map(|(&i, &st)| i * st)
+            .sum();
+        emit(s);
+        if !advance(&mut oidx, &cfg.out_dims) {
+            break;
+        }
+    }
+}
+
+/// XLA gather — the op behind the clustered codebook lookup
+/// (`codebook[indices]`). Implements the standard attribute set:
+/// `offset_dims`, `collapsed_slice_dims`, `start_index_map`,
+/// `index_vector_dim`, `slice_sizes`.
+pub(crate) fn gather(operand: &Tensor, start_indices: &Tensor, attrs: &str) -> Result<Tensor> {
+    let od = operand.shape();
+    let id = start_indices.shape();
+    let cfg = gather_cfg(attrs, od, id)?;
+    let idx_vals = to_i64_vec(start_indices)?;
+    let es = operand.dtype().size();
+    let out_elems = elem_count(&cfg.out_dims);
+    let mut data = vec![0u8; out_elems * es];
+    let src = operand.bytes();
+    let mut o = 0usize;
+    gather_walk(&cfg, od, id, IdxRef::I64(&idx_vals), |s| {
+        data[o * es..(o + 1) * es].copy_from_slice(&src[s * es..(s + 1) * es]);
+        o += 1;
+    });
+    Tensor::new(operand.dtype(), cfg.out_dims.clone(), data)
+}
+
+/// Planned-slot gather: typed source and output slices, config built at
+/// plan time, zero per-call allocation beyond O(rank) odometers.
+pub(crate) fn gather_into<T: Copy>(
+    cfg: &GatherCfg,
+    od: &[usize],
+    id: &[usize],
+    idx: IdxRef<'_>,
+    src: &[T],
+    out: &mut [T],
+) {
+    let mut o = 0usize;
+    gather_walk(cfg, od, id, idx, |s| {
+        out[o] = src[s];
+        o += 1;
+    });
+}
+
+// ---------------------------------------------------------------------
+// Planned-slot kernels: typed slices in, caller-provided buffers out.
+//
+// These are the arena executor's kernels (`runtime::interp::arena`):
+// every function writes its full result into `out` and allocates at most
+// O(rank) odometer scratch. The classic Tensor kernels above stay the
+// bit-for-bit reference — `tests/plan_props.rs` checks planned execution
+// against them on randomized graphs.
+// ---------------------------------------------------------------------
+
+pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32) {
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = f(x);
+    }
+}
+
+pub(crate) fn unary_inplace(buf: &mut [f32], f: fn(f32) -> f32) {
+    for x in buf.iter_mut() {
+        *x = f(*x);
+    }
+}
+
+/// Same-shape binary op with a scalar allowed on either side (the exact
+/// semantics of [`binary`]'s `zip_map`).
+pub(crate) fn binary_into<T: Copy>(a: &[T], b: &[T], out: &mut [T], f: fn(T, T) -> T) {
+    if a.len() == b.len() {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = f(x, y);
+        }
+    } else if a.len() == 1 {
+        let x = a[0];
+        for (o, &y) in out.iter_mut().zip(b) {
+            *o = f(x, y);
+        }
+    } else {
+        let y = b[0];
+        for (o, &x) in out.iter_mut().zip(a) {
+            *o = f(x, y);
+        }
+    }
+}
+
+/// `acc = f(acc, b)` in place; `b` may be a scalar. `acc` must be the
+/// full-size operand (the planner only aliases the non-scalar side).
+pub(crate) fn binary_inplace_lhs<T: Copy>(acc: &mut [T], b: &[T], f: fn(T, T) -> T) {
+    if b.len() == 1 {
+        let y = b[0];
+        for x in acc.iter_mut() {
+            *x = f(*x, y);
+        }
+    } else {
+        for (x, &y) in acc.iter_mut().zip(b) {
+            *x = f(*x, y);
+        }
+    }
+}
+
+/// `acc = f(a, acc)` in place; `a` may be a scalar.
+pub(crate) fn binary_inplace_rhs<T: Copy>(a: &[T], acc: &mut [T], f: fn(T, T) -> T) {
+    if a.len() == 1 {
+        let x = a[0];
+        for y in acc.iter_mut() {
+            *y = f(x, *y);
+        }
+    } else {
+        for (y, &x) in acc.iter_mut().zip(a) {
+            *y = f(x, *y);
+        }
+    }
+}
+
+pub(crate) fn compare_into<T: Copy + PartialOrd>(
+    a: &[T],
+    b: &[T],
+    dir: CmpDir,
+    out: &mut [u8],
+) {
+    if a.len() == b.len() {
+        for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+            *o = u8::from(cmp_eval(dir, x, y));
+        }
+    } else if a.len() == 1 {
+        let x = a[0];
+        for (o, &y) in out.iter_mut().zip(b) {
+            *o = u8::from(cmp_eval(dir, x, y));
+        }
+    } else {
+        let y = b[0];
+        for (o, &x) in out.iter_mut().zip(a) {
+            *o = u8::from(cmp_eval(dir, x, y));
+        }
+    }
+}
+
+/// `select` with a full-size or scalar predicate (matches [`select`]).
+pub(crate) fn select_into<T: Copy>(pred: &[u8], t: &[T], f: &[T], out: &mut [T]) {
+    let n = pred.len();
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = if pred[i % n] != 0 { t[i] } else { f[i] };
+    }
+}
+
+/// Typed [`broadcast`] (BroadcastInDim semantics; same validation must
+/// already have happened at plan time).
+pub(crate) fn broadcast_into<T: Copy>(
+    src: &[T],
+    in_dims: &[usize],
+    out_dims: &[usize],
+    dims_map: &[usize],
+    out: &mut [T],
+) {
+    if out.is_empty() || src.is_empty() {
+        return;
+    }
+    let in_strides = strides(in_dims);
+    let mut idx = vec![0usize; out_dims.len()];
+    let mut o = 0usize;
+    loop {
+        let mut s = 0usize;
+        for (i, &od) in dims_map.iter().enumerate() {
+            let coord = if in_dims[i] == 1 { 0 } else { idx[od] };
+            s += coord * in_strides[i];
+        }
+        out[o] = src[s];
+        o += 1;
+        if !advance(&mut idx, out_dims) {
+            break;
+        }
+    }
+}
+
+/// Typed [`transpose`]: output dim `i` takes operand dim `perm[i]`.
+pub(crate) fn transpose_into<T: Copy>(
+    src: &[T],
+    in_dims: &[usize],
+    perm: &[usize],
+    out: &mut [T],
+) {
+    if src.is_empty() {
+        return;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+    let in_strides = strides(in_dims);
+    let mut idx = vec![0usize; out_dims.len()];
+    let mut o = 0usize;
+    loop {
+        let mut s = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            s += idx[i] * in_strides[p];
+        }
+        out[o] = src[s];
+        o += 1;
+        if !advance(&mut idx, &out_dims) {
+            break;
+        }
+    }
+}
+
+/// Typed strided [`slice`] (spec from [`slice_spec`]).
+pub(crate) fn slice_into<T: Copy>(
+    src: &[T],
+    in_dims: &[usize],
+    spec: &SliceSpec,
+    out: &mut [T],
+) {
+    if out.is_empty() {
+        return;
+    }
+    let in_strides = strides(in_dims);
+    let mut idx = vec![0usize; spec.out_dims.len()];
+    let mut o = 0usize;
+    loop {
+        let mut s = 0usize;
+        for d in 0..spec.out_dims.len() {
+            s += (spec.starts[d] + idx[d] * spec.steps[d]) * in_strides[d];
+        }
+        out[o] = src[s];
+        o += 1;
+        if !advance(&mut idx, &spec.out_dims) {
+            break;
+        }
+    }
+}
+
+/// Typed [`concatenate`]: `parts[i]` contributes `blocks[i]` contiguous
+/// elements per outer row (`blocks[i]` = product of its dims from the
+/// concat dim on); `outer` rows total.
+pub(crate) fn concat_into<T: Copy>(
+    parts: &[&[T]],
+    blocks: &[usize],
+    outer: usize,
+    out: &mut [T],
+) {
+    let mut o = 0usize;
+    for row in 0..outer {
+        for (p, &block) in parts.iter().zip(blocks) {
+            out[o..o + block].copy_from_slice(&p[row * block..(row + 1) * block]);
+            o += block;
+        }
+    }
+}
+
+/// Typed [`reduce`] over `dims` with a scalar `init` (the init and the
+/// accumulation order match the classic kernel exactly).
+pub(crate) fn reduce_into<T: Copy>(
+    src: &[T],
+    in_dims: &[usize],
+    dims: &[usize],
+    init: T,
+    f: fn(T, T) -> T,
+    out: &mut [T],
+) {
+    let keep: Vec<usize> = (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+    let out_dims: Vec<usize> = keep.iter().map(|&d| in_dims[d]).collect();
+    let out_strides = strides(&out_dims);
+    out.fill(init);
+    if src.is_empty() || out.is_empty() {
+        return;
+    }
+    let mut idx = vec![0usize; in_dims.len()];
+    let mut flat = 0usize;
+    loop {
+        let mut o = 0usize;
+        for (j, &d) in keep.iter().enumerate() {
+            o += idx[d] * out_strides[j];
+        }
+        out[o] = f(out[o], src[flat]);
+        flat += 1;
+        if !advance(&mut idx, in_dims) {
+            break;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1040,6 +1494,106 @@ mod tests {
         assert_eq!(t.as_u8().unwrap(), &[1]);
         let shape = crate::hlo::parser::parse_shape("f32[2]").unwrap();
         assert!(constant(&shape, "(1)").is_err()); // element count mismatch
+    }
+
+    #[test]
+    fn into_kernels_match_classic() {
+        // unary/binary in-place and into-variants against the Tensor path
+        let a = Tensor::from_f32(vec![4], &[1.0, -2.0, 3.0, -4.0]).unwrap();
+        let b = Tensor::from_f32(vec![4], &[0.5, 2.0, -1.0, 4.0]).unwrap();
+        let want = binary(&a, &b, "multiply").unwrap().as_f32().unwrap();
+        let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        let mut out = vec![0.0f32; 4];
+        binary_into(&av, &bv, &mut out, binary_f32_fn("multiply").unwrap());
+        assert_eq!(out, want);
+        let mut acc = av.clone();
+        binary_inplace_lhs(&mut acc, &bv, binary_f32_fn("multiply").unwrap());
+        assert_eq!(acc, want);
+        let mut acc = bv.clone();
+        binary_inplace_rhs(&av, &mut acc, binary_f32_fn("multiply").unwrap());
+        assert_eq!(acc, want);
+        // scalar expansion on either side
+        let s = [10.0f32];
+        let mut out = vec![0.0f32; 4];
+        binary_into(&s, &bv, &mut out, binary_f32_fn("subtract").unwrap());
+        assert_eq!(out, vec![9.5, 8.0, 11.0, 6.0]);
+        let mut acc = bv.clone();
+        binary_inplace_rhs(&s, &mut acc, binary_f32_fn("subtract").unwrap());
+        assert_eq!(acc, vec![9.5, 8.0, 11.0, 6.0]);
+        let mut u = av.clone();
+        unary_inplace(&mut u, unary_fn("negate").unwrap());
+        assert_eq!(u, vec![-1.0, 2.0, -3.0, 4.0]);
+    }
+
+    #[test]
+    fn movement_into_kernels_match_classic() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let tv = t.as_f32().unwrap();
+        // transpose
+        let want = transpose(&t, &[1, 0]).unwrap().as_f32().unwrap();
+        let mut out = vec![0.0f32; 6];
+        transpose_into(&tv, &[2, 3], &[1, 0], &mut out);
+        assert_eq!(out, want);
+        // broadcast with dim map
+        let row = Tensor::from_f32(vec![3], &[1.0, 2.0, 3.0]).unwrap();
+        let want = broadcast(&row, &[2, 3], &[1]).unwrap().as_f32().unwrap();
+        let mut out = vec![0.0f32; 6];
+        broadcast_into(&row.as_f32().unwrap(), &[3], &[2, 3], &[1], &mut out);
+        assert_eq!(out, want);
+        // slice
+        let spec = slice_spec("slice={[0:2], [1:3]}", &[2, 3]).unwrap();
+        let want = slice(&t, "slice={[0:2], [1:3]}").unwrap().as_f32().unwrap();
+        let mut out = vec![0.0f32; 4];
+        slice_into(&tv, &[2, 3], &spec, &mut out);
+        assert_eq!(out, want);
+        // concatenate along dim 1: blocks are trailing products
+        let a = Tensor::from_f32(vec![2, 1], &[1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2, 2], &[3.0, 4.0, 5.0, 6.0]).unwrap();
+        let want = concatenate(&[&a, &b], 1).unwrap().as_f32().unwrap();
+        let mut out = vec![0.0f32; 6];
+        concat_into(
+            &[&a.as_f32().unwrap()[..], &b.as_f32().unwrap()[..]],
+            &[1, 2],
+            2,
+            &mut out,
+        );
+        assert_eq!(out, want);
+        // reduce
+        let init = Tensor::from_f32(vec![], &[0.0]).unwrap();
+        let want = reduce(&t, &init, &[1], ReduceOp::Add).unwrap().as_f32().unwrap();
+        let mut out = vec![0.0f32; 2];
+        reduce_into(&tv, &[2, 3], &[1], 0.0f32, |x, y| x + y, &mut out);
+        assert_eq!(out, want);
+        // select with scalar pred + compare_into
+        let p = [1u8];
+        let f = [9.0f32, 9.0, 9.0, 9.0, 9.0, 9.0];
+        let mut out = vec![0.0f32; 6];
+        select_into(&p, &tv, &f, &mut out);
+        assert_eq!(out, tv);
+        let mut cmp = vec![0u8; 6];
+        compare_into(&tv, &f, cmp_dir("LT").unwrap(), &mut cmp);
+        assert_eq!(cmp, vec![1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn gather_into_matches_classic() {
+        let cb = Tensor::from_f32(vec![4], &[10.0, 20.0, 30.0, 40.0]).unwrap();
+        let idx = Tensor::from_u8(vec![2, 3], &[0, 3, 1, 2, 2, 0]).unwrap();
+        let attrs = "offset_dims={}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1}";
+        // classic path needs s32 indices like the HLO pattern emits
+        let idx_i32 = convert(&idx, Dtype::I32).unwrap();
+        let want = gather(&cb, &idx_i32, attrs).unwrap().as_f32().unwrap();
+        let cfg = gather_cfg(attrs, &[4], &[2, 3]).unwrap();
+        let mut out = vec![0.0f32; 6];
+        gather_into(
+            &cfg,
+            &[4],
+            &[2, 3],
+            IdxRef::U8(idx.as_u8().unwrap()),
+            &cb.as_f32().unwrap(),
+            &mut out,
+        );
+        assert_eq!(out, want);
     }
 
     #[test]

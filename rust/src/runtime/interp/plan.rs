@@ -1,0 +1,1010 @@
+//! Bind-time memory planning: per-instruction liveness over the entry
+//! computation, greedy best-fit assignment of instruction outputs to a
+//! small set of reusable typed buffer slots, in-place marking for
+//! elementwise ops whose operand dies at the instruction, and
+//! reshape/copy turned into zero-copy aliases.
+//!
+//! The product is a [`MemoryPlan`]: everything the arena executor
+//! ([`super::arena`]) needs to run the module with **zero tensor-sized
+//! heap allocation** in steady state — resolved operand indices, one
+//! parsed kernel config per instruction (no attribute-text parsing on
+//! the hot path), preset values for constants/iota, and the slot table
+//! whose summed capacity is the arena footprint (`peak_bytes`, vs
+//! `naive_bytes` for one private buffer per instruction).
+//!
+//! Planning is conservative: any construct outside the planned subset
+//! (non-root tuples, `get-tuple-element`, exotic dtypes, malformed
+//! shapes) fails the build and the executor falls back to the classic
+//! per-instruction-buffer evaluator in [`super::eval`], which remains
+//! the bit-for-bit reference.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::arena::TypedVal;
+use super::clustered::ExecPlan;
+use super::eval::{attr_int, attr_list, attr_str, host_dtype, reducer_op, WeightCache};
+use super::gemm::{self, DotSpec};
+use super::ops;
+use crate::hlo::parser::{HloInstruction, HloModule};
+use crate::tensor::Dtype;
+
+/// One reusable arena slot: a typed buffer sized for the largest value
+/// ever assigned to it.
+#[derive(Debug, Clone)]
+pub(crate) struct SlotSpec {
+    pub dtype: Dtype,
+    pub elems: usize,
+}
+
+/// What the executor does at one instruction.
+#[derive(Debug)]
+pub(crate) enum Action {
+    /// Nothing: dead code, plan/cache-skipped nodes, or the root tuple
+    /// (materialized from its operands after the walk).
+    Skip,
+    /// Value is the staged positional input.
+    Param(usize),
+    /// Value comes from the bound `WeightCache` under this name.
+    Cached,
+    /// Value was computed at plan time (constant / iota).
+    Preset,
+    /// reshape/copy: the value is the operand's storage with this
+    /// instruction's shape — no bytes move.
+    Alias,
+    /// Run a kernel into `slot`; `alias_of = Some(j)` means operand `j`
+    /// dies here and shares the slot, so the kernel runs in place.
+    Compute { slot: usize, alias_of: Option<usize>, cfg: OpCfg },
+}
+
+/// Parsed per-instruction kernel configuration (attribute text is never
+/// touched at run time).
+#[derive(Debug)]
+pub(crate) enum OpCfg {
+    Unary(fn(f32) -> f32),
+    BinF32(fn(f32, f32) -> f32),
+    BinI32(fn(i32, i32) -> i32),
+    BinU8(fn(u8, u8) -> u8),
+    Compare(ops::CmpDir),
+    Select,
+    Convert,
+    Broadcast { dims_map: Vec<usize> },
+    Transpose { perm: Vec<usize> },
+    Slice(ops::SliceSpec),
+    Concat { blocks: Vec<usize>, outer: usize },
+    Dot(gemm::Canon),
+    /// LUT clustered dot; `idx`/`table` are instruction indices, read
+    /// only when the weight is not prepared in the cache.
+    ClusteredDot { m: usize, k: usize, n: usize, idx: usize, table: usize },
+    Conv(ops::ConvCfg),
+    Reduce { dims: Vec<usize>, op: ops::ReduceOp },
+    Gather(ops::GatherCfg),
+}
+
+/// The bind-time product: see the module docs.
+#[derive(Debug)]
+pub struct MemoryPlan {
+    pub(crate) actions: Vec<Action>,
+    pub(crate) operands: Vec<Vec<usize>>,
+    pub(crate) slots: Vec<SlotSpec>,
+    pub(crate) presets: HashMap<usize, TypedVal>,
+    pub(crate) root: usize,
+    /// Positional parameter contracts (declared dims, host dtype).
+    pub(crate) params: Vec<(Vec<usize>, Dtype)>,
+    /// Whether any live instruction reads the parameter (unread params
+    /// are validated but never staged/decoded).
+    pub(crate) param_read: Vec<bool>,
+    peak_bytes: usize,
+    naive_bytes: usize,
+}
+
+impl MemoryPlan {
+    /// Arena bytes: sum of slot capacities after liveness reuse.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Bytes with one private buffer per instruction (what the classic
+    /// evaluator keeps resident).
+    pub fn naive_bytes(&self) -> usize {
+        self.naive_bytes
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Where an instruction's value ultimately lives (aliases resolved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Base {
+    /// Storage of compute instruction `i`.
+    Val(usize),
+    /// Staged parameter `p`.
+    Par(usize),
+    /// Cache/preset/skip — always-live, never slot-backed.
+    Other,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Skip,
+    Param(usize),
+    Cached,
+    Preset,
+    Alias,
+    Compute,
+}
+
+fn elems_of(inst: &HloInstruction) -> usize {
+    inst.shape.dims.iter().product()
+}
+
+/// Operand edges that keep a value *alive in the graph*: computes read
+/// all their (resolved) operands, an alias keeps its origin alive, and
+/// the root tuple keeps its elements alive. Used for dead-code
+/// elimination and the skipped-read sanity check.
+fn dce_reads<'a>(
+    insts: &[HloInstruction],
+    operands: &'a [Vec<usize>],
+    kind: &[Kind],
+    root: usize,
+    i: usize,
+) -> &'a [usize] {
+    if i == root && insts[i].opcode == "tuple" {
+        return &operands[i];
+    }
+    match kind[i] {
+        Kind::Compute => &operands[i],
+        Kind::Alias => &operands[i][..1],
+        _ => &[],
+    }
+}
+
+/// Operand edges that read *data at run time*: computes and the root
+/// tuple's materialization. An alias moves no bytes — its consumers
+/// count as readers of the origin storage instead. Used for liveness.
+fn live_reads<'a>(
+    insts: &[HloInstruction],
+    operands: &'a [Vec<usize>],
+    kind: &[Kind],
+    root: usize,
+    i: usize,
+) -> &'a [usize] {
+    if i == root && insts[i].opcode == "tuple" {
+        return &operands[i];
+    }
+    match kind[i] {
+        Kind::Compute => &operands[i],
+        _ => &[],
+    }
+}
+
+/// Build the memory plan for `module` under the clustered execution plan
+/// and (for residents) the bound weight cache.
+pub(crate) fn build(
+    module: &HloModule,
+    exec: &ExecPlan,
+    cache: Option<&WeightCache>,
+) -> Result<MemoryPlan> {
+    let entry = module.entry()?;
+    let insts = entry.instructions.as_slice();
+    let n = insts.len();
+    if n == 0 {
+        bail!("entry computation has no instructions");
+    }
+
+    // Positional parameter contracts.
+    let param_list = module.parameters()?;
+    let mut params = Vec::with_capacity(param_list.len());
+    let mut pos_by_name: HashMap<&str, usize> = HashMap::new();
+    for (p, (name, shape)) in param_list.iter().enumerate() {
+        params.push((shape.dims.clone(), host_dtype(&shape.dtype)?));
+        pos_by_name.insert(name.as_str(), p);
+    }
+
+    let by_name: HashMap<&str, usize> = insts
+        .iter()
+        .enumerate()
+        .map(|(i, inst)| (inst.name.as_str(), i))
+        .collect();
+    let root = insts
+        .iter()
+        .position(|i| i.is_root)
+        .unwrap_or(n - 1);
+
+    // -- Classification + operand resolution ---------------------------
+    let mut kind = vec![Kind::Skip; n];
+    let mut operands: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut presets: HashMap<usize, TypedVal> = HashMap::new();
+    for (i, inst) in insts.iter().enumerate() {
+        let name = inst.name.as_str();
+        let resolve = |ops_list: &[String]| -> Result<Vec<usize>> {
+            ops_list
+                .iter()
+                .map(|o| {
+                    let oi = *by_name
+                        .get(o.as_str())
+                        .ok_or_else(|| anyhow!("undefined operand %{o}"))?;
+                    if oi >= i {
+                        bail!("operand %{o} does not precede %{name}");
+                    }
+                    Ok(oi)
+                })
+                .collect()
+        };
+        // The cache check precedes the parameter check on purpose: a
+        // fixed parameter served by the pooled WeightCache reads from
+        // the one shared typed copy instead of per-arena staging.
+        if cache.is_some_and(|c| c.values.contains_key(name)) {
+            kind[i] = Kind::Cached;
+            continue;
+        }
+        if inst.opcode == "parameter" {
+            let p = *pos_by_name
+                .get(name)
+                .ok_or_else(|| anyhow!("parameter %{name} not in entry signature"))?;
+            kind[i] = Kind::Param(p);
+            continue;
+        }
+        if exec.skip.contains(name) || cache.is_some_and(|c| c.skip.contains(name)) {
+            continue; // Kind::Skip
+        }
+        match inst.opcode.as_str() {
+            "constant" => {
+                let t = ops::constant(&inst.shape, inst.attrs.as_str())?;
+                presets.insert(i, TypedVal::from_tensor(&t)?);
+                kind[i] = Kind::Preset;
+            }
+            "iota" => {
+                let dim = attr_int(inst.attrs.as_str(), "iota_dimension").unwrap_or(0) as usize;
+                let t = ops::iota(&inst.shape, dim)?;
+                presets.insert(i, TypedVal::from_tensor(&t)?);
+                kind[i] = Kind::Preset;
+            }
+            "copy" | "reshape" => {
+                operands[i] = resolve(&inst.operands)?;
+                let src = &insts[operands[i][0]];
+                if elems_of(src) != elems_of(inst) || src.shape.dtype != inst.shape.dtype {
+                    bail!(
+                        "%{name}: reshape {:?} -> {:?} is not an alias",
+                        src.shape.dims,
+                        inst.shape.dims
+                    );
+                }
+                kind[i] = Kind::Alias;
+            }
+            "tuple" => {
+                if i != root {
+                    bail!("%{name}: non-root tuple is not plannable");
+                }
+                operands[i] = resolve(&inst.operands)?;
+                // stays Kind::Skip; materialized from operands
+            }
+            "get-tuple-element" => bail!("%{name}: get-tuple-element is not plannable"),
+            _ => {
+                operands[i] = resolve(&inst.operands)?;
+                if let Some(cd) = exec.clustered.get(name) {
+                    // The LUT kernel reads the lhs, plus the raw index
+                    // tensor and codebook row only when no prepared
+                    // (bit-packed) weight is bound.
+                    let lhs = operands[i][0];
+                    let prepared = cache.is_some_and(|c| c.prepared.contains_key(name));
+                    let mut list = vec![lhs];
+                    if !prepared {
+                        let idx = *by_name
+                            .get(cd.idx.as_str())
+                            .ok_or_else(|| anyhow!("clustered idx %{} missing", cd.idx))?;
+                        let table = *by_name
+                            .get(cd.table.as_str())
+                            .ok_or_else(|| anyhow!("clustered table %{} missing", cd.table))?;
+                        list.push(idx);
+                        list.push(table);
+                    }
+                    operands[i] = list;
+                }
+                kind[i] = Kind::Compute;
+            }
+        }
+    }
+
+    // -- Dead-code elimination ------------------------------------------
+    let mut use_count = vec![0usize; n];
+    for i in 0..n {
+        for &op in dce_reads(insts, &operands, &kind, root, i) {
+            use_count[op] += 1;
+        }
+    }
+    for i in (0..n).rev() {
+        if i == root || use_count[i] > 0 {
+            continue;
+        }
+        if matches!(kind[i], Kind::Compute | Kind::Alias | Kind::Preset | Kind::Cached) {
+            for &op in dce_reads(insts, &operands, &kind, root, i) {
+                use_count[op] -= 1;
+            }
+            kind[i] = Kind::Skip;
+            presets.remove(&i);
+        }
+    }
+
+    // -- Storage bases (aliases resolved) -------------------------------
+    let mut base = vec![Base::Other; n];
+    for i in 0..n {
+        base[i] = match kind[i] {
+            Kind::Param(p) => Base::Par(p),
+            Kind::Alias => base[operands[i][0]],
+            Kind::Compute => Base::Val(i),
+            _ => Base::Other,
+        };
+    }
+
+    // A live instruction must never depend on a skipped node.
+    for i in 0..n {
+        for &op in dce_reads(insts, &operands, &kind, root, i) {
+            if kind[op] == Kind::Skip {
+                bail!(
+                    "%{} reads skipped node %{}",
+                    insts[i].name,
+                    insts[op].name
+                );
+            }
+        }
+    }
+
+    // -- Parameters actually read ---------------------------------------
+    let mut param_read = vec![false; params.len()];
+    for i in 0..n {
+        for &op in live_reads(insts, &operands, &kind, root, i) {
+            if let Base::Par(p) = base[op] {
+                param_read[p] = true;
+            }
+        }
+    }
+    if let Base::Par(p) = base[root] {
+        param_read[p] = true;
+    }
+
+    // -- Liveness: last reader of each compute value --------------------
+    let mut last_use = vec![0usize; n];
+    for i in 0..n {
+        for &op in live_reads(insts, &operands, &kind, root, i) {
+            if let Base::Val(j) = base[op] {
+                last_use[j] = last_use[j].max(i);
+            }
+        }
+    }
+    // The root's storage (and a root tuple's element storages) live to
+    // the end of the call.
+    if insts[root].opcode == "tuple" {
+        for &op in &operands[root] {
+            if let Base::Val(j) = base[op] {
+                last_use[j] = usize::MAX;
+            }
+        }
+    } else if let Base::Val(j) = base[root] {
+        last_use[j] = usize::MAX;
+    }
+
+    // -- Kernel configs (parses + shape-checks every compute) -----------
+    let mut cfgs: Vec<Option<OpCfg>> = Vec::with_capacity(n);
+    for i in 0..n {
+        if kind[i] != Kind::Compute {
+            cfgs.push(None);
+            continue;
+        }
+        cfgs.push(Some(build_cfg(module, insts, &operands, exec, i)?));
+    }
+
+    // -- Slot assignment: greedy best-fit with in-place aliasing --------
+    let mut slots: Vec<SlotSpec> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut slot_of = vec![usize::MAX; n];
+    let mut alias_ord: Vec<Option<usize>> = vec![None; n];
+    for i in 0..n {
+        if kind[i] != Kind::Compute {
+            continue;
+        }
+        let dtype = host_dtype(&insts[i].shape.dtype)?;
+        let elems = elems_of(&insts[i]);
+        // In-place: an elementwise operand of identical size whose
+        // storage dies at this very instruction can donate its slot.
+        let inplace_ordinals: &[usize] = match cfgs[i].as_ref().unwrap() {
+            OpCfg::Unary(_) => &[0],
+            OpCfg::BinF32(_) | OpCfg::BinI32(_) | OpCfg::BinU8(_) => &[0, 1],
+            _ => &[],
+        };
+        let mut chosen: Option<(usize, usize)> = None;
+        for &ord in inplace_ordinals {
+            let oj = operands[i][ord];
+            let Base::Val(org) = base[oj] else { continue };
+            if last_use[org] != i || slot_of[org] == usize::MAX {
+                continue;
+            }
+            let s = slot_of[org];
+            if slots[s].dtype != dtype || elems_of(&insts[oj]) != elems {
+                continue;
+            }
+            // The other side of a binary op must not live in the same
+            // storage (mutating while reading it would corrupt).
+            if inplace_ordinals.len() == 2 {
+                let other = operands[i][1 - ord];
+                if base[other] == Base::Val(org) {
+                    continue;
+                }
+            }
+            chosen = Some((s, ord));
+            break;
+        }
+        let out_slot = match chosen {
+            Some((s, ord)) => {
+                alias_ord[i] = Some(ord);
+                s
+            }
+            None => {
+                let mut best: Option<usize> = None;
+                for (fi, &s) in free.iter().enumerate() {
+                    if slots[s].dtype != dtype {
+                        continue;
+                    }
+                    best = Some(match best {
+                        None => fi,
+                        Some(b) => {
+                            let (cap, bc) = (slots[s].elems, slots[free[b]].elems);
+                            let better = if cap >= elems && bc >= elems {
+                                cap < bc
+                            } else if cap >= elems || bc >= elems {
+                                cap >= elems
+                            } else {
+                                cap > bc
+                            };
+                            if better {
+                                fi
+                            } else {
+                                b
+                            }
+                        }
+                    });
+                }
+                match best {
+                    Some(fi) => {
+                        let s = free.swap_remove(fi);
+                        slots[s].elems = slots[s].elems.max(elems);
+                        s
+                    }
+                    None => {
+                        slots.push(SlotSpec { dtype, elems });
+                        slots.len() - 1
+                    }
+                }
+            }
+        };
+        slot_of[i] = out_slot;
+        // Free the slots of operands whose storage dies here (except the
+        // one consumed in place, which now holds the output).
+        let mut freed: Vec<usize> = Vec::new();
+        for &op in live_reads(insts, &operands, &kind, root, i) {
+            if let Base::Val(org) = base[op] {
+                if last_use[org] == i {
+                    let s = slot_of[org];
+                    if s != usize::MAX && s != out_slot && !freed.contains(&s) {
+                        freed.push(s);
+                        free.push(s);
+                    }
+                }
+            }
+        }
+    }
+
+    // -- Assemble + verify ----------------------------------------------
+    let mut actions = Vec::with_capacity(n);
+    for (i, k) in kind.iter().enumerate() {
+        actions.push(match *k {
+            Kind::Skip => Action::Skip,
+            Kind::Param(p) => Action::Param(p),
+            Kind::Cached => Action::Cached,
+            Kind::Preset => Action::Preset,
+            Kind::Alias => Action::Alias,
+            Kind::Compute => Action::Compute {
+                slot: slot_of[i],
+                alias_of: alias_ord[i],
+                cfg: cfgs[i].take().expect("compute cfg built above"),
+            },
+        });
+    }
+
+    verify(insts, root, &kind, &operands, &base, &slot_of)?;
+
+    // What the classic evaluator holds resident: one private buffer per
+    // computed instruction (aliases clone, presets re-materialize).
+    let mut naive_bytes = 0usize;
+    for i in 0..n {
+        if matches!(kind[i], Kind::Compute | Kind::Alias | Kind::Preset) {
+            naive_bytes += elems_of(&insts[i]) * host_dtype(&insts[i].shape.dtype)?.size();
+        }
+    }
+    let peak_bytes: usize = slots.iter().map(|s| s.elems * s.dtype.size()).sum();
+    super::stats::record_plan(peak_bytes, naive_bytes, slots.len());
+
+    Ok(MemoryPlan {
+        actions,
+        operands,
+        slots,
+        presets,
+        root,
+        params,
+        param_read,
+        peak_bytes,
+        naive_bytes,
+    })
+}
+
+/// Replay the assignment and prove liveness never hands a slot to a new
+/// value while a later instruction still reads the old one.
+fn verify(
+    insts: &[HloInstruction],
+    root: usize,
+    kind: &[Kind],
+    operands: &[Vec<usize>],
+    base: &[Base],
+    slot_of: &[usize],
+) -> Result<()> {
+    let n_slots = slot_of
+        .iter()
+        .filter(|&&s| s != usize::MAX)
+        .max()
+        .map(|&s| s + 1)
+        .unwrap_or(0);
+    let mut owner: Vec<Option<usize>> = vec![None; n_slots];
+    let check = |owner: &[Option<usize>], op: usize, at: &str| -> Result<()> {
+        if let Base::Val(org) = base[op] {
+            let s = slot_of[org];
+            if owner[s] != Some(org) {
+                bail!(
+                    "planner bug: %{} read at {at} but slot {s} holds {:?}",
+                    insts[op].name,
+                    owner[s]
+                );
+            }
+        }
+        Ok(())
+    };
+    for i in 0..insts.len() {
+        for &op in live_reads(insts, operands, kind, root, i) {
+            check(&owner, op, insts[i].name.as_str())?;
+        }
+        if kind[i] == Kind::Compute {
+            owner[slot_of[i]] = Some(i);
+        }
+    }
+    if insts[root].opcode != "tuple" {
+        check(&owner, root, "root")?;
+    }
+    Ok(())
+}
+
+/// Parse attributes and validate declared shapes for one compute
+/// instruction, producing its run-time kernel config.
+fn build_cfg(
+    module: &HloModule,
+    insts: &[HloInstruction],
+    operands: &[Vec<usize>],
+    exec: &ExecPlan,
+    i: usize,
+) -> Result<OpCfg> {
+    let inst = &insts[i];
+    let attrs = inst.attrs.as_str();
+    let out_dims = inst.shape.dims.as_slice();
+    let out_elems = elems_of(inst);
+    let out_dtype = host_dtype(&inst.shape.dtype)?;
+    let oi_of = |j: usize| -> Result<usize> {
+        operands[i]
+            .get(j)
+            .copied()
+            .ok_or_else(|| anyhow!("%{}: missing operand {j}", inst.name))
+    };
+    let op_elems = |j: usize| -> Result<usize> { Ok(elems_of(&insts[oi_of(j)?])) };
+    let op_dtype = |j: usize| -> Result<Dtype> { host_dtype(&insts[oi_of(j)?].shape.dtype) };
+    let same_or_scalar = |j: usize| -> Result<()> {
+        let e = op_elems(j)?;
+        if e != out_elems && e != 1 {
+            bail!(
+                "%{}: operand {j} has {e} elements, output has {out_elems}",
+                inst.name
+            );
+        }
+        Ok(())
+    };
+
+    // Clustered dots are keyed by name, not opcode.
+    if let Some(cd) = exec.clustered.get(inst.name.as_str()) {
+        let lhs = &insts[oi_of(0)?];
+        if op_dtype(0)? != Dtype::F32 || out_dtype != Dtype::F32 {
+            bail!("%{}: clustered dot must be f32", inst.name);
+        }
+        let lhs_elems = elems_of(lhs);
+        if cd.k == 0 || lhs_elems % cd.k != 0 {
+            bail!(
+                "%{}: lhs {:?} does not contract over k={}",
+                inst.name,
+                lhs.shape.dims,
+                cd.k
+            );
+        }
+        let m = lhs_elems / cd.k;
+        if out_elems != m * cd.n {
+            bail!("%{}: output elements != m x n", inst.name);
+        }
+        // idx/table operand indices exist iff the weight is unprepared;
+        // a prepared weight needs only the lhs.
+        let (idx, table) = if operands[i].len() == 3 {
+            let idx_inst = &insts[oi_of(1)?];
+            if host_dtype(&idx_inst.shape.dtype)? != Dtype::U8
+                || elems_of(idx_inst) != cd.k * cd.n
+            {
+                bail!("%{}: clustered index tensor mismatch", inst.name);
+            }
+            if op_dtype(2)? != Dtype::F32 {
+                bail!("%{}: clustered table must be f32", inst.name);
+            }
+            (operands[i][1], operands[i][2])
+        } else {
+            (usize::MAX, usize::MAX)
+        };
+        return Ok(OpCfg::ClusteredDot { m, k: cd.k, n: cd.n, idx, table });
+    }
+
+    if let Some(f) = ops::unary_fn(&inst.opcode) {
+        if out_dtype != Dtype::F32 || op_dtype(0)? != Dtype::F32 {
+            bail!("%{}: unary op must be f32", inst.name);
+        }
+        if op_elems(0)? != out_elems {
+            bail!("%{}: unary operand size mismatch", inst.name);
+        }
+        return Ok(OpCfg::Unary(f));
+    }
+
+    match inst.opcode.as_str() {
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" | "power"
+        | "and" | "or" | "xor" => {
+            if op_dtype(0)? != op_dtype(1)? || op_dtype(0)? != out_dtype {
+                bail!("%{}: binary dtype mismatch", inst.name);
+            }
+            same_or_scalar(0)?;
+            same_or_scalar(1)?;
+            if op_elems(0)? != out_elems && op_elems(1)? != out_elems {
+                bail!("%{}: binary output size mismatch", inst.name);
+            }
+            match out_dtype {
+                Dtype::F32 => ops::binary_f32_fn(&inst.opcode)
+                    .map(OpCfg::BinF32)
+                    .ok_or_else(|| anyhow!("{}: not supported for f32", inst.opcode)),
+                Dtype::I32 => ops::binary_i32_fn(&inst.opcode)
+                    .map(OpCfg::BinI32)
+                    .ok_or_else(|| anyhow!("{}: not supported for s32", inst.opcode)),
+                Dtype::U8 => ops::binary_u8_fn(&inst.opcode)
+                    .map(OpCfg::BinU8)
+                    .ok_or_else(|| anyhow!("{}: not supported for u8", inst.opcode)),
+                Dtype::I64 => bail!("{}: s64 arithmetic not supported", inst.opcode),
+            }
+        }
+        "compare" => {
+            let dir = attr_str(attrs, "direction")
+                .and_then(ops::cmp_dir)
+                .ok_or_else(|| anyhow!("%{}: compare without direction", inst.name))?;
+            if op_dtype(0)? != op_dtype(1)? || out_dtype != Dtype::U8 {
+                bail!("%{}: compare dtype mismatch", inst.name);
+            }
+            // The classic evaluator compares through an f64 widening; on
+            // s64 that differs from native comparison above 2^53, so s64
+            // compares stay on the classic path to keep the bit-for-bit
+            // reference contract.
+            if op_dtype(0)? == Dtype::I64 {
+                bail!("%{}: s64 compare is not planned", inst.name);
+            }
+            same_or_scalar(0)?;
+            same_or_scalar(1)?;
+            if op_elems(0)? != out_elems && op_elems(1)? != out_elems {
+                bail!("%{}: compare output size mismatch", inst.name);
+            }
+            Ok(OpCfg::Compare(dir))
+        }
+        "select" => {
+            if op_dtype(1)? != out_dtype
+                || op_dtype(2)? != out_dtype
+                || op_elems(1)? != out_elems
+                || op_elems(2)? != out_elems
+            {
+                bail!("%{}: select branch mismatch", inst.name);
+            }
+            if op_dtype(0)? != Dtype::U8 {
+                bail!("%{}: select pred must be pred/u8", inst.name);
+            }
+            same_or_scalar(0)?;
+            Ok(OpCfg::Select)
+        }
+        "convert" => {
+            if op_elems(0)? != out_elems {
+                bail!("%{}: convert size mismatch", inst.name);
+            }
+            Ok(OpCfg::Convert)
+        }
+        "broadcast" => {
+            let dims_map = attr_list(attrs, "dimensions").unwrap_or_default();
+            let src = &insts[oi_of(0)?];
+            let in_dims = src.shape.dims.as_slice();
+            if op_dtype(0)? != out_dtype {
+                bail!("%{}: broadcast dtype mismatch", inst.name);
+            }
+            if dims_map.len() != in_dims.len() {
+                bail!("%{}: broadcast dimensions rank mismatch", inst.name);
+            }
+            for (d, &od) in dims_map.iter().enumerate() {
+                if od >= out_dims.len() {
+                    bail!("%{}: broadcast dim {od} out of range", inst.name);
+                }
+                if in_dims[d] != out_dims[od] && in_dims[d] != 1 {
+                    bail!("%{}: broadcast dim {d} incompatible", inst.name);
+                }
+            }
+            Ok(OpCfg::Broadcast { dims_map })
+        }
+        "transpose" => {
+            let perm = attr_list(attrs, "dimensions")
+                .ok_or_else(|| anyhow!("%{}: transpose without dimensions", inst.name))?;
+            let src = &insts[oi_of(0)?];
+            let in_dims = src.shape.dims.as_slice();
+            if op_dtype(0)? != out_dtype {
+                bail!("%{}: transpose dtype mismatch", inst.name);
+            }
+            if perm.len() != in_dims.len() || perm.iter().any(|&p| p >= in_dims.len()) {
+                bail!("%{}: bad permutation", inst.name);
+            }
+            let computed: Vec<usize> = perm.iter().map(|&p| in_dims[p]).collect();
+            if computed != out_dims {
+                bail!("%{}: transpose shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Transpose { perm })
+        }
+        "slice" => {
+            let src = &insts[oi_of(0)?];
+            if op_dtype(0)? != out_dtype {
+                bail!("%{}: slice dtype mismatch", inst.name);
+            }
+            let spec = ops::slice_spec(attrs, &src.shape.dims)?;
+            if spec.out_dims != out_dims {
+                bail!("%{}: slice shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Slice(spec))
+        }
+        "concatenate" => {
+            let dim = attr_list(attrs, "dimensions")
+                .and_then(|d| d.first().copied())
+                .ok_or_else(|| anyhow!("%{}: concatenate without dimensions", inst.name))?;
+            let rank = out_dims.len();
+            if dim >= rank {
+                bail!("%{}: concatenate dim out of range", inst.name);
+            }
+            let mut cat = 0usize;
+            let mut blocks = Vec::with_capacity(operands[i].len());
+            for j in 0..operands[i].len() {
+                let part = &insts[oi_of(j)?];
+                let pd = part.shape.dims.as_slice();
+                if op_dtype(j)? != out_dtype || pd.len() != rank {
+                    bail!("%{}: concatenate dtype/rank mismatch", inst.name);
+                }
+                for d in 0..rank {
+                    if d != dim && pd[d] != out_dims[d] {
+                        bail!("%{}: concatenate shape mismatch", inst.name);
+                    }
+                }
+                cat += pd[dim];
+                blocks.push(pd[dim..].iter().product());
+            }
+            if cat != out_dims[dim] {
+                bail!("%{}: concatenate output dim mismatch", inst.name);
+            }
+            let outer: usize = out_dims[..dim].iter().product();
+            Ok(OpCfg::Concat { blocks, outer })
+        }
+        "dot" => {
+            if op_dtype(0)? != Dtype::F32 || op_dtype(1)? != Dtype::F32 || out_dtype != Dtype::F32
+            {
+                bail!("%{}: dot must be f32", inst.name);
+            }
+            let spec = DotSpec::from_attrs(attrs);
+            let canon = gemm::canonicalize(
+                &insts[oi_of(0)?].shape.dims,
+                &insts[oi_of(1)?].shape.dims,
+                &spec,
+            )?;
+            if canon.out_dims != out_dims {
+                bail!("%{}: dot shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Dot(canon))
+        }
+        "convolution" => {
+            if op_dtype(0)? != Dtype::F32 || op_dtype(1)? != Dtype::F32 || out_dtype != Dtype::F32
+            {
+                bail!("%{}: convolution must be f32", inst.name);
+            }
+            let cfg = ops::conv_cfg(attrs)?;
+            let computed =
+                ops::conv_out_dims(&cfg, &insts[oi_of(0)?].shape.dims, &insts[oi_of(1)?].shape.dims)?;
+            if computed != out_dims {
+                bail!("%{}: convolution shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Conv(cfg))
+        }
+        "reduce" => {
+            if operands[i].len() != 2 {
+                bail!("%{}: only single-array reduce is planned", inst.name);
+            }
+            let dims = attr_list(attrs, "dimensions")
+                .ok_or_else(|| anyhow!("%{}: reduce without dimensions", inst.name))?;
+            let to_apply = attr_str(attrs, "to_apply")
+                .ok_or_else(|| anyhow!("%{}: reduce without to_apply", inst.name))?;
+            let op = reducer_op(module, to_apply)?;
+            let src = &insts[oi_of(0)?];
+            let in_dims = src.shape.dims.as_slice();
+            if dims.iter().any(|&d| d >= in_dims.len()) {
+                bail!("%{}: reduce dimensions out of range", inst.name);
+            }
+            if op_dtype(0)? != out_dtype || op_dtype(1)? != out_dtype {
+                bail!("%{}: reduce dtype mismatch", inst.name);
+            }
+            if op_elems(1)? != 1 {
+                bail!("%{}: reduce init must be a scalar", inst.name);
+            }
+            let computed: Vec<usize> = (0..in_dims.len())
+                .filter(|d| !dims.contains(d))
+                .map(|&d| in_dims[d])
+                .collect();
+            if computed != out_dims {
+                bail!("%{}: reduce shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Reduce { dims, op })
+        }
+        "gather" => {
+            let src = &insts[oi_of(0)?];
+            let idx = &insts[oi_of(1)?];
+            if op_dtype(0)? != out_dtype {
+                bail!("%{}: gather dtype mismatch", inst.name);
+            }
+            if op_dtype(1)? == Dtype::F32 {
+                bail!("%{}: gather indices must be integral", inst.name);
+            }
+            let cfg = ops::gather_cfg(attrs, &src.shape.dims, &idx.shape.dims)?;
+            if cfg.out_dims != out_dims {
+                bail!("%{}: gather shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Gather(cfg))
+        }
+        op => bail!("%{}: opcode {op:?} is not plannable", inst.name),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::clustered;
+
+    fn plan_for(hlo: &str) -> MemoryPlan {
+        let module = HloModule::parse(hlo).unwrap();
+        let exec = clustered::plan(&module);
+        build(&module, &exec, None).unwrap()
+    }
+
+    #[test]
+    fn inplace_chain_reuses_one_slot() {
+        // x -> exp -> negate -> tanh: after the first slot is filled,
+        // every elementwise step consumes its dying operand in place.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[64]) -> f32[64] {\n  \
+            %x = f32[64]{0} parameter(0)\n  \
+            %a = f32[64]{0} exponential(%x)\n  \
+            %b = f32[64]{0} negate(%a)\n  \
+            ROOT %c = f32[64]{0} tanh(%b)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.slot_count(), 1, "in-place chain must reuse one slot");
+        assert_eq!(mem.peak_bytes(), 64 * 4);
+        assert_eq!(mem.naive_bytes(), 3 * 64 * 4);
+        assert!(matches!(
+            mem.actions[2],
+            Action::Compute { alias_of: Some(0), .. }
+        ));
+    }
+
+    #[test]
+    fn reshape_is_zero_copy_alias() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[4,4]) -> f32[16] {\n  \
+            %x = f32[4,4]{1,0} parameter(0)\n  \
+            %n = f32[4,4]{1,0} negate(%x)\n  \
+            %r = f32[16]{0} reshape(%n)\n  \
+            ROOT %o = f32[16]{0} exponential(%r)\n}\n";
+        let mem = plan_for(hlo);
+        assert!(matches!(mem.actions[2], Action::Alias));
+        // negate's slot flows through the alias into the in-place exp.
+        assert_eq!(mem.slot_count(), 1);
+    }
+
+    #[test]
+    fn dead_code_is_skipped_and_params_tracked() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[8], unused: f32[8]) -> f32[8] {\n  \
+            %x = f32[8]{0} parameter(0)\n  \
+            %unused = f32[8]{0} parameter(1)\n  \
+            %dead = f32[8]{0} exponential(%x)\n  \
+            ROOT %o = f32[8]{0} negate(%x)\n}\n";
+        let mem = plan_for(hlo);
+        assert!(matches!(mem.actions[2], Action::Skip));
+        assert_eq!(mem.slot_count(), 1);
+        assert_eq!(mem.param_read, vec![true, false]);
+    }
+
+    #[test]
+    fn long_range_use_keeps_slot_alive() {
+        // %a is read again by the root add: the middle chain must not
+        // reuse its slot (build() replays the assignment and fails on
+        // any liveness violation).
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[16]) -> f32[16] {\n  \
+            %x = f32[16]{0} parameter(0)\n  \
+            %a = f32[16]{0} exponential(%x)\n  \
+            %b = f32[16]{0} negate(%a)\n  \
+            %c = f32[16]{0} tanh(%b)\n  \
+            ROOT %o = f32[16]{0} add(%a, %c)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.slot_count(), 2);
+        // The root add consumes %a (its first dying operand) in place.
+        assert!(matches!(
+            mem.actions[4],
+            Action::Compute { alias_of: Some(0), .. }
+        ));
+    }
+
+    #[test]
+    fn constants_become_presets() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2]) -> f32[2] {\n  \
+            %x = f32[2]{0} parameter(0)\n  \
+            %c = f32[2]{0} constant({1, 2})\n  \
+            ROOT %o = f32[2]{0} add(%x, %c)\n}\n";
+        let mem = plan_for(hlo);
+        assert!(matches!(mem.actions[1], Action::Preset));
+        assert!(mem.presets.contains_key(&1));
+    }
+
+    #[test]
+    fn non_root_tuple_is_not_plannable() {
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[2]) -> f32[2] {\n  \
+            %x = f32[2]{0} parameter(0)\n  \
+            %t = (f32[2]{0}) tuple(%x)\n  \
+            %g = f32[2]{0} get-tuple-element(%t), index=0\n  \
+            ROOT %o = f32[2]{0} negate(%g)\n}\n";
+        let module = HloModule::parse(hlo).unwrap();
+        let exec = clustered::plan(&module);
+        assert!(build(&module, &exec, None).is_err());
+    }
+
+    #[test]
+    fn scalar_operand_is_never_aliased_in_place() {
+        // The scalar broadcast source has 1 element; the add must not
+        // try to run in place over it even though it dies here.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[4]) -> f32[4] {\n  \
+            %x = f32[4]{0} parameter(0)\n  \
+            %c = f32[] constant(2)\n  \
+            ROOT %o = f32[4]{0} add(%x, %c)\n}\n";
+        let mem = plan_for(hlo);
+        assert!(matches!(
+            mem.actions[2],
+            Action::Compute { alias_of: None, .. }
+        ));
+    }
+}

@@ -1,0 +1,120 @@
+//! Process-wide content-addressed weight pool.
+//!
+//! Every HLO artifact is per batch size, so each resident executor used
+//! to build its own `WeightCache` (precomputed weight expressions +
+//! bit-packed clustered indices) even though the weight state is
+//! batch-independent. This pool deduplicates that derived state by
+//! *content* (tensor/index/codebook bytes, hashed bit-exact):
+//!
+//! * [`intern_cache`] — whole caches: residents at different batch sizes
+//!   whose artifacts name the weight subgraph identically end up holding
+//!   ONE `Arc<WeightCache>` (pointer-equality asserted in
+//!   `tests/memory_resident.rs`).
+//! * [`intern_prepared`] — individual packed clustered weights: even
+//!   when whole-cache sharing misses (instruction names differ between
+//!   lowerings), identical packed indices + codebooks collapse to one
+//!   allocation.
+//!
+//! Entries are held by `Weak` reference: dropping the last executor
+//! frees the weights; dead entries are pruned on the next intern of the
+//! same bucket.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use super::clustered::PreparedClustered;
+use super::eval::WeightCache;
+
+#[derive(Default)]
+struct PoolInner {
+    caches: HashMap<u64, Vec<Weak<WeightCache>>>,
+    prepared: HashMap<u64, Vec<Weak<PreparedClustered>>>,
+}
+
+fn pool() -> &'static Mutex<PoolInner> {
+    static POOL: OnceLock<Mutex<PoolInner>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(PoolInner::default()))
+}
+
+/// Intern a freshly built weight cache: returns an existing `Arc` when a
+/// live cache with bit-identical content exists, else registers this one.
+pub(crate) fn intern_cache(cache: WeightCache) -> Arc<WeightCache> {
+    let hash = cache.content_hash();
+    let mut inner = pool().lock().unwrap_or_else(|e| e.into_inner());
+    let bucket = inner.caches.entry(hash).or_default();
+    bucket.retain(|w| w.strong_count() > 0);
+    for w in bucket.iter() {
+        if let Some(existing) = w.upgrade() {
+            if existing.content_eq(&cache) {
+                return existing;
+            }
+        }
+    }
+    let arc = Arc::new(cache);
+    bucket.push(Arc::downgrade(&arc));
+    arc
+}
+
+/// Intern one bit-packed clustered weight (see [`intern_cache`]).
+pub(crate) fn intern_prepared(prep: PreparedClustered) -> Arc<PreparedClustered> {
+    let hash = prep.content_hash();
+    let mut inner = pool().lock().unwrap_or_else(|e| e.into_inner());
+    let bucket = inner.prepared.entry(hash).or_default();
+    bucket.retain(|w| w.strong_count() > 0);
+    for w in bucket.iter() {
+        if let Some(existing) = w.upgrade() {
+            if existing.content_eq(&prep) {
+                return existing;
+            }
+        }
+    }
+    let arc = Arc::new(prep);
+    bucket.push(Arc::downgrade(&arc));
+    arc
+}
+
+/// (live shared caches, live shared packed weights) — observability for
+/// `eval --stats` and tests.
+pub fn live_counts() -> (usize, usize) {
+    let inner = pool().lock().unwrap_or_else(|e| e.into_inner());
+    let caches = inner
+        .caches
+        .values()
+        .flat_map(|b| b.iter())
+        .filter(|w| w.strong_count() > 0)
+        .count();
+    let prepared = inner
+        .prepared
+        .values()
+        .flat_map(|b| b.iter())
+        .filter(|w| w.strong_count() > 0)
+        .count();
+    (caches, prepared)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::interp::clustered::prepare;
+
+    #[test]
+    fn prepared_interning_dedups_by_content() {
+        let idx = vec![0u8, 1, 2, 3, 0, 1, 2, 3];
+        let cb = vec![0.5f32, -1.0, 2.0, 0.25];
+        let a = intern_prepared(prepare(&idx, 4, 2, &cb, Some(4)).unwrap());
+        let b = intern_prepared(prepare(&idx, 4, 2, &cb, Some(4)).unwrap());
+        assert!(Arc::ptr_eq(&a, &b), "identical packed weights must share one Arc");
+        // Different content stays distinct.
+        let cb2 = vec![0.5f32, -1.0, 2.0, 0.75];
+        let c = intern_prepared(prepare(&idx, 4, 2, &cb2, Some(4)).unwrap());
+        assert!(!Arc::ptr_eq(&a, &c));
+        // Dropping all strong refs lets the entry die; the next intern
+        // re-registers instead of resurrecting.
+        let weak = Arc::downgrade(&a);
+        drop(a);
+        drop(b);
+        assert!(weak.upgrade().is_none());
+        let d = intern_prepared(prepare(&idx, 4, 2, &cb, Some(4)).unwrap());
+        assert_eq!(d.bits(), 2);
+    }
+}

@@ -1,0 +1,107 @@
+//! Process-wide observability counters for the interpreter's memory
+//! behavior, next to the existing `ClusteredTensors::dequant_calls` and
+//! `clustered::lut_dot_count`.
+//!
+//! * [`tensor_allocs`] — tensor-sized heap allocations on the execution
+//!   path: every instruction-output buffer or operand copy the classic
+//!   (unplanned) evaluator materializes, every arena-path fallback
+//!   materialization, and every capacity *growth* of a reusable scratch
+//!   or staging buffer. Deliberately excluded: the final output copy-out
+//!   (the `run() -> Vec<Tensor>` API boundary), O(rank) odometer/index
+//!   vectors, and per-thread kernel bootstrap scratch (≤ `k` + 256
+//!   elements per spawned thread). Steady-state planned execution keeps
+//!   this counter flat — asserted end-to-end in `tests/memory_resident.rs`.
+//! * [`plan_peak_bytes`] / [`plan_slot_count`] — arena footprint of the
+//!   largest memory plan built so far (sum of slot capacities after
+//!   liveness-based reuse) and that plan's slot count.
+//! * [`plan_naive_bytes`] — what the same plan's instructions would
+//!   occupy with one private buffer per instruction (the unplanned
+//!   evaluator's residency), for the reuse-ratio report in
+//!   `benches/interp_memory.rs` and `eval --stats`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static TENSOR_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static PLAN_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PLAN_NAIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PLAN_SLOT_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+/// Tensor-sized heap allocations on the execution path so far (see the
+/// module docs for the exact contract).
+pub fn tensor_allocs() -> usize {
+    TENSOR_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Arena bytes (sum of slot capacities) of the largest plan built.
+pub fn plan_peak_bytes() -> usize {
+    PLAN_PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Per-instruction-buffer bytes the largest plan's module would occupy
+/// without slot reuse.
+pub fn plan_naive_bytes() -> usize {
+    PLAN_NAIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// Slot count of the largest plan built.
+pub fn plan_slot_count() -> usize {
+    PLAN_SLOT_COUNT.load(Ordering::Relaxed)
+}
+
+/// Record one tensor-sized allocation on the execution path.
+pub(crate) fn count_tensor_alloc() {
+    TENSOR_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Publish a freshly built plan's footprint (keeps the largest).
+pub(crate) fn record_plan(peak_bytes: usize, naive_bytes: usize, slots: usize) {
+    // Keep the gauges describing one coherent plan: the one with the
+    // largest arena. fetch_max on the peak decides; the other two follow
+    // only when this plan wins (racy ties are harmless for a gauge).
+    let prev = PLAN_PEAK_BYTES.fetch_max(peak_bytes, Ordering::Relaxed);
+    if peak_bytes >= prev {
+        PLAN_NAIVE_BYTES.store(naive_bytes, Ordering::Relaxed);
+        PLAN_SLOT_COUNT.store(slots, Ordering::Relaxed);
+    }
+}
+
+/// Count a reusable scratch/staging buffer growing past its previous
+/// capacity (a steady-state executor never grows its scratch).
+pub(crate) fn note_scratch_growth<T>(v: &Vec<T>, needed: usize) {
+    if v.capacity() < needed {
+        count_tensor_alloc();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        // Other lib tests run executors concurrently and also bump the
+        // process-wide counter, so assert monotonic deltas only.
+        let before = tensor_allocs();
+        count_tensor_alloc();
+        count_tensor_alloc();
+        count_tensor_alloc();
+        assert!(tensor_allocs() >= before + 3);
+
+        let small: Vec<f32> = Vec::new();
+        let a = tensor_allocs();
+        note_scratch_growth(&small, 4);
+        assert!(tensor_allocs() >= a + 1);
+        let big: Vec<f32> = Vec::with_capacity(8);
+        note_scratch_growth(&big, 4); // no growth needed -> no count
+
+        // The gauges keep the largest plan; usize::MAX - 1 outranks any
+        // real plan another test records concurrently.
+        record_plan(usize::MAX - 1, 10, 3);
+        assert_eq!(plan_peak_bytes(), usize::MAX - 1);
+        assert_eq!(plan_naive_bytes(), 10);
+        assert_eq!(plan_slot_count(), 3);
+        // A smaller plan does not displace the gauges.
+        record_plan(1, 99, 99);
+        assert_eq!(plan_naive_bytes(), 10);
+    }
+}

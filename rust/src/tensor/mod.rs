@@ -3,6 +3,8 @@
 
 pub mod io;
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 /// Element types supported by the interchange format.
@@ -58,11 +60,18 @@ impl Dtype {
 /// reinterpretation (the interpreter's data-movement ops copy bytes; the
 /// PJRT backend hands them to `Literal::create_from_shape_and_untyped_data`
 /// as-is); typed views are provided for computation.
+///
+/// The byte payload sits behind an `Arc`, so `clone()` is copy-on-write:
+/// it shares storage instead of duplicating bytes. Tensors are immutable
+/// after construction (only the shape can change, via [`Tensor::reshape`]),
+/// so sharing is always safe. This is what lets the registry, the tuple
+/// paths in the interpreter, and multi-batch-size residents pass model
+/// weights around without multiplying resident bytes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     dtype: Dtype,
     shape: Vec<usize>,
-    data: Vec<u8>,
+    data: Arc<Vec<u8>>,
 }
 
 impl Tensor {
@@ -77,7 +86,7 @@ impl Tensor {
                 shape
             );
         }
-        Ok(Self { dtype, shape, data })
+        Ok(Self { dtype, shape, data: Arc::new(data) })
     }
 
     pub fn from_f32(shape: Vec<usize>, values: &[f32]) -> Result<Self> {
@@ -102,7 +111,7 @@ impl Tensor {
 
     pub fn zeros(dtype: Dtype, shape: Vec<usize>) -> Self {
         let elems: usize = shape.iter().product();
-        Self { dtype, shape, data: vec![0; elems * dtype.size()] }
+        Self { dtype, shape, data: Arc::new(vec![0; elems * dtype.size()]) }
     }
 
     pub fn dtype(&self) -> Dtype {
@@ -126,7 +135,13 @@ impl Tensor {
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
+    }
+
+    /// True when two tensors share one byte buffer (copy-on-write
+    /// clones). Used by tests asserting residency is not duplicated.
+    pub fn shares_storage(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 
     /// Typed f32 view (copies; little-endian decode).
@@ -252,6 +267,21 @@ mod tests {
         assert_eq!(c.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let bad = Tensor::from_u8(vec![1, 2], &[1, 2]).unwrap();
         assert!(Tensor::concat_rows(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn clone_is_copy_on_write_shared() {
+        let t = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
+        let c = t.clone();
+        assert!(t.shares_storage(&c));
+        // Reshape touches only the shape vector, never the shared bytes.
+        let mut r = t.clone();
+        r.reshape(vec![1, 2]).unwrap();
+        assert!(t.shares_storage(&r));
+        assert_eq!(r.shape(), &[1, 2]);
+        assert_eq!(t.shape(), &[2]);
+        // into_bytes on a shared tensor copies; on a unique one it moves.
+        assert_eq!(t.into_bytes(), c.bytes().to_vec());
     }
 
     #[test]

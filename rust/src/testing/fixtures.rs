@@ -1,0 +1,68 @@
+//! Shared synthetic-module fixtures for tests and benches (no artifacts
+//! needed).
+
+/// A ViT-block-shaped HLO chain over `[m, d]` activations: per layer a
+/// projection dot, a softmax-style normalize (exp / row-reduce /
+/// broadcast / divide), a second projection, and a residual add.
+/// Exercises slot reuse, in-place elementwise, zero-copy aliasing, and
+/// long-range residual liveness — the acceptance surface for the memory
+/// planner (`benches/interp_memory.rs` and `tests/memory_resident.rs`
+/// must measure the same graph family).
+///
+/// Parameters: `x: f32[m,d]`, then `w{l}a`/`w{l}b: f32[d,d]` per layer.
+pub fn vit_shaped_hlo(m: usize, d: usize, layers: usize) -> String {
+    let mut sig = vec![format!("x: f32[{m},{d}]")];
+    let mut body = format!("  %x = f32[{m},{d}]{{1,0}} parameter(0)\n");
+    for l in 0..layers {
+        sig.push(format!("w{l}a: f32[{d},{d}]"));
+        sig.push(format!("w{l}b: f32[{d},{d}]"));
+        body.push_str(&format!(
+            "  %w{l}a = f32[{d},{d}]{{1,0}} parameter({})\n",
+            1 + 2 * l
+        ));
+        body.push_str(&format!(
+            "  %w{l}b = f32[{d},{d}]{{1,0}} parameter({})\n",
+            2 + 2 * l
+        ));
+    }
+    let mut cur = "x".to_string();
+    for l in 0..layers {
+        body.push_str(&format!(
+            "  %l{l}h = f32[{m},{d}]{{1,0}} dot(%{cur}, %w{l}a), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}e = f32[{m},{d}]{{1,0}} exponential(%l{l}h)\n\
+             \x20 %l{l}z = f32[] constant(0)\n\
+             \x20 %l{l}r = f32[{m}]{{0}} reduce(%l{l}e, %l{l}z), dimensions={{1}}, to_apply=%add_f\n\
+             \x20 %l{l}rb = f32[{m},{d}]{{1,0}} broadcast(%l{l}r), dimensions={{0}}\n\
+             \x20 %l{l}s = f32[{m},{d}]{{1,0}} divide(%l{l}e, %l{l}rb)\n\
+             \x20 %l{l}d = f32[{m},{d}]{{1,0}} dot(%l{l}s, %w{l}b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}o = f32[{m},{d}]{{1,0}} add(%{cur}, %l{l}d)\n"
+        ));
+        cur = format!("l{l}o");
+    }
+    body.push_str(&format!("  ROOT %t = (f32[{m},{d}]{{1,0}}) tuple(%{cur})\n"));
+    format!(
+        "HloModule vit_shaped\n\
+         %add_f (p0: f32[], p1: f32[]) -> f32[] {{\n  \
+         %p0 = f32[] parameter(0)\n  \
+         %p1 = f32[] parameter(1)\n  \
+         ROOT %r = f32[] add(%p0, %p1)\n}}\n\
+         ENTRY %main ({}) -> (f32[{m},{d}]) {{\n{body}}}\n",
+        sig.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::HloModule;
+
+    #[test]
+    fn vit_shaped_module_parses() {
+        let hlo = vit_shaped_hlo(4, 8, 2);
+        let module = HloModule::parse(&hlo).unwrap();
+        let params = module.parameters().unwrap();
+        assert_eq!(params.len(), 1 + 2 * 2);
+        assert_eq!(params[0].1.dims, vec![4, 8]);
+        assert_eq!(params[1].1.dims, vec![8, 8]);
+    }
+}

@@ -1,5 +1,7 @@
-//! Property-testing mini-framework (proptest replacement).
+//! Property-testing mini-framework (proptest replacement) and shared
+//! synthetic-module fixtures.
 
+pub mod fixtures;
 pub mod prop;
 
 pub use prop::{check, Gen};

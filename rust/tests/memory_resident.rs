@@ -1,0 +1,149 @@
+//! End-to-end acceptance for memory-planned execution (ISSUE 3):
+//!
+//! * steady-state planned execution performs **zero** tensor-sized heap
+//!   allocations (the `tensor_allocs` counter stays flat across calls
+//!   after warmup);
+//! * on a ViT-shaped module, planned peak resident intermediate bytes
+//!   are <= 50% of the unplanned per-instruction sum;
+//! * two resident executors at different batch sizes share ONE pooled
+//!   `WeightCache` allocation (`Arc` pointer equality) — closing the
+//!   ROADMAP open item on duplicated bind-time weight state.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use clusterformer::clustering::{ClusterScheme, ClusteredTensors, Quantizer};
+use clusterformer::runtime::interp::{pool, stats, InterpExecutor};
+use clusterformer::runtime::ResidentExecutor as _;
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::fixtures::vit_shaped_hlo;
+
+/// The process-wide counters are shared; serialize the tests in this
+/// binary so their before/after reads don't race.
+static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The clustered-matmul lowering at batch size `b`: codebook row slice +
+/// u8 -> s32 convert -> gather -> dot -> bias add. Weight-subgraph
+/// instruction names are identical across batch sizes, like the AOT
+/// pipeline emits for one model.
+fn clustered_hlo(b: usize) -> String {
+    format!(
+        "HloModule clustered_b{b}\n\
+         ENTRY %main (x: f32[{b},6], cbs: f32[1,256], idx: u8[6,5], bias: f32[5]) -> (f32[{b},5]) {{\n  \
+         %x = f32[{b},6]{{1,0}} parameter(0)\n  \
+         %cbs = f32[1,256]{{1,0}} parameter(1)\n  \
+         %idx = u8[6,5]{{1,0}} parameter(2)\n  \
+         %bias = f32[5]{{0}} parameter(3)\n  \
+         %sl = f32[1,256]{{1,0}} slice(%cbs), slice={{[0:1], [0:256]}}\n  \
+         %row = f32[256]{{0}} reshape(%sl)\n  \
+         %cvt = s32[6,5]{{1,0}} convert(%idx)\n  \
+         %w = f32[6,5]{{1,0}} gather(%row, %cvt), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n  \
+         %d = f32[{b},5]{{1,0}} dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+         %bb = f32[{b},5]{{1,0}} broadcast(%bias), dimensions={{1}}\n  \
+         %add = f32[{b},5]{{1,0}} add(%d, %bb)\n  \
+         ROOT %t = (f32[{b},5]{{1,0}}) tuple(%add)\n}}\n"
+    )
+}
+
+fn clustered_fixture() -> ClusteredTensors {
+    let w: Vec<f32> = (0..30).map(|i| ((i as f32) * 0.47).sin()).collect();
+    let dense = Tensor::from_f32(vec![6, 5], &w).unwrap();
+    let names = vec!["w".to_string()];
+    let mut tensors = HashMap::new();
+    tensors.insert("w".to_string(), dense);
+    Quantizer::new(8, ClusterScheme::PerLayer)
+        .run(&names, &tensors)
+        .unwrap()
+}
+
+fn fixed_inputs(ct: &ClusteredTensors) -> Arc<Vec<Tensor>> {
+    Arc::new(vec![
+        ct.codebooks.clone(),
+        ct.indices["w"].clone(),
+        Tensor::from_f32(vec![5], &[0.1, -0.2, 0.3, -0.4, 0.5]).unwrap(),
+    ])
+}
+
+fn batch(b: usize, seed: f32) -> Tensor {
+    let x: Vec<f32> = (0..b * 6).map(|i| ((i as f32) * seed).cos()).collect();
+    Tensor::from_f32(vec![b, 6], &x).unwrap()
+}
+
+#[test]
+fn steady_state_planned_execution_allocates_nothing() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let exe = InterpExecutor::load_text(&clustered_hlo(4), "zero-alloc").unwrap();
+    let ct = clustered_fixture();
+    let resident = exe.resident(1, fixed_inputs(&ct), Some(Arc::new(ct))).unwrap();
+    assert!(
+        resident.memory_plan().is_some(),
+        "clustered module must be memory-planned"
+    );
+    let x = batch(4, 0.83);
+
+    // Warmup: staging buffers and kernel scratch grow once here.
+    let warm = resident.run(std::slice::from_ref(&x)).unwrap();
+
+    let before = stats::tensor_allocs();
+    for i in 0..5 {
+        let out = resident.run(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(out[0], warm[0], "run {i} diverged");
+    }
+    assert_eq!(
+        stats::tensor_allocs(),
+        before,
+        "steady-state planned execution must perform 0 tensor-path heap allocations"
+    );
+}
+
+#[test]
+fn planned_peak_is_under_half_of_unplanned_sum() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // The exact graph family the bench measures (shared fixture).
+    let hlo = vit_shaped_hlo(16, 32, 4);
+    let exe = InterpExecutor::load_text(&hlo, "vit-shaped-test").unwrap();
+    let mem = exe.memory_plan().expect("ViT-shaped module must be plannable");
+    assert!(
+        mem.peak_bytes() * 2 <= mem.naive_bytes(),
+        "planned peak {} must be <= 50% of unplanned sum {}",
+        mem.peak_bytes(),
+        mem.naive_bytes()
+    );
+}
+
+#[test]
+fn residents_at_different_batch_sizes_share_one_weight_cache() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ct = Arc::new(clustered_fixture());
+    let fixed = fixed_inputs(&ct);
+
+    let exe1 = InterpExecutor::load_text(&clustered_hlo(1), "pool-b1").unwrap();
+    let exe8 = InterpExecutor::load_text(&clustered_hlo(8), "pool-b8").unwrap();
+    let r1 = exe1.resident(1, fixed.clone(), Some(ct.clone())).unwrap();
+    let r8 = exe8.resident(1, fixed.clone(), Some(ct.clone())).unwrap();
+
+    // The caches carry real content (prepared packed weights), and the
+    // two batch sizes hold the SAME allocation.
+    let (c1, c8) = (r1.weight_cache(), r8.weight_cache());
+    assert!(
+        Arc::ptr_eq(&c1, &c8),
+        "batch-1 and batch-8 residents must share one pooled WeightCache"
+    );
+    let (live_caches, live_packed) = pool::live_counts();
+    assert!(live_caches >= 1, "pool must track the shared cache");
+    assert!(live_packed >= 1, "pool must track the shared packed weight");
+
+    // And both still compute correctly through the shared state.
+    let x1 = batch(1, 0.83);
+    let x8 = batch(8, 0.83);
+    let o1 = r1.run(std::slice::from_ref(&x1)).unwrap();
+    let o8 = r8.run(std::slice::from_ref(&x8)).unwrap();
+    assert_eq!(o1[0].shape(), &[1, 5]);
+    assert_eq!(o8[0].shape(), &[8, 5]);
+    // Row 0 of the batch-8 run sees the same input as the batch-1 run.
+    assert_eq!(
+        o1[0].as_f32().unwrap(),
+        o8[0].as_f32().unwrap()[..5].to_vec(),
+        "shared weights must serve both batch sizes identically"
+    );
+}
