@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             policy: BatchPolicy::Adaptive,
             queue_cap: 512,
         },
+        threads: clusterformer::runtime::ThreadBudget::from_env(),
     })?;
 
     let registry = Registry::load("artifacts")?;

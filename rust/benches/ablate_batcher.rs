@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
                 policy,
                 queue_cap: 4096,
             },
+            threads: clusterformer::runtime::ThreadBudget::from_env(),
         })?;
         let router = Arc::new(server.router.clone());
         for rate in [15.0, 60.0, 150.0] {

@@ -14,9 +14,8 @@
 
 use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
 use clusterformer::runtime::interp::clustered::{lut_matmul_packed, prepare};
-use clusterformer::runtime::interp::gemm::{
-    configured_threads, dot_general, dot_general_naive, DotSpec,
-};
+use clusterformer::runtime::interp::gemm::{dot_general, dot_general_naive, DotSpec};
+use clusterformer::runtime::ThreadBudget;
 use clusterformer::tensor::Tensor;
 use clusterformer::util::rng::Pcg32;
 
@@ -41,21 +40,19 @@ fn main() -> anyhow::Result<()> {
     };
     let prep = prepare(&idx, K, N, &codebook, Some(CLUSTERS))?;
 
-    println!(
-        "# GEMM kernels — {M}x{K}x{N}, {CLUSTERS} clusters, {} threads\n",
-        configured_threads()
-    );
+    let threads = ThreadBudget::from_env().get();
+    println!("# GEMM kernels — {M}x{K}x{N}, {CLUSTERS} clusters, {threads} threads\n");
     let mut runner = BenchRunner::new(BenchConfig::default());
     let naive = runner
         .bench("dot/naive-index-walk", || dot_general_naive(&lhs, &rhs, &spec).unwrap())
         .summary
         .mean;
     let blocked = runner
-        .bench("dot/blocked-gemm", || dot_general(&lhs, &rhs, &spec).unwrap())
+        .bench("dot/blocked-gemm", || dot_general(&lhs, &rhs, &spec, threads).unwrap())
         .summary
         .mean;
     let lut = runner
-        .bench("dot/clustered-lut", || lut_matmul_packed(&x, M, &prep).unwrap())
+        .bench("dot/clustered-lut", || lut_matmul_packed(&x, M, &prep, threads).unwrap())
         .summary
         .mean;
 
@@ -88,9 +85,9 @@ fn main() -> anyhow::Result<()> {
 
     // Numeric cross-check so a broken kernel can't silently post a win.
     let reference = dot_general_naive(&lhs, &rhs, &spec)?.as_f32()?;
-    let fast = dot_general(&lhs, &rhs, &spec)?.as_f32()?;
+    let fast = dot_general(&lhs, &rhs, &spec, threads)?.as_f32()?;
     assert_eq!(reference, fast, "blocked GEMM must match naive bit-for-bit");
-    let clustered_out = lut_matmul_packed(&x, M, &prep)?;
+    let clustered_out = lut_matmul_packed(&x, M, &prep, threads)?;
     for (a, b) in clustered_out.iter().zip(&reference) {
         assert!(
             (a - b).abs() <= 1e-3 * (1.0 + b.abs()),

@@ -142,6 +142,7 @@ fn main() -> anyhow::Result<()> {
             policy: BatchPolicy::SizeOnly, // force full batches
             queue_cap: 64,
         },
+        threads: clusterformer::runtime::ThreadBudget::from_env(),
     })?;
     let mut through = Vec::new();
     for _ in 0..20 {

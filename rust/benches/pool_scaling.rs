@@ -1,0 +1,145 @@
+//! Pool-scaling microbench (ISSUE 4): the persistent kernel pool against
+//! the retired per-call `std::thread::scope` spawn strategy, on repeated
+//! serving-shaped dots (no artifacts needed).
+//!
+//! Three regimes:
+//! * `small` — a batch-1-sized dot below the parallel-work threshold:
+//!   both strategies run the identical serial microkernel, so pooled
+//!   execution must be no slower;
+//! * `medium` — a ViT-block-shaped dot above the threshold, repeated
+//!   per inference step: the scoped baseline pays a thread spawn/join
+//!   round-trip per call, the pool only a queue push + latch;
+//! * `lut` — the clustered LUT matmul, serial vs pooled fan-out.
+//!
+//! Every pooled result is cross-checked bit-for-bit against the scoped
+//! baseline so a broken fan-out cannot silently post a win.
+
+use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
+use clusterformer::runtime::interp::clustered::{lut_matmul_packed, prepare};
+use clusterformer::runtime::interp::gemm::{gemm, gemm_rows, Tile};
+use clusterformer::runtime::interp::pool_exec::pool_workers;
+use clusterformer::runtime::ThreadBudget;
+use clusterformer::util::rng::Pcg32;
+
+/// The retired strategy, kept verbatim as the bench baseline (including
+/// its work threshold): spawn and join scoped threads inside every call.
+fn gemm_scoped(m: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32], threads: usize) {
+    const PAR_MIN_FLOPS: usize = 1 << 20;
+    let tile = Tile { m, k, n };
+    let nt = threads.min(m);
+    let flops = 2usize.saturating_mul(m).saturating_mul(n).saturating_mul(k);
+    if nt <= 1 || flops < PAR_MIN_FLOPS {
+        gemm_rows(0, m, tile, a, w, out);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
+            let nrows = out_chunk.len() / n;
+            s.spawn(move || gemm_rows(ci * chunk, nrows, tile, a, w, out_chunk));
+        }
+    });
+}
+
+struct Case {
+    name: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+fn main() -> anyhow::Result<()> {
+    let threads = ThreadBudget::from_env().get();
+    let mut rng = Pcg32::new(4_2021);
+    println!(
+        "# pool scaling — budget {threads}, {} pool workers\n",
+        pool_workers()
+    );
+    let mut runner = BenchRunner::new(BenchConfig::default());
+
+    let cases = [
+        // batch=1 single token row block: below PAR_MIN_FLOPS, serial in
+        // both strategies — parity check.
+        Case { name: "small", m: 16, k: 64, n: 64 },
+        // ViT-block-shaped: above the threshold, both strategies fan out.
+        Case { name: "medium", m: 197, k: 192, n: 192 },
+        Case { name: "large", m: 256, k: 256, n: 256 },
+    ];
+    println!("| case | scoped-spawn | pooled | pooled speedup |");
+    println!("|---|---|---|---|");
+    let mut medium_speedup = 1.0f64;
+    for case in &cases {
+        let (m, k, n) = (case.m, case.k, case.n);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut out_scoped = vec![0.0f32; m * n];
+        let mut out_pooled = vec![0.0f32; m * n];
+
+        let scoped = runner
+            .bench(&format!("gemm/{}/scoped", case.name), || {
+                out_scoped.fill(0.0);
+                gemm_scoped(m, k, n, &a, &w, &mut out_scoped, threads);
+            })
+            .summary
+            .mean;
+        let pooled = runner
+            .bench(&format!("gemm/{}/pooled", case.name), || {
+                out_pooled.fill(0.0);
+                gemm(1, m, k, n, &a, &w, &mut out_pooled, threads);
+            })
+            .summary
+            .mean;
+        // Rerun once outside the timer so the comparison buffers hold the
+        // final kernels' output, then cross-check bit-for-bit.
+        out_scoped.fill(0.0);
+        gemm_scoped(m, k, n, &a, &w, &mut out_scoped, threads);
+        out_pooled.fill(0.0);
+        gemm(1, m, k, n, &a, &w, &mut out_pooled, threads);
+        assert_eq!(out_scoped, out_pooled, "{}: pooled GEMM diverged", case.name);
+
+        println!(
+            "| gemm {} ({m}x{k}x{n}) | {} | {} | {:.2}x |",
+            case.name,
+            fmt_time(scoped),
+            fmt_time(pooled),
+            scoped / pooled
+        );
+        if case.name == "medium" {
+            medium_speedup = scoped / pooled;
+        }
+    }
+
+    // LUT matmul: serial vs pooled fan-out on 64-cluster packed weights.
+    let (m, k, n, clusters) = (197usize, 192usize, 192usize, 64usize);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let cb: Vec<f32> = (0..clusters).map(|_| rng.normal() as f32).collect();
+    let idx: Vec<u8> = (0..k * n).map(|_| rng.range(0, clusters - 1) as u8).collect();
+    let prep = prepare(&idx, k, n, &cb, Some(clusters))?;
+    let serial = runner
+        .bench("lut/serial", || lut_matmul_packed(&x, m, &prep, 1).unwrap())
+        .summary
+        .mean;
+    let pooled_lut = runner
+        .bench("lut/pooled", || lut_matmul_packed(&x, m, &prep, threads).unwrap())
+        .summary
+        .mean;
+    assert_eq!(
+        lut_matmul_packed(&x, m, &prep, 1)?,
+        lut_matmul_packed(&x, m, &prep, threads)?,
+        "pooled LUT diverged"
+    );
+    println!(
+        "| lut ({m}x{k}x{n}, c={clusters}) | {} (serial) | {} | {:.2}x |",
+        fmt_time(serial),
+        fmt_time(pooled_lut),
+        serial / pooled_lut
+    );
+
+    println!(
+        "\npooled vs scoped on repeated medium dots: {:.2}x (target >= 1.0x: {})",
+        medium_speedup,
+        if medium_speedup >= 1.0 { "MET" } else { "NOT met" }
+    );
+    runner.finish("pool scaling");
+    Ok(())
+}

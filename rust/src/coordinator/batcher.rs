@@ -127,8 +127,15 @@ impl DynamicBatcher {
     }
 
     /// Time until the oldest request's deadline (for the worker's park
-    /// timeout); `None` when the queue is empty.
+    /// timeout); `None` when no pending deadline can cut a batch — the
+    /// queue is empty, or the policy is [`BatchPolicy::SizeOnly`], where
+    /// only arrivals (never the clock) change what [`Self::next_batch`]
+    /// returns. A `None` lets the worker park until the next message
+    /// instead of waking spuriously every `max_wait`.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        if self.config.policy == BatchPolicy::SizeOnly {
+            return None;
+        }
         let oldest = self.queue.front()?;
         let waited = now.duration_since(oldest.enqueued);
         Some(self.config.max_wait.saturating_sub(waited))
@@ -197,6 +204,27 @@ mod tests {
         b.push(req(1, t0)).unwrap();
         b.set_executor_busy(true);
         assert!(b.next_batch(t0 + Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn size_only_has_no_deadline_timeout() {
+        // Under SizeOnly the clock never cuts a batch, so a queued
+        // request must NOT produce a park timeout (the worker would wake
+        // every max_wait for nothing); deadline policies must.
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(4, 10, BatchPolicy::SizeOnly));
+        assert_eq!(b.time_to_deadline(t0), None, "empty queue");
+        b.push(req(0, t0)).unwrap();
+        assert_eq!(b.time_to_deadline(t0), None, "SizeOnly never deadlines");
+
+        let mut d = DynamicBatcher::new(cfg(4, 10, BatchPolicy::Deadline));
+        assert_eq!(d.time_to_deadline(t0), None, "empty queue");
+        d.push(req(0, t0)).unwrap();
+        let left = d.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert_eq!(left, Duration::from_millis(6));
+        let mut a = DynamicBatcher::new(cfg(4, 10, BatchPolicy::Adaptive));
+        a.push(req(0, t0)).unwrap();
+        assert!(a.time_to_deadline(t0).is_some());
     }
 
     #[test]

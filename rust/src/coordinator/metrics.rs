@@ -1,6 +1,12 @@
 //! Serving metrics: per-variant latency histograms, counters, and a
 //! throughput window. Shared across threads behind a mutex (recording is
 //! a histogram bump — nanoseconds next to a multi-ms inference).
+//!
+//! Lock acquisition recovers from poisoning: a panic on one recording
+//! thread must not cascade a `lock().unwrap()` panic into every worker
+//! that touches metrics afterwards — the histograms stay valid (each
+//! record is a few independent integer bumps), so the data is taken
+//! as-is.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -104,7 +110,7 @@ impl Metrics {
         latencies_s: &[f64],
         queue_s: &[f64],
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let v = m.entry(variant.to_string()).or_default();
         v.batches += 1;
         v.requests += batch_size as u64;
@@ -119,13 +125,13 @@ impl Metrics {
     }
 
     pub fn record_rejection(&self, variant: &str) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         m.entry(variant.to_string()).or_default().rejected += 1;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            per_variant: self.inner.lock().unwrap().clone(),
+            per_variant: self.inner.lock().unwrap_or_else(|e| e.into_inner()).clone(),
             elapsed_s: self.started.elapsed().as_secs_f64(),
         }
     }
@@ -149,6 +155,29 @@ mod tests {
         assert!((v.mean_batch_size() - 3.0).abs() < 1e-9);
         assert_eq!(s.total_requests(), 6);
         assert!(s.markdown().contains("vit/baseline"));
+    }
+
+    #[test]
+    fn poisoned_lock_recovers() {
+        // A thread panicking while holding the metrics mutex poisons it;
+        // recording and snapshotting must keep working afterwards
+        // instead of cascading the panic into every worker.
+        let m = std::sync::Arc::new(Metrics::new());
+        m.record_batch("v", 1, 0.001, &[0.002], &[0.0]);
+        let mc = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = mc.inner.lock().unwrap();
+            panic!("poison the metrics mutex");
+        })
+        .join();
+        assert!(m.inner.lock().is_err(), "mutex must actually be poisoned");
+        m.record_batch("v", 2, 0.001, &[0.002, 0.003], &[0.0, 0.0]);
+        m.record_rejection("v");
+        let s = m.snapshot();
+        let v = &s.per_variant["v"];
+        assert_eq!(v.requests, 3);
+        assert_eq!(v.batches, 2);
+        assert_eq!(v.rejected, 1);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::router::Router;
 use super::worker::{run_worker, WorkerConfig, WorkerMsg};
 use crate::model::VariantKey;
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, ThreadBudget};
 
 /// What to serve.
 #[derive(Clone)]
@@ -25,6 +25,12 @@ pub struct ServerConfig {
     /// Execution backend every worker uses (default: the interpreter).
     pub backend: BackendKind,
     pub batcher: BatcherConfig,
+    /// Total kernel lane budget for the whole server
+    /// ([`ThreadBudget::from_env`] honors `CLUSTERFORMER_THREADS` /
+    /// `--threads`). `Server::start` divides it across the variant
+    /// workers, so W workers on C cores get C/W lanes each instead of
+    /// each assuming it owns the machine (W×C oversubscription).
+    pub threads: ThreadBudget,
 }
 
 /// A running server.
@@ -44,6 +50,18 @@ impl Server {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         let mut readiness = Vec::new();
+        // Explicit core budgeting: each worker gets its slice of the
+        // machine, and all slices fan out into one shared process-wide
+        // kernel pool — total concurrency stays at the configured budget.
+        let per_worker = config.threads.per_worker(config.targets.len());
+        if config.targets.len() > 1 {
+            crate::log_info!(
+                "dividing {} kernel lanes across {} variant workers ({} each)",
+                config.threads.get(),
+                config.targets.len(),
+                per_worker.get()
+            );
+        }
         for (model, variant) in &config.targets {
             let (tx, rx) = channel();
             let (ready_tx, ready_rx) = channel();
@@ -53,6 +71,7 @@ impl Server {
                 variant: *variant,
                 backend: config.backend,
                 batcher: config.batcher.clone(),
+                threads: per_worker,
             };
             let m = metrics.clone();
             let label = format!("{model}/{}", variant.label());

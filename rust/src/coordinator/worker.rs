@@ -10,7 +10,7 @@
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -18,7 +18,9 @@ use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{ClassRequest, ClassResponse};
 use crate::model::{Registry, VariantKey};
-use crate::runtime::{backend, Backend, BackendKind, Executor as _, ResidentExecutor};
+use crate::runtime::{
+    backend_with_threads, Backend, BackendKind, Executor as _, ResidentExecutor, ThreadBudget,
+};
 use crate::tensor::Tensor;
 
 /// Messages into a worker.
@@ -36,6 +38,10 @@ pub struct WorkerConfig {
     pub variant: VariantKey,
     pub backend: BackendKind,
     pub batcher: BatcherConfig,
+    /// This worker's kernel lane budget — its slice of the machine, not
+    /// the whole machine ([`crate::coordinator::ServerConfig`] divides
+    /// the total across variant workers).
+    pub threads: ThreadBudget,
 }
 
 /// The execution state for one variant (lives on the worker thread).
@@ -202,7 +208,7 @@ pub fn run_worker(
 ) {
     // All backend state is built on this thread (PJRT is not Send).
     let setup = (|| -> Result<(VariantExecutor, DynamicBatcher)> {
-        let backend = backend(config.backend)?;
+        let backend = backend_with_threads(config.backend, config.threads)?;
         let mut registry = Registry::load(&config.artifacts_dir)?;
         let exec = VariantExecutor::load(
             backend.as_ref(),
@@ -232,11 +238,15 @@ pub fn run_worker(
 
     let mut running = true;
     while running {
-        // Park until a message or the oldest deadline.
-        let timeout = batcher
-            .time_to_deadline(Instant::now())
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
+        // Park until a message — bounded by the oldest deadline when one
+        // is pending. Under SizeOnly (or an empty queue) there is no
+        // deadline that could cut a batch, so the worker parks
+        // indefinitely instead of waking spuriously every `max_wait`.
+        let msg = match batcher.time_to_deadline(Instant::now()) {
+            Some(timeout) => rx.recv_timeout(timeout),
+            None => rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        };
+        match msg {
             Ok(WorkerMsg::Request(req)) => {
                 if let Err(rejected) = batcher.push(req) {
                     metrics.record_rejection(&exec.label);

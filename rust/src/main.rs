@@ -20,7 +20,7 @@ use clusterformer::coordinator::{
 };
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::runtime::{backend, BackendKind};
+use clusterformer::runtime::{backend, BackendKind, ThreadBudget};
 use clusterformer::simulator::{profile::build_sim, simulate_inference};
 use clusterformer::util::cli::{Cli, Command};
 use clusterformer::util::rng::Pcg32;
@@ -155,7 +155,10 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
 }
 
 /// Apply the `--threads` knob by setting `CLUSTERFORMER_THREADS` for the
-/// interpreter's GEMM/LUT kernels (0 leaves the default: all cores).
+/// interpreter's kernel thread budget (0 leaves the default: all cores —
+/// the same "0 = auto" the env var itself honors). The env var stays the
+/// single top-level knob; everything below reads it through
+/// `ThreadBudget::from_env` and carries the budget explicitly.
 fn apply_threads_knob(args: &clusterformer::util::cli::Args) -> Result<()> {
     let threads = args.usize("threads")?;
     if threads > 0 {
@@ -201,6 +204,12 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
             "counters: tensor_allocs={} dequant_calls={} lut_dots={} pooled_caches={} pooled_packed={}",
             m.tensor_allocs, m.dequant_calls, m.lut_dots, caches, packed
         );
+        println!(
+            "threading: budget={} pool_workers={} par_fanouts={}",
+            ThreadBudget::from_env().get(),
+            clusterformer::runtime::interp::pool_exec::pool_workers(),
+            clusterformer::runtime::interp::stats::par_fanouts()
+        );
     }
     Ok(())
 }
@@ -224,6 +233,7 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
             policy,
             queue_cap: 1024,
         },
+        threads: ThreadBudget::from_env(),
     })?;
     let target = format!("{model}/{}", variant.label());
     log_info!("serving {target}");

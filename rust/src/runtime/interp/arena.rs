@@ -465,12 +465,14 @@ impl<'a> Ctx<'a> {
 }
 
 /// Execute the planned module: stage nothing (the caller staged), walk
-/// the instruction list, materialize the root.
+/// the instruction list, materialize the root. `threads` is the kernel
+/// lane budget every parallel kernel of this execution gets.
 pub(crate) fn execute(
     module: &HloModule,
     plan: &MemoryPlan,
     cache: Option<&WeightCache>,
     arena: &mut Arena,
+    threads: usize,
 ) -> Result<Vec<Tensor>> {
     let entry = module.entry()?;
     let insts = entry.instructions.as_slice();
@@ -484,7 +486,7 @@ pub(crate) fn execute(
             Action::Preset => arena.locs[i] = Some(Loc::Preset(i)),
             Action::Alias => arena.locs[i] = arena.locs[plan.operands[i][0]],
             Action::Compute { slot, alias_of, cfg } => {
-                compute(insts, plan, cache, arena, i, *slot, *alias_of, cfg)
+                compute(insts, plan, cache, arena, i, *slot, *alias_of, cfg, threads)
                     .with_context(|| {
                         format!("evaluating %{} = {} (planned)", insts[i].name, insts[i].opcode)
                     })?;
@@ -526,6 +528,7 @@ fn compute(
     slot: usize,
     alias_of: Option<usize>,
     cfg: &OpCfg,
+    threads: usize,
 ) -> Result<()> {
     let mut out = std::mem::take(&mut arena.slots[slot]);
     let ctx = Ctx {
@@ -544,6 +547,7 @@ fn compute(
         &mut out,
         &mut arena.gemm_scratch,
         &mut arena.lut_scratch,
+        threads,
     );
     arena.slots[slot] = out;
     res
@@ -558,31 +562,32 @@ fn run_op(
     out: &mut Buf,
     gemm_scratch: &mut PackScratch,
     lut_scratch: &mut LutScratch,
+    threads: usize,
 ) -> Result<()> {
     let inst = &ctx.insts[i];
     let n: usize = inst.shape.dims.iter().product();
     match cfg {
         OpCfg::Unary(f) => {
             if alias_of == Some(0) {
-                ops::unary_inplace(out.f32_mut(n)?, *f);
+                ops::unary_inplace(out.f32_mut(n)?, *f, threads);
             } else {
                 let (_, src) = ctx.operand(i, 0)?;
-                ops::unary_into(src.f32()?, out.f32_mut(n)?, *f);
+                ops::unary_into(src.f32()?, out.f32_mut(n)?, *f, threads);
             }
         }
         OpCfg::BinF32(f) => match alias_of {
             Some(0) => {
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_inplace_lhs(out.f32_mut(n)?, b.f32()?, *f);
+                ops::binary_inplace_lhs(out.f32_mut(n)?, b.f32()?, *f, threads);
             }
             Some(1) => {
                 let (_, a) = ctx.operand(i, 0)?;
-                ops::binary_inplace_rhs(a.f32()?, out.f32_mut(n)?, *f);
+                ops::binary_inplace_rhs(a.f32()?, out.f32_mut(n)?, *f, threads);
             }
             _ => {
                 let (_, a) = ctx.operand(i, 0)?;
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_into(a.f32()?, b.f32()?, out.f32_mut(n)?, *f);
+                ops::binary_into(a.f32()?, b.f32()?, out.f32_mut(n)?, *f, threads);
             }
         },
         OpCfg::BinI32(f) => match alias_of {
@@ -592,7 +597,7 @@ fn run_op(
                     BufRef::I32(v) => v,
                     _ => bail!("expected i32 operand"),
                 };
-                ops::binary_inplace_lhs(out.i32_mut(n)?, b, *f);
+                ops::binary_inplace_lhs(out.i32_mut(n)?, b, *f, threads);
             }
             Some(1) => {
                 let (_, a) = ctx.operand(i, 0)?;
@@ -600,7 +605,7 @@ fn run_op(
                     BufRef::I32(v) => v,
                     _ => bail!("expected i32 operand"),
                 };
-                ops::binary_inplace_rhs(a, out.i32_mut(n)?, *f);
+                ops::binary_inplace_rhs(a, out.i32_mut(n)?, *f, threads);
             }
             _ => {
                 let (_, a) = ctx.operand(i, 0)?;
@@ -609,22 +614,22 @@ fn run_op(
                     (BufRef::I32(a), BufRef::I32(b)) => (a, b),
                     _ => bail!("expected i32 operands"),
                 };
-                ops::binary_into(a, b, out.i32_mut(n)?, *f);
+                ops::binary_into(a, b, out.i32_mut(n)?, *f, threads);
             }
         },
         OpCfg::BinU8(f) => match alias_of {
             Some(0) => {
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_inplace_lhs(out.u8_mut(n)?, b.u8()?, *f);
+                ops::binary_inplace_lhs(out.u8_mut(n)?, b.u8()?, *f, threads);
             }
             Some(1) => {
                 let (_, a) = ctx.operand(i, 0)?;
-                ops::binary_inplace_rhs(a.u8()?, out.u8_mut(n)?, *f);
+                ops::binary_inplace_rhs(a.u8()?, out.u8_mut(n)?, *f, threads);
             }
             _ => {
                 let (_, a) = ctx.operand(i, 0)?;
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_into(a.u8()?, b.u8()?, out.u8_mut(n)?, *f);
+                ops::binary_into(a.u8()?, b.u8()?, out.u8_mut(n)?, *f, threads);
             }
         },
         OpCfg::Compare(dir) => {
@@ -750,6 +755,7 @@ fn run_op(
                 canon,
                 out.f32_mut(n)?,
                 gemm_scratch,
+                threads,
             );
         }
         OpCfg::ClusteredDot { m, k, n: cols, idx, table } => {
@@ -760,7 +766,7 @@ fn run_op(
                 .cache
                 .and_then(|c| c.prepared.get(inst.name.as_str()));
             if let Some(prep) = prepared {
-                clustered::lut_matmul_packed_into(x, *m, prep, o, lut_scratch)?;
+                clustered::lut_matmul_packed_into(x, *m, prep, o, lut_scratch, threads)?;
             } else {
                 let (_, iv) = ctx.view(*idx)?;
                 let (_, tv) = ctx.view(*table)?;
@@ -773,6 +779,7 @@ fn run_op(
                     tv.f32()?,
                     o,
                     lut_scratch,
+                    threads,
                 )?;
             }
         }
@@ -796,7 +803,7 @@ fn run_op(
                 BufRef::F32(s) => {
                     let init = init.f32()?[0];
                     let f = ops::reduce_f32_fn(*op);
-                    ops::reduce_into(s, in_dims, dims, init, f, out.f32_mut(n)?);
+                    ops::reduce_into(s, in_dims, dims, init, f, out.f32_mut(n)?, threads);
                 }
                 BufRef::I32(s) => {
                     let init = match init {
@@ -804,7 +811,7 @@ fn run_op(
                         _ => bail!("reduce: init dtype mismatch"),
                     };
                     let f = ops::reduce_i32_fn(*op);
-                    ops::reduce_into(s, in_dims, dims, init, f, out.i32_mut(n)?);
+                    ops::reduce_into(s, in_dims, dims, init, f, out.i32_mut(n)?, threads);
                 }
                 other => bail!("reduce: dtype {} not supported", other.dtype().name()),
             }
@@ -871,7 +878,8 @@ pub(crate) fn run_staged(
     arena: &mut Arena,
     base: usize,
     inputs: &[&Tensor],
+    threads: usize,
 ) -> Result<Vec<Tensor>> {
     arena.stage_params(plan, base, inputs)?;
-    execute(module, plan, cache, arena)
+    execute(module, plan, cache, arena, threads)
 }

@@ -31,7 +31,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use anyhow::{bail, Result};
 
 use super::eval::{attr_int, attr_list};
-use super::gemm::{configured_threads, DotSpec};
+use super::gemm::DotSpec;
 use crate::clustering::packing::{bits_for_clusters, pack_indices, packed_len, unpack_into};
 use crate::hlo::parser::{HloInstruction, HloModule};
 
@@ -46,8 +46,8 @@ pub fn lut_dot_count() -> usize {
 /// Largest codebook the LUT kernel accepts (the paper's padded table).
 pub const MAX_CLUSTERS: usize = 256;
 
-/// Below this much work (bucket adds + cluster multiplies) the scoped
-/// thread spawn overhead dominates and the kernel runs single-threaded.
+/// Below this much work (bucket adds + cluster multiplies) the pool
+/// fan-out overhead dominates and the kernel runs single-threaded.
 const PAR_MIN_WORK: usize = 1 << 20;
 
 // ---------------------------------------------------------------------
@@ -114,38 +114,44 @@ fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32], scratch
     }
 }
 
-/// Parallelism is over output *rows*: each thread re-unpacks the shared
-/// index columns, which duplicates the (small, usually LLC-resident)
-/// index stream but streams each activation row exactly once. The dual
+/// Parallelism is over output *rows*, fanned out on the persistent
+/// kernel pool: each lane re-unpacks the shared index columns, which
+/// duplicates the (small, usually LLC-resident) index stream but streams
+/// each activation row exactly once — and keeps the ≤256-entry codebook
+/// L1-hot per core, which is the paper's bandwidth argument. The dual
 /// split — over columns — would instead duplicate the activation
 /// stream, which for serving-shaped matmuls (m = batch x tokens >> n)
-/// is the larger of the two.
-fn lut_matmul(t: &LutTask<'_>, m: usize, out: &mut [f32], scratch: Option<&mut LutScratch>) {
+/// is the larger of the two. Each output element is produced by exactly
+/// one lane with an unchanged bucket order, so results are bit-for-bit
+/// identical at every thread count.
+fn lut_matmul(
+    t: &LutTask<'_>,
+    m: usize,
+    out: &mut [f32],
+    scratch: Option<&mut LutScratch>,
+    threads: usize,
+) {
     LUT_DOTS.fetch_add(1, Ordering::Relaxed);
     if m == 0 || t.n == 0 {
         return;
     }
     let work = m * t.n * (t.k + t.cb.len());
-    let nt = configured_threads().min(m);
-    if nt <= 1 || work < PAR_MIN_WORK {
+    if threads <= 1 || work < PAR_MIN_WORK {
         match scratch {
             Some(s) => lut_rows(t, 0, m, out, s),
             None => lut_rows(t, 0, m, out, &mut LutScratch::default()),
         }
         return;
     }
-    let chunk = m.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (ci, out_chunk) in out.chunks_mut(chunk * t.n).enumerate() {
-            let nrows = out_chunk.len() / t.n;
-            s.spawn(move || lut_rows(t, ci * chunk, nrows, out_chunk, &mut LutScratch::default()));
-        }
+    super::pool_exec::par_for_rows(threads, m, t.n, out, |row0, out_chunk| {
+        lut_rows(t, row0, out_chunk.len() / t.n, out_chunk, &mut LutScratch::default());
     });
 }
 
 /// [`lut_matmul_u8`] into a caller-provided output slice (`m * n` long,
 /// fully overwritten) with reusable scratch — the planned-slot entry
-/// point, allocation-free in steady state.
+/// point, allocation-free in steady state. `threads` is the kernel lane
+/// budget for this call.
 #[allow(clippy::too_many_arguments)]
 pub fn lut_matmul_u8_into(
     x: &[f32],
@@ -156,6 +162,7 @@ pub fn lut_matmul_u8_into(
     codebook: &[f32],
     out: &mut [f32],
     scratch: &mut LutScratch,
+    threads: usize,
 ) -> Result<()> {
     if x.len() != m * k {
         bail!("lut_matmul_u8: lhs has {} values, expected {m}x{k}", x.len());
@@ -181,7 +188,7 @@ pub fn lut_matmul_u8_into(
     // clusters actually referenced keeps the per-element multiply count
     // at the real cluster count.
     let task = LutTask { x, k, n, cb: &codebook[..used], src: LutSrc::Rows(idx) };
-    lut_matmul(&task, m, out, Some(scratch));
+    lut_matmul(&task, m, out, Some(scratch), threads);
     Ok(())
 }
 
@@ -194,9 +201,10 @@ pub fn lut_matmul_u8(
     n: usize,
     idx: &[u8],
     codebook: &[f32],
+    threads: usize,
 ) -> Result<Vec<f32>> {
     let mut out = vec![0.0f32; m * n];
-    lut_matmul_u8_into(x, m, k, n, idx, codebook, &mut out, &mut LutScratch::default())?;
+    lut_matmul_u8_into(x, m, k, n, idx, codebook, &mut out, &mut LutScratch::default(), threads)?;
     Ok(out)
 }
 
@@ -316,13 +324,15 @@ pub fn prepare(
 }
 
 /// [`lut_matmul_packed`] into a caller-provided output slice (`m * n`
-/// long, fully overwritten) with reusable scratch.
+/// long, fully overwritten) with reusable scratch. `threads` is the
+/// kernel lane budget for this call.
 pub fn lut_matmul_packed_into(
     x: &[f32],
     m: usize,
     prep: &PreparedClustered,
     out: &mut [f32],
     scratch: &mut LutScratch,
+    threads: usize,
 ) -> Result<()> {
     if x.len() != m * prep.k {
         bail!("lut_matmul_packed: lhs has {} values, expected {m}x{}", x.len(), prep.k);
@@ -341,15 +351,20 @@ pub fn lut_matmul_packed_into(
             bits: prep.bits,
         },
     };
-    lut_matmul(&task, m, out, Some(scratch));
+    lut_matmul(&task, m, out, Some(scratch), threads);
     Ok(())
 }
 
 /// `x[m,k] @ w` where `w` is a [`PreparedClustered`] weight: streams the
 /// packed sub-byte indices, never the f32 weights.
-pub fn lut_matmul_packed(x: &[f32], m: usize, prep: &PreparedClustered) -> Result<Vec<f32>> {
+pub fn lut_matmul_packed(
+    x: &[f32],
+    m: usize,
+    prep: &PreparedClustered,
+    threads: usize,
+) -> Result<Vec<f32>> {
     let mut out = vec![0.0f32; m * prep.n];
-    lut_matmul_packed_into(x, m, prep, &mut out, &mut LutScratch::default())?;
+    lut_matmul_packed_into(x, m, prep, &mut out, &mut LutScratch::default(), threads)?;
     Ok(out)
 }
 
@@ -538,7 +553,7 @@ mod tests {
         let (m, k, n, c) = (5, 17, 9, 16);
         let (x, idx, cb) = fixture(m, k, n, c);
         let want = reference(&x, m, k, n, &idx, &cb);
-        let got = lut_matmul_u8(&x, m, k, n, &idx, &cb).unwrap();
+        let got = lut_matmul_u8(&x, m, k, n, &idx, &cb, 2).unwrap();
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
         }
@@ -550,8 +565,8 @@ mod tests {
         let (x, idx, cb) = fixture(m, k, n, c);
         let prep = prepare(&idx, k, n, &cb, Some(c)).unwrap();
         assert_eq!(prep.bits(), 6);
-        let a = lut_matmul_u8(&x, m, k, n, &idx, &cb).unwrap();
-        let b = lut_matmul_packed(&x, m, &prep).unwrap();
+        let a = lut_matmul_u8(&x, m, k, n, &idx, &cb, 1).unwrap();
+        let b = lut_matmul_packed(&x, m, &prep, 4).unwrap();
         // Identical bucket order -> bit-for-bit equal.
         assert_eq!(a, b);
     }
@@ -570,7 +585,7 @@ mod tests {
     fn rejects_out_of_range_indices() {
         let cb = vec![0.0f32; 4];
         let idx = vec![7u8; 4];
-        assert!(lut_matmul_u8(&[0.0; 2], 1, 2, 2, &idx, &cb).is_err());
+        assert!(lut_matmul_u8(&[0.0; 2], 1, 2, 2, &idx, &cb, 1).is_err());
         assert!(prepare(&idx, 2, 2, &cb, None).is_err());
     }
 

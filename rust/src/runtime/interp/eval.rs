@@ -119,7 +119,7 @@ impl Value<'_> {
 /// evaluate through a plan).
 #[cfg(test)]
 pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-    evaluate_planned(module, inputs, &ExecPlan::default(), None)
+    evaluate_planned(module, inputs, &ExecPlan::default(), None, 1)
 }
 
 /// The classic per-instruction-buffer evaluator with the module's own
@@ -129,7 +129,7 @@ pub(crate) fn evaluate(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Ten
 pub fn evaluate_unplanned(module: &HloModule, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
     preflight(module)?;
     let plan = clustered::plan(module);
-    evaluate_planned(module, inputs, &plan, None)
+    evaluate_planned(module, inputs, &plan, None, crate::runtime::ThreadBudget::from_env().get())
 }
 
 /// Evaluate with an execution plan (clustered `dot`s on the LUT kernel,
@@ -140,8 +140,9 @@ pub(crate) fn evaluate_planned<'a>(
     inputs: &[&'a Tensor],
     plan: &ExecPlan,
     cache: Option<&'a WeightCache>,
+    threads: usize,
 ) -> Result<Vec<Tensor>> {
-    evaluate_classic(module, inputs, plan, cache, None)
+    evaluate_classic(module, inputs, plan, cache, None, threads)
 }
 
 /// [`evaluate_planned`] with an optional pre-materialized byte-form view
@@ -153,6 +154,7 @@ pub(crate) fn evaluate_classic<'a>(
     plan: &ExecPlan,
     cache: Option<&'a WeightCache>,
     materialized: Option<&'a HashMap<String, Tensor>>,
+    threads: usize,
 ) -> Result<Vec<Tensor>> {
     let entry = module.entry()?;
     let params = module.parameters()?;
@@ -216,9 +218,9 @@ pub(crate) fn evaluate_classic<'a>(
             continue;
         }
         let result = if let Some(cd) = plan.clustered.get(&inst.name) {
-            eval_clustered_dot(inst, cd, &env, cache)
+            eval_clustered_dot(inst, cd, &env, cache, threads)
         } else {
-            eval_instruction(module, inst, &env)
+            eval_instruction(module, inst, &env, threads)
         };
         let value = result
             .with_context(|| format!("evaluating %{} = {}", inst.name, inst.opcode))?;
@@ -247,6 +249,7 @@ fn eval_clustered_dot<'a>(
     cd: &ClusteredDotPlan,
     env: &HashMap<&str, Value<'a>>,
     cache: Option<&WeightCache>,
+    threads: usize,
 ) -> Result<Value<'a>> {
     let lhs = lookup(env, inst, 0)?.tensor()?;
     let x = lhs.as_f32()?;
@@ -260,7 +263,7 @@ fn eval_clustered_dot<'a>(
     }
     let m = lhs.elems() / cd.k;
     let out = if let Some(prep) = cache.and_then(|c| c.prepared.get(&inst.name)) {
-        clustered::lut_matmul_packed(&x, m, prep)?
+        clustered::lut_matmul_packed(&x, m, prep, threads)?
     } else {
         let idx = env
             .get(cd.idx.as_str())
@@ -270,7 +273,7 @@ fn eval_clustered_dot<'a>(
             .get(cd.table.as_str())
             .ok_or_else(|| anyhow!("clustered dot %{}: table %{} not evaluated", inst.name, cd.table))?
             .tensor()?;
-        clustered::lut_matmul_u8(&x, m, cd.k, cd.n, idx.as_u8()?, &table.as_f32()?)?
+        clustered::lut_matmul_u8(&x, m, cd.k, cd.n, idx.as_u8()?, &table.as_f32()?, threads)?
     };
     Ok(Value::Owned(Tensor::from_f32(inst.shape.dims.clone(), &out)?))
 }
@@ -366,6 +369,7 @@ pub(crate) fn build_weight_cache(
     fixed: &[Tensor],
     plan: &ExecPlan,
     n_clusters: Option<usize>,
+    threads: usize,
 ) -> Result<WeightCache> {
     let entry = module.entry()?;
     let params = module.parameters()?;
@@ -396,7 +400,7 @@ pub(crate) fn build_weight_cache(
         if !inst.operands.iter().all(|o| fixed_only.contains(o.as_str())) {
             continue;
         }
-        let value = eval_instruction(module, inst, &env).with_context(|| {
+        let value = eval_instruction(module, inst, &env, threads).with_context(|| {
             format!("precomputing weight expression %{} = {}", inst.name, inst.opcode)
         })?;
         check_declared_shape(inst, &value)?;
@@ -575,6 +579,7 @@ fn eval_instruction<'a>(
     module: &HloModule,
     inst: &HloInstruction,
     env: &HashMap<&str, Value<'a>>,
+    threads: usize,
 ) -> Result<Value<'a>> {
     let value = |i: usize| lookup(env, inst, i);
     let operand = |i: usize| lookup(env, inst, i).and_then(Value::tensor);
@@ -647,7 +652,7 @@ fn eval_instruction<'a>(
             }
             ops::concatenate(&parts, dim)?
         }
-        "dot" => ops::dot(operand(0)?, operand(1)?, attrs)?,
+        "dot" => ops::dot(operand(0)?, operand(1)?, attrs, threads)?,
         "convolution" => ops::convolution(operand(0)?, operand(1)?, attrs)?,
         "reduce" => {
             if inst.operands.len() != 2 {

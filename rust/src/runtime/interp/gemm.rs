@@ -4,8 +4,10 @@
 //! — lhs packed to `[B, M, K]` (batch dims, then lhs free dims, then
 //! contracting dims), rhs to `[B, K, N]` — and executed by a
 //! cache-blocked, register-tiled f32 microkernel parallelized across the
-//! output rows with `std::thread::scope` (std-only; thread count from the
-//! `CLUSTERFORMER_THREADS` env var, default = available cores).
+//! output rows on the persistent kernel pool ([`super::pool_exec`]; no
+//! per-call thread spawn). The lane count is an explicit `threads`
+//! argument — executors carry a `runtime::ThreadBudget` and pass it per
+//! call, so serving workers sharing a machine stay within their slice.
 //!
 //! The canonical output layout `[B, M, N]` row-major is exactly the HLO
 //! output layout (batch dims, lhs free dims, rhs free dims), so the
@@ -145,7 +147,9 @@ pub struct PackScratch {
 
 /// DotGeneral through the blocked GEMM kernel, writing into a
 /// caller-provided output slice (`out.len()` must equal the product of
-/// `canon.out_dims`; it is fully overwritten).
+/// `canon.out_dims`; it is fully overwritten). `threads` is the kernel
+/// lane budget for this call.
+#[allow(clippy::too_many_arguments)]
 pub fn dot_general_into(
     lhs: &[f32],
     ld: &[usize],
@@ -154,6 +158,7 @@ pub fn dot_general_into(
     canon: &Canon,
     out: &mut [f32],
     scratch: &mut PackScratch,
+    threads: usize,
 ) {
     if out.is_empty() {
         return;
@@ -171,11 +176,17 @@ pub fn dot_general_into(
         &scratch.w
     };
     out.fill(0.0);
-    gemm(canon.b, canon.m, canon.k, canon.n, a, w, out);
+    gemm(canon.b, canon.m, canon.k, canon.n, a, w, out, threads);
 }
 
-/// General `dot` (XLA DotGeneral) through the blocked GEMM kernel.
-pub fn dot_general(lhs: &Tensor, rhs: &Tensor, spec: &DotSpec) -> Result<Tensor> {
+/// General `dot` (XLA DotGeneral) through the blocked GEMM kernel, with
+/// an explicit kernel lane budget.
+pub fn dot_general(
+    lhs: &Tensor,
+    rhs: &Tensor,
+    spec: &DotSpec,
+    threads: usize,
+) -> Result<Tensor> {
     let canon = canonicalize(lhs.shape(), rhs.shape(), spec)?;
     let out_elems: usize = canon.out_dims.iter().product();
     if out_elems == 0 {
@@ -193,30 +204,13 @@ pub fn dot_general(lhs: &Tensor, rhs: &Tensor, spec: &DotSpec) -> Result<Tensor>
         &canon,
         &mut out,
         &mut scratch,
+        threads,
     );
     Tensor::from_f32(canon.out_dims, &out)
 }
 
-/// Thread count for kernel parallelism: `CLUSTERFORMER_THREADS` if set
-/// (>= 1), else the number of available cores. Read once and cached —
-/// the CLI `--threads` knob sets the env var at startup, before any
-/// kernel runs, and this sits on the per-`dot` hot path.
-pub fn configured_threads() -> usize {
-    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *THREADS.get_or_init(|| {
-        if let Ok(s) = std::env::var("CLUSTERFORMER_THREADS") {
-            if let Ok(n) = s.trim().parse::<usize>() {
-                return n.max(1);
-            }
-            crate::log_warn!("CLUSTERFORMER_THREADS={s:?} is not a number; using 1 thread");
-            return 1;
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    })
-}
-
-/// Below this many flops the scoped-thread spawn overhead dominates and
-/// the kernel runs single-threaded.
+/// Below this many flops the fan-out/latch overhead dominates and the
+/// kernel runs single-threaded regardless of budget.
 const PAR_MIN_FLOPS: usize = 1 << 20;
 
 /// k-block size: one lhs block row (`MR x KC` f32) plus the streamed rhs
@@ -226,16 +220,32 @@ const KC: usize = 256;
 /// Register tile height: rhs rows loaded once per MR output rows.
 const MR: usize = 4;
 
+/// Flattened problem sizes handed to the row microkernel.
+#[doc(hidden)]
 #[derive(Clone, Copy)]
-struct Tile {
-    m: usize,
-    k: usize,
-    n: usize,
+pub struct Tile {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
 }
 
 /// Batched GEMM: `out[b,m,n] += a[b,m,k] * w[b,k,n]`, all row-major.
 /// `out` must be zero-initialized (or hold the accumulation seed).
-pub fn gemm(b: usize, m: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &mut [f32]) {
+/// Fans out across output rows on the persistent kernel pool when
+/// `threads > 1` and the problem clears [`PAR_MIN_FLOPS`]; each row's
+/// accumulation order is unchanged, so the result is bit-for-bit
+/// identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) {
     debug_assert_eq!(a.len(), b * m * k);
     debug_assert_eq!(w.len(), b * k * n);
     debug_assert_eq!(out.len(), b * m * n);
@@ -245,23 +255,23 @@ pub fn gemm(b: usize, m: usize, k: usize, n: usize, a: &[f32], w: &[f32], out: &
     }
     let tile = Tile { m, k, n };
     let flops = 2usize.saturating_mul(rows).saturating_mul(n).saturating_mul(k);
-    let nt = configured_threads().min(rows);
-    if nt <= 1 || flops < PAR_MIN_FLOPS {
+    if threads <= 1 || flops < PAR_MIN_FLOPS {
         gemm_rows(0, rows, tile, a, w, out);
         return;
     }
-    let chunk = rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (ci, out_chunk) in out.chunks_mut(chunk * n).enumerate() {
-            let nrows = out_chunk.len() / n;
-            s.spawn(move || gemm_rows(ci * chunk, nrows, tile, a, w, out_chunk));
-        }
+    super::pool_exec::par_for_rows(threads, rows, n, out, |row0, out_chunk| {
+        gemm_rows(row0, out_chunk.len() / n, tile, a, w, out_chunk);
     });
 }
 
 /// Compute output rows `[row0, row0 + nrows)` (global row index = batch
 /// index * m + lhs row). `out` covers exactly those rows.
-fn gemm_rows(row0: usize, nrows: usize, t: Tile, a: &[f32], w: &[f32], out: &mut [f32]) {
+///
+/// Public (but hidden) so `benches/pool_scaling.rs` can drive the exact
+/// same microkernel under the retired scoped-spawn strategy as the
+/// baseline; nothing in the library calls it with `std::thread` anymore.
+#[doc(hidden)]
+pub fn gemm_rows(row0: usize, nrows: usize, t: Tile, a: &[f32], w: &[f32], out: &mut [f32]) {
     let (m, k, n) = (t.m, t.k, t.n);
     let mut k0 = 0usize;
     while k0 < k {
@@ -404,7 +414,7 @@ mod tests {
         let a = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
         let b =
             Tensor::from_f32(vec![3, 2], &[7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
-        let out = dot_general(&a, &b, &spec_2d()).unwrap();
+        let out = dot_general(&a, &b, &spec_2d(), 1).unwrap();
         assert_eq!(out.shape(), &[2, 2]);
         assert_eq!(out.as_f32().unwrap(), vec![58.0, 64.0, 139.0, 154.0]);
         let naive = dot_general_naive(&a, &b, &spec_2d()).unwrap();
@@ -424,7 +434,7 @@ mod tests {
         let vals: Vec<f32> = (0..2 * 3 * 4).map(|i| (i as f32 * 0.7).sin()).collect();
         let q = Tensor::from_f32(vec![2, 3, 4], &vals).unwrap();
         let kt = Tensor::from_f32(vec![2, 3, 4], &vals.iter().map(|v| v * 0.5).collect::<Vec<_>>()).unwrap();
-        let fast = dot_general(&q, &kt, &spec).unwrap();
+        let fast = dot_general(&q, &kt, &spec, 2).unwrap();
         let naive = dot_general_naive(&q, &kt, &spec).unwrap();
         assert_eq!(fast.shape(), &[2, 3, 3]);
         assert_eq!(fast, naive);
@@ -435,7 +445,7 @@ mod tests {
         let a = Tensor::from_f32(vec![2], &[1.0, 2.0]).unwrap();
         let b = Tensor::from_f32(vec![3], &[3.0, 4.0, 5.0]).unwrap();
         let spec = DotSpec::default();
-        let out = dot_general(&a, &b, &spec).unwrap();
+        let out = dot_general(&a, &b, &spec, 1).unwrap();
         assert_eq!(out.shape(), &[2, 3]);
         assert_eq!(out.as_f32().unwrap(), vec![3.0, 4.0, 5.0, 6.0, 8.0, 10.0]);
         assert_eq!(out, dot_general_naive(&a, &b, &spec).unwrap());
@@ -445,7 +455,7 @@ mod tests {
     fn zero_size_contracting_yields_zeros() {
         let a = Tensor::from_f32(vec![2, 0], &[]).unwrap();
         let b = Tensor::from_f32(vec![0, 3], &[]).unwrap();
-        let out = dot_general(&a, &b, &spec_2d()).unwrap();
+        let out = dot_general(&a, &b, &spec_2d(), 1).unwrap();
         assert_eq!(out.shape(), &[2, 3]);
         assert_eq!(out.as_f32().unwrap(), vec![0.0; 6]);
     }
@@ -454,7 +464,7 @@ mod tests {
     fn size_mismatch_rejected() {
         let a = Tensor::from_f32(vec![2, 3], &[0.0; 6]).unwrap();
         let b = Tensor::from_f32(vec![2, 2], &[0.0; 4]).unwrap();
-        assert!(dot_general(&a, &b, &spec_2d()).is_err());
+        assert!(dot_general(&a, &b, &spec_2d(), 1).is_err());
     }
 
     #[test]
@@ -468,9 +478,24 @@ mod tests {
     }
 
     #[test]
-    fn threads_env_parsing() {
-        // Only asserts the fallback path contract; the env-var path is
-        // covered end-to-end by the bench (process-level knob).
-        assert!(configured_threads() >= 1);
+    fn budget_sweep_is_bit_identical() {
+        // The same problem at budgets 1/2/4 (and an oversubscribed 16)
+        // must produce the same bits — each output row's accumulation
+        // order never depends on the fan-out.
+        // 2*96*96*80 flops > PAR_MIN_FLOPS, so budgets > 1 really fan out.
+        let (m, k, n) = (96usize, 80usize, 96usize);
+        let spec = DotSpec {
+            lhs_contracting: vec![1],
+            rhs_contracting: vec![0],
+            ..Default::default()
+        };
+        let av: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.31).sin()).collect();
+        let bv: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.17).cos()).collect();
+        let a = Tensor::from_f32(vec![m, k], &av).unwrap();
+        let b = Tensor::from_f32(vec![k, n], &bv).unwrap();
+        let reference = dot_general(&a, &b, &spec, 1).unwrap();
+        for threads in [2usize, 4, 16] {
+            assert_eq!(dot_general(&a, &b, &spec, threads).unwrap(), reference);
+        }
     }
 }

@@ -12,8 +12,10 @@
 //! a real kernel subsystem; PR 3 does the same for memory:
 //!
 //! * [`gemm`] — `dot` canonicalized to batched row-major GEMM and run
-//!   through a cache-blocked, register-tiled, `std::thread::scope`-
-//!   parallel f32 microkernel (`CLUSTERFORMER_THREADS` knob);
+//!   through a cache-blocked, register-tiled f32 microkernel fanned out
+//!   on the persistent kernel pool ([`pool_exec`]) under an explicit
+//!   per-executor `runtime::ThreadBudget` (`CLUSTERFORMER_THREADS` /
+//!   `--threads` top-level knob, divided across serving workers);
 //! * [`clustered`] — clustered weights execute `dot` directly on packed
 //!   cluster indices + codebook via the paper's LUT accumulation, so
 //!   compressed weights are never dematerialized to f32;
@@ -40,6 +42,7 @@ mod plan;
 pub mod clustered;
 pub mod gemm;
 pub mod pool;
+pub mod pool_exec;
 pub mod stats;
 
 use std::path::Path;
@@ -47,7 +50,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::{Backend, Executor, ResidentExecutor};
+use super::{Backend, Executor, ResidentExecutor, ThreadBudget};
 use crate::clustering::ClusteredTensors;
 use crate::hlo::HloModule;
 use crate::tensor::Tensor;
@@ -55,8 +58,21 @@ use crate::tensor::Tensor;
 pub use eval::{evaluate_unplanned, WeightCache};
 pub use plan::MemoryPlan;
 
-/// The interpreter backend (stateless factory).
-pub struct InterpBackend;
+/// The interpreter backend: a factory carrying the kernel
+/// [`ThreadBudget`] every executor it loads inherits. Construct with
+/// [`InterpBackend::with_threads`] (the serving coordinator hands each
+/// variant worker its share of the machine) or [`Default`] (budget from
+/// `CLUSTERFORMER_THREADS`, `0`/unset = all cores).
+#[derive(Default)]
+pub struct InterpBackend {
+    threads: ThreadBudget,
+}
+
+impl InterpBackend {
+    pub fn with_threads(threads: ThreadBudget) -> InterpBackend {
+        InterpBackend { threads }
+    }
+}
 
 impl Backend for InterpBackend {
     fn name(&self) -> &'static str {
@@ -68,7 +84,7 @@ impl Backend for InterpBackend {
     /// plan pass that rewires clustered matmuls onto the LUT kernel, and
     /// the memory plan that assigns every instruction a reusable slot.
     fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>> {
-        Ok(Box::new(InterpExecutor::load(path)?))
+        Ok(Box::new(InterpExecutor::load(path)?.with_threads(self.threads)))
     }
 }
 
@@ -109,6 +125,8 @@ pub struct InterpExecutor {
     plan: Arc<clustered::ExecPlan>,
     n_params: usize,
     name: String,
+    /// Kernel lane budget every execution of this module uses.
+    threads: ThreadBudget,
     /// Cache-less memory plan for the full-input path, built lazily on
     /// first use: residents re-plan against their weight cache anyway,
     /// so eagerly planning at load would waste a pass and a zeroed
@@ -139,8 +157,21 @@ impl InterpExecutor {
             plan,
             n_params,
             name,
+            threads: ThreadBudget::from_env(),
             planned: std::sync::OnceLock::new(),
         })
+    }
+
+    /// Replace the kernel lane budget (builder style; executors loaded
+    /// through a [`Backend`] inherit the backend's budget).
+    pub fn with_threads(mut self, threads: ThreadBudget) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The kernel lane budget this executor runs with.
+    pub fn thread_budget(&self) -> ThreadBudget {
+        self.threads
     }
 
     fn planned_state(&self) -> &Option<PlannedState> {
@@ -176,6 +207,7 @@ impl InterpExecutor {
             &fixed,
             &self.plan,
             clustered.as_ref().map(|c| c.n_clusters),
+            self.threads.get(),
         )?;
         // Content-addressed interning: residents at other batch sizes
         // with identical weight state share this allocation.
@@ -215,6 +247,7 @@ impl InterpExecutor {
             name: self.name.clone(),
             n_dynamic,
             fixed,
+            threads: self.threads,
             planned,
             fallback_values,
         })
@@ -238,9 +271,9 @@ impl Executor for InterpExecutor {
         let refs: Vec<&Tensor> = inputs.iter().collect();
         let outputs = if let Some(ps) = self.planned_state() {
             let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
-            arena::run_staged(&self.module, &ps.mem, None, &mut arena, 0, &refs)?
+            arena::run_staged(&self.module, &ps.mem, None, &mut arena, 0, &refs, self.threads.get())?
         } else {
-            eval::evaluate_planned(&self.module, &refs, &self.plan, None)?
+            eval::evaluate_planned(&self.module, &refs, &self.plan, None, self.threads.get())?
         };
         crate::runtime::single_replica(vec![outputs], &self.name)
     }
@@ -280,6 +313,8 @@ pub struct InterpResident {
     name: String,
     n_dynamic: usize,
     fixed: Arc<Vec<Tensor>>,
+    /// Kernel lane budget (inherited from the loading executor).
+    threads: ThreadBudget,
     planned: Option<PlannedState>,
     /// Byte-form cache values, present only on the classic fallback path.
     fallback_values: Option<std::collections::HashMap<String, Tensor>>,
@@ -315,7 +350,15 @@ impl ResidentExecutor for InterpResident {
         let outputs = if let Some(ps) = &self.planned {
             let refs: Vec<&Tensor> = dynamic.iter().collect();
             let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
-            arena::run_staged(&self.module, &ps.mem, Some(&self.cache), &mut arena, 0, &refs)?
+            arena::run_staged(
+                &self.module,
+                &ps.mem,
+                Some(&self.cache),
+                &mut arena,
+                0,
+                &refs,
+                self.threads.get(),
+            )?
         } else {
             let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
             eval::evaluate_classic(
@@ -324,6 +367,7 @@ impl ResidentExecutor for InterpResident {
                 &self.plan,
                 Some(&self.cache),
                 self.fallback_values.as_ref(),
+                self.threads.get(),
             )?
         };
         crate::runtime::single_replica(vec![outputs], &self.name)

@@ -585,9 +585,9 @@ pub(crate) fn concatenate(parts: &[&Tensor], dim: usize) -> Result<Tensor> {
 /// backend. Canonicalized to a batched GEMM and executed by the blocked
 /// microkernel in [`super::gemm`]; the old index-walk survives as
 /// [`super::gemm::dot_general_naive`] (reference + bench baseline).
-pub(crate) fn dot(lhs: &Tensor, rhs: &Tensor, attrs: &str) -> Result<Tensor> {
+pub(crate) fn dot(lhs: &Tensor, rhs: &Tensor, attrs: &str, threads: usize) -> Result<Tensor> {
     let spec = super::gemm::DotSpec::from_attrs(attrs);
-    super::gemm::dot_general(lhs, rhs, &spec)
+    super::gemm::dot_general(lhs, rhs, &spec, threads)
 }
 
 /// Positions of the special and spatial dims within one side of a
@@ -1153,23 +1153,60 @@ pub(crate) fn gather_into<T: Copy>(
 // O(rank) odometer scratch. The classic Tensor kernels above stay the
 // bit-for-bit reference — `tests/plan_props.rs` checks planned execution
 // against them on randomized graphs.
+//
+// The heavyweight elementwise and reduce kernels take an explicit
+// `threads` lane budget and fan out over contiguous output ranges on the
+// persistent kernel pool (`super::pool_exec`). Every element is written
+// by exactly one lane with an unchanged per-element evaluation order, so
+// results are bit-for-bit identical at any budget.
 // ---------------------------------------------------------------------
 
-pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32) {
-    for (o, &x) in out.iter_mut().zip(src) {
-        *o = f(x);
+/// Below this many output elements an elementwise fan-out costs more
+/// than it saves (these kernels are memory-bound).
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32, threads: usize) {
+    if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+        for (o, &x) in out.iter_mut().zip(src) {
+            *o = f(x);
+        }
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, out.len(), 1, out, |lo, chunk| {
+        for (o, &x) in chunk.iter_mut().zip(&src[lo..lo + chunk.len()]) {
+            *o = f(x);
+        }
+    });
+}
+
+pub(crate) fn unary_inplace(buf: &mut [f32], f: fn(f32) -> f32, threads: usize) {
+    if threads <= 1 || buf.len() < PAR_MIN_ELEMS {
+        for x in buf.iter_mut() {
+            *x = f(*x);
+        }
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, buf.len(), 1, buf, |_lo, chunk| {
+        for x in chunk.iter_mut() {
+            *x = f(*x);
+        }
+    });
+}
+
+/// The operand range matching output elements `[lo, lo + len)`: the
+/// subslice for a full-size operand, the operand itself when it is a
+/// broadcast scalar (the serial kernels re-dispatch on length; a 1-long
+/// chunk against a scalar takes the equal-length path, which computes the
+/// same element).
+fn op_range<T>(v: &[T], lo: usize, len: usize) -> &[T] {
+    if v.len() == 1 {
+        v
+    } else {
+        &v[lo..lo + len]
     }
 }
 
-pub(crate) fn unary_inplace(buf: &mut [f32], f: fn(f32) -> f32) {
-    for x in buf.iter_mut() {
-        *x = f(*x);
-    }
-}
-
-/// Same-shape binary op with a scalar allowed on either side (the exact
-/// semantics of [`binary`]'s `zip_map`).
-pub(crate) fn binary_into<T: Copy>(a: &[T], b: &[T], out: &mut [T], f: fn(T, T) -> T) {
+fn binary_into_serial<T: Copy>(a: &[T], b: &[T], out: &mut [T], f: fn(T, T) -> T) {
     if a.len() == b.len() {
         for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
             *o = f(x, y);
@@ -1187,9 +1224,25 @@ pub(crate) fn binary_into<T: Copy>(a: &[T], b: &[T], out: &mut [T], f: fn(T, T) 
     }
 }
 
-/// `acc = f(acc, b)` in place; `b` may be a scalar. `acc` must be the
-/// full-size operand (the planner only aliases the non-scalar side).
-pub(crate) fn binary_inplace_lhs<T: Copy>(acc: &mut [T], b: &[T], f: fn(T, T) -> T) {
+/// Same-shape binary op with a scalar allowed on either side (the exact
+/// semantics of [`binary`]'s `zip_map`).
+pub(crate) fn binary_into<T: Copy + Send + Sync>(
+    a: &[T],
+    b: &[T],
+    out: &mut [T],
+    f: fn(T, T) -> T,
+    threads: usize,
+) {
+    if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+        binary_into_serial(a, b, out, f);
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, out.len(), 1, out, |lo, chunk| {
+        binary_into_serial(op_range(a, lo, chunk.len()), op_range(b, lo, chunk.len()), chunk, f);
+    });
+}
+
+fn binary_inplace_lhs_serial<T: Copy>(acc: &mut [T], b: &[T], f: fn(T, T) -> T) {
     if b.len() == 1 {
         let y = b[0];
         for x in acc.iter_mut() {
@@ -1202,8 +1255,24 @@ pub(crate) fn binary_inplace_lhs<T: Copy>(acc: &mut [T], b: &[T], f: fn(T, T) ->
     }
 }
 
-/// `acc = f(a, acc)` in place; `a` may be a scalar.
-pub(crate) fn binary_inplace_rhs<T: Copy>(a: &[T], acc: &mut [T], f: fn(T, T) -> T) {
+/// `acc = f(acc, b)` in place; `b` may be a scalar. `acc` must be the
+/// full-size operand (the planner only aliases the non-scalar side).
+pub(crate) fn binary_inplace_lhs<T: Copy + Send + Sync>(
+    acc: &mut [T],
+    b: &[T],
+    f: fn(T, T) -> T,
+    threads: usize,
+) {
+    if threads <= 1 || acc.len() < PAR_MIN_ELEMS {
+        binary_inplace_lhs_serial(acc, b, f);
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, acc.len(), 1, acc, |lo, chunk| {
+        binary_inplace_lhs_serial(chunk, op_range(b, lo, chunk.len()), f);
+    });
+}
+
+fn binary_inplace_rhs_serial<T: Copy>(a: &[T], acc: &mut [T], f: fn(T, T) -> T) {
     if a.len() == 1 {
         let x = a[0];
         for y in acc.iter_mut() {
@@ -1214,6 +1283,22 @@ pub(crate) fn binary_inplace_rhs<T: Copy>(a: &[T], acc: &mut [T], f: fn(T, T) ->
             *y = f(x, *y);
         }
     }
+}
+
+/// `acc = f(a, acc)` in place; `a` may be a scalar.
+pub(crate) fn binary_inplace_rhs<T: Copy + Send + Sync>(
+    a: &[T],
+    acc: &mut [T],
+    f: fn(T, T) -> T,
+    threads: usize,
+) {
+    if threads <= 1 || acc.len() < PAR_MIN_ELEMS {
+        binary_inplace_rhs_serial(a, acc, f);
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, acc.len(), 1, acc, |lo, chunk| {
+        binary_inplace_rhs_serial(op_range(a, lo, chunk.len()), chunk, f);
+    });
 }
 
 pub(crate) fn compare_into<T: Copy + PartialOrd>(
@@ -1347,9 +1432,9 @@ pub(crate) fn concat_into<T: Copy>(
     }
 }
 
-/// Typed [`reduce`] over `dims` with a scalar `init` (the init and the
-/// accumulation order match the classic kernel exactly).
-pub(crate) fn reduce_into<T: Copy>(
+/// Serial typed reduce walk (also the per-block worker of the parallel
+/// path — a dim-0 block is just a smaller instance of the same walk).
+fn reduce_into_serial<T: Copy>(
     src: &[T],
     in_dims: &[usize],
     dims: &[usize],
@@ -1377,6 +1462,54 @@ pub(crate) fn reduce_into<T: Copy>(
             break;
         }
     }
+}
+
+/// Typed [`reduce`] over `dims` with a scalar `init` (the init and the
+/// accumulation order match the classic kernel exactly).
+///
+/// When dim 0 is kept, the input splits into `in_dims[0]` independent
+/// outer blocks — each maps to a contiguous output block and its flat
+/// accumulation order within the block equals the global order — so the
+/// kernel fans those blocks out on the pool bit-identically. Reduces
+/// *over* dim 0 stay serial (their per-element accumulation interleaves
+/// across the whole input).
+pub(crate) fn reduce_into<T: Copy + Send + Sync>(
+    src: &[T],
+    in_dims: &[usize],
+    dims: &[usize],
+    init: T,
+    f: fn(T, T) -> T,
+    out: &mut [T],
+    threads: usize,
+) {
+    let outer = in_dims.first().copied().unwrap_or(0);
+    if threads <= 1
+        || src.len() < PAR_MIN_ELEMS
+        || dims.contains(&0)
+        || outer < 2
+        || src.is_empty()
+        || out.is_empty()
+    {
+        reduce_into_serial(src, in_dims, dims, init, f, out);
+        return;
+    }
+    let src_block: usize = in_dims[1..].iter().product();
+    let inner_dims = &in_dims[1..];
+    let inner_reduce: Vec<usize> = dims.iter().map(|&d| d - 1).collect();
+    let out_block = out.len() / outer;
+    super::pool_exec::par_for_rows(threads, outer, out_block, out, |row0, out_chunk| {
+        let nrows = out_chunk.len() / out_block.max(1);
+        for r in 0..nrows {
+            reduce_into_serial(
+                &src[(row0 + r) * src_block..(row0 + r + 1) * src_block],
+                inner_dims,
+                &inner_reduce,
+                init,
+                f,
+                &mut out_chunk[r * out_block..(r + 1) * out_block],
+            );
+        }
+    });
 }
 
 #[cfg(test)]
@@ -1504,25 +1637,71 @@ mod tests {
         let want = binary(&a, &b, "multiply").unwrap().as_f32().unwrap();
         let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
         let mut out = vec![0.0f32; 4];
-        binary_into(&av, &bv, &mut out, binary_f32_fn("multiply").unwrap());
+        binary_into(&av, &bv, &mut out, binary_f32_fn("multiply").unwrap(), 1);
         assert_eq!(out, want);
         let mut acc = av.clone();
-        binary_inplace_lhs(&mut acc, &bv, binary_f32_fn("multiply").unwrap());
+        binary_inplace_lhs(&mut acc, &bv, binary_f32_fn("multiply").unwrap(), 1);
         assert_eq!(acc, want);
         let mut acc = bv.clone();
-        binary_inplace_rhs(&av, &mut acc, binary_f32_fn("multiply").unwrap());
+        binary_inplace_rhs(&av, &mut acc, binary_f32_fn("multiply").unwrap(), 1);
         assert_eq!(acc, want);
         // scalar expansion on either side
         let s = [10.0f32];
         let mut out = vec![0.0f32; 4];
-        binary_into(&s, &bv, &mut out, binary_f32_fn("subtract").unwrap());
+        binary_into(&s, &bv, &mut out, binary_f32_fn("subtract").unwrap(), 1);
         assert_eq!(out, vec![9.5, 8.0, 11.0, 6.0]);
         let mut acc = bv.clone();
-        binary_inplace_rhs(&s, &mut acc, binary_f32_fn("subtract").unwrap());
+        binary_inplace_rhs(&s, &mut acc, binary_f32_fn("subtract").unwrap(), 1);
         assert_eq!(acc, vec![9.5, 8.0, 11.0, 6.0]);
         let mut u = av.clone();
-        unary_inplace(&mut u, unary_fn("negate").unwrap());
+        unary_inplace(&mut u, unary_fn("negate").unwrap(), 1);
         assert_eq!(u, vec![-1.0, 2.0, -3.0, 4.0]);
+    }
+
+    #[test]
+    fn parallel_into_kernels_are_bit_identical() {
+        // Buffers above PAR_MIN_ELEMS so budgets > 1 really fan out; the
+        // pooled result must equal the serial walk bit-for-bit.
+        let n = super::PAR_MIN_ELEMS * 2 + 37;
+        let av: Vec<f32> = (0..n).map(|i| (i as f32 * 0.013).sin() * 2.0).collect();
+        let bv: Vec<f32> = (0..n).map(|i| (i as f32 * 0.029).cos() + 0.5).collect();
+        let f = binary_f32_fn("multiply").unwrap();
+        let g = unary_fn("exponential").unwrap();
+
+        let mut want = vec![0.0f32; n];
+        binary_into(&av, &bv, &mut want, f, 1);
+        let mut want_u = vec![0.0f32; n];
+        unary_into(&av, &mut want_u, g, 1);
+        let mut want_r = vec![0.0f32; 64];
+        reduce_into(&av, &[64, n / 64], &[1], 0.0f32, |x, y| x + y, &mut want_r, 1);
+
+        for threads in [2usize, 4] {
+            let mut out = vec![0.0f32; n];
+            binary_into(&av, &bv, &mut out, f, threads);
+            assert_eq!(out, want, "binary_into t={threads}");
+            // scalar side
+            let s = [1.25f32];
+            let mut a1 = vec![0.0f32; n];
+            let mut a2 = vec![0.0f32; n];
+            binary_into(&s, &bv, &mut a1, f, 1);
+            binary_into(&s, &bv, &mut a2, f, threads);
+            assert_eq!(a1, a2, "scalar binary_into t={threads}");
+            let mut acc = av.clone();
+            binary_inplace_lhs(&mut acc, &bv, f, threads);
+            assert_eq!(acc, want, "binary_inplace_lhs t={threads}");
+            let mut acc = bv.clone();
+            binary_inplace_rhs(&av, &mut acc, f, threads);
+            assert_eq!(acc, want, "binary_inplace_rhs t={threads}");
+            let mut out = vec![0.0f32; n];
+            unary_into(&av, &mut out, g, threads);
+            assert_eq!(out, want_u, "unary_into t={threads}");
+            let mut buf = av.clone();
+            unary_inplace(&mut buf, g, threads);
+            assert_eq!(buf, want_u, "unary_inplace t={threads}");
+            let mut r = vec![0.0f32; 64];
+            reduce_into(&av, &[64, n / 64], &[1], 0.0f32, |x, y| x + y, &mut r, threads);
+            assert_eq!(r, want_r, "reduce_into t={threads}");
+        }
     }
 
     #[test]
@@ -1562,7 +1741,7 @@ mod tests {
         let init = Tensor::from_f32(vec![], &[0.0]).unwrap();
         let want = reduce(&t, &init, &[1], ReduceOp::Add).unwrap().as_f32().unwrap();
         let mut out = vec![0.0f32; 2];
-        reduce_into(&tv, &[2, 3], &[1], 0.0f32, |x, y| x + y, &mut out);
+        reduce_into(&tv, &[2, 3], &[1], 0.0f32, |x, y| x + y, &mut out, 1);
         assert_eq!(out, want);
         // select with scalar pred + compare_into
         let p = [1u8];

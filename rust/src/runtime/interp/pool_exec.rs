@@ -1,0 +1,382 @@
+//! Process-wide persistent worker thread pool for kernel parallelism.
+//!
+//! PR 2 parallelized the GEMM with `std::thread::scope`, which spawns and
+//! joins OS threads inside *every* sufficiently large `dot` — a ViT
+//! forward pass is dozens of dots, so steady-state serving paid a
+//! spawn/join round-trip per instruction. This module replaces that with
+//! a single process-wide pool, sized to the machine (`cores - 1` workers;
+//! the caller is the remaining lane), that every parallel kernel
+//! dispatches into:
+//!
+//! * [`par_for`] — chunked range-splitting over a caller-provided
+//!   closure: `par_for(threads, rows, |lo, hi| ...)`. The caller runs the
+//!   first chunk itself and *helps drain the queue* while waiting, so the
+//!   pool can never deadlock and a 1-core machine degenerates to the
+//!   serial loop.
+//! * [`par_for_rows`] — the mutable-output variant every `*_into` kernel
+//!   uses: the output slice is split into disjoint whole-row chunks, each
+//!   handed to the closure as `&mut [T]`.
+//!
+//! Idle workers **spin briefly, then park** on a condvar: a serving
+//! worker issuing back-to-back dots finds hot threads, while an idle
+//! process burns nothing.
+//!
+//! The pool deliberately has no concept of *budget* — callers pass the
+//! thread count for each call (`runtime::ThreadBudget`, divided across
+//! serving workers by `Server::start`), and the pool merely caps global
+//! concurrency at the core count: with budgets summing to the cores, the
+//! active lanes (callers + pool workers) never oversubscribe the machine.
+//!
+//! Chunking matches the old scoped-spawn kernels exactly (`chunk =
+//! total.div_ceil(nt)`), and every kernel routed through here assigns
+//! each output element to exactly one chunk with an unchanged inner
+//! accumulation order — so results stay **bit-for-bit identical** to the
+//! single-threaded walk at any thread count (property-tested across
+//! budgets 1/2/4 in `tests/gemm_props.rs` / `tests/plan_props.rs`).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Iterations an idle worker spins (checking the pending counter) before
+/// parking on the condvar. Roughly tens of microseconds: long enough to
+/// catch the next dot of a forward pass, short enough that an idle
+/// process parks promptly.
+const SPIN_ITERS: usize = 1 << 14;
+
+/// Completion latch for one fan-out, living on the caller's stack for
+/// the duration of the call.
+struct Latch {
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+/// One queued chunk: a type-erased pointer to the caller's closure plus
+/// the `[lo, hi)` range. The pointers reference the submitting caller's
+/// stack; they stay valid because the caller blocks on the latch until
+/// every job of the fan-out has run (see `run_job`).
+struct Job {
+    run: unsafe fn(*const (), usize, usize),
+    body: *const (),
+    latch: *const Latch,
+    lo: usize,
+    hi: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced while the submitting
+// caller is parked in `help_until`, which keeps the referents alive; the
+// closure itself is `Sync` (enforced by `par_for`'s bound).
+unsafe impl Send for Job {}
+
+unsafe fn call_erased<F: Fn(usize, usize) + Sync>(p: *const (), lo: usize, hi: usize) {
+    (*(p as *const F))(lo, hi)
+}
+
+struct Pool {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    /// Jobs submitted but not yet popped (lets spinning workers check
+    /// for work without taking the lock).
+    pending: AtomicUsize,
+    workers: usize,
+}
+
+impl Pool {
+    fn try_pop(&self) -> Option<Job> {
+        if self.pending.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        let job = q.pop_front();
+        if job.is_some() {
+            self.pending.fetch_sub(1, Ordering::Release);
+        }
+        job
+    }
+
+    fn submit(&self, jobs: impl Iterator<Item = Job>) {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        let mut n = 0usize;
+        for job in jobs {
+            q.push_back(job);
+            n += 1;
+        }
+        self.pending.fetch_add(n, Ordering::Release);
+        drop(q);
+        // Wake only as many parked workers as there are jobs: notify_all
+        // would stampede every idle worker on a many-core box into a
+        // futile try_pop + spin per kernel call. Workers still in their
+        // spin phase pick the jobs up off the pending counter without a
+        // notify at all.
+        for _ in 0..n.min(self.workers) {
+            self.cv.notify_one();
+        }
+    }
+
+    /// Run one job and mark it done on its latch. A panicking kernel is
+    /// caught so the latch still resolves (the submitting caller re-
+    /// panics); letting it unwind through a pool worker would leave the
+    /// caller parked forever.
+    fn run_job(&self, job: Job) {
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.run)(job.body, job.lo, job.hi)
+        }))
+        .is_ok();
+        // SAFETY: the latch outlives the job (the caller waits on it).
+        let latch = unsafe { &*job.latch };
+        if !ok {
+            latch.panicked.store(true, Ordering::Release);
+        }
+        latch.remaining.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Caller-side wait: drain queued jobs (its own and anyone else's)
+    /// until `latch` resolves. Helping instead of blocking keeps the
+    /// machine work-conserving when several serving workers share the
+    /// pool, and makes a worker-less pool (1 core) correct.
+    fn help_until(&self, latch: &Latch) {
+        let mut spins = 0usize;
+        while latch.remaining.load(Ordering::Acquire) != 0 {
+            if let Some(job) = self.try_pop() {
+                self.run_job(job);
+                spins = 0;
+                continue;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        if latch.panicked.load(Ordering::Acquire) {
+            panic!("kernel pool job panicked");
+        }
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        if let Some(job) = pool.try_pop() {
+            pool.run_job(job);
+            continue;
+        }
+        // Spin-then-park: briefly poll the pending counter, then sleep
+        // on the condvar until the next submit.
+        let mut found = false;
+        for _ in 0..SPIN_ITERS {
+            if pool.pending.load(Ordering::Acquire) != 0 {
+                found = true;
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        if found {
+            continue;
+        }
+        let mut q = pool.queue.lock().unwrap_or_else(|e| e.into_inner());
+        while q.is_empty() {
+            q = pool
+                .cv
+                .wait(q)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first parallel call: `cores - 1`
+/// detached workers (the caller of each fan-out is the remaining lane).
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = cores.saturating_sub(1);
+        let p: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            pending: AtomicUsize::new(0),
+            workers,
+        }));
+        for i in 0..workers {
+            let _ = std::thread::Builder::new()
+                .name(format!("kernel-pool-{i}"))
+                .spawn(move || worker_loop(p));
+        }
+        p
+    })
+}
+
+/// Worker threads the process pool holds — or would hold: this reports
+/// `cores - 1` without instantiating the lazily-spawned pool, so a
+/// stats line can print it even when no kernel ever fanned out (0 on a
+/// 1-core machine — every fan-out then runs inline on its caller).
+pub fn pool_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .saturating_sub(1)
+}
+
+/// Split `[0, total)` into at most `threads` contiguous chunks (`chunk =
+/// total.div_ceil(nt)`, matching the retired scoped-spawn kernels) and
+/// run `body(lo, hi)` on each — chunks beyond the first on the pool, the
+/// first on the caller, which then helps drain the queue until all its
+/// chunks finished. `threads <= 1` or `total <= 1` runs inline.
+pub fn par_for<F: Fn(usize, usize) + Sync>(threads: usize, total: usize, body: F) {
+    let nt = threads.min(total);
+    if nt <= 1 {
+        if total > 0 {
+            body(0, total);
+        }
+        return;
+    }
+    super::stats::count_par_fanout();
+    let chunk = total.div_ceil(nt);
+    // div_ceil rounding can make the last chunk(s) empty; count the real ones.
+    let n_chunks = total.div_ceil(chunk);
+    let latch = Latch {
+        remaining: AtomicUsize::new(n_chunks - 1),
+        panicked: AtomicBool::new(false),
+    };
+    let p = pool();
+    p.submit((1..n_chunks).map(|ci| Job {
+        run: call_erased::<F>,
+        body: &body as *const F as *const (),
+        latch: &latch as *const Latch,
+        lo: ci * chunk,
+        hi: ((ci + 1) * chunk).min(total),
+    }));
+    // The caller's own chunk runs under catch_unwind: unwinding past the
+    // wait would free the latch and closure while queued jobs still hold
+    // pointers to them. Drain first, then re-raise.
+    let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        body(0, chunk.min(total));
+    }));
+    p.help_until(&latch);
+    if let Err(payload) = caller {
+        std::panic::resume_unwind(payload);
+    }
+}
+
+/// Pointer wrapper so the fan-out closure (shared across threads) can
+/// carve disjoint `&mut` chunks out of one output slice.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// [`par_for`] over the rows of a mutable output: `out` (at least
+/// `rows * row_len` long) is split into disjoint whole-row chunks and
+/// `body(row0, chunk)` writes rows `[row0, row0 + chunk.len()/row_len)`.
+/// This is the entry point for the `*_into` kernels: the unsafe disjoint
+/// split lives here, behind a debug-checked bound, instead of in every
+/// kernel.
+pub fn par_for_rows<T, F>(threads: usize, rows: usize, row_len: usize, out: &mut [T], body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    // A hard assert, not debug: this safe pub fn is the soundness
+    // boundary for the raw-pointer split below, and the check is one
+    // comparison per fan-out. (The retired chunks_mut code merely
+    // produced fewer chunks on a short `out`; silent OOB is not an
+    // acceptable replacement for that.)
+    assert!(
+        out.len() >= rows * row_len,
+        "par_for_rows: out holds {} elements, need {rows} x {row_len}",
+        out.len()
+    );
+    if row_len == 0 {
+        return;
+    }
+    let base = SendPtr(out.as_mut_ptr());
+    par_for(threads, rows, |lo, hi| {
+        // SAFETY: chunks [lo, hi) are disjoint across par_for's calls and
+        // in-bounds (hi <= rows, out.len() >= rows * row_len); T: Send
+        // lets another thread write them. The borrow of `out` outlives
+        // the fan-out because par_for returns only after every chunk ran.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * row_len), (hi - lo) * row_len)
+        };
+        body(lo, chunk);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_range_exactly_once() {
+        for threads in [1usize, 2, 3, 4, 9] {
+            for total in [0usize, 1, 2, 7, 64, 1000] {
+                let hits: Vec<AtomicUsize> =
+                    (0..total).map(|_| AtomicUsize::new(0)).collect();
+                par_for(threads, total, |lo, hi| {
+                    for i in lo..hi {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "threads={threads} total={total}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_for_rows_writes_disjoint_chunks() {
+        let rows = 37;
+        let row_len = 5;
+        let mut out = vec![0u64; rows * row_len];
+        par_for_rows(4, rows, row_len, &mut out, |row0, chunk| {
+            for (r, row) in chunk.chunks_mut(row_len).enumerate() {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = ((row0 + r) * row_len + c) as u64;
+                }
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        // Several "serving workers" fanning out simultaneously must all
+        // complete with correct sums (the queue interleaves their jobs).
+        let handles: Vec<_> = (0..4)
+            .map(|w| {
+                std::thread::spawn(move || {
+                    let total = AtomicU64::new(0);
+                    for _ in 0..50 {
+                        par_for(3, 300, |lo, hi| {
+                            let s: u64 = (lo..hi).map(|i| i as u64).sum();
+                            total.fetch_add(s, Ordering::Relaxed);
+                        });
+                    }
+                    (w, total.load(Ordering::Relaxed))
+                })
+            })
+            .collect();
+        let want = 50u64 * (0..300u64).sum::<u64>();
+        for h in handles {
+            let (w, got) = h.join().unwrap();
+            assert_eq!(got, want, "caller {w}");
+        }
+    }
+
+    #[test]
+    fn pool_job_panic_propagates_to_caller() {
+        let r = std::panic::catch_unwind(|| {
+            par_for(4, 100, |lo, _hi| {
+                if lo > 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic in a pool job must reach the caller");
+    }
+}

@@ -18,6 +18,9 @@
 //!   occupy with one private buffer per instruction (the unplanned
 //!   evaluator's residency), for the reuse-ratio report in
 //!   `benches/interp_memory.rs` and `eval --stats`.
+//! * [`par_fanouts`] — kernel calls that fanned out across the
+//!   persistent thread pool ([`super::pool_exec`]); a budget-1 run keeps
+//!   this flat.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -25,6 +28,7 @@ static TENSOR_ALLOCS: AtomicUsize = AtomicUsize::new(0);
 static PLAN_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_NAIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_SLOT_COUNT: AtomicUsize = AtomicUsize::new(0);
+static PAR_FANOUTS: AtomicUsize = AtomicUsize::new(0);
 
 /// Tensor-sized heap allocations on the execution path so far (see the
 /// module docs for the exact contract).
@@ -48,9 +52,21 @@ pub fn plan_slot_count() -> usize {
     PLAN_SLOT_COUNT.load(Ordering::Relaxed)
 }
 
+/// Kernel invocations that fanned out across the persistent thread pool
+/// (stayed-serial calls — below the work thresholds or budget 1 — do not
+/// count). Observability for `eval --stats` and the scaling bench.
+pub fn par_fanouts() -> usize {
+    PAR_FANOUTS.load(Ordering::Relaxed)
+}
+
 /// Record one tensor-sized allocation on the execution path.
 pub(crate) fn count_tensor_alloc() {
     TENSOR_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one parallel fan-out through the kernel pool.
+pub(crate) fn count_par_fanout() {
+    PAR_FANOUTS.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Publish a freshly built plan's footprint (keeps the largest).

@@ -96,6 +96,93 @@ pub trait ResidentExecutor {
     }
 }
 
+/// An explicit kernel-parallelism budget: how many lanes (caller +
+/// persistent-pool workers) one executor may use per kernel call.
+///
+/// This replaces the old process-global `configured_threads()` env read:
+/// the budget is *carried* — `Backend` → `Executor` → `ResidentExecutor`
+/// on the interpreter, and `ServerConfig` → `WorkerConfig` on the
+/// serving side, where `Server::start` divides the total across variant
+/// workers so W workers on C cores get C/W lanes each instead of W×C.
+/// `CLUSTERFORMER_THREADS` / `--threads` stays the top-level knob
+/// ([`ThreadBudget::from_env`]); `0` or an empty value means "auto = all
+/// available cores".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadBudget(usize);
+
+impl ThreadBudget {
+    /// An explicit budget; `0` means auto (all available cores).
+    pub fn new(n: usize) -> ThreadBudget {
+        if n == 0 {
+            ThreadBudget::auto()
+        } else {
+            ThreadBudget(n)
+        }
+    }
+
+    /// All available cores.
+    pub fn auto() -> ThreadBudget {
+        ThreadBudget(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    /// Budget from `CLUSTERFORMER_THREADS`: unset, empty, or `0` mean
+    /// auto (`0`/empty logs the resolution — once — so a deploy script
+    /// setting `THREADS=0` can see what it got); a non-numeric value
+    /// warns and falls back to 1 thread. The resolution is cached for
+    /// the process: callers hit this on construction paths and inside
+    /// `evaluate_unplanned`, and re-logging/re-parsing per call would
+    /// spam output (the CLI `--threads` knob sets the env var before
+    /// the first resolution).
+    pub fn from_env() -> ThreadBudget {
+        static RESOLVED: std::sync::OnceLock<ThreadBudget> = std::sync::OnceLock::new();
+        *RESOLVED.get_or_init(Self::resolve_env)
+    }
+
+    fn resolve_env() -> ThreadBudget {
+        match std::env::var("CLUSTERFORMER_THREADS") {
+            Ok(s) => {
+                let t = s.trim();
+                if t.is_empty() || t == "0" {
+                    let auto = ThreadBudget::auto();
+                    crate::log_info!(
+                        "CLUSTERFORMER_THREADS={s:?}: auto-detecting {} available cores",
+                        auto.get()
+                    );
+                    return auto;
+                }
+                match t.parse::<usize>() {
+                    Ok(n) => ThreadBudget(n),
+                    Err(_) => {
+                        crate::log_warn!(
+                            "CLUSTERFORMER_THREADS={s:?} is not a number; using 1 thread"
+                        );
+                        ThreadBudget(1)
+                    }
+                }
+            }
+            Err(_) => ThreadBudget::auto(),
+        }
+    }
+
+    /// Lanes this budget allows per kernel call (always >= 1).
+    pub fn get(self) -> usize {
+        self.0
+    }
+
+    /// Divide this budget across `workers` concurrent executors (the
+    /// serving case: W variant workers share the machine instead of each
+    /// assuming it owns every core). Never below 1 lane per worker.
+    pub fn per_worker(self, workers: usize) -> ThreadBudget {
+        ThreadBudget((self.0 / workers.max(1)).max(1))
+    }
+}
+
+impl Default for ThreadBudget {
+    fn default() -> Self {
+        ThreadBudget::from_env()
+    }
+}
+
 /// Which execution backend to use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
@@ -132,12 +219,24 @@ impl BackendKind {
     }
 }
 
-/// Construct a backend of the given kind.
+/// Construct a backend of the given kind with the env-derived kernel
+/// thread budget ([`ThreadBudget::from_env`]).
 pub fn backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    backend_with_threads(kind, ThreadBudget::from_env())
+}
+
+/// Construct a backend of the given kind with an explicit kernel thread
+/// budget. The serving coordinator uses this to hand each variant worker
+/// its share of the machine; the PJRT backend manages its own threading
+/// and ignores the budget.
+pub fn backend_with_threads(kind: BackendKind, threads: ThreadBudget) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Interp => Ok(Box::new(interp::InterpBackend)),
+        BackendKind::Interp => Ok(Box::new(interp::InterpBackend::with_threads(threads))),
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::cpu()?)),
+        BackendKind::Pjrt => {
+            let _ = threads; // XLA's runtime owns its own thread pool
+            Ok(Box::new(pjrt::PjrtBackend::cpu()?))
+        }
         #[cfg(not(feature = "pjrt"))]
         BackendKind::Pjrt => bail!(
             "this build does not include the PJRT backend; rebuild with \
@@ -190,6 +289,19 @@ mod tests {
         assert_eq!(b.name(), "interp");
         let b = default_backend().unwrap();
         assert_eq!(b.name(), "interp");
+    }
+
+    #[test]
+    fn thread_budget_semantics() {
+        assert!(ThreadBudget::auto().get() >= 1);
+        assert_eq!(ThreadBudget::new(3).get(), 3);
+        // 0 = auto, never a 1-thread clamp.
+        assert_eq!(ThreadBudget::new(0), ThreadBudget::auto());
+        // Division across serving workers floors at 1 lane each.
+        assert_eq!(ThreadBudget::new(8).per_worker(2).get(), 4);
+        assert_eq!(ThreadBudget::new(8).per_worker(3).get(), 2);
+        assert_eq!(ThreadBudget::new(2).per_worker(5).get(), 1);
+        assert_eq!(ThreadBudget::new(4).per_worker(0).get(), 4);
     }
 
     #[test]

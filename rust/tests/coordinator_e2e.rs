@@ -36,6 +36,7 @@ fn start_server(policy: BatchPolicy) -> Server {
             policy,
             queue_cap: 64,
         },
+        threads: clusterformer::runtime::ThreadBudget::from_env(),
     })
     .expect("server start (run `make artifacts` first)")
 }
@@ -110,6 +111,7 @@ fn shutdown_flushes_inflight_requests() {
             policy: BatchPolicy::SizeOnly,
             queue_cap: 64,
         },
+        threads: clusterformer::runtime::ThreadBudget::from_env(),
     })
     .unwrap();
     let mut rxs = Vec::new();

@@ -1,10 +1,13 @@
-//! Property tests for the matmul subsystem (ISSUE 2):
+//! Property tests for the matmul subsystem (ISSUE 2, thread budgets from
+//! ISSUE 4):
 //!
 //! * the blocked GEMM matches the naive index-walk `dot` **bit-for-bit**
 //!   across random shapes, batch dims, and axis permutations (both
-//!   kernels accumulate over k in the same ascending order);
+//!   kernels accumulate over k in the same ascending order) — at every
+//!   kernel thread budget in {1, 2, 4};
 //! * the clustered LUT matmul matches a dequantize-then-dot reference
-//!   within reassociation error;
+//!   within reassociation error, and its pooled fan-out is bit-identical
+//!   across budgets (including problems large enough to really fan out);
 //! * `pack_indices`/`unpack_indices` round-trip at 4/6/8 bits.
 
 use clusterformer::clustering::packing::{pack_indices, packed_len, unpack_indices};
@@ -32,9 +35,11 @@ fn prop_blocked_gemm_matches_naive_2d() {
             rhs_contracting: vec![0],
             ..Default::default()
         };
-        let fast = dot_general(&lhs, &rhs, &spec).unwrap();
         let naive = dot_general_naive(&lhs, &rhs, &spec).unwrap();
-        assert_eq!(fast, naive);
+        for threads in [1usize, 2, 4] {
+            let fast = dot_general(&lhs, &rhs, &spec, threads).unwrap();
+            assert_eq!(fast, naive, "threads={threads}");
+        }
     });
 }
 
@@ -85,9 +90,11 @@ fn prop_blocked_gemm_matches_naive_batched_permuted() {
         };
         let lhs = rand_tensor(g, &ld);
         let rhs = rand_tensor(g, &rd);
-        let fast = dot_general(&lhs, &rhs, &spec).unwrap();
         let naive = dot_general_naive(&lhs, &rhs, &spec).unwrap();
-        assert_eq!(fast, naive, "case {case} dims {ld:?} x {rd:?}");
+        for threads in [1usize, 2, 4] {
+            let fast = dot_general(&lhs, &rhs, &spec, threads).unwrap();
+            assert_eq!(fast, naive, "case {case} dims {ld:?} x {rd:?} threads={threads}");
+        }
     });
 }
 
@@ -113,11 +120,16 @@ fn prop_clustered_lut_matches_dequantized_reference() {
         };
         let want = dot_general_naive(&lhs, &rhs, &spec).unwrap().as_f32().unwrap();
 
-        let got_u8 = lut_matmul_u8(&x, m, k, n, &idx, &cb).unwrap();
+        let got_u8 = lut_matmul_u8(&x, m, k, n, &idx, &cb, 1).unwrap();
         let prep = prepare(&idx, k, n, &cb, Some(clusters)).unwrap();
-        let got_packed = lut_matmul_packed(&x, m, &prep).unwrap();
+        let got_packed = lut_matmul_packed(&x, m, &prep, 1).unwrap();
         // The two LUT paths bucket in the same order: identical.
         assert_eq!(got_u8, got_packed);
+        // The pooled fan-out must not change a single bit.
+        for threads in [2usize, 4] {
+            assert_eq!(lut_matmul_u8(&x, m, k, n, &idx, &cb, threads).unwrap(), got_u8);
+            assert_eq!(lut_matmul_packed(&x, m, &prep, threads).unwrap(), got_packed);
+        }
         // vs the dense reference: equal up to f32 reassociation.
         for (got, want) in got_u8.iter().zip(&want) {
             assert!(
@@ -140,5 +152,46 @@ fn prop_pack_roundtrip_4_6_8_bits() {
         let packed = pack_indices(&xs, bits).unwrap();
         assert_eq!(packed.len(), packed_len(n, bits));
         assert_eq!(unpack_indices(&packed, n, bits).unwrap(), xs);
+    });
+}
+
+/// Budget sweep on problems large enough to clear the parallel-work
+/// thresholds, so budgets 2 and 4 genuinely fan out on the pool — the
+/// small property shapes above all stay serial.
+#[test]
+fn prop_large_dots_bit_identical_across_budgets() {
+    check("large GEMM/LUT bit-identical at budgets 1/2/4", 6, |g| {
+        let m = g.usize(96, 160);
+        let k = g.usize(64, 128);
+        let n = g.usize(96, 160);
+        let lhs = rand_tensor(g, &[m, k]);
+        let rhs = rand_tensor(g, &[k, n]);
+        let spec = DotSpec {
+            lhs_contracting: vec![1],
+            rhs_contracting: vec![0],
+            ..Default::default()
+        };
+        let reference = dot_general(&lhs, &rhs, &spec, 1).unwrap();
+        for threads in [2usize, 4] {
+            assert_eq!(
+                dot_general(&lhs, &rhs, &spec, threads).unwrap(),
+                reference,
+                "gemm m={m} k={k} n={n} threads={threads}"
+            );
+        }
+
+        let clusters = 64;
+        let x: Vec<f32> = (0..m * k).map(|_| g.f32_normal()).collect();
+        let idx: Vec<u8> = (0..k * n).map(|_| g.usize(0, clusters - 1) as u8).collect();
+        let cb: Vec<f32> = (0..clusters).map(|_| g.f32_normal()).collect();
+        let prep = prepare(&idx, k, n, &cb, Some(clusters)).unwrap();
+        let lut1 = lut_matmul_packed(&x, m, &prep, 1).unwrap();
+        for threads in [2usize, 4] {
+            assert_eq!(
+                lut_matmul_packed(&x, m, &prep, threads).unwrap(),
+                lut1,
+                "lut m={m} k={k} n={n} threads={threads}"
+            );
+        }
     });
 }

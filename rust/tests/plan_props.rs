@@ -18,7 +18,7 @@ use std::sync::Arc;
 use clusterformer::clustering::{ClusterScheme, Quantizer};
 use clusterformer::hlo::HloModule;
 use clusterformer::runtime::interp::{evaluate_unplanned, InterpExecutor};
-use clusterformer::runtime::{Executor as _, ResidentExecutor as _};
+use clusterformer::runtime::{Executor as _, ResidentExecutor as _, ThreadBudget};
 use clusterformer::tensor::Tensor;
 use clusterformer::testing::prop::{check, Gen};
 use clusterformer::util::rng::Pcg32;
@@ -226,22 +226,26 @@ fn prop_planned_matches_unplanned_on_random_graphs() {
         ];
         let refs: Vec<&Tensor> = inputs.iter().collect();
 
-        let exe = InterpExecutor::load_text(&hlo, "prop").unwrap_or_else(|e| {
-            panic!("load failed: {e:#}\n{hlo}");
-        });
-        assert!(
-            exe.memory_plan().is_some(),
-            "random graph must be plannable (liveness verifier rejected it?)\n{hlo}"
-        );
         let module = HloModule::parse(&hlo).unwrap();
-        let planned = exe.run(&inputs).unwrap_or_else(|e| {
-            panic!("planned run failed: {e:#}\n{hlo}");
-        });
         let unplanned = evaluate_unplanned(&module, &refs).unwrap();
-        assert_eq!(
-            planned, unplanned,
-            "planned and unplanned outputs diverged\n{hlo}"
-        );
+        // Sweep kernel thread budgets: the arena path must be bit-for-bit
+        // equal to the classic evaluator at every budget.
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "prop")
+                .unwrap_or_else(|e| panic!("load failed: {e:#}\n{hlo}"))
+                .with_threads(ThreadBudget::new(budget));
+            assert!(
+                exe.memory_plan().is_some(),
+                "random graph must be plannable (liveness verifier rejected it?)\n{hlo}"
+            );
+            let planned = exe.run(&inputs).unwrap_or_else(|e| {
+                panic!("planned run failed: {e:#}\n{hlo}");
+            });
+            assert_eq!(
+                planned, unplanned,
+                "planned and unplanned outputs diverged (budget {budget})\n{hlo}"
+            );
+        }
     });
 }
 
@@ -282,22 +286,30 @@ fn prop_planned_clustered_dot_matches_unplanned() {
         let inputs = vec![x.clone(), ct.codebooks.clone(), ct.indices["w"].clone()];
         let refs: Vec<&Tensor> = inputs.iter().collect();
 
-        let exe = InterpExecutor::load_text(&hlo, "clustered-prop").unwrap();
-        assert!(exe.memory_plan().is_some());
         let module = HloModule::parse(&hlo).unwrap();
         let unplanned = evaluate_unplanned(&module, &refs).unwrap();
-        let planned = exe.run(&inputs).unwrap();
-        assert_eq!(planned, unplanned, "full-input clustered path diverged");
+        let ct = Arc::new(ct);
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "clustered-prop")
+                .unwrap()
+                .with_threads(ThreadBudget::new(budget));
+            assert!(exe.memory_plan().is_some());
+            let planned = exe.run(&inputs).unwrap();
+            assert_eq!(
+                planned, unplanned,
+                "full-input clustered path diverged (budget {budget})"
+            );
 
-        // Weight-resident: prepared (bit-packed) weights, planned arena.
-        let resident = exe
-            .resident(
-                1,
-                Arc::new(vec![ct.codebooks.clone(), ct.indices["w"].clone()]),
-                Some(Arc::new(ct)),
-            )
-            .unwrap();
-        let res = resident.run(std::slice::from_ref(&x)).unwrap();
-        assert_eq!(res, unplanned, "resident clustered path diverged");
+            // Weight-resident: prepared (bit-packed) weights, planned arena.
+            let resident = exe
+                .resident(
+                    1,
+                    Arc::new(vec![ct.codebooks.clone(), ct.indices["w"].clone()]),
+                    Some(ct.clone()),
+                )
+                .unwrap();
+            let res = resident.run(std::slice::from_ref(&x)).unwrap();
+            assert_eq!(res, unplanned, "resident clustered path diverged (budget {budget})");
+        }
     });
 }
