@@ -1,0 +1,103 @@
+//! Operator-fusion bench (ISSUE 5 acceptance): fused vs unfused planned
+//! execution on the attention-shaped ViT module from
+//! `testing::fixtures::vit_shaped_hlo` — the same graph family
+//! `benches/interp_memory.rs` measures.
+//!
+//! Reports wall time both ways, planned peak bytes both ways, and the
+//! per-inference intermediate traffic the fusion pass removes
+//! (`fused_bytes_saved`, as a fraction of the unfused write+read
+//! traffic `2 * naive_bytes`). Acceptance: both the peak and the
+//! traffic drop by >= 25%, with a wall-time win.
+
+use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
+use clusterformer::runtime::interp::InterpExecutor;
+use clusterformer::runtime::Executor as _;
+use clusterformer::testing::fixtures::{vit_shaped_hlo, vit_shaped_inputs};
+use clusterformer::testing::prop::ulp_dist;
+use clusterformer::util::rng::Pcg32;
+
+const M: usize = 128;
+const D: usize = 16;
+const LAYERS: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    let hlo = vit_shaped_hlo(M, D, LAYERS);
+    let fused = InterpExecutor::load_text(&hlo, "vit-fused")?.with_fusion(true);
+    let unfused = InterpExecutor::load_text(&hlo, "vit-unfused")?.with_fusion(false);
+
+    let mut rng = Pcg32::new(5 * 2106);
+    let inputs = vit_shaped_inputs(M, D, LAYERS, &mut rng);
+
+    // Numeric anchor: the fused softmax is the only non-bit-identical
+    // lowering; end to end the two paths stay within a few ULP.
+    let fo = fused.run(&inputs)?;
+    let uo = unfused.run(&inputs)?;
+    let (fv, uv) = (fo[0].as_f32()?, uo[0].as_f32()?);
+    let max_ulp = fv
+        .iter()
+        .zip(&uv)
+        .map(|(a, b)| ulp_dist(*a, *b))
+        .max()
+        .unwrap_or(0);
+
+    let fp = fused.memory_plan().expect("fused plan must build");
+    let up = unfused.memory_plan().expect("unfused plan must build");
+    assert_eq!(up.fused_chains() + up.fused_epilogues() + up.fused_softmax(), 0);
+
+    println!(
+        "# Operator fusion — {LAYERS} attention layers of [{M},{D}] \
+         ({} chains, {} epilogues, {} softmax)\n",
+        fp.fused_chains(),
+        fp.fused_epilogues(),
+        fp.fused_softmax()
+    );
+    let mut runner = BenchRunner::new(BenchConfig::default());
+    let t_unfused = runner
+        .bench("exec/planned-unfused", || unfused.run(&inputs).unwrap())
+        .summary
+        .mean;
+    let t_fused = runner
+        .bench("exec/planned-fused", || fused.run(&inputs).unwrap())
+        .summary
+        .mean;
+
+    let naive = up.naive_bytes();
+    let traffic_drop = fp.fused_bytes_saved() as f64 / (2 * naive).max(1) as f64;
+    let peak_drop = 1.0 - fp.peak_bytes() as f64 / up.peak_bytes().max(1) as f64;
+
+    println!("\n| path | mean | peak bytes | slots |");
+    println!("|---|---|---|---|");
+    println!(
+        "| unfused | {} | {} | {} |",
+        fmt_time(t_unfused),
+        up.peak_bytes(),
+        up.slot_count()
+    );
+    println!(
+        "| fused | {} | {} | {} |",
+        fmt_time(t_fused),
+        fp.peak_bytes(),
+        fp.slot_count()
+    );
+    println!("\nmax end-to-end ULP distance fused vs unfused: {max_ulp}");
+    println!(
+        "planned peak bytes: {} -> {} ({:.1}% lower; target >= 25%: {})",
+        up.peak_bytes(),
+        fp.peak_bytes(),
+        100.0 * peak_drop,
+        if peak_drop >= 0.25 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "intermediate traffic removed: {} of {} write+read bytes ({:.1}%; target >= 25%: {})",
+        fp.fused_bytes_saved(),
+        2 * naive,
+        100.0 * traffic_drop,
+        if traffic_drop >= 0.25 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "speedup fused vs unfused: {:.2}x ({})",
+        t_unfused / t_fused,
+        if t_fused < t_unfused { "PASS" } else { "FAIL" }
+    );
+    Ok(())
+}

@@ -48,6 +48,15 @@ pub struct MemStats {
     pub dequant_calls: usize,
     /// `dot`s executed through the cluster-native LUT kernel.
     pub lut_dots: usize,
+    /// Standalone fused elementwise chains in that plan.
+    pub fused_chains: usize,
+    /// GEMM / LUT dots carrying a fused elementwise epilogue.
+    pub fused_epilogues: usize,
+    /// Softmax idioms lowered to the fused online kernel.
+    pub fused_softmax: usize,
+    /// Intermediate bytes per execution no longer written + re-read
+    /// because their producers were fused away.
+    pub fused_bytes_saved: usize,
 }
 
 impl MemStats {
@@ -60,6 +69,10 @@ impl MemStats {
             tensor_allocs: stats::tensor_allocs(),
             dequant_calls: crate::clustering::ClusteredTensors::dequant_calls(),
             lut_dots: clustered::lut_dot_count(),
+            fused_chains: stats::fused_chains(),
+            fused_epilogues: stats::fused_epilogues(),
+            fused_softmax: stats::fused_softmax(),
+            fused_bytes_saved: stats::fused_bytes_saved(),
         }
     }
 }
@@ -114,6 +127,10 @@ pub fn evaluate(
             tensor_allocs: after.tensor_allocs.saturating_sub(before.tensor_allocs),
             dequant_calls: after.dequant_calls.saturating_sub(before.dequant_calls),
             lut_dots: after.lut_dots.saturating_sub(before.lut_dots),
+            fused_chains: after.fused_chains,
+            fused_epilogues: after.fused_epilogues,
+            fused_softmax: after.fused_softmax,
+            fused_bytes_saved: after.fused_bytes_saved,
         },
     })
 }

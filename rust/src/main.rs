@@ -40,6 +40,7 @@ fn cli() -> Cli {
                 .opt("backend", "interp", "execution backend: interp | pjrt")
                 .opt("n", "0", "images to evaluate (0 = all)")
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
+                .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
                 .flag("stats", "print memory-planner / allocation counters"),
         )
         .command(
@@ -54,7 +55,8 @@ fn cli() -> Cli {
                 .opt("max-wait-ms", "25", "dynamic batcher deadline")
                 .opt("policy", "adaptive", "sizeonly | deadline | adaptive")
                 .opt("seed", "7", "workload RNG seed")
-                .opt("threads", "0", "interpreter kernel threads (0 = all cores)"),
+                .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
+                .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)"),
         )
         .command(
             Command::new("compress", "cluster weights in Rust and report")
@@ -154,21 +156,26 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
     v
 }
 
-/// Apply the `--threads` knob by setting `CLUSTERFORMER_THREADS` for the
-/// interpreter's kernel thread budget (0 leaves the default: all cores —
-/// the same "0 = auto" the env var itself honors). The env var stays the
-/// single top-level knob; everything below reads it through
-/// `ThreadBudget::from_env` and carries the budget explicitly.
-fn apply_threads_knob(args: &clusterformer::util::cli::Args) -> Result<()> {
+/// Apply the interpreter kernel knobs by setting their env vars before
+/// anything resolves them: `--threads` sets `CLUSTERFORMER_THREADS` for
+/// the kernel thread budget (0 leaves the default: all cores — the same
+/// "0 = auto" the env var itself honors) and `--no-fusion` sets
+/// `CLUSTERFORMER_FUSION=0` to disable plan-time operator fusion. The
+/// env vars stay the single top-level knobs; everything below reads them
+/// through `ThreadBudget::from_env` / `interp::fusion_from_env`.
+fn apply_kernel_knobs(args: &clusterformer::util::cli::Args) -> Result<()> {
     let threads = args.usize("threads")?;
     if threads > 0 {
         std::env::set_var("CLUSTERFORMER_THREADS", threads.to_string());
+    }
+    if args.flag("no-fusion") {
+        std::env::set_var("CLUSTERFORMER_FUSION", "0");
     }
     Ok(())
 }
 
 fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
-    apply_threads_knob(args)?;
+    apply_kernel_knobs(args)?;
     let backend = backend(BackendKind::parse(args.str("backend")?)?)?;
     let mut registry = Registry::load(args.str("artifacts")?)?;
     let key = VariantKey::parse(args.str("variant")?)?;
@@ -210,12 +217,20 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
             clusterformer::runtime::interp::pool_exec::pool_workers(),
             clusterformer::runtime::interp::stats::par_fanouts()
         );
+        println!(
+            "fusion: enabled={} chains={} epilogues={} softmax={} fused_bytes_saved={}",
+            clusterformer::runtime::interp::fusion_from_env(),
+            m.fused_chains,
+            m.fused_epilogues,
+            m.fused_softmax,
+            m.fused_bytes_saved
+        );
     }
     Ok(())
 }
 
 fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
-    apply_threads_knob(args)?;
+    apply_kernel_knobs(args)?;
     let model = args.str("model")?.to_string();
     let variant = VariantKey::parse(args.str("variant")?)?;
     let policy = match args.str("policy")? {

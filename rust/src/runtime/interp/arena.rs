@@ -26,7 +26,7 @@ use super::clustered::{self, LutScratch};
 use super::eval::WeightCache;
 use super::gemm::{self, PackScratch};
 use super::ops::{self, IdxRef};
-use super::plan::{Action, MemoryPlan, OpCfg};
+use super::plan::{Action, FusedIn, FusedOp, MemoryPlan, OpCfg};
 use crate::hlo::parser::{HloInstruction, HloModule};
 use crate::tensor::{Dtype, Tensor};
 
@@ -464,6 +464,33 @@ impl<'a> Ctx<'a> {
     }
 }
 
+/// Resolve a fused step list's operand ordinals to typed slices for this
+/// execution (the plan stores ordinals; the arena owns the storage).
+fn resolve_fused<'a>(
+    ctx: &Ctx<'a>,
+    i: usize,
+    steps: &[FusedOp],
+) -> Result<Vec<ops::FusedStep<'a>>> {
+    let arg = |a: &FusedIn| -> Result<ops::FusedArg<'a>> {
+        Ok(match *a {
+            FusedIn::Scalar(j) => ops::FusedArg::Scalar(ctx.operand(i, j)?.1.f32()?[0]),
+            FusedIn::Full(j) => ops::FusedArg::Full(ctx.operand(i, j)?.1.f32()?),
+            FusedIn::Row(j, cols) => ops::FusedArg::Row(ctx.operand(i, j)?.1.f32()?, cols),
+            FusedIn::Col(j, block) => ops::FusedArg::Col(ctx.operand(i, j)?.1.f32()?, block),
+        })
+    };
+    steps
+        .iter()
+        .map(|s| {
+            Ok(match s {
+                FusedOp::Unary(f) => ops::FusedStep::Unary(*f),
+                FusedOp::WithRhs(f, a) => ops::FusedStep::WithRhs(*f, arg(a)?),
+                FusedOp::WithLhs(f, a) => ops::FusedStep::WithLhs(*f, arg(a)?),
+            })
+        })
+        .collect()
+}
+
 /// Execute the planned module: stage nothing (the caller staged), walk
 /// the instruction list, materialize the root. `threads` is the kernel
 /// lane budget every parallel kernel of this execution gets.
@@ -744,10 +771,11 @@ fn run_op(
                 }
             }
         }
-        OpCfg::Dot(canon) => {
+        OpCfg::Dot { canon, epilogue } => {
             let (ld, a) = ctx.operand(i, 0)?;
             let (rd, b) = ctx.operand(i, 1)?;
-            gemm::dot_general_into(
+            let ep = resolve_fused(ctx, i, epilogue)?;
+            gemm::dot_general_ep_into(
                 a.f32()?,
                 ld,
                 b.f32()?,
@@ -756,21 +784,23 @@ fn run_op(
                 out.f32_mut(n)?,
                 gemm_scratch,
                 threads,
+                &ep,
             );
         }
-        OpCfg::ClusteredDot { m, k, n: cols, idx, table } => {
+        OpCfg::ClusteredDot { m, k, n: cols, idx, table, key, epilogue } => {
             let (_, x) = ctx.operand(i, 0)?;
             let x = x.f32()?;
             let o = out.f32_mut(n)?;
-            let prepared = ctx
-                .cache
-                .and_then(|c| c.prepared.get(inst.name.as_str()));
+            let ep = resolve_fused(ctx, i, epilogue)?;
+            // Prepared weights are keyed by the *head* dot's name (the
+            // executing instruction is the epilogue tail when fused).
+            let prepared = ctx.cache.and_then(|c| c.prepared.get(key.as_str()));
             if let Some(prep) = prepared {
-                clustered::lut_matmul_packed_into(x, *m, prep, o, lut_scratch, threads)?;
+                clustered::lut_matmul_packed_ep_into(x, *m, prep, o, lut_scratch, threads, &ep)?;
             } else {
                 let (_, iv) = ctx.view(*idx)?;
                 let (_, tv) = ctx.view(*table)?;
-                clustered::lut_matmul_u8_into(
+                clustered::lut_matmul_u8_ep_into(
                     x,
                     *m,
                     *k,
@@ -780,7 +810,25 @@ fn run_op(
                     o,
                     lut_scratch,
                     threads,
+                    &ep,
                 )?;
+            }
+        }
+        OpCfg::Fused { steps } => {
+            let ep = resolve_fused(ctx, i, steps)?;
+            if alias_of == Some(0) {
+                ops::fused_chain_inplace(out.f32_mut(n)?, &ep, threads);
+            } else {
+                let (_, src) = ctx.operand(i, 0)?;
+                ops::fused_chain_into(src.f32()?, &ep, out.f32_mut(n)?, threads);
+            }
+        }
+        OpCfg::Softmax { rows, cols } => {
+            if alias_of == Some(0) {
+                ops::softmax_rows_inplace(out.f32_mut(n)?, *rows, *cols, threads);
+            } else {
+                let (_, src) = ctx.operand(i, 0)?;
+                ops::softmax_rows_into(src.f32()?, *rows, *cols, out.f32_mut(n)?, threads);
             }
         }
         OpCfg::Conv(ccfg) => {

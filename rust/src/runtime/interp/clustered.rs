@@ -32,6 +32,8 @@ use anyhow::{bail, Result};
 
 use super::eval::{attr_int, attr_list};
 use super::gemm::DotSpec;
+use super::ops::{fused_apply, FusedStep};
+use super::tuning::LUT_PAR_MIN_WORK as PAR_MIN_WORK;
 use crate::clustering::packing::{bits_for_clusters, pack_indices, packed_len, unpack_into};
 use crate::hlo::parser::{HloInstruction, HloModule};
 
@@ -45,10 +47,6 @@ pub fn lut_dot_count() -> usize {
 
 /// Largest codebook the LUT kernel accepts (the paper's padded table).
 pub const MAX_CLUSTERS: usize = 256;
-
-/// Below this much work (bucket adds + cluster multiplies) the pool
-/// fan-out overhead dominates and the kernel runs single-threaded.
-const PAR_MIN_WORK: usize = 1 << 20;
 
 // ---------------------------------------------------------------------
 // Kernels
@@ -130,6 +128,7 @@ fn lut_matmul(
     out: &mut [f32],
     scratch: Option<&mut LutScratch>,
     threads: usize,
+    epilogue: &[FusedStep<'_>],
 ) {
     LUT_DOTS.fetch_add(1, Ordering::Relaxed);
     if m == 0 || t.n == 0 {
@@ -141,10 +140,18 @@ fn lut_matmul(
             Some(s) => lut_rows(t, 0, m, out, s),
             None => lut_rows(t, 0, m, out, &mut LutScratch::default()),
         }
+        if !epilogue.is_empty() {
+            fused_apply(epilogue, 0, out);
+        }
         return;
     }
     super::pool_exec::par_for_rows(threads, m, t.n, out, |row0, out_chunk| {
         lut_rows(t, row0, out_chunk.len() / t.n, out_chunk, &mut LutScratch::default());
+        // Fused epilogue on the freshly written (cache-hot) rows of this
+        // lane's chunk — no extra pass over a materialized intermediate.
+        if !epilogue.is_empty() {
+            fused_apply(epilogue, row0 * t.n, out_chunk);
+        }
     });
 }
 
@@ -163,6 +170,26 @@ pub fn lut_matmul_u8_into(
     out: &mut [f32],
     scratch: &mut LutScratch,
     threads: usize,
+) -> Result<()> {
+    lut_matmul_u8_ep_into(x, m, k, n, idx, codebook, out, scratch, threads, &[])
+}
+
+/// [`lut_matmul_u8_into`] with a fused elementwise epilogue applied to
+/// each output row chunk right after it is computed (same lane, rows
+/// cache-hot) — the planner's bias/activation/residual steps never
+/// materialize an intermediate.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lut_matmul_u8_ep_into(
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    idx: &[u8],
+    codebook: &[f32],
+    out: &mut [f32],
+    scratch: &mut LutScratch,
+    threads: usize,
+    epilogue: &[FusedStep<'_>],
 ) -> Result<()> {
     if x.len() != m * k {
         bail!("lut_matmul_u8: lhs has {} values, expected {m}x{k}", x.len());
@@ -188,7 +215,7 @@ pub fn lut_matmul_u8_into(
     // clusters actually referenced keeps the per-element multiply count
     // at the real cluster count.
     let task = LutTask { x, k, n, cb: &codebook[..used], src: LutSrc::Rows(idx) };
-    lut_matmul(&task, m, out, Some(scratch), threads);
+    lut_matmul(&task, m, out, Some(scratch), threads, epilogue);
     Ok(())
 }
 
@@ -334,6 +361,20 @@ pub fn lut_matmul_packed_into(
     scratch: &mut LutScratch,
     threads: usize,
 ) -> Result<()> {
+    lut_matmul_packed_ep_into(x, m, prep, out, scratch, threads, &[])
+}
+
+/// [`lut_matmul_packed_into`] with a fused elementwise epilogue (see
+/// [`lut_matmul_u8_ep_into`]).
+pub(crate) fn lut_matmul_packed_ep_into(
+    x: &[f32],
+    m: usize,
+    prep: &PreparedClustered,
+    out: &mut [f32],
+    scratch: &mut LutScratch,
+    threads: usize,
+    epilogue: &[FusedStep<'_>],
+) -> Result<()> {
     if x.len() != m * prep.k {
         bail!("lut_matmul_packed: lhs has {} values, expected {m}x{}", x.len(), prep.k);
     }
@@ -351,7 +392,7 @@ pub fn lut_matmul_packed_into(
             bits: prep.bits,
         },
     };
-    lut_matmul(&task, m, out, Some(scratch), threads);
+    lut_matmul(&task, m, out, Some(scratch), threads, epilogue);
     Ok(())
 }
 

@@ -22,7 +22,8 @@
 use anyhow::{bail, Result};
 
 use super::eval::attr_list;
-use super::ops::{advance, strides};
+use super::ops::{advance, fused_apply, strides, FusedStep};
+use super::tuning::{GEMM_KC as KC, GEMM_MR as MR, GEMM_PAR_MIN_FLOPS as PAR_MIN_FLOPS};
 use crate::tensor::Tensor;
 
 /// Contracting/batch dimension lists of an XLA `DotGeneral`.
@@ -160,6 +161,26 @@ pub fn dot_general_into(
     scratch: &mut PackScratch,
     threads: usize,
 ) {
+    dot_general_ep_into(lhs, ld, rhs, rd, canon, out, scratch, threads, &[]);
+}
+
+/// [`dot_general_into`] with a fused elementwise epilogue: the planner's
+/// bias/activation/residual steps are applied to each output row chunk
+/// right after its accumulation finishes — inside the same fan-out
+/// chunk, while the rows are still cache-hot — instead of as separate
+/// full passes over a materialized intermediate.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dot_general_ep_into(
+    lhs: &[f32],
+    ld: &[usize],
+    rhs: &[f32],
+    rd: &[usize],
+    canon: &Canon,
+    out: &mut [f32],
+    scratch: &mut PackScratch,
+    threads: usize,
+    epilogue: &[FusedStep<'_>],
+) {
     if out.is_empty() {
         return;
     }
@@ -176,7 +197,7 @@ pub fn dot_general_into(
         &scratch.w
     };
     out.fill(0.0);
-    gemm(canon.b, canon.m, canon.k, canon.n, a, w, out, threads);
+    gemm_ep(canon.b, canon.m, canon.k, canon.n, a, w, out, threads, epilogue);
 }
 
 /// General `dot` (XLA DotGeneral) through the blocked GEMM kernel, with
@@ -209,17 +230,6 @@ pub fn dot_general(
     Tensor::from_f32(canon.out_dims, &out)
 }
 
-/// Below this many flops the fan-out/latch overhead dominates and the
-/// kernel runs single-threaded regardless of budget.
-const PAR_MIN_FLOPS: usize = 1 << 20;
-
-/// k-block size: one lhs block row (`MR x KC` f32) plus the streamed rhs
-/// rows stay L1/L2-resident.
-const KC: usize = 256;
-
-/// Register tile height: rhs rows loaded once per MR output rows.
-const MR: usize = 4;
-
 /// Flattened problem sizes handed to the row microkernel.
 #[doc(hidden)]
 #[derive(Clone, Copy)]
@@ -246,21 +256,55 @@ pub fn gemm(
     out: &mut [f32],
     threads: usize,
 ) {
+    gemm_ep(b, m, k, n, a, w, out, threads, &[]);
+}
+
+/// [`gemm`] with a fused elementwise epilogue applied to each output row
+/// chunk immediately after that chunk's accumulation completes (on the
+/// same lane, rows still cache-hot). The epilogue transforms each
+/// element exactly once in flat output order, so fused results equal the
+/// unfused kernel-chain bit for bit at every thread count. A `k == 0`
+/// problem still runs the epilogue over the zero-filled output, matching
+/// the unfused chain on a zero dot.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_ep(
+    b: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    threads: usize,
+    epilogue: &[FusedStep<'_>],
+) {
     debug_assert_eq!(a.len(), b * m * k);
     debug_assert_eq!(w.len(), b * k * n);
     debug_assert_eq!(out.len(), b * m * n);
     let rows = b * m;
-    if rows == 0 || n == 0 || k == 0 {
+    if rows == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !epilogue.is_empty() {
+            fused_apply(epilogue, 0, out);
+        }
         return;
     }
     let tile = Tile { m, k, n };
     let flops = 2usize.saturating_mul(rows).saturating_mul(n).saturating_mul(k);
     if threads <= 1 || flops < PAR_MIN_FLOPS {
         gemm_rows(0, rows, tile, a, w, out);
+        if !epilogue.is_empty() {
+            fused_apply(epilogue, 0, out);
+        }
         return;
     }
     super::pool_exec::par_for_rows(threads, rows, n, out, |row0, out_chunk| {
         gemm_rows(row0, out_chunk.len() / n, tile, a, w, out_chunk);
+        if !epilogue.is_empty() {
+            fused_apply(epilogue, row0 * n, out_chunk);
+        }
     });
 }
 

@@ -38,6 +38,7 @@ mod arena;
 mod eval;
 mod ops;
 mod plan;
+mod tuning;
 
 pub mod clustered;
 pub mod gemm;
@@ -57,6 +58,41 @@ use crate::tensor::Tensor;
 
 pub use eval::{evaluate_unplanned, WeightCache};
 pub use plan::MemoryPlan;
+
+/// Whether plan-time operator fusion is enabled, from the
+/// `CLUSTERFORMER_FUSION` env var (`--no-fusion` at the CLI): unset,
+/// empty, `1`, `true`, or `on` mean enabled; `0`, `false`, or `off`
+/// disable every fused lowering so the classic per-kernel path can be
+/// A/B'd. Resolved once per process (the CLI flag sets the env var
+/// before the first resolution, mirroring the `--threads` knob);
+/// executors can override per instance with
+/// [`InterpExecutor::with_fusion`].
+pub fn fusion_from_env() -> bool {
+    static RESOLVED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| match std::env::var("CLUSTERFORMER_FUSION") {
+        Ok(s) => {
+            let t = s.trim();
+            if t == "0" || t.eq_ignore_ascii_case("false") || t.eq_ignore_ascii_case("off") {
+                crate::log_info!(
+                    "CLUSTERFORMER_FUSION={s:?}: plan-time operator fusion disabled"
+                );
+                false
+            } else {
+                if !(t.is_empty()
+                    || t == "1"
+                    || t.eq_ignore_ascii_case("true")
+                    || t.eq_ignore_ascii_case("on"))
+                {
+                    crate::log_warn!(
+                        "CLUSTERFORMER_FUSION={s:?} is not recognized; fusion stays enabled"
+                    );
+                }
+                true
+            }
+        }
+        Err(_) => true,
+    })
+}
 
 /// The interpreter backend: a factory carrying the kernel
 /// [`ThreadBudget`] every executor it loads inherits. Construct with
@@ -102,8 +138,9 @@ impl PlannedState {
         exec: &clustered::ExecPlan,
         cache: Option<&WeightCache>,
         name: &str,
+        fusion: bool,
     ) -> Option<PlannedState> {
-        match plan::build(module, exec, cache) {
+        match plan::build(module, exec, cache, fusion) {
             Ok(mem) => {
                 let arena = Mutex::new(arena::Arena::new(&mem));
                 Some(PlannedState { mem, arena })
@@ -127,6 +164,9 @@ pub struct InterpExecutor {
     name: String,
     /// Kernel lane budget every execution of this module uses.
     threads: ThreadBudget,
+    /// Whether the memory plan applies operator fusion
+    /// (`CLUSTERFORMER_FUSION` default, [`Self::with_fusion`] override).
+    fusion: bool,
     /// Cache-less memory plan for the full-input path, built lazily on
     /// first use: residents re-plan against their weight cache anyway,
     /// so eagerly planning at load would waste a pass and a zeroed
@@ -158,6 +198,7 @@ impl InterpExecutor {
             n_params,
             name,
             threads: ThreadBudget::from_env(),
+            fusion: fusion_from_env(),
             planned: std::sync::OnceLock::new(),
         })
     }
@@ -169,14 +210,23 @@ impl InterpExecutor {
         self
     }
 
+    /// Enable/disable plan-time operator fusion (builder style; the
+    /// default comes from `CLUSTERFORMER_FUSION`). Must be set before
+    /// the lazy full-input plan is first built.
+    pub fn with_fusion(mut self, fusion: bool) -> Self {
+        self.fusion = fusion;
+        self
+    }
+
     /// The kernel lane budget this executor runs with.
     pub fn thread_budget(&self) -> ThreadBudget {
         self.threads
     }
 
     fn planned_state(&self) -> &Option<PlannedState> {
-        self.planned
-            .get_or_init(|| PlannedState::build(&self.module, &self.plan, None, &self.name))
+        self.planned.get_or_init(|| {
+            PlannedState::build(&self.module, &self.plan, None, &self.name, self.fusion)
+        })
     }
 
     /// The memory plan, when the module was plannable (None means the
@@ -212,7 +262,8 @@ impl InterpExecutor {
         // Content-addressed interning: residents at other batch sizes
         // with identical weight state share this allocation.
         let cache = pool::intern_cache(cache);
-        let planned = PlannedState::build(&self.module, &self.plan, Some(&cache), &self.name);
+        let planned =
+            PlannedState::build(&self.module, &self.plan, Some(&cache), &self.name, self.fusion);
         let fallback_values = match &planned {
             Some(ps) => {
                 // Fixed inputs are validated and staged (decoded to typed
@@ -451,7 +502,10 @@ mod tests {
     fn planned_matches_unplanned_on_softmax_shape() {
         // A softmax-shaped module exercises reduce, broadcast (in-place
         // candidates), subtract/exponential/divide chains, and the
-        // zero-copy alias path, with long-range reuse of %x.
+        // zero-copy alias path, with long-range reuse of %x. Fusion is
+        // disabled here on purpose: this pins the raw planned-slot
+        // machinery bit-for-bit (the fused softmax lowering is only
+        // ULP-equal and is covered by tests/fusion_props.rs).
         let hlo = "HloModule m\n\
             %max_f (p0: f32[], p1: f32[]) -> f32[] {\n  \
             %p0 = f32[] parameter(0)\n  \
@@ -472,7 +526,7 @@ mod tests {
             %sm = f32[4]{0} reduce(%x, %zero), dimensions={1}, to_apply=%add_f\n  \
             %smb = f32[4,8]{1,0} broadcast(%sm), dimensions={0}\n  \
             ROOT %o = f32[4,8]{1,0} divide(%x, %smb)\n}\n";
-        let exe = load(hlo);
+        let exe = load(hlo).with_fusion(false);
         let mem = exe.memory_plan().expect("softmax must be plannable");
         assert!(
             mem.peak_bytes() < mem.naive_bytes(),

@@ -1161,9 +1161,7 @@ pub(crate) fn gather_into<T: Copy>(
 // results are bit-for-bit identical at any budget.
 // ---------------------------------------------------------------------
 
-/// Below this many output elements an elementwise fan-out costs more
-/// than it saves (these kernels are memory-bound).
-const PAR_MIN_ELEMS: usize = 1 << 15;
+use super::tuning::EW_PAR_MIN_ELEMS as PAR_MIN_ELEMS;
 
 pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32, threads: usize) {
     if threads <= 1 || out.len() < PAR_MIN_ELEMS {
@@ -1508,6 +1506,204 @@ pub(crate) fn reduce_into<T: Copy + Send + Sync>(
                 f,
                 &mut out_chunk[r * out_block..(r + 1) * out_block],
             );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fused elementwise execution
+//
+// The planner (`super::plan`) collapses chains of elementwise ops — and
+// the elementwise epilogues it attaches to GEMM / LUT-matmul outputs —
+// into a list of [`FusedStep`]s evaluated per element in one pass, so
+// the intermediate activations of the chain are never written to (or
+// re-read from) memory. Each step applies exactly the same f32 operation
+// the standalone kernel would, in the same order, so fused execution is
+// **bit-for-bit identical** to the unfused chain; a folded broadcast
+// becomes an indexing mode ([`FusedArg::Row`]/[`FusedArg::Col`]/
+// [`FusedArg::Scalar`]) that reads the very value the materialized
+// broadcast would have held.
+// ---------------------------------------------------------------------
+
+/// Resolved second operand of one fused binary step.
+#[derive(Clone, Copy)]
+pub(crate) enum FusedArg<'a> {
+    /// Broadcast scalar (1-element operand or folded scalar broadcast).
+    Scalar(f32),
+    /// Full-size operand, read at the flat output element index.
+    Full(&'a [f32]),
+    /// Folded last-dim broadcast of a `[cols]` vector: `arg[e % cols]`
+    /// (the bias-row pattern).
+    Row(&'a [f32], usize),
+    /// Folded leading-dim broadcast of a vector: `arg[e / block]` (the
+    /// per-row normalizer pattern); `block` is the trailing-dims product.
+    Col(&'a [f32], usize),
+}
+
+impl FusedArg<'_> {
+    #[inline(always)]
+    fn get(&self, e: usize) -> f32 {
+        match *self {
+            FusedArg::Scalar(v) => v,
+            FusedArg::Full(v) => v[e],
+            FusedArg::Row(v, cols) => v[e % cols],
+            FusedArg::Col(v, block) => v[e / block],
+        }
+    }
+}
+
+/// One fused elementwise step applied to the running value.
+#[derive(Clone, Copy)]
+pub(crate) enum FusedStep<'a> {
+    Unary(fn(f32) -> f32),
+    /// `value = f(value, arg)`
+    WithRhs(fn(f32, f32) -> f32, FusedArg<'a>),
+    /// `value = f(arg, value)`
+    WithLhs(fn(f32, f32) -> f32, FusedArg<'a>),
+}
+
+/// Run the step list over one value at flat output index `e`.
+#[inline(always)]
+pub(crate) fn fused_eval(steps: &[FusedStep<'_>], mut v: f32, e: usize) -> f32 {
+    for s in steps {
+        v = match *s {
+            FusedStep::Unary(f) => f(v),
+            FusedStep::WithRhs(f, a) => f(v, a.get(e)),
+            FusedStep::WithLhs(f, a) => f(a.get(e), v),
+        };
+    }
+    v
+}
+
+/// Transform `out` in place: element `i` of the slice is flat output
+/// element `base + i`. This is the epilogue hook the GEMM and LUT
+/// kernels call on each freshly computed (cache-hot) row chunk.
+pub(crate) fn fused_apply(steps: &[FusedStep<'_>], base: usize, out: &mut [f32]) {
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = fused_eval(steps, *v, base + i);
+    }
+}
+
+/// Fused elementwise chain: `out[e] = steps(src[e], e)`, one pass.
+pub(crate) fn fused_chain_into(
+    src: &[f32],
+    steps: &[FusedStep<'_>],
+    out: &mut [f32],
+    threads: usize,
+) {
+    if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+        for (e, (o, &x)) in out.iter_mut().zip(src).enumerate() {
+            *o = fused_eval(steps, x, e);
+        }
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, out.len(), 1, out, |lo, chunk| {
+        for (i, (o, &x)) in chunk.iter_mut().zip(&src[lo..lo + chunk.len()]).enumerate() {
+            *o = fused_eval(steps, x, lo + i);
+        }
+    });
+}
+
+/// [`fused_chain_into`] with the source consumed in place (the planner's
+/// `alias_of = Some(0)` case). Safe even when a [`FusedArg::Full`] step
+/// references other storage: each element is fully read before it is
+/// written (the planner never aliases an argument with the source).
+pub(crate) fn fused_chain_inplace(buf: &mut [f32], steps: &[FusedStep<'_>], threads: usize) {
+    if threads <= 1 || buf.len() < PAR_MIN_ELEMS {
+        fused_apply(steps, 0, buf);
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, buf.len(), 1, buf, |lo, chunk| {
+        fused_apply(steps, lo, chunk);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fused row softmax (online formulation)
+// ---------------------------------------------------------------------
+
+/// Running (max, sum) of one row in a single read pass: whenever a new
+/// maximum appears the accumulated sum is rescaled by `exp(m_old -
+/// m_new)`. The final max is *exactly* the row max (max is exact); only
+/// the sum carries reordering error from the rescale products.
+#[inline]
+fn softmax_stats(x: &[f32]) -> (f32, f32) {
+    let mut m = f32::NEG_INFINITY;
+    let mut s = 0.0f32;
+    for &v in x {
+        if v > m {
+            // First element: s == 0, exp(-inf) == 0, product stays 0.
+            s *= (m - v).exp();
+            m = v;
+        }
+        s += (v - m).exp();
+    }
+    (m, s)
+}
+
+fn softmax_row(x: &[f32], out: &mut [f32]) {
+    let (m, s) = softmax_stats(x);
+    // The numerator uses the exact final max — identical to the classic
+    // subtract/exp lowering — and divides like the classic `divide`, so
+    // the only deviation from the unfused chain is the few-ULP error in
+    // `s` (validated <= 4 ULP end to end in `tests/fusion_props.rs`).
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v - m).exp() / s;
+    }
+}
+
+fn softmax_row_inplace(x: &mut [f32]) {
+    let (m, s) = softmax_stats(x);
+    for v in x.iter_mut() {
+        *v = (*v - m).exp() / s;
+    }
+}
+
+/// Fused row softmax: `out[r, :] = softmax(src[r, :])` over a row-major
+/// `[rows, cols]` view, replacing the classic five-kernel lowering
+/// (reduce-max, broadcast+subtract, exp, reduce-add, broadcast+divide)
+/// with two passes over the row — one online (max, sum) read and one
+/// write — instead of five read/write sweeps plus two materialized
+/// broadcasts. Rows are independent and each is computed by exactly one
+/// lane, so results are identical at every thread budget.
+pub(crate) fn softmax_rows_into(
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
+        for r in 0..rows {
+            softmax_row(&src[r * cols..(r + 1) * cols], &mut out[r * cols..(r + 1) * cols]);
+        }
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, rows, cols, out, |row0, chunk| {
+        for (r, orow) in chunk.chunks_mut(cols).enumerate() {
+            let g = row0 + r;
+            softmax_row(&src[g * cols..(g + 1) * cols], orow);
+        }
+    });
+}
+
+/// [`softmax_rows_into`] with the source consumed in place.
+pub(crate) fn softmax_rows_inplace(buf: &mut [f32], rows: usize, cols: usize, threads: usize) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
+        for row in buf[..rows * cols].chunks_mut(cols) {
+            softmax_row_inplace(row);
+        }
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, rows, cols, buf, |_row0, chunk| {
+        for row in chunk.chunks_mut(cols) {
+            softmax_row_inplace(row);
         }
     });
 }

@@ -12,6 +12,23 @@
 //! whose summed capacity is the arena footprint (`peak_bytes`, vs
 //! `naive_bytes` for one private buffer per instruction).
 //!
+//! **Operator fusion** happens here too, at bind time: chains of
+//! elementwise ops collapse into one multi-op kernel run in a single
+//! pass over the data; elementwise epilogues (bias add via a folded
+//! broadcast, GELU/erf/tanh, residual add, scale) attach to the
+//! producing GEMM / LUT matmul and transform each output row chunk while
+//! it is still cache-hot; and the numerically-stable row-softmax idiom
+//! (reduce-max → subtract → exp → reduce-add → divide) lowers to one
+//! online-formulation kernel. Fused-away intermediates are never
+//! assigned slots, so `peak_bytes` genuinely drops, and the bytes their
+//! write+read round trips would have moved are reported as
+//! `fused_bytes_saved`. Elementwise and epilogue fusion are bit-for-bit
+//! identical to the unfused lowering; the fused softmax is not
+//! bit-identical by construction (the online running-max/sum reorders
+//! the denominator reduction) and is held to a ≤ 4 ULP contract against
+//! the classic path in `tests/fusion_props.rs`. `CLUSTERFORMER_FUSION=0`
+//! (or `--no-fusion`) disables the pass for A/B comparison.
+//!
 //! Planning is conservative: any construct outside the planned subset
 //! (non-root tuples, `get-tuple-element`, exotic dtypes, malformed
 //! shapes) fails the build and the executor falls back to the classic
@@ -24,7 +41,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::arena::TypedVal;
+use super::arena::{Buf, TypedVal};
 use super::clustered::ExecPlan;
 use super::eval::{attr_int, attr_list, attr_str, host_dtype, reducer_op, WeightCache};
 use super::gemm::{self, DotSpec};
@@ -60,6 +77,35 @@ pub(crate) enum Action {
     Compute { slot: usize, alias_of: Option<usize>, cfg: OpCfg },
 }
 
+/// Where a fused elementwise step's second operand comes from: an
+/// ordinal into the tail instruction's rewritten operand list, plus the
+/// indexing mode that replaces a materialized broadcast (the flat output
+/// element index `e` maps to `[0]`, `[e]`, `[e % cols]`, `[e / block]`).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum FusedIn {
+    /// 1-element operand (or folded scalar broadcast).
+    Scalar(usize),
+    /// Full-size operand, read at the flat element index.
+    Full(usize),
+    /// Folded last-dim broadcast of a `[cols]` vector (bias row).
+    Row(usize, usize),
+    /// Folded leading-dim broadcast (per-row normalizer); the second
+    /// field is the trailing-dims block size.
+    Col(usize, usize),
+}
+
+/// One fused elementwise step, applied to the running value in chain
+/// order — exactly the operation (and operand side) the standalone
+/// kernel would apply, so fused execution is bit-for-bit identical.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum FusedOp {
+    Unary(fn(f32) -> f32),
+    /// `value = f(value, arg)`
+    WithRhs(fn(f32, f32) -> f32, FusedIn),
+    /// `value = f(arg, value)`
+    WithLhs(fn(f32, f32) -> f32, FusedIn),
+}
+
 /// Parsed per-instruction kernel configuration (attribute text is never
 /// touched at run time).
 #[derive(Debug)]
@@ -75,13 +121,30 @@ pub(crate) enum OpCfg {
     Transpose { perm: Vec<usize> },
     Slice(ops::SliceSpec),
     Concat { blocks: Vec<usize>, outer: usize },
-    Dot(gemm::Canon),
+    /// GEMM, with the fused elementwise epilogue (empty = none) applied
+    /// per cache-hot output row chunk.
+    Dot { canon: gemm::Canon, epilogue: Vec<FusedOp> },
     /// LUT clustered dot; `idx`/`table` are instruction indices, read
-    /// only when the weight is not prepared in the cache.
-    ClusteredDot { m: usize, k: usize, n: usize, idx: usize, table: usize },
+    /// only when the weight is not prepared in the cache. `key` is the
+    /// *head* dot's instruction name (differs from the executing
+    /// instruction when an epilogue chain was fused onto it), used to
+    /// look up the prepared packed weight.
+    ClusteredDot {
+        m: usize,
+        k: usize,
+        n: usize,
+        idx: usize,
+        table: usize,
+        key: String,
+        epilogue: Vec<FusedOp>,
+    },
     Conv(ops::ConvCfg),
     Reduce { dims: Vec<usize>, op: ops::ReduceOp },
     Gather(ops::GatherCfg),
+    /// Fused elementwise chain over operand 0, one pass over the data.
+    Fused { steps: Vec<FusedOp> },
+    /// Fused row softmax of operand 0 (online running-max/sum form).
+    Softmax { rows: usize, cols: usize },
 }
 
 /// The bind-time product: see the module docs.
@@ -99,6 +162,10 @@ pub struct MemoryPlan {
     pub(crate) param_read: Vec<bool>,
     peak_bytes: usize,
     naive_bytes: usize,
+    fused_chains: usize,
+    fused_epilogues: usize,
+    fused_softmax: usize,
+    fused_bytes_saved: usize,
 }
 
 impl MemoryPlan {
@@ -108,13 +175,36 @@ impl MemoryPlan {
     }
 
     /// Bytes with one private buffer per instruction (what the classic
-    /// evaluator keeps resident).
+    /// evaluator keeps resident). Counts fused-away intermediates too,
+    /// so fused and unfused plans of one module report the same naive
+    /// baseline.
     pub fn naive_bytes(&self) -> usize {
         self.naive_bytes
     }
 
     pub fn slot_count(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Standalone fused elementwise chains in the plan.
+    pub fn fused_chains(&self) -> usize {
+        self.fused_chains
+    }
+
+    /// GEMM / LUT matmuls that carry a fused elementwise epilogue.
+    pub fn fused_epilogues(&self) -> usize {
+        self.fused_epilogues
+    }
+
+    /// Row-softmax idioms lowered to the fused online kernel.
+    pub fn fused_softmax(&self) -> usize {
+        self.fused_softmax
+    }
+
+    /// Intermediate bytes no longer written + re-read per execution
+    /// because their producing instructions were fused away.
+    pub fn fused_bytes_saved(&self) -> usize {
+        self.fused_bytes_saved
     }
 }
 
@@ -183,12 +273,492 @@ fn live_reads<'a>(
     }
 }
 
+// ---------------------------------------------------------------------
+// Plan-time operator fusion
+// ---------------------------------------------------------------------
+
+/// Product of the fusion pass: the per-tail lowering rewrites plus the
+/// set of instructions whose values are no longer materialized.
+#[derive(Debug, Default)]
+struct Fusion {
+    rewrites: HashMap<usize, Rewrite>,
+    fused_away: Vec<bool>,
+    chains: usize,
+    epilogues: usize,
+    softmax: usize,
+}
+
+/// How a rewritten tail instruction executes.
+#[derive(Debug)]
+enum Rewrite {
+    /// The tail runs the `dot` at `head` (whose operands lead the tail's
+    /// rewritten operand list) with `steps` as the GEMM epilogue.
+    DotEp { head: usize, steps: Vec<FusedOp> },
+    /// Same, for a clustered (LUT) dot head.
+    ClusteredEp { head: usize, steps: Vec<FusedOp> },
+    /// The tail evaluates `steps` over operand 0 in one pass.
+    Chain { steps: Vec<FusedOp> },
+    /// The tail is the fused row softmax of operand 0.
+    Softmax { rows: usize, cols: usize },
+}
+
+/// Who reads each instruction's value in the current graph (`dce_reads`
+/// semantics: computes, aliases, the root tuple). A duplicate operand
+/// appears once per read, so `cons[v].len() == 1` means exactly one read.
+fn consumers(
+    insts: &[HloInstruction],
+    operands: &[Vec<usize>],
+    kind: &[Kind],
+    root: usize,
+) -> Vec<Vec<usize>> {
+    let mut cons: Vec<Vec<usize>> = vec![Vec::new(); insts.len()];
+    for i in 0..insts.len() {
+        for &op in dce_reads(insts, operands, kind, root, i) {
+            cons[op].push(i);
+        }
+    }
+    cons
+}
+
+fn is_f32(inst: &HloInstruction) -> bool {
+    matches!(host_dtype(&inst.shape.dtype), Ok(Dtype::F32))
+}
+
+/// `bi` must be a broadcast (consumed only by `user`) of a reduce-style
+/// `[leading dims]` value over every leading output dim. Returns the
+/// broadcast's source.
+#[allow(clippy::too_many_arguments)]
+fn match_norm_broadcast(
+    insts: &[HloInstruction],
+    kind: &[Kind],
+    cons: &[Vec<usize>],
+    operands: &[Vec<usize>],
+    root: usize,
+    bi: usize,
+    user: usize,
+    out_dims: &[usize],
+) -> Option<usize> {
+    if kind[bi] != Kind::Compute || bi == root || insts[bi].opcode != "broadcast" {
+        return None;
+    }
+    if insts[bi].shape.dims != out_dims || !is_f32(&insts[bi]) {
+        return None;
+    }
+    if !(cons[bi].len() == 1 && cons[bi][0] == user) {
+        return None;
+    }
+    let r = out_dims.len();
+    let dims_map = attr_list(insts[bi].attrs.as_str(), "dimensions")?;
+    if dims_map != (0..r - 1).collect::<Vec<_>>() {
+        return None;
+    }
+    let src = *operands[bi].first()?;
+    if insts[src].shape.dims.as_slice() != &out_dims[..r - 1] {
+        return None;
+    }
+    Some(src)
+}
+
+/// `ri` must be `reduce(data, init)` over the last dim with the given
+/// reducer and exact (bitwise) init constant, consumed only by `user`.
+#[allow(clippy::too_many_arguments)]
+fn match_softmax_reduce(
+    module: &HloModule,
+    insts: &[HloInstruction],
+    kind: &[Kind],
+    cons: &[Vec<usize>],
+    operands: &[Vec<usize>],
+    presets: &HashMap<usize, TypedVal>,
+    root: usize,
+    ri: usize,
+    user: usize,
+    data: usize,
+    out_dims: &[usize],
+    want_op: ops::ReduceOp,
+    want_init: f32,
+) -> Option<()> {
+    if kind[ri] != Kind::Compute || ri == root || insts[ri].opcode != "reduce" {
+        return None;
+    }
+    if !(cons[ri].len() == 1 && cons[ri][0] == user) {
+        return None;
+    }
+    let ro = &operands[ri];
+    if ro.len() != 2 || ro[0] != data {
+        return None;
+    }
+    let attrs = insts[ri].attrs.as_str();
+    if attr_list(attrs, "dimensions")? != [out_dims.len() - 1] {
+        return None;
+    }
+    if reducer_op(module, attr_str(attrs, "to_apply")?).ok()? != want_op {
+        return None;
+    }
+    match &presets.get(&ro[1])?.buf {
+        Buf::F32(v) if v.len() == 1 && v[0].to_bits() == want_init.to_bits() => Some(()),
+        _ => None,
+    }
+}
+
+/// Recognize the numerically-stable row-softmax idiom rooted at the
+/// `divide` instruction `i`:
+///
+/// ```text
+/// mx  = reduce_max(x)  over the last dim, init -inf
+/// c   = subtract(x, broadcast(mx))
+/// e   = exponential(c)
+/// sm  = reduce_add(e)  over the last dim, init 0
+/// out = divide(e, broadcast(sm))
+/// ```
+///
+/// Every interior value must be consumed only inside the idiom. Returns
+/// `(x, rows, cols, the six interior instructions)`.
+#[allow(clippy::too_many_arguments)]
+fn match_softmax(
+    module: &HloModule,
+    insts: &[HloInstruction],
+    exec: &ExecPlan,
+    root: usize,
+    kind: &[Kind],
+    operands: &[Vec<usize>],
+    presets: &HashMap<usize, TypedVal>,
+    cons: &[Vec<usize>],
+    i: usize,
+) -> Option<(usize, usize, usize, [usize; 6])> {
+    let interior_ew = |j: usize, op: &str| {
+        kind[j] == Kind::Compute
+            && j != root
+            && insts[j].opcode == op
+            && is_f32(&insts[j])
+            && !exec.clustered.contains_key(insts[j].name.as_str())
+    };
+    if kind[i] != Kind::Compute
+        || insts[i].opcode != "divide"
+        || !is_f32(&insts[i])
+        || exec.clustered.contains_key(insts[i].name.as_str())
+    {
+        return None;
+    }
+    let out_dims = insts[i].shape.dims.as_slice();
+    let r = out_dims.len();
+    if r < 2 {
+        return None;
+    }
+    let cols = out_dims[r - 1];
+    let rows: usize = out_dims[..r - 1].iter().product();
+    if rows == 0 || cols == 0 {
+        return None;
+    }
+    let &[e, smb] = operands[i].as_slice() else {
+        return None;
+    };
+    if !interior_ew(e, "exponential") || insts[e].shape.dims != out_dims {
+        return None;
+    }
+    let sm = match_norm_broadcast(insts, kind, cons, operands, root, smb, i, out_dims)?;
+    // The exponential feeds exactly the sum reduce and this divide.
+    if cons[e].len() != 2 || !cons[e].contains(&sm) || !cons[e].contains(&i) {
+        return None;
+    }
+    match_softmax_reduce(
+        module, insts, kind, cons, operands, presets, root, sm, smb, e, out_dims,
+        ops::ReduceOp::Add, 0.0,
+    )?;
+    let &[c] = operands[e].as_slice() else {
+        return None;
+    };
+    if !interior_ew(c, "subtract")
+        || insts[c].shape.dims != out_dims
+        || !(cons[c].len() == 1 && cons[c][0] == e)
+    {
+        return None;
+    }
+    let &[src, mxb] = operands[c].as_slice() else {
+        return None;
+    };
+    let mx = match_norm_broadcast(insts, kind, cons, operands, root, mxb, c, out_dims)?;
+    match_softmax_reduce(
+        module, insts, kind, cons, operands, presets, root, mx, mxb, src, out_dims,
+        ops::ReduceOp::Max, f32::NEG_INFINITY,
+    )?;
+    if insts[src].shape.dims != out_dims || !is_f32(&insts[src]) || kind[src] == Kind::Skip {
+        return None;
+    }
+    Some((src, rows, cols, [mx, mxb, c, e, sm, smb]))
+}
+
+/// Resolve a chain step's second operand as a fused argument, folding a
+/// single-use materialized broadcast into an indexing mode when its
+/// shape allows. Pushes the argument instruction onto `new_ops` and, for
+/// a fold, the broadcast onto `away`.
+#[allow(clippy::too_many_arguments)]
+fn fold_arg(
+    insts: &[HloInstruction],
+    kind: &[Kind],
+    cons: &[Vec<usize>],
+    operands: &[Vec<usize>],
+    root: usize,
+    fused_away: &[bool],
+    other: usize,
+    base_dims: &[usize],
+    new_ops: &mut Vec<usize>,
+    away: &mut Vec<usize>,
+    folds: &mut usize,
+) -> Option<FusedIn> {
+    if fused_away[other] || !is_f32(&insts[other]) {
+        return None;
+    }
+    let oel: usize = insts[other].shape.dims.iter().product();
+    let out_elems: usize = base_dims.iter().product();
+    if oel == 1 {
+        new_ops.push(other);
+        return Some(FusedIn::Scalar(new_ops.len() - 1));
+    }
+    if insts[other].opcode == "broadcast"
+        && kind[other] == Kind::Compute
+        && other != root
+        && cons[other].len() == 1
+    {
+        let src = *operands[other].first()?;
+        if !fused_away[src] && is_f32(&insts[src]) {
+            let sdims = insts[src].shape.dims.as_slice();
+            let s_el: usize = sdims.iter().product();
+            let dims_map =
+                attr_list(insts[other].attrs.as_str(), "dimensions").unwrap_or_default();
+            let r = base_dims.len();
+            if s_el == 1 {
+                new_ops.push(src);
+                away.push(other);
+                *folds += 1;
+                return Some(FusedIn::Scalar(new_ops.len() - 1));
+            }
+            if sdims.len() == 1 && r >= 1 && dims_map == [r - 1] && sdims[0] == base_dims[r - 1]
+            {
+                new_ops.push(src);
+                away.push(other);
+                *folds += 1;
+                return Some(FusedIn::Row(new_ops.len() - 1, base_dims[r - 1]));
+            }
+            if sdims.len() == 1 && r >= 2 && dims_map == [0] && sdims[0] == base_dims[0] {
+                let block: usize = base_dims[1..].iter().product();
+                new_ops.push(src);
+                away.push(other);
+                *folds += 1;
+                return Some(FusedIn::Col(new_ops.len() - 1, block));
+            }
+        }
+        // Unfoldable broadcast: falls through to the full-operand case
+        // (it stays materialized and is read like any other value).
+    }
+    if oel == out_elems {
+        new_ops.push(other);
+        return Some(FusedIn::Full(new_ops.len() - 1));
+    }
+    None
+}
+
+/// The fusion pass: rewrites `kind`/`operands` in place and returns the
+/// per-tail lowerings. Runs the softmax idiom first (a chain would
+/// otherwise absorb the subtract/exp interior into the scores dot and
+/// strand the reductions on a skipped value), then greedy maximal
+/// elementwise chains growing out of dot / LUT-dot / elementwise heads.
+fn fuse(
+    module: &HloModule,
+    insts: &[HloInstruction],
+    exec: &ExecPlan,
+    root: usize,
+    kind: &mut [Kind],
+    operands: &mut [Vec<usize>],
+    presets: &HashMap<usize, TypedVal>,
+) -> Fusion {
+    let n = insts.len();
+    let mut fu = Fusion { fused_away: vec![false; n], ..Default::default() };
+
+    let cons = consumers(insts, operands, kind, root);
+    for i in 0..n {
+        if let Some((src, rows, cols, away)) =
+            match_softmax(module, insts, exec, root, kind, operands, presets, &cons, i)
+        {
+            if away.iter().any(|&j| fu.fused_away[j]) {
+                continue;
+            }
+            for &j in &away {
+                kind[j] = Kind::Skip;
+                fu.fused_away[j] = true;
+            }
+            operands[i] = vec![src];
+            fu.rewrites.insert(i, Rewrite::Softmax { rows, cols });
+            fu.softmax += 1;
+        }
+    }
+
+    // Chains and epilogues, over the softmax-rewritten graph.
+    let cons = consumers(insts, operands, kind, root);
+    for h in 0..n {
+        if fu.fused_away[h] || kind[h] != Kind::Compute || fu.rewrites.contains_key(&h) {
+            continue;
+        }
+        if !is_f32(&insts[h]) {
+            continue;
+        }
+        let clustered = exec.clustered.contains_key(insts[h].name.as_str());
+        let is_dot = clustered || insts[h].opcode == "dot";
+        // A malformed dot (wrong operand arity) must keep failing the
+        // build gracefully in build_cfg — never head an epilogue whose
+        // rewritten cfg would index operands it does not have.
+        if !clustered && insts[h].opcode == "dot" && operands[h].len() != 2 {
+            continue;
+        }
+        let base_dims = insts[h].shape.dims.clone();
+        let out_elems = elems_of(&insts[h]);
+        if out_elems == 0 {
+            continue;
+        }
+
+        let mut steps: Vec<FusedOp> = Vec::new();
+        let mut away: Vec<usize> = Vec::new();
+        let mut folds = 0usize;
+        let mut new_ops: Vec<usize>;
+        if is_dot {
+            new_ops = operands[h].clone();
+        } else if let Some(f) = ops::unary_fn(&insts[h].opcode) {
+            if operands[h].len() != 1 {
+                continue;
+            }
+            let src = operands[h][0];
+            if elems_of(&insts[src]) != out_elems || !is_f32(&insts[src]) {
+                continue;
+            }
+            new_ops = vec![src];
+            steps.push(FusedOp::Unary(f));
+        } else if let Some(f) = ops::binary_f32_fn(&insts[h].opcode) {
+            if operands[h].len() != 2 {
+                continue;
+            }
+            let (a, b) = (operands[h][0], operands[h][1]);
+            // Carry the full-size side; the other side becomes an arg.
+            let carry_pos = if elems_of(&insts[a]) == out_elems {
+                0
+            } else if elems_of(&insts[b]) == out_elems {
+                1
+            } else {
+                continue;
+            };
+            let carried = operands[h][carry_pos];
+            if !is_f32(&insts[carried]) {
+                continue;
+            }
+            new_ops = vec![carried];
+            let other = operands[h][1 - carry_pos];
+            let Some(arg) = fold_arg(
+                insts, kind, &cons, operands, root, &fu.fused_away, other, &base_dims,
+                &mut new_ops, &mut away, &mut folds,
+            ) else {
+                continue;
+            };
+            steps.push(if carry_pos == 0 {
+                FusedOp::WithRhs(f, arg)
+            } else {
+                FusedOp::WithLhs(f, arg)
+            });
+        } else {
+            continue;
+        }
+
+        // Extend through the unique elementwise consumer while the
+        // chain's value dies at each step.
+        let mut tail = h;
+        loop {
+            if tail == root {
+                break;
+            }
+            let cs = &cons[tail];
+            if cs.len() != 1 {
+                break;
+            }
+            let c = cs[0];
+            if fu.fused_away[c]
+                || kind[c] != Kind::Compute
+                || fu.rewrites.contains_key(&c)
+                || exec.clustered.contains_key(insts[c].name.as_str())
+                || !is_f32(&insts[c])
+                || insts[c].shape.dims != base_dims
+            {
+                break;
+            }
+            let step = if let Some(f) = ops::unary_fn(&insts[c].opcode) {
+                if operands[c].len() != 1 {
+                    break;
+                }
+                FusedOp::Unary(f)
+            } else if let Some(f) = ops::binary_f32_fn(&insts[c].opcode) {
+                if operands[c].len() != 2 {
+                    break;
+                }
+                let pos = match (operands[c][0] == tail, operands[c][1] == tail) {
+                    (true, false) => 0,
+                    (false, true) => 1,
+                    // Both sides (f(v, v)): the value is read twice, so
+                    // it cannot die into the chain.
+                    _ => break,
+                };
+                let other = operands[c][1 - pos];
+                let Some(arg) = fold_arg(
+                    insts, kind, &cons, operands, root, &fu.fused_away, other, &base_dims,
+                    &mut new_ops, &mut away, &mut folds,
+                ) else {
+                    break;
+                };
+                if pos == 0 {
+                    FusedOp::WithRhs(f, arg)
+                } else {
+                    FusedOp::WithLhs(f, arg)
+                }
+            } else {
+                break;
+            };
+            steps.push(step);
+            away.push(tail);
+            tail = c;
+        }
+
+        // A rewrite must buy something: an epilogue on a dot always does
+        // (the dot's output transforms while cache-hot and the chain's
+        // buffers disappear); a standalone chain needs >= 2 fused ops or
+        // a folded broadcast.
+        let worth = if is_dot { !steps.is_empty() } else { steps.len() >= 2 || folds > 0 };
+        if !worth {
+            continue;
+        }
+        for &j in &away {
+            kind[j] = Kind::Skip;
+            fu.fused_away[j] = true;
+        }
+        operands[tail] = new_ops;
+        let rw = if clustered {
+            fu.epilogues += 1;
+            Rewrite::ClusteredEp { head: h, steps }
+        } else if is_dot {
+            fu.epilogues += 1;
+            Rewrite::DotEp { head: h, steps }
+        } else {
+            fu.chains += 1;
+            Rewrite::Chain { steps }
+        };
+        fu.rewrites.insert(tail, rw);
+    }
+    fu
+}
+
 /// Build the memory plan for `module` under the clustered execution plan
-/// and (for residents) the bound weight cache.
+/// and (for residents) the bound weight cache. `fuse_ops` gates the
+/// plan-time operator fusion pass (`CLUSTERFORMER_FUSION` /
+/// `--no-fusion` at the executor level).
 pub(crate) fn build(
     module: &HloModule,
     exec: &ExecPlan,
     cache: Option<&WeightCache>,
+    fuse_ops: bool,
 ) -> Result<MemoryPlan> {
     let entry = module.entry()?;
     let insts = entry.instructions.as_slice();
@@ -311,6 +881,16 @@ pub(crate) fn build(
         }
     }
 
+    // -- Plan-time operator fusion --------------------------------------
+    // Rewrites kinds/operands in place: fused-away intermediates become
+    // Skip (no slot, no kernel dispatch), tails pick up the fused
+    // lowering via `fusion.rewrites` when kernel configs are built.
+    let fusion = if fuse_ops {
+        fuse(module, insts, exec, root, &mut kind, &mut operands, &presets)
+    } else {
+        Fusion { fused_away: vec![false; n], ..Default::default() }
+    };
+
     // -- Dead-code elimination ------------------------------------------
     let mut use_count = vec![0usize; n];
     for i in 0..n {
@@ -396,7 +976,7 @@ pub(crate) fn build(
             cfgs.push(None);
             continue;
         }
-        cfgs.push(Some(build_cfg(module, insts, &operands, exec, i)?));
+        cfgs.push(Some(build_cfg(module, insts, &operands, exec, &fusion.rewrites, i)?));
     }
 
     // -- Slot assignment: greedy best-fit with in-place aliasing --------
@@ -410,11 +990,13 @@ pub(crate) fn build(
         }
         let dtype = host_dtype(&insts[i].shape.dtype)?;
         let elems = elems_of(&insts[i]);
-        // In-place: an elementwise operand of identical size whose
-        // storage dies at this very instruction can donate its slot.
+        // In-place: an elementwise (or fused-chain / fused-softmax
+        // source) operand of identical size whose storage dies at this
+        // very instruction can donate its slot.
         let inplace_ordinals: &[usize] = match cfgs[i].as_ref().unwrap() {
             OpCfg::Unary(_) => &[0],
             OpCfg::BinF32(_) | OpCfg::BinI32(_) | OpCfg::BinU8(_) => &[0, 1],
+            OpCfg::Fused { .. } | OpCfg::Softmax { .. } => &[0],
             _ => &[],
         };
         let mut chosen: Option<(usize, usize)> = None;
@@ -428,13 +1010,14 @@ pub(crate) fn build(
             if slots[s].dtype != dtype || elems_of(&insts[oj]) != elems {
                 continue;
             }
-            // The other side of a binary op must not live in the same
+            // No other operand of the instruction may live in the same
             // storage (mutating while reading it would corrupt).
-            if inplace_ordinals.len() == 2 {
-                let other = operands[i][1 - ord];
-                if base[other] == Base::Val(org) {
-                    continue;
-                }
+            if operands[i]
+                .iter()
+                .enumerate()
+                .any(|(j, &op)| j != ord && base[op] == Base::Val(org))
+            {
+                continue;
             }
             chosen = Some((s, ord));
             break;
@@ -520,14 +1103,33 @@ pub(crate) fn build(
 
     // What the classic evaluator holds resident: one private buffer per
     // computed instruction (aliases clone, presets re-materialize).
+    // Fused-away intermediates count toward the naive baseline (the
+    // classic path materializes them) and toward the traffic the fusion
+    // pass removed: each would have been written once and read back at
+    // least once.
     let mut naive_bytes = 0usize;
+    let mut fused_bytes_saved = 0usize;
     for i in 0..n {
-        if matches!(kind[i], Kind::Compute | Kind::Alias | Kind::Preset) {
+        let counted =
+            matches!(kind[i], Kind::Compute | Kind::Alias | Kind::Preset) || fusion.fused_away[i];
+        if counted {
             naive_bytes += elems_of(&insts[i]) * host_dtype(&insts[i].shape.dtype)?.size();
+        }
+        if fusion.fused_away[i] {
+            fused_bytes_saved +=
+                2 * elems_of(&insts[i]) * host_dtype(&insts[i].shape.dtype)?.size();
         }
     }
     let peak_bytes: usize = slots.iter().map(|s| s.elems * s.dtype.size()).sum();
-    super::stats::record_plan(peak_bytes, naive_bytes, slots.len());
+    super::stats::record_plan(
+        peak_bytes,
+        naive_bytes,
+        slots.len(),
+        fusion.chains,
+        fusion.epilogues,
+        fusion.softmax,
+        fused_bytes_saved,
+    );
 
     Ok(MemoryPlan {
         actions,
@@ -539,6 +1141,10 @@ pub(crate) fn build(
         param_read,
         peak_bytes,
         naive_bytes,
+        fused_chains: fusion.chains,
+        fused_epilogues: fusion.epilogues,
+        fused_softmax: fusion.softmax,
+        fused_bytes_saved,
     })
 }
 
@@ -586,6 +1192,106 @@ fn verify(
     Ok(())
 }
 
+/// Kernel config for a fusion-rewritten tail: the head's contraction
+/// (validated against the head instruction's declared shape) plus the
+/// fused step list, or the standalone chain / softmax lowering.
+fn build_rewritten_cfg(
+    insts: &[HloInstruction],
+    operands: &[Vec<usize>],
+    exec: &ExecPlan,
+    i: usize,
+    rw: &Rewrite,
+) -> Result<OpCfg> {
+    let inst = &insts[i];
+    let out_elems = elems_of(inst);
+    if host_dtype(&inst.shape.dtype)? != Dtype::F32 {
+        bail!("%{}: fused value must be f32", inst.name);
+    }
+    match rw {
+        Rewrite::Softmax { rows, cols } => {
+            let src = &insts[operands[i][0]];
+            if elems_of(src) != out_elems || rows * cols != out_elems {
+                bail!("%{}: fused softmax shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Softmax { rows: *rows, cols: *cols })
+        }
+        Rewrite::Chain { steps } => {
+            let src = &insts[operands[i][0]];
+            if elems_of(src) != out_elems || host_dtype(&src.shape.dtype)? != Dtype::F32 {
+                bail!("%{}: fused chain source mismatch", inst.name);
+            }
+            Ok(OpCfg::Fused { steps: steps.clone() })
+        }
+        Rewrite::DotEp { head, steps } => {
+            let hd = &insts[*head];
+            let lhs = &insts[operands[i][0]];
+            let rhs = &insts[operands[i][1]];
+            if host_dtype(&lhs.shape.dtype)? != Dtype::F32
+                || host_dtype(&rhs.shape.dtype)? != Dtype::F32
+            {
+                bail!("%{}: fused dot must be f32", inst.name);
+            }
+            let spec = DotSpec::from_attrs(hd.attrs.as_str());
+            let canon = gemm::canonicalize(&lhs.shape.dims, &rhs.shape.dims, &spec)?;
+            if canon.out_dims != hd.shape.dims || elems_of(hd) != out_elems {
+                bail!("%{}: fused dot shape mismatch", inst.name);
+            }
+            Ok(OpCfg::Dot { canon, epilogue: steps.clone() })
+        }
+        Rewrite::ClusteredEp { head, steps } => {
+            let hd = &insts[*head];
+            let cd = exec
+                .clustered
+                .get(hd.name.as_str())
+                .ok_or_else(|| anyhow!("%{}: fused clustered head missing", inst.name))?;
+            let lhs = &insts[operands[i][0]];
+            if host_dtype(&lhs.shape.dtype)? != Dtype::F32 {
+                bail!("%{}: clustered dot must be f32", inst.name);
+            }
+            let lhs_elems = elems_of(lhs);
+            if cd.k == 0 || lhs_elems % cd.k != 0 {
+                bail!(
+                    "%{}: lhs {:?} does not contract over k={}",
+                    inst.name,
+                    lhs.shape.dims,
+                    cd.k
+                );
+            }
+            let m = lhs_elems / cd.k;
+            if elems_of(hd) != m * cd.n || out_elems != m * cd.n {
+                bail!("%{}: fused clustered shape mismatch", inst.name);
+            }
+            // One appended arg per binary step marks where the head's
+            // operand list ([lhs] prepared, [lhs, idx, table] raw) ends.
+            let n_args = steps.iter().filter(|s| !matches!(s, FusedOp::Unary(_))).count();
+            let head_ops = operands[i].len() - n_args;
+            let (idx, table) = if head_ops == 3 {
+                let idx_inst = &insts[operands[i][1]];
+                if host_dtype(&idx_inst.shape.dtype)? != Dtype::U8
+                    || elems_of(idx_inst) != cd.k * cd.n
+                {
+                    bail!("%{}: clustered index tensor mismatch", inst.name);
+                }
+                if host_dtype(&insts[operands[i][2]].shape.dtype)? != Dtype::F32 {
+                    bail!("%{}: clustered table must be f32", inst.name);
+                }
+                (operands[i][1], operands[i][2])
+            } else {
+                (usize::MAX, usize::MAX)
+            };
+            Ok(OpCfg::ClusteredDot {
+                m,
+                k: cd.k,
+                n: cd.n,
+                idx,
+                table,
+                key: hd.name.clone(),
+                epilogue: steps.clone(),
+            })
+        }
+    }
+}
+
 /// Parse attributes and validate declared shapes for one compute
 /// instruction, producing its run-time kernel config.
 fn build_cfg(
@@ -593,8 +1299,12 @@ fn build_cfg(
     insts: &[HloInstruction],
     operands: &[Vec<usize>],
     exec: &ExecPlan,
+    rewrites: &HashMap<usize, Rewrite>,
     i: usize,
 ) -> Result<OpCfg> {
+    if let Some(rw) = rewrites.get(&i) {
+        return build_rewritten_cfg(insts, operands, exec, i, rw);
+    }
     let inst = &insts[i];
     let attrs = inst.attrs.as_str();
     let out_dims = inst.shape.dims.as_slice();
@@ -654,7 +1364,15 @@ fn build_cfg(
         } else {
             (usize::MAX, usize::MAX)
         };
-        return Ok(OpCfg::ClusteredDot { m, k: cd.k, n: cd.n, idx, table });
+        return Ok(OpCfg::ClusteredDot {
+            m,
+            k: cd.k,
+            n: cd.n,
+            idx,
+            table,
+            key: inst.name.clone(),
+            epilogue: Vec::new(),
+        });
     }
 
     if let Some(f) = ops::unary_fn(&inst.opcode) {
@@ -824,7 +1542,7 @@ fn build_cfg(
             if canon.out_dims != out_dims {
                 bail!("%{}: dot shape mismatch", inst.name);
             }
-            Ok(OpCfg::Dot(canon))
+            Ok(OpCfg::Dot { canon, epilogue: Vec::new() })
         }
         "convolution" => {
             if op_dtype(0)? != Dtype::F32 || op_dtype(1)? != Dtype::F32 || out_dtype != Dtype::F32
@@ -895,7 +1613,15 @@ mod tests {
     fn plan_for(hlo: &str) -> MemoryPlan {
         let module = HloModule::parse(hlo).unwrap();
         let exec = clustered::plan(&module);
-        build(&module, &exec, None).unwrap()
+        build(&module, &exec, None, true).unwrap()
+    }
+
+    /// Fusion disabled: the structure tests below pin the raw slot /
+    /// in-place machinery, which fusion would otherwise collapse.
+    fn plan_for_unfused(hlo: &str) -> MemoryPlan {
+        let module = HloModule::parse(hlo).unwrap();
+        let exec = clustered::plan(&module);
+        build(&module, &exec, None, false).unwrap()
     }
 
     #[test]
@@ -908,7 +1634,7 @@ mod tests {
             %a = f32[64]{0} exponential(%x)\n  \
             %b = f32[64]{0} negate(%a)\n  \
             ROOT %c = f32[64]{0} tanh(%b)\n}\n";
-        let mem = plan_for(hlo);
+        let mem = plan_for_unfused(hlo);
         assert_eq!(mem.slot_count(), 1, "in-place chain must reuse one slot");
         assert_eq!(mem.peak_bytes(), 64 * 4);
         assert_eq!(mem.naive_bytes(), 3 * 64 * 4);
@@ -916,6 +1642,109 @@ mod tests {
             mem.actions[2],
             Action::Compute { alias_of: Some(0), .. }
         ));
+        assert_eq!(mem.fused_chains(), 0, "fusion off must record no chains");
+    }
+
+    #[test]
+    fn elementwise_chain_fuses_to_one_kernel() {
+        // The same chain with fusion on: one Fused compute at the tail,
+        // interiors skipped, naive baseline unchanged.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[64]) -> f32[64] {\n  \
+            %x = f32[64]{0} parameter(0)\n  \
+            %a = f32[64]{0} exponential(%x)\n  \
+            %b = f32[64]{0} negate(%a)\n  \
+            ROOT %c = f32[64]{0} tanh(%b)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.fused_chains(), 1);
+        assert!(matches!(mem.actions[1], Action::Skip));
+        assert!(matches!(mem.actions[2], Action::Skip));
+        match &mem.actions[3] {
+            Action::Compute { cfg: OpCfg::Fused { steps }, .. } => {
+                assert_eq!(steps.len(), 3)
+            }
+            other => panic!("tail must be a fused chain, got {other:?}"),
+        }
+        assert_eq!(mem.slot_count(), 1);
+        assert_eq!(mem.naive_bytes(), 3 * 64 * 4, "naive counts fused-away nodes");
+        assert_eq!(mem.fused_bytes_saved(), 2 * 2 * 64 * 4, "a and b write+read removed");
+        assert_eq!(mem.operands[3], vec![0], "tail reads the chain source");
+    }
+
+    #[test]
+    fn bias_epilogue_attaches_to_dot() {
+        // dot -> +broadcast(bias) -> tanh: the broadcast folds to a Row
+        // arg and both elementwise ops ride the GEMM epilogue.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[4,8], w: f32[8,8], b: f32[8]) -> f32[4,8] {\n  \
+            %x = f32[4,8]{1,0} parameter(0)\n  \
+            %w = f32[8,8]{1,0} parameter(1)\n  \
+            %b = f32[8]{0} parameter(2)\n  \
+            %d = f32[4,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n  \
+            %bb = f32[4,8]{1,0} broadcast(%b), dimensions={1}\n  \
+            %s = f32[4,8]{1,0} add(%d, %bb)\n  \
+            ROOT %t = f32[4,8]{1,0} tanh(%s)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.fused_epilogues(), 1);
+        assert!(matches!(mem.actions[3], Action::Skip), "dot head moves to the tail");
+        assert!(matches!(mem.actions[4], Action::Skip), "bias broadcast folds away");
+        assert!(matches!(mem.actions[5], Action::Skip));
+        match &mem.actions[6] {
+            Action::Compute { cfg: OpCfg::Dot { epilogue, .. }, .. } => {
+                assert_eq!(epilogue.len(), 2);
+                assert!(matches!(epilogue[0], FusedOp::WithRhs(_, FusedIn::Row(2, 8))));
+                assert!(matches!(epilogue[1], FusedOp::Unary(_)));
+            }
+            other => panic!("tail must be an epilogue dot, got {other:?}"),
+        }
+        // Tail reads [lhs, rhs, bias-vector] — no [4,8] bias buffer.
+        assert_eq!(mem.operands[6], vec![0, 1, 2]);
+        assert_eq!(mem.slot_count(), 1);
+    }
+
+    #[test]
+    fn softmax_idiom_lowers_to_fused_kernel() {
+        let hlo = "HloModule m\n\
+            %max_f (p0: f32[], p1: f32[]) -> f32[] {\n  \
+            %p0 = f32[] parameter(0)\n  \
+            %p1 = f32[] parameter(1)\n  \
+            ROOT %r = f32[] maximum(%p0, %p1)\n}\n\
+            %add_f (q0: f32[], q1: f32[]) -> f32[] {\n  \
+            %q0 = f32[] parameter(0)\n  \
+            %q1 = f32[] parameter(1)\n  \
+            ROOT %r2 = f32[] add(%q0, %q1)\n}\n\
+            ENTRY %e (a: f32[4,8]) -> f32[4,8] {\n  \
+            %a = f32[4,8]{1,0} parameter(0)\n  \
+            %ninf = f32[] constant(-inf)\n  \
+            %mx = f32[4]{0} reduce(%a, %ninf), dimensions={1}, to_apply=%max_f\n  \
+            %mxb = f32[4,8]{1,0} broadcast(%mx), dimensions={0}\n  \
+            %c = f32[4,8]{1,0} subtract(%a, %mxb)\n  \
+            %x = f32[4,8]{1,0} exponential(%c)\n  \
+            %zero = f32[] constant(0)\n  \
+            %sm = f32[4]{0} reduce(%x, %zero), dimensions={1}, to_apply=%add_f\n  \
+            %smb = f32[4,8]{1,0} broadcast(%sm), dimensions={0}\n  \
+            ROOT %o = f32[4,8]{1,0} divide(%x, %smb)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.fused_softmax(), 1);
+        match &mem.actions[9] {
+            Action::Compute { cfg: OpCfg::Softmax { rows, cols }, .. } => {
+                assert_eq!((*rows, *cols), (4, 8));
+            }
+            other => panic!("divide must lower to fused softmax, got {other:?}"),
+        }
+        assert_eq!(mem.operands[9], vec![0], "softmax reads the raw scores");
+        // Interior (mx, mxb, c, x, sm, smb) and the dead init constants
+        // are all skipped — one [4,8] slot serves the whole idiom.
+        for j in [1usize, 2, 3, 4, 5, 6, 7, 8] {
+            assert!(matches!(mem.actions[j], Action::Skip), "action {j} must be skipped");
+        }
+        assert_eq!(mem.slot_count(), 1);
+        let unfused = plan_for_unfused(hlo);
+        assert_eq!(unfused.fused_softmax(), 0);
+        assert!(mem.peak_bytes() < unfused.peak_bytes(), "fusion must shrink the arena");
+        // Fused-away intermediates keep the naive baseline comparable;
+        // only the idiom's two dead scalar init constants drop out.
+        assert!(unfused.naive_bytes() - mem.naive_bytes() <= 8);
     }
 
     #[test]
@@ -958,13 +1787,45 @@ mod tests {
             %b = f32[16]{0} negate(%a)\n  \
             %c = f32[16]{0} tanh(%b)\n  \
             ROOT %o = f32[16]{0} add(%a, %c)\n}\n";
-        let mem = plan_for(hlo);
+        let mem = plan_for_unfused(hlo);
         assert_eq!(mem.slot_count(), 2);
         // The root add consumes %a (its first dying operand) in place.
         assert!(matches!(
             mem.actions[4],
             Action::Compute { alias_of: Some(0), .. }
         ));
+    }
+
+    #[test]
+    fn fused_chain_keeps_live_source_as_full_arg() {
+        // Same module, fusion on: %a stays materialized (two readers),
+        // the b -> c -> o chain fuses with %a as a Full argument of the
+        // final add — and must NOT run in place over %a's live slot.
+        let hlo = "HloModule m\n\
+            ENTRY %e (x: f32[16]) -> f32[16] {\n  \
+            %x = f32[16]{0} parameter(0)\n  \
+            %a = f32[16]{0} exponential(%x)\n  \
+            %b = f32[16]{0} negate(%a)\n  \
+            %c = f32[16]{0} tanh(%b)\n  \
+            ROOT %o = f32[16]{0} add(%a, %c)\n}\n";
+        let mem = plan_for(hlo);
+        assert_eq!(mem.fused_chains(), 1);
+        assert!(matches!(mem.actions[1], Action::Compute { .. }), "%a has two readers");
+        assert!(matches!(mem.actions[2], Action::Skip));
+        assert!(matches!(mem.actions[3], Action::Skip));
+        match &mem.actions[4] {
+            Action::Compute { alias_of, cfg: OpCfg::Fused { steps }, .. } => {
+                assert_eq!(steps.len(), 3);
+                assert!(matches!(steps[2], FusedOp::WithLhs(_, FusedIn::Full(1))));
+                assert_eq!(
+                    *alias_of, None,
+                    "source slot also feeds a step arg; in-place is unsafe"
+                );
+            }
+            other => panic!("tail must be a fused chain, got {other:?}"),
+        }
+        assert_eq!(mem.operands[4], vec![1, 1], "chain src and residual are both %a");
+        assert_eq!(mem.slot_count(), 2);
     }
 
     #[test]
@@ -989,7 +1850,7 @@ mod tests {
             ROOT %o = f32[2]{0} negate(%g)\n}\n";
         let module = HloModule::parse(hlo).unwrap();
         let exec = clustered::plan(&module);
-        assert!(build(&module, &exec, None).is_err());
+        assert!(build(&module, &exec, None, true).is_err());
     }
 
     #[test]

@@ -38,11 +38,7 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
-/// Iterations an idle worker spins (checking the pending counter) before
-/// parking on the condvar. Roughly tens of microseconds: long enough to
-/// catch the next dot of a forward pass, short enough that an idle
-/// process parks promptly.
-const SPIN_ITERS: usize = 1 << 14;
+use super::tuning::POOL_SPIN_ITERS as SPIN_ITERS;
 
 /// Completion latch for one fan-out, living on the caller's stack for
 /// the duration of the call.

@@ -21,6 +21,12 @@
 //! * [`par_fanouts`] — kernel calls that fanned out across the
 //!   persistent thread pool ([`super::pool_exec`]); a budget-1 run keeps
 //!   this flat.
+//! * [`fused_chains`] / [`fused_epilogues`] / [`fused_softmax`] /
+//!   [`fused_bytes_saved`] — operator-fusion footprint of the same
+//!   largest plan: standalone fused elementwise chains, GEMM/LUT dots
+//!   carrying fused epilogues, softmax idioms lowered to the online
+//!   kernel, and the intermediate bytes per execution that are no longer
+//!   written + re-read because their producers were fused away.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -29,6 +35,10 @@ static PLAN_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_NAIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_SLOT_COUNT: AtomicUsize = AtomicUsize::new(0);
 static PAR_FANOUTS: AtomicUsize = AtomicUsize::new(0);
+static FUSED_CHAINS: AtomicUsize = AtomicUsize::new(0);
+static FUSED_EPILOGUES: AtomicUsize = AtomicUsize::new(0);
+static FUSED_SOFTMAX: AtomicUsize = AtomicUsize::new(0);
+static FUSED_BYTES_SAVED: AtomicUsize = AtomicUsize::new(0);
 
 /// Tensor-sized heap allocations on the execution path so far (see the
 /// module docs for the exact contract).
@@ -69,15 +79,50 @@ pub(crate) fn count_par_fanout() {
     PAR_FANOUTS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// Standalone fused elementwise chains in the largest plan built.
+pub fn fused_chains() -> usize {
+    FUSED_CHAINS.load(Ordering::Relaxed)
+}
+
+/// GEMM / LUT dots carrying a fused epilogue in the largest plan built.
+pub fn fused_epilogues() -> usize {
+    FUSED_EPILOGUES.load(Ordering::Relaxed)
+}
+
+/// Softmax idioms lowered to the fused online kernel in the largest
+/// plan built.
+pub fn fused_softmax() -> usize {
+    FUSED_SOFTMAX.load(Ordering::Relaxed)
+}
+
+/// Intermediate bytes no longer written + re-read per execution of the
+/// largest plan built (fused-away producers).
+pub fn fused_bytes_saved() -> usize {
+    FUSED_BYTES_SAVED.load(Ordering::Relaxed)
+}
+
 /// Publish a freshly built plan's footprint (keeps the largest).
-pub(crate) fn record_plan(peak_bytes: usize, naive_bytes: usize, slots: usize) {
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn record_plan(
+    peak_bytes: usize,
+    naive_bytes: usize,
+    slots: usize,
+    chains: usize,
+    epilogues: usize,
+    softmax: usize,
+    bytes_saved: usize,
+) {
     // Keep the gauges describing one coherent plan: the one with the
-    // largest arena. fetch_max on the peak decides; the other two follow
+    // largest arena. fetch_max on the peak decides; the others follow
     // only when this plan wins (racy ties are harmless for a gauge).
     let prev = PLAN_PEAK_BYTES.fetch_max(peak_bytes, Ordering::Relaxed);
     if peak_bytes >= prev {
         PLAN_NAIVE_BYTES.store(naive_bytes, Ordering::Relaxed);
         PLAN_SLOT_COUNT.store(slots, Ordering::Relaxed);
+        FUSED_CHAINS.store(chains, Ordering::Relaxed);
+        FUSED_EPILOGUES.store(epilogues, Ordering::Relaxed);
+        FUSED_SOFTMAX.store(softmax, Ordering::Relaxed);
+        FUSED_BYTES_SAVED.store(bytes_saved, Ordering::Relaxed);
     }
 }
 
@@ -112,12 +157,17 @@ mod tests {
 
         // The gauges keep the largest plan; usize::MAX - 1 outranks any
         // real plan another test records concurrently.
-        record_plan(usize::MAX - 1, 10, 3);
+        record_plan(usize::MAX - 1, 10, 3, 2, 4, 1, 640);
         assert_eq!(plan_peak_bytes(), usize::MAX - 1);
         assert_eq!(plan_naive_bytes(), 10);
         assert_eq!(plan_slot_count(), 3);
+        assert_eq!(fused_chains(), 2);
+        assert_eq!(fused_epilogues(), 4);
+        assert_eq!(fused_softmax(), 1);
+        assert_eq!(fused_bytes_saved(), 640);
         // A smaller plan does not displace the gauges.
-        record_plan(1, 99, 99);
+        record_plan(1, 99, 99, 9, 9, 9, 9);
         assert_eq!(plan_naive_bytes(), 10);
+        assert_eq!(fused_bytes_saved(), 640);
     }
 }

@@ -1,0 +1,45 @@
+//! Kernel tuning constants for the interpreter, in one place.
+//!
+//! Before this module the parallelism cutoffs lived next to each kernel
+//! (`gemm.rs`, `ops.rs`, `clustered.rs`) and drifted independently; they
+//! are consolidated here so the "when is a fan-out worth it" policy can
+//! be read — and retuned — as one table. Every constant carries its
+//! rationale; the numbers were picked for small-core edge CPUs (the
+//! paper's Conf-1/2/3 class) where a pool fan-out costs roughly a
+//! microsecond of latch/wake work per lane.
+
+/// Below this many FLOPs (`2 * rows * n * k`) a GEMM runs on the caller
+/// only, regardless of budget: at ~1 GFLOP/s-per-core worst case this is
+/// ~1 ms of work, and under that the fan-out/latch overhead plus the
+/// cold-cache penalty of splitting the rhs stream across cores costs
+/// more than the parallel speedup returns.
+pub(crate) const GEMM_PAR_MIN_FLOPS: usize = 1 << 20;
+
+/// GEMM k-block size: one lhs block row (`GEMM_MR x GEMM_KC` f32) plus
+/// the streamed rhs rows stay L1/L2-resident, so each rhs row is read
+/// from DRAM once per k-block rather than once per output row.
+pub(crate) const GEMM_KC: usize = 256;
+
+/// GEMM register tile height: rhs rows are loaded once per `GEMM_MR`
+/// output rows. 4 keeps the accumulator rows within the 16 named SIMD
+/// registers of the narrowest target (aarch64 NEON) after the rhs row
+/// and loop temporaries.
+pub(crate) const GEMM_MR: usize = 4;
+
+/// Below this many output elements an elementwise/reduce fan-out costs
+/// more than it saves: these kernels are memory-bound, so a lane is only
+/// useful once it streams at least a few cache-line-sized pages
+/// (32k f32 = 128 KiB split across lanes).
+pub(crate) const EW_PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Below this much LUT-matmul work (bucket adds + cluster multiplies,
+/// `m * n * (k + clusters)`) the pool fan-out overhead dominates and the
+/// kernel runs single-threaded. Same order as [`GEMM_PAR_MIN_FLOPS`]:
+/// one bucket add is roughly one FLOP of work.
+pub(crate) const LUT_PAR_MIN_WORK: usize = 1 << 20;
+
+/// Iterations an idle pool worker spins (checking the pending counter)
+/// before parking on the condvar. Roughly tens of microseconds: long
+/// enough to catch the next dot of a forward pass, short enough that an
+/// idle process parks promptly.
+pub(crate) const POOL_SPIN_ITERS: usize = 1 << 14;

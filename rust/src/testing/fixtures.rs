@@ -1,47 +1,73 @@
 //! Shared synthetic-module fixtures for tests and benches (no artifacts
 //! needed).
 
-/// A ViT-block-shaped HLO chain over `[m, d]` activations: per layer a
-/// projection dot, a softmax-style normalize (exp / row-reduce /
-/// broadcast / divide), a second projection, and a residual add.
-/// Exercises slot reuse, in-place elementwise, zero-copy aliasing, and
-/// long-range residual liveness — the acceptance surface for the memory
-/// planner (`benches/interp_memory.rs` and `tests/memory_resident.rs`
-/// must measure the same graph family).
+/// An attention-shaped ViT block chain over `[m, d]` token activations
+/// (`m` tokens, `d` head dim — serving-shaped means `m >> d`). Per
+/// layer:
 ///
-/// Parameters: `x: f32[m,d]`, then `w{l}a`/`w{l}b: f32[d,d]` per layer.
+/// * a biased query projection (`dot` + last-dim bias broadcast),
+/// * key and value projections,
+/// * `q @ k^T` scores (`[m, m]`, contracting both trailing dims),
+/// * the numerically-stable row softmax over the scores — the exact
+///   reduce-max → subtract → exp → reduce-add → divide idiom the fusion
+///   pass lowers to one online kernel,
+/// * attention-weighted values, an `erf` activation, and a residual add.
+///
+/// Exercises slot reuse, in-place elementwise, long-range residual
+/// liveness, bias/scalar broadcast folding, GEMM epilogues, and the
+/// fused softmax — the acceptance surface for the memory planner AND the
+/// fusion pass (`benches/interp_memory.rs`, `benches/fusion.rs`, and
+/// `tests/memory_resident.rs` measure this same graph family).
+///
+/// Parameters: `x: f32[m,d]`, then per layer `w{l}q`/`w{l}k`/`w{l}v:
+/// f32[d,d]` and a bias `b{l}: f32[d]`.
 pub fn vit_shaped_hlo(m: usize, d: usize, layers: usize) -> String {
     let mut sig = vec![format!("x: f32[{m},{d}]")];
     let mut body = format!("  %x = f32[{m},{d}]{{1,0}} parameter(0)\n");
     for l in 0..layers {
-        sig.push(format!("w{l}a: f32[{d},{d}]"));
-        sig.push(format!("w{l}b: f32[{d},{d}]"));
-        body.push_str(&format!(
-            "  %w{l}a = f32[{d},{d}]{{1,0}} parameter({})\n",
-            1 + 2 * l
-        ));
-        body.push_str(&format!(
-            "  %w{l}b = f32[{d},{d}]{{1,0}} parameter({})\n",
-            2 + 2 * l
-        ));
+        sig.push(format!("w{l}q: f32[{d},{d}]"));
+        sig.push(format!("w{l}k: f32[{d},{d}]"));
+        sig.push(format!("w{l}v: f32[{d},{d}]"));
+        sig.push(format!("b{l}: f32[{d}]"));
+        for (j, name) in ["q", "k", "v"].iter().enumerate() {
+            body.push_str(&format!(
+                "  %w{l}{name} = f32[{d},{d}]{{1,0}} parameter({})\n",
+                1 + 4 * l + j
+            ));
+        }
+        body.push_str(&format!("  %b{l} = f32[{d}]{{0}} parameter({})\n", 4 + 4 * l));
     }
     let mut cur = "x".to_string();
     for l in 0..layers {
         body.push_str(&format!(
-            "  %l{l}h = f32[{m},{d}]{{1,0}} dot(%{cur}, %w{l}a), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
-             \x20 %l{l}e = f32[{m},{d}]{{1,0}} exponential(%l{l}h)\n\
+            "  %l{l}q = f32[{m},{d}]{{1,0}} dot(%{cur}, %w{l}q), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}bb = f32[{m},{d}]{{1,0}} broadcast(%b{l}), dimensions={{1}}\n\
+             \x20 %l{l}qb = f32[{m},{d}]{{1,0}} add(%l{l}q, %l{l}bb)\n\
+             \x20 %l{l}k = f32[{m},{d}]{{1,0}} dot(%{cur}, %w{l}k), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}s = f32[{m},{m}]{{1,0}} dot(%l{l}qb, %l{l}k), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n\
+             \x20 %l{l}ni = f32[] constant(-inf)\n\
+             \x20 %l{l}mx = f32[{m}]{{0}} reduce(%l{l}s, %l{l}ni), dimensions={{1}}, to_apply=%max_f\n\
+             \x20 %l{l}mb = f32[{m},{m}]{{1,0}} broadcast(%l{l}mx), dimensions={{0}}\n\
+             \x20 %l{l}c = f32[{m},{m}]{{1,0}} subtract(%l{l}s, %l{l}mb)\n\
+             \x20 %l{l}e = f32[{m},{m}]{{1,0}} exponential(%l{l}c)\n\
              \x20 %l{l}z = f32[] constant(0)\n\
-             \x20 %l{l}r = f32[{m}]{{0}} reduce(%l{l}e, %l{l}z), dimensions={{1}}, to_apply=%add_f\n\
-             \x20 %l{l}rb = f32[{m},{d}]{{1,0}} broadcast(%l{l}r), dimensions={{0}}\n\
-             \x20 %l{l}s = f32[{m},{d}]{{1,0}} divide(%l{l}e, %l{l}rb)\n\
-             \x20 %l{l}d = f32[{m},{d}]{{1,0}} dot(%l{l}s, %w{l}b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
-             \x20 %l{l}o = f32[{m},{d}]{{1,0}} add(%{cur}, %l{l}d)\n"
+             \x20 %l{l}sm = f32[{m}]{{0}} reduce(%l{l}e, %l{l}z), dimensions={{1}}, to_apply=%add_f\n\
+             \x20 %l{l}sb = f32[{m},{m}]{{1,0}} broadcast(%l{l}sm), dimensions={{0}}\n\
+             \x20 %l{l}p = f32[{m},{m}]{{1,0}} divide(%l{l}e, %l{l}sb)\n\
+             \x20 %l{l}v = f32[{m},{d}]{{1,0}} dot(%{cur}, %w{l}v), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}av = f32[{m},{d}]{{1,0}} dot(%l{l}p, %l{l}v), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+             \x20 %l{l}g = f32[{m},{d}]{{1,0}} erf(%l{l}av)\n\
+             \x20 %l{l}o = f32[{m},{d}]{{1,0}} add(%{cur}, %l{l}g)\n"
         ));
         cur = format!("l{l}o");
     }
     body.push_str(&format!("  ROOT %t = (f32[{m},{d}]{{1,0}}) tuple(%{cur})\n"));
     format!(
         "HloModule vit_shaped\n\
+         %max_f (m0: f32[], m1: f32[]) -> f32[] {{\n  \
+         %m0 = f32[] parameter(0)\n  \
+         %m1 = f32[] parameter(1)\n  \
+         ROOT %rm = f32[] maximum(%m0, %m1)\n}}\n\
          %add_f (p0: f32[], p1: f32[]) -> f32[] {{\n  \
          %p0 = f32[] parameter(0)\n  \
          %p1 = f32[] parameter(1)\n  \
@@ -49,6 +75,31 @@ pub fn vit_shaped_hlo(m: usize, d: usize, layers: usize) -> String {
          ENTRY %main ({}) -> (f32[{m},{d}]) {{\n{body}}}\n",
         sig.join(", ")
     )
+}
+
+/// The positional inputs matching [`vit_shaped_hlo`]'s signature, filled
+/// with small deterministic values from `rng`: `x`, then per layer the
+/// three `[d, d]` projections and the `[d]` bias.
+pub fn vit_shaped_inputs(
+    m: usize,
+    d: usize,
+    layers: usize,
+    rng: &mut crate::util::rng::Pcg32,
+) -> Vec<crate::tensor::Tensor> {
+    let mut inputs = Vec::with_capacity(1 + 4 * layers);
+    let t = |rng: &mut crate::util::rng::Pcg32, dims: Vec<usize>, scale: f32| {
+        let n: usize = dims.iter().product();
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * scale).collect();
+        crate::tensor::Tensor::from_f32(dims, &vals).unwrap()
+    };
+    inputs.push(t(rng, vec![m, d], 0.2));
+    for _ in 0..layers {
+        for _ in 0..3 {
+            inputs.push(t(rng, vec![d, d], 0.1));
+        }
+        inputs.push(t(rng, vec![d], 0.05));
+    }
+    inputs
 }
 
 #[cfg(test)]
@@ -61,8 +112,14 @@ mod tests {
         let hlo = vit_shaped_hlo(4, 8, 2);
         let module = HloModule::parse(&hlo).unwrap();
         let params = module.parameters().unwrap();
-        assert_eq!(params.len(), 1 + 2 * 2);
+        assert_eq!(params.len(), 1 + 4 * 2);
         assert_eq!(params[0].1.dims, vec![4, 8]);
         assert_eq!(params[1].1.dims, vec![8, 8]);
+        assert_eq!(params[4].1.dims, vec![8]);
+        let inputs = vit_shaped_inputs(4, 8, 2, &mut crate::util::rng::Pcg32::new(7));
+        assert_eq!(inputs.len(), params.len());
+        for (t, (_, shape)) in inputs.iter().zip(&params) {
+            assert_eq!(t.shape(), shape.dims.as_slice());
+        }
     }
 }

@@ -4,4 +4,4 @@
 pub mod fixtures;
 pub mod prop;
 
-pub use prop::{check, Gen};
+pub use prop::{check, ulp_dist, Gen};

@@ -90,6 +90,29 @@ fn env_usize(name: &str) -> Option<usize> {
     std::env::var(name).ok()?.parse().ok()
 }
 
+/// ULP distance between two f32 via the standard monotone integer
+/// mapping (equal bit patterns and `+0 == -0` are 0; any NaN is
+/// `u64::MAX` apart from everything). The shared assertion currency for
+/// numeric contracts like the fused softmax's ≤ 4 ULP bound
+/// (`tests/fusion_props.rs`, `benches/fusion.rs`).
+pub fn ulp_dist(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    fn key(x: f32) -> i64 {
+        let b = x.to_bits();
+        if b & 0x8000_0000 != 0 {
+            -((b & 0x7fff_ffff) as i64)
+        } else {
+            b as i64
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
 /// Run `property` against `cases` random generators. On failure, retries
 /// the failing seed at smaller size scales (shrinking) and panics with
 /// the smallest failing seed/scale for reproduction.
@@ -159,6 +182,17 @@ mod tests {
             let v = g.vec_usize(0..=100, 0, 20);
             assert!(v.len() < 15, "vector too long: {}", v.len());
         });
+    }
+
+    #[test]
+    fn ulp_dist_reference_points() {
+        assert_eq!(ulp_dist(1.0, 1.0), 0);
+        assert_eq!(ulp_dist(0.0, -0.0), 0);
+        assert_eq!(ulp_dist(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_dist(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // Spans the sign boundary monotonically: -min_pos .. +min_pos.
+        assert_eq!(ulp_dist(f32::from_bits(1), f32::from_bits(0x8000_0001)), 2);
+        assert_eq!(ulp_dist(f32::NAN, 1.0), u64::MAX);
     }
 
     #[test]

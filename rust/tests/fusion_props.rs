@@ -1,0 +1,408 @@
+//! Property tests for plan-time operator fusion (ISSUE 5):
+//!
+//! * fused elementwise chains — including folded scalar / bias-row /
+//!   normalizer-column broadcasts — are **bit-for-bit** equal to the
+//!   classic per-kernel evaluator on randomized graphs, at thread
+//!   budgets 1/2/4;
+//! * GEMM and clustered-LUT epilogues are bit-for-bit equal too
+//!   (full-input and weight-resident), including problems large enough
+//!   to really fan out on the kernel pool;
+//! * the fused online softmax — the one lowering that is *not*
+//!   bit-identical by construction — stays within **4 ULP** of the
+//!   classic reduce/exp/divide chain elementwise, is bit-identical
+//!   across thread budgets, and the `--no-fusion` path stays bitwise
+//!   equal to the classic evaluator;
+//! * non-f32 elementwise chains are left unfused and stay correct.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use clusterformer::clustering::{ClusterScheme, Quantizer};
+use clusterformer::hlo::HloModule;
+use clusterformer::runtime::interp::{evaluate_unplanned, InterpExecutor};
+use clusterformer::runtime::{Executor as _, ResidentExecutor as _, ThreadBudget};
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::prop::{check, ulp_dist, Gen};
+use clusterformer::util::rng::Pcg32;
+
+fn rand_tensor(g: &mut Gen, dims: &[usize], scale: f32) -> Tensor {
+    let n: usize = dims.iter().product();
+    let vals: Vec<f32> = (0..n).map(|_| g.f32_normal() * scale).collect();
+    Tensor::from_f32(dims.to_vec(), &vals).unwrap()
+}
+
+/// Random elementwise-chain module over `[m, n]`: every step consumes
+/// the previous value exactly once; second operands rotate through a
+/// scalar constant, a bias-row broadcast (`dims={1}` of `bias[n]`), a
+/// normalizer-column broadcast (`dims={0}` of `col[m]`), and the live
+/// full-size tensor `x1` — every FusedIn mode.
+fn chain_hlo(g: &mut Gen, m: usize, n: usize, steps: usize) -> String {
+    let mn = format!("f32[{m},{n}]{{1,0}}");
+    let mut body = String::new();
+    let mut cur = "x0".to_string();
+    for s in 0..steps {
+        let y = format!("s{s}");
+        match g.usize(0, 4) {
+            0 => {
+                let op = *g.pick(&["exponential", "tanh", "negate", "abs", "erf", "logistic"]);
+                body.push_str(&format!("  %{y} = {mn} {op}(%{cur})\n"));
+            }
+            1 => {
+                let op = *g.pick(&["add", "subtract", "multiply", "maximum"]);
+                let v = *g.pick(&["0.5", "1.5", "-2"]);
+                body.push_str(&format!("  %k{s} = f32[] constant({v})\n"));
+                if g.bool() {
+                    body.push_str(&format!("  %{y} = {mn} {op}(%{cur}, %k{s})\n"));
+                } else {
+                    body.push_str(&format!("  %{y} = {mn} {op}(%k{s}, %{cur})\n"));
+                }
+            }
+            2 => {
+                let op = *g.pick(&["add", "subtract", "multiply", "maximum"]);
+                body.push_str(&format!(
+                    "  %g{s} = {mn} broadcast(%bias), dimensions={{1}}\n"
+                ));
+                if g.bool() {
+                    body.push_str(&format!("  %{y} = {mn} {op}(%{cur}, %g{s})\n"));
+                } else {
+                    body.push_str(&format!("  %{y} = {mn} {op}(%g{s}, %{cur})\n"));
+                }
+            }
+            3 => {
+                let op = *g.pick(&["add", "multiply", "maximum"]);
+                body.push_str(&format!(
+                    "  %g{s} = {mn} broadcast(%col), dimensions={{0}}\n"
+                ));
+                body.push_str(&format!("  %{y} = {mn} {op}(%{cur}, %g{s})\n"));
+            }
+            _ => {
+                let op = *g.pick(&["add", "subtract", "multiply", "maximum"]);
+                body.push_str(&format!("  %{y} = {mn} {op}(%{cur}, %x1)\n"));
+            }
+        }
+        cur = y;
+    }
+    body.push_str(&format!("  ROOT %out = {mn} negate(%{cur})\n"));
+    format!(
+        "HloModule chain_prop\n\
+         ENTRY %e (x0: f32[{m},{n}], x1: f32[{m},{n}], bias: f32[{n}], col: f32[{m}]) -> f32[{m},{n}] {{\n\
+         \x20 %x0 = f32[{m},{n}]{{1,0}} parameter(0)\n\
+         \x20 %x1 = f32[{m},{n}]{{1,0}} parameter(1)\n\
+         \x20 %bias = f32[{n}]{{0}} parameter(2)\n\
+         \x20 %col = f32[{m}]{{0}} parameter(3)\n\
+         {body}}}\n"
+    )
+}
+
+#[test]
+fn prop_fused_chains_match_classic_bitwise() {
+    check("fused chains == classic (bitwise)", 40, |g| {
+        let m = g.usize(2, 6);
+        let n = g.usize(2, 6);
+        let steps = g.usize(2, 5);
+        let hlo = chain_hlo(g, m, n, steps);
+        let inputs = vec![
+            rand_tensor(g, &[m, n], 0.7),
+            rand_tensor(g, &[m, n], 0.7),
+            rand_tensor(g, &[n], 0.5),
+            rand_tensor(g, &[m], 0.5),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let module = HloModule::parse(&hlo).unwrap();
+        let classic = evaluate_unplanned(&module, &refs).unwrap();
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "chain-prop")
+                .unwrap_or_else(|e| panic!("load failed: {e:#}\n{hlo}"))
+                .with_threads(ThreadBudget::new(budget))
+                .with_fusion(true);
+            let mem = exe.memory_plan().unwrap_or_else(|| panic!("must plan\n{hlo}"));
+            assert!(
+                mem.fused_chains() >= 1,
+                "a {steps}-step chain must fuse\n{hlo}"
+            );
+            let fused = exe.run(&inputs).unwrap_or_else(|e| panic!("run: {e:#}\n{hlo}"));
+            assert_eq!(fused, classic, "fused chain diverged (budget {budget})\n{hlo}");
+        }
+        // Knob off: no fusion recorded, still bitwise equal.
+        let exe = InterpExecutor::load_text(&hlo, "chain-prop-off")
+            .unwrap()
+            .with_fusion(false);
+        let mem = exe.memory_plan().unwrap();
+        assert_eq!(mem.fused_chains() + mem.fused_epilogues() + mem.fused_softmax(), 0);
+        assert_eq!(exe.run(&inputs).unwrap(), classic, "unfused plan diverged\n{hlo}");
+    });
+}
+
+fn gemm_epilogue_hlo(m: usize, k: usize, n: usize, act: &str) -> String {
+    format!(
+        "HloModule gemm_ep\n\
+         ENTRY %e (x: f32[{m},{k}], w: f32[{k},{n}], bias: f32[{n}], res: f32[{m},{n}]) -> f32[{m},{n}] {{\n\
+         \x20 %x = f32[{m},{k}]{{1,0}} parameter(0)\n\
+         \x20 %w = f32[{k},{n}]{{1,0}} parameter(1)\n\
+         \x20 %bias = f32[{n}]{{0}} parameter(2)\n\
+         \x20 %res = f32[{m},{n}]{{1,0}} parameter(3)\n\
+         \x20 %d = f32[{m},{n}]{{1,0}} dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %bb = f32[{m},{n}]{{1,0}} broadcast(%bias), dimensions={{1}}\n\
+         \x20 %s = f32[{m},{n}]{{1,0}} add(%d, %bb)\n\
+         \x20 %a = f32[{m},{n}]{{1,0}} {act}(%s)\n\
+         \x20 ROOT %o = f32[{m},{n}]{{1,0}} add(%res, %a)\n}}\n"
+    )
+}
+
+#[test]
+fn prop_gemm_epilogue_matches_classic_bitwise() {
+    check("gemm epilogue == classic (bitwise)", 25, |g| {
+        let m = g.usize(1, 7);
+        let k = g.usize(1, 7);
+        let n = g.usize(1, 7);
+        let act = *g.pick(&["tanh", "erf", "exponential", "abs"]);
+        let hlo = gemm_epilogue_hlo(m, k, n, act);
+        let inputs = vec![
+            rand_tensor(g, &[m, k], 0.8),
+            rand_tensor(g, &[k, n], 0.4),
+            rand_tensor(g, &[n], 0.5),
+            rand_tensor(g, &[m, n], 0.7),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let module = HloModule::parse(&hlo).unwrap();
+        let classic = evaluate_unplanned(&module, &refs).unwrap();
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "gemm-ep-prop")
+                .unwrap()
+                .with_threads(ThreadBudget::new(budget))
+                .with_fusion(true);
+            let mem = exe.memory_plan().expect("must plan");
+            assert_eq!(mem.fused_epilogues(), 1, "dot must carry the epilogue\n{hlo}");
+            let fused = exe.run(&inputs).unwrap();
+            assert_eq!(fused, classic, "epilogue diverged (budget {budget})\n{hlo}");
+        }
+    });
+}
+
+#[test]
+fn large_gemm_epilogue_fans_out_bit_identically() {
+    // 2*96*96*96 flops > the GEMM parallel threshold, so budgets > 1
+    // really hit the pool; the chunk-local epilogue must stay bitwise
+    // equal to both the serial fused run and the classic chain.
+    let (m, k, n) = (96usize, 96, 96);
+    let hlo = gemm_epilogue_hlo(m, k, n, "tanh");
+    let mut rng = Pcg32::new(2106);
+    let mk: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32 * 0.5).collect();
+    let kn: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32 * 0.3).collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.2).collect();
+    let res: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32 * 0.4).collect();
+    let inputs = vec![
+        Tensor::from_f32(vec![m, k], &mk).unwrap(),
+        Tensor::from_f32(vec![k, n], &kn).unwrap(),
+        Tensor::from_f32(vec![n], &bias).unwrap(),
+        Tensor::from_f32(vec![m, n], &res).unwrap(),
+    ];
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let module = HloModule::parse(&hlo).unwrap();
+    let classic = evaluate_unplanned(&module, &refs).unwrap();
+    for budget in [1usize, 2, 4] {
+        let exe = InterpExecutor::load_text(&hlo, "gemm-ep-large")
+            .unwrap()
+            .with_threads(ThreadBudget::new(budget))
+            .with_fusion(true);
+        assert_eq!(exe.memory_plan().expect("must plan").fused_epilogues(), 1);
+        assert_eq!(exe.run(&inputs).unwrap(), classic, "budget {budget} diverged");
+    }
+}
+
+#[test]
+fn prop_clustered_epilogue_matches_classic_bitwise() {
+    check("clustered LUT epilogue == classic", 20, |g| {
+        let m = g.usize(1, 5);
+        let k = g.usize(2, 7);
+        let n = g.usize(1, 6);
+        let clusters = *g.pick(&[4usize, 8, 16]);
+        let hlo = format!(
+            "HloModule clustered_ep_prop\n\
+             ENTRY %main (x: f32[{m},{k}], cbs: f32[1,256], idx: u8[{k},{n}], bias: f32[{n}]) -> (f32[{m},{n}]) {{\n  \
+             %x = f32[{m},{k}]{{1,0}} parameter(0)\n  \
+             %cbs = f32[1,256]{{1,0}} parameter(1)\n  \
+             %idx = u8[{k},{n}]{{1,0}} parameter(2)\n  \
+             %bias = f32[{n}]{{0}} parameter(3)\n  \
+             %sl = f32[1,256]{{1,0}} slice(%cbs), slice={{[0:1], [0:256]}}\n  \
+             %row = f32[256]{{0}} reshape(%sl)\n  \
+             %cvt = s32[{k},{n}]{{1,0}} convert(%idx)\n  \
+             %w = f32[{k},{n}]{{1,0}} gather(%row, %cvt), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n  \
+             %d = f32[{m},{n}]{{1,0}} dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+             %bb = f32[{m},{n}]{{1,0}} broadcast(%bias), dimensions={{1}}\n  \
+             %s = f32[{m},{n}]{{1,0}} add(%d, %bb)\n  \
+             %a = f32[{m},{n}]{{1,0}} tanh(%s)\n  \
+             ROOT %t = (f32[{m},{n}]{{1,0}}) tuple(%a)\n}}\n"
+        );
+        let mut rng = Pcg32::new(g.u64());
+        let wvals: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let dense = Tensor::from_f32(vec![k, n], &wvals).unwrap();
+        let names = vec!["w".to_string()];
+        let mut tensors = HashMap::new();
+        tensors.insert("w".to_string(), dense);
+        let ct = Quantizer::new(clusters, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        let x = rand_tensor(g, &[m, k], 0.8);
+        let bias = rand_tensor(g, &[n], 0.5);
+        let inputs = vec![
+            x.clone(),
+            ct.codebooks.clone(),
+            ct.indices["w"].clone(),
+            bias.clone(),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let module = HloModule::parse(&hlo).unwrap();
+        let classic = evaluate_unplanned(&module, &refs).unwrap();
+        let ct = Arc::new(ct);
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "clustered-ep-prop")
+                .unwrap()
+                .with_threads(ThreadBudget::new(budget))
+                .with_fusion(true);
+            let mem = exe.memory_plan().expect("must plan");
+            assert_eq!(mem.fused_epilogues(), 1, "LUT dot must carry the epilogue");
+            assert_eq!(
+                exe.run(&inputs).unwrap(),
+                classic,
+                "full-input clustered epilogue diverged (budget {budget})"
+            );
+            // Weight-resident: prepared (bit-packed) weights + epilogue.
+            let resident = exe
+                .resident(
+                    1,
+                    Arc::new(vec![ct.codebooks.clone(), ct.indices["w"].clone(), bias.clone()]),
+                    Some(ct.clone()),
+                )
+                .unwrap();
+            assert_eq!(
+                resident.run(std::slice::from_ref(&x)).unwrap(),
+                classic,
+                "resident clustered epilogue diverged (budget {budget})"
+            );
+        }
+    });
+}
+
+fn softmax_hlo(r: usize, c: usize) -> String {
+    format!(
+        "HloModule sm\n\
+         %max_f (p0: f32[], p1: f32[]) -> f32[] {{\n  \
+         %p0 = f32[] parameter(0)\n  \
+         %p1 = f32[] parameter(1)\n  \
+         ROOT %r = f32[] maximum(%p0, %p1)\n}}\n\
+         %add_f (q0: f32[], q1: f32[]) -> f32[] {{\n  \
+         %q0 = f32[] parameter(0)\n  \
+         %q1 = f32[] parameter(1)\n  \
+         ROOT %r2 = f32[] add(%q0, %q1)\n}}\n\
+         ENTRY %e (a: f32[{r},{c}]) -> f32[{r},{c}] {{\n  \
+         %a = f32[{r},{c}]{{1,0}} parameter(0)\n  \
+         %ninf = f32[] constant(-inf)\n  \
+         %mx = f32[{r}]{{0}} reduce(%a, %ninf), dimensions={{1}}, to_apply=%max_f\n  \
+         %mxb = f32[{r},{c}]{{1,0}} broadcast(%mx), dimensions={{0}}\n  \
+         %cs = f32[{r},{c}]{{1,0}} subtract(%a, %mxb)\n  \
+         %x = f32[{r},{c}]{{1,0}} exponential(%cs)\n  \
+         %zero = f32[] constant(0)\n  \
+         %sm = f32[{r}]{{0}} reduce(%x, %zero), dimensions={{1}}, to_apply=%add_f\n  \
+         %smb = f32[{r},{c}]{{1,0}} broadcast(%sm), dimensions={{0}}\n  \
+         ROOT %o = f32[{r},{c}]{{1,0}} divide(%x, %smb)\n}}\n"
+    )
+}
+
+#[test]
+fn prop_fused_softmax_within_4_ulp_of_classic() {
+    check("fused softmax <= 4 ULP of classic", 30, |g| {
+        let r = g.usize(1, 8);
+        let c = g.usize(2, 16);
+        let hlo = softmax_hlo(r, c);
+        // Logit-scaled inputs (attention scores live in this range; huge
+        // spreads would stress the exp ULP budget without adding
+        // coverage — the running max still moves several times per row).
+        let a = rand_tensor(g, &[r, c], 1.5);
+        let module = HloModule::parse(&hlo).unwrap();
+        let classic = evaluate_unplanned(&module, &[&a]).unwrap();
+        let cv = classic[0].as_f32().unwrap();
+        let mut per_budget: Vec<Vec<f32>> = Vec::new();
+        for budget in [1usize, 2, 4] {
+            let exe = InterpExecutor::load_text(&hlo, "softmax-prop")
+                .unwrap()
+                .with_threads(ThreadBudget::new(budget))
+                .with_fusion(true);
+            let mem = exe.memory_plan().expect("must plan");
+            assert_eq!(mem.fused_softmax(), 1, "idiom must lower to the fused kernel");
+            let out = exe.run(std::slice::from_ref(&a)).unwrap();
+            let ov = out[0].as_f32().unwrap();
+            for (i, (f, cl)) in ov.iter().zip(&cv).enumerate() {
+                let d = ulp_dist(*f, *cl);
+                assert!(
+                    d <= 4,
+                    "element {i}: fused {f} vs classic {cl} is {d} ULP apart (budget {budget})"
+                );
+            }
+            per_budget.push(ov);
+        }
+        // Row-independent kernel: identical bits at every budget.
+        assert_eq!(per_budget[0], per_budget[1]);
+        assert_eq!(per_budget[0], per_budget[2]);
+        // Knob off: bitwise equal to the classic evaluator.
+        let exe = InterpExecutor::load_text(&hlo, "softmax-off")
+            .unwrap()
+            .with_fusion(false);
+        assert_eq!(exe.memory_plan().unwrap().fused_softmax(), 0);
+        assert_eq!(exe.run(std::slice::from_ref(&a)).unwrap(), classic);
+    });
+}
+
+#[test]
+fn large_fused_softmax_fans_out_bit_identically() {
+    // 64 x 1024 clears the elementwise parallel threshold, so budgets
+    // > 1 fan rows out on the pool; rows are lane-independent, so the
+    // fused result must be bit-identical across budgets and still
+    // within 4 ULP of the classic chain.
+    let (r, c) = (64usize, 1024);
+    let hlo = softmax_hlo(r, c);
+    let mut rng = Pcg32::new(31 * 5);
+    let av: Vec<f32> = (0..r * c).map(|_| rng.normal() as f32).collect();
+    let a = Tensor::from_f32(vec![r, c], &av).unwrap();
+    let module = HloModule::parse(&hlo).unwrap();
+    let classic = evaluate_unplanned(&module, &[&a]).unwrap();
+    let cv = classic[0].as_f32().unwrap();
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for budget in [1usize, 2, 4] {
+        let exe = InterpExecutor::load_text(&hlo, "softmax-large")
+            .unwrap()
+            .with_threads(ThreadBudget::new(budget))
+            .with_fusion(true);
+        let out = exe.run(std::slice::from_ref(&a)).unwrap();
+        let ov = out[0].as_f32().unwrap();
+        for (f, cl) in ov.iter().zip(&cv) {
+            assert!(ulp_dist(*f, *cl) <= 4, "{f} vs {cl} (budget {budget})");
+        }
+        outs.push(ov);
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0], outs[2]);
+}
+
+#[test]
+fn non_f32_chains_are_left_unfused() {
+    let hlo = "HloModule ints\n\
+        ENTRY %e (x: s32[8], y: s32[8]) -> s32[8] {\n  \
+        %x = s32[8]{0} parameter(0)\n  \
+        %y = s32[8]{0} parameter(1)\n  \
+        %a = s32[8]{0} add(%x, %y)\n  \
+        %b = s32[8]{0} multiply(%a, %y)\n  \
+        ROOT %c = s32[8]{0} maximum(%b, %x)\n}\n";
+    let x = Tensor::from_i32(vec![8], &[1, -2, 3, -4, 5, -6, 7, -8]).unwrap();
+    let y = Tensor::from_i32(vec![8], &[10, 20, -30, 40, -50, 60, -70, 80]).unwrap();
+    let module = HloModule::parse(hlo).unwrap();
+    let classic = evaluate_unplanned(&module, &[&x, &y]).unwrap();
+    let exe = InterpExecutor::load_text(hlo, "int-chain").unwrap().with_fusion(true);
+    let mem = exe.memory_plan().expect("must plan");
+    assert_eq!(
+        mem.fused_chains() + mem.fused_epilogues() + mem.fused_softmax(),
+        0,
+        "integer chains must stay on the per-kernel path"
+    );
+    assert_eq!(exe.run(&[x, y]).unwrap(), classic);
+}
