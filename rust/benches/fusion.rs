@@ -8,9 +8,15 @@
 //! (`fused_bytes_saved`, as a fraction of the unfused write+read
 //! traffic `2 * naive_bytes`). Acceptance: both the peak and the
 //! traffic drop by >= 25%, with a wall-time win.
+//!
+//! Also A/Bs the fused path with the kernel dispatch level forced to
+//! `scalar` and to the detected vector ISA, isolating the SIMD win on
+//! the fused GEMM/softmax/elementwise kernels end to end.
 
 use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
-use clusterformer::runtime::interp::InterpExecutor;
+use clusterformer::runtime::interp::{
+    detected_kernel_isa, force_kernel_isa, InterpExecutor, KernelIsa,
+};
 use clusterformer::runtime::Executor as _;
 use clusterformer::testing::fixtures::{vit_shaped_hlo, vit_shaped_inputs};
 use clusterformer::testing::prop::ulp_dist;
@@ -61,6 +67,30 @@ fn main() -> anyhow::Result<()> {
         .summary
         .mean;
 
+    // ---- scalar vs SIMD A/B on the fused path ----
+    let detected = detected_kernel_isa();
+    let mut t_by_isa: Vec<(KernelIsa, f64)> = Vec::new();
+    let mut levels = vec![KernelIsa::Scalar];
+    if detected != KernelIsa::Scalar {
+        levels.push(detected);
+    }
+    for &isa in &levels {
+        force_kernel_isa(Some(isa));
+        let t = runner
+            .bench(&format!("exec/planned-fused@{}", isa.name()), || {
+                fused.run(&inputs).unwrap()
+            })
+            .summary
+            .mean;
+        // Softmax is the only reassociated SIMD kernel; end to end each
+        // level stays within the same few-ULP envelope as fusion itself.
+        let out = fused.run(&inputs).unwrap()[0].as_f32().unwrap();
+        let isa_ulp = out.iter().zip(&fv).map(|(a, b)| ulp_dist(*a, *b)).max().unwrap_or(0);
+        assert!(isa_ulp <= 4, "{} diverged from auto dispatch: {isa_ulp} ULP", isa.name());
+        t_by_isa.push((isa, t));
+    }
+    force_kernel_isa(None);
+
     let naive = up.naive_bytes();
     let traffic_drop = fp.fused_bytes_saved() as f64 / (2 * naive).max(1) as f64;
     let peak_drop = 1.0 - fp.peak_bytes() as f64 / up.peak_bytes().max(1) as f64;
@@ -99,5 +129,15 @@ fn main() -> anyhow::Result<()> {
         t_unfused / t_fused,
         if t_fused < t_unfused { "PASS" } else { "FAIL" }
     );
+    if let [(_, t_scalar), (isa, t_simd)] = t_by_isa[..] {
+        println!(
+            "fused path, {} vs scalar dispatch: {:.2}x",
+            isa.name(),
+            t_scalar / t_simd
+        );
+    } else {
+        println!("no vector ISA detected: fused-path SIMD A/B skipped");
+    }
+    runner.finish("operator fusion");
     Ok(())
 }

@@ -5,16 +5,25 @@
 //! * `blocked`   — the cache-blocked, register-tiled, threaded GEMM the
 //!                 interpreter now dispatches `dot` to;
 //! * `clustered` — the LUT-accumulation kernel on 64-cluster weights
-//!                 (6-bit packed indices + codebook, never dequantized).
+//!                 (6-bit packed indices + codebook, never dequantized);
+//! * `scalar vs SIMD A/B` — the blocked GEMM and the LUT kernel run
+//!                 again with the dispatch level forced to `scalar` and
+//!                 to the detected vector level, so the SIMD microkernel
+//!                 win is measured on its own rather than inferred.
 //!
-//! Besides wall time, reports the weight bytes each kernel streams per
-//! matmul — the quantity the paper's >4x memory-traffic claim is about.
-//! Acceptance targets (ISSUE 2): blocked >= 5x naive; clustered weight
-//! stream >= 4x smaller than dense.
+//! Besides wall time, reports GFLOP/s, the weight bytes each kernel
+//! streams per matmul — the quantity the paper's >4x memory-traffic
+//! claim is about — and bytes touched per CPU cycle (when /proc/cpuinfo
+//! exposes a clock). Emits machine-readable `BENCH_kernels.json` next to
+//! the markdown/CSV report.
+//!
+//! Acceptance targets: blocked >= 5x naive (ISSUE 2); SIMD GEMM >= 2x
+//! scalar GEMM and a measurable SIMD LUT win on AVX2 hosts (ISSUE 6).
 
 use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
 use clusterformer::runtime::interp::clustered::{lut_matmul_packed, prepare};
 use clusterformer::runtime::interp::gemm::{dot_general, dot_general_naive, DotSpec};
+use clusterformer::runtime::interp::{detected_kernel_isa, force_kernel_isa, KernelIsa};
 use clusterformer::runtime::ThreadBudget;
 use clusterformer::tensor::Tensor;
 use clusterformer::util::rng::Pcg32;
@@ -23,6 +32,26 @@ const M: usize = 256;
 const K: usize = 256;
 const N: usize = 256;
 const CLUSTERS: usize = 64;
+
+/// Nominal core clock in Hz from `/proc/cpuinfo` (`cpu MHz`), when the
+/// platform exposes one — bytes-per-cycle is reported only then.
+fn cpu_hz() -> Option<f64> {
+    let info = std::fs::read_to_string("/proc/cpuinfo").ok()?;
+    for line in info.lines() {
+        if let Some(rest) = line.strip_prefix("cpu MHz") {
+            let mhz: f64 = rest.trim_start().strip_prefix(':')?.trim().parse().ok()?;
+            return Some(mhz * 1e6);
+        }
+    }
+    None
+}
+
+fn json_f64(x: Option<f64>) -> String {
+    match x {
+        Some(v) if v.is_finite() => format!("{v:.6}"),
+        _ => "null".to_string(),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Pcg32::new(210616006);
@@ -41,7 +70,12 @@ fn main() -> anyhow::Result<()> {
     let prep = prepare(&idx, K, N, &codebook, Some(CLUSTERS))?;
 
     let threads = ThreadBudget::from_env().get();
-    println!("# GEMM kernels — {M}x{K}x{N}, {CLUSTERS} clusters, {threads} threads\n");
+    let detected = detected_kernel_isa();
+    println!(
+        "# GEMM kernels — {M}x{K}x{N}, {CLUSTERS} clusters, {threads} threads, \
+         detected ISA {}\n",
+        detected.name()
+    );
     let mut runner = BenchRunner::new(BenchConfig::default());
     let naive = runner
         .bench("dot/naive-index-walk", || dot_general_naive(&lhs, &rhs, &spec).unwrap())
@@ -56,22 +90,87 @@ fn main() -> anyhow::Result<()> {
         .summary
         .mean;
 
+    // ---- scalar vs SIMD A/B, same problem, dispatch level forced ----
+    let mut levels = vec![KernelIsa::Scalar];
+    if detected != KernelIsa::Scalar {
+        levels.push(detected);
+    }
+    let mut gemm_by_isa: Vec<(KernelIsa, f64)> = Vec::new();
+    let mut lut_by_isa: Vec<(KernelIsa, f64)> = Vec::new();
+    for &isa in &levels {
+        force_kernel_isa(Some(isa));
+        let g = runner
+            .bench(&format!("dot/blocked-gemm@{}", isa.name()), || {
+                dot_general(&lhs, &rhs, &spec, threads).unwrap()
+            })
+            .summary
+            .mean;
+        gemm_by_isa.push((isa, g));
+        let l = runner
+            .bench(&format!("dot/clustered-lut@{}", isa.name()), || {
+                lut_matmul_packed(&x, M, &prep, threads).unwrap()
+            })
+            .summary
+            .mean;
+        lut_by_isa.push((isa, l));
+    }
+    force_kernel_isa(None);
+
+    let flops = (2 * M * K * N) as f64;
+    // Minimum streamed bytes per GEMM call: both operands + the output,
+    // f32 each (ignores favorable cache reuse, so it is a lower bound).
+    let gemm_bytes = ((M * K + K * N + M * N) * 4) as f64;
+    let lut_bytes_touched = ((M * K + M * N) * 4) as f64 + prep.weight_bytes() as f64;
+    let hz = cpu_hz();
+
     let dense_bytes = prep.dense_bytes();
     let lut_bytes = prep.weight_bytes();
-    println!("\n| kernel | mean | speedup vs naive | weight bytes/call |");
-    println!("|---|---|---|---|");
-    println!("| naive index-walk | {} | 1.00x | {dense_bytes} |", fmt_time(naive));
+    println!("\n| kernel | mean | speedup vs naive | GFLOP/s | bytes/cycle | weight bytes/call |");
+    println!("|---|---|---|---|---|---|");
+    let bpc = |mean: f64, bytes: f64| {
+        hz.map(|hz| format!("{:.3}", bytes / (mean * hz))).unwrap_or_else(|| "-".into())
+    };
     println!(
-        "| blocked GEMM | {} | {:.2}x | {dense_bytes} |",
-        fmt_time(blocked),
-        naive / blocked
+        "| naive index-walk | {} | 1.00x | {:.2} | {} | {dense_bytes} |",
+        fmt_time(naive),
+        flops / naive / 1e9,
+        bpc(naive, gemm_bytes)
     );
     println!(
-        "| clustered LUT ({}-bit packed) | {} | {:.2}x | {lut_bytes} |",
+        "| blocked GEMM | {} | {:.2}x | {:.2} | {} | {dense_bytes} |",
+        fmt_time(blocked),
+        naive / blocked,
+        flops / blocked / 1e9,
+        bpc(blocked, gemm_bytes)
+    );
+    println!(
+        "| clustered LUT ({}-bit packed) | {} | {:.2}x | {:.2} | {} | {lut_bytes} |",
         prep.bits(),
         fmt_time(lut),
-        naive / lut
+        naive / lut,
+        flops / lut / 1e9,
+        bpc(lut, lut_bytes_touched)
     );
+    for &(isa, g) in &gemm_by_isa {
+        println!(
+            "| blocked GEMM @{} | {} | {:.2}x | {:.2} | {} | {dense_bytes} |",
+            isa.name(),
+            fmt_time(g),
+            naive / g,
+            flops / g / 1e9,
+            bpc(g, gemm_bytes)
+        );
+    }
+    for &(isa, l) in &lut_by_isa {
+        println!(
+            "| clustered LUT @{} | {} | {:.2}x | {:.2} | {} | {lut_bytes} |",
+            isa.name(),
+            fmt_time(l),
+            naive / l,
+            flops / l / 1e9,
+            bpc(l, lut_bytes_touched)
+        );
+    }
     println!(
         "\nblocked vs naive: {:.2}x (target >= 5x: {})",
         naive / blocked,
@@ -82,6 +181,68 @@ fn main() -> anyhow::Result<()> {
         dense_bytes as f64 / lut_bytes as f64,
         if dense_bytes as f64 / lut_bytes as f64 >= 4.0 { "MET" } else { "NOT met" }
     );
+    let gemm_scalar = gemm_by_isa[0].1;
+    let lut_scalar = lut_by_isa[0].1;
+    if let (Some(&(isa, gemm_simd)), Some(&(_, lut_simd))) =
+        (gemm_by_isa.get(1), lut_by_isa.get(1))
+    {
+        println!(
+            "SIMD GEMM ({}) vs scalar: {:.2}x (target >= 2x: {})",
+            isa.name(),
+            gemm_scalar / gemm_simd,
+            if gemm_scalar / gemm_simd >= 2.0 { "MET" } else { "NOT met" }
+        );
+        println!(
+            "SIMD LUT ({}) vs scalar: {:.2}x (target > 1x: {})",
+            isa.name(),
+            lut_scalar / lut_simd,
+            if lut_scalar / lut_simd > 1.0 { "MET" } else { "NOT met" }
+        );
+    } else {
+        println!("no vector ISA detected: SIMD A/B skipped (scalar only)");
+    }
+
+    // ---- machine-readable record next to the md/csv report ----
+    let mut results_json = String::new();
+    let mut push_result = |name: &str, isa: &str, mean: f64, bytes: f64| {
+        if !results_json.is_empty() {
+            results_json.push_str(",\n    ");
+        }
+        results_json.push_str(&format!(
+            "{{\"name\": \"{name}\", \"isa\": \"{isa}\", \"mean_s\": {mean:.9}, \
+             \"gflops\": {:.3}, \"bytes_per_cycle\": {}}}",
+            flops / mean / 1e9,
+            json_f64(hz.map(|hz| bytes / (mean * hz)))
+        ));
+    };
+    push_result("naive", "scalar", naive, gemm_bytes);
+    push_result("blocked_gemm", "auto", blocked, gemm_bytes);
+    push_result("clustered_lut", "auto", lut, lut_bytes_touched);
+    for &(isa, g) in &gemm_by_isa {
+        push_result("blocked_gemm", isa.name(), g, gemm_bytes);
+    }
+    for &(isa, l) in &lut_by_isa {
+        push_result("clustered_lut", isa.name(), l, lut_bytes_touched);
+    }
+    let simd_gemm_speedup = gemm_by_isa.get(1).map(|&(_, g)| gemm_scalar / g);
+    let simd_lut_speedup = lut_by_isa.get(1).map(|&(_, l)| lut_scalar / l);
+    let json = format!(
+        "{{\n  \"bench\": \"kernels\",\n  \"shape\": [{M}, {K}, {N}],\n  \
+         \"clusters\": {CLUSTERS},\n  \"threads\": {threads},\n  \
+         \"detected_isa\": \"{}\",\n  \"cpu_mhz\": {},\n  \"results\": [\n    {results_json}\n  ],\n  \
+         \"speedups\": {{\n    \"blocked_vs_naive\": {:.3},\n    \
+         \"simd_gemm_vs_scalar\": {},\n    \"simd_lut_vs_scalar\": {}\n  }}\n}}\n",
+        detected.name(),
+        json_f64(hz.map(|h| h / 1e6)),
+        naive / blocked,
+        json_f64(simd_gemm_speedup),
+        json_f64(simd_lut_speedup),
+    );
+    let path = std::path::Path::new("BENCH_kernels.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 
     // Numeric cross-check so a broken kernel can't silently post a win.
     let reference = dot_general_naive(&lhs, &rhs, &spec)?.as_f32()?;
@@ -94,6 +255,13 @@ fn main() -> anyhow::Result<()> {
             "clustered LUT diverged: {a} vs {b}"
         );
     }
+    // And the forced levels really were what ran: scalar vs SIMD must be
+    // bit-identical on this problem, per the dispatch contract.
+    force_kernel_isa(Some(KernelIsa::Scalar));
+    let scalar_bits = dot_general(&lhs, &rhs, &spec, threads)?.as_f32()?;
+    force_kernel_isa(None);
+    let auto_bits = dot_general(&lhs, &rhs, &spec, threads)?.as_f32()?;
+    assert_eq!(scalar_bits, auto_bits, "SIMD GEMM must match scalar bit-for-bit");
     runner.finish("gemm kernels");
     Ok(())
 }

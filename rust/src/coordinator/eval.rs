@@ -57,6 +57,11 @@ pub struct MemStats {
     /// Intermediate bytes per execution no longer written + re-read
     /// because their producers were fused away.
     pub fused_bytes_saved: usize,
+    /// Kernel instruction set the dispatch layer resolved for this
+    /// process ("scalar" | "avx2" | "neon"; "" under other backends).
+    pub kernel_isa: &'static str,
+    /// Kernel calls that took a vector (SIMD) path during the run.
+    pub simd_dispatches: usize,
 }
 
 impl MemStats {
@@ -73,6 +78,8 @@ impl MemStats {
             fused_epilogues: stats::fused_epilogues(),
             fused_softmax: stats::fused_softmax(),
             fused_bytes_saved: stats::fused_bytes_saved(),
+            kernel_isa: crate::runtime::interp::kernel_isa().name(),
+            simd_dispatches: stats::simd_dispatches(),
         }
     }
 }
@@ -131,6 +138,8 @@ pub fn evaluate(
             fused_epilogues: after.fused_epilogues,
             fused_softmax: after.fused_softmax,
             fused_bytes_saved: after.fused_bytes_saved,
+            kernel_isa: after.kernel_isa,
+            simd_dispatches: after.simd_dispatches.saturating_sub(before.simd_dispatches),
         },
     })
 }

@@ -40,6 +40,7 @@ fn cli() -> Cli {
                 .opt("backend", "interp", "execution backend: interp | pjrt")
                 .opt("n", "0", "images to evaluate (0 = all)")
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
+                .opt("simd", "auto", "kernel ISA: auto | scalar | avx2 | neon")
                 .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
                 .flag("stats", "print memory-planner / allocation counters"),
         )
@@ -56,6 +57,7 @@ fn cli() -> Cli {
                 .opt("policy", "adaptive", "sizeonly | deadline | adaptive")
                 .opt("seed", "7", "workload RNG seed")
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
+                .opt("simd", "auto", "kernel ISA: auto | scalar | avx2 | neon")
                 .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)"),
         )
         .command(
@@ -159,10 +161,13 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
 /// Apply the interpreter kernel knobs by setting their env vars before
 /// anything resolves them: `--threads` sets `CLUSTERFORMER_THREADS` for
 /// the kernel thread budget (0 leaves the default: all cores — the same
-/// "0 = auto" the env var itself honors) and `--no-fusion` sets
-/// `CLUSTERFORMER_FUSION=0` to disable plan-time operator fusion. The
-/// env vars stay the single top-level knobs; everything below reads them
-/// through `ThreadBudget::from_env` / `interp::fusion_from_env`.
+/// "0 = auto" the env var itself honors), `--no-fusion` sets
+/// `CLUSTERFORMER_FUSION=0` to disable plan-time operator fusion, and
+/// `--simd` sets `CLUSTERFORMER_SIMD` to pin the kernel dispatch level
+/// ("auto" leaves detection in charge). The env vars stay the single
+/// top-level knobs; everything below reads them through
+/// `ThreadBudget::from_env` / `interp::fusion_from_env` /
+/// `interp::kernel_isa`.
 fn apply_kernel_knobs(args: &clusterformer::util::cli::Args) -> Result<()> {
     let threads = args.usize("threads")?;
     if threads > 0 {
@@ -170,6 +175,10 @@ fn apply_kernel_knobs(args: &clusterformer::util::cli::Args) -> Result<()> {
     }
     if args.flag("no-fusion") {
         std::env::set_var("CLUSTERFORMER_FUSION", "0");
+    }
+    let simd = args.str("simd")?;
+    if !simd.is_empty() && simd != "auto" {
+        std::env::set_var("CLUSTERFORMER_SIMD", simd);
     }
     Ok(())
 }
@@ -216,6 +225,12 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
             ThreadBudget::from_env().get(),
             clusterformer::runtime::interp::pool_exec::pool_workers(),
             clusterformer::runtime::interp::stats::par_fanouts()
+        );
+        println!(
+            "kernels: isa={} (detected {}) simd_dispatches={}",
+            m.kernel_isa,
+            clusterformer::runtime::interp::detected_kernel_isa().name(),
+            m.simd_dispatches
         );
         println!(
             "fusion: enabled={} chains={} epilogues={} softmax={} fused_bytes_saved={}",

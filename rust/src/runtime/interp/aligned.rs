@@ -1,0 +1,232 @@
+//! 64-byte-aligned growable buffers for kernel-facing storage.
+//!
+//! The SIMD microkernels stream arena slots and GEMM pack scratch with
+//! 256-bit unaligned loads, which run at full speed only when they do
+//! not straddle cache lines. `Vec<f32>` gives 4-byte alignment; [`AVec`]
+//! gives every buffer a 64-byte base (one cache line, and the DDR burst
+//! granularity on the paper's edge targets) by backing the storage with
+//! a `Vec` of 64-byte chunks. That also keeps hot slots from sharing a
+//! cache line with a neighboring allocation's header.
+//!
+//! The API is the small slice of `Vec` the arena and pack scratch
+//! actually use (`resize`, `clear`, `extend_from_slice`, `capacity`),
+//! plus `Deref`/`DerefMut` to `[T]` so every existing kernel keeps
+//! taking plain slices.
+
+use std::marker::PhantomData;
+
+/// One cache line of raw storage; the allocation unit behind [`AVec`].
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Align64([u8; 64]);
+
+const LINE: usize = 64;
+
+/// A growable buffer of `T` whose data pointer is always 64-byte
+/// aligned. `T` is restricted to `Copy` plain-old-data (the arena holds
+/// f32/i32/i64/u8), so dropping the backing `Vec<Align64>` needs no
+/// per-element cleanup and reinterpreting spare capacity is sound.
+pub(crate) struct AVec<T: Copy> {
+    buf: Vec<Align64>,
+    len: usize,
+    _marker: PhantomData<T>,
+}
+
+impl<T: Copy> AVec<T> {
+    /// Elements per 64-byte line. `T` is one of the arena's POD scalar
+    /// types, all of which divide 64 exactly.
+    const PER: usize = LINE / std::mem::size_of::<T>();
+
+    /// New empty buffer (no allocation until first growth).
+    pub(crate) fn new() -> Self {
+        // Scalars wider than a cache line would make PER zero; the
+        // arena only stores 1/4/8-byte scalars.
+        assert!(Self::PER > 0, "AVec element wider than a cache line");
+        AVec { buf: Vec::new(), len: 0, _marker: PhantomData }
+    }
+
+    /// Lines needed to hold `n` elements.
+    fn lines_for(n: usize) -> usize {
+        n.div_ceil(Self::PER)
+    }
+
+    /// Number of initialized elements.
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the buffer holds no elements.
+    pub(crate) fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Elements the buffer can hold without reallocating.
+    pub(crate) fn capacity(&self) -> usize {
+        self.buf.capacity() * Self::PER
+    }
+
+    /// Drop all elements, keeping the allocation.
+    pub(crate) fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Aligned base pointer. Valid for `capacity()` elements once the
+    /// backing lines exist; for an empty backing it is the `Vec`'s
+    /// 64-aligned dangling pointer, valid for zero-length slices.
+    fn base(&self) -> *const T {
+        self.buf.as_ptr() as *const T
+    }
+
+    fn base_mut(&mut self) -> *mut T {
+        self.buf.as_mut_ptr() as *mut T
+    }
+
+    /// Resize to `n` elements, filling any new tail with `fill`.
+    pub(crate) fn resize(&mut self, n: usize, fill: T) {
+        let lines = Self::lines_for(n);
+        if lines > self.buf.len() {
+            // Growing the line Vec copies only raw bytes (Align64 is
+            // Copy); the zeroed new lines are immediately overwritten
+            // below for the live region.
+            self.buf.resize(lines, Align64([0u8; LINE]));
+        }
+        if n > self.len {
+            let base = self.base_mut();
+            for i in self.len..n {
+                // SAFETY: `i < n <= buf.len() * PER` elements of backing
+                // storage exist and are plain bytes; writing POD `T` is
+                // sound.
+                unsafe { base.add(i).write(fill) };
+            }
+        }
+        self.len = n;
+    }
+
+    /// The initialized elements as a plain slice (explicit form of the
+    /// `Deref` view, for enum-constructor positions where deref
+    /// coercion does not fire).
+    pub(crate) fn as_slice(&self) -> &[T] {
+        self
+    }
+
+    /// Append a slice, growing as needed.
+    pub(crate) fn extend_from_slice(&mut self, src: &[T]) {
+        let n = self.len + src.len();
+        let lines = Self::lines_for(n);
+        if lines > self.buf.len() {
+            self.buf.resize(lines, Align64([0u8; LINE]));
+        }
+        let base = self.base_mut();
+        for (i, &v) in src.iter().enumerate() {
+            // SAFETY: backing storage for `len + i < n` elements exists
+            // (resized above); `T` is POD.
+            unsafe { base.add(self.len + i).write(v) };
+        }
+        self.len = n;
+    }
+}
+
+impl<T: Copy> std::ops::Deref for AVec<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        // SAFETY: the first `len` elements were written via `resize` /
+        // `extend_from_slice`; the base pointer is aligned for Align64
+        // (64 bytes) and therefore for `T`.
+        unsafe { std::slice::from_raw_parts(self.base(), self.len) }
+    }
+}
+
+impl<T: Copy> std::ops::DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        let len = self.len;
+        // SAFETY: as in `deref`; unique access through `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.base_mut(), len) }
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> Self {
+        let mut out = Self::new();
+        out.extend_from_slice(self);
+        out
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AVec<T> {
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_is_cache_line_aligned() {
+        let mut v: AVec<f32> = AVec::new();
+        v.resize(100, 1.5);
+        assert_eq!(v.as_ptr() as usize % 64, 0);
+        assert_eq!(v.len(), 100);
+        assert!(v.capacity() >= 100);
+        assert!(v.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn resize_preserves_prefix_and_fills_tail() {
+        let mut v: AVec<i32> = AVec::new();
+        v.extend_from_slice(&[1, 2, 3]);
+        v.resize(6, 9);
+        assert_eq!(&*v, &[1, 2, 3, 9, 9, 9]);
+        v.resize(2, 0);
+        assert_eq!(&*v, &[1, 2]);
+        // Shrinking keeps capacity; regrowing re-fills the tail.
+        let cap = v.capacity();
+        v.resize(4, 7);
+        assert_eq!(&*v, &[1, 2, 7, 7]);
+        assert_eq!(v.capacity(), cap);
+    }
+
+    #[test]
+    fn clear_and_extend_reuse_storage() {
+        let mut v: AVec<u8> = AVec::new();
+        v.extend_from_slice(&[5; 200]);
+        let cap = v.capacity();
+        v.clear();
+        assert!(v.is_empty());
+        v.extend_from_slice(&[7; 150]);
+        assert_eq!(v.capacity(), cap);
+        assert_eq!(v.len(), 150);
+        assert!(v.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn clone_and_eq() {
+        let mut v: AVec<f32> = AVec::new();
+        v.extend_from_slice(&[1.0, -2.0, 3.5]);
+        let w = v.clone();
+        assert_eq!(v, w);
+        assert_eq!(w.as_ptr() as usize % 64, 0);
+    }
+
+    #[test]
+    fn wide_scalars_fill_whole_lines() {
+        let mut v: AVec<i64> = AVec::new();
+        v.resize(9, -1); // 9 * 8 bytes -> two lines
+        assert_eq!(v.len(), 9);
+        assert!(v.capacity() >= 9);
+        assert!(v.iter().all(|&x| x == -1));
+    }
+}

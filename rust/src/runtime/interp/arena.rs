@@ -22,6 +22,7 @@ use std::hash::{Hash, Hasher};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::aligned::AVec;
 use super::clustered::{self, LutScratch};
 use super::eval::WeightCache;
 use super::gemm::{self, PackScratch};
@@ -35,28 +36,35 @@ use crate::tensor::{Dtype, Tensor};
 // ---------------------------------------------------------------------
 
 /// One typed storage buffer (an arena slot, a staged parameter, or a
-/// cached weight value).
+/// cached weight value). Backed by 64-byte-aligned [`AVec`] storage so
+/// the SIMD microkernels' unaligned vector loads never straddle cache
+/// lines at the buffer base.
 #[derive(Debug, Clone)]
 pub(crate) enum Buf {
-    F32(Vec<f32>),
-    U8(Vec<u8>),
-    I32(Vec<i32>),
-    I64(Vec<i64>),
+    F32(AVec<f32>),
+    U8(AVec<u8>),
+    I32(AVec<i32>),
+    I64(AVec<i64>),
 }
 
 impl Default for Buf {
     fn default() -> Self {
-        Buf::F32(Vec::new())
+        Buf::F32(AVec::new())
     }
 }
 
 impl Buf {
     pub(crate) fn zeroed(dtype: Dtype, elems: usize) -> Buf {
+        fn filled<T: Copy>(elems: usize, zero: T) -> AVec<T> {
+            let mut v = AVec::new();
+            v.resize(elems, zero);
+            v
+        }
         match dtype {
-            Dtype::F32 => Buf::F32(vec![0.0; elems]),
-            Dtype::U8 => Buf::U8(vec![0; elems]),
-            Dtype::I32 => Buf::I32(vec![0; elems]),
-            Dtype::I64 => Buf::I64(vec![0; elems]),
+            Dtype::F32 => Buf::F32(filled(elems, 0.0)),
+            Dtype::U8 => Buf::U8(filled(elems, 0)),
+            Dtype::I32 => Buf::I32(filled(elems, 0)),
+            Dtype::I64 => Buf::I64(filled(elems, 0)),
         }
     }
 
@@ -71,10 +79,10 @@ impl Buf {
 
     pub(crate) fn as_ref(&self) -> BufRef<'_> {
         match self {
-            Buf::F32(v) => BufRef::F32(v),
-            Buf::U8(v) => BufRef::U8(v),
-            Buf::I32(v) => BufRef::I32(v),
-            Buf::I64(v) => BufRef::I64(v),
+            Buf::F32(v) => BufRef::F32(v.as_slice()),
+            Buf::U8(v) => BufRef::U8(v.as_slice()),
+            Buf::I32(v) => BufRef::I32(v.as_slice()),
+            Buf::I64(v) => BufRef::I64(v.as_slice()),
         }
     }
 
@@ -123,52 +131,53 @@ impl Buf {
         match t.dtype() {
             Dtype::F32 => {
                 if !matches!(self, Buf::F32(_)) {
-                    *self = Buf::F32(Vec::new());
+                    *self = Buf::F32(AVec::new());
                 }
                 if let Buf::F32(v) = self {
-                    super::stats::note_scratch_growth(v, t.elems());
+                    super::stats::note_scratch_growth(v.capacity(), t.elems());
                     v.clear();
-                    v.extend(
-                        bytes
-                            .chunks_exact(4)
-                            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
-                    );
+                    v.resize(t.elems(), 0.0);
+                    for (x, c) in v.iter_mut().zip(bytes.chunks_exact(4)) {
+                        *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
                 }
             }
             Dtype::U8 => {
                 if !matches!(self, Buf::U8(_)) {
-                    *self = Buf::U8(Vec::new());
+                    *self = Buf::U8(AVec::new());
                 }
                 if let Buf::U8(v) = self {
-                    super::stats::note_scratch_growth(v, t.elems());
+                    super::stats::note_scratch_growth(v.capacity(), t.elems());
                     v.clear();
                     v.extend_from_slice(bytes);
                 }
             }
             Dtype::I32 => {
                 if !matches!(self, Buf::I32(_)) {
-                    *self = Buf::I32(Vec::new());
+                    *self = Buf::I32(AVec::new());
                 }
                 if let Buf::I32(v) = self {
-                    super::stats::note_scratch_growth(v, t.elems());
+                    super::stats::note_scratch_growth(v.capacity(), t.elems());
                     v.clear();
-                    v.extend(
-                        bytes
-                            .chunks_exact(4)
-                            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
-                    );
+                    v.resize(t.elems(), 0);
+                    for (x, c) in v.iter_mut().zip(bytes.chunks_exact(4)) {
+                        *x = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    }
                 }
             }
             Dtype::I64 => {
                 if !matches!(self, Buf::I64(_)) {
-                    *self = Buf::I64(Vec::new());
+                    *self = Buf::I64(AVec::new());
                 }
                 if let Buf::I64(v) = self {
-                    super::stats::note_scratch_growth(v, t.elems());
+                    super::stats::note_scratch_growth(v.capacity(), t.elems());
                     v.clear();
-                    v.extend(bytes.chunks_exact(8).map(|c| {
-                        i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]])
-                    }));
+                    v.resize(t.elems(), 0);
+                    for (x, c) in v.iter_mut().zip(bytes.chunks_exact(8)) {
+                        *x = i64::from_le_bytes([
+                            c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7],
+                        ]);
+                    }
                 }
             }
         }
@@ -205,7 +214,7 @@ impl Buf {
         match (self, other) {
             (Buf::F32(a), Buf::F32(b)) => {
                 a.len() == b.len()
-                    && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                    && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
             }
             (Buf::U8(a), Buf::U8(b)) => a == b,
             (Buf::I32(a), Buf::I32(b)) => a == b,
@@ -594,27 +603,27 @@ fn run_op(
     let inst = &ctx.insts[i];
     let n: usize = inst.shape.dims.iter().product();
     match cfg {
-        OpCfg::Unary(f) => {
+        OpCfg::Unary(f, simd) => {
             if alias_of == Some(0) {
-                ops::unary_inplace(out.f32_mut(n)?, *f, threads);
+                ops::unary_inplace(out.f32_mut(n)?, *f, *simd, threads);
             } else {
                 let (_, src) = ctx.operand(i, 0)?;
-                ops::unary_into(src.f32()?, out.f32_mut(n)?, *f, threads);
+                ops::unary_into(src.f32()?, out.f32_mut(n)?, *f, *simd, threads);
             }
         }
-        OpCfg::BinF32(f) => match alias_of {
+        OpCfg::BinF32(f, simd) => match alias_of {
             Some(0) => {
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_inplace_lhs(out.f32_mut(n)?, b.f32()?, *f, threads);
+                ops::binary_f32_inplace_lhs(out.f32_mut(n)?, b.f32()?, *f, *simd, threads);
             }
             Some(1) => {
                 let (_, a) = ctx.operand(i, 0)?;
-                ops::binary_inplace_rhs(a.f32()?, out.f32_mut(n)?, *f, threads);
+                ops::binary_f32_inplace_rhs(a.f32()?, out.f32_mut(n)?, *f, *simd, threads);
             }
             _ => {
                 let (_, a) = ctx.operand(i, 0)?;
                 let (_, b) = ctx.operand(i, 1)?;
-                ops::binary_into(a.f32()?, b.f32()?, out.f32_mut(n)?, *f, threads);
+                ops::binary_f32_into(a.f32()?, b.f32()?, out.f32_mut(n)?, *f, *simd, threads);
             }
         },
         OpCfg::BinI32(f) => match alias_of {

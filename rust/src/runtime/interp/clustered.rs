@@ -33,7 +33,7 @@ use anyhow::{bail, Result};
 use super::eval::{attr_int, attr_list};
 use super::gemm::DotSpec;
 use super::ops::{fused_apply, FusedStep};
-use super::tuning::LUT_PAR_MIN_WORK as PAR_MIN_WORK;
+use super::tuning::{kernel_isa, KernelIsa, LUT_JB, LUT_PAR_MIN_WORK as PAR_MIN_WORK};
 use crate::clustering::packing::{bits_for_clusters, pack_indices, packed_len, unpack_into};
 use crate::hlo::parser::{HloInstruction, HloModule};
 
@@ -68,19 +68,62 @@ struct LutTask<'a> {
     src: LutSrc<'a>,
 }
 
-/// Reusable per-call scratch for the LUT kernel (one unpacked index
-/// column + one activation bucket per cluster). The arena executor keeps
-/// one across calls so steady-state serial LUT dots allocate nothing;
-/// each spawned thread of the parallel path bootstraps its own
-/// (`k` + ≤256 elements — excluded from the `tensor_allocs` contract).
+/// Reusable per-call scratch for the LUT kernel. The scalar path uses
+/// one unpacked index column (`col`, `k` bytes) plus one activation
+/// bucket per cluster (`bucket`, ≤256 f32). The SIMD paths additionally
+/// keep a decoded index tile for one [`LUT_JB`]-column block (`cols`,
+/// `LUT_JB * k` bytes), a lane-transposed activation tile (`xt`,
+/// `k * lanes` f32), and a lane-wide bucket tile (`bt`,
+/// `clusters * lanes` f32). All of it is O(`k`), sized once at the
+/// high-water mark and reused across calls; the arena executor keeps one
+/// scratch so steady-state serial LUT dots allocate nothing, and each
+/// spawned thread of the parallel path bootstraps its own (excluded from
+/// the `tensor_allocs` contract — see `stats.rs`).
 #[derive(Debug, Default)]
 pub struct LutScratch {
     col: Vec<u8>,
     bucket: Vec<f32>,
+    cols: Vec<u8>,
+    xt: Vec<f32>,
+    bt: Vec<f32>,
 }
 
 /// Compute output rows `[row0, row0 + nrows)` of `out[m, n]`.
+///
+/// Dispatches once per call on the cached [`kernel_isa`] between the
+/// scalar reference and the AVX2/NEON lane-group variants. The vector
+/// paths keep the scalar kernel's per-element order exactly — buckets
+/// fill in ascending `i`, the cluster dot runs in ascending `c` with
+/// separate multiply + add — so every dispatch level produces the same
+/// bits (asserted in `tests/simd_props.rs`).
 fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32], scratch: &mut LutScratch) {
+    match kernel_isa() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => {
+            super::stats::count_simd_dispatch();
+            // SAFETY: kernel_isa() only returns Avx2 when AVX2+FMA were
+            // detected on this CPU.
+            unsafe { lut_rows_avx2(t, row0, nrows, out, scratch) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon => {
+            super::stats::count_simd_dispatch();
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { lut_rows_neon(t, row0, nrows, out, scratch) }
+        }
+        _ => lut_rows_scalar(t, row0, nrows, out, scratch),
+    }
+}
+
+/// Scalar reference LUT kernel — the bit-exact baseline the SIMD
+/// variants are held to, and the tail path for `nrows % lanes` rows.
+fn lut_rows_scalar(
+    t: &LutTask<'_>,
+    row0: usize,
+    nrows: usize,
+    out: &mut [f32],
+    scratch: &mut LutScratch,
+) {
     let (k, n) = (t.k, t.n);
     scratch.col.resize(t.k.max(scratch.col.len()), 0);
     scratch.bucket.resize(t.cb.len().max(scratch.bucket.len()), 0.0);
@@ -109,6 +152,182 @@ fn lut_rows(t: &LutTask<'_>, row0: usize, nrows: usize, out: &mut [f32], scratch
             }
             out[r * n + j] = acc;
         }
+    }
+}
+
+/// Decode index columns `jb..jbe` into `cols` (`k` bytes per column) so
+/// the SIMD kernels pay the per-column decode (bit unpack or strided
+/// copy) once per [`LUT_JB`] block instead of once per row group.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn decode_cols(t: &LutTask<'_>, jb: usize, jbe: usize, cols: &mut [u8]) {
+    let (k, n) = (t.k, t.n);
+    for j in jb..jbe {
+        let col = &mut cols[(j - jb) * k..(j - jb + 1) * k];
+        match t.src {
+            LutSrc::Packed { packed, row_bytes, bits } => {
+                unpack_into(&packed[j * row_bytes..(j + 1) * row_bytes], bits, col);
+            }
+            LutSrc::Rows(idx) => {
+                for i in 0..k {
+                    col[i] = idx[i * n + j];
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 LUT kernel: processes 8 output rows per lane group. Per
+/// [`LUT_JB`]-column block the indices are decoded once (`decode_cols`);
+/// per row group the 8 activation rows are transposed into `xt[i*8 + l]`
+/// so the bucket add for contraction index `i` is one contiguous 8-wide
+/// load/add/store on the bucket tile `bt[col[i]*8..]` — no lane
+/// conflicts, because the 8 lanes are distinct output *rows* sharing the
+/// same index column. The cluster dot then walks `bt` in ascending `c`
+/// with separate multiply + add. Per element this is exactly the scalar
+/// kernel's ascending-`i` bucket fill and ascending-`c` dot, so the
+/// result is bit-for-bit equal to scalar; `nrows % 8` tail rows run
+/// [`lut_rows_scalar`] unchanged.
+///
+/// # Safety
+/// AVX2 must be available; the dispatcher guarantees this via
+/// [`kernel_isa`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn lut_rows_avx2(
+    t: &LutTask<'_>,
+    row0: usize,
+    nrows: usize,
+    out: &mut [f32],
+    s: &mut LutScratch,
+) {
+    use std::arch::x86_64::*;
+    const L: usize = 8;
+    let (k, n) = (t.k, t.n);
+    let nc = t.cb.len();
+    let groups = nrows / L;
+    if groups > 0 {
+        s.cols.resize((LUT_JB * k).max(s.cols.len()), 0);
+        s.xt.resize((k * L).max(s.xt.len()), 0.0);
+        s.bt.resize((nc * L).max(s.bt.len()), 0.0);
+        let LutScratch { cols, xt, bt, .. } = s;
+        let mut jb = 0usize;
+        while jb < n {
+            let jbe = (jb + LUT_JB).min(n);
+            decode_cols(t, jb, jbe, cols);
+            for g in 0..groups {
+                let r0 = g * L;
+                for l in 0..L {
+                    let xrow = &t.x[(row0 + r0 + l) * k..(row0 + r0 + l + 1) * k];
+                    for i in 0..k {
+                        xt[i * L + l] = xrow[i];
+                    }
+                }
+                let xtp = xt.as_ptr();
+                let btp = bt.as_mut_ptr();
+                for j in jb..jbe {
+                    let col = &cols[(j - jb) * k..(j - jb + 1) * k];
+                    for c in 0..nc {
+                        _mm256_storeu_ps(btp.add(c * L), _mm256_setzero_ps());
+                    }
+                    for i in 0..k {
+                        let p = btp.add(*col.get_unchecked(i) as usize * L);
+                        let sum = _mm256_add_ps(
+                            _mm256_loadu_ps(p),
+                            _mm256_loadu_ps(xtp.add(i * L)),
+                        );
+                        _mm256_storeu_ps(p, sum);
+                    }
+                    let mut acc = _mm256_setzero_ps();
+                    for c in 0..nc {
+                        let cv = _mm256_set1_ps(*t.cb.get_unchecked(c));
+                        acc = _mm256_add_ps(
+                            acc,
+                            _mm256_mul_ps(_mm256_loadu_ps(btp.add(c * L)), cv),
+                        );
+                    }
+                    let mut lanes = [0.0f32; L];
+                    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+                    for l in 0..L {
+                        out[(r0 + l) * n + j] = lanes[l];
+                    }
+                }
+            }
+            jb = jbe;
+        }
+    }
+    let rem0 = groups * L;
+    if rem0 < nrows {
+        lut_rows_scalar(t, row0 + rem0, nrows - rem0, &mut out[rem0 * n..], s);
+    }
+}
+
+/// NEON LUT kernel: identical structure to [`lut_rows_avx2`] with
+/// 4-wide lane groups; same ascending-`i` / ascending-`c` order, so
+/// bit-for-bit equal to scalar.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64); the dispatcher
+/// guarantees this via [`kernel_isa`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn lut_rows_neon(
+    t: &LutTask<'_>,
+    row0: usize,
+    nrows: usize,
+    out: &mut [f32],
+    s: &mut LutScratch,
+) {
+    use std::arch::aarch64::*;
+    const L: usize = 4;
+    let (k, n) = (t.k, t.n);
+    let nc = t.cb.len();
+    let groups = nrows / L;
+    if groups > 0 {
+        s.cols.resize((LUT_JB * k).max(s.cols.len()), 0);
+        s.xt.resize((k * L).max(s.xt.len()), 0.0);
+        s.bt.resize((nc * L).max(s.bt.len()), 0.0);
+        let LutScratch { cols, xt, bt, .. } = s;
+        let mut jb = 0usize;
+        while jb < n {
+            let jbe = (jb + LUT_JB).min(n);
+            decode_cols(t, jb, jbe, cols);
+            for g in 0..groups {
+                let r0 = g * L;
+                for l in 0..L {
+                    let xrow = &t.x[(row0 + r0 + l) * k..(row0 + r0 + l + 1) * k];
+                    for i in 0..k {
+                        xt[i * L + l] = xrow[i];
+                    }
+                }
+                let xtp = xt.as_ptr();
+                let btp = bt.as_mut_ptr();
+                for j in jb..jbe {
+                    let col = &cols[(j - jb) * k..(j - jb + 1) * k];
+                    for c in 0..nc {
+                        vst1q_f32(btp.add(c * L), vdupq_n_f32(0.0));
+                    }
+                    for i in 0..k {
+                        let p = btp.add(*col.get_unchecked(i) as usize * L);
+                        vst1q_f32(p, vaddq_f32(vld1q_f32(p), vld1q_f32(xtp.add(i * L))));
+                    }
+                    let mut acc = vdupq_n_f32(0.0);
+                    for c in 0..nc {
+                        let cv = vdupq_n_f32(*t.cb.get_unchecked(c));
+                        acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(btp.add(c * L)), cv));
+                    }
+                    let mut lanes = [0.0f32; L];
+                    vst1q_f32(lanes.as_mut_ptr(), acc);
+                    for l in 0..L {
+                        out[(r0 + l) * n + j] = lanes[l];
+                    }
+                }
+            }
+            jb = jbe;
+        }
+    }
+    let rem0 = groups * L;
+    if rem0 < nrows {
+        lut_rows_scalar(t, row0 + rem0, nrows - rem0, &mut out[rem0 * n..], s);
     }
 }
 

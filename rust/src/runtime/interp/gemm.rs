@@ -16,14 +16,32 @@
 //! accumulator, the blocked kernel is **bit-for-bit identical** to the
 //! naive reference walk ([`dot_general_naive`]) — verified by property
 //! tests in `tests/gemm_props.rs`.
+//!
+//! ## SIMD tile contract
+//!
+//! [`gemm_rows`] dispatches once per call on [`super::tuning::kernel_isa`]
+//! between the scalar reference and explicit AVX2 (8-wide) / NEON
+//! (4-wide) variants. The vector kernels strip-mine the j-loop into
+//! lane-width column tiles whose accumulators stay in registers across
+//! one k-block, but keep the *per-element* accumulation order of the
+//! scalar kernel: within a lane every product is added in ascending `kk`
+//! with a separate multiply and add (no FMA contraction — FMA's fused
+//! rounding would change the bits), and the `n % lanes` tail columns run
+//! the scalar walk in the same order. The SIMD paths are therefore
+//! bit-for-bit equal to scalar — asserted by `tests/simd_props.rs` at
+//! every forced dispatch level.
 
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{bail, Result};
 
+use super::aligned::AVec;
 use super::eval::attr_list;
 use super::ops::{advance, fused_apply, strides, FusedStep};
-use super::tuning::{GEMM_KC as KC, GEMM_MR as MR, GEMM_PAR_MIN_FLOPS as PAR_MIN_FLOPS};
+use super::tuning::{
+    kernel_isa, KernelIsa, GEMM_KC as KC, GEMM_MR as MR,
+    GEMM_PAR_MIN_FLOPS as PAR_MIN_FLOPS,
+};
 use crate::tensor::Tensor;
 
 /// Contracting/batch dimension lists of an XLA `DotGeneral`.
@@ -118,20 +136,23 @@ fn is_identity(order: &[usize]) -> bool {
 }
 
 /// Repack `vals` (row-major over `dims`) so the axes appear in `order`,
-/// into `out` (cleared; capacity reused across calls).
-fn pack_into(vals: &[f32], dims: &[usize], order: &[usize], out: &mut Vec<f32>) {
-    super::stats::note_scratch_growth(out, vals.len());
+/// into `out` (overwritten; 64-byte-aligned capacity reused across
+/// calls).
+fn pack_into(vals: &[f32], dims: &[usize], order: &[usize], out: &mut AVec<f32>) {
+    super::stats::note_scratch_growth(out.capacity(), vals.len());
     out.clear();
+    out.resize(vals.len(), 0.0);
     if vals.is_empty() {
         return;
     }
     let st = strides(dims);
     let out_dims: Vec<usize> = order.iter().map(|&d| dims[d]).collect();
-    out.reserve(vals.len());
     let mut idx = vec![0usize; out_dims.len()];
+    let mut o = 0usize;
     loop {
         let src: usize = idx.iter().zip(order).map(|(&i, &d)| i * st[d]).sum();
-        out.push(vals[src]);
+        out[o] = vals[src];
+        o += 1;
         if !advance(&mut idx, &out_dims) {
             break;
         }
@@ -140,10 +161,12 @@ fn pack_into(vals: &[f32], dims: &[usize], order: &[usize], out: &mut Vec<f32>) 
 
 /// Reusable canonicalization scratch for [`dot_general_into`]: holds the
 /// repacked lhs/rhs between calls so steady-state dots allocate nothing.
+/// Backed by 64-byte-aligned storage so the SIMD kernels' lane loads on
+/// packed operands never split a cache line at offset zero.
 #[derive(Debug, Default)]
 pub struct PackScratch {
-    a: Vec<f32>,
-    w: Vec<f32>,
+    a: AVec<f32>,
+    w: AVec<f32>,
 }
 
 /// DotGeneral through the blocked GEMM kernel, writing into a
@@ -311,11 +334,44 @@ pub(crate) fn gemm_ep(
 /// Compute output rows `[row0, row0 + nrows)` (global row index = batch
 /// index * m + lhs row). `out` covers exactly those rows.
 ///
-/// Public (but hidden) so `benches/pool_scaling.rs` can drive the exact
-/// same microkernel under the retired scoped-spawn strategy as the
-/// baseline; nothing in the library calls it with `std::thread` anymore.
+/// Dispatches once per call on the cached [`kernel_isa`] between the
+/// scalar reference and the bit-identical AVX2/NEON variants (see the
+/// module-level tile contract).
+///
+/// Public (but hidden) so `benches/pool_scaling.rs` and
+/// `benches/gemm_kernels.rs` can drive the exact same microkernel;
+/// nothing in the library calls it with `std::thread` anymore.
 #[doc(hidden)]
 pub fn gemm_rows(row0: usize, nrows: usize, t: Tile, a: &[f32], w: &[f32], out: &mut [f32]) {
+    match kernel_isa() {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => {
+            super::stats::count_simd_dispatch();
+            // SAFETY: kernel_isa() only returns Avx2 when AVX2+FMA were
+            // detected on this CPU.
+            unsafe { gemm_rows_avx2(row0, nrows, t, a, w, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon => {
+            super::stats::count_simd_dispatch();
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { gemm_rows_neon(row0, nrows, t, a, w, out) }
+        }
+        _ => gemm_rows_scalar(row0, nrows, t, a, w, out),
+    }
+}
+
+/// Scalar reference microkernel: cache-blocked over k, register-tiled
+/// over `GEMM_MR` output rows. The bit-exact baseline every SIMD variant
+/// is held to.
+fn gemm_rows_scalar(
+    row0: usize,
+    nrows: usize,
+    t: Tile,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
     let (m, k, n) = (t.m, t.k, t.n);
     let mut k0 = 0usize;
     while k0 < k {
@@ -357,6 +413,213 @@ pub fn gemm_rows(row0: usize, nrows: usize, t: Tile, a: &[f32], w: &[f32], out: 
                     let wrow = &wb[kk * n..kk * n + n];
                     for j in 0..n {
                         o[j] += x0 * wrow[j];
+                    }
+                }
+                r += 1;
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// AVX2 variant of [`gemm_rows_scalar`]: same k-block / row-group
+/// structure, j-loop strip-mined into 8-wide column tiles whose
+/// accumulators live in ymm registers across the k-block. Separate
+/// multiply + add per lane (never FMA) and a scalar tail over `n % 8`
+/// columns keep every element's ascending-`kk` accumulation order, so
+/// the output is bit-for-bit equal to the scalar kernel.
+///
+/// # Safety
+/// AVX2 must be available; the dispatcher guarantees this via
+/// [`kernel_isa`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gemm_rows_avx2(
+    row0: usize,
+    nrows: usize,
+    t: Tile,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    const L: usize = 8;
+    let (m, k, n) = (t.m, t.k, t.n);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut r = 0usize;
+        while r < nrows {
+            let gr = row0 + r;
+            let bi = gr / m;
+            let wb = &w[bi * k * n..(bi + 1) * k * n];
+            let wp = wb.as_ptr();
+            let rows_in_batch = m - gr % m;
+            if rows_in_batch >= MR && nrows - r >= MR {
+                let o = &mut out[r * n..(r + MR) * n];
+                let op = o.as_mut_ptr();
+                let mut j = 0usize;
+                while j + L <= n {
+                    let mut acc0 = _mm256_loadu_ps(op.add(j));
+                    let mut acc1 = _mm256_loadu_ps(op.add(n + j));
+                    let mut acc2 = _mm256_loadu_ps(op.add(2 * n + j));
+                    let mut acc3 = _mm256_loadu_ps(op.add(3 * n + j));
+                    for kk in k0..k1 {
+                        let wv = _mm256_loadu_ps(wp.add(kk * n + j));
+                        let x0 = _mm256_set1_ps(*a.get_unchecked(gr * k + kk));
+                        let x1 = _mm256_set1_ps(*a.get_unchecked((gr + 1) * k + kk));
+                        let x2 = _mm256_set1_ps(*a.get_unchecked((gr + 2) * k + kk));
+                        let x3 = _mm256_set1_ps(*a.get_unchecked((gr + 3) * k + kk));
+                        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(x0, wv));
+                        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(x1, wv));
+                        acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(x2, wv));
+                        acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(x3, wv));
+                    }
+                    _mm256_storeu_ps(op.add(j), acc0);
+                    _mm256_storeu_ps(op.add(n + j), acc1);
+                    _mm256_storeu_ps(op.add(2 * n + j), acc2);
+                    _mm256_storeu_ps(op.add(3 * n + j), acc3);
+                    j += L;
+                }
+                if j < n {
+                    for kk in k0..k1 {
+                        let x0 = a[gr * k + kk];
+                        let x1 = a[(gr + 1) * k + kk];
+                        let x2 = a[(gr + 2) * k + kk];
+                        let x3 = a[(gr + 3) * k + kk];
+                        let wrow = &wb[kk * n..kk * n + n];
+                        for jj in j..n {
+                            o[jj] += x0 * wrow[jj];
+                            o[n + jj] += x1 * wrow[jj];
+                            o[2 * n + jj] += x2 * wrow[jj];
+                            o[3 * n + jj] += x3 * wrow[jj];
+                        }
+                    }
+                }
+                r += MR;
+            } else {
+                let o = &mut out[r * n..(r + 1) * n];
+                let op = o.as_mut_ptr();
+                let mut j = 0usize;
+                while j + L <= n {
+                    let mut acc = _mm256_loadu_ps(op.add(j));
+                    for kk in k0..k1 {
+                        let wv = _mm256_loadu_ps(wp.add(kk * n + j));
+                        let xv = _mm256_set1_ps(*a.get_unchecked(gr * k + kk));
+                        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, wv));
+                    }
+                    _mm256_storeu_ps(op.add(j), acc);
+                    j += L;
+                }
+                if j < n {
+                    for kk in k0..k1 {
+                        let x0 = a[gr * k + kk];
+                        let wrow = &wb[kk * n..kk * n + n];
+                        for jj in j..n {
+                            o[jj] += x0 * wrow[jj];
+                        }
+                    }
+                }
+                r += 1;
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// NEON variant of [`gemm_rows_scalar`]: identical structure to the AVX2
+/// kernel with 4-wide lanes. Separate `vmulq`/`vaddq` (no `vfmaq`) and
+/// the scalar column tail preserve scalar bit-equality.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64); the dispatcher
+/// guarantees this via [`kernel_isa`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gemm_rows_neon(
+    row0: usize,
+    nrows: usize,
+    t: Tile,
+    a: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+) {
+    use std::arch::aarch64::*;
+    const L: usize = 4;
+    let (m, k, n) = (t.m, t.k, t.n);
+    let mut k0 = 0usize;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut r = 0usize;
+        while r < nrows {
+            let gr = row0 + r;
+            let bi = gr / m;
+            let wb = &w[bi * k * n..(bi + 1) * k * n];
+            let wp = wb.as_ptr();
+            let rows_in_batch = m - gr % m;
+            if rows_in_batch >= MR && nrows - r >= MR {
+                let o = &mut out[r * n..(r + MR) * n];
+                let op = o.as_mut_ptr();
+                let mut j = 0usize;
+                while j + L <= n {
+                    let mut acc0 = vld1q_f32(op.add(j));
+                    let mut acc1 = vld1q_f32(op.add(n + j));
+                    let mut acc2 = vld1q_f32(op.add(2 * n + j));
+                    let mut acc3 = vld1q_f32(op.add(3 * n + j));
+                    for kk in k0..k1 {
+                        let wv = vld1q_f32(wp.add(kk * n + j));
+                        let x0 = vdupq_n_f32(*a.get_unchecked(gr * k + kk));
+                        let x1 = vdupq_n_f32(*a.get_unchecked((gr + 1) * k + kk));
+                        let x2 = vdupq_n_f32(*a.get_unchecked((gr + 2) * k + kk));
+                        let x3 = vdupq_n_f32(*a.get_unchecked((gr + 3) * k + kk));
+                        acc0 = vaddq_f32(acc0, vmulq_f32(x0, wv));
+                        acc1 = vaddq_f32(acc1, vmulq_f32(x1, wv));
+                        acc2 = vaddq_f32(acc2, vmulq_f32(x2, wv));
+                        acc3 = vaddq_f32(acc3, vmulq_f32(x3, wv));
+                    }
+                    vst1q_f32(op.add(j), acc0);
+                    vst1q_f32(op.add(n + j), acc1);
+                    vst1q_f32(op.add(2 * n + j), acc2);
+                    vst1q_f32(op.add(3 * n + j), acc3);
+                    j += L;
+                }
+                if j < n {
+                    for kk in k0..k1 {
+                        let x0 = a[gr * k + kk];
+                        let x1 = a[(gr + 1) * k + kk];
+                        let x2 = a[(gr + 2) * k + kk];
+                        let x3 = a[(gr + 3) * k + kk];
+                        let wrow = &wb[kk * n..kk * n + n];
+                        for jj in j..n {
+                            o[jj] += x0 * wrow[jj];
+                            o[n + jj] += x1 * wrow[jj];
+                            o[2 * n + jj] += x2 * wrow[jj];
+                            o[3 * n + jj] += x3 * wrow[jj];
+                        }
+                    }
+                }
+                r += MR;
+            } else {
+                let o = &mut out[r * n..(r + 1) * n];
+                let op = o.as_mut_ptr();
+                let mut j = 0usize;
+                while j + L <= n {
+                    let mut acc = vld1q_f32(op.add(j));
+                    for kk in k0..k1 {
+                        let wv = vld1q_f32(wp.add(kk * n + j));
+                        let xv = vdupq_n_f32(*a.get_unchecked(gr * k + kk));
+                        acc = vaddq_f32(acc, vmulq_f32(xv, wv));
+                    }
+                    vst1q_f32(op.add(j), acc);
+                    j += L;
+                }
+                if j < n {
+                    for kk in k0..k1 {
+                        let x0 = a[gr * k + kk];
+                        let wrow = &wb[kk * n..kk * n + n];
+                        for jj in j..n {
+                            o[jj] += x0 * wrow[jj];
+                        }
                     }
                 }
                 r += 1;

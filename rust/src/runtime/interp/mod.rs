@@ -34,6 +34,7 @@
 //! The `pjrt` feature recovers the XLA-compiled path on machines that
 //! have a native install.
 
+mod aligned;
 mod arena;
 mod eval;
 mod ops;
@@ -58,6 +59,10 @@ use crate::tensor::Tensor;
 
 pub use eval::{evaluate_unplanned, WeightCache};
 pub use plan::MemoryPlan;
+pub use tuning::{detected_kernel_isa, kernel_isa, KernelIsa};
+// Test/bench hook for A/B-ing dispatch levels; not a stable API.
+#[doc(hidden)]
+pub use tuning::force_kernel_isa;
 
 /// Whether plan-time operator fusion is enabled, from the
 /// `CLUSTERFORMER_FUSION` env var (`--no-fusion` at the CLI): unset,

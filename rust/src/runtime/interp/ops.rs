@@ -127,6 +127,62 @@ pub(crate) fn binary_f32_fn(op: &str) -> Option<fn(f32, f32) -> f32> {
     Some(f)
 }
 
+/// Unary opcodes with a bit-exact SIMD lane kernel. The planner tags
+/// `OpCfg::Unary` with this at build time (the kernel fn pointer alone
+/// can't be inspected), and [`unary_into`]/[`unary_inplace`] dispatch on
+/// it. Only ops whose vector instruction is IEEE-identical to the scalar
+/// kernel qualify: sign manipulation (negate/abs), correctly-rounded
+/// sqrt / 1/sqrt, and exact rounding (floor/ceil). Transcendentals
+/// (exp/log/tanh/logistic/erf/power) stay scalar — a polynomial vector
+/// approximation could not keep the planned-vs-classic bitwise contract
+/// of `tests/plan_props.rs`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SimdUnary {
+    Negate,
+    Abs,
+    Sqrt,
+    Rsqrt,
+    Floor,
+    Ceil,
+}
+
+/// The SIMD tag for a unary opcode, when its vector kernel is bit-exact.
+pub(crate) fn simd_unary(op: &str) -> Option<SimdUnary> {
+    Some(match op {
+        "negate" => SimdUnary::Negate,
+        "abs" => SimdUnary::Abs,
+        "sqrt" => SimdUnary::Sqrt,
+        "rsqrt" => SimdUnary::Rsqrt,
+        "floor" => SimdUnary::Floor,
+        "ceil" => SimdUnary::Ceil,
+        _ => return None,
+    })
+}
+
+/// Binary f32 opcodes with a bit-exact SIMD lane kernel: the four IEEE
+/// correctly-rounded arithmetic ops. `maximum`/`minimum` are excluded
+/// (vector max/min NaN and ±0 semantics differ from `f32::max`'s), as is
+/// `power` (libm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum SimdBinary {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// The SIMD tag for a binary f32 opcode, when its vector kernel is
+/// bit-exact.
+pub(crate) fn simd_binary(op: &str) -> Option<SimdBinary> {
+    Some(match op {
+        "add" => SimdBinary::Add,
+        "subtract" => SimdBinary::Sub,
+        "multiply" => SimdBinary::Mul,
+        "divide" => SimdBinary::Div,
+        _ => return None,
+    })
+}
+
 /// s32 kernel for a binary elementwise opcode (shared table).
 pub(crate) fn binary_i32_fn(op: &str) -> Option<fn(i32, i32) -> i32> {
     let f: fn(i32, i32) -> i32 = match op {
@@ -1161,9 +1217,287 @@ pub(crate) fn gather_into<T: Copy>(
 // results are bit-for-bit identical at any budget.
 // ---------------------------------------------------------------------
 
-use super::tuning::EW_PAR_MIN_ELEMS as PAR_MIN_ELEMS;
+use super::tuning::{kernel_isa, KernelIsa, EW_PAR_MIN_ELEMS as PAR_MIN_ELEMS};
 
-pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32, threads: usize) {
+// SIMD lane cores for the bit-exact elementwise set ([`SimdUnary`] /
+// [`SimdBinary`]). Raw-pointer signatures so the same core serves the
+// `into` and aliasing `inplace` forms (operands are fully loaded before
+// the lane store); `asc`/`bsc` mark a broadcast-scalar operand. Each
+// core is generated for both ISAs by a macro so the lane loop and the
+// scalar tail cannot drift apart. Private and only reachable through
+// [`kernel_isa`]-guarded dispatchers.
+
+#[cfg(target_arch = "x86_64")]
+macro_rules! avx2_unary_core {
+    ($name:ident, $v:ident => $vexpr:expr, $x:ident => $sexpr:expr) => {
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(src: *const f32, out: *mut f32, len: usize) {
+            use std::arch::x86_64::*;
+            let mut i = 0usize;
+            while i + 8 <= len {
+                let $v = _mm256_loadu_ps(src.add(i));
+                _mm256_storeu_ps(out.add(i), $vexpr);
+                i += 8;
+            }
+            while i < len {
+                let $x = *src.add(i);
+                *out.add(i) = $sexpr;
+                i += 1;
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(vun_avx2_negate, v => _mm256_xor_ps(v, _mm256_set1_ps(-0.0)), x => -x);
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(vun_avx2_abs, v => _mm256_andnot_ps(_mm256_set1_ps(-0.0), v), x => x.abs());
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(vun_avx2_sqrt, v => _mm256_sqrt_ps(v), x => x.sqrt());
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(
+    vun_avx2_rsqrt,
+    v => _mm256_div_ps(_mm256_set1_ps(1.0), _mm256_sqrt_ps(v)),
+    x => 1.0 / x.sqrt()
+);
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(vun_avx2_floor, v => _mm256_floor_ps(v), x => x.floor());
+#[cfg(target_arch = "x86_64")]
+avx2_unary_core!(vun_avx2_ceil, v => _mm256_ceil_ps(v), x => x.ceil());
+
+#[cfg(target_arch = "aarch64")]
+macro_rules! neon_unary_core {
+    ($name:ident, $v:ident => $vexpr:expr, $x:ident => $sexpr:expr) => {
+        #[target_feature(enable = "neon")]
+        unsafe fn $name(src: *const f32, out: *mut f32, len: usize) {
+            use std::arch::aarch64::*;
+            let mut i = 0usize;
+            while i + 4 <= len {
+                let $v = vld1q_f32(src.add(i));
+                vst1q_f32(out.add(i), $vexpr);
+                i += 4;
+            }
+            while i < len {
+                let $x = *src.add(i);
+                *out.add(i) = $sexpr;
+                i += 1;
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(vun_neon_negate, v => vnegq_f32(v), x => -x);
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(vun_neon_abs, v => vabsq_f32(v), x => x.abs());
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(vun_neon_sqrt, v => vsqrtq_f32(v), x => x.sqrt());
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(
+    vun_neon_rsqrt,
+    v => vdivq_f32(vdupq_n_f32(1.0), vsqrtq_f32(v)),
+    x => 1.0 / x.sqrt()
+);
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(vun_neon_floor, v => vrndmq_f32(v), x => x.floor());
+#[cfg(target_arch = "aarch64")]
+neon_unary_core!(vun_neon_ceil, v => vrndpq_f32(v), x => x.ceil());
+
+#[cfg(target_arch = "x86_64")]
+macro_rules! avx2_binary_core {
+    ($name:ident, $vop:ident, $sop:tt) => {
+        #[target_feature(enable = "avx2,fma")]
+        unsafe fn $name(
+            a: *const f32,
+            asc: bool,
+            b: *const f32,
+            bsc: bool,
+            out: *mut f32,
+            len: usize,
+        ) {
+            use std::arch::x86_64::*;
+            if len == 0 {
+                return;
+            }
+            let av = if asc { _mm256_set1_ps(*a) } else { _mm256_setzero_ps() };
+            let bv = if bsc { _mm256_set1_ps(*b) } else { _mm256_setzero_ps() };
+            let mut i = 0usize;
+            while i + 8 <= len {
+                let x = if asc { av } else { _mm256_loadu_ps(a.add(i)) };
+                let y = if bsc { bv } else { _mm256_loadu_ps(b.add(i)) };
+                _mm256_storeu_ps(out.add(i), $vop(x, y));
+                i += 8;
+            }
+            while i < len {
+                let x = if asc { *a } else { *a.add(i) };
+                let y = if bsc { *b } else { *b.add(i) };
+                *out.add(i) = x $sop y;
+                i += 1;
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+avx2_binary_core!(vbin_avx2_add, _mm256_add_ps, +);
+#[cfg(target_arch = "x86_64")]
+avx2_binary_core!(vbin_avx2_sub, _mm256_sub_ps, -);
+#[cfg(target_arch = "x86_64")]
+avx2_binary_core!(vbin_avx2_mul, _mm256_mul_ps, *);
+#[cfg(target_arch = "x86_64")]
+avx2_binary_core!(vbin_avx2_div, _mm256_div_ps, /);
+
+#[cfg(target_arch = "aarch64")]
+macro_rules! neon_binary_core {
+    ($name:ident, $vop:ident, $sop:tt) => {
+        #[target_feature(enable = "neon")]
+        unsafe fn $name(
+            a: *const f32,
+            asc: bool,
+            b: *const f32,
+            bsc: bool,
+            out: *mut f32,
+            len: usize,
+        ) {
+            use std::arch::aarch64::*;
+            if len == 0 {
+                return;
+            }
+            let av = if asc { vdupq_n_f32(*a) } else { vdupq_n_f32(0.0) };
+            let bv = if bsc { vdupq_n_f32(*b) } else { vdupq_n_f32(0.0) };
+            let mut i = 0usize;
+            while i + 4 <= len {
+                let x = if asc { av } else { vld1q_f32(a.add(i)) };
+                let y = if bsc { bv } else { vld1q_f32(b.add(i)) };
+                vst1q_f32(out.add(i), $vop(x, y));
+                i += 4;
+            }
+            while i < len {
+                let x = if asc { *a } else { *a.add(i) };
+                let y = if bsc { *b } else { *b.add(i) };
+                *out.add(i) = x $sop y;
+                i += 1;
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "aarch64")]
+neon_binary_core!(vbin_neon_add, vaddq_f32, +);
+#[cfg(target_arch = "aarch64")]
+neon_binary_core!(vbin_neon_sub, vsubq_f32, -);
+#[cfg(target_arch = "aarch64")]
+neon_binary_core!(vbin_neon_mul, vmulq_f32, *);
+#[cfg(target_arch = "aarch64")]
+neon_binary_core!(vbin_neon_div, vdivq_f32, /);
+
+/// The tagged vector op, when the cached ISA is a vector level (else
+/// `None` — scalar dispatch).
+fn simd_active<T: Copy>(simd: Option<T>) -> Option<T> {
+    match kernel_isa() {
+        KernelIsa::Scalar => None,
+        _ => simd,
+    }
+}
+
+/// One chunk of a SIMD unary map (`out = op(src)`): lane core for the
+/// current vector ISA with a scalar tail. Bit-exact vs the scalar table
+/// kernel by construction ([`SimdUnary`]).
+fn vun_chunk(op: SimdUnary, src: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    let (sp, op_, len) = (src.as_ptr(), out.as_mut_ptr(), out.len());
+    match kernel_isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: kernel_isa() only returns Avx2 when AVX2+FMA were
+        // detected; pointers cover `len` elements.
+        KernelIsa::Avx2 => unsafe {
+            match op {
+                SimdUnary::Negate => vun_avx2_negate(sp, op_, len),
+                SimdUnary::Abs => vun_avx2_abs(sp, op_, len),
+                SimdUnary::Sqrt => vun_avx2_sqrt(sp, op_, len),
+                SimdUnary::Rsqrt => vun_avx2_rsqrt(sp, op_, len),
+                SimdUnary::Floor => vun_avx2_floor(sp, op_, len),
+                SimdUnary::Ceil => vun_avx2_ceil(sp, op_, len),
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelIsa::Neon => unsafe {
+            match op {
+                SimdUnary::Negate => vun_neon_negate(sp, op_, len),
+                SimdUnary::Abs => vun_neon_abs(sp, op_, len),
+                SimdUnary::Sqrt => vun_neon_sqrt(sp, op_, len),
+                SimdUnary::Rsqrt => vun_neon_rsqrt(sp, op_, len),
+                SimdUnary::Floor => vun_neon_floor(sp, op_, len),
+                SimdUnary::Ceil => vun_neon_ceil(sp, op_, len),
+            }
+        },
+        _ => unreachable!("vun_chunk is only called when a vector ISA is active"),
+    }
+}
+
+/// One chunk of a SIMD binary op through the raw-pointer lane core.
+/// `a`/`b` may alias `out` (the inplace forms pass the same buffer);
+/// `asc`/`bsc` mark broadcast scalars.
+fn vbin_chunk(
+    op: SimdBinary,
+    a: *const f32,
+    asc: bool,
+    b: *const f32,
+    bsc: bool,
+    out: *mut f32,
+    len: usize,
+) {
+    match kernel_isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: kernel_isa() only returns Avx2 when AVX2+FMA were
+        // detected; callers guarantee the pointers cover `len` elements
+        // (or one element for a broadcast scalar).
+        KernelIsa::Avx2 => unsafe {
+            match op {
+                SimdBinary::Add => vbin_avx2_add(a, asc, b, bsc, out, len),
+                SimdBinary::Sub => vbin_avx2_sub(a, asc, b, bsc, out, len),
+                SimdBinary::Mul => vbin_avx2_mul(a, asc, b, bsc, out, len),
+                SimdBinary::Div => vbin_avx2_div(a, asc, b, bsc, out, len),
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; same pointer contract.
+        KernelIsa::Neon => unsafe {
+            match op {
+                SimdBinary::Add => vbin_neon_add(a, asc, b, bsc, out, len),
+                SimdBinary::Sub => vbin_neon_sub(a, asc, b, bsc, out, len),
+                SimdBinary::Mul => vbin_neon_mul(a, asc, b, bsc, out, len),
+                SimdBinary::Div => vbin_neon_div(a, asc, b, bsc, out, len),
+            }
+        },
+        _ => unreachable!("vbin_chunk is only called when a vector ISA is active"),
+    }
+}
+
+/// Unary elementwise map. `simd` is the planner's bit-exact vector tag
+/// for the opcode (`None` for transcendentals and on the classic path);
+/// it is honored only when the cached [`kernel_isa`] is a vector level,
+/// and the vector kernel writes the same bits as `f` in every element.
+pub(crate) fn unary_into(
+    src: &[f32],
+    out: &mut [f32],
+    f: fn(f32) -> f32,
+    simd: Option<SimdUnary>,
+    threads: usize,
+) {
+    let simd = simd_active(simd);
+    if let Some(op) = simd {
+        super::stats::count_simd_dispatch();
+        if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+            vun_chunk(op, &src[..out.len()], out);
+            return;
+        }
+        super::pool_exec::par_for_rows(threads, out.len(), 1, out, |lo, chunk| {
+            vun_chunk(op, &src[lo..lo + chunk.len()], chunk);
+        });
+        return;
+    }
     if threads <= 1 || out.len() < PAR_MIN_ELEMS {
         for (o, &x) in out.iter_mut().zip(src) {
             *o = f(x);
@@ -1177,7 +1511,25 @@ pub(crate) fn unary_into(src: &[f32], out: &mut [f32], f: fn(f32) -> f32, thread
     });
 }
 
-pub(crate) fn unary_inplace(buf: &mut [f32], f: fn(f32) -> f32, threads: usize) {
+/// [`unary_into`] with the operand consumed in place.
+pub(crate) fn unary_inplace(
+    buf: &mut [f32],
+    f: fn(f32) -> f32,
+    simd: Option<SimdUnary>,
+    threads: usize,
+) {
+    let simd = simd_active(simd);
+    if let Some(op) = simd {
+        super::stats::count_simd_dispatch();
+        if threads <= 1 || buf.len() < PAR_MIN_ELEMS {
+            vun_inplace_chunk(op, buf);
+            return;
+        }
+        super::pool_exec::par_for_rows(threads, buf.len(), 1, buf, |_lo, chunk| {
+            vun_inplace_chunk(op, chunk);
+        });
+        return;
+    }
     if threads <= 1 || buf.len() < PAR_MIN_ELEMS {
         for x in buf.iter_mut() {
             *x = f(*x);
@@ -1189,6 +1541,40 @@ pub(crate) fn unary_inplace(buf: &mut [f32], f: fn(f32) -> f32, threads: usize) 
             *x = f(*x);
         }
     });
+}
+
+/// In-place variant of [`vun_chunk`]: source and destination are the
+/// same buffer (safe — each lane is fully loaded before its store).
+fn vun_inplace_chunk(op: SimdUnary, buf: &mut [f32]) {
+    let p = buf.as_mut_ptr();
+    let len = buf.len();
+    match kernel_isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 implies detection; `p` covers `len` elements.
+        KernelIsa::Avx2 => unsafe {
+            match op {
+                SimdUnary::Negate => vun_avx2_negate(p, p, len),
+                SimdUnary::Abs => vun_avx2_abs(p, p, len),
+                SimdUnary::Sqrt => vun_avx2_sqrt(p, p, len),
+                SimdUnary::Rsqrt => vun_avx2_rsqrt(p, p, len),
+                SimdUnary::Floor => vun_avx2_floor(p, p, len),
+                SimdUnary::Ceil => vun_avx2_ceil(p, p, len),
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        KernelIsa::Neon => unsafe {
+            match op {
+                SimdUnary::Negate => vun_neon_negate(p, p, len),
+                SimdUnary::Abs => vun_neon_abs(p, p, len),
+                SimdUnary::Sqrt => vun_neon_sqrt(p, p, len),
+                SimdUnary::Rsqrt => vun_neon_rsqrt(p, p, len),
+                SimdUnary::Floor => vun_neon_floor(p, p, len),
+                SimdUnary::Ceil => vun_neon_ceil(p, p, len),
+            }
+        },
+        _ => unreachable!("vun_inplace_chunk requires a vector ISA"),
+    }
 }
 
 /// The operand range matching output elements `[lo, lo + len)`: the
@@ -1296,6 +1682,92 @@ pub(crate) fn binary_inplace_rhs<T: Copy + Send + Sync>(
     }
     super::pool_exec::par_for_rows(threads, acc.len(), 1, acc, |lo, chunk| {
         binary_inplace_rhs_serial(op_range(a, lo, chunk.len()), chunk, f);
+    });
+}
+
+/// [`binary_into`] for f32 with the planner's bit-exact SIMD tag: the
+/// vector lane kernel runs when a vector ISA is cached and the opcode is
+/// one of the IEEE-exact four ([`SimdBinary`]); everything else falls
+/// back to the generic scalar path. Broadcast-scalar operands are
+/// splatted once per chunk.
+pub(crate) fn binary_f32_into(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    f: fn(f32, f32) -> f32,
+    simd: Option<SimdBinary>,
+    threads: usize,
+) {
+    let Some(op) = simd_active(simd) else {
+        binary_into(a, b, out, f, threads);
+        return;
+    };
+    super::stats::count_simd_dispatch();
+    if threads <= 1 || out.len() < PAR_MIN_ELEMS {
+        let (asc, bsc) = (a.len() == 1 && out.len() > 1, b.len() == 1 && out.len() > 1);
+        vbin_chunk(op, a.as_ptr(), asc, b.as_ptr(), bsc, out.as_mut_ptr(), out.len());
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, out.len(), 1, out, |lo, chunk| {
+        let ac = op_range(a, lo, chunk.len());
+        let bc = op_range(b, lo, chunk.len());
+        let (asc, bsc) =
+            (ac.len() == 1 && chunk.len() > 1, bc.len() == 1 && chunk.len() > 1);
+        vbin_chunk(op, ac.as_ptr(), asc, bc.as_ptr(), bsc, chunk.as_mut_ptr(), chunk.len());
+    });
+}
+
+/// [`binary_inplace_lhs`] for f32 with the SIMD tag (`acc = f(acc, b)`).
+pub(crate) fn binary_f32_inplace_lhs(
+    acc: &mut [f32],
+    b: &[f32],
+    f: fn(f32, f32) -> f32,
+    simd: Option<SimdBinary>,
+    threads: usize,
+) {
+    let Some(op) = simd_active(simd) else {
+        binary_inplace_lhs(acc, b, f, threads);
+        return;
+    };
+    super::stats::count_simd_dispatch();
+    if threads <= 1 || acc.len() < PAR_MIN_ELEMS {
+        let bsc = b.len() == 1 && acc.len() > 1;
+        let p = acc.as_mut_ptr();
+        vbin_chunk(op, p, false, b.as_ptr(), bsc, p, acc.len());
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, acc.len(), 1, acc, |lo, chunk| {
+        let bc = op_range(b, lo, chunk.len());
+        let bsc = bc.len() == 1 && chunk.len() > 1;
+        let p = chunk.as_mut_ptr();
+        vbin_chunk(op, p, false, bc.as_ptr(), bsc, p, chunk.len());
+    });
+}
+
+/// [`binary_inplace_rhs`] for f32 with the SIMD tag (`acc = f(a, acc)`).
+pub(crate) fn binary_f32_inplace_rhs(
+    a: &[f32],
+    acc: &mut [f32],
+    f: fn(f32, f32) -> f32,
+    simd: Option<SimdBinary>,
+    threads: usize,
+) {
+    let Some(op) = simd_active(simd) else {
+        binary_inplace_rhs(a, acc, f, threads);
+        return;
+    };
+    super::stats::count_simd_dispatch();
+    if threads <= 1 || acc.len() < PAR_MIN_ELEMS {
+        let asc = a.len() == 1 && acc.len() > 1;
+        let p = acc.as_mut_ptr();
+        vbin_chunk(op, a.as_ptr(), asc, p, false, p, acc.len());
+        return;
+    }
+    super::pool_exec::par_for_rows(threads, acc.len(), 1, acc, |lo, chunk| {
+        let ac = op_range(a, lo, chunk.len());
+        let asc = ac.len() == 1 && chunk.len() > 1;
+        let p = chunk.as_mut_ptr();
+        vbin_chunk(op, ac.as_ptr(), asc, p, false, p, chunk.len());
     });
 }
 
@@ -1659,13 +2131,164 @@ fn softmax_row_inplace(x: &mut [f32]) {
     }
 }
 
+/// SIMD row softmax over one in-place row, three passes: a vectorized
+/// exact-max reduction (max is order-independent for the finite inputs
+/// attention produces, so the lane-split changes nothing), one scalar
+/// pass computing `e = exp(v - m)` with an **in-order** sum (each `e` is
+/// cached in the row, halving the exp count of the online kernel), and a
+/// vectorized correctly-rounded divide. Every step writes the same bits
+/// as the classic five-kernel chain, so this path is *bitwise* equal to
+/// the unfused lowering — and therefore inside the fused kernel's
+/// existing ≤ 4 ULP contract vs that chain (`tests/fusion_props.rs`).
+/// The exp itself stays libm: a vector polynomial would break that
+/// contract.
+///
+/// # Safety
+/// AVX2 must be available; dispatch is guarded by [`kernel_isa`].
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn softmax_row_simd_avx2(row: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let len = row.len();
+    let p = row.as_mut_ptr();
+    let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut i = 0usize;
+    while i + 8 <= len {
+        mv = _mm256_max_ps(mv, _mm256_loadu_ps(p.add(i)));
+        i += 8;
+    }
+    let mut lanes = [f32::NEG_INFINITY; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+    let mut m = f32::NEG_INFINITY;
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    while i < len {
+        let v = *p.add(i);
+        if v > m {
+            m = v;
+        }
+        i += 1;
+    }
+    let mut s = 0.0f32;
+    for v in row.iter_mut() {
+        let e = (*v - m).exp();
+        s += e;
+        *v = e;
+    }
+    let p = row.as_mut_ptr();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= len {
+        _mm256_storeu_ps(p.add(i), _mm256_div_ps(_mm256_loadu_ps(p.add(i)), sv));
+        i += 8;
+    }
+    while i < len {
+        *p.add(i) /= s;
+        i += 1;
+    }
+}
+
+/// NEON variant of [`softmax_row_simd_avx2`] (4-wide lanes, same
+/// three-pass structure and the same bitwise-equals-classic argument).
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64); dispatch is guarded by
+/// [`kernel_isa`].
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn softmax_row_simd_neon(row: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let len = row.len();
+    let p = row.as_mut_ptr();
+    let mut mv = vdupq_n_f32(f32::NEG_INFINITY);
+    let mut i = 0usize;
+    while i + 4 <= len {
+        mv = vmaxq_f32(mv, vld1q_f32(p.add(i)));
+        i += 4;
+    }
+    let mut lanes = [f32::NEG_INFINITY; 4];
+    vst1q_f32(lanes.as_mut_ptr(), mv);
+    let mut m = f32::NEG_INFINITY;
+    for &l in &lanes {
+        if l > m {
+            m = l;
+        }
+    }
+    while i < len {
+        let v = *p.add(i);
+        if v > m {
+            m = v;
+        }
+        i += 1;
+    }
+    let mut s = 0.0f32;
+    for v in row.iter_mut() {
+        let e = (*v - m).exp();
+        s += e;
+        *v = e;
+    }
+    let p = row.as_mut_ptr();
+    let sv = vdupq_n_f32(s);
+    let mut i = 0usize;
+    while i + 4 <= len {
+        vst1q_f32(p.add(i), vdivq_f32(vld1q_f32(p.add(i)), sv));
+        i += 4;
+    }
+    while i < len {
+        *p.add(i) /= s;
+        i += 1;
+    }
+}
+
+/// One row through the ISA the caller resolved once per kernel call:
+/// scalar online kernel, or copy + in-place SIMD three-pass.
+fn softmax_row_isa(isa: KernelIsa, src: &[f32], out: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => {
+            out.copy_from_slice(src);
+            // SAFETY: Avx2 implies detection (see kernel_isa).
+            unsafe { softmax_row_simd_avx2(out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon => {
+            out.copy_from_slice(src);
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { softmax_row_simd_neon(out) }
+        }
+        _ => softmax_row(src, out),
+    }
+}
+
+/// One in-place row through the resolved ISA.
+fn softmax_row_inplace_isa(isa: KernelIsa, row: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => {
+            // SAFETY: Avx2 implies detection (see kernel_isa).
+            unsafe { softmax_row_simd_avx2(row) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon => {
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { softmax_row_simd_neon(row) }
+        }
+        _ => softmax_row_inplace(row),
+    }
+}
+
 /// Fused row softmax: `out[r, :] = softmax(src[r, :])` over a row-major
 /// `[rows, cols]` view, replacing the classic five-kernel lowering
 /// (reduce-max, broadcast+subtract, exp, reduce-add, broadcast+divide)
-/// with two passes over the row — one online (max, sum) read and one
-/// write — instead of five read/write sweeps plus two materialized
-/// broadcasts. Rows are independent and each is computed by exactly one
-/// lane, so results are identical at every thread budget.
+/// with per-row passes — the scalar path's online (max, sum) read plus
+/// one write, or the SIMD three-pass variant (vector max, scalar exp
+/// with in-order sum, vector divide) when a vector ISA is cached. Rows
+/// are independent and each is computed by exactly one lane, so results
+/// are identical at every thread budget and the scalar-vs-SIMD deviation
+/// stays inside the fused kernel's ≤ 4 ULP contract.
 pub(crate) fn softmax_rows_into(
     src: &[f32],
     rows: usize,
@@ -1676,16 +2299,24 @@ pub(crate) fn softmax_rows_into(
     if rows == 0 || cols == 0 {
         return;
     }
+    let isa = kernel_isa();
+    if isa != KernelIsa::Scalar {
+        super::stats::count_simd_dispatch();
+    }
     if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
         for r in 0..rows {
-            softmax_row(&src[r * cols..(r + 1) * cols], &mut out[r * cols..(r + 1) * cols]);
+            softmax_row_isa(
+                isa,
+                &src[r * cols..(r + 1) * cols],
+                &mut out[r * cols..(r + 1) * cols],
+            );
         }
         return;
     }
     super::pool_exec::par_for_rows(threads, rows, cols, out, |row0, chunk| {
         for (r, orow) in chunk.chunks_mut(cols).enumerate() {
             let g = row0 + r;
-            softmax_row(&src[g * cols..(g + 1) * cols], orow);
+            softmax_row_isa(isa, &src[g * cols..(g + 1) * cols], orow);
         }
     });
 }
@@ -1695,15 +2326,19 @@ pub(crate) fn softmax_rows_inplace(buf: &mut [f32], rows: usize, cols: usize, th
     if rows == 0 || cols == 0 {
         return;
     }
+    let isa = kernel_isa();
+    if isa != KernelIsa::Scalar {
+        super::stats::count_simd_dispatch();
+    }
     if threads <= 1 || rows * cols < PAR_MIN_ELEMS {
         for row in buf[..rows * cols].chunks_mut(cols) {
-            softmax_row_inplace(row);
+            softmax_row_inplace_isa(isa, row);
         }
         return;
     }
     super::pool_exec::par_for_rows(threads, rows, cols, buf, |_row0, chunk| {
         for row in chunk.chunks_mut(cols) {
-            softmax_row_inplace(row);
+            softmax_row_inplace_isa(isa, row);
         }
     });
 }
@@ -1850,7 +2485,7 @@ mod tests {
         binary_inplace_rhs(&s, &mut acc, binary_f32_fn("subtract").unwrap(), 1);
         assert_eq!(acc, vec![9.5, 8.0, 11.0, 6.0]);
         let mut u = av.clone();
-        unary_inplace(&mut u, unary_fn("negate").unwrap(), 1);
+        unary_inplace(&mut u, unary_fn("negate").unwrap(), None, 1);
         assert_eq!(u, vec![-1.0, 2.0, -3.0, 4.0]);
     }
 
@@ -1867,7 +2502,7 @@ mod tests {
         let mut want = vec![0.0f32; n];
         binary_into(&av, &bv, &mut want, f, 1);
         let mut want_u = vec![0.0f32; n];
-        unary_into(&av, &mut want_u, g, 1);
+        unary_into(&av, &mut want_u, g, None, 1);
         let mut want_r = vec![0.0f32; 64];
         reduce_into(&av, &[64, n / 64], &[1], 0.0f32, |x, y| x + y, &mut want_r, 1);
 
@@ -1889,10 +2524,10 @@ mod tests {
             binary_inplace_rhs(&av, &mut acc, f, threads);
             assert_eq!(acc, want, "binary_inplace_rhs t={threads}");
             let mut out = vec![0.0f32; n];
-            unary_into(&av, &mut out, g, threads);
+            unary_into(&av, &mut out, g, None, threads);
             assert_eq!(out, want_u, "unary_into t={threads}");
             let mut buf = av.clone();
-            unary_inplace(&mut buf, g, threads);
+            unary_inplace(&mut buf, g, None, threads);
             assert_eq!(buf, want_u, "unary_inplace t={threads}");
             let mut r = vec![0.0f32; 64];
             reduce_into(&av, &[64, n / 64], &[1], 0.0f32, |x, y| x + y, &mut r, threads);

@@ -110,8 +110,8 @@ pub(crate) enum FusedOp {
 /// touched at run time).
 #[derive(Debug)]
 pub(crate) enum OpCfg {
-    Unary(fn(f32) -> f32),
-    BinF32(fn(f32, f32) -> f32),
+    Unary(fn(f32) -> f32, Option<ops::SimdUnary>),
+    BinF32(fn(f32, f32) -> f32, Option<ops::SimdBinary>),
     BinI32(fn(i32, i32) -> i32),
     BinU8(fn(u8, u8) -> u8),
     Compare(ops::CmpDir),
@@ -994,8 +994,8 @@ pub(crate) fn build(
         // source) operand of identical size whose storage dies at this
         // very instruction can donate its slot.
         let inplace_ordinals: &[usize] = match cfgs[i].as_ref().unwrap() {
-            OpCfg::Unary(_) => &[0],
-            OpCfg::BinF32(_) | OpCfg::BinI32(_) | OpCfg::BinU8(_) => &[0, 1],
+            OpCfg::Unary(..) => &[0],
+            OpCfg::BinF32(..) | OpCfg::BinI32(_) | OpCfg::BinU8(_) => &[0, 1],
             OpCfg::Fused { .. } | OpCfg::Softmax { .. } => &[0],
             _ => &[],
         };
@@ -1382,7 +1382,10 @@ fn build_cfg(
         if op_elems(0)? != out_elems {
             bail!("%{}: unary operand size mismatch", inst.name);
         }
-        return Ok(OpCfg::Unary(f));
+        // Resolve the SIMD tag at plan time so the hot loop never
+        // touches opcode strings; ops with no bitwise-safe vector form
+        // (transcendentals, NaN-sensitive max/min) get `None`.
+        return Ok(OpCfg::Unary(f, ops::simd_unary(&inst.opcode)));
     }
 
     match inst.opcode.as_str() {
@@ -1398,7 +1401,7 @@ fn build_cfg(
             }
             match out_dtype {
                 Dtype::F32 => ops::binary_f32_fn(&inst.opcode)
-                    .map(OpCfg::BinF32)
+                    .map(|f| OpCfg::BinF32(f, ops::simd_binary(&inst.opcode)))
                     .ok_or_else(|| anyhow!("{}: not supported for f32", inst.opcode)),
                 Dtype::I32 => ops::binary_i32_fn(&inst.opcode)
                     .map(OpCfg::BinI32)

@@ -8,9 +8,12 @@
 //!   materialization, and every capacity *growth* of a reusable scratch
 //!   or staging buffer. Deliberately excluded: the final output copy-out
 //!   (the `run() -> Vec<Tensor>` API boundary), O(rank) odometer/index
-//!   vectors, and per-thread kernel bootstrap scratch (≤ `k` + 256
-//!   elements per spawned thread). Steady-state planned execution keeps
-//!   this counter flat — asserted end-to-end in `tests/memory_resident.rs`.
+//!   vectors, and per-thread kernel bootstrap scratch (`k` + 256
+//!   elements per spawned thread for the scalar LUT path; the SIMD LUT
+//!   tile adds ~`LUT_JB * k` index bytes plus `(k + 256) * lanes` f32 —
+//!   still O(k), sized once, and reused across calls). Steady-state
+//!   planned execution keeps this counter flat — asserted end-to-end in
+//!   `tests/memory_resident.rs`.
 //! * [`plan_peak_bytes`] / [`plan_slot_count`] — arena footprint of the
 //!   largest memory plan built so far (sum of slot capacities after
 //!   liveness-based reuse) and that plan's slot count.
@@ -21,6 +24,10 @@
 //! * [`par_fanouts`] — kernel calls that fanned out across the
 //!   persistent thread pool ([`super::pool_exec`]); a budget-1 run keeps
 //!   this flat.
+//! * [`simd_dispatches`] — kernel calls that took a vector (AVX2/NEON)
+//!   path instead of the scalar reference; stays at zero under
+//!   `CLUSTERFORMER_SIMD=scalar`, so `eval --stats` can confirm which
+//!   path actually ran.
 //! * [`fused_chains`] / [`fused_epilogues`] / [`fused_softmax`] /
 //!   [`fused_bytes_saved`] — operator-fusion footprint of the same
 //!   largest plan: standalone fused elementwise chains, GEMM/LUT dots
@@ -35,6 +42,7 @@ static PLAN_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_NAIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_SLOT_COUNT: AtomicUsize = AtomicUsize::new(0);
 static PAR_FANOUTS: AtomicUsize = AtomicUsize::new(0);
+static SIMD_DISPATCHES: AtomicUsize = AtomicUsize::new(0);
 static FUSED_CHAINS: AtomicUsize = AtomicUsize::new(0);
 static FUSED_EPILOGUES: AtomicUsize = AtomicUsize::new(0);
 static FUSED_SOFTMAX: AtomicUsize = AtomicUsize::new(0);
@@ -77,6 +85,18 @@ pub(crate) fn count_tensor_alloc() {
 /// Record one parallel fan-out through the kernel pool.
 pub(crate) fn count_par_fanout() {
     PAR_FANOUTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Kernel invocations that took a vector (AVX2/NEON) microkernel
+/// instead of the scalar reference. One count per dispatched kernel
+/// call, not per lane or per element.
+pub fn simd_dispatches() -> usize {
+    SIMD_DISPATCHES.load(Ordering::Relaxed)
+}
+
+/// Record one kernel call dispatched to a SIMD path.
+pub(crate) fn count_simd_dispatch() {
+    SIMD_DISPATCHES.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Standalone fused elementwise chains in the largest plan built.
@@ -127,9 +147,11 @@ pub(crate) fn record_plan(
 }
 
 /// Count a reusable scratch/staging buffer growing past its previous
-/// capacity (a steady-state executor never grows its scratch).
-pub(crate) fn note_scratch_growth<T>(v: &Vec<T>, needed: usize) {
-    if v.capacity() < needed {
+/// capacity (a steady-state executor never grows its scratch). Takes
+/// the capacity in elements so both `Vec`-backed and aligned
+/// (`AVec`-backed) buffers report through the same hook.
+pub(crate) fn note_scratch_growth(cap: usize, needed: usize) {
+    if cap < needed {
         count_tensor_alloc();
     }
 }
@@ -148,12 +170,10 @@ mod tests {
         count_tensor_alloc();
         assert!(tensor_allocs() >= before + 3);
 
-        let small: Vec<f32> = Vec::new();
         let a = tensor_allocs();
-        note_scratch_growth(&small, 4);
+        note_scratch_growth(0, 4);
         assert!(tensor_allocs() >= a + 1);
-        let big: Vec<f32> = Vec::with_capacity(8);
-        note_scratch_growth(&big, 4); // no growth needed -> no count
+        note_scratch_growth(8, 4); // no growth needed -> no count
 
         // The gauges keep the largest plan; usize::MAX - 1 outranks any
         // real plan another test records concurrently.

@@ -1,4 +1,5 @@
-//! Kernel tuning constants for the interpreter, in one place.
+//! Kernel tuning constants and the SIMD dispatch layer for the
+//! interpreter, in one place.
 //!
 //! Before this module the parallelism cutoffs lived next to each kernel
 //! (`gemm.rs`, `ops.rs`, `clustered.rs`) and drifted independently; they
@@ -7,6 +8,15 @@
 //! rationale; the numbers were picked for small-core edge CPUs (the
 //! paper's Conf-1/2/3 class) where a pool fan-out costs roughly a
 //! microsecond of latch/wake work per lane.
+//!
+//! The same "decide once, read everywhere" rule applies to instruction
+//! sets: [`kernel_isa`] probes the CPU a single time (honoring the
+//! `CLUSTERFORMER_SIMD` knob), caches the result in a `OnceLock`, and
+//! every hot kernel branches on the cached value at its entry point —
+//! never per element.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 /// Below this many FLOPs (`2 * rows * n * k`) a GEMM runs on the caller
 /// only, regardless of budget: at ~1 GFLOP/s-per-core worst case this is
@@ -43,3 +53,157 @@ pub(crate) const LUT_PAR_MIN_WORK: usize = 1 << 20;
 /// enough to catch the next dot of a forward pass, short enough that an
 /// idle process parks promptly.
 pub(crate) const POOL_SPIN_ITERS: usize = 1 << 14;
+
+/// LUT-matmul SIMD column-block width: indices for `LUT_JB` output
+/// columns are decoded once into a scratch tile and reused across every
+/// row group of the block, so the per-column decode (bit unpack or
+/// strided copy) is amortized `1/LUT_JB` into the lane-wide bucket adds
+/// while the tile stays small (`LUT_JB * k` bytes ≈ 16 KiB at k = 256,
+/// L1-resident next to the bucket and activation tiles).
+pub(crate) const LUT_JB: usize = 64;
+
+/// Instruction set the SIMD microkernels dispatch on, resolved once per
+/// process by [`kernel_isa`].
+///
+/// `Scalar` is always available and is the bit-exact reference the
+/// vector paths are tested against. `Avx2` means AVX2 *and* FMA were
+/// detected (FMA is probed alongside AVX2 so future kernels may rely on
+/// it, though the current ones stick to separate mul + add to preserve
+/// scalar bit-equality). `Neon` is baseline on aarch64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar reference kernels.
+    Scalar,
+    /// x86-64 AVX2 + FMA (8-wide f32).
+    Avx2,
+    /// aarch64 NEON (4-wide f32).
+    Neon,
+}
+
+impl KernelIsa {
+    /// Stable lowercase name for logs, stats, and the forcing knob.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Neon => "neon",
+        }
+    }
+}
+
+/// What the hardware supports, ignoring the `CLUSTERFORMER_SIMD` knob.
+pub fn detected_kernel_isa() -> KernelIsa {
+    #[cfg(target_arch = "x86_64")]
+    fn probe() -> KernelIsa {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            KernelIsa::Avx2
+        } else {
+            KernelIsa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    fn probe() -> KernelIsa {
+        // NEON is mandatory in AArch64; no runtime probe needed.
+        KernelIsa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    fn probe() -> KernelIsa {
+        KernelIsa::Scalar
+    }
+    probe()
+}
+
+/// Process-global test override: 0 = none, 1 = scalar, 2 = avx2,
+/// 3 = neon. An atomic rather than a thread-local so kernels running on
+/// pool workers see the same forced level as the test thread.
+static FORCED_ISA: AtomicU8 = AtomicU8::new(0);
+
+/// Force the dispatch level for A/B tests and benches, bypassing both
+/// the environment knob and the cached detection. `None` restores
+/// normal resolution. Callers racing this from several test threads
+/// must serialize themselves (see `tests/simd_props.rs`).
+#[doc(hidden)]
+pub fn force_kernel_isa(isa: Option<KernelIsa>) {
+    let code = match isa {
+        None => 0,
+        Some(KernelIsa::Scalar) => 1,
+        Some(KernelIsa::Avx2) => 2,
+        Some(KernelIsa::Neon) => 3,
+    };
+    FORCED_ISA.store(code, Ordering::Relaxed);
+}
+
+/// The instruction set every SIMD-dispatching kernel uses, resolved once
+/// (detection + `CLUSTERFORMER_SIMD`) and cached. A vector level is only
+/// ever returned on hardware that supports it, so dispatchers may call
+/// their `#[target_feature]` kernels on its say-so.
+pub fn kernel_isa() -> KernelIsa {
+    match FORCED_ISA.load(Ordering::Relaxed) {
+        1 => return KernelIsa::Scalar,
+        2 => return KernelIsa::Avx2,
+        3 => return KernelIsa::Neon,
+        _ => {}
+    }
+    static RESOLVED: OnceLock<KernelIsa> = OnceLock::new();
+    *RESOLVED.get_or_init(resolve_from_env)
+}
+
+/// Resolve the dispatch level from detection plus the
+/// `CLUSTERFORMER_SIMD` knob (`0|off|false|scalar` force the reference
+/// path; `avx2`/`neon` request a level and fall back to detection with
+/// a warning when the hardware lacks it).
+fn resolve_from_env() -> KernelIsa {
+    let detected = detected_kernel_isa();
+    let raw = std::env::var("CLUSTERFORMER_SIMD").unwrap_or_default();
+    let chosen = match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => detected,
+        "0" | "off" | "false" | "scalar" => KernelIsa::Scalar,
+        "avx2" if detected == KernelIsa::Avx2 => KernelIsa::Avx2,
+        "neon" if detected == KernelIsa::Neon => KernelIsa::Neon,
+        other @ ("avx2" | "neon") => {
+            crate::log_warn!(
+                "CLUSTERFORMER_SIMD={other} not supported on this CPU \
+                 (detected {}); using detected level",
+                detected.name()
+            );
+            detected
+        }
+        other => {
+            crate::log_warn!(
+                "unrecognized CLUSTERFORMER_SIMD={other:?} \
+                 (expected 0|scalar|avx2|neon); using detected level"
+            );
+            detected
+        }
+    };
+    crate::log_info!("kernel dispatch: {} SIMD microkernels", chosen.name());
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_names_are_stable() {
+        assert_eq!(KernelIsa::Scalar.name(), "scalar");
+        assert_eq!(KernelIsa::Avx2.name(), "avx2");
+        assert_eq!(KernelIsa::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn forced_isa_overrides_and_restores() {
+        // Serialized against other forcing tests by running in-process
+        // only here; the lib tests do not force elsewhere.
+        force_kernel_isa(Some(KernelIsa::Scalar));
+        assert_eq!(kernel_isa(), KernelIsa::Scalar);
+        force_kernel_isa(None);
+        let resolved = kernel_isa();
+        // Whatever the env/hardware resolved to, it must be a level the
+        // hardware actually supports.
+        match resolved {
+            KernelIsa::Scalar => {}
+            other => assert_eq!(other, detected_kernel_isa()),
+        }
+    }
+}
