@@ -1,0 +1,268 @@
+//! Autoregressive decode bench (ISSUE 7): prefill latency and decode
+//! throughput for the KV-cached session against the recompute-per-step
+//! baseline, across sequence lengths and weight bit widths (no
+//! artifacts needed — single-layer attention fixtures, head dim 64).
+//!
+//! * `prefill`   — warm prompt pass through the bucketed plan cache
+//!                 (includes seeding the step session's KV slots);
+//! * `decode`    — steady-state token/s of [`DecodeSession::step`]: one
+//!                 new token staged per call, KV prefix resident in
+//!                 persistent arena slots;
+//! * `recompute` — the no-cache baseline: every token re-runs the full
+//!                 prefill over the whole prefix (through the *warm*
+//!                 plan cache, so the gap measured is pure compute, not
+//!                 rebind overhead);
+//! * `dispatch`  — plan-cache hit vs a fresh bind of the same bucket.
+//!
+//! Emits machine-readable `BENCH_decode.json`.
+//!
+//! Acceptance targets: KV-cached decode >= 2x recompute-per-step at
+//! seq >= 128; cache-hit dispatch >= 10x faster than a rebind. Both are
+//! asserted, and the decode outputs are cross-checked against the
+//! from-scratch prefill before anything is timed.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use clusterformer::bench::fmt_time;
+use clusterformer::clustering::ClusteredTensors;
+use clusterformer::runtime::interp::decode::{DecodeModel, DecodeSession};
+use clusterformer::runtime::interp::plan_cache::{BucketLadder, DynResident, ExecSource};
+use clusterformer::runtime::interp::InterpExecutor;
+use clusterformer::runtime::ThreadBudget;
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::fixtures::{
+    decode_clustered, decode_clustered_inputs, decode_prefill_hlo, decode_step_hlo, decode_weights,
+};
+use clusterformer::util::rng::Pcg32;
+
+const D: usize = 64;
+const SEQ_LENS: [usize; 3] = [32, 128, 256];
+const STEPS: usize = 16;
+
+struct Variant {
+    name: String,
+    bits: u32,
+    fixed: Arc<Vec<Tensor>>,
+    clustered: Option<Arc<ClusteredTensors>>,
+}
+
+fn scalar(v: usize) -> Tensor {
+    Tensor::from_f32(vec![], &[v as f32]).unwrap()
+}
+
+fn rand_tokens(n: usize, rng: &mut Pcg32) -> Tensor {
+    let vals: Vec<f32> = (0..n * D).map(|_| rng.normal() as f32 * 0.3).collect();
+    Tensor::from_f32(vec![n, D], &vals).unwrap()
+}
+
+fn make_session(v: &Variant, threads: ThreadBudget) -> DecodeSession {
+    let is_clustered = v.clustered.is_some();
+    let model = DecodeModel {
+        label: format!("bench/{}", v.name),
+        dim: D,
+        weights: v.fixed.clone(),
+        clustered: v.clustered.clone(),
+        prefill_hlo: Box::new(move |s| decode_prefill_hlo(s, D, is_clustered)),
+        step_hlo: Box::new(move |s| decode_step_hlo(s, D, is_clustered)),
+        threads,
+    };
+    DecodeSession::new(model, BucketLadder::pow2(512))
+}
+
+fn time_per<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// KV-cached steps must reproduce the from-scratch prefill before any
+/// of them are timed (a broken cache can't post a win).
+fn cross_check(v: &Variant, threads: ThreadBudget) -> anyhow::Result<()> {
+    let mut session = make_session(v, threads);
+    let mut rng = Pcg32::new(31);
+    let prompt = rand_tokens(32, &mut rng);
+    let y = session.prefill(&prompt)?;
+    let mut x = y.slice_rows(31, 32)?;
+    let mut prefix = prompt;
+    for _ in 0..2 {
+        let ys = session.step(&x)?;
+        prefix = Tensor::concat_rows(&[&prefix, &x])?;
+        let n = prefix.shape()[0];
+        let out = session.prefill_resident().run(&[prefix.clone(), scalar(n)])?;
+        let y_ref = out[0].slice_rows(n - 1, n)?;
+        let (a, b) = (ys.as_f32()?, y_ref.as_f32()?);
+        for (ai, bi) in a.iter().zip(&b) {
+            assert!(
+                (ai - bi).abs() <= 1e-4 * (1.0 + bi.abs()),
+                "{}: KV decode diverged from recompute: {ai} vs {bi}",
+                v.name
+            );
+        }
+        x = ys;
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let threads = ThreadBudget::from_env();
+    let mut rng = Pcg32::new(210616007);
+    let dense = decode_weights(D, &mut rng);
+    let mut variants = vec![Variant {
+        name: "f32".to_string(),
+        bits: 32,
+        fixed: Arc::new(dense.clone()),
+        clustered: None,
+    }];
+    for clusters in [16usize, 64, 256] {
+        let ct = Arc::new(decode_clustered(&dense, clusters));
+        variants.push(Variant {
+            name: format!("c{clusters}"),
+            bits: clusters.ilog2(),
+            fixed: Arc::new(decode_clustered_inputs(&ct)),
+            clustered: Some(ct),
+        });
+    }
+
+    println!(
+        "# autoregressive decode — head dim {D}, {} kernel threads, {STEPS}-step windows\n",
+        threads.get()
+    );
+    println!("| variant | bits | seq | prefill | decode tok/s | recompute tok/s | KV speedup |");
+    println!("|---|---|---|---|---|---|---|");
+
+    let mut variants_json = String::new();
+    let mut min_kv_speedup_128 = f64::INFINITY;
+    for v in &variants {
+        cross_check(v, threads)?;
+        let mut seqs_json = String::new();
+        for &s in &SEQ_LENS {
+            let mut session = make_session(v, threads);
+            let mut rng = Pcg32::new(9000 + s as u64);
+            let prompt = rand_tokens(s, &mut rng);
+            session.prefill(&prompt)?; // cold: binds prefill + seed buckets
+            let t0 = Instant::now();
+            let y = session.prefill(&prompt)?; // warm prefill latency
+            let prefill_s = t0.elapsed().as_secs_f64();
+            let mut x = y.slice_rows(s - 1, s)?;
+            for _ in 0..2 {
+                x = session.step(&x)?; // warm the decode bucket
+            }
+            let step_s = time_per(STEPS, || {
+                x = session.step(&x).unwrap();
+            });
+            assert_eq!(session.len(), s + 2 + STEPS, "every step must land in the cache");
+
+            // No-cache baseline: recompute the full prefix per token,
+            // through the already-warm prefill plans.
+            let pre = session.prefill_resident();
+            let mut prefix = prompt.clone();
+            let mut xr = x.clone();
+            let warm = Tensor::concat_rows(&[&prefix, &xr])?;
+            pre.run(&[warm, scalar(s + 1)])?;
+            let recompute_s = time_per(STEPS, || {
+                prefix = Tensor::concat_rows(&[&prefix, &xr]).unwrap();
+                let n = prefix.shape()[0];
+                let out = pre.run(&[prefix.clone(), scalar(n)]).unwrap();
+                xr = out[0].slice_rows(n - 1, n).unwrap();
+            });
+
+            let kv_speedup = recompute_s / step_s;
+            if s >= 128 {
+                min_kv_speedup_128 = min_kv_speedup_128.min(kv_speedup);
+            }
+            println!(
+                "| {} | {} | {s} | {} | {:.0} | {:.0} | {kv_speedup:.2}x |",
+                v.name,
+                v.bits,
+                fmt_time(prefill_s),
+                1.0 / step_s,
+                1.0 / recompute_s
+            );
+            if !seqs_json.is_empty() {
+                seqs_json.push_str(",\n      ");
+            }
+            seqs_json.push_str(&format!(
+                "{{\"seq\": {s}, \"prefill_s\": {prefill_s:.9}, \
+                 \"decode_tok_per_s\": {:.3}, \"recompute_tok_per_s\": {:.3}, \
+                 \"kv_speedup\": {kv_speedup:.3}, \"step_binds\": {}}}",
+                1.0 / step_s,
+                1.0 / recompute_s,
+                session.rebinds()
+            ));
+        }
+        if !variants_json.is_empty() {
+            variants_json.push_str(",\n    ");
+        }
+        variants_json.push_str(&format!(
+            "{{\"name\": \"{}\", \"bits\": {}, \"seqs\": [\n      {seqs_json}\n    ]}}",
+            v.name, v.bits
+        ));
+    }
+
+    // ---- plan-cache hit vs fresh rebind of the same bucket ----
+    let fixed = variants[0].fixed.clone();
+    let source: ExecSource = Box::new(move |s| {
+        Ok(InterpExecutor::load_text(
+            &decode_prefill_hlo(s, D, false),
+            &format!("bench/dispatch[{s}]"),
+        )?
+        .with_threads(threads))
+    });
+    let dyn_res = DynResident::new(
+        "bench/dispatch",
+        BucketLadder::pow2(512),
+        2,
+        fixed.clone(),
+        None,
+        source,
+    );
+    dyn_res.bind_bucket(128)?; // cold bind, cached from here on
+    let hit_s = time_per(1000, || {
+        dyn_res.bind_bucket(128).unwrap();
+    });
+    let exe = InterpExecutor::load_text(&decode_prefill_hlo(128, D, false), "bench/rebind")?
+        .with_threads(threads);
+    let rebind_s = time_per(5, || {
+        exe.resident(2, fixed.clone(), None).unwrap();
+    });
+    let dispatch_speedup = rebind_s / hit_s;
+    println!(
+        "\ncache-hit dispatch {} vs rebind {}: {dispatch_speedup:.0}x (target >= 10x: {})",
+        fmt_time(hit_s),
+        fmt_time(rebind_s),
+        if dispatch_speedup >= 10.0 { "MET" } else { "NOT met" }
+    );
+    println!(
+        "KV-cached decode vs recompute at seq >= 128: {min_kv_speedup_128:.2}x minimum \
+         (target >= 2x: {})",
+        if min_kv_speedup_128 >= 2.0 { "MET" } else { "NOT met" }
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"decode\",\n  \"dim\": {D},\n  \"threads\": {},\n  \
+         \"steps_per_window\": {STEPS},\n  \"variants\": [\n    {variants_json}\n  ],\n  \
+         \"dispatch\": {{\"cache_hit_s\": {hit_s:.9}, \"rebind_s\": {rebind_s:.9}, \
+         \"speedup\": {dispatch_speedup:.3}}},\n  \
+         \"kv_speedup_min_at_128\": {min_kv_speedup_128:.3}\n}}\n",
+        threads.get()
+    );
+    let path = std::path::Path::new("BENCH_decode.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    assert!(
+        dispatch_speedup >= 10.0,
+        "cache-hit dispatch must be >= 10x faster than a rebind (got {dispatch_speedup:.1}x)"
+    );
+    assert!(
+        min_kv_speedup_128 >= 2.0,
+        "KV-cached decode must be >= 2x recompute-per-step at seq >= 128 \
+         (got {min_kv_speedup_128:.2}x)"
+    );
+    Ok(())
+}

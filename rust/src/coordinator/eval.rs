@@ -62,6 +62,17 @@ pub struct MemStats {
     pub kernel_isa: &'static str,
     /// Kernel calls that took a vector (SIMD) path during the run.
     pub simd_dispatches: usize,
+    /// Dispatches served by an already-bound cached plan during the run
+    /// (steady state: every execution).
+    pub plan_cache_hits: usize,
+    /// Dispatches that had to bind a plan during the run (bounded by the
+    /// bucket-ladder size).
+    pub plan_cache_misses: usize,
+    /// Plans resident across all plan caches (gauge, not a delta).
+    pub plan_cache_entries: usize,
+    /// Input bytes zero-padded to reach a bucket shape during the run
+    /// (the cost of bucketing, vs. a rebind per novel shape).
+    pub pad_waste_bytes: usize,
 }
 
 impl MemStats {
@@ -80,6 +91,10 @@ impl MemStats {
             fused_bytes_saved: stats::fused_bytes_saved(),
             kernel_isa: crate::runtime::interp::kernel_isa().name(),
             simd_dispatches: stats::simd_dispatches(),
+            plan_cache_hits: stats::plan_cache_hits(),
+            plan_cache_misses: stats::plan_cache_misses(),
+            plan_cache_entries: stats::plan_cache_entries(),
+            pad_waste_bytes: stats::pad_waste_bytes(),
         }
     }
 }
@@ -140,6 +155,12 @@ pub fn evaluate(
             fused_bytes_saved: after.fused_bytes_saved,
             kernel_isa: after.kernel_isa,
             simd_dispatches: after.simd_dispatches.saturating_sub(before.simd_dispatches),
+            plan_cache_hits: after.plan_cache_hits.saturating_sub(before.plan_cache_hits),
+            plan_cache_misses: after
+                .plan_cache_misses
+                .saturating_sub(before.plan_cache_misses),
+            plan_cache_entries: after.plan_cache_entries,
+            pad_waste_bytes: after.pad_waste_bytes.saturating_sub(before.pad_waste_bytes),
         },
     })
 }

@@ -18,6 +18,8 @@ use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{ClassRequest, ClassResponse};
 use crate::model::{Registry, VariantKey};
+use crate::runtime::interp::plan_cache::{BucketLadder, DynResident, ExecSource};
+use crate::runtime::interp::InterpExecutor;
 use crate::runtime::{
     backend_with_threads, Backend, BackendKind, Executor as _, ResidentExecutor, ThreadBudget,
 };
@@ -55,11 +57,24 @@ pub struct VariantExecutor {
     pub label: String,
     /// Batch sizes with an available HLO artifact, ascending.
     pub batch_sizes: Vec<usize>,
-    residents: Vec<Box<dyn ResidentExecutor>>,
+    binding: Binding,
     pub img_shape: [usize; 3],
     pub n_classes: usize,
     pub weight_stream_bytes: usize,
     pub table_bytes: usize,
+}
+
+/// How the worker reaches bound plans.
+enum Binding {
+    /// Interpreter backend: one shape-polymorphic resident over the
+    /// artifact batch-size ladder. Buckets bind through the plan cache
+    /// (on warmup, or lazily on first hit), execution pads to the
+    /// bucket and slices back — steady-state shape-varying traffic
+    /// performs zero rebinds.
+    Cached(DynResident),
+    /// Other backends (PJRT): the eager path, one resident per
+    /// artifact batch size, bound at load.
+    Eager(Vec<Box<dyn ResidentExecutor>>),
 }
 
 impl VariantExecutor {
@@ -87,20 +102,45 @@ impl VariantExecutor {
         // in a process-wide content-addressed pool, so residents whose
         // weight state coincides share one allocation.
         let weights = Arc::new(variant.weight_inputs);
-        let mut residents = Vec::with_capacity(batch_sizes.len());
-        for b in &batch_sizes {
-            let exe = backend.load_hlo(&variant.hlo_paths[b])?;
-            // dynamic inputs: just the image batch (1 tensor)
-            residents.push(exe.with_resident_clustered(
-                1,
-                weights.clone(),
+        let label = format!("{model}/{}", key.label());
+        let binding = if let Some(interp) = backend.as_interp() {
+            // Interpreter: route shape-varying traffic through the plan
+            // cache. The artifact batch sizes ARE the bucket ladder;
+            // buckets bind on warmup (or first use) and stay cached.
+            let threads = interp.thread_budget();
+            let hlo_paths = variant.hlo_paths.clone();
+            let src_label = label.clone();
+            let source: ExecSource = Box::new(move |b| {
+                let path = hlo_paths.get(&b).ok_or_else(|| {
+                    anyhow!("{src_label}: no HLO artifact for batch {b}")
+                })?;
+                Ok(InterpExecutor::load(path)?.with_threads(threads))
+            });
+            Binding::Cached(DynResident::new(
+                &label,
+                BucketLadder::new(batch_sizes.clone()),
+                1, // dynamic inputs: just the image batch
+                weights,
                 variant.clustered.clone(),
-            )?);
-        }
+                source,
+            ))
+        } else {
+            let mut residents = Vec::with_capacity(batch_sizes.len());
+            for b in &batch_sizes {
+                let exe = backend.load_hlo(&variant.hlo_paths[b])?;
+                // dynamic inputs: just the image batch (1 tensor)
+                residents.push(exe.with_resident_clustered(
+                    1,
+                    weights.clone(),
+                    variant.clustered.clone(),
+                )?);
+            }
+            Binding::Eager(residents)
+        };
         Ok(Self {
-            label: format!("{model}/{}", key.label()),
+            label,
             batch_sizes,
-            residents,
+            binding,
             img_shape: [img, img, 3],
             n_classes: entry.config.n_classes,
             weight_stream_bytes: variant.weight_stream_bytes,
@@ -117,7 +157,12 @@ impl VariantExecutor {
             batch_sizes.to_vec()
         };
         for b in sizes {
-            self.resident_for(b)?.warmup()?;
+            match &self.binding {
+                Binding::Cached(dyn_res) => {
+                    dyn_res.bind_bucket(b)?;
+                }
+                Binding::Eager(_) => self.resident_for(b)?.warmup()?,
+            }
         }
         Ok(())
     }
@@ -132,12 +177,18 @@ impl VariantExecutor {
     }
 
     fn resident_for(&self, b: usize) -> Result<&dyn ResidentExecutor> {
+        let Binding::Eager(residents) = &self.binding else {
+            return Err(anyhow!(
+                "{}: per-batch residents only exist on the eager path",
+                self.label
+            ));
+        };
         let idx = self
             .batch_sizes
             .iter()
             .position(|&x| x == b)
             .ok_or_else(|| anyhow!("{}: no executable for batch {b}", self.label))?;
-        Ok(self.residents[idx].as_ref())
+        Ok(residents[idx].as_ref())
     }
 
     /// Run `images` (a [n, H, W, 3] batch, n <= max batch size) and return
@@ -145,13 +196,21 @@ impl VariantExecutor {
     pub fn execute(&self, images: &Tensor) -> Result<(Vec<Vec<f32>>, usize)> {
         let n = images.shape()[0];
         let b = self.pick_batch_size(n);
-        let exe = self.resident_for(b)?;
-        // Skip the pad copy when the batch already matches a compiled size.
-        let out = if n == b {
-            exe.run(std::slice::from_ref(images))?
-        } else {
-            let padded = pad_batch(images, b)?;
-            exe.run(std::slice::from_ref(&padded))?
+        let out = match &self.binding {
+            // The cached resident pads to the bucket and slices the
+            // logits back to n rows itself.
+            Binding::Cached(dyn_res) => dyn_res.run(std::slice::from_ref(images))?,
+            Binding::Eager(_) => {
+                let exe = self.resident_for(b)?;
+                // Skip the pad copy when the batch already matches a
+                // compiled size.
+                if n == b {
+                    exe.run(std::slice::from_ref(images))?
+                } else {
+                    let padded = pad_batch(images, b)?;
+                    exe.run(std::slice::from_ref(&padded))?
+                }
+            }
         };
         let logits = out
             .first()

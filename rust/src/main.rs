@@ -42,6 +42,7 @@ fn cli() -> Cli {
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
                 .opt("simd", "auto", "kernel ISA: auto | scalar | avx2 | neon")
                 .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
+                .flag("no-plan-cache", "bind a fresh plan per shape instead of caching (A/B the cache)")
                 .flag("stats", "print memory-planner / allocation counters"),
         )
         .command(
@@ -58,7 +59,8 @@ fn cli() -> Cli {
                 .opt("seed", "7", "workload RNG seed")
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
                 .opt("simd", "auto", "kernel ISA: auto | scalar | avx2 | neon")
-                .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)"),
+                .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
+                .flag("no-plan-cache", "bind a fresh plan per shape instead of caching (A/B the cache)"),
         )
         .command(
             Command::new("compress", "cluster weights in Rust and report")
@@ -164,10 +166,11 @@ fn sorted_keys(m: &std::collections::HashMap<usize, String>) -> Vec<usize> {
 /// "0 = auto" the env var itself honors), `--no-fusion` sets
 /// `CLUSTERFORMER_FUSION=0` to disable plan-time operator fusion, and
 /// `--simd` sets `CLUSTERFORMER_SIMD` to pin the kernel dispatch level
-/// ("auto" leaves detection in charge). The env vars stay the single
-/// top-level knobs; everything below reads them through
-/// `ThreadBudget::from_env` / `interp::fusion_from_env` /
-/// `interp::kernel_isa`.
+/// ("auto" leaves detection in charge), and `--no-plan-cache` sets
+/// `CLUSTERFORMER_PLAN_CACHE=0` to bind a fresh plan per shape. The env
+/// vars stay the single top-level knobs; everything below reads them
+/// through `ThreadBudget::from_env` / `interp::fusion_from_env` /
+/// `interp::kernel_isa` / `interp::plan_cache::plan_cache_from_env`.
 fn apply_kernel_knobs(args: &clusterformer::util::cli::Args) -> Result<()> {
     let threads = args.usize("threads")?;
     if threads > 0 {
@@ -175,6 +178,9 @@ fn apply_kernel_knobs(args: &clusterformer::util::cli::Args) -> Result<()> {
     }
     if args.flag("no-fusion") {
         std::env::set_var("CLUSTERFORMER_FUSION", "0");
+    }
+    if args.flag("no-plan-cache") {
+        std::env::set_var("CLUSTERFORMER_PLAN_CACHE", "0");
     }
     let simd = args.str("simd")?;
     if !simd.is_empty() && simd != "auto" {
@@ -239,6 +245,14 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
             m.fused_epilogues,
             m.fused_softmax,
             m.fused_bytes_saved
+        );
+        println!(
+            "plan cache: enabled={} hits={} misses={} entries={} pad_waste_bytes={}",
+            clusterformer::runtime::interp::plan_cache::plan_cache_from_env(),
+            m.plan_cache_hits,
+            m.plan_cache_misses,
+            m.plan_cache_entries,
+            m.pad_waste_bytes
         );
     }
     Ok(())

@@ -398,26 +398,175 @@ impl Arena {
         inputs: &[&Tensor],
     ) -> Result<()> {
         for (off, &t) in inputs.iter().enumerate() {
-            let pos = base + off;
-            let (dims, dtype) = plan
-                .params
-                .get(pos)
-                .ok_or_else(|| anyhow!("input position {pos} out of range"))?;
-            if t.shape() != dims.as_slice() {
-                bail!("parameter {pos}: expected shape {dims:?}, got {:?}", t.shape());
+            self.stage_param_at(plan, base + off, t)?;
+        }
+        Ok(())
+    }
+
+    /// Validate and stage one input at `pos`.
+    pub(crate) fn stage_param_at(
+        &mut self,
+        plan: &MemoryPlan,
+        pos: usize,
+        t: &Tensor,
+    ) -> Result<()> {
+        let (dims, dtype) = plan
+            .params
+            .get(pos)
+            .ok_or_else(|| anyhow!("input position {pos} out of range"))?;
+        if t.shape() != dims.as_slice() {
+            bail!("parameter {pos}: expected shape {dims:?}, got {:?}", t.shape());
+        }
+        if t.dtype() != *dtype {
+            bail!(
+                "parameter {pos}: expected dtype {}, got {}",
+                dtype.name(),
+                t.dtype().name()
+            );
+        }
+        if plan.param_read[pos] {
+            self.params[pos].stage(t)?;
+        }
+        Ok(())
+    }
+
+    /// Allocate the persistent (cross-invocation) parameter buffers at
+    /// their declared full size, zero-filled — the bind-time step that
+    /// turns a parameter slot into state. Idempotent per bind; callers
+    /// never stage these per call.
+    pub(crate) fn init_persistent(&mut self, plan: &MemoryPlan) {
+        for (pos, &p) in plan.param_persistent.iter().enumerate() {
+            if p && plan.param_read[pos] {
+                let (dims, dtype) = &plan.params[pos];
+                self.params[pos] = Buf::zeroed(*dtype, dims.iter().product());
             }
-            if t.dtype() != *dtype {
-                bail!(
-                    "parameter {pos}: expected dtype {}, got {}",
-                    dtype.name(),
-                    t.dtype().name()
-                );
+        }
+    }
+
+    /// Stage the dynamic prefix while skipping persistent positions:
+    /// `inputs` supplies the non-persistent dynamic parameters in
+    /// positional order; persistent slots keep whatever state previous
+    /// calls wrote.
+    pub(crate) fn stage_dynamic(
+        &mut self,
+        plan: &MemoryPlan,
+        n_dynamic: usize,
+        inputs: &[&Tensor],
+    ) -> Result<()> {
+        let mut next = 0usize;
+        for pos in 0..n_dynamic {
+            if plan.param_persistent.get(pos).copied().unwrap_or(false) {
+                continue;
             }
-            if plan.param_read[pos] {
-                self.params[pos].stage(t)?;
+            let t = *inputs
+                .get(next)
+                .ok_or_else(|| anyhow!("missing dynamic input for position {pos}"))?;
+            self.stage_param_at(plan, pos, t)?;
+            next += 1;
+        }
+        if next != inputs.len() {
+            bail!("{} dynamic inputs supplied, {next} consumed", inputs.len());
+        }
+        Ok(())
+    }
+
+    /// Overwrite rows `[row0, row0 + k)` of persistent parameter `pos`
+    /// with `t` (a `[k, trailing...]` tensor matching the declared
+    /// trailing dims) — the KV-cache append: each decode step lands its
+    /// new key/value row in place, no re-copy of the prefix.
+    pub(crate) fn write_param_rows(
+        &mut self,
+        plan: &MemoryPlan,
+        pos: usize,
+        row0: usize,
+        t: &Tensor,
+    ) -> Result<()> {
+        let (dims, dtype) = self.persistent_contract(plan, pos)?;
+        if t.dtype() != dtype {
+            bail!(
+                "persistent slot {pos}: expected dtype {}, got {}",
+                dtype.name(),
+                t.dtype().name()
+            );
+        }
+        if t.shape().len() != dims.len() || t.shape()[1..] != dims[1..] {
+            bail!(
+                "persistent slot {pos}: row shape {:?} does not match declared {:?}",
+                t.shape(),
+                dims
+            );
+        }
+        let rows = t.shape()[0];
+        if row0 + rows > dims[0] {
+            bail!(
+                "persistent slot {pos}: rows [{row0}, {}) exceed capacity {}",
+                row0 + rows,
+                dims[0]
+            );
+        }
+        let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+        let off = row0 * row_elems;
+        let n = rows * row_elems;
+        let bytes = t.bytes();
+        if !plan.param_read[pos] {
+            return Ok(()); // state no live instruction reads: ignore
+        }
+        match &mut self.params[pos] {
+            Buf::F32(v) => {
+                for (x, c) in v[off..off + n].iter_mut().zip(bytes.chunks_exact(4)) {
+                    *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            Buf::U8(v) => v[off..off + n].copy_from_slice(bytes),
+            Buf::I32(v) => {
+                for (x, c) in v[off..off + n].iter_mut().zip(bytes.chunks_exact(4)) {
+                    *x = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            Buf::I64(v) => {
+                for (x, c) in v[off..off + n].iter_mut().zip(bytes.chunks_exact(8)) {
+                    *x = i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]);
+                }
             }
         }
         Ok(())
+    }
+
+    /// Copy out the leading `rows` rows of persistent parameter `pos`
+    /// (bucket migration and tests; not a steady-state path).
+    pub(crate) fn read_param_rows(
+        &self,
+        plan: &MemoryPlan,
+        pos: usize,
+        rows: usize,
+    ) -> Result<Tensor> {
+        let (dims, _) = self.persistent_contract(plan, pos)?;
+        if rows > dims[0] {
+            bail!("persistent slot {pos}: {rows} rows exceed capacity {}", dims[0]);
+        }
+        if !plan.param_read[pos] {
+            bail!("persistent slot {pos} is never read; no state to copy");
+        }
+        let row_elems: usize = dims[1..].iter().product::<usize>().max(1);
+        let mut shape = dims.to_vec();
+        shape[0] = rows;
+        self.params[pos].as_ref().prefix(rows * row_elems)?.to_tensor(&shape)
+    }
+
+    /// Shared validation: `pos` must be a non-scalar persistent slot.
+    fn persistent_contract<'p>(
+        &self,
+        plan: &'p MemoryPlan,
+        pos: usize,
+    ) -> Result<(&'p [usize], Dtype)> {
+        if !plan.param_persistent.get(pos).copied().unwrap_or(false) {
+            bail!("parameter {pos} is not a persistent slot");
+        }
+        let (dims, dtype) = &plan.params[pos];
+        if dims.is_empty() {
+            bail!("persistent slot {pos} is scalar; row writes need a leading dim");
+        }
+        Ok((dims.as_slice(), *dtype))
     }
 }
 

@@ -1,0 +1,247 @@
+//! Autoregressive decode driver: prefill once, then token-by-token
+//! steps against a persistent KV-cache.
+//!
+//! The paper's serving story (and the on-device NLP profile in
+//! PAPERS.md) is dominated by decode: the shape changes on every token,
+//! so a fixed-shape executor would replan per step. This driver makes
+//! steps O(1):
+//!
+//! * **Prefill** runs through a [`DynResident`] — the prompt rounds up
+//!   the bucket ladder, executes a cached plan, and the returned
+//!   key/value projections seed the cache.
+//! * **The KV cache lives in persistent arena slots** of the step
+//!   module's bound plan ([`super::InterpExecutor::resident_persistent`]):
+//!   each step stages only the new token and a length scalar, and lands
+//!   its new key/value row with an in-place row write — the prefix is
+//!   never re-copied, never re-staged.
+//! * **Steps rebind only on bucket overflow**: when the cache outgrows
+//!   its bucket, the session binds the next rung and migrates the
+//!   filled rows once. Total binds over a generation are logarithmic in
+//!   its length ([`DecodeSession::rebinds`]), not linear.
+//!
+//! The step modules are *session-owned*, not shared through the global
+//! plan cache: their arena slots hold this session's KV state, which
+//! must not leak to another request. Weight preparation still shares
+//! through the content-addressed pool, so per-session binds pay
+//! planning only, not weight prep.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::plan_cache::{BucketLadder, DynResident, ExecSource};
+use super::{InterpExecutor, InterpResident};
+use crate::clustering::ClusteredTensors;
+use crate::runtime::{ResidentExecutor as _, ThreadBudget};
+use crate::tensor::Tensor;
+
+/// Parameter positions of the persistent KV slots in the step module
+/// (see `testing::fixtures::decode_step_hlo`: `x`, `len`, `kc`, `vc`).
+pub const KV_SLOTS: [usize; 2] = [2, 3];
+
+/// One decode model family: closures rendering the prefill and step
+/// modules at a bucket size, plus the shared weight state. The driver
+/// stays agnostic to where the HLO text comes from (fixture generators
+/// in tests/benches, artifact templates in serving).
+pub struct DecodeModel {
+    pub label: String,
+    /// Head dim `d` of the token activations.
+    pub dim: usize,
+    /// Fixed weight inputs in signature order (dense projections, or
+    /// codebooks + indices for the clustered form).
+    pub weights: Arc<Vec<Tensor>>,
+    pub clustered: Option<Arc<ClusteredTensors>>,
+    /// Prefill module text at sequence bucket `s`.
+    pub prefill_hlo: Box<dyn Fn(usize) -> String + Send + Sync>,
+    /// Step module text at cache bucket `s`.
+    pub step_hlo: Box<dyn Fn(usize) -> String + Send + Sync>,
+    pub threads: ThreadBudget,
+}
+
+/// One autoregressive generation: prefill seeds the KV cache, `step`
+/// advances it a token at a time. Holds the per-bucket step residents
+/// (whose arenas own the KV state) for the life of the session.
+pub struct DecodeSession {
+    model: Arc<DecodeModel>,
+    ladder: BucketLadder,
+    /// Shape-polymorphic prefill (stateless → shared plan cache).
+    prefill: DynResident,
+    /// Session-owned step residents by cache bucket. The *current*
+    /// bucket's resident holds the live KV state; smaller buckets stick
+    /// around only so a bench can re-enter them cheaply.
+    steps: HashMap<usize, Arc<InterpResident>>,
+    /// Tokens currently in the cache.
+    len: usize,
+    /// Cache capacity (current step bucket); 0 before prefill.
+    bucket: usize,
+    /// Step-module binds performed (bucket overflows + the seed bind) —
+    /// logarithmic in generation length, asserted by tests.
+    rebinds: usize,
+}
+
+impl DecodeSession {
+    pub fn new(model: DecodeModel, ladder: BucketLadder) -> DecodeSession {
+        let model = Arc::new(model);
+        let m = model.clone();
+        let source: ExecSource = Box::new(move |s| {
+            Ok(InterpExecutor::load_text(
+                &(m.prefill_hlo)(s),
+                &format!("{}/prefill[{s}]", m.label),
+            )?
+            .with_threads(m.threads))
+        });
+        let prefill = DynResident::new(
+            &format!("{}/prefill", model.label),
+            ladder.clone(),
+            2,
+            model.weights.clone(),
+            model.clustered.clone(),
+            source,
+        );
+        DecodeSession {
+            model,
+            ladder,
+            prefill,
+            steps: HashMap::new(),
+            len: 0,
+            bucket: 0,
+            rebinds: 0,
+        }
+    }
+
+    /// Tokens currently held in the KV cache.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Step-module binds performed so far (should stay logarithmic in
+    /// the generation length).
+    pub fn rebinds(&self) -> usize {
+        self.rebinds
+    }
+
+    /// The prefill's shape-polymorphic executor (plan-cache counters and
+    /// warmup live there).
+    pub fn prefill_resident(&self) -> &DynResident {
+        &self.prefill
+    }
+
+    fn scalar(v: usize) -> Tensor {
+        Tensor::from_f32(vec![], &[v as f32]).expect("scalar tensor")
+    }
+
+    /// Bind the step module at cache bucket `s` (or fetch this
+    /// session's existing bind). KV slots come up zeroed.
+    fn bind_step(&mut self, s: usize) -> Result<Arc<InterpResident>> {
+        if let Some(r) = self.steps.get(&s) {
+            return Ok(r.clone());
+        }
+        let exe = InterpExecutor::load_text(
+            &(self.model.step_hlo)(s),
+            &format!("{}/step[{s}]", self.model.label),
+        )?
+        .with_threads(self.model.threads);
+        let resident = Arc::new(exe.resident_persistent(
+            2 + KV_SLOTS.len(),
+            self.model.weights.clone(),
+            self.model.clustered.clone(),
+            &KV_SLOTS,
+        )?);
+        self.rebinds += 1;
+        self.steps.insert(s, resident.clone());
+        Ok(resident)
+    }
+
+    /// Grow the cache bucket so at least `need` rows fit, migrating the
+    /// filled KV rows into the new bucket's persistent slots.
+    fn ensure_capacity(&mut self, need: usize) -> Result<()> {
+        if need <= self.bucket {
+            return Ok(());
+        }
+        let next = self.ladder.round_up(need);
+        let migrate = if self.len > 0 {
+            let cur = self
+                .steps
+                .get(&self.bucket)
+                .ok_or_else(|| anyhow::anyhow!("{}: no current step bind", self.model.label))?
+                .clone();
+            Some((
+                cur.read_persistent_rows(KV_SLOTS[0], self.len)?,
+                cur.read_persistent_rows(KV_SLOTS[1], self.len)?,
+            ))
+        } else {
+            None
+        };
+        let grown = self.bind_step(next)?;
+        if let Some((k, v)) = migrate {
+            grown.write_persistent_rows(KV_SLOTS[0], 0, &k)?;
+            grown.write_persistent_rows(KV_SLOTS[1], 0, &v)?;
+        }
+        self.bucket = next;
+        Ok(())
+    }
+
+    /// Run the prompt (`x: [n, d]`, `n >= 1`) through the bucketed
+    /// prefill plan, seed the KV cache with its key/value projections,
+    /// and return the attention output `y: [n, d]` (row `i` attends over
+    /// tokens `0..=i`). Resets any previous generation in this session.
+    pub fn prefill(&mut self, x: &Tensor) -> Result<Tensor> {
+        let n = *x.shape().first().unwrap_or(&0);
+        if n == 0 || x.shape() != [n, self.model.dim] {
+            bail!(
+                "{}: prefill expects [n>=1, {}] tokens, got {:?}",
+                self.model.label,
+                self.model.dim,
+                x.shape()
+            );
+        }
+        let out = self.prefill.run(&[x.clone(), Self::scalar(n)])?;
+        let [y, k, v]: [Tensor; 3] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("{}: prefill must return (y, k, v)", self.model.label))?;
+        // Reset, then seed the step cache sized for the append to come.
+        self.len = 0;
+        self.bucket = 0;
+        self.steps.clear();
+        self.ensure_capacity(n + 1)?;
+        let seeded = self.steps[&self.bucket].clone();
+        seeded.write_persistent_rows(KV_SLOTS[0], 0, &k)?;
+        seeded.write_persistent_rows(KV_SLOTS[1], 0, &v)?;
+        self.len = n;
+        Ok(y)
+    }
+
+    /// Advance one token: `x: [1, d]` attends over the cached `len`
+    /// tokens plus itself, its key/value row lands in the persistent
+    /// slots, and the bounded attention output `y: [1, d]` comes back
+    /// (feed it forward as the next step's input to generate).
+    pub fn step(&mut self, x: &Tensor) -> Result<Tensor> {
+        if self.len == 0 {
+            bail!("{}: step before prefill", self.model.label);
+        }
+        if x.shape() != [1, self.model.dim] {
+            bail!(
+                "{}: step expects one [1, {}] token, got {:?}",
+                self.model.label,
+                self.model.dim,
+                x.shape()
+            );
+        }
+        // Room for this step's append (migrates on bucket overflow).
+        self.ensure_capacity(self.len + 1)?;
+        let resident = self.steps[&self.bucket].clone();
+        let out = resident.run(&[x.clone(), Self::scalar(self.len)])?;
+        let [y, kn, vn]: [Tensor; 3] = out
+            .try_into()
+            .map_err(|_| anyhow::anyhow!("{}: step must return (y, k, v)", self.model.label))?;
+        resident.write_persistent_rows(KV_SLOTS[0], self.len, &kn)?;
+        resident.write_persistent_rows(KV_SLOTS[1], self.len, &vn)?;
+        self.len += 1;
+        Ok(y)
+    }
+}

@@ -42,7 +42,9 @@ mod plan;
 mod tuning;
 
 pub mod clustered;
+pub mod decode;
 pub mod gemm;
+pub mod plan_cache;
 pub mod pool;
 pub mod pool_exec;
 pub mod stats;
@@ -113,6 +115,13 @@ impl InterpBackend {
     pub fn with_threads(threads: ThreadBudget) -> InterpBackend {
         InterpBackend { threads }
     }
+
+    /// The kernel lane budget executors loaded through this backend
+    /// inherit (the plan-cache serving path builds its own
+    /// [`InterpExecutor`]s and needs the same budget).
+    pub fn thread_budget(&self) -> ThreadBudget {
+        self.threads
+    }
 }
 
 impl Backend for InterpBackend {
@@ -126,6 +135,10 @@ impl Backend for InterpBackend {
     /// the memory plan that assigns every instruction a reusable slot.
     fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>> {
         Ok(Box::new(InterpExecutor::load(path)?.with_threads(self.threads)))
+    }
+
+    fn as_interp(&self) -> Option<&InterpBackend> {
+        Some(self)
     }
 }
 
@@ -144,8 +157,9 @@ impl PlannedState {
         cache: Option<&WeightCache>,
         name: &str,
         fusion: bool,
+        persistent: &[usize],
     ) -> Option<PlannedState> {
-        match plan::build(module, exec, cache, fusion) {
+        match plan::build(module, exec, cache, fusion, persistent) {
             Ok(mem) => {
                 let arena = Mutex::new(arena::Arena::new(&mem));
                 Some(PlannedState { mem, arena })
@@ -230,7 +244,7 @@ impl InterpExecutor {
 
     fn planned_state(&self) -> &Option<PlannedState> {
         self.planned.get_or_init(|| {
-            PlannedState::build(&self.module, &self.plan, None, &self.name, self.fusion)
+            PlannedState::build(&self.module, &self.plan, None, &self.name, self.fusion, &[])
         })
     }
 
@@ -238,6 +252,17 @@ impl InterpExecutor {
     /// executor fell back to per-instruction buffers).
     pub fn memory_plan(&self) -> Option<&MemoryPlan> {
         self.planned_state().as_ref().map(|p| &p.mem)
+    }
+
+    /// Declared parameter shapes, in positional order (the shape
+    /// signature half of the plan-cache key).
+    pub fn parameter_dims(&self) -> Result<Vec<Vec<usize>>> {
+        Ok(self
+            .module
+            .parameters()?
+            .into_iter()
+            .map(|(_, shape)| shape.dims)
+            .collect())
     }
 
     /// Concrete-typed residency bind (the trait method wraps this; tests
@@ -248,6 +273,23 @@ impl InterpExecutor {
         fixed: Arc<Vec<Tensor>>,
         clustered: Option<Arc<ClusteredTensors>>,
     ) -> Result<InterpResident> {
+        self.resident_persistent(n_dynamic, fixed, clustered, &[])
+    }
+
+    /// Residency bind with persistent (cross-invocation state) slots:
+    /// `persistent` lists dynamic parameter positions whose arena
+    /// buffers outlive a call — the KV-cache class. Persistent slots
+    /// are zero-initialized at bind, skipped by per-call staging (the
+    /// caller supplies only the remaining dynamic inputs, in positional
+    /// order), and mutated in place via
+    /// [`InterpResident::write_persistent_rows`].
+    pub fn resident_persistent(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+        persistent: &[usize],
+    ) -> Result<InterpResident> {
         if n_dynamic + fixed.len() != self.n_params {
             bail!(
                 "{}: {n_dynamic} dynamic + {} fixed inputs != {} module parameters",
@@ -255,6 +297,15 @@ impl InterpExecutor {
                 fixed.len(),
                 self.n_params
             );
+        }
+        for &p in persistent {
+            if p >= n_dynamic {
+                bail!(
+                    "{}: persistent slot position {p} is not a dynamic parameter \
+                     (n_dynamic = {n_dynamic})",
+                    self.name
+                );
+            }
         }
         let cache = eval::build_weight_cache(
             &self.module,
@@ -267,16 +318,33 @@ impl InterpExecutor {
         // Content-addressed interning: residents at other batch sizes
         // with identical weight state share this allocation.
         let cache = pool::intern_cache(cache);
-        let planned =
-            PlannedState::build(&self.module, &self.plan, Some(&cache), &self.name, self.fusion);
+        let planned = PlannedState::build(
+            &self.module,
+            &self.plan,
+            Some(&cache),
+            &self.name,
+            self.fusion,
+            persistent,
+        );
+        if planned.is_none() && !persistent.is_empty() {
+            // Persistent state lives in planned arena buffers; the
+            // classic fallback has nowhere to keep it.
+            bail!(
+                "{}: persistent slots require a plannable module (memory \
+                 planning fell back to per-instruction buffers)",
+                self.name
+            );
+        }
         let fallback_values = match &planned {
             Some(ps) => {
                 // Fixed inputs are validated and staged (decoded to typed
                 // buffers) once, here — per-call staging touches only the
-                // dynamic prefix.
+                // dynamic prefix. Persistent slots get their full-size
+                // zeroed state buffers in the same pass.
                 let fixed_refs: Vec<&Tensor> = fixed.iter().collect();
                 let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
                 arena.stage_params(&ps.mem, n_dynamic, &fixed_refs)?;
+                arena.init_persistent(&ps.mem);
                 None
             }
             // The classic fallback binds cached weights borrowed from a
@@ -302,6 +370,7 @@ impl InterpExecutor {
             cache,
             name: self.name.clone(),
             n_dynamic,
+            persistent: persistent.to_vec(),
             fixed,
             threads: self.threads,
             planned,
@@ -354,6 +423,16 @@ impl Executor for InterpExecutor {
     ) -> Result<Box<dyn ResidentExecutor>> {
         Ok(Box::new(self.resident(n_dynamic, fixed, clustered)?))
     }
+
+    fn with_resident_persistent(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+        persistent: &[usize],
+    ) -> Result<Box<dyn ResidentExecutor>> {
+        Ok(Box::new(self.resident_persistent(n_dynamic, fixed, clustered, persistent)?))
+    }
 }
 
 /// Weight-resident evaluation: the fixed inputs are pre-bound host-side
@@ -368,6 +447,9 @@ pub struct InterpResident {
     cache: Arc<WeightCache>,
     name: String,
     n_dynamic: usize,
+    /// Dynamic parameter positions holding cross-invocation state (the
+    /// KV-cache class); per-call staging skips these.
+    persistent: Vec<usize>,
     fixed: Arc<Vec<Tensor>>,
     /// Kernel lane budget (inherited from the loading executor).
     threads: ThreadBudget,
@@ -387,6 +469,35 @@ impl InterpResident {
     pub fn memory_plan(&self) -> Option<&MemoryPlan> {
         self.planned.as_ref().map(|p| &p.mem)
     }
+
+    /// Dynamic inputs each call must supply (declared dynamic params
+    /// minus persistent state slots).
+    pub fn n_call_inputs(&self) -> usize {
+        self.n_dynamic - self.persistent.len()
+    }
+
+    fn planned_or_bail(&self) -> Result<&PlannedState> {
+        self.planned.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("{}: no planned arena (persistent state unavailable)", self.name)
+        })
+    }
+
+    /// Overwrite rows `[row0, row0 + k)` of the persistent slot at
+    /// parameter position `pos` with `t` — the KV-cache append. The
+    /// prefix written by earlier calls stays in place.
+    pub fn write_persistent_rows(&self, pos: usize, row0: usize, t: &Tensor) -> Result<()> {
+        let ps = self.planned_or_bail()?;
+        let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+        arena.write_param_rows(&ps.mem, pos, row0, t)
+    }
+
+    /// Copy out the leading `rows` rows of the persistent slot at
+    /// parameter position `pos` (bucket migration and tests).
+    pub fn read_persistent_rows(&self, pos: usize, rows: usize) -> Result<Tensor> {
+        let ps = self.planned_or_bail()?;
+        let arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+        arena.read_param_rows(&ps.mem, pos, rows)
+    }
 }
 
 impl ResidentExecutor for InterpResident {
@@ -395,26 +506,37 @@ impl ResidentExecutor for InterpResident {
     }
 
     fn run(&self, dynamic: &[Tensor]) -> Result<Vec<Tensor>> {
-        if dynamic.len() != self.n_dynamic {
+        if dynamic.len() != self.n_call_inputs() {
             bail!(
                 "{}: expected {} dynamic inputs, got {}",
                 self.name,
-                self.n_dynamic,
+                self.n_call_inputs(),
                 dynamic.len()
             );
         }
         let outputs = if let Some(ps) = &self.planned {
             let refs: Vec<&Tensor> = dynamic.iter().collect();
             let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
-            arena::run_staged(
-                &self.module,
-                &ps.mem,
-                Some(&self.cache),
-                &mut arena,
-                0,
-                &refs,
-                self.threads.get(),
-            )?
+            if self.persistent.is_empty() {
+                arena::run_staged(
+                    &self.module,
+                    &ps.mem,
+                    Some(&self.cache),
+                    &mut arena,
+                    0,
+                    &refs,
+                    self.threads.get(),
+                )?
+            } else {
+                arena.stage_dynamic(&ps.mem, self.n_dynamic, &refs)?;
+                arena::execute(
+                    &self.module,
+                    &ps.mem,
+                    Some(&self.cache),
+                    &mut arena,
+                    self.threads.get(),
+                )?
+            }
         } else {
             let refs: Vec<&Tensor> = dynamic.iter().chain(self.fixed.iter()).collect();
             eval::evaluate_classic(
@@ -427,6 +549,14 @@ impl ResidentExecutor for InterpResident {
             )?
         };
         crate::runtime::single_replica(vec![outputs], &self.name)
+    }
+
+    fn persist_rows(&self, pos: usize, row0: usize, t: &Tensor) -> Result<()> {
+        self.write_persistent_rows(pos, row0, t)
+    }
+
+    fn read_persistent(&self, pos: usize, rows: usize) -> Result<Tensor> {
+        self.read_persistent_rows(pos, rows)
     }
 }
 

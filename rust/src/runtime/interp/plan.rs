@@ -160,6 +160,12 @@ pub struct MemoryPlan {
     /// Whether any live instruction reads the parameter (unread params
     /// are validated but never staged/decoded).
     pub(crate) param_read: Vec<bool>,
+    /// Persistent slots: parameters whose arena buffer outlives one call
+    /// (the KV-cache class). They are allocated full-size at bind time,
+    /// never staged per call, and mutated in place through
+    /// [`super::arena::Arena::write_param_rows`] — each execution reads
+    /// whatever state previous calls left there.
+    pub(crate) param_persistent: Vec<bool>,
     peak_bytes: usize,
     naive_bytes: usize,
     fused_chains: usize,
@@ -753,12 +759,15 @@ fn fuse(
 /// Build the memory plan for `module` under the clustered execution plan
 /// and (for residents) the bound weight cache. `fuse_ops` gates the
 /// plan-time operator fusion pass (`CLUSTERFORMER_FUSION` /
-/// `--no-fusion` at the executor level).
+/// `--no-fusion` at the executor level). `persistent` lists parameter
+/// positions whose arena buffers persist across calls (the KV-cache
+/// slot class; empty for ordinary executors).
 pub(crate) fn build(
     module: &HloModule,
     exec: &ExecPlan,
     cache: Option<&WeightCache>,
     fuse_ops: bool,
+    persistent: &[usize],
 ) -> Result<MemoryPlan> {
     let entry = module.entry()?;
     let insts = entry.instructions.as_slice();
@@ -774,6 +783,16 @@ pub(crate) fn build(
     for (p, (name, shape)) in param_list.iter().enumerate() {
         params.push((shape.dims.clone(), host_dtype(&shape.dtype)?));
         pos_by_name.insert(name.as_str(), p);
+    }
+    let mut param_persistent = vec![false; params.len()];
+    for &p in persistent {
+        if p >= params.len() {
+            bail!(
+                "persistent slot position {p} out of range ({} parameters)",
+                params.len()
+            );
+        }
+        param_persistent[p] = true;
     }
 
     let by_name: HashMap<&str, usize> = insts
@@ -1139,6 +1158,7 @@ pub(crate) fn build(
         root,
         params,
         param_read,
+        param_persistent,
         peak_bytes,
         naive_bytes,
         fused_chains: fusion.chains,
@@ -1616,7 +1636,7 @@ mod tests {
     fn plan_for(hlo: &str) -> MemoryPlan {
         let module = HloModule::parse(hlo).unwrap();
         let exec = clustered::plan(&module);
-        build(&module, &exec, None, true).unwrap()
+        build(&module, &exec, None, true, &[]).unwrap()
     }
 
     /// Fusion disabled: the structure tests below pin the raw slot /
@@ -1624,7 +1644,7 @@ mod tests {
     fn plan_for_unfused(hlo: &str) -> MemoryPlan {
         let module = HloModule::parse(hlo).unwrap();
         let exec = clustered::plan(&module);
-        build(&module, &exec, None, false).unwrap()
+        build(&module, &exec, None, false, &[]).unwrap()
     }
 
     #[test]
@@ -1853,7 +1873,7 @@ mod tests {
             ROOT %o = f32[2]{0} negate(%g)\n}\n";
         let module = HloModule::parse(hlo).unwrap();
         let exec = clustered::plan(&module);
-        assert!(build(&module, &exec, None, true).is_err());
+        assert!(build(&module, &exec, None, true, &[]).is_err());
     }
 
     #[test]

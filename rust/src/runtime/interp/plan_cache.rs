@@ -1,0 +1,509 @@
+//! Dynamic-shape plan cache with bucketed specialization.
+//!
+//! An HLO artifact bakes its shapes in, so every new batch or sequence
+//! length used to pay a full bind: weight-cache build, clustered
+//! bit-packing, memory planning, arena allocation. Real traffic changes
+//! shape on every request — and autoregressive decode changes it on
+//! every *token* — so bind cost must come off the hot path:
+//!
+//! * [`BucketLadder`] rounds an incoming extent up to a small set of
+//!   bucket sizes (powers of two by default,
+//!   `CLUSTERFORMER_PLAN_BUCKETS` to override), so arbitrary shapes map
+//!   onto a handful of specialized plans;
+//! * [`PlanCache`] keeps bound plans keyed by (module fingerprint,
+//!   shape signature) with LRU eviction at a capacity knob
+//!   (`CLUSTERFORMER_PLAN_CACHE_CAP`). A hit returns the shared
+//!   [`InterpResident`] — plan, arena, and pooled prepared weights —
+//!   with zero rebind work;
+//! * [`DynResident`] is the shape-polymorphic executor built on both:
+//!   it zero-pads dynamic inputs up to their bucket, runs the cached
+//!   plan, and slices bucket-sized outputs back to the true extent.
+//!   Padding is bit-transparent for the row-independent kernels these
+//!   models use (GEMM row tiles, per-row softmax, elementwise): row `i`
+//!   of a padded execution is bit-for-bit row `i` of an exact-shape
+//!   bind (`tests/plan_cache_props.rs`).
+//!
+//! `CLUSTERFORMER_PLAN_CACHE=0` (CLI `--no-plan-cache`) disables the
+//! cache for A/B: every lookup then binds fresh, which is exactly the
+//! old per-shape rebind cost. Counters live in [`super::stats`]:
+//! `plan_cache_hits` / `plan_cache_misses` / `plan_cache_entries` /
+//! `pad_waste_bytes`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{stats, InterpExecutor, InterpResident, WeightCache};
+use crate::clustering::ClusteredTensors;
+use crate::tensor::Tensor;
+
+/// Whether the plan cache is enabled, from `CLUSTERFORMER_PLAN_CACHE`
+/// (`--no-plan-cache` at the CLI): unset, empty, `1`, `true`, or `on`
+/// mean enabled; `0`, `false`, or `off` disable caching so every lookup
+/// rebinds (the A/B baseline). Resolved once per process, mirroring
+/// [`super::fusion_from_env`].
+pub fn plan_cache_from_env() -> bool {
+    static RESOLVED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| match std::env::var("CLUSTERFORMER_PLAN_CACHE") {
+        Ok(s) => {
+            let t = s.trim();
+            if t == "0" || t.eq_ignore_ascii_case("false") || t.eq_ignore_ascii_case("off") {
+                crate::log_info!(
+                    "CLUSTERFORMER_PLAN_CACHE={s:?}: plan caching disabled (every \
+                     shape rebinds)"
+                );
+                false
+            } else {
+                if !(t.is_empty()
+                    || t == "1"
+                    || t.eq_ignore_ascii_case("true")
+                    || t.eq_ignore_ascii_case("on"))
+                {
+                    crate::log_warn!(
+                        "CLUSTERFORMER_PLAN_CACHE={s:?} is not recognized; caching \
+                         stays enabled"
+                    );
+                }
+                true
+            }
+        }
+        Err(_) => true,
+    })
+}
+
+/// Default capacity (bound plans per cache) when
+/// `CLUSTERFORMER_PLAN_CACHE_CAP` is unset.
+pub const DEFAULT_CACHE_CAP: usize = 16;
+
+/// Plan-cache capacity from `CLUSTERFORMER_PLAN_CACHE_CAP`: bound plans
+/// kept per cache before LRU eviction. Unset/empty/`0` or a non-numeric
+/// value warn (when set) and fall back to [`DEFAULT_CACHE_CAP`].
+pub fn plan_cache_cap_from_env() -> usize {
+    static RESOLVED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| match std::env::var("CLUSTERFORMER_PLAN_CACHE_CAP") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                crate::log_warn!(
+                    "CLUSTERFORMER_PLAN_CACHE_CAP={s:?} is not a positive number; \
+                     using {DEFAULT_CACHE_CAP}"
+                );
+                DEFAULT_CACHE_CAP
+            }
+        },
+        Err(_) => DEFAULT_CACHE_CAP,
+    })
+}
+
+/// FNV-1a fingerprint of a module-family label (artifact path, fixture
+/// name) — the module half of the cache key.
+pub fn fingerprint64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Bucket ladder
+// ---------------------------------------------------------------------
+
+/// The shape buckets incoming extents round up to: ascending, deduped,
+/// never empty. Extents past the top rung stay exact (their own bucket),
+/// so correctness never depends on the ladder — only how many distinct
+/// plans traffic can touch.
+#[derive(Debug, Clone)]
+pub struct BucketLadder(Vec<usize>);
+
+impl BucketLadder {
+    /// An explicit ladder; rungs are sorted and deduped, zero rungs are
+    /// dropped. An empty ladder means "every extent is its own bucket".
+    pub fn new(mut rungs: Vec<usize>) -> BucketLadder {
+        rungs.retain(|&r| r > 0);
+        rungs.sort_unstable();
+        rungs.dedup();
+        BucketLadder(rungs)
+    }
+
+    /// Powers of two `1..=max`.
+    pub fn pow2(max: usize) -> BucketLadder {
+        let mut rungs = Vec::new();
+        let mut r = 1usize;
+        while r <= max {
+            rungs.push(r);
+            r *= 2;
+        }
+        BucketLadder(rungs)
+    }
+
+    /// Ladder from `CLUSTERFORMER_PLAN_BUCKETS` (comma-separated rungs,
+    /// e.g. `"8,16,32,64"`); unset or unparsable values warn and fall
+    /// back to powers of two up to 4096.
+    pub fn from_env() -> BucketLadder {
+        static RESOLVED: std::sync::OnceLock<BucketLadder> = std::sync::OnceLock::new();
+        RESOLVED
+            .get_or_init(|| match std::env::var("CLUSTERFORMER_PLAN_BUCKETS") {
+                Ok(s) => {
+                    let parsed: Result<Vec<usize>, _> = s
+                        .split(',')
+                        .map(|p| p.trim().parse::<usize>())
+                        .collect();
+                    match parsed {
+                        Ok(rungs) if !rungs.is_empty() && rungs.iter().all(|&r| r > 0) => {
+                            BucketLadder::new(rungs)
+                        }
+                        _ => {
+                            crate::log_warn!(
+                                "CLUSTERFORMER_PLAN_BUCKETS={s:?} is not a \
+                                 comma-separated list of positive sizes; using \
+                                 powers of two"
+                            );
+                            BucketLadder::pow2(4096)
+                        }
+                    }
+                }
+                Err(_) => BucketLadder::pow2(4096),
+            })
+            .clone()
+    }
+
+    /// Smallest rung >= `n`; past the top rung, `n` itself.
+    pub fn round_up(&self, n: usize) -> usize {
+        self.0.iter().copied().find(|&r| r >= n).unwrap_or(n)
+    }
+
+    pub fn rungs(&self) -> &[usize] {
+        &self.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------
+
+/// One cache key: module-family fingerprint + the shape signature of
+/// the dynamic inputs the plan was specialized for.
+type Key = (u64, Vec<Vec<usize>>);
+
+struct Entry {
+    key: Key,
+    resident: Arc<InterpResident>,
+    /// Logical timestamp of the last lookup that returned this entry.
+    last_used: u64,
+}
+
+struct Inner {
+    entries: Vec<Entry>,
+    tick: u64,
+}
+
+/// A bounded cache of bound plans ([`InterpResident`]: memory plan +
+/// arena + pooled weight cache), keyed by (module fingerprint, shape
+/// signature). Lookups are linear — the whole point is that live entry
+/// counts stay ladder-sized. Eviction is LRU and drops the resident's
+/// arena with it; prepared weights interned in the content-addressed
+/// pool survive as long as any other holder (another bucket's resident,
+/// a [`DynResident`]'s kept cache) still references them.
+pub struct PlanCache {
+    label: String,
+    cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    /// A cache with the env-derived capacity
+    /// ([`plan_cache_cap_from_env`]).
+    pub fn new(label: &str) -> PlanCache {
+        PlanCache::with_cap(label, plan_cache_cap_from_env())
+    }
+
+    /// A cache with an explicit capacity (>= 1).
+    pub fn with_cap(label: &str, cap: usize) -> PlanCache {
+        PlanCache {
+            label: label.to_string(),
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { entries: Vec::new(), tick: 0 }),
+        }
+    }
+
+    /// Bound plans currently held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up the plan for (`fp`, `sig`); on a miss, run `bind` and
+    /// cache the result (evicting the least-recently-used entry past
+    /// capacity). With the cache disabled
+    /// ([`plan_cache_from_env`] = false) every call binds fresh and
+    /// nothing is retained — the rebind-per-shape baseline.
+    pub fn get_or_bind(
+        &self,
+        fp: u64,
+        sig: &[Vec<usize>],
+        bind: impl FnOnce() -> Result<InterpResident>,
+    ) -> Result<Arc<InterpResident>> {
+        if !plan_cache_from_env() {
+            stats::count_plan_cache_miss();
+            return Ok(Arc::new(bind()?));
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner
+            .entries
+            .iter_mut()
+            .find(|e| e.key.0 == fp && e.key.1 == sig)
+        {
+            e.last_used = tick;
+            stats::count_plan_cache_hit();
+            return Ok(e.resident.clone());
+        }
+        stats::count_plan_cache_miss();
+        let resident = Arc::new(bind()?);
+        inner.entries.push(Entry {
+            key: (fp, sig.to_vec()),
+            resident: resident.clone(),
+            last_used: tick,
+        });
+        stats::plan_cache_entries_add(1);
+        while inner.entries.len() > self.cap {
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty");
+            let evicted = inner.entries.swap_remove(lru);
+            stats::plan_cache_entries_sub(1);
+            crate::log_info!(
+                "{}: plan cache evicted shape {:?} (cap {})",
+                self.label,
+                evicted.key.1,
+                self.cap
+            );
+        }
+        Ok(resident)
+    }
+}
+
+impl Drop for PlanCache {
+    fn drop(&mut self) {
+        let n = self.inner.lock().unwrap_or_else(|e| e.into_inner()).entries.len();
+        stats::plan_cache_entries_sub(n);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Padding helpers
+// ---------------------------------------------------------------------
+
+/// Zero-pad the leading dim of `t` up to `rows`, recording the padding
+/// bytes in [`stats::pad_waste_bytes`]. `rows == n` returns a cheap
+/// clone (shared storage).
+pub fn pad_rows(t: &Tensor, rows: usize) -> Result<Tensor> {
+    let n = *t
+        .shape()
+        .first()
+        .ok_or_else(|| anyhow!("cannot row-pad a scalar"))?;
+    if n == rows {
+        return Ok(t.clone());
+    }
+    if n > rows {
+        bail!("extent {n} exceeds bucket {rows}");
+    }
+    let mut shape = t.shape().to_vec();
+    shape[0] = rows - n;
+    let pad = Tensor::zeros(t.dtype(), shape);
+    stats::count_pad_waste(pad.bytes().len());
+    Tensor::concat_rows(&[t, &pad])
+}
+
+// ---------------------------------------------------------------------
+// Shape-polymorphic resident
+// ---------------------------------------------------------------------
+
+/// Produces the bucket-`b` executor of one module family (parse an
+/// artifact, render a fixture template, ...).
+pub type ExecSource = Box<dyn Fn(usize) -> Result<InterpExecutor> + Send + Sync>;
+
+/// A shape-polymorphic weight-resident executor: one module family
+/// (e.g. one serving variant, one decode prefill graph) compiled at
+/// bucketed extents on demand, bound through a [`PlanCache`], executed
+/// with pad-to-bucket + slice-back semantics.
+///
+/// The leading dim of the first dynamic input is the varying extent.
+/// Every dynamic input whose leading dim equals that extent is padded
+/// to the bucket; every output whose leading dim equals the bucket is
+/// sliced back. Other inputs (scalars, fixed-shape extras) pass
+/// through untouched.
+pub struct DynResident {
+    label: String,
+    fp: u64,
+    ladder: BucketLadder,
+    cache: PlanCache,
+    source: ExecSource,
+    n_dynamic: usize,
+    weights: Arc<Vec<Tensor>>,
+    clustered: Option<Arc<ClusteredTensors>>,
+    /// Bucket-`b` executors already parsed/planned (cheap next to the
+    /// bind, but no reason to re-parse on every cache miss).
+    execs: Mutex<HashMap<usize, Arc<InterpExecutor>>>,
+    /// The first bound plan's pooled weight cache, held for the life of
+    /// this resident: LRU eviction may drop every per-bucket arena, but
+    /// the prepared (bit-packed) weights stay interned and the next
+    /// bind re-shares them instead of re-preparing.
+    kept_weights: Mutex<Option<Arc<WeightCache>>>,
+}
+
+impl DynResident {
+    pub fn new(
+        label: &str,
+        ladder: BucketLadder,
+        n_dynamic: usize,
+        weights: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+        source: ExecSource,
+    ) -> DynResident {
+        DynResident {
+            label: label.to_string(),
+            fp: fingerprint64(label),
+            cache: PlanCache::new(label),
+            ladder,
+            source,
+            n_dynamic,
+            weights,
+            clustered,
+            execs: Mutex::new(HashMap::new()),
+            kept_weights: Mutex::new(None),
+        }
+    }
+
+    pub fn ladder(&self) -> &BucketLadder {
+        &self.ladder
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// The bucket-`b` executor (parsed + execution-planned, unbound).
+    fn exec_for(&self, b: usize) -> Result<Arc<InterpExecutor>> {
+        let mut execs = self.execs.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = execs.get(&b) {
+            return Ok(e.clone());
+        }
+        let exe = Arc::new((self.source)(b)?);
+        execs.insert(b, exe.clone());
+        Ok(exe)
+    }
+
+    /// Bind (or fetch the cached bind of) bucket `b`. Warmup calls this
+    /// for every ladder rung traffic can reach, so steady state never
+    /// rebinds.
+    pub fn bind_bucket(&self, b: usize) -> Result<Arc<InterpResident>> {
+        let exe = self.exec_for(b)?;
+        let sig: Vec<Vec<usize>> = exe.parameter_dims()?[..self.n_dynamic].to_vec();
+        let resident = self.cache.get_or_bind(self.fp, &sig, || {
+            exe.resident(self.n_dynamic, self.weights.clone(), self.clustered.clone())
+        })?;
+        let mut kept = self.kept_weights.lock().unwrap_or_else(|e| e.into_inner());
+        if kept.is_none() {
+            *kept = Some(resident.weight_cache());
+        }
+        Ok(resident)
+    }
+
+    /// Run `dynamic` at its true extent: round the leading dim of
+    /// `dynamic[0]` up the ladder, pad, execute the (cached) bucket
+    /// plan, slice bucket-sized outputs back.
+    pub fn run(&self, dynamic: &[Tensor]) -> Result<Vec<Tensor>> {
+        if dynamic.len() != self.n_dynamic {
+            bail!(
+                "{}: expected {} dynamic inputs, got {}",
+                self.label,
+                self.n_dynamic,
+                dynamic.len()
+            );
+        }
+        let n = *dynamic[0]
+            .shape()
+            .first()
+            .ok_or_else(|| anyhow!("{}: dynamic input 0 is scalar", self.label))?;
+        let b = self.ladder.round_up(n);
+        let resident = self.bind_bucket(b)?;
+        let outputs = if n == b {
+            resident.run(dynamic)?
+        } else {
+            let padded: Vec<Tensor> = dynamic
+                .iter()
+                .map(|t| {
+                    if t.shape().first() == Some(&n) {
+                        pad_rows(t, b)
+                    } else {
+                        Ok(t.clone())
+                    }
+                })
+                .collect::<Result<_>>()?;
+            resident.run(&padded)?
+        };
+        if n == b {
+            return Ok(outputs);
+        }
+        outputs
+            .into_iter()
+            .map(|t| {
+                if t.shape().first() == Some(&b) {
+                    t.slice_rows(0, n)
+                } else {
+                    Ok(t)
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_rounds_up_and_saturates_exact() {
+        let l = BucketLadder::new(vec![8, 4, 16, 4]);
+        assert_eq!(l.rungs(), &[4, 8, 16]);
+        assert_eq!(l.round_up(1), 4);
+        assert_eq!(l.round_up(4), 4);
+        assert_eq!(l.round_up(5), 8);
+        assert_eq!(l.round_up(16), 16);
+        // Past the top rung the extent is its own bucket.
+        assert_eq!(l.round_up(17), 17);
+        let p = BucketLadder::pow2(32);
+        assert_eq!(p.rungs(), &[1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn pad_rows_zero_fills_and_counts_waste() {
+        let t = Tensor::from_f32(vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let before = stats::pad_waste_bytes();
+        let p = pad_rows(&t, 4).unwrap();
+        assert_eq!(p.shape(), &[4, 3]);
+        let v = p.as_f32().unwrap();
+        assert_eq!(&v[..6], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(v[6..].iter().all(|&x| x == 0.0));
+        assert!(stats::pad_waste_bytes() >= before + 2 * 3 * 4);
+        assert!(pad_rows(&t, 1).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_distinct() {
+        assert_eq!(fingerprint64("a/b"), fingerprint64("a/b"));
+        assert_ne!(fingerprint64("a/b"), fingerprint64("a/c"));
+    }
+}

@@ -28,6 +28,11 @@
 //!   path instead of the scalar reference; stays at zero under
 //!   `CLUSTERFORMER_SIMD=scalar`, so `eval --stats` can confirm which
 //!   path actually ran.
+//! * [`plan_cache_hits`] / [`plan_cache_misses`] / [`plan_cache_entries`]
+//!   / [`pad_waste_bytes`] — dynamic-shape plan-cache behavior
+//!   ([`super::plan_cache`]): lookups served without a rebind, fresh
+//!   binds, bound plans currently held, and zero-pad bytes written to
+//!   round inputs up to their shape bucket.
 //! * [`fused_chains`] / [`fused_epilogues`] / [`fused_softmax`] /
 //!   [`fused_bytes_saved`] — operator-fusion footprint of the same
 //!   largest plan: standalone fused elementwise chains, GEMM/LUT dots
@@ -38,6 +43,10 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 static TENSOR_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+static PLAN_CACHE_HITS: AtomicUsize = AtomicUsize::new(0);
+static PLAN_CACHE_MISSES: AtomicUsize = AtomicUsize::new(0);
+static PLAN_CACHE_ENTRIES: AtomicUsize = AtomicUsize::new(0);
+static PAD_WASTE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_NAIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
 static PLAN_SLOT_COUNT: AtomicUsize = AtomicUsize::new(0);
@@ -97,6 +106,55 @@ pub fn simd_dispatches() -> usize {
 /// Record one kernel call dispatched to a SIMD path.
 pub(crate) fn count_simd_dispatch() {
     SIMD_DISPATCHES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Plan-cache lookups served by an already-bound plan (no rebind).
+pub fn plan_cache_hits() -> usize {
+    PLAN_CACHE_HITS.load(Ordering::Relaxed)
+}
+
+/// Plan-cache lookups that had to bind a fresh plan (replan + weight
+/// prep). Steady-state shape-varying traffic keeps this bounded by the
+/// bucket-ladder size.
+pub fn plan_cache_misses() -> usize {
+    PLAN_CACHE_MISSES.load(Ordering::Relaxed)
+}
+
+/// Bound plans currently held across all live plan caches (a gauge:
+/// inserts increment, evictions and cache drops decrement).
+pub fn plan_cache_entries() -> usize {
+    PLAN_CACHE_ENTRIES.load(Ordering::Relaxed)
+}
+
+/// Bytes of zero padding written to round inputs up to their shape
+/// bucket (the cost of bucketed specialization, for the waste-vs-rebind
+/// trade-off in `eval --stats`).
+pub fn pad_waste_bytes() -> usize {
+    PAD_WASTE_BYTES.load(Ordering::Relaxed)
+}
+
+/// Record one plan-cache hit.
+pub(crate) fn count_plan_cache_hit() {
+    PLAN_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one plan-cache miss (a fresh bind).
+pub(crate) fn count_plan_cache_miss() {
+    PLAN_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Adjust the live plan-cache entry gauge by +/- `n`.
+pub(crate) fn plan_cache_entries_add(n: usize) {
+    PLAN_CACHE_ENTRIES.fetch_add(n, Ordering::Relaxed);
+}
+
+pub(crate) fn plan_cache_entries_sub(n: usize) {
+    PLAN_CACHE_ENTRIES.fetch_sub(n, Ordering::Relaxed);
+}
+
+/// Record `n` bytes of zero padding written to reach a shape bucket.
+pub(crate) fn count_pad_waste(n: usize) {
+    PAD_WASTE_BYTES.fetch_add(n, Ordering::Relaxed);
 }
 
 /// Standalone fused elementwise chains in the largest plan built.

@@ -39,6 +39,15 @@ pub trait Backend {
     /// Load an HLO-text artifact and prepare it for execution. Expensive
     /// work (PJRT compilation) may be deferred until first run.
     fn load_hlo(&self, path: &Path) -> Result<Box<dyn Executor>>;
+
+    /// Downcast hook: `Some` when this backend is the pure-Rust
+    /// interpreter. The serving coordinator uses it to route
+    /// shape-varying traffic through the interp-concrete plan cache
+    /// ([`interp::plan_cache::DynResident`]) while other backends keep
+    /// the eager bind-per-batch-size path.
+    fn as_interp(&self) -> Option<&interp::InterpBackend> {
+        None
+    }
 }
 
 /// A loaded module. The jax lowering uses `return_tuple=True`, so the
@@ -80,6 +89,24 @@ pub trait Executor {
         let _ = clustered;
         self.with_resident(n_dynamic, fixed)
     }
+
+    /// [`Executor::with_resident_clustered`] plus persistent
+    /// (cross-invocation state) slots: `persistent` lists dynamic
+    /// parameter positions whose buffers survive across calls — the
+    /// KV-cache class for autoregressive decode. Backends without state
+    /// slots reject a non-empty list.
+    fn with_resident_persistent(
+        &self,
+        n_dynamic: usize,
+        fixed: Arc<Vec<Tensor>>,
+        clustered: Option<Arc<ClusteredTensors>>,
+        persistent: &[usize],
+    ) -> Result<Box<dyn ResidentExecutor>> {
+        if !persistent.is_empty() {
+            bail!("{}: this backend has no persistent state slots", self.name());
+        }
+        self.with_resident_clustered(n_dynamic, fixed, clustered)
+    }
 }
 
 /// An executor with its weight inputs resident (uploaded / pre-bound).
@@ -93,6 +120,22 @@ pub trait ResidentExecutor {
     /// latency is steady-state. No-op for backends that compile eagerly.
     fn warmup(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// Overwrite rows `[row0, row0 + k)` of the persistent state slot at
+    /// dynamic parameter position `pos` (the KV-cache append). Only
+    /// meaningful on residents bound with persistent slots; the default
+    /// says so.
+    fn persist_rows(&self, pos: usize, row0: usize, t: &Tensor) -> Result<()> {
+        let _ = (pos, row0, t);
+        bail!("{}: this backend has no persistent state slots", self.name())
+    }
+
+    /// Copy out the leading `rows` rows of the persistent state slot at
+    /// dynamic parameter position `pos` (bucket migration and tests).
+    fn read_persistent(&self, pos: usize, rows: usize) -> Result<Tensor> {
+        let _ = (pos, rows);
+        bail!("{}: this backend has no persistent state slots", self.name())
     }
 }
 

@@ -102,10 +102,230 @@ pub fn vit_shaped_inputs(
     inputs
 }
 
+/// Weight-parameter text shared by the decode fixtures: either four
+/// dense `f32[d,d]` projections (`%wq %wk %wv %wo`) starting at
+/// parameter position `base`, or — `clustered` — the codebook-stack +
+/// u8-index dequant idiom the interpreter's LUT matmul recognizes
+/// (slice codebook row → reshape → convert u8→s32 → gather), one row
+/// per projection. Both spellings define the same `%wq..%wo` names, so
+/// the attention body below is identical.
+fn decode_weight_defs(d: usize, base: usize, clustered: bool) -> (Vec<String>, String) {
+    let names = ["q", "k", "v", "o"];
+    if !clustered {
+        let mut sig = Vec::new();
+        let mut body = String::new();
+        for (l, name) in names.iter().enumerate() {
+            sig.push(format!("w{name}: f32[{d},{d}]"));
+            body.push_str(&format!(
+                "  %w{name} = f32[{d},{d}]{{1,0}} parameter({})\n",
+                base + l
+            ));
+        }
+        (sig, body)
+    } else {
+        let mut sig = vec!["cbs: f32[4,256]".to_string()];
+        let mut body = format!("  %cbs = f32[4,256]{{1,0}} parameter({base})\n");
+        for (l, name) in names.iter().enumerate() {
+            sig.push(format!("i{name}: u8[{d},{d}]"));
+            body.push_str(&format!(
+                "  %i{name} = u8[{d},{d}]{{1,0}} parameter({})\n\
+                 \x20 %sl{name} = f32[1,256]{{1,0}} slice(%cbs), slice={{[{l}:{}], [0:256]}}\n\
+                 \x20 %row{name} = f32[256]{{0}} reshape(%sl{name})\n\
+                 \x20 %cv{name} = s32[{d},{d}]{{1,0}} convert(%i{name})\n\
+                 \x20 %w{name} = f32[{d},{d}]{{1,0}} gather(%row{name}, %cv{name}), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n",
+                base + 1 + l,
+                l + 1
+            ));
+        }
+        (sig, body)
+    }
+}
+
+const DECODE_REDUCERS: &str = "%max_f (m0: f32[], m1: f32[]) -> f32[] {\n  \
+     %m0 = f32[] parameter(0)\n  \
+     %m1 = f32[] parameter(1)\n  \
+     ROOT %rm = f32[] maximum(%m0, %m1)\n}\n\
+     %add_f (p0: f32[], p1: f32[]) -> f32[] {\n  \
+     %p0 = f32[] parameter(0)\n  \
+     %p1 = f32[] parameter(1)\n  \
+     ROOT %r = f32[] add(%p0, %p1)\n}\n";
+
+/// Single-layer causal self-attention prefill over `s` token slots of
+/// head dim `d`, with a *length mask*: `len` (a scalar f32 count) marks
+/// how many leading rows of `x` are real tokens; columns at or past
+/// `len` are masked to `-inf` before the softmax, so zero-padded tail
+/// rows cannot perturb valid rows — the property that makes bucketed
+/// pad-to-`s` execution bit-identical per valid row. Returns
+/// `(y, k, v)`: tanh-bounded attention output plus the key/value
+/// projections that seed a decode session's KV cache (rows at or past
+/// `len` of `k`/`v` are exact zeros, matching a fresh cache slot).
+///
+/// Parameters: `x: f32[s,d]`, `len: f32[]`, then the four projections
+/// ([`decode_weight_defs`]; `clustered` swaps them for the
+/// codebook/index dequant idiom, positions 2..).
+pub fn decode_prefill_hlo(s: usize, d: usize, clustered: bool) -> String {
+    let (wsig, wdefs) = decode_weight_defs(d, 2, clustered);
+    format!(
+        "HloModule decode_prefill_s{s}\n\
+         {DECODE_REDUCERS}\
+         ENTRY %main (x: f32[{s},{d}], len: f32[], {}) -> (f32[{s},{d}], f32[{s},{d}], f32[{s},{d}]) {{\n\
+         \x20 %x = f32[{s},{d}]{{1,0}} parameter(0)\n\
+         \x20 %len = f32[] parameter(1)\n\
+         {wdefs}\
+         \x20 %q = f32[{s},{d}]{{1,0}} dot(%x, %wq), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %k = f32[{s},{d}]{{1,0}} dot(%x, %wk), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %v = f32[{s},{d}]{{1,0}} dot(%x, %wv), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %sc = f32[{s},{s}]{{1,0}} dot(%q, %k), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n\
+         \x20 %ri = f32[{s},{s}]{{1,0}} iota(), iota_dimension=0\n\
+         \x20 %ci = f32[{s},{s}]{{1,0}} iota(), iota_dimension=1\n\
+         \x20 %causal = pred[{s},{s}]{{1,0}} compare(%ci, %ri), direction=LE\n\
+         \x20 %lenb = f32[{s},{s}]{{1,0}} broadcast(%len), dimensions={{}}\n\
+         \x20 %inlen = pred[{s},{s}]{{1,0}} compare(%ci, %lenb), direction=LT\n\
+         \x20 %valid = pred[{s},{s}]{{1,0}} and(%causal, %inlen)\n\
+         \x20 %ninf = f32[] constant(-inf)\n\
+         \x20 %ninfb = f32[{s},{s}]{{1,0}} broadcast(%ninf), dimensions={{}}\n\
+         \x20 %ms = f32[{s},{s}]{{1,0}} select(%valid, %sc, %ninfb)\n\
+         \x20 %mx = f32[{s}]{{0}} reduce(%ms, %ninf), dimensions={{1}}, to_apply=%max_f\n\
+         \x20 %mxb = f32[{s},{s}]{{1,0}} broadcast(%mx), dimensions={{0}}\n\
+         \x20 %cs = f32[{s},{s}]{{1,0}} subtract(%ms, %mxb)\n\
+         \x20 %ex = f32[{s},{s}]{{1,0}} exponential(%cs)\n\
+         \x20 %zero = f32[] constant(0)\n\
+         \x20 %sm = f32[{s}]{{0}} reduce(%ex, %zero), dimensions={{1}}, to_apply=%add_f\n\
+         \x20 %smb = f32[{s},{s}]{{1,0}} broadcast(%sm), dimensions={{0}}\n\
+         \x20 %p = f32[{s},{s}]{{1,0}} divide(%ex, %smb)\n\
+         \x20 %av = f32[{s},{d}]{{1,0}} dot(%p, %v), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %yo = f32[{s},{d}]{{1,0}} dot(%av, %wo), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %y = f32[{s},{d}]{{1,0}} tanh(%yo)\n\
+         \x20 ROOT %t = (f32[{s},{d}]{{1,0}}, f32[{s},{d}]{{1,0}}, f32[{s},{d}]{{1,0}}) tuple(%y, %k, %v)\n}}\n",
+        wsig.join(", ")
+    )
+}
+
+/// One KV-cached decode step against a bucket of `s` cache slots: the
+/// new token `x: f32[1,d]` attends over the `len` filled rows of the
+/// persistent key/value caches (`kc`/`vc`, parameter positions 2 and 3
+/// — bind them as persistent slots) plus itself. Scores over the cache
+/// are concatenated with the token's self-score at column `s`; columns
+/// in `[len, s)` (empty cache slots) are masked to `-inf`. Returns
+/// `(y, k_new, v_new)` — the caller appends `k_new`/`v_new` at row
+/// `len` via the persistent-slot row writes, never re-staging the
+/// prefix.
+///
+/// Parameters: `x: f32[1,d]`, `len: f32[]`, `kc: f32[s,d]`,
+/// `vc: f32[s,d]`, then the four projections (positions 4..; `clustered`
+/// as in [`decode_prefill_hlo`]).
+pub fn decode_step_hlo(s: usize, d: usize, clustered: bool) -> String {
+    let (wsig, wdefs) = decode_weight_defs(d, 4, clustered);
+    let s1 = s + 1;
+    format!(
+        "HloModule decode_step_s{s}\n\
+         {DECODE_REDUCERS}\
+         ENTRY %main (x: f32[1,{d}], len: f32[], kc: f32[{s},{d}], vc: f32[{s},{d}], {}) -> (f32[1,{d}], f32[1,{d}], f32[1,{d}]) {{\n\
+         \x20 %x = f32[1,{d}]{{1,0}} parameter(0)\n\
+         \x20 %len = f32[] parameter(1)\n\
+         \x20 %kc = f32[{s},{d}]{{1,0}} parameter(2)\n\
+         \x20 %vc = f32[{s},{d}]{{1,0}} parameter(3)\n\
+         {wdefs}\
+         \x20 %q = f32[1,{d}]{{1,0}} dot(%x, %wq), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %kn = f32[1,{d}]{{1,0}} dot(%x, %wk), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %vn = f32[1,{d}]{{1,0}} dot(%x, %wv), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %sc = f32[1,{s}]{{1,0}} dot(%q, %kc), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n\
+         \x20 %sn = f32[1,1]{{1,0}} dot(%q, %kn), lhs_contracting_dims={{1}}, rhs_contracting_dims={{1}}\n\
+         \x20 %s2 = f32[1,{s1}]{{1,0}} concatenate(%sc, %sn), dimensions={{1}}\n\
+         \x20 %ci = f32[1,{s1}]{{1,0}} iota(), iota_dimension=1\n\
+         \x20 %lenb = f32[1,{s1}]{{1,0}} broadcast(%len), dimensions={{}}\n\
+         \x20 %inlen = pred[1,{s1}]{{1,0}} compare(%ci, %lenb), direction=LT\n\
+         \x20 %spos = f32[] constant({s})\n\
+         \x20 %sposb = f32[1,{s1}]{{1,0}} broadcast(%spos), dimensions={{}}\n\
+         \x20 %isnew = pred[1,{s1}]{{1,0}} compare(%ci, %sposb), direction=EQ\n\
+         \x20 %valid = pred[1,{s1}]{{1,0}} or(%inlen, %isnew)\n\
+         \x20 %ninf = f32[] constant(-inf)\n\
+         \x20 %ninfb = f32[1,{s1}]{{1,0}} broadcast(%ninf), dimensions={{}}\n\
+         \x20 %ms = f32[1,{s1}]{{1,0}} select(%valid, %s2, %ninfb)\n\
+         \x20 %mx = f32[1]{{0}} reduce(%ms, %ninf), dimensions={{1}}, to_apply=%max_f\n\
+         \x20 %mxb = f32[1,{s1}]{{1,0}} broadcast(%mx), dimensions={{0}}\n\
+         \x20 %cs = f32[1,{s1}]{{1,0}} subtract(%ms, %mxb)\n\
+         \x20 %ex = f32[1,{s1}]{{1,0}} exponential(%cs)\n\
+         \x20 %zero = f32[] constant(0)\n\
+         \x20 %sm = f32[1]{{0}} reduce(%ex, %zero), dimensions={{1}}, to_apply=%add_f\n\
+         \x20 %smb = f32[1,{s1}]{{1,0}} broadcast(%sm), dimensions={{0}}\n\
+         \x20 %p = f32[1,{s1}]{{1,0}} divide(%ex, %smb)\n\
+         \x20 %vf = f32[{s1},{d}]{{1,0}} concatenate(%vc, %vn), dimensions={{0}}\n\
+         \x20 %av = f32[1,{d}]{{1,0}} dot(%p, %vf), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %yo = f32[1,{d}]{{1,0}} dot(%av, %wo), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n\
+         \x20 %y = f32[1,{d}]{{1,0}} tanh(%yo)\n\
+         \x20 ROOT %t = (f32[1,{d}]{{1,0}}, f32[1,{d}]{{1,0}}, f32[1,{d}]{{1,0}}) tuple(%y, %kn, %vn)\n}}\n",
+        wsig.join(", ")
+    )
+}
+
+/// The four dense decode projections `[wq, wk, wv, wo]`, each `[d, d]`
+/// with small deterministic values — the fixed-input list for the dense
+/// decode fixtures and the quantization source for the clustered ones.
+pub fn decode_weights(d: usize, rng: &mut crate::util::rng::Pcg32) -> Vec<crate::tensor::Tensor> {
+    (0..4)
+        .map(|_| {
+            let vals: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32 * 0.25).collect();
+            crate::tensor::Tensor::from_f32(vec![d, d], &vals).unwrap()
+        })
+        .collect()
+}
+
+/// Cluster the four decode projections (`weights` from
+/// [`decode_weights`]) into `clusters` centroids per layer — the
+/// metadata the interpreter's LUT matmul binds.
+pub fn decode_clustered(
+    weights: &[crate::tensor::Tensor],
+    clusters: usize,
+) -> crate::clustering::ClusteredTensors {
+    let names: Vec<String> = ["wq", "wk", "wv", "wo"].iter().map(|s| s.to_string()).collect();
+    let mut tensors = std::collections::HashMap::new();
+    for (n, w) in names.iter().zip(weights) {
+        tensors.insert(n.clone(), w.clone());
+    }
+    crate::clustering::Quantizer::new(clusters, crate::clustering::ClusterScheme::PerLayer)
+        .run(&names, &tensors)
+        .unwrap()
+}
+
+/// The fixed-input list matching the clustered decode signatures:
+/// codebook stack then the four index tensors, in `wq wk wv wo` order.
+pub fn decode_clustered_inputs(
+    ct: &crate::clustering::ClusteredTensors,
+) -> Vec<crate::tensor::Tensor> {
+    let mut inputs = vec![ct.codebooks.clone()];
+    for n in ["wq", "wk", "wv", "wo"] {
+        inputs.push(ct.indices[n].clone());
+    }
+    inputs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hlo::HloModule;
+
+    #[test]
+    fn decode_modules_parse() {
+        for clustered in [false, true] {
+            let prefill = HloModule::parse(&decode_prefill_hlo(8, 4, clustered)).unwrap();
+            let step = HloModule::parse(&decode_step_hlo(8, 4, clustered)).unwrap();
+            let extra = if clustered { 5 } else { 4 };
+            assert_eq!(prefill.parameters().unwrap().len(), 2 + extra);
+            let sp = step.parameters().unwrap();
+            assert_eq!(sp.len(), 4 + extra);
+            assert_eq!(sp[2].1.dims, vec![8, 4], "kc slot shape");
+            assert_eq!(sp[3].1.dims, vec![8, 4], "vc slot shape");
+        }
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        let w = decode_weights(4, &mut rng);
+        assert_eq!(w.len(), 4);
+        let ct = decode_clustered(&w, 8);
+        let fixed = decode_clustered_inputs(&ct);
+        assert_eq!(fixed.len(), 5);
+        assert_eq!(fixed[0].shape(), &[4, 256]);
+        assert_eq!(fixed[1].shape(), &[4, 4]);
+    }
 
     #[test]
     fn vit_shaped_module_parses() {

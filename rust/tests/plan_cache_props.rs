@@ -1,0 +1,306 @@
+//! Acceptance properties for the dynamic-shape plan cache (ISSUE 7):
+//!
+//! * bucketed pad-to-bucket execution is **bit-for-bit** equal (modulo
+//!   the sign of zero) to a fresh exact-shape bind, across dense and
+//!   clustered/LUT weights, fused and unfused plans, and thread budgets
+//!   1 and 4 — the length-masked attention fixtures make padded rows
+//!   inert and the ascending-k GEMM accumulation makes trailing zero
+//!   terms exact no-ops;
+//! * cache hit/miss counters move exactly with the distinct buckets
+//!   traffic touches, and warmed buckets never rebind;
+//! * LRU eviction respects the capacity knob, drops the evicted plan
+//!   (re-entry is a miss), and keeps pool-interned prepared weights
+//!   shared across the eviction;
+//! * KV-cached decode steps reproduce a from-scratch prefill over the
+//!   full token prefix (<= 8 ulps — the step interleaves exact-zero
+//!   empty-slot terms into the same accumulation order), with a
+//!   logarithmic number of step-module binds.
+
+use std::sync::Arc;
+
+use clusterformer::runtime::interp::decode::{DecodeModel, DecodeSession};
+use clusterformer::runtime::interp::plan_cache::{
+    fingerprint64, plan_cache_from_env, BucketLadder, DynResident, ExecSource, PlanCache,
+};
+use clusterformer::runtime::interp::{stats, InterpExecutor};
+use clusterformer::runtime::ThreadBudget;
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::fixtures::{
+    decode_clustered, decode_clustered_inputs, decode_prefill_hlo, decode_step_hlo, decode_weights,
+};
+use clusterformer::util::rng::Pcg32;
+
+/// The plan-cache counters are process-wide; serialize the tests in this
+/// binary so their before/after reads don't race.
+static COUNTER_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+const D: usize = 4;
+
+fn scalar(v: usize) -> Tensor {
+    Tensor::from_f32(vec![], &[v as f32]).unwrap()
+}
+
+fn random_tokens(n: usize, rng: &mut Pcg32) -> Tensor {
+    let vals: Vec<f32> = (0..n * D).map(|_| rng.normal() as f32 * 0.3).collect();
+    Tensor::from_f32(vec![n, D], &vals).unwrap()
+}
+
+/// Fixed weight inputs + clustered metadata for one decode-fixture
+/// configuration (deterministic: every call sees the same weights).
+fn decode_fixed(
+    clustered: bool,
+) -> (
+    Arc<Vec<Tensor>>,
+    Option<Arc<clusterformer::clustering::ClusteredTensors>>,
+) {
+    let mut rng = Pcg32::new(42);
+    let dense = decode_weights(D, &mut rng);
+    if clustered {
+        let ct = Arc::new(decode_clustered(&dense, 16));
+        (Arc::new(decode_clustered_inputs(&ct)), Some(ct))
+    } else {
+        (Arc::new(dense), None)
+    }
+}
+
+fn prefill_exec(s: usize, clustered: bool, fuse: bool, threads: usize) -> InterpExecutor {
+    InterpExecutor::load_text(
+        &decode_prefill_hlo(s, D, clustered),
+        &format!("props/prefill[{s}]"),
+    )
+    .unwrap()
+    .with_threads(ThreadBudget::new(threads))
+    .with_fusion(fuse)
+}
+
+/// Monotonic integer mapping of f32 (±0 coincide), for ulp distances.
+fn f32_ord(x: f32) -> i64 {
+    let i = x.to_bits() as i32 as i64;
+    if i < 0 {
+        (i32::MIN as i64) - i
+    } else {
+        i
+    }
+}
+
+fn max_ulp_diff(a: &Tensor, b: &Tensor) -> u64 {
+    let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(&b)
+        .map(|(&x, &y)| (f32_ord(x) - f32_ord(y)).unsigned_abs())
+        .max()
+        .unwrap_or(0)
+}
+
+#[test]
+fn bucketed_padded_run_matches_exact_shape_bind_bitwise() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ladder = BucketLadder::new(vec![4, 8, 16]);
+    // Dense and clustered/LUT weights, fused and unfused plans, thread
+    // budgets 1 and 4 — every combination must slice back the exact
+    // bind's bits.
+    for (clustered, fuse, threads) in [
+        (false, true, 1),
+        (false, false, 4),
+        (true, false, 1),
+        (true, true, 4),
+    ] {
+        let (fixed, clus) = decode_fixed(clustered);
+        let source: ExecSource =
+            Box::new(move |s| Ok(prefill_exec(s, clustered, fuse, threads)));
+        let dyn_res = DynResident::new(
+            &format!("props/bitwise-c{clustered}-f{fuse}-t{threads}"),
+            ladder.clone(),
+            2,
+            fixed.clone(),
+            clus.clone(),
+            source,
+        );
+        let mut rng = Pcg32::new(1000 + threads as u64);
+        let mut lens = vec![1, 3, 4, 5, 9, 16];
+        lens.extend((0..4).map(|_| 1 + (rng.normal().abs() * 5.0) as usize % 16));
+        for n in lens {
+            let x = random_tokens(n, &mut rng);
+            let got = dyn_res.run(&[x.clone(), scalar(n)]).unwrap();
+            let exact = prefill_exec(n, clustered, fuse, threads)
+                .resident(2, fixed.clone(), clus.clone())
+                .unwrap()
+                .run(&[x, scalar(n)])
+                .unwrap();
+            assert_eq!(got.len(), exact.len());
+            for (i, (g, e)) in got.iter().zip(&exact).enumerate() {
+                assert_eq!(g.shape(), e.shape(), "output {i} shape at n={n}");
+                assert_eq!(
+                    g.as_f32().unwrap(),
+                    e.as_f32().unwrap(),
+                    "output {i} must match the exact-shape bind bit-for-bit \
+                     (n={n}, clustered={clustered}, fuse={fuse}, threads={threads})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hit_miss_counters_track_buckets_and_warm_buckets_never_rebind() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !plan_cache_from_env() {
+        // `CLUSTERFORMER_PLAN_CACHE=0` lane: every lookup is a miss and
+        // nothing is retained — just pin that shape.
+        let (fixed, _) = decode_fixed(false);
+        let source: ExecSource = Box::new(move |s| Ok(prefill_exec(s, false, true, 1)));
+        let dyn_res = DynResident::new(
+            "props/disabled",
+            BucketLadder::new(vec![4, 8]),
+            2,
+            fixed,
+            None,
+            source,
+        );
+        let mut rng = Pcg32::new(2);
+        let (h0, m0) = (stats::plan_cache_hits(), stats::plan_cache_misses());
+        for n in [3, 3, 4] {
+            dyn_res.run(&[random_tokens(n, &mut rng), scalar(n)]).unwrap();
+        }
+        assert_eq!(stats::plan_cache_hits(), h0, "disabled cache never hits");
+        assert_eq!(stats::plan_cache_misses(), m0 + 3, "disabled cache always rebinds");
+        assert_eq!(dyn_res.cache().len(), 0, "disabled cache retains nothing");
+        return;
+    }
+    let (fixed, _) = decode_fixed(false);
+    let source: ExecSource = Box::new(move |s| Ok(prefill_exec(s, false, true, 1)));
+    let dyn_res = DynResident::new(
+        "props/counters",
+        BucketLadder::new(vec![4, 8]),
+        2,
+        fixed,
+        None,
+        source,
+    );
+    let mut rng = Pcg32::new(2);
+    let h0 = stats::plan_cache_hits();
+    let m0 = stats::plan_cache_misses();
+    let e0 = stats::plan_cache_entries();
+    // Lengths 3 and 4 share bucket 4; length 5 opens bucket 8; the
+    // repeat at 3 is warm. Two buckets => exactly two misses.
+    for n in [3, 4, 5, 3] {
+        dyn_res.run(&[random_tokens(n, &mut rng), scalar(n)]).unwrap();
+    }
+    assert_eq!(
+        stats::plan_cache_misses(),
+        m0 + 2,
+        "misses must equal the distinct buckets touched"
+    );
+    assert_eq!(stats::plan_cache_hits(), h0 + 2);
+    assert_eq!(stats::plan_cache_entries(), e0 + 2, "entries gauge tracks bound plans");
+    assert_eq!(dyn_res.cache().len(), 2);
+
+    // Steady state: warmed buckets serve any shape-varying traffic with
+    // zero rebinds.
+    let m_warm = stats::plan_cache_misses();
+    for n in [1, 2, 3, 4, 5, 6, 7, 8] {
+        dyn_res.run(&[random_tokens(n, &mut rng), scalar(n)]).unwrap();
+    }
+    assert_eq!(
+        stats::plan_cache_misses(),
+        m_warm,
+        "no rebinds after warmup"
+    );
+
+    // Dropping the resident releases its entries from the gauge.
+    drop(dyn_res);
+    assert_eq!(stats::plan_cache_entries(), e0);
+}
+
+#[test]
+fn lru_eviction_respects_cap_and_keeps_pooled_weights() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !plan_cache_from_env() {
+        return; // nothing is retained, so nothing to evict
+    }
+    let (fixed, _) = decode_fixed(false);
+    let fp = fingerprint64("props/evict");
+    let cache = PlanCache::with_cap("props/evict", 2);
+    let bind = |s: usize| {
+        let exe = prefill_exec(s, false, true, 1);
+        let sig = exe.parameter_dims().unwrap()[..2].to_vec();
+        let fixed = fixed.clone();
+        cache
+            .get_or_bind(fp, &sig, move || exe.resident(2, fixed, None))
+            .unwrap()
+    };
+    let m0 = stats::plan_cache_misses();
+    let h0 = stats::plan_cache_hits();
+    let kept_weights = bind(4).weight_cache();
+    bind(8);
+    assert_eq!(cache.len(), 2);
+    bind(4); // refresh 4: LRU is now 8
+    bind(16); // past cap: evicts 8
+    assert_eq!(cache.len(), 2, "capacity bounds the cache");
+    assert_eq!(stats::plan_cache_misses(), m0 + 3);
+    assert_eq!(stats::plan_cache_hits(), h0 + 1);
+    // Re-entering the evicted bucket is a miss (its plan is gone) ...
+    bind(8);
+    assert_eq!(stats::plan_cache_misses(), m0 + 4);
+    assert_eq!(cache.len(), 2);
+    // ... and bucket 4, evicted by that rebind, re-binds onto the SAME
+    // pool-interned prepared weights: eviction drops plans and arenas,
+    // never the shared weight state.
+    let rebound = bind(4);
+    assert!(
+        Arc::ptr_eq(&kept_weights, &rebound.weight_cache()),
+        "prepared weights must stay pool-shared across eviction"
+    );
+}
+
+#[test]
+fn kv_cached_decode_steps_match_from_scratch_prefill() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for clustered in [false, true] {
+        let (fixed, clus) = decode_fixed(clustered);
+        let model = DecodeModel {
+            label: format!("props/decode-{}", if clustered { "lut" } else { "dense" }),
+            dim: D,
+            weights: fixed.clone(),
+            clustered: clus.clone(),
+            prefill_hlo: Box::new(move |s| decode_prefill_hlo(s, D, clustered)),
+            step_hlo: Box::new(move |s| decode_step_hlo(s, D, clustered)),
+            threads: ThreadBudget::new(1),
+        };
+        let mut session = DecodeSession::new(model, BucketLadder::new(vec![4, 8, 16, 32]));
+
+        let mut rng = Pcg32::new(77);
+        let tokens: Vec<Tensor> = (0..12).map(|_| random_tokens(1, &mut rng)).collect();
+        let prompt_refs: Vec<&Tensor> = tokens[..5].iter().collect();
+        let prompt = Tensor::concat_rows(&prompt_refs).unwrap();
+        session.prefill(&prompt).unwrap();
+        assert_eq!(session.len(), 5);
+
+        for t in 5..tokens.len() {
+            let y = session.step(&tokens[t]).unwrap();
+            // Reference: a fresh exact-shape prefill over the whole
+            // prefix, no cache, no padding.
+            let n = t + 1;
+            let prefix_refs: Vec<&Tensor> = tokens[..n].iter().collect();
+            let prefix = Tensor::concat_rows(&prefix_refs).unwrap();
+            let reference = prefill_exec(n, clustered, true, 1)
+                .resident(2, fixed.clone(), clus.clone())
+                .unwrap()
+                .run(&[prefix, scalar(n)])
+                .unwrap();
+            let y_ref = reference[0].slice_rows(n - 1, n).unwrap();
+            let ulps = max_ulp_diff(&y, &y_ref);
+            assert!(
+                ulps <= 8,
+                "step {t} diverged from the from-scratch prefill by {ulps} ulps \
+                 (clustered={clustered})"
+            );
+        }
+        assert_eq!(session.len(), tokens.len());
+        // 5-token prefill + 7 steps crosses buckets 8 -> 16 once: the
+        // seed bind plus one migration. Binds stay logarithmic, never
+        // per-token.
+        assert_eq!(session.rebinds(), 2, "clustered={clustered}");
+    }
+}
