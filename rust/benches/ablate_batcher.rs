@@ -1,23 +1,275 @@
 //! Ablation A1: dynamic-batcher policy (size-only vs deadline vs
 //! adaptive) under low/medium/high Poisson load, measured end-to-end on
-//! the real serving stack.
+//! the real serving stack (needs prebuilt `artifacts/`; skips visibly
+//! without them).
+//!
+//! Ablation A2 (always runs, artifact-free): **overload behavior with
+//! and without SLO degradation**. A synthetic two-variant server whose
+//! primary is slowed by a deterministic injected fault (known capacity)
+//! is driven at 0.5x/1x/2x/4x capacity; for each point we measure
+//! goodput, shed rate, SLO attainment, and the variant mix, with
+//! degradation off vs on (fallback to the cheap clustered variant).
+//! Emits machine-readable `BENCH_overload.json` and asserts that
+//! degradation improves SLO attainment at the top overload point.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use clusterformer::clustering::ClusterScheme;
 use clusterformer::coordinator::{
-    BatchPolicy, BatcherConfig, Server, ServerConfig,
+    faults, BatchPolicy, BatcherConfig, ReplyStatus, ResilienceConfig, Server,
+    ServerConfig, SubmitError,
 };
 use clusterformer::model::{Registry, VariantKey};
-use clusterformer::tensor::Tensor;
+use clusterformer::runtime::{BackendKind, ThreadBudget};
+use clusterformer::testing::synthetic::SyntheticServing;
 use clusterformer::util::rng::Pcg32;
 use clusterformer::util::stats::percentile_sorted;
 
 const DURATION_S: f64 = 4.0;
 
-fn main() -> anyhow::Result<()> {
-    let registry = Registry::load("artifacts")?;
+/// Injected per-batch execution time of the overload primary: with
+/// max_batch 4 the primary's capacity is ~4/SLOW_MS req/ms.
+const SLOW_MS: u64 = 10;
+const OV_MAX_BATCH: usize = 4;
+/// End-to-end latency a request must beat to "attain the SLO" in A2.
+const ATTAIN_MS: f64 = 50.0;
+/// Seconds of offered load per A2 point.
+const OV_DURATION_S: f64 = 1.2;
+
+struct OverloadPoint {
+    degrade: bool,
+    mult: f64,
+    offered_rate: f64,
+    submitted: usize,
+    completed: usize,
+    shed: usize,
+    timed_out: usize,
+    failed: usize,
+    goodput: f64,
+    attainment: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    primary_served: usize,
+    fallback_served: usize,
+}
+
+fn overload_point(
+    synth: &SyntheticServing,
+    degrade: bool,
+    mult: f64,
+    capacity: f64,
+) -> anyhow::Result<OverloadPoint> {
+    let primary = synth.baseline_target();
+    let fallback = synth.clustered_target();
+    let mut resilience = ResilienceConfig {
+        queue_bound: 64,
+        window: Duration::from_millis(100),
+        hold: Duration::from_millis(50),
+        ..ResilienceConfig::default()
+    };
+    if degrade {
+        resilience.slo = Some(Duration::from_millis(20));
+        resilience.fallback.insert(primary.clone(), fallback.clone());
+        resilience.accuracy.insert(primary.clone(), 0.9);
+        resilience.accuracy.insert(fallback.clone(), 0.8);
+    }
+    let server = Server::start(ServerConfig {
+        artifacts_dir: synth.dir.clone(),
+        targets: vec![
+            (synth.model.clone(), VariantKey::Baseline),
+            (synth.model.clone(), SyntheticServing::clustered_key()),
+        ],
+        backend: BackendKind::Interp,
+        batcher: BatcherConfig {
+            max_batch: OV_MAX_BATCH,
+            max_wait: Duration::from_millis(2),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 100_000,
+        },
+        threads: ThreadBudget::new(2),
+        resilience,
+    })?;
+
+    let offered_rate = capacity * mult;
+    let router = server.router.clone();
+    let mut pending = Vec::new();
+    let mut shed = 0usize;
+    let mut submitted = 0usize;
+    let t0 = Instant::now();
+    // Deficit-paced open loop: submit whatever the offered rate says
+    // should have been sent by now, then sleep briefly — accurate at
+    // rates well above the sleep granularity.
+    loop {
+        let elapsed = t0.elapsed().as_secs_f64();
+        if elapsed >= OV_DURATION_S {
+            break;
+        }
+        let due = (elapsed * offered_rate) as usize;
+        while submitted < due {
+            let img = SyntheticServing::image(submitted as u64 + 1);
+            match router.submit(&primary, img) {
+                Ok((_, rx)) => pending.push(rx),
+                Err(SubmitError::Overloaded { .. }) => shed += 1,
+                Err(e) => return Err(e.into()),
+            }
+            submitted += 1;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    let mut lat_ms: Vec<f64> = Vec::new();
+    let mut completed = 0usize;
+    let mut timed_out = 0usize;
+    let mut failed = 0usize;
+    let mut primary_served = 0usize;
+    let mut fallback_served = 0usize;
+    for rx in &pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every admitted request must get a terminal reply");
+        match resp.status {
+            ReplyStatus::Completed => {
+                completed += 1;
+                lat_ms.push(resp.latency_s * 1e3);
+                if resp.served_by.starts_with(primary.as_str()) {
+                    primary_served += 1;
+                } else {
+                    fallback_served += 1;
+                }
+            }
+            ReplyStatus::Timeout => timed_out += 1,
+            ReplyStatus::Overloaded => shed += 1,
+            ReplyStatus::Failed => failed += 1,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let attained = lat_ms.iter().filter(|&&l| l <= ATTAIN_MS).count();
+    let total = submitted.max(1);
+    let pctl = |q| if lat_ms.is_empty() { 0.0 } else { percentile_sorted(&lat_ms, q) };
+    Ok(OverloadPoint {
+        degrade,
+        mult,
+        offered_rate,
+        submitted,
+        completed,
+        shed,
+        timed_out,
+        failed,
+        goodput: completed as f64 / wall,
+        attainment: attained as f64 / total as f64,
+        p50_ms: pctl(0.5),
+        p95_ms: pctl(0.95),
+        primary_served,
+        fallback_served,
+    })
+}
+
+fn overload_sweep() -> anyhow::Result<()> {
+    println!(
+        "# A2 — overload & SLO degradation (synthetic, primary slowed {SLOW_MS}ms/batch)\n"
+    );
+    let synth = SyntheticServing::build("ovbench");
+    // Deterministic capacity: the primary sleeps SLOW_MS per batch, so
+    // with batches of up to OV_MAX_BATCH it serves ~this many req/s.
+    faults::force_faults(&format!("slow:{}:{SLOW_MS}ms", synth.baseline_target()));
+    let capacity = OV_MAX_BATCH as f64 * 1000.0 / SLOW_MS as f64;
+    println!(
+        "primary capacity ~{capacity:.0} req/s; SLO attainment = completed within {ATTAIN_MS}ms\n"
+    );
+    println!("| degrade | offered | goodput | shed% | timeout% | attainment | p50 | p95 | primary/fallback |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let mut points = Vec::new();
+    for degrade in [false, true] {
+        for mult in [0.5, 1.0, 2.0, 4.0] {
+            let p = overload_point(&synth, degrade, mult, capacity)?;
+            println!(
+                "| {} | {:.1}x ({:.0}/s) | {:.0}/s | {:.1}% | {:.1}% | {:.3} | {:.1}ms | {:.1}ms | {}/{} |",
+                if p.degrade { "on" } else { "off" },
+                p.mult,
+                p.offered_rate,
+                p.goodput,
+                100.0 * p.shed as f64 / p.submitted.max(1) as f64,
+                100.0 * p.timed_out as f64 / p.submitted.max(1) as f64,
+                p.attainment,
+                p.p50_ms,
+                p.p95_ms,
+                p.primary_served,
+                p.fallback_served,
+            );
+            points.push(p);
+        }
+    }
+    faults::clear_faults(&synth.baseline_target());
+    synth.cleanup();
+
+    let mut points_json = String::new();
+    for p in &points {
+        if !points_json.is_empty() {
+            points_json.push_str(",\n    ");
+        }
+        points_json.push_str(&format!(
+            "{{\"degrade\": {}, \"overload\": {}, \"offered_rate\": {:.1}, \
+             \"submitted\": {}, \"completed\": {}, \"shed\": {}, \"timed_out\": {}, \
+             \"failed\": {}, \"goodput\": {:.1}, \"slo_attainment\": {:.4}, \
+             \"p50_ms\": {:.2}, \"p95_ms\": {:.2}, \
+             \"served_primary\": {}, \"served_fallback\": {}}}",
+            p.degrade,
+            p.mult,
+            p.offered_rate,
+            p.submitted,
+            p.completed,
+            p.shed,
+            p.timed_out,
+            p.failed,
+            p.goodput,
+            p.attainment,
+            p.p50_ms,
+            p.p95_ms,
+            p.primary_served,
+            p.fallback_served,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"overload\",\n  \"slow_ms\": {SLOW_MS},\n  \
+         \"capacity_rps\": {capacity:.1},\n  \"attain_ms\": {ATTAIN_MS},\n  \
+         \"points\": [\n    {points_json}\n  ]\n}}\n"
+    );
+    match std::fs::write("BENCH_overload.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_overload.json"),
+        Err(e) => println!("\ncould not write BENCH_overload.json: {e}"),
+    }
+
+    // The tentpole claim: at the top overload point, degradation must
+    // improve SLO attainment over serving the slow primary alone.
+    let top_off = points
+        .iter()
+        .find(|p| !p.degrade && p.mult == 4.0)
+        .expect("off point");
+    let top_on = points
+        .iter()
+        .find(|p| p.degrade && p.mult == 4.0)
+        .expect("on point");
+    println!(
+        "\nSLO attainment at 4x overload: off={:.3} on={:.3} — {}",
+        top_off.attainment,
+        top_on.attainment,
+        if top_on.attainment >= top_off.attainment { "IMPROVED (or equal)" } else { "REGRESSED" }
+    );
+    assert!(
+        top_on.attainment >= top_off.attainment,
+        "degradation must not reduce SLO attainment under overload \
+         (on={:.3} off={:.3})",
+        top_on.attainment,
+        top_off.attainment
+    );
+    Ok(())
+}
+
+fn a1_policy_ablation(registry: Registry) -> anyhow::Result<()> {
     let (images, _) = registry.val_set()?;
     println!("# A1 — batcher policy ablation (vit/perlayer_64, {DURATION_S}s per point)\n");
     println!("| policy | rate | p50 | p99 | throughput | mean batch |");
@@ -41,6 +293,7 @@ fn main() -> anyhow::Result<()> {
                 queue_cap: 4096,
             },
             threads: clusterformer::runtime::ThreadBudget::from_env(),
+            resilience: Default::default(),
         })?;
         let router = Arc::new(server.router.clone());
         for rate in [15.0, 60.0, 150.0] {
@@ -99,6 +352,14 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-// keep Tensor import used in signature position
-#[allow(unused)]
-fn _t(_: &Tensor) {}
+fn main() -> anyhow::Result<()> {
+    overload_sweep()?;
+    println!();
+    match Registry::load("artifacts") {
+        Ok(registry) => a1_policy_ablation(registry)?,
+        Err(_) => println!(
+            "skipping A1 policy ablation: no artifacts/ (run `make artifacts`)"
+        ),
+    }
+    Ok(())
+}

@@ -143,6 +143,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 64,
         },
         threads: clusterformer::runtime::ThreadBudget::from_env(),
+        resilience: Default::default(),
     })?;
     let mut through = Vec::new();
     for _ in 0..20 {

@@ -57,6 +57,7 @@ pub struct DynamicBatcher {
     executor_busy: bool,
     pub rejected: u64,
     pub accepted: u64,
+    pub expired: u64,
 }
 
 impl DynamicBatcher {
@@ -67,6 +68,7 @@ impl DynamicBatcher {
             executor_busy: false,
             rejected: 0,
             accepted: 0,
+            expired: 0,
         }
     }
 
@@ -94,7 +96,29 @@ impl DynamicBatcher {
         self.executor_busy = busy;
     }
 
+    /// Remove and return every request whose deadline has passed, in
+    /// FIFO order. Called by the worker before cutting a batch so dead
+    /// work is never dispatched — the caller replies `Timeout` to each.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<ClassRequest> {
+        if self.queue.iter().all(|r| !r.expired(now)) {
+            return Vec::new(); // common case: nothing to reap, no churn
+        }
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        let mut dead = Vec::new();
+        for req in self.queue.drain(..) {
+            if req.expired(now) {
+                dead.push(req);
+            } else {
+                kept.push_back(req);
+            }
+        }
+        self.queue = kept;
+        self.expired += dead.len() as u64;
+        dead
+    }
+
     /// Decide whether to cut a batch *now*; pops and returns it (FIFO).
+    /// Callers reap expired requests first ([`Self::take_expired`]).
     pub fn next_batch(&mut self, now: Instant) -> Option<Vec<ClassRequest>> {
         if self.queue.is_empty() {
             return None;
@@ -126,19 +150,29 @@ impl DynamicBatcher {
         out
     }
 
-    /// Time until the oldest request's deadline (for the worker's park
-    /// timeout); `None` when no pending deadline can cut a batch — the
-    /// queue is empty, or the policy is [`BatchPolicy::SizeOnly`], where
-    /// only arrivals (never the clock) change what [`Self::next_batch`]
-    /// returns. A `None` lets the worker park until the next message
-    /// instead of waking spuriously every `max_wait`.
+    /// Time until the next clock event the worker must wake for: the
+    /// oldest request's batch deadline (deadline policies) or the
+    /// earliest per-request expiry (any policy — an expired request
+    /// must get its `Timeout` reply promptly even under `SizeOnly`).
+    /// `None` when no pending clock event can change what
+    /// [`Self::next_batch`] / [`Self::take_expired`] return, letting
+    /// the worker park until the next message instead of waking
+    /// spuriously every `max_wait`.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        if self.config.policy == BatchPolicy::SizeOnly {
-            return None;
+        let mut wake: Option<Duration> = None;
+        if self.config.policy != BatchPolicy::SizeOnly {
+            if let Some(oldest) = self.queue.front() {
+                let waited = now.duration_since(oldest.enqueued);
+                wake = Some(self.config.max_wait.saturating_sub(waited));
+            }
         }
-        let oldest = self.queue.front()?;
-        let waited = now.duration_since(oldest.enqueued);
-        Some(self.config.max_wait.saturating_sub(waited))
+        for req in &self.queue {
+            if let Some(d) = req.deadline {
+                let left = d.saturating_duration_since(now);
+                wake = Some(wake.map_or(left, |w| w.min(left)));
+            }
+        }
+        wake
     }
 }
 
@@ -155,8 +189,16 @@ mod tests {
             id,
             image: Tensor::zeros(Dtype::F32, vec![2, 2, 3]),
             enqueued: at,
+            deadline: None,
             reply: tx,
+            ticket: None,
         }
+    }
+
+    fn req_deadline(id: u64, at: Instant, deadline: Instant) -> ClassRequest {
+        let mut r = req(id, at);
+        r.deadline = Some(deadline);
+        r
     }
 
     fn cfg(max_batch: usize, wait_ms: u64, policy: BatchPolicy) -> BatcherConfig {
@@ -225,6 +267,41 @@ mod tests {
         let mut a = DynamicBatcher::new(cfg(4, 10, BatchPolicy::Adaptive));
         a.push(req(0, t0)).unwrap();
         assert!(a.time_to_deadline(t0).is_some());
+    }
+
+    #[test]
+    fn take_expired_reaps_only_dead_requests() {
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(8, 100, BatchPolicy::SizeOnly));
+        b.push(req(0, t0)).unwrap(); // no deadline: never expires
+        b.push(req_deadline(1, t0, t0 + Duration::from_millis(5))).unwrap();
+        b.push(req_deadline(2, t0, t0 + Duration::from_millis(50))).unwrap();
+        assert!(b.take_expired(t0).is_empty());
+        let dead = b.take_expired(t0 + Duration::from_millis(10));
+        assert_eq!(dead.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(b.queue_len(), 2);
+        assert_eq!(b.expired, 1);
+        // survivors keep FIFO order
+        let dead = b.take_expired(t0 + Duration::from_millis(60));
+        assert_eq!(dead.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn request_deadline_wakes_sizeonly_worker() {
+        // SizeOnly has no batch deadline, but a queued request with an
+        // expiry must still produce a park timeout so the worker wakes
+        // to reap it.
+        let t0 = Instant::now();
+        let mut b = DynamicBatcher::new(cfg(4, 10, BatchPolicy::SizeOnly));
+        b.push(req(0, t0)).unwrap();
+        assert_eq!(b.time_to_deadline(t0), None);
+        b.push(req_deadline(1, t0, t0 + Duration::from_millis(30))).unwrap();
+        assert_eq!(b.time_to_deadline(t0), Some(Duration::from_millis(30)));
+        // under a deadline policy, the sooner of batch-wait and expiry wins
+        let mut d = DynamicBatcher::new(cfg(4, 10, BatchPolicy::Deadline));
+        d.push(req_deadline(0, t0, t0 + Duration::from_millis(3))).unwrap();
+        assert_eq!(d.time_to_deadline(t0), Some(Duration::from_millis(3)));
     }
 
     #[test]

@@ -112,7 +112,7 @@ pub fn evaluate(
     let total = images.shape()[0];
     let n = if n == 0 { total } else { n.min(total) };
     let exec = VariantExecutor::load(backend, registry, model, key)?;
-    let batch = *exec.batch_sizes.last().unwrap();
+    let batch = exec.max_batch_size();
 
     let before = MemStats::snapshot();
     let t0 = Instant::now();

@@ -1,0 +1,197 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The supervision/restart/shedding paths in this module's siblings are
+//! impossible to test reliably by waiting for real faults, so the worker
+//! hot path carries one cheap hook ([`before_batch`]) that consults a
+//! process-wide fault plan:
+//!
+//! ```text
+//! CLUSTERFORMER_FAULTS=panic:vit/perlayer_64:3,slow:vit/baseline:50ms
+//! ```
+//!
+//! * `panic:<label>:<n>` — the worker serving `<label>` panics while
+//!   executing its `<n>`-th batch (1-based, counted process-wide across
+//!   worker restarts, so the rule fires exactly once).
+//! * `slow:<label>:<dur>` — every batch for `<label>` sleeps `<dur>`
+//!   before executing (`us`/`ms`/`s` suffixes), emulating a heavy model
+//!   or a straggling accelerator.
+//!
+//! The env var is parsed once on first use; tests and benches inject
+//! rules programmatically through the `#[doc(hidden)]` [`force_faults`] /
+//! [`clear_faults`] hooks, which replace only the labels they mention —
+//! concurrently running tests using distinct labels never interfere.
+//! Malformed entries warn and are skipped (a typo'd debug knob must not
+//! take the server down).
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Per-label fault state.
+#[derive(Debug, Default, Clone)]
+struct LabelFaults {
+    /// Batch ordinals (1-based, cumulative for the label) at which the
+    /// worker panics. Each fires at most once.
+    panic_at: Vec<u64>,
+    /// Sleep applied before every batch while installed.
+    slow: Option<Duration>,
+    /// Batches seen so far for this label.
+    batches: u64,
+}
+
+fn plan() -> &'static Mutex<HashMap<String, LabelFaults>> {
+    static PLAN: OnceLock<Mutex<HashMap<String, LabelFaults>>> = OnceLock::new();
+    PLAN.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(spec) = std::env::var("CLUSTERFORMER_FAULTS") {
+            if !spec.trim().is_empty() {
+                crate::log_info!("fault injection active: CLUSTERFORMER_FAULTS={spec}");
+                merge_spec(&mut map, &spec);
+            }
+        }
+        Mutex::new(map)
+    })
+}
+
+/// Parse `dur` with a `us`/`ms`/`s` suffix (e.g. "50ms").
+fn parse_duration(s: &str) -> Option<Duration> {
+    let (num, mul_us) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1_000.0)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1.0)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1_000_000.0)
+    } else {
+        return None;
+    };
+    let v: f64 = num.parse().ok()?;
+    if v < 0.0 || !v.is_finite() {
+        return None;
+    }
+    Some(Duration::from_micros((v * mul_us) as u64))
+}
+
+/// Apply `spec` entries onto `map`. Labels mentioned in `spec` have
+/// their previous rules (and batch counter) replaced.
+fn merge_spec(map: &mut HashMap<String, LabelFaults>, spec: &str) {
+    let mut touched: Vec<String> = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let mut parts = entry.splitn(3, ':');
+        let (kind, label, arg) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(k), Some(l), Some(a)) => (k, l, a),
+            _ => {
+                crate::log_warn!("CLUSTERFORMER_FAULTS: ignoring malformed entry {entry:?}");
+                continue;
+            }
+        };
+        if !touched.iter().any(|t| t == label) {
+            map.remove(label);
+            touched.push(label.to_string());
+        }
+        let lf = map.entry(label.to_string()).or_default();
+        match kind {
+            "panic" => match arg.parse::<u64>() {
+                Ok(n) if n >= 1 => lf.panic_at.push(n),
+                _ => crate::log_warn!(
+                    "CLUSTERFORMER_FAULTS: panic ordinal must be >= 1, got {arg:?}"
+                ),
+            },
+            "slow" => match parse_duration(arg) {
+                Some(d) => lf.slow = Some(d),
+                None => crate::log_warn!(
+                    "CLUSTERFORMER_FAULTS: bad duration {arg:?} (want e.g. 50ms)"
+                ),
+            },
+            _ => crate::log_warn!(
+                "CLUSTERFORMER_FAULTS: unknown fault kind {kind:?} in {entry:?}"
+            ),
+        }
+    }
+}
+
+/// Worker hook, called once per batch about to execute for `label`.
+/// May sleep (slow fault) and may panic (panic fault) — the panic is
+/// what the supervisor's `catch_unwind` is tested against.
+pub(crate) fn before_batch(label: &str) {
+    // Fast path: completely inert unless a rule targets this label.
+    let (slow, do_panic, ordinal) = {
+        let mut map = plan().lock().unwrap_or_else(|e| e.into_inner());
+        let Some(lf) = map.get_mut(label) else { return };
+        lf.batches += 1;
+        (lf.slow, lf.panic_at.contains(&lf.batches), lf.batches)
+    };
+    if let Some(d) = slow {
+        std::thread::sleep(d);
+    }
+    if do_panic {
+        panic!("injected fault: panic at batch {ordinal} of {label}");
+    }
+}
+
+/// Install fault rules programmatically (tests/benches). Only the labels
+/// named in `spec` are replaced; rules for other labels are untouched.
+#[doc(hidden)]
+pub fn force_faults(spec: &str) {
+    let mut map = plan().lock().unwrap_or_else(|e| e.into_inner());
+    merge_spec(&mut map, spec);
+}
+
+/// Remove every rule (and the batch counter) for `label`.
+#[doc(hidden)]
+pub fn clear_faults(label: &str) {
+    let mut map = plan().lock().unwrap_or_else(|e| e.into_inner());
+    map.remove(label);
+}
+
+/// The raw `CLUSTERFORMER_FAULTS` value, if set — lets env-gated tests
+/// detect whether CI pointed an injector at their label.
+#[doc(hidden)]
+pub fn env_spec() -> Option<String> {
+    std::env::var("CLUSTERFORMER_FAULTS").ok().filter(|s| !s.trim().is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_durations() {
+        assert_eq!(parse_duration("50ms"), Some(Duration::from_millis(50)));
+        assert_eq!(parse_duration("2s"), Some(Duration::from_secs(2)));
+        assert_eq!(parse_duration("250us"), Some(Duration::from_micros(250)));
+        assert_eq!(parse_duration("1.5ms"), Some(Duration::from_micros(1500)));
+        assert_eq!(parse_duration("oops"), None);
+        assert_eq!(parse_duration("-3ms"), None);
+    }
+
+    #[test]
+    fn merge_replaces_only_named_labels() {
+        let mut map = HashMap::new();
+        merge_spec(&mut map, "panic:a/x:3,slow:b/y:10ms");
+        assert_eq!(map["a/x"].panic_at, vec![3]);
+        assert_eq!(map["b/y"].slow, Some(Duration::from_millis(10)));
+        // replacing a/x leaves b/y alone; two rules on one label stack
+        merge_spec(&mut map, "panic:a/x:5,panic:a/x:9");
+        assert_eq!(map["a/x"].panic_at, vec![5, 9]);
+        assert_eq!(map["b/y"].slow, Some(Duration::from_millis(10)));
+        // malformed entries are skipped without clearing valid ones
+        merge_spec(&mut map, "panic:b/y,wat:b/y:1ms");
+        assert_eq!(map["b/y"].slow, Some(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn panic_rule_fires_once_at_ordinal() {
+        // Use a label no other test (or env) touches.
+        force_faults("panic:faults-unit/self:2");
+        before_batch("faults-unit/self"); // batch 1: no fault
+        let caught = std::panic::catch_unwind(|| before_batch("faults-unit/self"));
+        assert!(caught.is_err(), "batch 2 must panic");
+        before_batch("faults-unit/self"); // batch 3: rule already passed
+        clear_faults("faults-unit/self");
+        before_batch("faults-unit/self"); // cleared: inert
+    }
+}

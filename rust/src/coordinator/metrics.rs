@@ -7,10 +7,17 @@
 //! that touches metrics afterwards — the histograms stay valid (each
 //! record is a few independent integer bumps), so the data is taken
 //! as-is.
+//!
+//! Besides the cumulative histograms, each variant keeps a **recent**
+//! queue-wait window (two rotating [`LogHistogram`]s, so a reading always
+//! covers between one and two window lengths of samples). The router's
+//! SLO-aware degradation reads its p95 through
+//! [`Metrics::recent_queue_p95_us`]: a cumulative histogram would never
+//! recover after a burst, so pressure could never "clear".
 
 use std::collections::HashMap;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::stats::LogHistogram;
 
@@ -26,6 +33,23 @@ pub struct VariantMetrics {
     pub batches: u64,
     pub rejected: u64,
     pub batch_size_sum: u64,
+    /// Shed by the router's admission control (`Overloaded` replies).
+    pub shed: u64,
+    /// Dropped before dispatch because their deadline expired.
+    pub timed_out: u64,
+    /// Requests aimed at this variant that were rerouted to its cheaper
+    /// fallback under SLO pressure.
+    pub degraded: u64,
+    /// In-flight requests failed by the supervisor after a worker died,
+    /// plus per-batch execution errors.
+    pub failed: u64,
+    /// Worker panics caught by the supervisor.
+    pub worker_panics: u64,
+    /// Supervisor-initiated worker restarts.
+    pub worker_restarts: u64,
+    /// p95 of the *recent* queue-wait window in microseconds (computed
+    /// at snapshot time; the degradation trigger).
+    pub queue_p95_recent_us: f64,
 }
 
 impl VariantMetrics {
@@ -57,21 +81,27 @@ impl MetricsSnapshot {
     /// Markdown report (used by `serve` CLI and the e2e example).
     pub fn markdown(&self) -> String {
         let mut s = String::from(
-            "| variant | reqs | batches | mean batch | p50 lat | p99 lat | mean exec/batch | rejected |\n|---|---|---|---|---|---|---|---|\n",
+            "| variant | reqs | batches | mean batch | p50 lat | p99 lat | p95 queue | mean exec/batch | shed | timeout | degraded | failed | restarts | rejected |\n|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
         );
         let mut keys: Vec<_> = self.per_variant.keys().collect();
         keys.sort();
         for k in keys {
             let v = &self.per_variant[k];
             s.push_str(&format!(
-                "| {} | {} | {} | {:.2} | {:.2}ms | {:.2}ms | {:.2}ms | {} |\n",
+                "| {} | {} | {} | {:.2} | {:.2}ms | {:.2}ms | {:.2}ms | {:.2}ms | {} | {} | {} | {} | {} | {} |\n",
                 k,
                 v.requests,
                 v.batches,
                 v.mean_batch_size(),
                 v.latency_us.percentile(0.5) / 1e3,
                 v.latency_us.percentile(0.99) / 1e3,
+                v.queue_us.percentile(0.95) / 1e3,
                 v.execute_us.mean() / 1e3,
+                v.shed,
+                v.timed_out,
+                v.degraded,
+                v.failed,
+                v.worker_restarts,
                 v.rejected,
             ));
         }
@@ -85,10 +115,58 @@ impl MetricsSnapshot {
     }
 }
 
+/// One variant's state: cumulative metrics plus the rotating recent
+/// queue-wait window.
+#[derive(Debug)]
+struct VariantState {
+    m: VariantMetrics,
+    recent_cur: LogHistogram,
+    recent_prev: LogHistogram,
+    epoch: Instant,
+}
+
+impl VariantState {
+    fn new() -> Self {
+        Self {
+            m: VariantMetrics::default(),
+            recent_cur: LogHistogram::new(),
+            recent_prev: LogHistogram::new(),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Advance the window: after one `window` the current histogram
+    /// becomes "previous"; after two both are stale and cleared — so a
+    /// variant that stops receiving traffic reads an empty (p95 = 0)
+    /// window instead of a stale-high one, letting pressure clear.
+    fn rotate(&mut self, now: Instant, window: Duration) {
+        let elapsed = now.duration_since(self.epoch);
+        if elapsed < window {
+            return;
+        }
+        if elapsed < window * 2 {
+            self.recent_prev = std::mem::take(&mut self.recent_cur);
+        } else {
+            self.recent_prev = LogHistogram::new();
+            self.recent_cur = LogHistogram::new();
+        }
+        self.epoch = now;
+    }
+
+    fn recent_queue_p95_us(&mut self, now: Instant, window: Duration) -> f64 {
+        self.rotate(now, window);
+        let mut merged = self.recent_cur.clone();
+        merged.merge(&self.recent_prev);
+        merged.percentile(0.95)
+    }
+}
+
 /// Thread-safe metrics registry.
 pub struct Metrics {
-    inner: Mutex<HashMap<String, VariantMetrics>>,
+    inner: Mutex<HashMap<String, VariantState>>,
     started: Instant,
+    /// Width of the recent-latency window backing the SLO gauge.
+    window: Duration,
 }
 
 impl Default for Metrics {
@@ -99,7 +177,19 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        Self { inner: Mutex::new(HashMap::new()), started: Instant::now() }
+        Self::with_window(Duration::from_secs(1))
+    }
+
+    pub fn with_window(window: Duration) -> Self {
+        Self {
+            inner: Mutex::new(HashMap::new()),
+            started: Instant::now(),
+            window: window.max(Duration::from_millis(1)),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, VariantState>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn record_batch(
@@ -110,30 +200,79 @@ impl Metrics {
         latencies_s: &[f64],
         queue_s: &[f64],
     ) {
-        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        let v = m.entry(variant.to_string()).or_default();
-        v.batches += 1;
-        v.requests += batch_size as u64;
-        v.batch_size_sum += batch_size as u64;
-        v.execute_us.record(execute_s * 1e6);
+        let now = Instant::now();
+        let mut m = self.lock();
+        let v = m.entry(variant.to_string()).or_insert_with(VariantState::new);
+        v.rotate(now, self.window);
+        v.m.batches += 1;
+        v.m.requests += batch_size as u64;
+        v.m.batch_size_sum += batch_size as u64;
+        v.m.execute_us.record(execute_s * 1e6);
         for &l in latencies_s {
-            v.latency_us.record(l * 1e6);
+            v.m.latency_us.record(l * 1e6);
         }
         for &q in queue_s {
-            v.queue_us.record(q * 1e6);
+            v.m.queue_us.record(q * 1e6);
+            v.recent_cur.record(q * 1e6);
         }
+    }
+
+    fn bump(&self, variant: &str, f: impl FnOnce(&mut VariantMetrics)) {
+        let mut m = self.lock();
+        f(&mut m.entry(variant.to_string()).or_insert_with(VariantState::new).m)
     }
 
     pub fn record_rejection(&self, variant: &str) {
-        let mut m = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        m.entry(variant.to_string()).or_default().rejected += 1;
+        self.bump(variant, |m| m.rejected += 1);
+    }
+
+    pub fn record_shed(&self, variant: &str) {
+        self.bump(variant, |m| m.shed += 1);
+    }
+
+    pub fn record_timeout(&self, variant: &str) {
+        self.bump(variant, |m| m.timed_out += 1);
+    }
+
+    pub fn record_degraded(&self, variant: &str) {
+        self.bump(variant, |m| m.degraded += 1);
+    }
+
+    pub fn record_failed(&self, variant: &str, n: u64) {
+        self.bump(variant, |m| m.failed += n);
+    }
+
+    pub fn record_worker_panic(&self, variant: &str) {
+        self.bump(variant, |m| m.worker_panics += 1);
+    }
+
+    pub fn record_worker_restart(&self, variant: &str) {
+        self.bump(variant, |m| m.worker_restarts += 1);
+    }
+
+    /// p95 queue wait (µs) over the last one-to-two recent windows; 0.0
+    /// for an idle or unknown variant. The degradation trigger.
+    pub fn recent_queue_p95_us(&self, variant: &str) -> f64 {
+        let now = Instant::now();
+        let mut m = self.lock();
+        match m.get_mut(variant) {
+            Some(v) => v.recent_queue_p95_us(now, self.window),
+            None => 0.0,
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        MetricsSnapshot {
-            per_variant: self.inner.lock().unwrap_or_else(|e| e.into_inner()).clone(),
-            elapsed_s: self.started.elapsed().as_secs_f64(),
-        }
+        let now = Instant::now();
+        let mut m = self.lock();
+        let per_variant = m
+            .iter_mut()
+            .map(|(k, v)| {
+                let mut out = v.m.clone();
+                out.queue_p95_recent_us = v.recent_queue_p95_us(now, self.window);
+                (k.clone(), out)
+            })
+            .collect();
+        MetricsSnapshot { per_variant, elapsed_s: self.started.elapsed().as_secs_f64() }
     }
 }
 
@@ -155,6 +294,46 @@ mod tests {
         assert!((v.mean_batch_size() - 3.0).abs() < 1e-9);
         assert_eq!(s.total_requests(), 6);
         assert!(s.markdown().contains("vit/baseline"));
+    }
+
+    #[test]
+    fn fault_counters_accumulate() {
+        let m = Metrics::new();
+        m.record_shed("v");
+        m.record_shed("v");
+        m.record_timeout("v");
+        m.record_degraded("v");
+        m.record_failed("v", 3);
+        m.record_worker_panic("v");
+        m.record_worker_restart("v");
+        let s = m.snapshot();
+        let v = &s.per_variant["v"];
+        assert_eq!(v.shed, 2);
+        assert_eq!(v.timed_out, 1);
+        assert_eq!(v.degraded, 1);
+        assert_eq!(v.failed, 3);
+        assert_eq!(v.worker_panics, 1);
+        assert_eq!(v.worker_restarts, 1);
+        // counters-only variants must show up in the report too
+        assert!(s.markdown().contains("| v |"));
+    }
+
+    #[test]
+    fn recent_window_tracks_then_forgets_pressure() {
+        let m = Metrics::with_window(Duration::from_millis(40));
+        assert_eq!(m.recent_queue_p95_us("v"), 0.0, "unknown variant reads 0");
+        // 100ms queue waits -> recent p95 ~1e5 us
+        m.record_batch("v", 2, 0.001, &[0.101, 0.101], &[0.1, 0.1]);
+        let p = m.recent_queue_p95_us("v");
+        assert!(p > 5e4, "recent p95 must see the burst, got {p}");
+        // after 2+ windows with no traffic the gauge must decay to 0 so
+        // degradation can disengage — while the cumulative histogram
+        // still remembers the burst.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(m.recent_queue_p95_us("v"), 0.0);
+        let s = m.snapshot();
+        assert!(s.per_variant["v"].queue_us.percentile(0.95) > 5e4);
+        assert_eq!(s.per_variant["v"].queue_p95_recent_us, 0.0);
     }
 
     #[test]

@@ -11,8 +11,16 @@
 //! back through per-request channels while [`metrics::Metrics`] records
 //! latency histograms and throughput.
 
+//!
+//! The fault-tolerance layer rides on the same pipeline: workers run
+//! under supervisors ([`server`]), requests carry deadlines and
+//! admission tickets ([`request`]), the router sheds and degrades under
+//! SLO pressure ([`router`]), and [`faults`] provides deterministic
+//! fault injection to test all of it.
+
 pub mod batcher;
 pub mod eval;
+pub mod faults;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -21,6 +29,6 @@ pub mod worker;
 
 pub use batcher::{BatchPolicy, BatcherConfig, DynamicBatcher};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{ClassRequest, ClassResponse, RequestId};
-pub use router::Router;
-pub use server::{Server, ServerConfig};
+pub use request::{ClassRequest, ClassResponse, ReplyStatus, RequestId};
+pub use router::{PendingReply, Router, SubmitError, SubmitOptions};
+pub use server::{ResilienceConfig, Server, ServerConfig};

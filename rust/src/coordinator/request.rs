@@ -1,11 +1,57 @@
 //! Request/response types for the classification service.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::tensor::Tensor;
 
 pub type RequestId = u64;
+
+/// How a request terminated. Every submitted request gets exactly one
+/// terminal reply carrying one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplyStatus {
+    /// Served: `logits` are valid.
+    Completed,
+    /// The request's deadline expired before it was dispatched.
+    Timeout,
+    /// Shed by admission control (worker queue at capacity).
+    Overloaded,
+    /// Execution failed or the worker died with this request in flight.
+    Failed,
+}
+
+impl ReplyStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplyStatus::Completed => "completed",
+            ReplyStatus::Timeout => "timeout",
+            ReplyStatus::Overloaded => "overloaded",
+            ReplyStatus::Failed => "failed",
+        }
+    }
+}
+
+/// RAII share of a per-variant in-flight bound: the router increments
+/// the depth gauge on admission and this ticket decrements it when the
+/// request is dropped — which happens on every exit path, including a
+/// worker unwinding mid-batch, so the gauge can never leak.
+#[derive(Debug)]
+pub struct DepthTicket(Arc<AtomicUsize>);
+
+impl DepthTicket {
+    pub fn new(depth: Arc<AtomicUsize>) -> Self {
+        Self(depth)
+    }
+}
+
+impl Drop for DepthTicket {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
 
 /// One classification request: a single image `[H, W, 3]` f32.
 #[derive(Debug)]
@@ -13,14 +59,27 @@ pub struct ClassRequest {
     pub id: RequestId,
     pub image: Tensor,
     pub enqueued: Instant,
+    /// Drop-dead time: the batcher discards the request (and the worker
+    /// replies [`ReplyStatus::Timeout`]) once this passes — computing
+    /// dead work on a constrained device starves live requests.
+    pub deadline: Option<Instant>,
     pub reply: Sender<ClassResponse>,
+    /// In-flight depth share (None for paths that bypass the router).
+    pub ticket: Option<DepthTicket>,
+}
+
+impl ClassRequest {
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// The server's answer.
 #[derive(Debug, Clone)]
 pub struct ClassResponse {
     pub id: RequestId,
-    /// Class logits (len = n_classes).
+    pub status: ReplyStatus,
+    /// Class logits (len = n_classes; empty unless `Completed`).
     pub logits: Vec<f32>,
     /// argmax class.
     pub predicted: usize,
@@ -46,7 +105,33 @@ impl ClassResponse {
             .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        Self { id, logits, predicted, latency_s, batch_size, served_by }
+        Self {
+            id,
+            status: ReplyStatus::Completed,
+            logits,
+            predicted,
+            latency_s,
+            batch_size,
+            served_by,
+        }
+    }
+
+    /// A non-`Completed` terminal reply (empty logits).
+    pub fn terminal(
+        id: RequestId,
+        status: ReplyStatus,
+        latency_s: f64,
+        served_by: String,
+    ) -> Self {
+        Self {
+            id,
+            status,
+            logits: vec![],
+            predicted: 0,
+            latency_s,
+            batch_size: 0,
+            served_by,
+        }
     }
 }
 
@@ -64,8 +149,42 @@ mod tests {
             "vit/baseline".into(),
         );
         assert_eq!(r.predicted, 1);
+        assert_eq!(r.status, ReplyStatus::Completed);
         let empty =
             ClassResponse::from_logits(2, vec![], 0.0, 1, "x".into());
         assert_eq!(empty.predicted, 0);
+    }
+
+    #[test]
+    fn terminal_replies_carry_status() {
+        let r = ClassResponse::terminal(3, ReplyStatus::Timeout, 0.5, "x".into());
+        assert_eq!(r.status, ReplyStatus::Timeout);
+        assert!(r.logits.is_empty());
+        assert_eq!(ReplyStatus::Overloaded.name(), "overloaded");
+    }
+
+    #[test]
+    fn depth_ticket_decrements_on_drop() {
+        let depth = Arc::new(AtomicUsize::new(2));
+        let t = DepthTicket::new(depth.clone());
+        assert_eq!(depth.load(Ordering::SeqCst), 2);
+        drop(t);
+        assert_eq!(depth.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn expiry_respects_deadline() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let now = Instant::now();
+        let req = ClassRequest {
+            id: 1,
+            image: Tensor::zeros(crate::tensor::Dtype::F32, vec![1]),
+            enqueued: now,
+            deadline: Some(now + std::time::Duration::from_millis(5)),
+            reply: tx,
+            ticket: None,
+        };
+        assert!(!req.expired(now));
+        assert!(req.expired(now + std::time::Duration::from_millis(5)));
     }
 }

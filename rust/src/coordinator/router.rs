@@ -1,25 +1,302 @@
-//! Request router: maps "model/variant" targets to worker queues.
+//! Request router: maps "model/variant" targets to worker queues, and —
+//! since the fault-tolerance layer — is the serving stack's admission
+//! and degradation point:
+//!
+//! * **Load shedding.** Each target carries a bounded in-flight depth
+//!   gauge (incremented at submit, decremented by an RAII
+//!   [`DepthTicket`][super::request::DepthTicket] when the request is
+//!   dropped on any path). At the bound, [`Router::submit`] fails fast
+//!   with [`SubmitError::Overloaded`] instead of growing an unbounded
+//!   queue an edge device can never drain.
+//! * **SLO-aware degradation.** When a target's *recent* p95 queue wait
+//!   (see [`Metrics::recent_queue_p95_us`]) crosses the configured SLO,
+//!   eligible requests are rerouted to its configured cheaper fallback
+//!   variant — the source paper's cluster-count-vs-accuracy knob turned
+//!   into a runtime policy — and routed back once pressure clears. A
+//!   per-request accuracy floor is honored: requests whose floor the
+//!   fallback cannot meet stay on the primary.
+//! * **Fault awareness.** A target whose worker is being restarted still
+//!   accepts traffic (the new queue is drained after the restart); one
+//!   marked permanently failed routes to its fallback when possible and
+//!   otherwise reports [`SubmitError::ShuttingDown`].
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Instant;
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvError, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
-use super::request::{ClassRequest, ClassResponse};
+use super::metrics::Metrics;
+use super::request::{ClassRequest, ClassResponse, DepthTicket, ReplyStatus, RequestId};
 use super::worker::WorkerMsg;
 use crate::tensor::Tensor;
 
+/// Why a submit was refused. Typed so callers (and the future HTTP front
+/// end) can map causes to responses (404 / 429 / 503) instead of string
+/// matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No such "model/variant" target is being served.
+    UnknownTarget { target: String, known: Vec<String> },
+    /// Admission control shed the request: every eligible route is at
+    /// its in-flight bound.
+    Overloaded { target: String },
+    /// The worker (and any fallback) has shut down or permanently
+    /// failed.
+    ShuttingDown { target: String },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownTarget { target, known } => {
+                write!(f, "unknown target {target:?} (have {known:?})")
+            }
+            SubmitError::Overloaded { target } => {
+                write!(f, "target {target:?} overloaded: in-flight bound reached, request shed")
+            }
+            SubmitError::ShuttingDown { target } => {
+                write!(f, "worker for {target:?} has shut down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-request routing options.
+#[derive(Debug, Clone)]
+pub struct SubmitOptions {
+    /// Drop-dead time budget; expired requests are dropped before
+    /// dispatch with a [`ReplyStatus::Timeout`] reply.
+    pub deadline: Option<Duration>,
+    /// Lowest acceptable variant accuracy (same scale as
+    /// [`RoutePolicy::accuracy`]); a fallback below the floor is never
+    /// used for this request.
+    pub accuracy_floor: Option<f64>,
+    /// Opt out of SLO degradation entirely for this request.
+    pub allow_degrade: bool,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        Self { deadline: None, accuracy_floor: None, allow_degrade: true }
+    }
+}
+
+/// Worker lifecycle as the router sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WorkerState {
+    Starting = 0,
+    Ready = 1,
+    /// Crashed; the supervisor is restarting it (still routable — the
+    /// fresh queue is drained once the restart completes).
+    Restarting = 2,
+    /// Permanently failed (restart budget exhausted) or shut down.
+    Dead = 3,
+}
+
+impl WorkerState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => WorkerState::Starting,
+            1 => WorkerState::Ready,
+            2 => WorkerState::Restarting,
+            _ => WorkerState::Dead,
+        }
+    }
+}
+
+/// Shared per-target state: the (swappable) worker queue sender, the
+/// in-flight depth gauge, and the supervisor-owned health flag.
+pub struct TargetHandle {
+    pub label: String,
+    /// Swapped by the supervisor on worker restart.
+    tx: Mutex<Sender<WorkerMsg>>,
+    depth: Arc<AtomicUsize>,
+    /// In-flight bound (0 = unbounded).
+    queue_bound: usize,
+    state: AtomicU8,
+    shutting_down: std::sync::atomic::AtomicBool,
+    /// Degradation hysteresis: engaged flag + last flip time.
+    degrade: Mutex<DegradeState>,
+}
+
+#[derive(Debug, Default)]
+struct DegradeState {
+    engaged: bool,
+    flipped_at: Option<Instant>,
+}
+
+impl TargetHandle {
+    pub fn new(label: String, tx: Sender<WorkerMsg>, queue_bound: usize) -> Self {
+        Self {
+            label,
+            tx: Mutex::new(tx),
+            depth: Arc::new(AtomicUsize::new(0)),
+            queue_bound,
+            state: AtomicU8::new(WorkerState::Starting as u8),
+            shutting_down: std::sync::atomic::AtomicBool::new(false),
+            degrade: Mutex::new(DegradeState::default()),
+        }
+    }
+
+    pub fn state(&self) -> WorkerState {
+        WorkerState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    pub fn set_state(&self, s: WorkerState) {
+        self.state.store(s as u8, Ordering::Release);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// Replace the worker queue sender (supervisor restart path).
+    pub fn swap_sender(&self, tx: Sender<WorkerMsg>) {
+        *self.tx.lock().unwrap_or_else(|e| e.into_inner()) = tx;
+    }
+
+    pub fn send(&self, msg: WorkerMsg) -> Result<(), WorkerMsg> {
+        self.tx
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .send(msg)
+            .map_err(|e| e.0)
+    }
+
+    pub fn begin_shutdown(&self) {
+        self.shutting_down.store(true, Ordering::Release);
+    }
+
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::Acquire)
+    }
+
+    /// Reserve an in-flight slot; `None` when the bound is hit.
+    fn admit(&self) -> Option<DepthTicket> {
+        if self.queue_bound == 0 {
+            self.depth.fetch_add(1, Ordering::AcqRel);
+            return Some(DepthTicket::new(self.depth.clone()));
+        }
+        let bound = self.queue_bound;
+        self.depth
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |d| {
+                (d < bound).then_some(d + 1)
+            })
+            .ok()
+            .map(|_| DepthTicket::new(self.depth.clone()))
+    }
+}
+
+/// Routing-time policy distilled from
+/// [`ResilienceConfig`][super::server::ResilienceConfig].
+#[derive(Debug, Clone, Default)]
+pub struct RoutePolicy {
+    /// p95 recent queue-wait SLO; `None` disables degradation.
+    pub slo: Option<Duration>,
+    /// Minimum time between degradation flips (hysteresis).
+    pub hold: Duration,
+    /// Primary label → cheaper fallback label.
+    pub fallback: HashMap<String, String>,
+    /// Label → accuracy estimate, the scale `accuracy_floor` is checked
+    /// against (e.g. top-1 from the manifest, or a config estimate).
+    pub accuracy: HashMap<String, f64>,
+    /// Deadline applied when a request does not carry one.
+    pub default_deadline: Option<Duration>,
+}
+
+/// The receiving half of a submitted request. Guarantees **exactly one
+/// terminal reply**: if the serving side dies without answering (worker
+/// crash drops the queue, channel torn down mid-restart), the first
+/// receive synthesizes a [`ReplyStatus::Failed`] reply instead of
+/// surfacing a disconnect — callers can never hang and never observe a
+/// request that silently vanished.
+#[derive(Debug)]
+pub struct PendingReply {
+    id: RequestId,
+    target: String,
+    submitted: Instant,
+    rx: Receiver<ClassResponse>,
+    done: std::cell::Cell<bool>,
+}
+
+impl PendingReply {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    fn synthesize_failed(&self) -> ClassResponse {
+        ClassResponse::terminal(
+            self.id,
+            ReplyStatus::Failed,
+            self.submitted.elapsed().as_secs_f64(),
+            format!("{} (worker lost)", self.target),
+        )
+    }
+
+    /// Receive the terminal reply. After it has been delivered once,
+    /// further calls report `Disconnected` (the exactly-once contract).
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<ClassResponse, RecvTimeoutError> {
+        if self.done.get() {
+            return Err(RecvTimeoutError::Disconnected);
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(resp) => {
+                self.done.set(true);
+                Ok(resp)
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                self.done.set(true);
+                Ok(self.synthesize_failed())
+            }
+            Err(RecvTimeoutError::Timeout) => Err(RecvTimeoutError::Timeout),
+        }
+    }
+
+    /// Blocking receive; same exactly-once contract as
+    /// [`Self::recv_timeout`].
+    pub fn recv(&self) -> Result<ClassResponse, RecvError> {
+        if self.done.get() {
+            return Err(RecvError);
+        }
+        self.done.set(true);
+        Ok(self.rx.recv().unwrap_or_else(|_| self.synthesize_failed()))
+    }
+}
+
 /// Routes requests to per-variant worker queues.
 pub struct Router {
-    targets: HashMap<String, Sender<WorkerMsg>>,
+    targets: HashMap<String, Arc<TargetHandle>>,
+    metrics: Arc<Metrics>,
+    policy: RoutePolicy,
     next_id: AtomicU64,
 }
 
 impl Router {
+    /// Plain router over raw worker senders: unbounded queues, no
+    /// degradation (unit tests, simple embedders).
     pub fn new(targets: HashMap<String, Sender<WorkerMsg>>) -> Self {
-        Self { targets, next_id: AtomicU64::new(1) }
+        let handles = targets
+            .into_iter()
+            .map(|(label, tx)| {
+                let h = TargetHandle::new(label.clone(), tx, 0);
+                h.set_state(WorkerState::Ready);
+                (label, Arc::new(h))
+            })
+            .collect();
+        Self::with_handles(handles, Arc::new(Metrics::new()), RoutePolicy::default())
+    }
+
+    /// Full fault-tolerant router (the `Server` path).
+    pub fn with_handles(
+        targets: HashMap<String, Arc<TargetHandle>>,
+        metrics: Arc<Metrics>,
+        policy: RoutePolicy,
+    ) -> Self {
+        Self { targets, metrics, policy, next_id: AtomicU64::new(1) }
     }
 
     pub fn targets(&self) -> Vec<String> {
@@ -28,29 +305,166 @@ impl Router {
         v
     }
 
-    /// Submit an image to a target ("model/variant"); returns the
-    /// response channel and the assigned request id.
+    pub fn handle(&self, target: &str) -> Option<&Arc<TargetHandle>> {
+        self.targets.get(target)
+    }
+
+    /// Submit an image with default options.
     pub fn submit(
         &self,
         target: &str,
         image: Tensor,
-    ) -> Result<(u64, Receiver<ClassResponse>)> {
-        let tx = self
-            .targets
+    ) -> Result<(RequestId, PendingReply), SubmitError> {
+        self.submit_opts(target, image, SubmitOptions::default())
+    }
+
+    /// True when SLO degradation is currently engaged for `target`
+    /// (updated on the submit path; also refreshed here for observers).
+    pub fn degraded(&self, target: &str) -> bool {
+        match self.targets.get(target) {
+            Some(h) => self.degrade_engaged(h),
+            None => false,
+        }
+    }
+
+    /// Evaluate (and update, with hysteresis) the degradation flag for
+    /// `primary` from its recent p95 queue wait.
+    fn degrade_engaged(&self, primary: &Arc<TargetHandle>) -> bool {
+        let Some(slo) = self.policy.slo else { return false };
+        let slo_us = slo.as_secs_f64() * 1e6;
+        let p95 = self.metrics.recent_queue_p95_us(&primary.label);
+        let mut st = primary.degrade.lock().unwrap_or_else(|e| e.into_inner());
+        let now = Instant::now();
+        let held = st
+            .flipped_at
+            .map_or(true, |t| now.duration_since(t) >= self.policy.hold);
+        if !st.engaged && p95 > slo_us {
+            st.engaged = true;
+            st.flipped_at = Some(now);
+            crate::log_info!(
+                "{}: degradation ENGAGED (recent p95 queue {:.1}ms > SLO {:.1}ms)",
+                primary.label,
+                p95 / 1e3,
+                slo_us / 1e3
+            );
+        } else if st.engaged && held && p95 <= slo_us / 2.0 {
+            // Disengage only once pressure has clearly dropped (half the
+            // SLO) and the hold has elapsed, so the router does not flap
+            // on every sample.
+            st.engaged = false;
+            st.flipped_at = Some(now);
+            crate::log_info!(
+                "{}: degradation cleared (recent p95 queue {:.1}ms)",
+                primary.label,
+                p95 / 1e3
+            );
+        }
+        st.engaged
+    }
+
+    /// Submit an image to a target ("model/variant"); returns the
+    /// assigned request id and the reply handle.
+    pub fn submit_opts(
+        &self,
+        target: &str,
+        image: Tensor,
+        opts: SubmitOptions,
+    ) -> Result<(RequestId, PendingReply), SubmitError> {
+        let primary = self.targets.get(target).ok_or_else(|| SubmitError::UnknownTarget {
+            target: target.to_string(),
+            known: self.targets(),
+        })?;
+
+        // Candidate routes in preference order: the fallback leads only
+        // while degradation is engaged; otherwise it is the overflow /
+        // dead-primary escape hatch.
+        let fallback = self
+            .policy
+            .fallback
             .get(target)
-            .ok_or_else(|| {
-                anyhow!("unknown target {target:?} (have {:?})", self.targets())
-            })?;
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = channel();
-        tx.send(WorkerMsg::Request(ClassRequest {
-            id,
-            image,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        }))
-        .map_err(|_| anyhow!("worker for {target:?} has shut down"))?;
-        Ok((id, reply_rx))
+            .and_then(|fb| self.targets.get(fb))
+            .filter(|fb| {
+                opts.allow_degrade
+                    && match opts.accuracy_floor {
+                        // A floor is honored strictly: an unknown
+                        // fallback accuracy is treated as below it.
+                        Some(floor) => self
+                            .policy
+                            .accuracy
+                            .get(&fb.label)
+                            .is_some_and(|&a| a >= floor),
+                        None => true,
+                    }
+            });
+        let engaged = fallback.is_some() && self.degrade_engaged(primary);
+        let mut order: Vec<&Arc<TargetHandle>> = Vec::with_capacity(2);
+        if engaged {
+            order.push(fallback.unwrap());
+            order.push(primary);
+        } else {
+            order.push(primary);
+            if let Some(fb) = fallback {
+                order.push(fb);
+            }
+        }
+
+        let now = Instant::now();
+        let deadline = opts
+            .deadline
+            .or(self.policy.default_deadline)
+            .map(|d| now + d);
+        let mut image = Some(image);
+        let mut all_dead = true;
+        for route in order {
+            if route.state() == WorkerState::Dead {
+                continue;
+            }
+            all_dead = false;
+            let Some(ticket) = route.admit() else { continue };
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let (reply_tx, reply_rx) = channel();
+            let req = ClassRequest {
+                id,
+                image: image.take().expect("image consumed once"),
+                enqueued: now,
+                deadline,
+                reply: reply_tx,
+                ticket: Some(ticket),
+            };
+            match route.send(WorkerMsg::Request(req)) {
+                Ok(()) => {
+                    if !std::ptr::eq(
+                        Arc::as_ptr(route),
+                        Arc::as_ptr(primary),
+                    ) {
+                        self.metrics.record_degraded(&primary.label);
+                    }
+                    return Ok((
+                        id,
+                        PendingReply {
+                            id,
+                            target: route.label.clone(),
+                            submitted: now,
+                            rx: reply_rx,
+                            done: std::cell::Cell::new(false),
+                        },
+                    ));
+                }
+                Err(WorkerMsg::Request(req)) => {
+                    // The worker died between health check and send (its
+                    // queue receiver is gone). Reclaim the image and try
+                    // the next route; the ticket drops here, restoring
+                    // the depth gauge.
+                    image = Some(req.image);
+                }
+                Err(_) => unreachable!("we sent a Request"),
+            }
+        }
+        if all_dead {
+            return Err(SubmitError::ShuttingDown { target: target.to_string() });
+        }
+        self.metrics.record_shed(target);
+        Err(SubmitError::Overloaded { target: target.to_string() })
     }
 }
 
@@ -58,6 +472,10 @@ impl Router {
 mod tests {
     use super::*;
     use crate::tensor::Dtype;
+
+    fn img() -> Tensor {
+        Tensor::zeros(Dtype::F32, vec![2, 2, 3])
+    }
 
     #[test]
     fn routes_and_rejects_unknown() {
@@ -67,14 +485,130 @@ mod tests {
         let router = Router::new(targets);
         assert_eq!(router.targets(), vec!["vit/baseline"]);
 
-        let img = Tensor::zeros(Dtype::F32, vec![2, 2, 3]);
-        let (id, _reply) = router.submit("vit/baseline", img.clone()).unwrap();
+        let (id, _reply) = router.submit("vit/baseline", img()).unwrap();
         assert_eq!(id, 1);
         match rx.try_recv().unwrap() {
             WorkerMsg::Request(r) => assert_eq!(r.id, 1),
             _ => panic!("expected request"),
         }
-        assert!(router.submit("nope", img).is_err());
+        match router.submit("nope", img()) {
+            Err(SubmitError::UnknownTarget { target, known }) => {
+                assert_eq!(target, "nope");
+                assert_eq!(known, vec!["vit/baseline"]);
+            }
+            other => panic!("expected UnknownTarget, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_target_sheds_overloaded() {
+        let (tx, rx) = channel();
+        let handle = Arc::new(TargetHandle::new("t".into(), tx, 2));
+        handle.set_state(WorkerState::Ready);
+        let mut targets = HashMap::new();
+        targets.insert("t".to_string(), handle.clone());
+        let metrics = Arc::new(Metrics::new());
+        let router =
+            Router::with_handles(targets, metrics.clone(), RoutePolicy::default());
+
+        let a = router.submit("t", img()).unwrap();
+        let _b = router.submit("t", img()).unwrap();
+        assert_eq!(handle.depth(), 2);
+        match router.submit("t", img()) {
+            Err(SubmitError::Overloaded { target }) => assert_eq!(target, "t"),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(metrics.snapshot().per_variant["t"].shed, 1);
+
+        // Draining a request (worker receives + drops it) frees a slot.
+        match rx.try_recv().unwrap() {
+            WorkerMsg::Request(r) => {
+                assert_eq!(r.id, a.0);
+                drop(r);
+            }
+            _ => panic!("expected request"),
+        }
+        assert_eq!(handle.depth(), 1);
+        assert!(router.submit("t", img()).is_ok());
+    }
+
+    #[test]
+    fn dead_target_reports_shutting_down() {
+        let (tx, _rx) = channel();
+        let handle = Arc::new(TargetHandle::new("t".into(), tx, 0));
+        handle.set_state(WorkerState::Dead);
+        let mut targets = HashMap::new();
+        targets.insert("t".to_string(), handle);
+        let router = Router::with_handles(
+            targets,
+            Arc::new(Metrics::new()),
+            RoutePolicy::default(),
+        );
+        match router.submit("t", img()) {
+            Err(SubmitError::ShuttingDown { target }) => assert_eq!(target, "t"),
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn accuracy_floor_gates_fallback() {
+        // Primary dead, fallback alive: requests reroute — unless the
+        // accuracy floor is above the fallback's estimate.
+        let (ptx, _prx) = channel();
+        let (ftx, frx) = channel();
+        let primary = Arc::new(TargetHandle::new("m/big".into(), ptx, 0));
+        primary.set_state(WorkerState::Dead);
+        let fb = Arc::new(TargetHandle::new("m/small".into(), ftx, 0));
+        fb.set_state(WorkerState::Ready);
+        let mut targets = HashMap::new();
+        targets.insert("m/big".to_string(), primary);
+        targets.insert("m/small".to_string(), fb);
+        let policy = RoutePolicy {
+            fallback: HashMap::from([("m/big".to_string(), "m/small".to_string())]),
+            accuracy: HashMap::from([
+                ("m/big".to_string(), 0.9),
+                ("m/small".to_string(), 0.7),
+            ]),
+            ..RoutePolicy::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let router = Router::with_handles(targets, metrics.clone(), policy);
+
+        // No floor: reroutes to the fallback and counts as degraded.
+        assert!(router.submit("m/big", img()).is_ok());
+        assert!(matches!(frx.try_recv().unwrap(), WorkerMsg::Request(_)));
+        assert_eq!(metrics.snapshot().per_variant["m/big"].degraded, 1);
+
+        // Floor above the fallback's accuracy: no eligible route left.
+        let opts = SubmitOptions { accuracy_floor: Some(0.8), ..Default::default() };
+        match router.submit_opts("m/big", img(), opts) {
+            Err(SubmitError::ShuttingDown { .. }) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+
+        // allow_degrade=false likewise pins the request to the primary.
+        let opts = SubmitOptions { allow_degrade: false, ..Default::default() };
+        assert!(matches!(
+            router.submit_opts("m/big", img(), opts),
+            Err(SubmitError::ShuttingDown { .. })
+        ));
+    }
+
+    #[test]
+    fn pending_reply_synthesizes_failed_on_lost_worker() {
+        let (tx, rx) = channel();
+        let mut targets = HashMap::new();
+        targets.insert("t".to_string(), tx);
+        let router = Router::new(targets);
+        let (id, reply) = router.submit("t", img()).unwrap();
+        // Worker "dies": its queue (and the request inside) drops.
+        drop(rx);
+        let resp = reply.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.status, ReplyStatus::Failed);
+        // Exactly once: the synthesized reply is terminal.
+        assert!(reply.recv_timeout(Duration::from_millis(1)).is_err());
+        assert!(reply.recv().is_err());
     }
 
     #[test]

@@ -1,20 +1,82 @@
-//! The serving front end: spawns one worker per served variant, wires the
-//! router, owns metrics and shutdown.
+//! The serving front end: spawns one supervised worker per served
+//! variant, wires the router, owns metrics and shutdown.
+//!
+//! Each variant worker runs under a **supervisor thread** that executes
+//! the worker loop inside `catch_unwind`. When a worker panics (a model
+//! bug, a backend fault, an injected fault from
+//! [`super::faults`]), the supervisor:
+//!
+//! 1. fails the crashed batch's callers with explicit `Failed` replies
+//!    (via the [`WorkerShared`] in-flight registry — no caller ever
+//!    hangs),
+//! 2. restarts the worker with capped exponential backoff, swapping a
+//!    fresh queue into the router's [`TargetHandle`], and
+//! 3. after `max_restarts` consecutive crashes, marks the target
+//!    permanently [`WorkerState::Dead`] — the router then reroutes to a
+//!    fallback or sheds, instead of feeding requests to a crash loop.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::batcher::BatcherConfig;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::router::Router;
-use super::worker::{run_worker, WorkerConfig, WorkerMsg};
+use super::router::{RoutePolicy, Router, TargetHandle, WorkerState};
+use super::worker::{run_worker, WorkerConfig, WorkerMsg, WorkerShared};
 use crate::model::VariantKey;
 use crate::runtime::{BackendKind, ThreadBudget};
+
+/// Fault-tolerance and SLO policy for a server.
+#[derive(Debug, Clone)]
+pub struct ResilienceConfig {
+    /// Per-target in-flight bound for admission control (0 = unbounded).
+    /// At the bound, `Router::submit` sheds with `Overloaded`.
+    pub queue_bound: usize,
+    /// Consecutive worker crashes tolerated before a target is marked
+    /// permanently failed.
+    pub max_restarts: u32,
+    /// First restart delay; doubles per consecutive crash.
+    pub backoff_base: Duration,
+    /// Ceiling on the restart delay.
+    pub backoff_cap: Duration,
+    /// Recent-p95 queue-wait SLO; when a target exceeds it, eligible
+    /// requests degrade to its fallback. `None` disables degradation.
+    pub slo: Option<Duration>,
+    /// Width of the recent-latency window backing the SLO gauge.
+    pub window: Duration,
+    /// Minimum time between degradation engage/disengage flips.
+    pub hold: Duration,
+    /// Primary target label -> cheaper fallback target label.
+    pub fallback: HashMap<String, String>,
+    /// Target label -> accuracy estimate, checked against per-request
+    /// accuracy floors when degrading.
+    pub accuracy: HashMap<String, f64>,
+    /// Deadline applied to requests that do not carry their own.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        Self {
+            queue_bound: 0,
+            max_restarts: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            slo: None,
+            window: Duration::from_secs(1),
+            hold: Duration::from_secs(1),
+            fallback: HashMap::new(),
+            accuracy: HashMap::new(),
+            default_deadline: None,
+        }
+    }
+}
 
 /// What to serve.
 #[derive(Clone)]
@@ -31,24 +93,27 @@ pub struct ServerConfig {
     /// workers, so W workers on C cores get C/W lanes each instead of
     /// each assuming it owns the machine (W×C oversubscription).
     pub threads: ThreadBudget,
+    /// Fault-tolerance knobs (supervision, shedding, SLO degradation).
+    pub resilience: ResilienceConfig,
 }
 
 /// A running server.
 pub struct Server {
     pub router: Arc<Router>,
     pub metrics: Arc<Metrics>,
-    senders: Vec<Sender<WorkerMsg>>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Vec<Arc<TargetHandle>>,
+    supervisors: Vec<JoinHandle<()>>,
 }
 
 impl Server {
     /// Start all workers; blocks until every worker has compiled its
     /// executables (so first-request latency is steady-state).
     pub fn start(config: ServerConfig) -> Result<Self> {
-        let metrics = Arc::new(Metrics::new());
+        let res = config.resilience.clone();
+        let metrics = Arc::new(Metrics::with_window(res.window));
         let mut targets = HashMap::new();
-        let mut senders = Vec::new();
         let mut handles = Vec::new();
+        let mut supervisors = Vec::new();
         let mut readiness = Vec::new();
         // Explicit core budgeting: each worker gets its slice of the
         // machine, and all slices fan out into one shared process-wide
@@ -62,9 +127,29 @@ impl Server {
                 per_worker.get()
             );
         }
+        let served: Vec<String> = config
+            .targets
+            .iter()
+            .map(|(m, v)| format!("{m}/{}", v.label()))
+            .collect();
+        for (primary, fb) in &res.fallback {
+            if !served.iter().any(|l| l == fb) {
+                crate::log_warn!(
+                    "fallback {fb:?} for {primary:?} is not being served; degradation disabled for it"
+                );
+            }
+        }
         for (model, variant) in &config.targets {
-            let (tx, rx) = channel();
-            let (ready_tx, ready_rx) = channel();
+            let label = format!("{model}/{}", variant.label());
+            // The handle starts with a placeholder sender; the
+            // supervisor installs the real queue before signalling
+            // readiness (and again on every restart).
+            let (placeholder_tx, _placeholder_rx) = channel();
+            let handle = Arc::new(TargetHandle::new(
+                label.clone(),
+                placeholder_tx,
+                res.queue_bound,
+            ));
             let wc = WorkerConfig {
                 artifacts_dir: config.artifacts_dir.clone(),
                 model: model.clone(),
@@ -73,15 +158,17 @@ impl Server {
                 batcher: config.batcher.clone(),
                 threads: per_worker,
             };
-            let m = metrics.clone();
-            let label = format!("{model}/{}", variant.label());
-            let handle = std::thread::Builder::new()
-                .name(format!("worker-{label}"))
-                .spawn(move || run_worker(wc, rx, m, ready_tx))
-                .context("spawning worker thread")?;
-            targets.insert(label.clone(), tx.clone());
-            senders.push(tx);
+            let (ready_tx, ready_rx) = channel();
+            let sup = supervise(
+                wc,
+                handle.clone(),
+                metrics.clone(),
+                res.clone(),
+                ready_tx,
+            )?;
+            targets.insert(label.clone(), handle.clone());
             handles.push(handle);
+            supervisors.push(sup);
             readiness.push((label, ready_rx));
         }
         for (label, ready) in readiness {
@@ -91,11 +178,18 @@ impl Server {
                 .with_context(|| format!("worker {label} failed to load"))?;
             crate::log_info!("worker {label} ready");
         }
+        let policy = RoutePolicy {
+            slo: res.slo,
+            hold: res.hold,
+            fallback: res.fallback.clone(),
+            accuracy: res.accuracy.clone(),
+            default_deadline: res.default_deadline,
+        };
         Ok(Self {
-            router: Arc::new(Router::new(targets)),
+            router: Arc::new(Router::with_handles(targets, metrics.clone(), policy)),
             metrics,
-            senders,
             handles,
+            supervisors,
         })
     }
 
@@ -103,13 +197,175 @@ impl Server {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: flush queues, join workers.
+    /// Graceful shutdown: flush queues, join workers (via their
+    /// supervisors).
     pub fn shutdown(self) {
-        for tx in &self.senders {
-            let _ = tx.send(WorkerMsg::Shutdown);
+        for h in &self.handles {
+            h.begin_shutdown();
+            let _ = h.send(WorkerMsg::Shutdown);
         }
-        for h in self.handles {
-            let _ = h.join();
+        for sup in self.supervisors {
+            let _ = sup.join();
         }
+    }
+}
+
+/// Spawn the supervisor thread for one target.
+///
+/// The supervisor owns the worker lifecycle: it creates the worker
+/// queue, installs the sender into the router-visible [`TargetHandle`],
+/// runs the worker under `catch_unwind`, and on a panic fails the
+/// in-flight batch, backs off (exponential, capped), and restarts. The
+/// restart budget is cumulative per target: once `max_restarts` is
+/// exhausted the target is marked [`WorkerState::Dead`] — a worker that
+/// keeps crashing is broken, not unlucky, and restarting it forever
+/// would burn a constrained device's cycles on a crash loop.
+fn supervise(
+    wc: WorkerConfig,
+    handle: Arc<TargetHandle>,
+    metrics: Arc<Metrics>,
+    res: ResilienceConfig,
+    startup: Sender<Result<()>>,
+) -> Result<JoinHandle<()>> {
+    let label = handle.label.clone();
+    let shared = Arc::new(WorkerShared::new(label.clone()));
+    std::thread::Builder::new()
+        .name(format!("supervisor-{label}"))
+        .spawn(move || {
+            let mut startup = Some(startup);
+            let mut restarts: u32 = 0;
+            loop {
+                let (tx, rx) = channel();
+                handle.swap_sender(tx);
+                if handle.is_shutting_down() {
+                    // Shutdown raced the restart: the Shutdown message
+                    // went to the dead worker's queue. Don't spawn a
+                    // replacement.
+                    return;
+                }
+                let (ready_tx, ready_rx) = channel();
+                let worker = {
+                    let wc = wc.clone();
+                    let metrics = metrics.clone();
+                    let shared = shared.clone();
+                    std::thread::Builder::new()
+                        .name(format!("worker-{label}"))
+                        .spawn(move || {
+                            catch_unwind(AssertUnwindSafe(|| {
+                                run_worker(wc, rx, metrics, ready_tx, shared)
+                            }))
+                        })
+                };
+                let worker = match worker {
+                    Ok(w) => w,
+                    Err(e) => {
+                        if let Some(s) = startup.take() {
+                            let _ = s.send(Err(anyhow!("spawning worker {label}: {e}")));
+                        } else {
+                            crate::log_error!("{label}: respawn failed: {e}");
+                            handle.set_state(WorkerState::Dead);
+                        }
+                        return;
+                    }
+                };
+                // Wait for the worker to finish loading. A recv error
+                // means it died (panicked) before signalling.
+                let mut load_failed = false;
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {
+                        handle.set_state(WorkerState::Ready);
+                        if let Some(s) = startup.take() {
+                            let _ = s.send(Ok(()));
+                        } else {
+                            crate::log_info!("{label}: worker restarted and ready");
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        load_failed = true;
+                        if let Some(s) = startup.take() {
+                            // Startup load failure is fatal to
+                            // Server::start — surface it and stop.
+                            let _ = s.send(Err(e));
+                            let _ = worker.join();
+                            return;
+                        }
+                        crate::log_error!("{label}: reload failed: {e}");
+                    }
+                    Err(_) => { /* panicked during setup; join() reports it */ }
+                }
+                let crashed = match worker.join() {
+                    Ok(Ok(())) => load_failed,
+                    Ok(Err(panic)) => {
+                        let msg = panic_message(&panic);
+                        crate::log_error!("{label}: worker panicked: {msg}");
+                        metrics.record_worker_panic(&label);
+                        let failed = shared.fail_inflight(&metrics);
+                        if failed > 0 {
+                            crate::log_warn!(
+                                "{label}: failed {failed} in-flight request(s) from crashed batch"
+                            );
+                        }
+                        true
+                    }
+                    Err(_) => {
+                        // The thread itself was torn down abnormally.
+                        metrics.record_worker_panic(&label);
+                        shared.fail_inflight(&metrics);
+                        true
+                    }
+                };
+                if handle.is_shutting_down() {
+                    return;
+                }
+                if !crashed {
+                    // Clean exit without shutdown (e.g. a test sent
+                    // Shutdown directly): nothing to supervise anymore.
+                    return;
+                }
+                if let Some(s) = startup.take() {
+                    let _ = s.send(Err(anyhow!("worker {label} panicked during startup")));
+                    return;
+                }
+                restarts += 1;
+                if restarts > res.max_restarts {
+                    handle.set_state(WorkerState::Dead);
+                    crate::log_error!(
+                        "{label}: permanent failure after {} consecutive crashes; target marked dead",
+                        restarts
+                    );
+                    return;
+                }
+                handle.set_state(WorkerState::Restarting);
+                metrics.record_worker_restart(&label);
+                let backoff = res
+                    .backoff_base
+                    .saturating_mul(1u32 << (restarts - 1).min(16))
+                    .min(res.backoff_cap);
+                crate::log_warn!(
+                    "{label}: restarting worker (attempt {restarts}/{}) after {:?}",
+                    res.max_restarts,
+                    backoff
+                );
+                // Interruptible backoff: keep noticing shutdown.
+                let deadline = std::time::Instant::now() + backoff;
+                while std::time::Instant::now() < deadline {
+                    if handle.is_shutting_down() {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        })
+        .context("spawning supervisor thread")
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
     }
 }

@@ -8,15 +8,17 @@
 //! accelerator. The interpreter backend has no such constraint but uses
 //! the same single-owner layout.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::faults;
 use super::metrics::Metrics;
-use super::request::{ClassRequest, ClassResponse};
+use super::request::{ClassRequest, ClassResponse, ReplyStatus, RequestId};
 use crate::model::{Registry, VariantKey};
 use crate::runtime::interp::plan_cache::{BucketLadder, DynResident, ExecSource};
 use crate::runtime::interp::InterpExecutor;
@@ -30,6 +32,65 @@ pub enum WorkerMsg {
     Request(ClassRequest),
     /// Flush queues and stop.
     Shutdown,
+}
+
+/// State shared between a worker and its supervisor that must survive
+/// the worker unwinding: the in-flight reply registry.
+///
+/// Just before a batch executes, the worker registers a clone of every
+/// request's reply sender here; each entry is removed again immediately
+/// before its reply is sent. If the worker panics mid-batch, the
+/// supervisor drains whatever is left via [`WorkerShared::fail_inflight`]
+/// and sends each caller an explicit [`ReplyStatus::Failed`] reply — so
+/// a crash costs the affected callers one error response, never a hang,
+/// and never a duplicate (a request is either answered by the worker or
+/// by the supervisor, not both).
+pub struct WorkerShared {
+    pub label: String,
+    inflight: Mutex<HashMap<RequestId, (Sender<ClassResponse>, Instant)>>,
+}
+
+impl WorkerShared {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), inflight: Mutex::new(HashMap::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<RequestId, (Sender<ClassResponse>, Instant)>> {
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register a batch about to execute.
+    fn register(&self, batch: &[ClassRequest]) {
+        let mut map = self.lock();
+        for req in batch {
+            map.insert(req.id, (req.reply.clone(), req.enqueued));
+        }
+    }
+
+    /// Remove one entry (the worker is about to answer it itself).
+    fn take(&self, id: RequestId) {
+        self.lock().remove(&id);
+    }
+
+    /// Fail every still-registered request (supervisor crash path).
+    /// Returns how many replies were sent.
+    pub fn fail_inflight(&self, metrics: &Metrics) -> usize {
+        let drained: Vec<_> = self.lock().drain().collect();
+        let n = drained.len();
+        for (id, (reply, enqueued)) in drained {
+            let resp = ClassResponse::terminal(
+                id,
+                ReplyStatus::Failed,
+                enqueued.elapsed().as_secs_f64(),
+                format!("{} (worker crashed)", self.label),
+            );
+            let _ = reply.send(resp);
+        }
+        if n > 0 {
+            metrics.record_failed(&self.label, n as u64);
+        }
+        n
+    }
 }
 
 /// Worker configuration.
@@ -55,8 +116,10 @@ pub struct WorkerConfig {
 /// see `runtime::pjrt`); call [`VariantExecutor::warmup`] to force it.
 pub struct VariantExecutor {
     pub label: String,
-    /// Batch sizes with an available HLO artifact, ascending.
-    pub batch_sizes: Vec<usize>,
+    /// Batch sizes with an available HLO artifact, ascending and
+    /// validated non-empty at load — every accessor below may rely on
+    /// that invariant.
+    batch_sizes: Vec<usize>,
     binding: Binding,
     pub img_shape: [usize; 3],
     pub n_classes: usize,
@@ -91,7 +154,16 @@ impl VariantExecutor {
         let mut batch_sizes: Vec<usize> = variant.hlo_paths.keys().copied().collect();
         batch_sizes.sort_unstable();
         if batch_sizes.is_empty() {
-            return Err(anyhow!("{model}/{}: no HLO artifacts", key.label()));
+            // Validated here, once, so the batch-size accessors below
+            // never have to handle an empty ladder at request time.
+            return Err(anyhow!("no HLO artifacts listed in the manifest"))
+                .with_context(|| {
+                    format!(
+                        "loading {model}/{}: a variant must compile at least one \
+                         batch size before it can be served",
+                        key.label()
+                    )
+                });
         }
         // One shared host copy of the raw weights for every batch size;
         // the clustered representation rides along so cluster-native
@@ -167,13 +239,24 @@ impl VariantExecutor {
         Ok(())
     }
 
+    /// Batch sizes with an available HLO artifact, ascending (non-empty
+    /// by the load-time check).
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// The largest compiled batch size.
+    pub fn max_batch_size(&self) -> usize {
+        self.batch_sizes.last().copied().unwrap_or(1)
+    }
+
     /// Smallest available batch size >= n (or the largest available).
     pub fn pick_batch_size(&self, n: usize) -> usize {
-        *self
-            .batch_sizes
+        self.batch_sizes
             .iter()
-            .find(|&&b| b >= n)
-            .unwrap_or(self.batch_sizes.last().unwrap())
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch_size())
     }
 
     fn resident_for(&self, b: usize) -> Result<&dyn ResidentExecutor> {
@@ -259,11 +342,15 @@ pub fn stack_images(images: &[&Tensor]) -> Result<Tensor> {
 }
 
 /// The worker loop: runs until `Shutdown` or sender disconnect.
+///
+/// The supervisor runs this under `catch_unwind`; `shared` carries the
+/// in-flight registry it uses to fail a crashed batch's callers.
 pub fn run_worker(
     config: WorkerConfig,
     rx: Receiver<WorkerMsg>,
     metrics: Arc<Metrics>,
     ready: Sender<Result<()>>,
+    shared: Arc<WorkerShared>,
 ) {
     // All backend state is built on this thread (PJRT is not Send).
     let setup = (|| -> Result<(VariantExecutor, DynamicBatcher)> {
@@ -308,32 +395,14 @@ pub fn run_worker(
         match msg {
             Ok(WorkerMsg::Request(req)) => {
                 if let Err(rejected) = batcher.push(req) {
-                    metrics.record_rejection(&exec.label);
-                    // Reply with an empty-logits rejection so the client
-                    // does not hang.
-                    let resp = ClassResponse::from_logits(
-                        rejected.id,
-                        vec![],
-                        rejected.enqueued.elapsed().as_secs_f64(),
-                        0,
-                        format!("{} (rejected)", exec.label),
-                    );
-                    let _ = rejected.reply.send(resp);
+                    reject_overloaded(&exec.label, rejected, &metrics);
                 }
                 // Opportunistically drain whatever is already queued.
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
                         WorkerMsg::Request(r) => {
                             if let Err(rej) = batcher.push(r) {
-                                metrics.record_rejection(&exec.label);
-                                let resp = ClassResponse::from_logits(
-                                    rej.id,
-                                    vec![],
-                                    rej.enqueued.elapsed().as_secs_f64(),
-                                    0,
-                                    format!("{} (rejected)", exec.label),
-                                );
-                                let _ = rej.reply.send(resp);
+                                reject_overloaded(&exec.label, rej, &metrics);
                             }
                         }
                         WorkerMsg::Shutdown => {
@@ -347,16 +416,50 @@ pub fn run_worker(
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => running = false,
         }
+        // Expired requests never reach a batch: answering them first
+        // keeps a saturated worker from burning its budget on replies
+        // nobody is waiting for.
+        reap_expired(&exec.label, &mut batcher, &metrics);
         // Cut and execute ready batches.
         while let Some(batch) = batcher.next_batch(Instant::now()) {
             batcher.set_executor_busy(true);
-            execute_batch(&exec, batch, &metrics);
+            execute_batch(&exec, batch, &metrics, &shared);
         }
         batcher.set_executor_busy(false);
     }
-    // Drain remaining work before exiting.
+    // Drain remaining work before exiting (minus anything that expired
+    // while queued).
+    reap_expired(&exec.label, &mut batcher, &metrics);
     for batch in batcher.flush() {
-        execute_batch(&exec, batch, &metrics);
+        execute_batch(&exec, batch, &metrics, &shared);
+    }
+}
+
+/// Reply `Overloaded` to a request the batcher's queue cap rejected.
+fn reject_overloaded(label: &str, req: ClassRequest, metrics: &Metrics) {
+    metrics.record_rejection(label);
+    let resp = ClassResponse::terminal(
+        req.id,
+        ReplyStatus::Overloaded,
+        req.enqueued.elapsed().as_secs_f64(),
+        format!("{label} (rejected)"),
+    );
+    let _ = req.reply.send(resp);
+}
+
+/// Drop every queued request whose deadline has passed, replying
+/// `Timeout` to each.
+fn reap_expired(label: &str, batcher: &mut DynamicBatcher, metrics: &Metrics) {
+    let now = Instant::now();
+    for req in batcher.take_expired(now) {
+        metrics.record_timeout(label);
+        let resp = ClassResponse::terminal(
+            req.id,
+            ReplyStatus::Timeout,
+            req.enqueued.elapsed().as_secs_f64(),
+            format!("{label} (deadline)"),
+        );
+        let _ = req.reply.send(resp);
     }
 }
 
@@ -364,13 +467,23 @@ fn execute_batch(
     exec: &VariantExecutor,
     batch: Vec<ClassRequest>,
     metrics: &Metrics,
+    shared: &WorkerShared,
 ) {
+    // Register every caller before anything can fail or panic: from here
+    // on, either this function answers a request (taking it back out
+    // first) or the supervisor fails it from the registry.
+    shared.register(&batch);
     let t_exec = Instant::now();
+    // Fault-injection hook (inert unless CLUSTERFORMER_FAULTS or a test
+    // targets this label). Sits inside the timed window after
+    // registration so an injected panic exercises the real crash path.
+    faults::before_batch(&exec.label);
     let imgs: Vec<&Tensor> = batch.iter().map(|r| &r.image).collect();
     let stacked = match stack_images(&imgs) {
         Ok(s) => s,
         Err(e) => {
             crate::log_error!("{}: stacking failed: {e}", exec.label);
+            fail_batch(exec, batch, metrics, shared);
             return;
         }
     };
@@ -404,22 +517,37 @@ fn execute_batch(
                     b,
                     exec.label.clone(),
                 );
+                // Deregister before replying: once the caller has its
+                // answer, a later crash must not produce a second one.
+                shared.take(req.id);
                 let _ = req.reply.send(resp);
             }
         }
         Err(e) => {
             crate::log_error!("{}: execute failed: {e}", exec.label);
-            for req in batch {
-                let resp = ClassResponse::from_logits(
-                    req.id,
-                    vec![],
-                    req.enqueued.elapsed().as_secs_f64(),
-                    0,
-                    format!("{} (error)", exec.label),
-                );
-                let _ = req.reply.send(resp);
-            }
+            fail_batch(exec, batch, metrics, shared);
         }
+    }
+}
+
+/// Answer every request in a batch that could not execute with a
+/// `Failed` terminal reply.
+fn fail_batch(
+    exec: &VariantExecutor,
+    batch: Vec<ClassRequest>,
+    metrics: &Metrics,
+    shared: &WorkerShared,
+) {
+    metrics.record_failed(&exec.label, batch.len() as u64);
+    for req in batch {
+        let resp = ClassResponse::terminal(
+            req.id,
+            ReplyStatus::Failed,
+            req.enqueued.elapsed().as_secs_f64(),
+            format!("{} (error)", exec.label),
+        );
+        shared.take(req.id);
+        let _ = req.reply.send(resp);
     }
 }
 

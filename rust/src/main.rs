@@ -16,7 +16,8 @@ use anyhow::Result;
 
 use clusterformer::clustering::{ClusterScheme, Quantizer};
 use clusterformer::coordinator::{
-    eval::evaluate, BatchPolicy, BatcherConfig, Server, ServerConfig,
+    eval::evaluate, BatchPolicy, BatcherConfig, ReplyStatus, ResilienceConfig, Server,
+    ServerConfig, SubmitError,
 };
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::{Registry, VariantKey};
@@ -59,6 +60,10 @@ fn cli() -> Cli {
                 .opt("seed", "7", "workload RNG seed")
                 .opt("threads", "0", "interpreter kernel threads (0 = all cores)")
                 .opt("simd", "auto", "kernel ISA: auto | scalar | avx2 | neon")
+                .opt("slo-ms", "0", "p95 queue-wait SLO in ms; degrade to --fallback beyond it (0 = off)")
+                .opt("fallback", "", "cheaper variant to degrade to under SLO pressure (e.g. perlayer_16)")
+                .opt("queue-bound", "0", "per-variant in-flight admission bound (0 = unbounded)")
+                .opt("deadline-ms", "0", "per-request deadline in ms; expired requests time out (0 = none)")
                 .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
                 .flag("no-plan-cache", "bind a fresh plan per shape instead of caching (A/B the cache)"),
         )
@@ -267,9 +272,32 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
         "deadline" => BatchPolicy::Deadline,
         _ => BatchPolicy::Adaptive,
     };
+    let target = format!("{model}/{}", variant.label());
+    let mut targets = vec![(model.clone(), variant)];
+    let mut resilience = ResilienceConfig {
+        queue_bound: args.usize("queue-bound")?,
+        ..ResilienceConfig::default()
+    };
+    let slo_ms = args.usize("slo-ms")?;
+    if slo_ms > 0 {
+        resilience.slo = Some(Duration::from_millis(slo_ms as u64));
+    }
+    let deadline_ms = args.usize("deadline-ms")?;
+    if deadline_ms > 0 {
+        resilience.default_deadline = Some(Duration::from_millis(deadline_ms as u64));
+    }
+    let fallback = args.str("fallback")?;
+    if !fallback.is_empty() {
+        // Serve the cheaper variant alongside the primary and register
+        // it as the SLO-degradation fallback.
+        let fb_key = VariantKey::parse(fallback)?;
+        let fb_target = format!("{model}/{}", fb_key.label());
+        targets.push((model.clone(), fb_key));
+        resilience.fallback.insert(target.clone(), fb_target);
+    }
     let server = Server::start(ServerConfig {
         artifacts_dir: args.str("artifacts")?.into(),
-        targets: vec![(model.clone(), variant)],
+        targets,
         backend: BackendKind::parse(args.str("backend")?)?,
         batcher: BatcherConfig {
             max_batch: args.usize("max-batch")?,
@@ -278,8 +306,8 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
             queue_cap: 1024,
         },
         threads: ThreadBudget::from_env(),
+        resilience,
     })?;
-    let target = format!("{model}/{}", variant.label());
     log_info!("serving {target}");
 
     // Synthetic Poisson open-loop load from the validation set.
@@ -290,6 +318,7 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
     let mut rng = Pcg32::new(args.usize("seed")? as u64);
     let router = Arc::new(server.router.clone());
     let mut pending = Vec::new();
+    let mut shed_at_submit = 0usize;
     let t0 = Instant::now();
     let mut i = 0usize;
     while t0.elapsed().as_secs_f64() < duration {
@@ -299,20 +328,31 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
         let mut img = images.slice_rows(row, row + 1)?;
         let shape = img.shape()[1..].to_vec();
         img.reshape(shape)?;
-        pending.push(router.submit(&target, img)?.1);
+        match router.submit(&target, img) {
+            Ok((_, rx)) => pending.push(rx),
+            // Admission control shedding is an expected outcome under
+            // --queue-bound, not a CLI error.
+            Err(SubmitError::Overloaded { .. }) => shed_at_submit += 1,
+            Err(e) => return Err(e.into()),
+        }
         i += 1;
     }
-    let mut ok = 0usize;
+    let mut by_status = std::collections::HashMap::new();
     for rx in pending {
         if let Ok(resp) = rx.recv_timeout(Duration::from_secs(30)) {
-            if !resp.logits.is_empty() {
-                ok += 1;
-            }
+            *by_status.entry(resp.status).or_insert(0usize) += 1;
         }
     }
     let snap = server.snapshot();
     println!("\n{}", snap.markdown());
-    println!("completed {ok}/{i} requests");
+    let ok = by_status.get(&ReplyStatus::Completed).copied().unwrap_or(0);
+    println!(
+        "completed {ok}/{i} requests (timeout {}, overloaded {}, failed {}, shed at submit {})",
+        by_status.get(&ReplyStatus::Timeout).copied().unwrap_or(0),
+        by_status.get(&ReplyStatus::Overloaded).copied().unwrap_or(0),
+        by_status.get(&ReplyStatus::Failed).copied().unwrap_or(0),
+        shed_at_submit
+    );
     server.shutdown();
     Ok(())
 }

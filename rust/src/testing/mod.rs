@@ -3,5 +3,7 @@
 
 pub mod fixtures;
 pub mod prop;
+pub mod synthetic;
 
 pub use prop::{check, ulp_dist, Gen};
+pub use synthetic::SyntheticServing;

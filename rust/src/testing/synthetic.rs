@@ -1,0 +1,235 @@
+//! Self-contained synthetic serving artifacts: a tiny classifier
+//! (logits = flatten(x) @ w + b over [2,2,3] "images") written as a
+//! complete artifacts directory — manifest, weights tpak, clustered
+//! tpak, and baseline/clustered HLO at batch 1 and 4 — so integration
+//! tests and benches can start a real [`Server`][crate::coordinator::Server]
+//! without any prebuilt model artifacts.
+//!
+//! The model **name** is caller-chosen. That matters for fault-injection
+//! tests: [`crate::coordinator::faults`] rules are keyed by target label
+//! process-wide, so each test uses its own model name and injectors
+//! never leak across concurrently running tests.
+//!
+//! The clustered HLO uses the exact `u8 indices -> convert -> gather
+//! (codebook row) -> dot` lowering the LUT planner recognizes, so the
+//! clustered variant exercises the cluster-native path end-to-end.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::clustering::{ClusterScheme, ClusteredTensors, Quantizer};
+use crate::tensor::{io, io::TensorPack, Tensor};
+use crate::util::rng::Pcg32;
+
+/// Flattened image length ([2,2,3]).
+pub const K: usize = 12;
+/// Number of classes.
+pub const CLASSES: usize = 4;
+/// Cluster count of the clustered variant.
+pub const CLUSTERS: usize = 8;
+
+fn baseline_hlo(model: &str, batch: usize) -> String {
+    format!(
+        "HloModule {model}_baseline_b{batch}\n\
+         ENTRY %main (x: f32[{batch},2,2,3], w: f32[{K},{CLASSES}], b0: f32[{CLASSES}]) -> (f32[{batch},{CLASSES}]) {{\n  \
+         %x = f32[{batch},2,2,3]{{3,2,1,0}} parameter(0)\n  \
+         %w = f32[{K},{CLASSES}]{{1,0}} parameter(1)\n  \
+         %b0 = f32[{CLASSES}]{{0}} parameter(2)\n  \
+         %xr = f32[{batch},{K}]{{1,0}} reshape(%x)\n  \
+         %d = f32[{batch},{CLASSES}]{{1,0}} dot(%xr, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+         %bb = f32[{batch},{CLASSES}]{{1,0}} broadcast(%b0), dimensions={{1}}\n  \
+         %o = f32[{batch},{CLASSES}]{{1,0}} add(%d, %bb)\n  \
+         ROOT %t = (f32[{batch},{CLASSES}]{{1,0}}) tuple(%o)\n}}\n"
+    )
+}
+
+fn clustered_hlo(model: &str, batch: usize) -> String {
+    // Input order is the clustered-variant contract: (images, codebooks,
+    // *leaves) with the clustered w as u8 indices and the bias as f32.
+    format!(
+        "HloModule {model}_clustered_b{batch}\n\
+         ENTRY %main (x: f32[{batch},2,2,3], cbs: f32[1,256], idxw: u8[{K},{CLASSES}], b0: f32[{CLASSES}]) -> (f32[{batch},{CLASSES}]) {{\n  \
+         %x = f32[{batch},2,2,3]{{3,2,1,0}} parameter(0)\n  \
+         %cbs = f32[1,256]{{1,0}} parameter(1)\n  \
+         %idxw = u8[{K},{CLASSES}]{{1,0}} parameter(2)\n  \
+         %b0 = f32[{CLASSES}]{{0}} parameter(3)\n  \
+         %xr = f32[{batch},{K}]{{1,0}} reshape(%x)\n  \
+         %sl = f32[1,256]{{1,0}} slice(%cbs), slice={{[0:1], [0:256]}}\n  \
+         %row = f32[256]{{0}} reshape(%sl)\n  \
+         %cvt = s32[{K},{CLASSES}]{{1,0}} convert(%idxw)\n  \
+         %w = f32[{K},{CLASSES}]{{1,0}} gather(%row, %cvt), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n  \
+         %d = f32[{batch},{CLASSES}]{{1,0}} dot(%xr, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
+         %bb = f32[{batch},{CLASSES}]{{1,0}} broadcast(%b0), dimensions={{1}}\n  \
+         %o = f32[{batch},{CLASSES}]{{1,0}} add(%d, %bb)\n  \
+         ROOT %t = (f32[{batch},{CLASSES}]{{1,0}}) tuple(%o)\n}}\n"
+    )
+}
+
+fn manifest_json(model: &str) -> String {
+    format!(
+        r#"{{
+  "version": 1, "quick": true,
+  "data": {{"val": "val.tpak", "n_val": 0, "n_classes": {CLASSES}, "img_size": 2}},
+  "cluster_sweep": [{CLUSTERS}], "schemes": ["perlayer"],
+  "codebook_pad": 256, "batch_sizes": [1, 4], "golden_n": 0,
+  "models": {{
+    "{model}": {{
+      "config": {{"name": "{model}", "img_size": 2, "patch": 1, "dim": 4,
+                 "depth": 1, "heads": 1, "mlp_ratio": 1, "n_classes": {CLASSES},
+                 "distilled": false}},
+      "params": [
+        {{"name": "w", "shape": [{K}, {CLASSES}], "clustered": true}},
+        {{"name": "b", "shape": [{CLASSES}], "clustered": false}}
+      ],
+      "weights": "{model}_weights.tpak",
+      "clustered": {{"perlayer_{CLUSTERS}": {{"file": "{model}_clustered.tpak", "table_bytes": {table}}}}},
+      "hlo": {{"baseline": {{"1": "{model}_b1.hlo.txt", "4": "{model}_b4.hlo.txt"}},
+              "clustered": {{"1": "{model}_c1.hlo.txt", "4": "{model}_c4.hlo.txt"}}}},
+      "goldens": "{model}_goldens.tpak",
+      "baseline_top1": 0.0, "baseline_top5": 0.0
+    }}
+  }}
+}}"#,
+        table = CLUSTERS * 4
+    )
+}
+
+/// A synthetic artifacts directory plus the ground-truth weights needed
+/// to compute reference answers.
+pub struct SyntheticServing {
+    pub dir: PathBuf,
+    pub model: String,
+    /// Raw weight matrix, row-major [K, CLASSES].
+    pub w: Vec<f32>,
+    /// Bias, [CLASSES].
+    pub b: Vec<f32>,
+    /// The clustered representation of `w` (for dequantized references).
+    pub ct: ClusteredTensors,
+}
+
+impl SyntheticServing {
+    /// Write a complete artifacts directory for a model named `model`
+    /// into a per-process temp dir.
+    pub fn build(model: &str) -> Self {
+        let dir = std::env::temp_dir().join(format!(
+            "clusterformer-synth-{model}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut rng = Pcg32::new(20210616);
+        let w: Vec<f32> = (0..K * CLASSES).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..CLASSES).map(|_| rng.normal() as f32 * 0.1).collect();
+        let wt = Tensor::from_f32(vec![K, CLASSES], &w).unwrap();
+        let bt = Tensor::from_f32(vec![CLASSES], &b).unwrap();
+
+        let mut weights = TensorPack::new();
+        weights.insert("w", wt.clone());
+        weights.insert("b", bt);
+        io::write_tpak(dir.join(format!("{model}_weights.tpak")), &weights).unwrap();
+
+        let names = vec!["w".to_string()];
+        let mut tensors = HashMap::new();
+        tensors.insert("w".to_string(), wt);
+        let ct = Quantizer::new(CLUSTERS, ClusterScheme::PerLayer)
+            .run(&names, &tensors)
+            .unwrap();
+        io::write_tpak(dir.join(format!("{model}_clustered.tpak")), &ct.to_pack())
+            .unwrap();
+
+        std::fs::write(dir.join(format!("{model}_b1.hlo.txt")), baseline_hlo(model, 1))
+            .unwrap();
+        std::fs::write(dir.join(format!("{model}_b4.hlo.txt")), baseline_hlo(model, 4))
+            .unwrap();
+        std::fs::write(dir.join(format!("{model}_c1.hlo.txt")), clustered_hlo(model, 1))
+            .unwrap();
+        std::fs::write(dir.join(format!("{model}_c4.hlo.txt")), clustered_hlo(model, 4))
+            .unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_json(model)).unwrap();
+        Self { dir, model: model.to_string(), w, b, ct }
+    }
+
+    /// "model/baseline" — the raw-weights variant's target label.
+    pub fn baseline_target(&self) -> String {
+        format!("{}/baseline", self.model)
+    }
+
+    /// "model/perlayer_8" — the clustered variant's target label.
+    pub fn clustered_target(&self) -> String {
+        format!("{}/perlayer_{CLUSTERS}", self.model)
+    }
+
+    /// The clustered variant's key for `ServerConfig::targets`.
+    pub fn clustered_key() -> crate::model::VariantKey {
+        crate::model::VariantKey::Clustered {
+            scheme: ClusterScheme::PerLayer,
+            clusters: CLUSTERS,
+        }
+    }
+
+    /// A deterministic random [2,2,3] image.
+    pub fn image(seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let vals: Vec<f32> = (0..K).map(|_| rng.normal() as f32).collect();
+        Tensor::from_f32(vec![2, 2, 3], &vals).unwrap()
+    }
+
+    /// Reference logits against the raw weights.
+    pub fn reference_logits(&self, x: &Tensor) -> Vec<f32> {
+        logits(x, &self.w, &self.b)
+    }
+
+    /// Reference logits against the dequantized clustered weights.
+    pub fn reference_logits_clustered(&self, x: &Tensor) -> Vec<f32> {
+        let idx = self.ct.indices["w"].as_u8().unwrap();
+        let cb = self.ct.codebooks.as_f32().unwrap();
+        let wq: Vec<f32> = idx.iter().map(|&i| cb[i as usize]).collect();
+        logits(x, &wq, &self.b)
+    }
+
+    /// Remove the artifacts directory (best effort).
+    pub fn cleanup(&self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// logits[c] = b[c] + sum_i x[i] * w[i*CLASSES + c]
+fn logits(x: &Tensor, w: &[f32], b: &[f32]) -> Vec<f32> {
+    let xv = x.as_f32().unwrap();
+    (0..CLASSES)
+        .map(|c| {
+            let mut acc = b[c];
+            for i in 0..K {
+                acc += xv[i] * w[i * CLASSES + c];
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_complete_artifacts_dir() {
+        let s = SyntheticServing::build("synthunit");
+        for f in [
+            "manifest.json",
+            "synthunit_weights.tpak",
+            "synthunit_clustered.tpak",
+            "synthunit_b1.hlo.txt",
+            "synthunit_b4.hlo.txt",
+            "synthunit_c1.hlo.txt",
+            "synthunit_c4.hlo.txt",
+        ] {
+            assert!(s.dir.join(f).exists(), "missing {f}");
+        }
+        assert_eq!(s.baseline_target(), "synthunit/baseline");
+        assert_eq!(s.clustered_target(), "synthunit/perlayer_8");
+        let x = SyntheticServing::image(1);
+        assert_eq!(s.reference_logits(&x).len(), CLASSES);
+        s.cleanup();
+        assert!(!s.dir.exists());
+    }
+}

@@ -37,6 +37,7 @@ fn start_server(policy: BatchPolicy) -> Server {
             queue_cap: 64,
         },
         threads: clusterformer::runtime::ThreadBudget::from_env(),
+        resilience: Default::default(),
     })
     .expect("server start (run `make artifacts` first)")
 }
@@ -112,6 +113,7 @@ fn shutdown_flushes_inflight_requests() {
             queue_cap: 64,
         },
         threads: clusterformer::runtime::ThreadBudget::from_env(),
+        resilience: Default::default(),
     })
     .unwrap();
     let mut rxs = Vec::new();

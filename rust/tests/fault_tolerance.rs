@@ -1,0 +1,491 @@
+//! Chaos tests for the fault-tolerance layer: worker supervision and
+//! restart, request deadlines, admission-control shedding, SLO-aware
+//! degradation, and permanent failure — all driven deterministically
+//! through `coordinator::faults` injectors against synthetic artifacts
+//! (no prebuilt models needed).
+//!
+//! The invariant every test enforces: **every submitted request gets
+//! exactly one terminal reply** (Completed / Timeout / Overloaded /
+//! Failed) — no hangs, no duplicates, no leaks.
+//!
+//! Fault rules are keyed by target label process-wide, so each test
+//! uses its own model name and they can run concurrently.
+
+use std::time::{Duration, Instant};
+
+use clusterformer::coordinator::{
+    faults, BatchPolicy, BatcherConfig, PendingReply, ReplyStatus, ResilienceConfig,
+    Router, Server, ServerConfig, SubmitError, SubmitOptions,
+};
+use clusterformer::model::VariantKey;
+use clusterformer::runtime::{BackendKind, ThreadBudget};
+use clusterformer::testing::synthetic::{SyntheticServing, CLASSES};
+
+fn start_server(synth: &SyntheticServing, resilience: ResilienceConfig) -> Server {
+    start_server_two(synth, resilience, false)
+}
+
+fn start_server_two(
+    synth: &SyntheticServing,
+    resilience: ResilienceConfig,
+    with_clustered: bool,
+) -> Server {
+    let mut targets = vec![(synth.model.clone(), VariantKey::Baseline)];
+    if with_clustered {
+        targets.push((synth.model.clone(), SyntheticServing::clustered_key()));
+    }
+    Server::start(ServerConfig {
+        artifacts_dir: synth.dir.clone(),
+        targets,
+        backend: BackendKind::Interp,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 100_000,
+        },
+        threads: ThreadBudget::new(2),
+        resilience,
+    })
+    .expect("synthetic server must start")
+}
+
+/// Receive a terminal reply, then assert the exactly-once contract: the
+/// second receive must report disconnection, never a duplicate.
+fn recv_terminal(rx: &PendingReply) -> clusterformer::coordinator::ClassResponse {
+    let resp = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("every request must get a terminal reply");
+    assert!(
+        rx.recv_timeout(Duration::from_millis(10)).is_err(),
+        "request {} answered twice",
+        resp.id
+    );
+    resp
+}
+
+fn wait_for_state(
+    router: &Router,
+    target: &str,
+    want: clusterformer::coordinator::router::WorkerState,
+) {
+    let handle = router.handle(target).expect("target exists");
+    let t0 = Instant::now();
+    while handle.state() != want {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{target} never reached {want:?} (state {:?})",
+            handle.state()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A worker panic mid-stream: every caller still gets exactly one
+/// terminal reply, the supervisor restarts the worker, and the server
+/// keeps serving afterwards.
+#[test]
+fn worker_panic_recovers_and_reconciles() {
+    let synth = SyntheticServing::build("chaos");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("panic:{target}:3"));
+    let server = start_server(
+        &synth,
+        ResilienceConfig {
+            max_restarts: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(50),
+            ..ResilienceConfig::default()
+        },
+    );
+    let router = server.router.clone();
+
+    const N: usize = 60;
+    let mut pending = Vec::new();
+    for i in 0..N {
+        pending
+            .push(router.submit(&target, SyntheticServing::image(i as u64 + 1)).unwrap().1);
+    }
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for rx in &pending {
+        let resp = recv_terminal(rx);
+        match resp.status {
+            ReplyStatus::Completed => {
+                assert_eq!(resp.logits.len(), CLASSES);
+                completed += 1;
+            }
+            ReplyStatus::Failed => failed += 1,
+            other => panic!("unexpected status {other:?}"),
+        }
+    }
+    assert_eq!(completed + failed, N, "totals must reconcile");
+    assert!(failed >= 1, "the injected panic must fail at least its own batch");
+
+    // The supervisor records the restart moments after sending the
+    // crashed batch's Failed replies, so poll briefly instead of racing
+    // it; the counts themselves must then be exact.
+    let t0 = Instant::now();
+    let v = loop {
+        let snap = server.snapshot();
+        let v = snap.per_variant[target.as_str()].clone();
+        if v.worker_restarts >= 1 || t0.elapsed() > Duration::from_secs(10) {
+            break v;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(v.worker_panics, 1, "exactly one injected panic");
+    assert_eq!(v.worker_restarts, 1, "exactly one restart");
+    assert_eq!(v.requests, completed as u64);
+
+    // Post-recovery the target must serve again (submits during the
+    // restart window may shed — retry until the revived worker answers).
+    wait_for_state(&router, &target, clusterformer::coordinator::router::WorkerState::Ready);
+    let t0 = Instant::now();
+    loop {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never recovered");
+        match router.submit(&target, SyntheticServing::image(999)) {
+            Ok((_, rx)) => {
+                let resp = recv_terminal(&rx);
+                if resp.status == ReplyStatus::Completed {
+                    let want = synth.reference_logits(&SyntheticServing::image(999));
+                    for (g, e) in resp.logits.iter().zip(&want) {
+                        assert!((g - e).abs() <= 1e-4, "post-restart answer wrong");
+                    }
+                    break;
+                }
+            }
+            Err(SubmitError::Overloaded { .. }) => {}
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    faults::clear_faults(&target);
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Requests whose deadline expires while queued get a `Timeout` reply
+/// before ever reaching a batch.
+#[test]
+fn expired_deadlines_get_timeout() {
+    let synth = SyntheticServing::build("deadtest");
+    let target = synth.baseline_target();
+    // Every batch takes ~100ms, so anything queued behind one with a
+    // 10ms deadline is reaped.
+    faults::force_faults(&format!("slow:{target}:100ms"));
+    let server = start_server(&synth, ResilienceConfig::default());
+    let router = server.router.clone();
+
+    // A occupies the worker for ~100ms.
+    let (_, rx_a) = router.submit(&target, SyntheticServing::image(1)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    // B (10ms budget) and C (already expired) queue behind A.
+    let opts = SubmitOptions {
+        deadline: Some(Duration::from_millis(10)),
+        ..Default::default()
+    };
+    let (_, rx_b) = router
+        .submit_opts(&target, SyntheticServing::image(2), opts)
+        .unwrap();
+    let opts = SubmitOptions { deadline: Some(Duration::ZERO), ..Default::default() };
+    let (_, rx_c) = router
+        .submit_opts(&target, SyntheticServing::image(3), opts)
+        .unwrap();
+
+    let a = recv_terminal(&rx_a);
+    assert_eq!(a.status, ReplyStatus::Completed);
+    let b = recv_terminal(&rx_b);
+    assert_eq!(b.status, ReplyStatus::Timeout, "B's deadline expired while queued");
+    assert!(b.logits.is_empty());
+    let c = recv_terminal(&rx_c);
+    assert_eq!(c.status, ReplyStatus::Timeout, "C was dead on arrival");
+
+    let snap = server.snapshot();
+    assert_eq!(snap.per_variant[target.as_str()].timed_out, 2);
+
+    faults::clear_faults(&target);
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// With a bounded per-target queue, submits beyond the in-flight bound
+/// shed with `Overloaded` instead of growing an unbounded backlog — and
+/// admitted + shed always equals offered.
+#[test]
+fn queue_bound_sheds_overloaded() {
+    let synth = SyntheticServing::build("bound");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("slow:{target}:50ms"));
+    let server = start_server(
+        &synth,
+        ResilienceConfig { queue_bound: 4, ..ResilienceConfig::default() },
+    );
+    let router = server.router.clone();
+
+    const N: usize = 30;
+    let mut pending = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..N {
+        match router.submit(&target, SyntheticServing::image(i as u64 + 1)) {
+            Ok((_, rx)) => pending.push(rx),
+            Err(SubmitError::Overloaded { target: t }) => {
+                assert_eq!(t, target);
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed >= 1, "30 instant submits against a bound of 4 must shed");
+    assert!(pending.len() >= 4, "the bound's worth of requests must be admitted");
+    for rx in &pending {
+        let resp = recv_terminal(rx);
+        assert_eq!(resp.status, ReplyStatus::Completed, "admitted requests complete");
+    }
+    assert_eq!(pending.len() + shed, N, "admitted + shed == offered");
+
+    let snap = server.snapshot();
+    let v = &snap.per_variant[target.as_str()];
+    assert_eq!(v.shed, shed as u64);
+    assert_eq!(v.requests, pending.len() as u64);
+
+    // The depth gauge must fully drain: each RAII ticket drops just
+    // after its reply send, so give the worker a beat to finish.
+    let handle = router.handle(&target).unwrap();
+    let t0 = Instant::now();
+    while handle.depth() != 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "RAII tickets must return every slot (depth {})",
+            handle.depth()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    faults::clear_faults(&target);
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Under SLO pressure the router degrades eligible requests to the
+/// cheaper fallback variant (honoring per-request accuracy floors), and
+/// routes back to the primary once pressure clears.
+#[test]
+fn degradation_engages_and_disengages() {
+    let synth = SyntheticServing::build("degr");
+    let primary = synth.baseline_target();
+    let fallback = synth.clustered_target();
+    faults::force_faults(&format!("slow:{primary}:40ms"));
+    let mut resilience = ResilienceConfig {
+        slo: Some(Duration::from_millis(5)),
+        window: Duration::from_millis(100),
+        hold: Duration::from_millis(50),
+        ..ResilienceConfig::default()
+    };
+    resilience.fallback.insert(primary.clone(), fallback.clone());
+    resilience.accuracy.insert(primary.clone(), 0.9);
+    resilience.accuracy.insert(fallback.clone(), 0.6);
+    let server = start_server_two(&synth, resilience, true);
+    let router = server.router.clone();
+
+    // Hammer the slow primary until its recent p95 queue wait crosses
+    // the SLO and degradation engages.
+    let mut pending = Vec::new();
+    let t0 = Instant::now();
+    let mut engaged = false;
+    let mut i = 0u64;
+    while t0.elapsed() < Duration::from_secs(5) {
+        pending.push(router.submit(&primary, SyntheticServing::image(i + 1)).unwrap().1);
+        i += 1;
+        if router.degraded(&primary) {
+            engaged = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(engaged, "sustained overload must engage degradation");
+
+    // While engaged: an unconstrained request reroutes to the fallback…
+    let (_, rx) = router.submit(&primary, SyntheticServing::image(7001)).unwrap();
+    let resp = recv_terminal(&rx);
+    assert_eq!(resp.status, ReplyStatus::Completed);
+    assert!(
+        resp.served_by.starts_with(fallback.as_str()),
+        "engaged degradation must reroute to {fallback}, served_by={}",
+        resp.served_by
+    );
+    // …but a request whose accuracy floor the fallback (0.6) cannot meet
+    // stays pinned to the primary.
+    let opts = SubmitOptions { accuracy_floor: Some(0.8), ..Default::default() };
+    let (_, rx) = router
+        .submit_opts(&primary, SyntheticServing::image(7002), opts)
+        .unwrap();
+    let resp = recv_terminal(&rx);
+    assert_eq!(resp.status, ReplyStatus::Completed);
+    assert!(
+        resp.served_by.starts_with(primary.as_str()),
+        "accuracy floor above the fallback must pin to {primary}, served_by={}",
+        resp.served_by
+    );
+
+    let snap = server.snapshot();
+    assert!(
+        snap.per_variant[primary.as_str()].degraded >= 1,
+        "degraded rerouting must be counted against the primary"
+    );
+
+    // Drain the backlog, lift the slowness, and let the recent window
+    // expire: degradation must disengage and traffic return.
+    for rx in &pending {
+        recv_terminal(rx);
+    }
+    faults::clear_faults(&primary);
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(50));
+        if !router.degraded(&primary) {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "degradation must clear once pressure is gone"
+        );
+    }
+    let (_, rx) = router.submit(&primary, SyntheticServing::image(8001)).unwrap();
+    let resp = recv_terminal(&rx);
+    assert_eq!(resp.status, ReplyStatus::Completed);
+    assert!(
+        resp.served_by.starts_with(primary.as_str()),
+        "after pressure clears traffic must return to {primary}, served_by={}",
+        resp.served_by
+    );
+
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// A worker that crashes more than `max_restarts` times is marked
+/// permanently failed; submits then report `ShuttingDown` instead of
+/// feeding a crash loop.
+#[test]
+fn permanent_failure_after_max_restarts() {
+    let synth = SyntheticServing::build("permfail");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("panic:{target}:1,panic:{target}:2,panic:{target}:3"));
+    let server = start_server(
+        &synth,
+        ResilienceConfig {
+            max_restarts: 2,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(40),
+            ..ResilienceConfig::default()
+        },
+    );
+    let router = server.router.clone();
+    let handle = router.handle(&target).unwrap().clone();
+
+    use clusterformer::coordinator::router::WorkerState;
+    let t0 = Instant::now();
+    let mut crashes_seen = 0u32;
+    while handle.state() != WorkerState::Dead {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "restart budget must eventually exhaust (crashes {crashes_seen})"
+        );
+        // Feed the worker so its next batch hits the next panic rule;
+        // every reply (explicit Failed or synthesized on a dead queue)
+        // is still exactly-once.
+        match router.submit(&target, SyntheticServing::image(crashes_seen as u64 + 1)) {
+            Ok((_, rx)) => {
+                let resp = recv_terminal(&rx);
+                if resp.status == ReplyStatus::Failed {
+                    crashes_seen += 1;
+                } else {
+                    assert_eq!(resp.status, ReplyStatus::Completed);
+                }
+            }
+            Err(SubmitError::Overloaded { .. }) => {
+                // Restart window: the fresh queue is not installed yet.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(SubmitError::ShuttingDown { .. }) => break,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert_eq!(handle.state(), WorkerState::Dead);
+
+    // A dead target refuses new work explicitly.
+    match router.submit(&target, SyntheticServing::image(424242)) {
+        Err(SubmitError::ShuttingDown { target: t }) => assert_eq!(t, target),
+        other => panic!("expected ShuttingDown from a dead target, got {other:?}"),
+    }
+
+    let snap = server.snapshot();
+    let v = &snap.per_variant[target.as_str()];
+    assert_eq!(v.worker_panics, 3, "all three panic rules fired");
+    assert_eq!(v.worker_restarts, 2, "only max_restarts restarts were attempted");
+
+    faults::clear_faults(&target);
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Env-driven injection (what CI exercises): if `CLUSTERFORMER_FAULTS`
+/// targets the `envpanic` model, prove the panic fires and the stack
+/// reconciles. Skips visibly otherwise.
+#[test]
+fn env_injected_panic_reconciles() {
+    let spec = match faults::env_spec() {
+        Some(s) if s.contains("envpanic/baseline") => s,
+        _ => {
+            eprintln!(
+                "skipping env_injected_panic_reconciles: CLUSTERFORMER_FAULTS does \
+                 not target envpanic/baseline"
+            );
+            return;
+        }
+    };
+    eprintln!("running with CLUSTERFORMER_FAULTS={spec}");
+    let synth = SyntheticServing::build("envpanic");
+    let target = synth.baseline_target();
+    let server = start_server(
+        &synth,
+        ResilienceConfig {
+            backoff_base: Duration::from_millis(10),
+            ..ResilienceConfig::default()
+        },
+    );
+    let router = server.router.clone();
+
+    const N: usize = 20;
+    let mut pending = Vec::new();
+    for i in 0..N {
+        pending
+            .push(router.submit(&target, SyntheticServing::image(i as u64 + 1)).unwrap().1);
+    }
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for rx in &pending {
+        match recv_terminal(rx).status {
+            ReplyStatus::Completed => completed += 1,
+            ReplyStatus::Failed => failed += 1,
+            other => panic!("unexpected status {other:?}"),
+        }
+    }
+    assert_eq!(completed + failed, N);
+    let t0 = Instant::now();
+    let v = loop {
+        let snap = server.snapshot();
+        let v = snap.per_variant[target.as_str()].clone();
+        if v.worker_restarts >= v.worker_panics || t0.elapsed() > Duration::from_secs(10) {
+            break v;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert!(v.worker_panics >= 1, "the env-injected panic must have fired");
+    assert_eq!(v.worker_restarts, v.worker_panics, "every crash was restarted");
+
+    server.shutdown();
+    synth.cleanup();
+}

@@ -5,151 +5,20 @@
 //! metrics totals match what was sent, answers are numerically right,
 //! and shutdown flushes cleanly.
 //!
-//! Unlike `coordinator_e2e.rs` this needs **no prebuilt artifacts**: the
-//! test writes its own artifacts directory (manifest + weights tpak +
-//! clustered tpak + baseline/clustered HLO at batch 1 and 4) into a temp
-//! dir, with the clustered HLO using the exact `u8 indices -> convert ->
-//! gather(codebook row) -> dot` lowering the LUT planner recognizes.
+//! Needs **no prebuilt artifacts**: `testing::SyntheticServing` writes a
+//! complete artifacts directory (manifest + weights tpak + clustered
+//! tpak + baseline/clustered HLO at batch 1 and 4) into a temp dir.
+//!
+//! CI also runs this test once with `CLUSTERFORMER_FAULTS` slowing the
+//! `tiny/baseline` label: every assertion here must hold under injected
+//! slowness too (only wall time changes).
 
-use std::collections::HashMap;
-use std::path::PathBuf;
 use std::time::Duration;
 
-use clusterformer::clustering::{ClusterScheme, ClusteredTensors, Quantizer};
 use clusterformer::coordinator::{BatchPolicy, BatcherConfig, Server, ServerConfig};
 use clusterformer::model::VariantKey;
 use clusterformer::runtime::{BackendKind, ThreadBudget};
-use clusterformer::tensor::{io, io::TensorPack, Tensor};
-use clusterformer::util::rng::Pcg32;
-
-/// Tiny classifier over [2,2,3] "images": logits = reshape(x) @ w + b,
-/// with w [12, 4] (clustered in the second variant) and bias b [4].
-const K: usize = 12;
-const CLASSES: usize = 4;
-const CLUSTERS: usize = 8;
-
-fn baseline_hlo(batch: usize) -> String {
-    format!(
-        "HloModule tiny_baseline_b{batch}\n\
-         ENTRY %main (x: f32[{batch},2,2,3], w: f32[{K},{CLASSES}], b0: f32[{CLASSES}]) -> (f32[{batch},{CLASSES}]) {{\n  \
-         %x = f32[{batch},2,2,3]{{3,2,1,0}} parameter(0)\n  \
-         %w = f32[{K},{CLASSES}]{{1,0}} parameter(1)\n  \
-         %b0 = f32[{CLASSES}]{{0}} parameter(2)\n  \
-         %xr = f32[{batch},{K}]{{1,0}} reshape(%x)\n  \
-         %d = f32[{batch},{CLASSES}]{{1,0}} dot(%xr, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
-         %bb = f32[{batch},{CLASSES}]{{1,0}} broadcast(%b0), dimensions={{1}}\n  \
-         %o = f32[{batch},{CLASSES}]{{1,0}} add(%d, %bb)\n  \
-         ROOT %t = (f32[{batch},{CLASSES}]{{1,0}}) tuple(%o)\n}}\n"
-    )
-}
-
-fn clustered_hlo(batch: usize) -> String {
-    // Input order is the clustered-variant contract: (images, codebooks,
-    // *leaves) with the clustered w as u8 indices and the bias as f32.
-    format!(
-        "HloModule tiny_clustered_b{batch}\n\
-         ENTRY %main (x: f32[{batch},2,2,3], cbs: f32[1,256], idxw: u8[{K},{CLASSES}], b0: f32[{CLASSES}]) -> (f32[{batch},{CLASSES}]) {{\n  \
-         %x = f32[{batch},2,2,3]{{3,2,1,0}} parameter(0)\n  \
-         %cbs = f32[1,256]{{1,0}} parameter(1)\n  \
-         %idxw = u8[{K},{CLASSES}]{{1,0}} parameter(2)\n  \
-         %b0 = f32[{CLASSES}]{{0}} parameter(3)\n  \
-         %xr = f32[{batch},{K}]{{1,0}} reshape(%x)\n  \
-         %sl = f32[1,256]{{1,0}} slice(%cbs), slice={{[0:1], [0:256]}}\n  \
-         %row = f32[256]{{0}} reshape(%sl)\n  \
-         %cvt = s32[{K},{CLASSES}]{{1,0}} convert(%idxw)\n  \
-         %w = f32[{K},{CLASSES}]{{1,0}} gather(%row, %cvt), offset_dims={{}}, collapsed_slice_dims={{0}}, start_index_map={{0}}, index_vector_dim=2, slice_sizes={{1}}\n  \
-         %d = f32[{batch},{CLASSES}]{{1,0}} dot(%xr, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n  \
-         %bb = f32[{batch},{CLASSES}]{{1,0}} broadcast(%b0), dimensions={{1}}\n  \
-         %o = f32[{batch},{CLASSES}]{{1,0}} add(%d, %bb)\n  \
-         ROOT %t = (f32[{batch},{CLASSES}]{{1,0}}) tuple(%o)\n}}\n"
-    )
-}
-
-fn manifest_json() -> String {
-    format!(
-        r#"{{
-  "version": 1, "quick": true,
-  "data": {{"val": "val.tpak", "n_val": 0, "n_classes": {CLASSES}, "img_size": 2}},
-  "cluster_sweep": [{CLUSTERS}], "schemes": ["perlayer"],
-  "codebook_pad": 256, "batch_sizes": [1, 4], "golden_n": 0,
-  "models": {{
-    "tiny": {{
-      "config": {{"name": "tiny", "img_size": 2, "patch": 1, "dim": 4,
-                 "depth": 1, "heads": 1, "mlp_ratio": 1, "n_classes": {CLASSES},
-                 "distilled": false}},
-      "params": [
-        {{"name": "w", "shape": [{K}, {CLASSES}], "clustered": true}},
-        {{"name": "b", "shape": [{CLASSES}], "clustered": false}}
-      ],
-      "weights": "tiny_weights.tpak",
-      "clustered": {{"perlayer_{CLUSTERS}": {{"file": "tiny_clustered.tpak", "table_bytes": {table}}}}},
-      "hlo": {{"baseline": {{"1": "tiny_b1.hlo.txt", "4": "tiny_b4.hlo.txt"}},
-              "clustered": {{"1": "tiny_c1.hlo.txt", "4": "tiny_c4.hlo.txt"}}}},
-      "goldens": "tiny_goldens.tpak",
-      "baseline_top1": 0.0, "baseline_top5": 0.0
-    }}
-  }}
-}}"#,
-        table = CLUSTERS * 4
-    )
-}
-
-/// Write the synthetic artifacts directory; returns (dir, w, b, ct) so
-/// tests can compute reference answers.
-fn build_artifacts(tag: &str) -> (PathBuf, Vec<f32>, Vec<f32>, ClusteredTensors) {
-    let dir = std::env::temp_dir().join(format!(
-        "clusterformer-stress-{tag}-{}",
-        std::process::id()
-    ));
-    std::fs::create_dir_all(&dir).unwrap();
-
-    let mut rng = Pcg32::new(20210616);
-    let w: Vec<f32> = (0..K * CLASSES).map(|_| rng.normal() as f32).collect();
-    let b: Vec<f32> = (0..CLASSES).map(|_| rng.normal() as f32 * 0.1).collect();
-    let wt = Tensor::from_f32(vec![K, CLASSES], &w).unwrap();
-    let bt = Tensor::from_f32(vec![CLASSES], &b).unwrap();
-
-    let mut weights = TensorPack::new();
-    weights.insert("w", wt.clone());
-    weights.insert("b", bt);
-    io::write_tpak(dir.join("tiny_weights.tpak"), &weights).unwrap();
-
-    let names = vec!["w".to_string()];
-    let mut tensors = HashMap::new();
-    tensors.insert("w".to_string(), wt);
-    let ct = Quantizer::new(CLUSTERS, ClusterScheme::PerLayer)
-        .run(&names, &tensors)
-        .unwrap();
-    io::write_tpak(dir.join("tiny_clustered.tpak"), &ct.to_pack()).unwrap();
-
-    std::fs::write(dir.join("tiny_b1.hlo.txt"), baseline_hlo(1)).unwrap();
-    std::fs::write(dir.join("tiny_b4.hlo.txt"), baseline_hlo(4)).unwrap();
-    std::fs::write(dir.join("tiny_c1.hlo.txt"), clustered_hlo(1)).unwrap();
-    std::fs::write(dir.join("tiny_c4.hlo.txt"), clustered_hlo(4)).unwrap();
-    std::fs::write(dir.join("manifest.json"), manifest_json()).unwrap();
-    (dir, w, b, ct)
-}
-
-fn image(seed: u64) -> Tensor {
-    let mut rng = Pcg32::new(seed);
-    let vals: Vec<f32> = (0..K).map(|_| rng.normal() as f32).collect();
-    Tensor::from_f32(vec![2, 2, 3], &vals).unwrap()
-}
-
-/// Reference logits: flatten(x) @ weights + b (weights column-major over
-/// [K, CLASSES] row-major layout).
-fn reference_logits(x: &Tensor, w: &[f32], b: &[f32]) -> Vec<f32> {
-    let xv = x.as_f32().unwrap();
-    (0..CLASSES)
-        .map(|c| {
-            let mut acc = b[c];
-            for i in 0..K {
-                acc += xv[i] * w[i * CLASSES + c];
-            }
-            acc
-        })
-        .collect()
-}
+use clusterformer::testing::synthetic::{SyntheticServing, CLASSES, CLUSTERS};
 
 fn start_server(dir: &std::path::Path, total_threads: usize) -> Server {
     // total_threads lanes divided across the 2 variant workers by
@@ -158,10 +27,7 @@ fn start_server(dir: &std::path::Path, total_threads: usize) -> Server {
         artifacts_dir: dir.to_path_buf(),
         targets: vec![
             ("tiny".to_string(), VariantKey::Baseline),
-            (
-                "tiny".to_string(),
-                VariantKey::Clustered { scheme: ClusterScheme::PerLayer, clusters: CLUSTERS },
-            ),
+            ("tiny".to_string(), SyntheticServing::clustered_key()),
         ],
         backend: BackendKind::Interp,
         batcher: BatcherConfig {
@@ -172,15 +38,17 @@ fn start_server(dir: &std::path::Path, total_threads: usize) -> Server {
         },
         // e.g. 4 => 2 workers x 2 lanes on one shared process pool.
         threads: ThreadBudget::new(total_threads),
+        resilience: Default::default(),
     })
     .expect("synthetic server must start")
 }
 
 #[test]
 fn two_variant_server_survives_concurrent_clients() {
-    let (dir, w, b, ct) = build_artifacts("stress");
-    let server = start_server(&dir, 4);
-    let targets = ["tiny/baseline".to_string(), format!("tiny/perlayer_{CLUSTERS}")];
+    let synth = SyntheticServing::build("tiny");
+    let server = start_server(&synth.dir, 4);
+    let targets = [synth.baseline_target(), synth.clustered_target()];
+    assert_eq!(targets[1], format!("tiny/perlayer_{CLUSTERS}"));
 
     const CLIENTS: usize = 8;
     const PER_CLIENT: usize = 30;
@@ -193,7 +61,7 @@ fn two_variant_server_survives_concurrent_clients() {
                 let mut pending = Vec::with_capacity(PER_CLIENT);
                 for i in 0..PER_CLIENT {
                     let target = &targets[(c + i) % 2];
-                    let img = image((c * PER_CLIENT + i) as u64 + 1);
+                    let img = SyntheticServing::image((c * PER_CLIENT + i) as u64 + 1);
                     let (id, rx) = router.submit(target, img).unwrap();
                     pending.push((id, target.clone(), rx));
                 }
@@ -238,21 +106,16 @@ fn two_variant_server_survives_concurrent_clients() {
     // Numeric spot-check under concurrency: both variants must produce
     // the reference answer (clustered against the dequantized weights,
     // within LUT reassociation error).
-    let x = image(777);
-    let wq: Vec<f32> = {
-        let idx = ct.indices["w"].as_u8().unwrap();
-        let cb = ct.codebooks.as_f32().unwrap();
-        idx.iter().map(|&i| cb[i as usize]).collect()
-    };
+    let x = SyntheticServing::image(777);
     let (_, rx) = router.submit(&targets[0], x.clone()).unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-    let want = reference_logits(&x, &w, &b);
+    let want = synth.reference_logits(&x);
     for (g, e) in resp.logits.iter().zip(&want) {
         assert!((g - e).abs() <= 1e-4, "baseline logits diverged: {g} vs {e}");
     }
     let (_, rx) = router.submit(&targets[1], x.clone()).unwrap();
     let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
-    let want_q = reference_logits(&x, &wq, &b);
+    let want_q = synth.reference_logits_clustered(&x);
     for (g, e) in resp.logits.iter().zip(&want_q) {
         assert!(
             (g - e).abs() <= 1e-3 * (1.0 + e.abs()),
@@ -266,7 +129,7 @@ fn two_variant_server_survives_concurrent_clients() {
     let mut last = Vec::new();
     for i in 0..5 {
         for target in &targets {
-            last.push(router.submit(target, image(9000 + i)).unwrap().1);
+            last.push(router.submit(target, SyntheticServing::image(9000 + i)).unwrap().1);
         }
     }
     server.shutdown();
@@ -277,5 +140,5 @@ fn two_variant_server_survives_concurrent_clients() {
         assert_eq!(resp.logits.len(), CLASSES);
     }
 
-    let _ = std::fs::remove_dir_all(&dir);
+    synth.cleanup();
 }
