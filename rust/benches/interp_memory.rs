@@ -18,7 +18,9 @@
 
 use clusterformer::bench::{fmt_time, BenchConfig, BenchRunner};
 use clusterformer::hlo::HloModule;
-use clusterformer::runtime::interp::{evaluate_unplanned, stats, InterpExecutor};
+use clusterformer::runtime::interp::{
+    evaluate_unplanned, force_verify_mode, stats, InterpExecutor, VerifyMode,
+};
 use clusterformer::runtime::Executor as _;
 use clusterformer::tensor::Tensor;
 use clusterformer::testing::fixtures::{vit_shaped_hlo, vit_shaped_inputs};
@@ -110,6 +112,38 @@ fn main() -> anyhow::Result<()> {
     println!(
         "speedup planned vs unplanned: {:.2}x",
         unplanned / planned
+    );
+
+    // Bind-time cost of the plan verifier (ISSUE 9): rebuild the
+    // executor with verification forced off vs on inside this process
+    // (the env knob resolves once, so the A/B goes through the forced
+    // override). Verification runs at bind only — steady-state execution
+    // cost is zero by construction — so the acceptance target is on the
+    // bind itself: <= 10% overhead.
+    println!("\n# Plan verifier bind overhead\n");
+    force_verify_mode(Some(VerifyMode::Off));
+    let bind_off = runner
+        .bench("bind/verify-off", || {
+            InterpExecutor::load_text(&hlo, "vit-shaped-verify-off").unwrap()
+        })
+        .summary
+        .mean;
+    force_verify_mode(Some(VerifyMode::On));
+    let bind_on = runner
+        .bench("bind/verify-on", || {
+            InterpExecutor::load_text(&hlo, "vit-shaped-verify-on").unwrap()
+        })
+        .summary
+        .mean;
+    force_verify_mode(None);
+    println!("\n| bind | mean |");
+    println!("|---|---|");
+    println!("| verify off | {} |", fmt_time(bind_off));
+    println!("| verify on | {} |", fmt_time(bind_on));
+    println!(
+        "verify-on bind overhead: {:+.1}% (target <= 10%: {})",
+        100.0 * (bind_on - bind_off) / bind_off.max(1e-12),
+        if bind_on <= bind_off * 1.10 { "PASS" } else { "FAIL" }
     );
     Ok(())
 }

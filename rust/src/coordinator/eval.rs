@@ -73,6 +73,13 @@ pub struct MemStats {
     /// Input bytes zero-padded to reach a bucket shape during the run
     /// (the cost of bucketing, vs. a rebind per novel shape).
     pub pad_waste_bytes: usize,
+    /// Plan-verifier rules evaluated across binds (advances by the rule
+    /// count per verified plan; 0 = verification off).
+    pub verify_rules_checked: usize,
+    /// Plan-verifier diagnostics emitted across binds (healthy: 0 — a
+    /// fatal violation fails the bind and falls back to the classic
+    /// evaluator).
+    pub verify_violations: usize,
 }
 
 impl MemStats {
@@ -95,6 +102,8 @@ impl MemStats {
             plan_cache_misses: stats::plan_cache_misses(),
             plan_cache_entries: stats::plan_cache_entries(),
             pad_waste_bytes: stats::pad_waste_bytes(),
+            verify_rules_checked: stats::verify_rules_checked(),
+            verify_violations: stats::verify_violations(),
         }
     }
 }
@@ -161,6 +170,10 @@ pub fn evaluate(
                 .saturating_sub(before.plan_cache_misses),
             plan_cache_entries: after.plan_cache_entries,
             pad_waste_bytes: after.pad_waste_bytes.saturating_sub(before.pad_waste_bytes),
+            // Verification is bind-time (before the timed run), so these
+            // pass through like the plan and fusion gauges.
+            verify_rules_checked: after.verify_rules_checked,
+            verify_violations: after.verify_violations,
         },
     })
 }

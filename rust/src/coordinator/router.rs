@@ -396,16 +396,17 @@ impl Router {
                         None => true,
                     }
             });
-        let engaged = fallback.is_some() && self.degrade_engaged(primary);
         let mut order: Vec<&Arc<TargetHandle>> = Vec::with_capacity(2);
-        if engaged {
-            order.push(fallback.unwrap());
-            order.push(primary);
-        } else {
-            order.push(primary);
-            if let Some(fb) = fallback {
+        match fallback {
+            Some(fb) if self.degrade_engaged(primary) => {
+                order.push(fb);
+                order.push(primary);
+            }
+            Some(fb) => {
+                order.push(primary);
                 order.push(fb);
             }
+            None => order.push(primary),
         }
 
         let now = Instant::now();
@@ -421,11 +422,16 @@ impl Router {
             }
             all_dead = false;
             let Some(ticket) = route.admit() else { continue };
+            // The image is present on every iteration: the only path
+            // that does not return below restores it from the failed
+            // send. If that invariant ever breaks, shed instead of
+            // panicking on the serving path.
+            let Some(img) = image.take() else { break };
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             let (reply_tx, reply_rx) = channel();
             let req = ClassRequest {
                 id,
-                image: image.take().expect("image consumed once"),
+                image: img,
                 enqueued: now,
                 deadline,
                 reply: reply_tx,

@@ -229,6 +229,9 @@ fn supervise(
 ) -> Result<JoinHandle<()>> {
     let label = handle.label.clone();
     let shared = Arc::new(WorkerShared::new(label.clone()));
+    // lint:allow(no-thread-spawn): supervisor lifecycle thread — one per
+    // target, joined on shutdown; not kernel fan-out, so it must not
+    // come from the bounded kernel pool.
     std::thread::Builder::new()
         .name(format!("supervisor-{label}"))
         .spawn(move || {
@@ -248,6 +251,10 @@ fn supervise(
                     let wc = wc.clone();
                     let metrics = metrics.clone();
                     let shared = shared.clone();
+                    // lint:allow(no-thread-spawn): supervised worker
+                    // thread — restarted by this supervisor on panic;
+                    // blocking on a request queue, so unfit for the
+                    // kernel pool's run-to-completion jobs.
                     std::thread::Builder::new()
                         .name(format!("worker-{label}"))
                         .spawn(move || {

@@ -259,6 +259,13 @@ fn cmd_eval(args: &clusterformer::util::cli::Args) -> Result<()> {
             m.plan_cache_entries,
             m.pad_waste_bytes
         );
+        println!(
+            "verify: mode={:?} rules_checked={} violations={} sanitizer_checks={}",
+            clusterformer::runtime::interp::verify_from_env(),
+            m.verify_rules_checked,
+            m.verify_violations,
+            clusterformer::runtime::interp::stats::sanitizer_checks()
+        );
     }
     Ok(())
 }

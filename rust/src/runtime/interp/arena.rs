@@ -17,6 +17,20 @@
 //! The classic per-instruction-buffer evaluator in [`super::eval`] stays
 //! the bit-for-bit reference; `tests/plan_props.rs` checks the two paths
 //! against each other on randomized graphs.
+//!
+//! **Arena sanitizer** (ISSUE 9, the runtime half of [`super::verify`]):
+//! when `CLUSTERFORMER_SANITIZE` is on (default: debug builds), every
+//! slot buffer is over-allocated by [`CANARY_ELEMS`] guard elements
+//! filled with a known pattern, checked after every planned instruction
+//! and again at plan completion — an out-of-bounds write from one of the
+//! unsafe GEMM/LUT/elementwise kernels is reported at the faulting
+//! instruction instead of surfacing as a wrong answer layers downstream.
+//! Freed slots (the bind-time death schedule from the verifier's
+//! liveness re-derivation) are poisoned with a second pattern, so any
+//! use-after-free reads deterministic garbage rather than stale data
+//! that happens to still look right. Kernels only ever receive
+//! `prefix(n)` views, so the guard bytes are invisible to correct code
+//! and the release-mode (sanitizer-off) layout is untouched.
 
 use std::hash::{Hash, Hasher};
 
@@ -362,6 +376,83 @@ pub(crate) enum Loc {
     Preset(usize),
 }
 
+/// Guard elements appended past each slot's planned capacity when the
+/// sanitizer is on (64 bytes of canary for an f32 slot — one cache
+/// line, enough to catch the off-by-one-row overruns tiled kernels
+/// produce).
+const CANARY_ELEMS: usize = 16;
+/// Canary byte, repeated across every guard element (0x5A5A5A5A as f32
+/// is a huge positive normal — never something a kernel writes by luck).
+const CANARY_BYTE: u8 = 0x5A;
+/// Poison byte for freed slot contents (distinct from the canary so a
+/// report can tell an overrun from a use-after-free).
+const POISON_BYTE: u8 = 0xA5;
+
+fn pattern_u32(b: u8) -> u32 {
+    u32::from_ne_bytes([b; 4])
+}
+
+/// Fill `buf[from..]` with the repeated byte pattern `b`.
+fn fill_pattern(buf: &mut Buf, from: usize, b: u8) {
+    match buf {
+        Buf::F32(v) => {
+            let x = f32::from_bits(pattern_u32(b));
+            for e in v[from.min(v.len())..].iter_mut() {
+                *e = x;
+            }
+        }
+        Buf::U8(v) => {
+            for e in v[from.min(v.len())..].iter_mut() {
+                *e = b;
+            }
+        }
+        Buf::I32(v) => {
+            let x = pattern_u32(b) as i32;
+            for e in v[from.min(v.len())..].iter_mut() {
+                *e = x;
+            }
+        }
+        Buf::I64(v) => {
+            let x = u64::from_ne_bytes([b; 8]) as i64;
+            for e in v[from.min(v.len())..].iter_mut() {
+                *e = x;
+            }
+        }
+    }
+}
+
+/// Whether `buf[from..]` still holds the repeated byte pattern `b`
+/// bit-for-bit (bitwise compare: the f32 canary must survive NaN-free).
+fn pattern_intact(buf: &Buf, from: usize, b: u8) -> bool {
+    match buf {
+        Buf::F32(v) => {
+            let x = pattern_u32(b);
+            v[from.min(v.len())..].iter().all(|e| e.to_bits() == x)
+        }
+        Buf::U8(v) => v[from.min(v.len())..].iter().all(|e| *e == b),
+        Buf::I32(v) => {
+            let x = pattern_u32(b) as i32;
+            v[from.min(v.len())..].iter().all(|e| *e == x)
+        }
+        Buf::I64(v) => {
+            let x = u64::from_ne_bytes([b; 8]) as i64;
+            v[from.min(v.len())..].iter().all(|e| *e == x)
+        }
+    }
+}
+
+/// Canary/poison bookkeeping for one arena (present only when
+/// `CLUSTERFORMER_SANITIZE` resolved on at bind time).
+#[derive(Debug)]
+struct Sanitizer {
+    /// Planned (logical) capacity of each slot in elements; the canary
+    /// region is everything beyond it.
+    cap: Vec<usize>,
+    /// Per-instruction death schedule: slots whose value dies right
+    /// after instruction `i` executes (poisoned there).
+    free_at: Vec<Vec<usize>>,
+}
+
 /// Preallocated execution state for one executor: slot buffers sized by
 /// the plan, staging buffers for the inputs actually read, kernel
 /// scratch, and the per-call value-location table.
@@ -372,21 +463,103 @@ pub(crate) struct Arena {
     locs: Vec<Option<Loc>>,
     gemm_scratch: PackScratch,
     lut_scratch: LutScratch,
+    san: Option<Sanitizer>,
 }
 
 impl Arena {
-    pub(crate) fn new(plan: &MemoryPlan) -> Arena {
+    pub(crate) fn new(module: &HloModule, plan: &MemoryPlan) -> Arena {
+        // The sanitizer needs the instruction list for the death
+        // schedule; an unparseable entry cannot reach here (plan::build
+        // already walked it), but degrade to sanitizer-off rather than
+        // panic if it somehow does.
+        let san = if super::verify::sanitize_from_env() {
+            module.entry().ok().map(|entry| Sanitizer {
+                cap: plan.slots.iter().map(|s| s.elems).collect(),
+                free_at: super::verify::slot_death_schedule(
+                    entry.instructions.as_slice(),
+                    plan,
+                ),
+            })
+        } else {
+            None
+        };
+        let guard = if san.is_some() { CANARY_ELEMS } else { 0 };
         Arena {
             slots: plan
                 .slots
                 .iter()
-                .map(|s| Buf::zeroed(s.dtype, s.elems))
+                .map(|s| {
+                    let mut b = Buf::zeroed(s.dtype, s.elems + guard);
+                    if guard > 0 {
+                        fill_pattern(&mut b, s.elems, CANARY_BYTE);
+                    }
+                    b
+                })
                 .collect(),
             params: vec![Buf::default(); plan.params.len()],
             locs: vec![None; plan.actions.len()],
             gemm_scratch: PackScratch::default(),
             lut_scratch: LutScratch::default(),
+            san,
         }
+    }
+
+    /// Sweep every slot's canary region; report the first smashed one.
+    /// `at` names the instruction just executed (or "plan completion").
+    fn sanitize_check(&self, at: &str) -> Result<()> {
+        let Some(san) = &self.san else { return Ok(()) };
+        super::stats::count_sanitizer_check();
+        for (s, buf) in self.slots.iter().enumerate() {
+            // A slot mid-`compute` is mem::take'n and restored before
+            // this runs; an empty default Buf has no canary to check.
+            if buf.len() < san.cap[s] + CANARY_ELEMS {
+                continue;
+            }
+            if !pattern_intact(buf, san.cap[s], CANARY_BYTE) {
+                bail!(
+                    "arena sanitizer: canary past slot {s} (capacity {} elems) smashed \
+                     at {at} — an out-of-bounds kernel write",
+                    san.cap[s]
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Poison the slots whose values die after instruction `i`, so a
+    /// use-after-free reads deterministic garbage.
+    fn sanitize_retire(&mut self, i: usize) {
+        let Some(san) = &self.san else { return };
+        for &s in san.free_at.get(i).map(|v| v.as_slice()).unwrap_or(&[]) {
+            let cap = san.cap[s];
+            if let Some(buf) = self.slots.get_mut(s) {
+                fill_pattern(buf, 0, POISON_BYTE);
+                // fill_pattern poisons the canary region too; restore it
+                // so the overrun check stays meaningful.
+                fill_pattern(buf, cap, CANARY_BYTE);
+            }
+        }
+    }
+
+    /// Test hook for `tests/verify_props.rs`: deliberately write one
+    /// element past slot `s`'s planned capacity, exactly what an
+    /// out-of-bounds kernel would do. Errors when the sanitizer is off
+    /// (no canary exists to smash).
+    pub(crate) fn smash_canary(&mut self, s: usize) -> Result<()> {
+        let Some(san) = &self.san else {
+            bail!("arena sanitizer is off (CLUSTERFORMER_SANITIZE)");
+        };
+        let cap = *san
+            .cap
+            .get(s)
+            .ok_or_else(|| anyhow!("no slot {s} ({} slots)", san.cap.len()))?;
+        let buf = &mut self.slots[s];
+        let len = buf.len();
+        if len <= cap {
+            bail!("slot {s} has no canary region");
+        }
+        fill_pattern(buf, len - 1, !CANARY_BYTE);
+        Ok(())
     }
 
     /// Validate and stage `inputs` at positions `base..base+len`. Inputs
@@ -678,7 +851,14 @@ pub(crate) fn execute(
                 arena.locs[i] = Some(Loc::Slot(*slot));
             }
         }
+        if arena.san.is_some() {
+            if matches!(plan.actions[i], Action::Compute { .. }) {
+                arena.sanitize_check(&format!("%{}", insts[i].name))?;
+            }
+            arena.sanitize_retire(i);
+        }
     }
+    arena.sanitize_check("plan completion")?;
     let root = plan.root;
     let ctx = Ctx {
         insts,

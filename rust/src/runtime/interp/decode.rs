@@ -131,8 +131,8 @@ impl DecodeSession {
         &self.prefill
     }
 
-    fn scalar(v: usize) -> Tensor {
-        Tensor::from_f32(vec![], &[v as f32]).expect("scalar tensor")
+    fn scalar(v: usize) -> Result<Tensor> {
+        Tensor::from_f32(vec![], &[v as f32])
     }
 
     /// Bind the step module at cache bucket `s` (or fetch this
@@ -200,7 +200,7 @@ impl DecodeSession {
                 x.shape()
             );
         }
-        let out = self.prefill.run(&[x.clone(), Self::scalar(n)])?;
+        let out = self.prefill.run(&[x.clone(), Self::scalar(n)?])?;
         let [y, k, v]: [Tensor; 3] = out
             .try_into()
             .map_err(|_| anyhow::anyhow!("{}: prefill must return (y, k, v)", self.model.label))?;
@@ -235,7 +235,7 @@ impl DecodeSession {
         // Room for this step's append (migrates on bucket overflow).
         self.ensure_capacity(self.len + 1)?;
         let resident = self.steps[&self.bucket].clone();
-        let out = resident.run(&[x.clone(), Self::scalar(self.len)])?;
+        let out = resident.run(&[x.clone(), Self::scalar(self.len)?])?;
         let [y, kn, vn]: [Tensor; 3] = out
             .try_into()
             .map_err(|_| anyhow::anyhow!("{}: step must return (y, k, v)", self.model.label))?;

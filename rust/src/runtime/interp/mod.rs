@@ -48,6 +48,7 @@ pub mod plan_cache;
 pub mod pool;
 pub mod pool_exec;
 pub mod stats;
+pub mod verify;
 
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -62,9 +63,23 @@ use crate::tensor::Tensor;
 pub use eval::{evaluate_unplanned, WeightCache};
 pub use plan::MemoryPlan;
 pub use tuning::{detected_kernel_isa, kernel_isa, KernelIsa};
+pub use verify::{sanitize_from_env, verify_from_env, VerifyMode};
 // Test/bench hook for A/B-ing dispatch levels; not a stable API.
 #[doc(hidden)]
 pub use tuning::force_kernel_isa;
+// Test/bench hook for A/B-ing verification inside one process (the env
+// knob resolves once); not a stable API.
+#[doc(hidden)]
+pub use verify::force_verify_mode;
+
+/// Build a cache-less, fused memory plan for `module` without loading an
+/// executor — the raw material `tests/verify_props.rs` corrupts to prove
+/// each verifier rule fires. Not a stable API.
+#[doc(hidden)]
+pub fn testing_build_plan(module: &HloModule) -> Result<MemoryPlan> {
+    let exec = clustered::plan(module);
+    plan::build(module, &exec, None, true, &[])
+}
 
 /// Whether plan-time operator fusion is enabled, from the
 /// `CLUSTERFORMER_FUSION` env var (`--no-fusion` at the CLI): unset,
@@ -161,7 +176,7 @@ impl PlannedState {
     ) -> Option<PlannedState> {
         match plan::build(module, exec, cache, fusion, persistent) {
             Ok(mem) => {
-                let arena = Mutex::new(arena::Arena::new(&mem));
+                let arena = Mutex::new(arena::Arena::new(module, &mem));
                 Some(PlannedState { mem, arena })
             }
             Err(e) => {
@@ -497,6 +512,18 @@ impl InterpResident {
         let ps = self.planned_or_bail()?;
         let arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
         arena.read_param_rows(&ps.mem, pos, rows)
+    }
+
+    /// Test hook for `tests/verify_props.rs`: write one element past
+    /// slot 0's planned capacity — a deliberate out-of-bounds kernel
+    /// write the arena sanitizer must report on the next execution.
+    /// Errors when the sanitizer is off or the module fell back to
+    /// per-instruction buffers. Not a stable API.
+    #[doc(hidden)]
+    pub fn testing_smash_canary(&self) -> Result<()> {
+        let ps = self.planned_or_bail()?;
+        let mut arena = ps.arena.lock().unwrap_or_else(|e| e.into_inner());
+        arena.smash_canary(0)
     }
 }
 

@@ -1230,6 +1230,8 @@ use super::tuning::{kernel_isa, KernelIsa, EW_PAR_MIN_ELEMS as PAR_MIN_ELEMS};
 #[cfg(target_arch = "x86_64")]
 macro_rules! avx2_unary_core {
     ($name:ident, $v:ident => $vexpr:expr, $x:ident => $sexpr:expr) => {
+        // SAFETY: callers dispatch via `kernel_isa` (AVX2+FMA
+        // detected) and pass `src`/`out` valid for `len` elements.
         #[target_feature(enable = "avx2,fma")]
         unsafe fn $name(src: *const f32, out: *mut f32, len: usize) {
             use std::arch::x86_64::*;
@@ -1268,6 +1270,8 @@ avx2_unary_core!(vun_avx2_ceil, v => _mm256_ceil_ps(v), x => x.ceil());
 #[cfg(target_arch = "aarch64")]
 macro_rules! neon_unary_core {
     ($name:ident, $v:ident => $vexpr:expr, $x:ident => $sexpr:expr) => {
+        // SAFETY: NEON is baseline on aarch64; callers pass
+        // `src`/`out` valid for `len` elements.
         #[target_feature(enable = "neon")]
         unsafe fn $name(src: *const f32, out: *mut f32, len: usize) {
             use std::arch::aarch64::*;
@@ -1306,6 +1310,10 @@ neon_unary_core!(vun_neon_ceil, v => vrndpq_f32(v), x => x.ceil());
 #[cfg(target_arch = "x86_64")]
 macro_rules! avx2_binary_core {
     ($name:ident, $vop:ident, $sop:tt) => {
+        // SAFETY: callers dispatch via `kernel_isa` (AVX2+FMA
+        // detected); `a`/`b` are valid for `len` elements (one element
+        // when the matching `*sc` broadcast flag is set), `out` for
+        // `len`.
         #[target_feature(enable = "avx2,fma")]
         unsafe fn $name(
             a: *const f32,
@@ -1350,6 +1358,8 @@ avx2_binary_core!(vbin_avx2_div, _mm256_div_ps, /);
 #[cfg(target_arch = "aarch64")]
 macro_rules! neon_binary_core {
     ($name:ident, $vop:ident, $sop:tt) => {
+        // SAFETY: NEON is baseline on aarch64; same pointer contract
+        // as the AVX2 core (broadcast flags included).
         #[target_feature(enable = "neon")]
         unsafe fn $name(
             a: *const f32,

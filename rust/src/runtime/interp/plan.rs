@@ -214,6 +214,88 @@ impl MemoryPlan {
     }
 }
 
+/// Test-only corruption hooks for `tests/verify_props.rs`: each plants
+/// exactly the kind of invariant slip the verifier exists to catch, on
+/// an otherwise valid plan. Hidden from docs, never called by
+/// production code.
+impl MemoryPlan {
+    /// Output slot of instruction `i`, when it is a compute.
+    #[doc(hidden)]
+    pub fn testing_slot_of(&self, i: usize) -> Option<usize> {
+        match self.actions.get(i) {
+            Some(Action::Compute { slot, .. }) => Some(*slot),
+            _ => None,
+        }
+    }
+
+    /// Instruction indices executed as computes, in schedule order.
+    #[doc(hidden)]
+    pub fn testing_compute_indices(&self) -> Vec<usize> {
+        (0..self.actions.len())
+            .filter(|&i| matches!(self.actions[i], Action::Compute { .. }))
+            .collect()
+    }
+
+    /// Instruction indices executed as zero-copy aliases.
+    #[doc(hidden)]
+    pub fn testing_alias_indices(&self) -> Vec<usize> {
+        (0..self.actions.len())
+            .filter(|&i| matches!(self.actions[i], Action::Alias))
+            .collect()
+    }
+
+    /// Redirect compute `i`'s output into `slot`.
+    #[doc(hidden)]
+    pub fn testing_set_slot(&mut self, i: usize, slot: usize) {
+        if let Some(Action::Compute { slot: s, .. }) = self.actions.get_mut(i) {
+            *s = slot;
+        }
+    }
+
+    /// Swap the output slots of two computes (the classic double-booking
+    /// corruption).
+    #[doc(hidden)]
+    pub fn testing_swap_slots(&mut self, a: usize, b: usize) {
+        if let (Some(sa), Some(sb)) = (self.testing_slot_of(a), self.testing_slot_of(b)) {
+            self.testing_set_slot(a, sb);
+            self.testing_set_slot(b, sa);
+        }
+    }
+
+    /// Force (or clear) the in-place marking of compute `i`.
+    #[doc(hidden)]
+    pub fn testing_set_inplace(&mut self, i: usize, ord: Option<usize>) {
+        if let Some(Action::Compute { alias_of, .. }) = self.actions.get_mut(i) {
+            *alias_of = ord;
+        }
+    }
+
+    /// Rewire operand `ord` of instruction `i` to point at `to`
+    /// (alias cycles, def-after-use, reads of skipped nodes).
+    #[doc(hidden)]
+    pub fn testing_redirect_operand(&mut self, i: usize, ord: usize, to: usize) {
+        if let Some(slot) = self.operands.get_mut(i).and_then(|o| o.get_mut(ord)) {
+            *slot = to;
+        }
+    }
+
+    /// Mark parameter `p` persistent (or not).
+    #[doc(hidden)]
+    pub fn testing_set_persistent(&mut self, p: usize, persistent: bool) {
+        if let Some(v) = self.param_persistent.get_mut(p) {
+            *v = persistent;
+        }
+    }
+
+    /// Eliminate instruction `i` from the plan outright.
+    #[doc(hidden)]
+    pub fn testing_skip(&mut self, i: usize) {
+        if let Some(a) = self.actions.get_mut(i) {
+            *a = Action::Skip;
+        }
+    }
+}
+
 /// Where an instruction's value ultimately lives (aliases resolved).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Base {
@@ -1012,10 +1094,10 @@ pub(crate) fn build(
         // In-place: an elementwise (or fused-chain / fused-softmax
         // source) operand of identical size whose storage dies at this
         // very instruction can donate its slot.
-        let inplace_ordinals: &[usize] = match cfgs[i].as_ref().unwrap() {
-            OpCfg::Unary(..) => &[0],
-            OpCfg::BinF32(..) | OpCfg::BinI32(_) | OpCfg::BinU8(_) => &[0, 1],
-            OpCfg::Fused { .. } | OpCfg::Softmax { .. } => &[0],
+        let inplace_ordinals: &[usize] = match cfgs[i].as_ref() {
+            Some(OpCfg::Unary(..)) => &[0],
+            Some(OpCfg::BinF32(..) | OpCfg::BinI32(_) | OpCfg::BinU8(_)) => &[0, 1],
+            Some(OpCfg::Fused { .. } | OpCfg::Softmax { .. }) => &[0],
             _ => &[],
         };
         let mut chosen: Option<(usize, usize)> = None;
@@ -1110,15 +1192,14 @@ pub(crate) fn build(
             Kind::Cached => Action::Cached,
             Kind::Preset => Action::Preset,
             Kind::Alias => Action::Alias,
-            Kind::Compute => Action::Compute {
-                slot: slot_of[i],
-                alias_of: alias_ord[i],
-                cfg: cfgs[i].take().expect("compute cfg built above"),
-            },
+            Kind::Compute => {
+                let Some(cfg) = cfgs[i].take() else {
+                    bail!("%{}: planner bug: compute without a kernel config", insts[i].name);
+                };
+                Action::Compute { slot: slot_of[i], alias_of: alias_ord[i], cfg }
+            }
         });
     }
-
-    verify(insts, root, &kind, &operands, &base, &slot_of)?;
 
     // What the classic evaluator holds resident: one private buffer per
     // computed instruction (aliases clone, presets re-materialize).
@@ -1140,17 +1221,7 @@ pub(crate) fn build(
         }
     }
     let peak_bytes: usize = slots.iter().map(|s| s.elems * s.dtype.size()).sum();
-    super::stats::record_plan(
-        peak_bytes,
-        naive_bytes,
-        slots.len(),
-        fusion.chains,
-        fusion.epilogues,
-        fusion.softmax,
-        fused_bytes_saved,
-    );
-
-    Ok(MemoryPlan {
+    let plan = MemoryPlan {
         actions,
         operands,
         slots,
@@ -1165,51 +1236,25 @@ pub(crate) fn build(
         fused_epilogues: fusion.epilogues,
         fused_softmax: fusion.softmax,
         fused_bytes_saved,
-    })
-}
-
-/// Replay the assignment and prove liveness never hands a slot to a new
-/// value while a later instruction still reads the old one.
-fn verify(
-    insts: &[HloInstruction],
-    root: usize,
-    kind: &[Kind],
-    operands: &[Vec<usize>],
-    base: &[Base],
-    slot_of: &[usize],
-) -> Result<()> {
-    let n_slots = slot_of
-        .iter()
-        .filter(|&&s| s != usize::MAX)
-        .max()
-        .map(|&s| s + 1)
-        .unwrap_or(0);
-    let mut owner: Vec<Option<usize>> = vec![None; n_slots];
-    let check = |owner: &[Option<usize>], op: usize, at: &str| -> Result<()> {
-        if let Base::Val(org) = base[op] {
-            let s = slot_of[org];
-            if owner[s] != Some(org) {
-                bail!(
-                    "planner bug: %{} read at {at} but slot {s} holds {:?}",
-                    insts[op].name,
-                    owner[s]
-                );
-            }
-        }
-        Ok(())
     };
-    for i in 0..insts.len() {
-        for &op in live_reads(insts, operands, kind, root, i) {
-            check(&owner, op, insts[i].name.as_str())?;
-        }
-        if kind[i] == Kind::Compute {
-            owner[slot_of[i]] = Some(i);
-        }
-    }
-    if insts[root].opcode != "tuple" {
-        check(&owner, root, "root")?;
-    }
-    Ok(())
+
+    // Static verification (ISSUE 9): re-derive bases, liveness, and slot
+    // ownership from the finished plan and prove the planner's
+    // invariants before anything executes off it. A violation fails the
+    // bind, so the executor falls back to the classic evaluator.
+    super::verify::enforce(insts, &plan)?;
+
+    super::stats::record_plan(
+        plan.peak_bytes,
+        plan.naive_bytes,
+        plan.slots.len(),
+        fusion.chains,
+        fusion.epilogues,
+        fusion.softmax,
+        fused_bytes_saved,
+    );
+
+    Ok(plan)
 }
 
 /// Kernel config for a fusion-rewritten tail: the head's contraction

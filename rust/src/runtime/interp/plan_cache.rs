@@ -274,13 +274,18 @@ impl PlanCache {
         });
         stats::plan_cache_entries_add(1);
         while inner.entries.len() > self.cap {
-            let lru = inner
+            // len > cap ≥ 0 means the list is non-empty, so min_by_key
+            // yields a victim; the guard keeps the serving path
+            // panic-free regardless.
+            let Some(lru) = inner
                 .entries
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
-                .expect("non-empty");
+            else {
+                break;
+            };
             let evicted = inner.entries.swap_remove(lru);
             stats::plan_cache_entries_sub(1);
             crate::log_info!(

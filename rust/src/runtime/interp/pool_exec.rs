@@ -64,6 +64,9 @@ struct Job {
 // closure itself is `Sync` (enforced by `par_for`'s bound).
 unsafe impl Send for Job {}
 
+// SAFETY: callers pass a `p` pointing to a live `F` — guaranteed by
+// the latch protocol above: the caller's stack frame holding the
+// closure outlives every queued job.
 unsafe fn call_erased<F: Fn(usize, usize) + Sync>(p: *const (), lo: usize, hi: usize) {
     (*(p as *const F))(lo, hi)
 }
@@ -114,6 +117,8 @@ impl Pool {
     /// panics); letting it unwind through a pool worker would leave the
     /// caller parked forever.
     fn run_job(&self, job: Job) {
+        // SAFETY: `job.body` points to the submitting caller's closure,
+        // kept alive by the latch protocol (`Job`'s Send rationale).
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             (job.run)(job.body, job.lo, job.hi)
         }))
@@ -258,7 +263,12 @@ pub fn par_for<F: Fn(usize, usize) + Sync>(threads: usize, total: usize, body: F
 /// carve disjoint `&mut` chunks out of one output slice.
 #[derive(Clone, Copy)]
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapper only ferries the base address into `par_for`
+// closures, which write disjoint in-bounds chunks; `T: Send` makes the
+// cross-thread writes of `T` sound.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: shared references to a `SendPtr` only copy the pointer value;
+// all dereferencing happens under the disjoint-chunk contract above.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// [`par_for`] over the rows of a mutable output: `out` (at least

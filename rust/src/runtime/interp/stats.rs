@@ -56,6 +56,9 @@ static FUSED_CHAINS: AtomicUsize = AtomicUsize::new(0);
 static FUSED_EPILOGUES: AtomicUsize = AtomicUsize::new(0);
 static FUSED_SOFTMAX: AtomicUsize = AtomicUsize::new(0);
 static FUSED_BYTES_SAVED: AtomicUsize = AtomicUsize::new(0);
+static VERIFY_RULES_CHECKED: AtomicUsize = AtomicUsize::new(0);
+static VERIFY_VIOLATIONS: AtomicUsize = AtomicUsize::new(0);
+static SANITIZER_CHECKS: AtomicUsize = AtomicUsize::new(0);
 
 /// Tensor-sized heap allocations on the execution path so far (see the
 /// module docs for the exact contract).
@@ -177,6 +180,37 @@ pub fn fused_softmax() -> usize {
 /// largest plan built (fused-away producers).
 pub fn fused_bytes_saved() -> usize {
     FUSED_BYTES_SAVED.load(Ordering::Relaxed)
+}
+
+/// Plan-verifier rules evaluated so far ([`super::verify`]: one bind of
+/// one plan advances this by [`super::verify::RULE_COUNT`]).
+pub fn verify_rules_checked() -> usize {
+    VERIFY_RULES_CHECKED.load(Ordering::Relaxed)
+}
+
+/// Plan-verifier diagnostics emitted so far (warnings and errors; a
+/// healthy planner keeps this at zero).
+pub fn verify_violations() -> usize {
+    VERIFY_VIOLATIONS.load(Ordering::Relaxed)
+}
+
+/// Record one verification pass: `rules` rules evaluated, `violations`
+/// diagnostics found.
+pub(crate) fn count_verify(rules: usize, violations: usize) {
+    VERIFY_RULES_CHECKED.fetch_add(rules, Ordering::Relaxed);
+    VERIFY_VIOLATIONS.fetch_add(violations, Ordering::Relaxed);
+}
+
+/// Arena sanitizer canary/poison sweeps performed so far (one per
+/// checked instruction plus one per plan completion; stays at zero when
+/// the sanitizer is off).
+pub fn sanitizer_checks() -> usize {
+    SANITIZER_CHECKS.load(Ordering::Relaxed)
+}
+
+/// Record one sanitizer sweep over the arena's canaries.
+pub(crate) fn count_sanitizer_check() {
+    SANITIZER_CHECKS.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Publish a freshly built plan's footprint (keeps the largest).

@@ -1,0 +1,1133 @@
+//! Static plan verification: every [`MemoryPlan`] is checked after bind
+//! against the invariants the planner is supposed to uphold — before a
+//! single kernel runs off it. The bind-time rewrite stack (liveness slot
+//! reuse, in-place ops, zero-copy aliases, fusion, persistent KV slots)
+//! is exactly the kind of machinery that fails *silently*: a slot handed
+//! out one instruction early doesn't crash, it corrupts an activation
+//! three layers downstream. The verifier re-derives storage bases,
+//! liveness, and slot ownership independently from the finished plan and
+//! cross-checks them, emitting structured [`PlanDiagnostic`]s (rule id,
+//! instruction, slot) instead of ad-hoc `bail!`s.
+//!
+//! Rules (one [`RuleId`] each):
+//!
+//! | id                     | invariant                                              |
+//! |------------------------|--------------------------------------------------------|
+//! | `def-before-use`       | operands precede their readers; no live read of a skipped node |
+//! | `slot-compat`          | compute slots exist, dtype matches, capacity ≥ value   |
+//! | `alias-chain`          | alias chains are acyclic and land on live, same-size storage |
+//! | `inplace-legal`        | in-place donor is slot-backed, truly dead, size-equal, and no other operand shares its storage |
+//! | `slot-replay`          | full liveness replay: a slot is never reassigned while a later instruction still reads the old value (the pre-ISSUE-9 `verify()` pass, folded in) |
+//! | `fusion-legal`         | fused step operands are in range and shape-consistent with the tail |
+//! | `persistent-isolation` | persistent parameter storage is never mutated in place or staged twice |
+//! | `root-reachable`       | the root (or every root tuple element) is materialized  |
+//! | `dce-sound`            | everything reachable from the root survived DCE; surviving unreachable values are flagged (warning) |
+//! | `param-contract`       | parameter actions agree with the declared signature and `param_read` |
+//!
+//! Gated by `CLUSTERFORMER_VERIFY=strict|on|off` (on by default; strict
+//! promotes warnings to errors). A violation fails the bind, so the
+//! executor falls back to the classic per-instruction evaluator rather
+//! than running a plan that cannot be proven safe. Verification is
+//! bind-time only: steady-state execution cost is zero.
+//!
+//! The runtime half of this layer — the arena canary/poison sanitizer —
+//! lives in [`super::arena`]; its `CLUSTERFORMER_SANITIZE` knob is
+//! resolved here so the whole analysis surface is in one place.
+
+use anyhow::{bail, Result};
+
+use super::eval::host_dtype;
+use super::plan::{Action, FusedIn, FusedOp, MemoryPlan, OpCfg};
+use crate::hlo::parser::{HloInstruction, HloModule};
+
+/// How strictly plans are checked after bind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Skip verification entirely.
+    Off,
+    /// Check every plan; errors fail the bind, warnings are logged.
+    On,
+    /// Check every plan; warnings fail the bind too.
+    Strict,
+}
+
+/// Number of distinct rules one verification pass evaluates (the
+/// `verify_rules_checked` counter advances by this per verified plan).
+pub const RULE_COUNT: usize = 10;
+
+/// Identifies the invariant a diagnostic violates (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleId {
+    DefBeforeUse,
+    SlotCompat,
+    AliasChain,
+    InplaceLegal,
+    SlotReplay,
+    FusionLegal,
+    PersistentIsolation,
+    RootReachable,
+    DceSound,
+    ParamContract,
+}
+
+impl RuleId {
+    /// Stable string form (what tests and log lines match on).
+    pub fn id(self) -> &'static str {
+        match self {
+            RuleId::DefBeforeUse => "def-before-use",
+            RuleId::SlotCompat => "slot-compat",
+            RuleId::AliasChain => "alias-chain",
+            RuleId::InplaceLegal => "inplace-legal",
+            RuleId::SlotReplay => "slot-replay",
+            RuleId::FusionLegal => "fusion-legal",
+            RuleId::PersistentIsolation => "persistent-isolation",
+            RuleId::RootReachable => "root-reachable",
+            RuleId::DceSound => "dce-sound",
+            RuleId::ParamContract => "param-contract",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspicious but runnable (e.g. dead code the planner kept).
+    /// Promoted to a bind failure under `strict`.
+    Warning,
+    /// The plan would execute incorrectly; the bind fails.
+    Error,
+}
+
+/// One verifier finding: which rule, where, and why.
+#[derive(Debug, Clone)]
+pub struct PlanDiagnostic {
+    pub rule: RuleId,
+    pub severity: Severity,
+    /// Instruction index in the entry computation, when attributable.
+    pub inst: Option<usize>,
+    /// Instruction name (`%name` in the HLO text), when attributable.
+    pub name: String,
+    /// Arena slot involved, when attributable.
+    pub slot: Option<usize>,
+    pub message: String,
+}
+
+impl std::fmt::Display for PlanDiagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}]", self.rule.id())?;
+        if !self.name.is_empty() {
+            write!(f, " %{}", self.name)?;
+        }
+        if let Some(s) = self.slot {
+            write!(f, " (slot {s})")?;
+        }
+        write!(f, ": {}", self.message)
+    }
+}
+
+/// `CLUSTERFORMER_VERIFY` env knob: unset, empty, `1`, `true`, or `on`
+/// mean [`VerifyMode::On`]; `0`, `false`, or `off` disable the pass;
+/// `strict` promotes warnings to bind failures. Resolved once per
+/// process, same contract as `CLUSTERFORMER_FUSION`.
+pub fn verify_from_env() -> VerifyMode {
+    if let Some(m) = forced_mode() {
+        return m;
+    }
+    static RESOLVED: std::sync::OnceLock<VerifyMode> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| match std::env::var("CLUSTERFORMER_VERIFY") {
+        Ok(s) => {
+            let t = s.trim();
+            if t == "0" || t.eq_ignore_ascii_case("false") || t.eq_ignore_ascii_case("off") {
+                crate::log_info!("CLUSTERFORMER_VERIFY={s:?}: plan verification disabled");
+                VerifyMode::Off
+            } else if t.eq_ignore_ascii_case("strict") {
+                VerifyMode::Strict
+            } else {
+                if !(t.is_empty()
+                    || t == "1"
+                    || t.eq_ignore_ascii_case("true")
+                    || t.eq_ignore_ascii_case("on"))
+                {
+                    crate::log_warn!(
+                        "CLUSTERFORMER_VERIFY={s:?} is not recognized; verification stays on"
+                    );
+                }
+                VerifyMode::On
+            }
+        }
+        Err(_) => VerifyMode::On,
+    })
+}
+
+/// Process-wide mode override for benches and tests (the env knob is
+/// resolved once, so A/B comparisons inside one process go through
+/// here). `None` restores the env-resolved mode.
+#[doc(hidden)]
+pub fn force_verify_mode(mode: Option<VerifyMode>) {
+    FORCED.store(
+        match mode {
+            None => 0,
+            Some(VerifyMode::Off) => 1,
+            Some(VerifyMode::On) => 2,
+            Some(VerifyMode::Strict) => 3,
+        },
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+static FORCED: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+fn forced_mode() -> Option<VerifyMode> {
+    match FORCED.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => Some(VerifyMode::Off),
+        2 => Some(VerifyMode::On),
+        3 => Some(VerifyMode::Strict),
+        _ => None,
+    }
+}
+
+/// `CLUSTERFORMER_SANITIZE` env knob for the arena canary/poison
+/// sanitizer: `1`/`true`/`on` force it on, `0`/`false`/`off` force it
+/// off; unset or empty means on in debug builds, off in release (so
+/// `cargo test` exercises it everywhere at zero release-path cost).
+pub fn sanitize_from_env() -> bool {
+    static RESOLVED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| match std::env::var("CLUSTERFORMER_SANITIZE") {
+        Ok(s) => {
+            let t = s.trim();
+            if t.is_empty() {
+                cfg!(debug_assertions)
+            } else if t == "0" || t.eq_ignore_ascii_case("false") || t.eq_ignore_ascii_case("off") {
+                false
+            } else {
+                if !(t == "1" || t.eq_ignore_ascii_case("true") || t.eq_ignore_ascii_case("on")) {
+                    crate::log_warn!(
+                        "CLUSTERFORMER_SANITIZE={s:?} is not recognized; treating as on"
+                    );
+                }
+                true
+            }
+        }
+        Err(_) => cfg!(debug_assertions),
+    })
+}
+
+/// Verify `plan` against `module`'s entry computation and return every
+/// finding (empty = proven clean), regardless of the env mode. The
+/// public entry point for tools and `tests/verify_props.rs`.
+pub fn verify_module_plan(module: &HloModule, plan: &MemoryPlan) -> Result<Vec<PlanDiagnostic>> {
+    Ok(run_rules(module.entry()?.instructions.as_slice(), plan))
+}
+
+/// Bind-time enforcement: called by [`super::plan::build`] on every
+/// finished plan. Honors [`verify_from_env`], bumps the
+/// `verify_rules_checked` / `verify_violations` stats counters, logs
+/// warnings, and fails the bind on (mode-dependent) violations — the
+/// executor then falls back to the classic per-instruction evaluator.
+pub(crate) fn enforce(insts: &[HloInstruction], plan: &MemoryPlan) -> Result<()> {
+    let mode = verify_from_env();
+    if mode == VerifyMode::Off {
+        return Ok(());
+    }
+    let diags = run_rules(insts, plan);
+    super::stats::count_verify(RULE_COUNT, diags.len());
+    if diags.is_empty() {
+        return Ok(());
+    }
+    let fatal = diags
+        .iter()
+        .filter(|d| d.severity == Severity::Error || mode == VerifyMode::Strict)
+        .count();
+    for d in &diags {
+        if d.severity == Severity::Error || mode == VerifyMode::Strict {
+            crate::log_warn!("plan verifier: {d}");
+        } else {
+            crate::log_info!("plan verifier (warning): {d}");
+        }
+    }
+    if fatal > 0 {
+        // One representative finding in the error; the full list was
+        // logged above.
+        bail!(
+            "plan verification failed: {fatal} violation(s), first: {}",
+            diags
+                .iter()
+                .find(|d| d.severity == Severity::Error || mode == VerifyMode::Strict)
+                .map(|d| d.to_string())
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Independent re-derivation of the planner's analyses
+// ---------------------------------------------------------------------
+
+/// Where an instruction's value ultimately lives, re-derived from the
+/// plan's actions (aliases resolved; `None` = unresolvable, which the
+/// alias rule reports separately).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Storage {
+    /// Arena slot storage of compute instruction `i`.
+    Val(usize),
+    /// Staged parameter `p`.
+    Par(usize),
+    /// Cache / preset — always-live, never slot-backed.
+    Pinned,
+    /// Skipped, or an alias whose chain does not resolve.
+    Dead,
+}
+
+struct Derived {
+    /// Resolved storage base per instruction.
+    base: Vec<Storage>,
+    /// Last instruction whose execution reads each compute value's
+    /// storage (`usize::MAX` = live to the end of the call).
+    last_use: Vec<usize>,
+    /// Output slot per instruction (`usize::MAX` for non-computes).
+    slot_of: Vec<usize>,
+    /// Instructions reachable from the root through operand edges.
+    reachable: Vec<bool>,
+}
+
+fn elems_of(inst: &HloInstruction) -> usize {
+    inst.shape.dims.iter().product()
+}
+
+/// Operand edges that read data at run time (computes and the root
+/// tuple's materialization), mirroring the planner's `live_reads`.
+fn live_reads<'a>(insts: &[HloInstruction], plan: &'a MemoryPlan, i: usize) -> &'a [usize] {
+    if i == plan.root && insts[i].opcode == "tuple" {
+        return &plan.operands[i];
+    }
+    match plan.actions[i] {
+        Action::Compute { .. } => &plan.operands[i],
+        _ => &[],
+    }
+}
+
+/// Operand edges that keep a value alive in the graph (adds the alias →
+/// origin edge), mirroring the planner's `dce_reads`.
+fn dce_reads<'a>(insts: &[HloInstruction], plan: &'a MemoryPlan, i: usize) -> &'a [usize] {
+    if i == plan.root && insts[i].opcode == "tuple" {
+        return &plan.operands[i];
+    }
+    match plan.actions[i] {
+        Action::Compute { .. } => &plan.operands[i],
+        Action::Alias => plan.operands[i].get(..1).unwrap_or(&[]),
+        _ => &[],
+    }
+}
+
+fn derive(insts: &[HloInstruction], plan: &MemoryPlan) -> Derived {
+    let n = insts.len();
+    let mut slot_of = vec![usize::MAX; n];
+    for (i, a) in plan.actions.iter().enumerate() {
+        if let Action::Compute { slot, .. } = a {
+            slot_of[i] = *slot;
+        }
+    }
+    // Storage bases: walk alias chains with an explicit cycle guard —
+    // corrupted plans may violate the operands-precede rule the builder
+    // enforces, and the verifier must terminate on them anyway.
+    let mut base = vec![Storage::Dead; n];
+    for i in 0..n {
+        base[i] = resolve_base(plan, i, n);
+    }
+    // Liveness re-derivation (same contract as the planner: the root's
+    // storage, or every root tuple element's, lives to the end).
+    let mut last_use = vec![0usize; n];
+    for i in 0..n {
+        for &op in live_reads(insts, plan, i) {
+            if op < n {
+                if let Storage::Val(j) = base[op] {
+                    last_use[j] = last_use[j].max(i);
+                }
+            }
+        }
+    }
+    let root = plan.root;
+    if root < n {
+        if insts[root].opcode == "tuple" {
+            for &op in &plan.operands[root] {
+                if op < n {
+                    if let Storage::Val(j) = base[op] {
+                        last_use[j] = usize::MAX;
+                    }
+                }
+            }
+        } else if let Storage::Val(j) = base[root] {
+            last_use[j] = usize::MAX;
+        }
+    }
+    // Root-reachability over dce edges (bounded worklist).
+    let mut reachable = vec![false; n];
+    if root < n {
+        let mut stack = vec![root];
+        while let Some(i) = stack.pop() {
+            if reachable[i] {
+                continue;
+            }
+            reachable[i] = true;
+            for &op in dce_reads(insts, plan, i) {
+                if op < n && !reachable[op] {
+                    stack.push(op);
+                }
+            }
+        }
+    }
+    Derived { base, last_use, slot_of, reachable }
+}
+
+fn resolve_base(plan: &MemoryPlan, i: usize, n: usize) -> Storage {
+    let mut cur = i;
+    // An alias chain longer than the instruction count must revisit a
+    // node; bail out as unresolvable rather than looping.
+    for _ in 0..=n {
+        match plan.actions.get(cur) {
+            Some(Action::Compute { .. }) => return Storage::Val(cur),
+            Some(Action::Param(p)) => return Storage::Par(*p),
+            Some(Action::Cached) | Some(Action::Preset) => return Storage::Pinned,
+            Some(Action::Alias) => match plan.operands[cur].first() {
+                Some(&op) if op < n => cur = op,
+                _ => return Storage::Dead,
+            },
+            Some(Action::Skip) | None => return Storage::Dead,
+        }
+    }
+    Storage::Dead
+}
+
+// ---------------------------------------------------------------------
+// The rules
+// ---------------------------------------------------------------------
+
+fn run_rules(insts: &[HloInstruction], plan: &MemoryPlan) -> Vec<PlanDiagnostic> {
+    let d = derive(insts, plan);
+    let mut out = Vec::new();
+    rule_def_before_use(insts, plan, &mut out);
+    rule_slot_compat(insts, plan, &mut out);
+    rule_alias_chain(insts, plan, &d, &mut out);
+    rule_inplace_legal(insts, plan, &d, &mut out);
+    rule_slot_replay(insts, plan, &d, &mut out);
+    rule_fusion_legal(insts, plan, &mut out);
+    rule_persistent_isolation(insts, plan, &d, &mut out);
+    rule_root_reachable(insts, plan, &mut out);
+    rule_dce_sound(insts, plan, &d, &mut out);
+    rule_param_contract(insts, plan, &d, &mut out);
+    out
+}
+
+fn diag(
+    out: &mut Vec<PlanDiagnostic>,
+    rule: RuleId,
+    severity: Severity,
+    insts: &[HloInstruction],
+    inst: Option<usize>,
+    slot: Option<usize>,
+    message: String,
+) {
+    out.push(PlanDiagnostic {
+        rule,
+        severity,
+        inst,
+        name: inst
+            .and_then(|i| insts.get(i))
+            .map(|x| x.name.clone())
+            .unwrap_or_default(),
+        slot,
+        message,
+    });
+}
+
+/// `def-before-use`: every operand edge points strictly backwards, and
+/// no live instruction reads a node the plan skipped.
+fn rule_def_before_use(insts: &[HloInstruction], plan: &MemoryPlan, out: &mut Vec<PlanDiagnostic>) {
+    let n = insts.len();
+    for i in 0..n {
+        for &op in dce_reads(insts, plan, i) {
+            if op >= i {
+                diag(
+                    out,
+                    RuleId::DefBeforeUse,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    None,
+                    format!("operand #{op} does not precede its reader #{i}"),
+                );
+            } else if matches!(plan.actions[op], Action::Skip)
+                && !(op == plan.root && insts[op].opcode == "tuple")
+            {
+                diag(
+                    out,
+                    RuleId::DefBeforeUse,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    None,
+                    format!("reads skipped node %{}", insts[op].name),
+                );
+            }
+        }
+    }
+}
+
+/// `slot-compat`: compute outputs land in existing slots of the right
+/// dtype with capacity for the value.
+fn rule_slot_compat(insts: &[HloInstruction], plan: &MemoryPlan, out: &mut Vec<PlanDiagnostic>) {
+    for (i, a) in plan.actions.iter().enumerate() {
+        let Action::Compute { slot, .. } = a else { continue };
+        let Some(spec) = plan.slots.get(*slot) else {
+            diag(
+                out,
+                RuleId::SlotCompat,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!("slot {} out of range ({} slots)", slot, plan.slots.len()),
+            );
+            continue;
+        };
+        match host_dtype(&insts[i].shape.dtype) {
+            Ok(dt) if dt == spec.dtype => {}
+            Ok(dt) => diag(
+                out,
+                RuleId::SlotCompat,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!("value dtype {dt:?} != slot dtype {:?}", spec.dtype),
+            ),
+            Err(e) => diag(
+                out,
+                RuleId::SlotCompat,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!("unplannable dtype: {e}"),
+            ),
+        }
+        let elems = elems_of(&insts[i]);
+        if spec.elems < elems {
+            diag(
+                out,
+                RuleId::SlotCompat,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!("value needs {elems} elems but slot capacity is {}", spec.elems),
+            );
+        }
+    }
+}
+
+/// `alias-chain`: every alias resolves (acyclically) to live storage of
+/// identical element count and dtype — a reshape/copy alias never
+/// reinterprets or dangles.
+fn rule_alias_chain(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    for (i, a) in plan.actions.iter().enumerate() {
+        if !matches!(a, Action::Alias) {
+            continue;
+        }
+        let Some(&src) = plan.operands[i].first() else {
+            diag(
+                out,
+                RuleId::AliasChain,
+                Severity::Error,
+                insts,
+                Some(i),
+                None,
+                "alias has no operand".to_string(),
+            );
+            continue;
+        };
+        if d.base[i] == Storage::Dead {
+            diag(
+                out,
+                RuleId::AliasChain,
+                Severity::Error,
+                insts,
+                Some(i),
+                None,
+                "alias chain is cyclic or lands on skipped storage".to_string(),
+            );
+            continue;
+        }
+        if src < insts.len() {
+            let so = &insts[src];
+            if elems_of(so) != elems_of(&insts[i]) || so.shape.dtype != insts[i].shape.dtype {
+                diag(
+                    out,
+                    RuleId::AliasChain,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    None,
+                    format!(
+                        "alias reinterprets %{}: {:?} {:?} -> {:?} {:?}",
+                        so.name, so.shape.dtype, so.shape.dims, insts[i].shape.dtype,
+                        insts[i].shape.dims
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `inplace-legal`: an in-place compute may only overwrite the storage
+/// of a slot-backed operand that dies at this very instruction, has the
+/// same size and slot, and is not read through any other operand.
+fn rule_inplace_legal(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    for (i, a) in plan.actions.iter().enumerate() {
+        let Action::Compute { slot, alias_of: Some(ord), .. } = a else { continue };
+        let ops_list = &plan.operands[i];
+        let Some(&donor) = ops_list.get(*ord) else {
+            diag(
+                out,
+                RuleId::InplaceLegal,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!("in-place ordinal {ord} out of range ({} operands)", ops_list.len()),
+            );
+            continue;
+        };
+        let org = match d.base.get(donor) {
+            Some(Storage::Val(org)) => *org,
+            other => {
+                diag(
+                    out,
+                    RuleId::InplaceLegal,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    Some(*slot),
+                    format!(
+                        "in-place donor %{} is not slot-backed ({other:?}); mutating \
+                         shared or parameter storage",
+                        insts[donor].name
+                    ),
+                );
+                continue;
+            }
+        };
+        if d.slot_of[org] != *slot {
+            diag(
+                out,
+                RuleId::InplaceLegal,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!(
+                    "in-place donor %{} lives in slot {} but output writes slot {}",
+                    insts[donor].name, d.slot_of[org], slot
+                ),
+            );
+        }
+        if d.last_use[org] != i {
+            diag(
+                out,
+                RuleId::InplaceLegal,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!(
+                    "in-place donor %{} is still read at #{} (not dead here)",
+                    insts[donor].name, d.last_use[org]
+                ),
+            );
+        }
+        if elems_of(&insts[donor]) != elems_of(&insts[i]) {
+            diag(
+                out,
+                RuleId::InplaceLegal,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!(
+                    "in-place over a different size: donor {} elems, output {} elems",
+                    elems_of(&insts[donor]),
+                    elems_of(&insts[i])
+                ),
+            );
+        }
+        if ops_list
+            .iter()
+            .enumerate()
+            .any(|(j, &op)| j != *ord && d.base.get(op) == Some(&Storage::Val(org)))
+        {
+            diag(
+                out,
+                RuleId::InplaceLegal,
+                Severity::Error,
+                insts,
+                Some(i),
+                Some(*slot),
+                format!(
+                    "another operand aliases the in-place donor %{} (mutating while reading)",
+                    insts[donor].name
+                ),
+            );
+        }
+    }
+}
+
+/// `slot-replay`: replay the whole schedule and prove every read sees
+/// the value the planner assigned — a slot is never handed to a new
+/// value while a later instruction still reads the old one. This is the
+/// original planner self-check, folded in as one rule among ten.
+fn rule_slot_replay(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    let mut owner: Vec<Option<usize>> = vec![None; plan.slots.len()];
+    let n = insts.len();
+    let check = |owner: &[Option<usize>], op: usize, at: usize, out: &mut Vec<PlanDiagnostic>| {
+        if let Some(Storage::Val(org)) = d.base.get(op) {
+            let s = d.slot_of[*org];
+            if s >= owner.len() || owner[s] != Some(*org) {
+                diag(
+                    out,
+                    RuleId::SlotReplay,
+                    Severity::Error,
+                    insts,
+                    Some(at),
+                    if s < owner.len() { Some(s) } else { None },
+                    format!(
+                        "reads %{} but its slot holds {}",
+                        insts[op].name,
+                        match owner.get(s).copied().flatten() {
+                            Some(o) => format!("%{}", insts[o].name),
+                            None => "nothing".to_string(),
+                        }
+                    ),
+                );
+            }
+        }
+    };
+    for i in 0..n {
+        for &op in live_reads(insts, plan, i) {
+            if op < n {
+                check(&owner, op, i, out);
+            }
+        }
+        if let Action::Compute { slot, .. } = plan.actions[i] {
+            if slot < owner.len() {
+                owner[slot] = Some(i);
+            }
+        }
+    }
+    if plan.root < n && insts[plan.root].opcode != "tuple" {
+        check(&owner, plan.root, plan.root, out);
+    }
+}
+
+/// `fusion-legal`: every fused step's extra input ordinal exists and has
+/// the element count its indexing mode assumes; fused softmax/chain
+/// sources match the output size. (The structural single-consumer and
+/// head-reachability conditions hold by construction of the rewrite —
+/// their observable residue, skipped intermediates with no live readers,
+/// is checked by `def-before-use`.)
+fn rule_fusion_legal(insts: &[HloInstruction], plan: &MemoryPlan, out: &mut Vec<PlanDiagnostic>) {
+    for (i, a) in plan.actions.iter().enumerate() {
+        let Action::Compute { slot, cfg, .. } = a else { continue };
+        let out_elems = elems_of(&insts[i]);
+        let steps: &[FusedOp] = match cfg {
+            OpCfg::Fused { steps } => {
+                if let Some(&src) = plan.operands[i].first() {
+                    if elems_of(&insts[src]) != out_elems {
+                        diag(
+                            out,
+                            RuleId::FusionLegal,
+                            Severity::Error,
+                            insts,
+                            Some(i),
+                            Some(*slot),
+                            format!(
+                                "fused chain source %{} has {} elems, output {}",
+                                insts[src].name,
+                                elems_of(&insts[src]),
+                                out_elems
+                            ),
+                        );
+                    }
+                }
+                steps.as_slice()
+            }
+            OpCfg::Softmax { rows, cols } => {
+                if rows * cols != out_elems {
+                    diag(
+                        out,
+                        RuleId::FusionLegal,
+                        Severity::Error,
+                        insts,
+                        Some(i),
+                        Some(*slot),
+                        format!("fused softmax {rows}x{cols} != output {out_elems} elems"),
+                    );
+                }
+                &[]
+            }
+            OpCfg::Dot { epilogue, .. } => epilogue.as_slice(),
+            OpCfg::ClusteredDot { epilogue, .. } => epilogue.as_slice(),
+            _ => &[],
+        };
+        for (k, step) in steps.iter().enumerate() {
+            let arg = match step {
+                FusedOp::Unary(_) => continue,
+                FusedOp::WithRhs(_, arg) | FusedOp::WithLhs(_, arg) => *arg,
+            };
+            let (ord, want): (usize, Option<usize>) = match arg {
+                FusedIn::Scalar(o) => (o, Some(1)),
+                FusedIn::Full(o) => (o, Some(out_elems)),
+                FusedIn::Row(o, cols) => (o, Some(cols)),
+                // Col carries the trailing block size; the operand holds
+                // one value per block.
+                FusedIn::Col(o, block) => {
+                    (o, if block == 0 { None } else { Some(out_elems / block) })
+                }
+            };
+            match plan.operands[i].get(ord) {
+                None => diag(
+                    out,
+                    RuleId::FusionLegal,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    Some(*slot),
+                    format!(
+                        "fused step {k} reads operand ordinal {ord}, but only {} operands",
+                        plan.operands[i].len()
+                    ),
+                ),
+                Some(&op) => {
+                    let got = elems_of(&insts[op]);
+                    match want {
+                        Some(w) if got == w => {}
+                        Some(w) => diag(
+                            out,
+                            RuleId::FusionLegal,
+                            Severity::Error,
+                            insts,
+                            Some(i),
+                            Some(*slot),
+                            format!(
+                                "fused step {k} input %{} has {got} elems, indexing mode \
+                                 expects {w}",
+                                insts[op].name
+                            ),
+                        ),
+                        None => diag(
+                            out,
+                            RuleId::FusionLegal,
+                            Severity::Error,
+                            insts,
+                            Some(i),
+                            Some(*slot),
+                            format!("fused step {k} has a zero block size"),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `persistent-isolation`: persistent parameter storage (the KV-cache
+/// class) is never the target of an in-place kernel and is staged by at
+/// most one parameter action — previous calls' state must survive.
+fn rule_persistent_isolation(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    if plan.param_persistent.len() != plan.params.len() {
+        diag(
+            out,
+            RuleId::PersistentIsolation,
+            Severity::Error,
+            insts,
+            None,
+            None,
+            format!(
+                "persistent table covers {} params, signature has {}",
+                plan.param_persistent.len(),
+                plan.params.len()
+            ),
+        );
+        return;
+    }
+    // At most one staging site per persistent parameter.
+    let mut seen = vec![0usize; plan.params.len()];
+    for (i, a) in plan.actions.iter().enumerate() {
+        if let Action::Param(p) = a {
+            if let Some(c) = seen.get_mut(*p) {
+                *c += 1;
+                if *c > 1 && plan.param_persistent[*p] {
+                    diag(
+                        out,
+                        RuleId::PersistentIsolation,
+                        Severity::Error,
+                        insts,
+                        Some(i),
+                        None,
+                        format!("persistent parameter {p} staged by more than one instruction"),
+                    );
+                }
+            }
+        }
+    }
+    // No in-place kernel may claim parameter storage as its donor —
+    // doubly fatal when that parameter is persistent.
+    for (i, a) in plan.actions.iter().enumerate() {
+        let Action::Compute { slot, alias_of: Some(ord), .. } = a else { continue };
+        let Some(&donor) = plan.operands[i].get(*ord) else { continue };
+        if let Some(Storage::Par(p)) = d.base.get(donor) {
+            if plan.param_persistent.get(*p).copied().unwrap_or(false) {
+                diag(
+                    out,
+                    RuleId::PersistentIsolation,
+                    Severity::Error,
+                    insts,
+                    Some(i),
+                    Some(*slot),
+                    format!(
+                        "in-place kernel mutates persistent parameter {p} (%{})",
+                        insts[donor].name
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `root-reachable`: the root value (or every element of a root tuple)
+/// is actually materialized by the plan.
+fn rule_root_reachable(insts: &[HloInstruction], plan: &MemoryPlan, out: &mut Vec<PlanDiagnostic>) {
+    let n = insts.len();
+    if plan.root >= n {
+        diag(
+            out,
+            RuleId::RootReachable,
+            Severity::Error,
+            insts,
+            None,
+            None,
+            format!("root index {} out of range ({n} instructions)", plan.root),
+        );
+        return;
+    }
+    let root = plan.root;
+    if insts[root].opcode == "tuple" {
+        for &op in &plan.operands[root] {
+            if op >= n || matches!(plan.actions[op], Action::Skip) {
+                diag(
+                    out,
+                    RuleId::RootReachable,
+                    Severity::Error,
+                    insts,
+                    Some(root),
+                    None,
+                    format!("root tuple element #{op} is not materialized"),
+                );
+            }
+        }
+    } else if matches!(plan.actions[root], Action::Skip) {
+        diag(
+            out,
+            RuleId::RootReachable,
+            Severity::Error,
+            insts,
+            Some(root),
+            None,
+            "root value was skipped".to_string(),
+        );
+    }
+}
+
+/// `dce-sound`: nothing reachable from the root was eliminated, and
+/// (warning) surviving compute/alias/preset work that the root cannot
+/// observe — dead code the planner kept — is flagged.
+fn rule_dce_sound(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    for i in 0..insts.len() {
+        let live_kind = matches!(
+            plan.actions[i],
+            Action::Compute { .. } | Action::Alias | Action::Preset
+        );
+        if d.reachable[i] && matches!(plan.actions[i], Action::Skip) && i != plan.root {
+            diag(
+                out,
+                RuleId::DceSound,
+                Severity::Error,
+                insts,
+                Some(i),
+                None,
+                "reachable from the root but eliminated".to_string(),
+            );
+        }
+        if !d.reachable[i] && live_kind {
+            diag(
+                out,
+                RuleId::DceSound,
+                Severity::Warning,
+                insts,
+                Some(i),
+                None,
+                "unreachable from the root but still materialized (dead code kept)".to_string(),
+            );
+        }
+    }
+}
+
+/// `param-contract`: parameter actions agree with the declared
+/// signature (position, dims, dtype) and the `param_read` table marks
+/// every parameter whose value execution actually consumes.
+fn rule_param_contract(
+    insts: &[HloInstruction],
+    plan: &MemoryPlan,
+    d: &Derived,
+    out: &mut Vec<PlanDiagnostic>,
+) {
+    if plan.param_read.len() != plan.params.len() {
+        diag(
+            out,
+            RuleId::ParamContract,
+            Severity::Error,
+            insts,
+            None,
+            None,
+            format!(
+                "param_read covers {} params, signature has {}",
+                plan.param_read.len(),
+                plan.params.len()
+            ),
+        );
+        return;
+    }
+    for (i, a) in plan.actions.iter().enumerate() {
+        let Action::Param(p) = a else { continue };
+        let Some((dims, dtype)) = plan.params.get(*p) else {
+            diag(
+                out,
+                RuleId::ParamContract,
+                Severity::Error,
+                insts,
+                Some(i),
+                None,
+                format!("parameter position {p} out of range ({})", plan.params.len()),
+            );
+            continue;
+        };
+        if &insts[i].shape.dims != dims
+            || !matches!(host_dtype(&insts[i].shape.dtype), Ok(dt) if dt == *dtype)
+        {
+            diag(
+                out,
+                RuleId::ParamContract,
+                Severity::Error,
+                insts,
+                Some(i),
+                None,
+                format!(
+                    "declared parameter contract {dims:?} {dtype:?} != instruction shape {:?}",
+                    insts[i].shape.dims
+                ),
+            );
+        }
+    }
+    // Every storage actually read at run time that resolves to a
+    // parameter must be marked read (the executor won't stage unread
+    // parameters).
+    let n = insts.len();
+    for i in 0..n {
+        for &op in live_reads(insts, plan, i) {
+            if op >= n {
+                continue;
+            }
+            if let Storage::Par(p) = d.base[op] {
+                if !plan.param_read.get(p).copied().unwrap_or(false) {
+                    diag(
+                        out,
+                        RuleId::ParamContract,
+                        Severity::Error,
+                        insts,
+                        Some(i),
+                        None,
+                        format!("reads parameter {p} (%{}) but param_read is false", insts[op].name),
+                    );
+                }
+            }
+        }
+    }
+    if let Some(Storage::Par(p)) = d.base.get(plan.root) {
+        if !plan.param_read.get(*p).copied().unwrap_or(false) {
+            diag(
+                out,
+                RuleId::ParamContract,
+                Severity::Error,
+                insts,
+                Some(plan.root),
+                None,
+                format!("root resolves to parameter {p} but param_read is false"),
+            );
+        }
+    }
+}
+
+/// Bind-time death schedule for the arena sanitizer: for each
+/// instruction, the slots whose value dies right after it executes
+/// (excluding the slot the instruction itself wrote). The sanitizer
+/// poisons exactly these — a later read of poisoned bytes means the
+/// planner's liveness and the executor's reads disagree.
+pub(crate) fn slot_death_schedule(insts: &[HloInstruction], plan: &MemoryPlan) -> Vec<Vec<usize>> {
+    let d = derive(insts, plan);
+    let n = insts.len();
+    let mut free_at: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let out_slot = match plan.actions.get(i) {
+            Some(Action::Compute { slot, .. }) => *slot,
+            _ => usize::MAX,
+        };
+        for &op in live_reads(insts, plan, i) {
+            if op >= n {
+                continue;
+            }
+            if let Storage::Val(org) = d.base[op] {
+                if d.last_use[org] == i {
+                    let s = d.slot_of[org];
+                    if s != usize::MAX && s != out_slot && !free_at[i].contains(&s) {
+                        free_at[i].push(s);
+                    }
+                }
+            }
+        }
+    }
+    free_at
+}

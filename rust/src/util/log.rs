@@ -51,7 +51,7 @@ pub fn level() -> Level {
         LEVEL.store(l as u8, Ordering::Relaxed);
         return l;
     }
-    // Safety: only valid discriminants are ever stored.
+    // SAFETY: only valid discriminants are ever stored.
     unsafe { std::mem::transmute(raw) }
 }
 

@@ -1,0 +1,217 @@
+//! Acceptance tests for the bind-time plan verifier and the arena
+//! sanitizer (ISSUE 9):
+//!
+//! * valid plans — hand-written and the ViT-shaped fixture — verify
+//!   clean (zero diagnostics);
+//! * each planted corruption (double-booked slot, live in-place donor,
+//!   alias cycle, forward operand edge, persistent-parameter mutation,
+//!   eliminated root element, out-of-range slot) is rejected with the
+//!   *right* rule id, via the `#[doc(hidden)]` corruption hooks on
+//!   [`MemoryPlan`];
+//! * a deliberate out-of-bounds write past a slot's planned capacity is
+//!   caught by the arena canary on the next execution, attributed to the
+//!   faulting run rather than surfacing as corruption downstream;
+//! * the `verify_rules_checked` counter advances on every verified bind.
+
+use std::sync::Arc;
+
+use clusterformer::hlo::HloModule;
+use clusterformer::runtime::interp::verify::{self, RuleId};
+use clusterformer::runtime::interp::{stats, testing_build_plan, InterpExecutor, MemoryPlan};
+use clusterformer::runtime::ResidentExecutor as _;
+use clusterformer::tensor::Tensor;
+use clusterformer::testing::fixtures::vit_shaped_hlo;
+
+/// Four-instruction diamond over two parameters. Every intermediate has
+/// at least two consumers (the root tuple pins %b and %c), so plan-time
+/// fusion cannot collapse the chain and DCE keeps every node — the
+/// instruction indices below are stable:
+///
+/// ```text
+///   0 %x  param(0)        3 %b = multiply(%a, %x)
+///   1 %y  param(1)        4 %c = subtract(%b, %a)
+///   2 %a = add(%x, %y)    5 %r = reshape(%c)   (zero-copy alias)
+///                         6 %t = tuple(%b, %c, %r)   ROOT
+/// ```
+const FIXTURE: &str = "HloModule verify_fixture\n\
+    ENTRY %main (x: f32[4,4], y: f32[4,4]) -> (f32[4,4], f32[4,4], f32[16]) {\n  \
+    %x = f32[4,4]{1,0} parameter(0)\n  \
+    %y = f32[4,4]{1,0} parameter(1)\n  \
+    %a = f32[4,4]{1,0} add(%x, %y)\n  \
+    %b = f32[4,4]{1,0} multiply(%a, %x)\n  \
+    %c = f32[4,4]{1,0} subtract(%b, %a)\n  \
+    %r = f32[16]{0} reshape(%c)\n  \
+    ROOT %t = (f32[4,4]{1,0}, f32[4,4]{1,0}, f32[16]{0}) tuple(%b, %c, %r)\n}\n";
+
+const A: usize = 2;
+const B: usize = 3;
+const C: usize = 4;
+const R: usize = 5;
+const ROOT: usize = 6;
+
+fn fixture_plan() -> (HloModule, MemoryPlan) {
+    let module = HloModule::parse(FIXTURE).expect("fixture parses");
+    let plan = testing_build_plan(&module).expect("fixture binds");
+    (module, plan)
+}
+
+fn rules_of(module: &HloModule, plan: &MemoryPlan) -> Vec<&'static str> {
+    verify::verify_module_plan(module, plan)
+        .expect("verifier runs")
+        .into_iter()
+        .map(|d| d.rule.id())
+        .collect()
+}
+
+#[test]
+fn valid_plans_verify_clean() {
+    let (module, plan) = fixture_plan();
+    assert_eq!(
+        plan.testing_compute_indices(),
+        vec![A, B, C],
+        "fixture lowers %a/%b/%c as computes"
+    );
+    assert_eq!(plan.testing_alias_indices(), vec![R], "reshape is a zero-copy alias");
+    let diags = verify::verify_module_plan(&module, &plan).expect("verifier runs");
+    assert!(diags.is_empty(), "valid fixture plan must verify clean: {diags:?}");
+
+    let vit = HloModule::parse(&vit_shaped_hlo(16, 32, 4)).expect("vit fixture parses");
+    let vplan = testing_build_plan(&vit).expect("vit fixture binds");
+    let vdiags = verify::verify_module_plan(&vit, &vplan).expect("verifier runs");
+    assert!(vdiags.is_empty(), "ViT-shaped plan must verify clean: {vdiags:?}");
+}
+
+#[test]
+fn out_of_range_slot_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    plan.testing_set_slot(A, 9999);
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::SlotCompat.id()),
+        "out-of-range slot must trip slot-compat, got {rules:?}"
+    );
+}
+
+#[test]
+fn double_booked_slot_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    // %c steals %b's slot: %b is re-read by the root tuple *after* %c
+    // executes, so the replay sees the root read a slot that now holds
+    // %c's value.
+    let b_slot = plan.testing_slot_of(B).expect("%b is a compute");
+    assert_ne!(
+        plan.testing_slot_of(C),
+        Some(b_slot),
+        "fixture keeps %b and %c in distinct slots (both live to the end)"
+    );
+    plan.testing_set_slot(C, b_slot);
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::SlotReplay.id()),
+        "double-booked slot must trip slot-replay, got {rules:?}"
+    );
+}
+
+#[test]
+fn inplace_over_live_operand_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    // %b claims its operand %a as an in-place donor, but %a is still
+    // read by %c afterwards.
+    plan.testing_set_inplace(B, Some(0));
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::InplaceLegal.id()),
+        "in-place over a live donor must trip inplace-legal, got {rules:?}"
+    );
+}
+
+#[test]
+fn alias_cycle_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    // The reshape alias now points at itself: its chain never resolves.
+    plan.testing_redirect_operand(R, 0, R);
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::AliasChain.id()),
+        "cyclic alias chain must trip alias-chain, got {rules:?}"
+    );
+}
+
+#[test]
+fn forward_operand_edge_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    // %c's first operand points forward at the root tuple.
+    plan.testing_redirect_operand(C, 0, ROOT);
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::DefBeforeUse.id()),
+        "forward operand edge must trip def-before-use, got {rules:?}"
+    );
+}
+
+#[test]
+fn inplace_mutation_of_persistent_param_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    // Parameter 0 becomes persistent cross-call state (the KV-cache
+    // class); %a then claims it as an in-place donor — previous calls'
+    // state would be clobbered.
+    plan.testing_set_persistent(0, true);
+    plan.testing_set_inplace(A, Some(0));
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::PersistentIsolation.id()),
+        "mutating a persistent parameter must trip persistent-isolation, got {rules:?}"
+    );
+}
+
+#[test]
+fn eliminated_root_element_is_rejected() {
+    let (module, mut plan) = fixture_plan();
+    plan.testing_skip(C);
+    let rules = rules_of(&module, &plan);
+    assert!(
+        rules.contains(&RuleId::RootReachable.id()),
+        "skipping a root tuple element must trip root-reachable, got {rules:?}"
+    );
+}
+
+#[test]
+fn verified_bind_advances_rule_counter() {
+    let before = stats::verify_rules_checked();
+    let (_module, _plan) = fixture_plan();
+    let after = stats::verify_rules_checked();
+    assert!(
+        after >= before + verify::RULE_COUNT,
+        "bind must verify all {} rules (counter {before} -> {after})",
+        verify::RULE_COUNT
+    );
+}
+
+#[test]
+fn arena_canary_catches_out_of_bounds_write() {
+    // The sanitizer defaults to on in debug builds only; force it on so
+    // this test also bites under `cargo test --release`. The env var is
+    // resolved once per process, and this integration-test binary is its
+    // own process, so setting it before the first bind is reliable.
+    std::env::set_var("CLUSTERFORMER_SANITIZE", "1");
+
+    let exe = InterpExecutor::load_text(FIXTURE, "canary").expect("fixture loads");
+    let resident = exe.resident(2, Arc::new(Vec::new()), None).expect("fixture binds");
+    assert!(resident.memory_plan().is_some(), "fixture must be memory-planned");
+
+    let x = Tensor::from_f32(vec![4, 4], &[0.5; 16]).expect("input");
+    let y = Tensor::from_f32(vec![4, 4], &[-0.25; 16]).expect("input");
+    resident.run(&[x.clone(), y.clone()]).expect("clean run succeeds");
+
+    // One element written past slot 0's planned capacity — the kind of
+    // off-by-one an unsafe GEMM/LUT kernel produces.
+    resident.testing_smash_canary().expect("sanitizer is active");
+    let err = resident
+        .run(&[x, y])
+        .expect_err("run over a smashed canary must fail");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("canary"),
+        "sanitizer error must name the canary, got: {msg}"
+    );
+}

@@ -1,0 +1,392 @@
+//! `cargo run -p xtask -- lint` — a repo-local static pass enforcing
+//! invariants the compiler can't (ISSUE 9). No dependencies, std only:
+//! the rules are deliberately line-level and dumb, because every one of
+//! them guards a convention this codebase states in prose somewhere and
+//! has already slipped on at least once.
+//!
+//! Rules:
+//!
+//! * `no-unwrap` — no `.unwrap()` / `.expect(` in the hot-path files
+//!   (`runtime/interp/{plan,arena,plan_cache,decode}.rs`,
+//!   `coordinator/{router,worker,server}.rs`): a panic there takes down
+//!   a serving worker mid-request. Test modules (below `#[cfg(test)]`)
+//!   are exempt.
+//! * `no-thread-spawn` — `std::thread::spawn` / `thread::Builder` only
+//!   in `runtime/interp/pool_exec.rs` (the persistent kernel pool);
+//!   everything else must borrow its lanes from the pool so the
+//!   `CLUSTERFORMER_THREADS` budget actually bounds the process.
+//!   Test modules are exempt.
+//! * `safety-comment` — every `unsafe` block, `unsafe fn`, and
+//!   `unsafe impl` in `src/` must be preceded by a `// SAFETY:` comment
+//!   (or a `/// # Safety` doc section) stating the invariant that makes
+//!   it sound. Bare `unsafe fn(...)` pointer *types* are not flagged.
+//! * `no-instant` — no `Instant::now()` in the kernel files
+//!   (`ops/gemm/clustered/aligned/pool_exec/arena.rs`): a syscall-ish
+//!   clock read inside a per-element loop is a profiling artifact that
+//!   ships; timing belongs in benches and the coordinator.
+//!
+//! Allowlisting: a finding is suppressed by an annotation on the same
+//! line or the line above, of the form
+//! `// lint:allow(<rule>): <justification>` — the justification is
+//! mandatory (an empty reason is itself a finding). CI runs this pass;
+//! the only standing entries are documented in the README.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files where a panic is a serving outage, not a bug report.
+const HOT_PATH_FILES: &[&str] = &[
+    "runtime/interp/plan.rs",
+    "runtime/interp/arena.rs",
+    "runtime/interp/plan_cache.rs",
+    "runtime/interp/decode.rs",
+    "coordinator/router.rs",
+    "coordinator/worker.rs",
+    "coordinator/server.rs",
+];
+
+/// The one file allowed to spawn OS threads (the persistent pool).
+const SPAWN_ALLOWED: &str = "runtime/interp/pool_exec.rs";
+
+/// Kernel files where a clock read means someone left profiling code in
+/// a per-element loop.
+const KERNEL_FILES: &[&str] = &[
+    "runtime/interp/ops.rs",
+    "runtime/interp/gemm.rs",
+    "runtime/interp/clustered.rs",
+    "runtime/interp/aligned.rs",
+    "runtime/interp/pool_exec.rs",
+    "runtime/interp/arena.rs",
+];
+
+struct Finding {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    // CARGO_MANIFEST_DIR = <repo>/rust/xtask; the tree under lint is
+    // <repo>/rust/src.
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives inside the rust crate")
+        .to_path_buf();
+    let src = crate_root.join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut lines_scanned = 0usize;
+    for path in &files {
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                findings.push(Finding {
+                    file: path.clone(),
+                    line: 0,
+                    rule: "io",
+                    message: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        lines_scanned += text.lines().count();
+        check_file(path, &rel, &text, &mut findings);
+    }
+
+    if findings.is_empty() {
+        println!(
+            "xtask lint: {} files, {} lines, 0 findings",
+            files.len(),
+            lines_scanned
+        );
+        ExitCode::SUCCESS
+    } else {
+        for f in &findings {
+            eprintln!(
+                "{}:{}: [{}] {}",
+                f.file.display(),
+                f.line,
+                f.rule,
+                f.message
+            );
+        }
+        eprintln!("xtask lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// The code part of a line: everything before a `//` that is not inside
+/// a string literal. Good enough for line-level rules — raw strings and
+/// multiline literals in this codebase never contain the tokens the
+/// rules match on.
+fn strip_comment(line: &str) -> &str {
+    let b = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'"' if !in_str => in_str = true,
+            b'"' if in_str && (i == 0 || b[i - 1] != b'\\') => in_str = false,
+            b'/' if !in_str && i + 1 < b.len() && b[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Parse a `lint:allow(<rules>): <reason>` annotation out of a line, if
+/// present. Returns (rules, reason).
+fn allow_annotation(line: &str) -> Option<(Vec<String>, String)> {
+    let at = line.find("lint:allow(")?;
+    let rest = &line[at + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rules = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    let reason = rest[close + 1..]
+        .trim_start_matches([':', '-', ' '])
+        .trim()
+        .to_string();
+    Some((rules, reason))
+}
+
+/// Whether line `idx` (0-based) carries or inherits an allow annotation
+/// for `rule`: on the flagged line itself, or anywhere in the contiguous
+/// comment block directly above it. Flags an empty justification as its
+/// own finding.
+fn allowed(
+    path: &Path,
+    lines: &[&str],
+    idx: usize,
+    rule: &str,
+    findings: &mut Vec<Finding>,
+) -> bool {
+    let mut look = idx;
+    loop {
+        if let Some((rules, reason)) = allow_annotation(lines[look]) {
+            if rules.iter().any(|r| r == rule) {
+                if reason.is_empty() {
+                    findings.push(Finding {
+                        file: path.to_path_buf(),
+                        line: look + 1,
+                        rule: "allow-without-reason",
+                        message: format!(
+                            "lint:allow({rule}) needs a justification after the closing paren"
+                        ),
+                    });
+                }
+                return true;
+            }
+        }
+        if look == 0 || !lines[look - 1].trim_start().starts_with("//") {
+            return false;
+        }
+        look -= 1;
+    }
+}
+
+/// First line (0-based) of the file's trailing `#[cfg(test)]` region,
+/// or `usize::MAX` when there is none. Test modules sit at the bottom
+/// of every file in this repo, so everything after the marker is test
+/// code.
+fn test_region_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.trim() == "#[cfg(test)]")
+        .unwrap_or(usize::MAX)
+}
+
+fn check_file(path: &Path, rel: &str, text: &str, findings: &mut Vec<Finding>) {
+    let lines: Vec<&str> = text.lines().collect();
+    let test_start = test_region_start(&lines);
+    let hot = HOT_PATH_FILES.contains(&rel);
+    let kernel = KERNEL_FILES.contains(&rel);
+    let spawn_ok = rel == SPAWN_ALLOWED;
+
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        let in_tests = i >= test_start;
+
+        if hot
+            && !in_tests
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(path, &lines, i, "no-unwrap", findings)
+        {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: i + 1,
+                rule: "no-unwrap",
+                message: "unwrap()/expect() on a hot path: return a contextful error, \
+                          or annotate a proven invariant with \
+                          `// lint:allow(no-unwrap): <why it cannot fail>`"
+                    .to_string(),
+            });
+        }
+
+        if !spawn_ok
+            && !in_tests
+            && (code.contains("thread::spawn") || code.contains("thread::Builder"))
+            && !allowed(path, &lines, i, "no-thread-spawn", findings)
+        {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: i + 1,
+                rule: "no-thread-spawn",
+                message: "OS threads are spawned only by the kernel pool \
+                          (runtime/interp/pool_exec.rs); use par_for / par_for_rows, or \
+                          annotate a supervised lifecycle thread with \
+                          `// lint:allow(no-thread-spawn): <why>`"
+                    .to_string(),
+            });
+        }
+
+        if kernel
+            && !in_tests
+            && code.contains("Instant::now")
+            && !allowed(path, &lines, i, "no-instant", findings)
+        {
+            findings.push(Finding {
+                file: path.to_path_buf(),
+                line: i + 1,
+                rule: "no-instant",
+                message: "clock reads inside kernel files ship profiling artifacts; \
+                          time in benches or the coordinator instead"
+                    .to_string(),
+            });
+        }
+
+        if let Some(col) = unsafe_site(code) {
+            if !has_safety_comment(&lines, i, raw, col)
+                && !allowed(path, &lines, i, "safety-comment", findings)
+            {
+                findings.push(Finding {
+                    file: path.to_path_buf(),
+                    line: i + 1,
+                    rule: "safety-comment",
+                    message: "unsafe without a `// SAFETY:` comment (or `/// # Safety` doc \
+                              section) stating the invariant that makes it sound"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Byte offset of an `unsafe` keyword on this (comment-stripped) line
+/// that starts an unsafe block, fn, or impl — `None` for pointer types
+/// (`unsafe fn(`), mentions inside identifiers, and plain-text uses.
+fn unsafe_site(code: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("unsafe").map(|p| p + from) {
+        from = pos + "unsafe".len();
+        // Left word boundary: reject `an_unsafe_thing`. The right
+        // boundary falls out of the dispatch below — only `{`, `impl`,
+        // `fn`, and end-of-line count as unsafe sites, so `unsafely`
+        // (raw = "ly") matches none of them.
+        if pos > 0 && (b[pos - 1].is_ascii_alphanumeric() || b[pos - 1] == b'_') {
+            continue;
+        }
+        let raw_after = &code[pos + "unsafe".len()..];
+        if !raw_after.is_empty() && !raw_after.starts_with([' ', '\t', '{']) {
+            continue;
+        }
+        let after = raw_after.trim_start();
+        if after.starts_with('{') || after.starts_with("impl") {
+            return Some(pos);
+        }
+        if let Some(rest) = after.strip_prefix("fn") {
+            let rest = rest.trim_start();
+            // `unsafe fn(` with no name is a function-pointer *type*
+            // (e.g. a struct field); declarations have an identifier.
+            if rest.starts_with('(') {
+                continue;
+            }
+            return Some(pos);
+        }
+        // `unsafe` at end of line: the `{` opens on the next line.
+        if after.is_empty() {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+/// Whether the unsafe site on line `idx` has a SAFETY comment: trailing
+/// on the same line, or in the contiguous run of comment / attribute /
+/// blank lines directly above (which is where `/// # Safety` doc
+/// sections and between-attribute `// SAFETY:` comments live).
+fn has_safety_comment(lines: &[&str], idx: usize, raw: &str, _col: usize) -> bool {
+    let mentions_safety =
+        |l: &str| l.contains("SAFETY:") || l.contains("# Safety") || l.contains("Safety:");
+    // Trailing comment on the same line.
+    if let Some(at) = raw.find("//") {
+        if mentions_safety(&raw[at..]) {
+            return true;
+        }
+    }
+    let mut k = idx;
+    let mut budget = 100;
+    while k > 0 && budget > 0 {
+        k -= 1;
+        budget -= 1;
+        let t = lines[k].trim();
+        let is_carrier = t.starts_with("//")
+            || t.starts_with("#[")
+            || t.starts_with("#!")
+            || t.ends_with(']') && t.starts_with('#')
+            || t.is_empty();
+        if t.starts_with("//") && mentions_safety(t) {
+            return true;
+        }
+        if !is_carrier {
+            // One structural line of slack: dispatch-match SAFETY
+            // comments sometimes sit above the match arm pattern, e.g.
+            //   // SAFETY: ...
+            //   KernelIsa::Avx2 => unsafe { ... }
+            // where the arm itself is the unsafe line; but a comment
+            // above a *different* preceding statement must not leak
+            // through. Stop at the first non-comment/attr line.
+            return false;
+        }
+    }
+    false
+}
