@@ -1,0 +1,287 @@
+//! Open-loop load generation against the real HTTP front end: offered
+//! load vs goodput with latency percentiles and shed/timeout/error
+//! rates at each point.
+//!
+//! A synthetic single-variant server is slowed by a deterministic
+//! injected fault so its capacity is known exactly; the generator then
+//! drives 0.5x/1x/2x/4x that capacity through **real sockets** —
+//! connection per request, JSON body, client-side `deadline_ms` — so
+//! the measured path includes accept, parse, admission, batching, and
+//! response write. Emits machine-readable `BENCH_serving.json`.
+//!
+//! Pacing: eight generator threads, each deficit-paced at its share of
+//! the offered rate. A generator blocks while its one in-flight
+//! request is being answered, so under deep overload the *realized*
+//! offered rate falls short of nominal — both are reported, and the
+//! client deadline keeps per-request stalls bounded, which is what
+//! keeps the loop approximately open.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use std::io::{Read, Write};
+
+use clusterformer::coordinator::{
+    faults, BatchPolicy, BatcherConfig, HttpConfig, HttpServer, ResilienceConfig, Server,
+    ServerConfig,
+};
+use clusterformer::model::VariantKey;
+use clusterformer::runtime::{BackendKind, ThreadBudget};
+use clusterformer::testing::synthetic::SyntheticServing;
+use clusterformer::util::stats::percentile_sorted;
+
+/// Injected per-batch execution time: with `MAX_BATCH` the worker's
+/// capacity is exactly `MAX_BATCH * 1000 / SLOW_MS` req/s.
+const SLOW_MS: u64 = 5;
+const MAX_BATCH: usize = 4;
+/// Seconds of offered load per point.
+const POINT_S: f64 = 1.2;
+/// Generator threads (one in-flight request each).
+const CLIENTS: usize = 8;
+/// Client-side deadline carried in each request body.
+const DEADLINE_MS: u64 = 150;
+
+#[derive(Default)]
+struct Tally {
+    ok: usize,
+    shed: usize,     // 429
+    timeout: usize,  // 504
+    error: usize,    // other 5xx
+    conn_err: usize, // torn / refused / unparseable
+    lat_ms: Vec<f64>,
+}
+
+struct Point {
+    mult: f64,
+    nominal_rate: f64,
+    realized_rate: f64,
+    submitted: usize,
+    tally: Tally,
+    goodput: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    p999_ms: f64,
+}
+
+/// One request over its own connection; returns (status, latency).
+/// Status 0 means the connection failed or the response was torn.
+fn one_request(addr: SocketAddr, body: &str) -> (u16, f64) {
+    let t0 = Instant::now();
+    let run = || -> std::io::Result<u16> {
+        let mut s = std::net::TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        s.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(raw.as_bytes())?;
+        let mut text = String::new();
+        s.read_to_string(&mut text)?;
+        Ok(text
+            .split_whitespace()
+            .nth(1)
+            .and_then(|t| t.parse::<u16>().ok())
+            .unwrap_or(0))
+    };
+    let status = run().unwrap_or(0);
+    (status, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn load_point(synth: &SyntheticServing, mult: f64, capacity: f64) -> anyhow::Result<Point> {
+    let server = Server::start(ServerConfig {
+        artifacts_dir: synth.dir.clone(),
+        targets: vec![(synth.model.clone(), VariantKey::Baseline)],
+        backend: BackendKind::Interp,
+        batcher: BatcherConfig {
+            max_batch: MAX_BATCH,
+            max_wait: Duration::from_millis(2),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 100_000,
+        },
+        threads: ThreadBudget::new(2),
+        resilience: ResilienceConfig { queue_bound: 64, ..ResilienceConfig::default() },
+    })?;
+    let http = HttpServer::start(
+        server.router.clone(),
+        server.metrics.clone(),
+        HttpConfig {
+            max_conns: 512,
+            label: "loadbench-fe".to_string(),
+            ..HttpConfig::default()
+        },
+    )?;
+    let addr = http.addr();
+
+    let nominal_rate = capacity * mult;
+    let per_thread = nominal_rate / CLIENTS as f64;
+    let target = synth.baseline_target();
+    let img = SyntheticServing::image(1).as_f32()?;
+    let vals: Vec<String> = img.iter().map(|v| format!("{v}")).collect();
+    let body = format!(
+        "{{\"target\":\"{target}\",\"shape\":[2,2,3],\"image\":[{}],\"deadline_ms\":{DEADLINE_MS}}}",
+        vals.join(",")
+    );
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..CLIENTS {
+        let body = body.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut t = Tally::default();
+            let mut sent = 0usize;
+            let t0 = Instant::now();
+            loop {
+                let elapsed = t0.elapsed().as_secs_f64();
+                if elapsed >= POINT_S {
+                    return (sent, t);
+                }
+                let due = (elapsed * per_thread) as usize;
+                if sent >= due {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue;
+                }
+                let (status, lat) = one_request(addr, &body);
+                sent += 1;
+                match status {
+                    200 => {
+                        t.ok += 1;
+                        t.lat_ms.push(lat);
+                    }
+                    429 => t.shed += 1,
+                    504 => t.timeout += 1,
+                    s if s >= 500 => t.error += 1,
+                    _ => t.conn_err += 1,
+                }
+            }
+        }));
+    }
+    let mut submitted = 0usize;
+    let mut tally = Tally::default();
+    for j in joins {
+        let (sent, t) = j.join().expect("generator thread");
+        submitted += sent;
+        tally.ok += t.ok;
+        tally.shed += t.shed;
+        tally.timeout += t.timeout;
+        tally.error += t.error;
+        tally.conn_err += t.conn_err;
+        tally.lat_ms.extend(t.lat_ms);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    http.shutdown();
+    server.shutdown();
+
+    tally.lat_ms.sort_by(|a, b| a.total_cmp(b));
+    let pctl = |q| {
+        if tally.lat_ms.is_empty() { 0.0 } else { percentile_sorted(&tally.lat_ms, q) }
+    };
+    let (p50_ms, p99_ms, p999_ms) = (pctl(0.5), pctl(0.99), pctl(0.999));
+    Ok(Point {
+        mult,
+        nominal_rate,
+        realized_rate: submitted as f64 / wall,
+        submitted,
+        goodput: tally.ok as f64 / wall,
+        p50_ms,
+        p99_ms,
+        p999_ms,
+        tally,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# serving load — offered vs goodput through the HTTP front end\n");
+    let synth = SyntheticServing::build("loadbench");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("slow:{target}:{SLOW_MS}ms"));
+    let capacity = MAX_BATCH as f64 * 1000.0 / SLOW_MS as f64;
+    println!(
+        "worker capacity ~{capacity:.0} req/s (slow fault {SLOW_MS}ms/batch, \
+         max_batch {MAX_BATCH}); deadline {DEADLINE_MS}ms; {CLIENTS} generators, \
+         {POINT_S}s per point\n"
+    );
+    println!("| offered | realized | goodput | ok% | shed% | timeout% | err% | conn-err | p50 | p99 | p99.9 |");
+    println!("|---|---|---|---|---|---|---|---|---|---|---|");
+
+    let mut points = Vec::new();
+    for mult in [0.5, 1.0, 2.0, 4.0] {
+        let p = load_point(&synth, mult, capacity)?;
+        let n = p.submitted.max(1) as f64;
+        println!(
+            "| {:.1}x ({:.0}/s) | {:.0}/s | {:.0}/s | {:.1}% | {:.1}% | {:.1}% | {:.1}% | {} | {:.1}ms | {:.1}ms | {:.1}ms |",
+            p.mult,
+            p.nominal_rate,
+            p.realized_rate,
+            p.goodput,
+            100.0 * p.tally.ok as f64 / n,
+            100.0 * p.tally.shed as f64 / n,
+            100.0 * p.tally.timeout as f64 / n,
+            100.0 * p.tally.error as f64 / n,
+            p.tally.conn_err,
+            p.p50_ms,
+            p.p99_ms,
+            p.p999_ms,
+        );
+        points.push(p);
+    }
+    faults::clear_faults(&target);
+    synth.cleanup();
+
+    let mut points_json = String::new();
+    for p in &points {
+        if !points_json.is_empty() {
+            points_json.push_str(",\n    ");
+        }
+        points_json.push_str(&format!(
+            "{{\"overload\": {}, \"nominal_rate\": {:.1}, \"realized_rate\": {:.1}, \
+             \"submitted\": {}, \"ok\": {}, \"shed\": {}, \"timeout\": {}, \
+             \"error\": {}, \"conn_err\": {}, \"goodput\": {:.1}, \
+             \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \"p999_ms\": {:.2}}}",
+            p.mult,
+            p.nominal_rate,
+            p.realized_rate,
+            p.submitted,
+            p.tally.ok,
+            p.tally.shed,
+            p.tally.timeout,
+            p.tally.error,
+            p.tally.conn_err,
+            p.goodput,
+            p.p50_ms,
+            p.p99_ms,
+            p.p999_ms,
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"serving_load\",\n  \"slow_ms\": {SLOW_MS},\n  \
+         \"capacity_rps\": {capacity:.1},\n  \"deadline_ms\": {DEADLINE_MS},\n  \
+         \"clients\": {CLIENTS},\n  \"point_s\": {POINT_S},\n  \
+         \"points\": [\n    {points_json}\n  ]\n}}\n"
+    );
+    match std::fs::write("BENCH_serving.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_serving.json"),
+        Err(e) => println!("\ncould not write BENCH_serving.json: {e}"),
+    }
+
+    // Sanity, lenient on CI noise: below capacity the system mostly
+    // serves; at deep overload the front end degrades by *typed
+    // shedding* (429/504), not by connection failures.
+    let under = &points[0];
+    assert!(
+        under.tally.ok * 2 > under.submitted,
+        "at 0.5x capacity most requests must complete ({}/{} ok)",
+        under.tally.ok,
+        under.submitted
+    );
+    let over = points.last().expect("points");
+    assert!(
+        over.tally.shed + over.tally.timeout > 0,
+        "at 4x capacity the front end must shed or time out some load"
+    );
+    assert_eq!(
+        over.tally.conn_err, 0,
+        "overload must surface as typed statuses, never torn connections"
+    );
+    Ok(())
+}

@@ -1,0 +1,494 @@
+//! HTTP/1.1 wire handling for one TCP connection: buffered request
+//! reading under explicit deadlines and budgets, and the response
+//! writer. No protocol library — the grammar subset the front end
+//! speaks (request line, headers, `Content-Length` bodies, keep-alive)
+//! is small enough that owning it outright is simpler than auditing a
+//! dependency, and it keeps every failure mode a typed [`ConnError`]
+//! the handler can map to a status code.
+//!
+//! Deadline model: a connection may sit **idle** between requests for
+//! up to the idle window (keep-alive reaping, quiet close). From the
+//! first byte of a request, the *entire* request — header section and
+//! body — must arrive within the read deadline; a client that trickles
+//! bytes (slowloris) is killed with [`ConnError::SlowClient`] and a
+//! `408` no matter how steadily it drips.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Byte/time budgets applied while reading one request.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnLimits {
+    /// How long a keep-alive connection may sit with no request bytes.
+    pub idle_timeout: Duration,
+    /// Total wall-clock budget for one request's bytes to arrive,
+    /// starting at its first byte.
+    pub read_timeout: Duration,
+    /// Maximum request-line + header-section size.
+    pub max_header_bytes: usize,
+    /// Maximum declared body size.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        Self {
+            idle_timeout: Duration::from_secs(30),
+            read_timeout: Duration::from_secs(5),
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 4 * 1024 * 1024,
+        }
+    }
+}
+
+/// Why reading a request off the connection stopped. The handler maps
+/// each variant to exactly one behavior (status code or silent close).
+#[derive(Debug)]
+pub enum ConnError {
+    /// Peer closed the connection (EOF). Between requests this is the
+    /// normal end of a keep-alive session; mid-request it is a torn
+    /// request — either way there is nobody left to answer.
+    Closed,
+    /// No request bytes arrived within the idle window (quiet close).
+    IdleTimeout,
+    /// A request started but its bytes did not complete within the
+    /// read deadline — the slowloris kill (`408`).
+    SlowClient,
+    /// Header section exceeded [`ConnLimits::max_header_bytes`] (`413`).
+    HeadersTooLarge,
+    /// Declared body exceeds [`ConnLimits::max_body_bytes`] (`413`).
+    BodyTooLarge,
+    /// A body-bearing method arrived without `Content-Length` (`411`).
+    LengthRequired,
+    /// Unparseable request line, header, or length (`400`).
+    Malformed(String),
+    /// Socket error mid-read (reset, broken pipe).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConnError::Closed => write!(f, "connection closed by peer"),
+            ConnError::IdleTimeout => write!(f, "idle timeout"),
+            ConnError::SlowClient => write!(f, "read deadline exceeded"),
+            ConnError::HeadersTooLarge => write!(f, "header section too large"),
+            ConnError::BodyTooLarge => write!(f, "declared body too large"),
+            ConnError::LengthRequired => write!(f, "missing content-length"),
+            ConnError::Malformed(msg) => write!(f, "malformed request: {msg}"),
+            ConnError::Io(e) => write!(f, "socket error: {e}"),
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Whether the connection should serve another request after this
+    /// one (HTTP/1.1 default, overridden by `Connection:` headers).
+    pub keep_alive: bool,
+    pub body: Vec<u8>,
+}
+
+/// Owned head fields, parsed before the buffer is consumed.
+struct Head {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    content_length: Option<usize>,
+}
+
+/// A buffered HTTP connection. `buf` holds bytes read off the socket
+/// but not yet consumed (a pipelined next request survives in it
+/// between [`read_request`] calls).
+///
+/// [`read_request`]: Conn::read_request
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Self {
+        Self { stream, buf: Vec::new() }
+    }
+
+    /// Bytes already buffered past the last consumed request (a
+    /// pipelined follow-up — drain serves it before closing).
+    pub fn has_buffered(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    /// Tear the connection down both ways (fault injection / forced
+    /// drain). Errors are moot: the peer is being abandoned.
+    pub fn teardown(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+
+    /// Read one complete request under `limits`.
+    pub fn read_request(&mut self, limits: &ConnLimits) -> Result<HttpRequest, ConnError> {
+        // Phase 0: wait out the idle window for the first byte.
+        if self.buf.is_empty() {
+            self.fill(None, limits.idle_timeout)?;
+        }
+        // From here the whole request must land before this deadline.
+        let deadline = Instant::now() + limits.read_timeout;
+
+        // Phase 1: accumulate until the blank line ends the headers.
+        let head_len = loop {
+            if let Some(pos) = find_header_end(&self.buf) {
+                if pos > limits.max_header_bytes {
+                    return Err(ConnError::HeadersTooLarge);
+                }
+                break pos;
+            }
+            if self.buf.len() > limits.max_header_bytes {
+                return Err(ConnError::HeadersTooLarge);
+            }
+            self.fill(Some(deadline), limits.idle_timeout)?;
+        };
+
+        let head = parse_head(&self.buf[..head_len])?;
+        self.buf.drain(..head_len + 4);
+
+        // Phase 2: the body, length known up front.
+        let body_len = match head.content_length {
+            Some(n) => n,
+            None => {
+                if matches!(head.method.as_str(), "POST" | "PUT" | "PATCH") {
+                    return Err(ConnError::LengthRequired);
+                }
+                0
+            }
+        };
+        if body_len > limits.max_body_bytes {
+            return Err(ConnError::BodyTooLarge);
+        }
+        while self.buf.len() < body_len {
+            self.fill(Some(deadline), limits.idle_timeout)?;
+        }
+        let body: Vec<u8> = self.buf.drain(..body_len).collect();
+
+        Ok(HttpRequest {
+            method: head.method,
+            path: head.path,
+            keep_alive: head.keep_alive,
+            body,
+        })
+    }
+
+    /// Write one response; delegates to [`write_response`].
+    pub fn write(
+        &mut self,
+        status: u16,
+        extra_headers: &[(&str, &str)],
+        body: &[u8],
+        keep_alive: bool,
+    ) -> std::io::Result<()> {
+        write_response(&mut self.stream, status, extra_headers, body, keep_alive)
+    }
+
+    /// Pull more bytes into the buffer. `deadline: None` is the idle
+    /// wait (expiry → [`ConnError::IdleTimeout`]); `Some` is the
+    /// per-request budget (expiry → [`ConnError::SlowClient`]). EOF is
+    /// always [`ConnError::Closed`].
+    fn fill(&mut self, deadline: Option<Instant>, idle: Duration) -> Result<(), ConnError> {
+        let (wait, on_expiry) = match deadline {
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(ConnError::SlowClient);
+                }
+                (left, ConnError::SlowClient)
+            }
+            None => (idle.max(Duration::from_millis(1)), ConnError::IdleTimeout),
+        };
+        if let Err(e) = self.stream.set_read_timeout(Some(wait)) {
+            return Err(ConnError::Io(e));
+        }
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Err(ConnError::Closed),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(())
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Err(on_expiry)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(ConnError::Io(e)),
+        }
+    }
+}
+
+/// Offset of the `\r\n\r\n` header terminator, if buffered.
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Parse the request line + headers (everything before the blank line).
+fn parse_head(bytes: &[u8]) -> Result<Head, ConnError> {
+    let head = match std::str::from_utf8(bytes) {
+        Ok(s) => s,
+        Err(_) => return Err(ConnError::Malformed("non-UTF-8 header bytes".into())),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v)) if parts.next().is_none() => (m, p, v),
+        _ => {
+            return Err(ConnError::Malformed(format!(
+                "bad request line {request_line:?}"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ConnError::Malformed(format!("unsupported version {version:?}")));
+    }
+    // HTTP/1.1 defaults to keep-alive; 1.0 to close.
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = None;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ConnError::Malformed(format!("bad header line {line:?}")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => content_length = Some(n),
+                Err(_) => {
+                    return Err(ConnError::Malformed(format!(
+                        "bad content-length {value:?}"
+                    )))
+                }
+            },
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.split(',').any(|t| t.trim() == "close") {
+                    keep_alive = false;
+                } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return Err(ConnError::Malformed(
+                    "transfer-encoding unsupported; send content-length".into(),
+                ))
+            }
+            _ => {}
+        }
+    }
+    Ok(Head {
+        method: method.to_string(),
+        path: path.to_string(),
+        keep_alive,
+        content_length,
+    })
+}
+
+/// Canonical reason phrases for the statuses this front end produces.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize and write one response in a single `write_all` (one
+/// syscall in practice — no torn interleaving between header and body
+/// even if the connection is killed mid-response).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(160 + body.len());
+    out.extend_from_slice(
+        format!("HTTP/1.1 {status} {}\r\n", status_reason(status)).as_bytes(),
+    );
+    out.extend_from_slice(b"Content-Type: application/json\r\n");
+    out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    for (k, v) in extra_headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(if keep_alive {
+        b"Connection: keep-alive\r\n" as &[u8]
+    } else {
+        b"Connection: close\r\n"
+    });
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    stream.write_all(&out)?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    fn quick_limits() -> ConnLimits {
+        ConnLimits {
+            idle_timeout: Duration::from_millis(200),
+            read_timeout: Duration::from_millis(200),
+            max_header_bytes: 1024,
+            max_body_bytes: 64,
+        }
+    }
+
+    #[test]
+    fn parses_request_with_body_and_keepalive() {
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        client
+            .write_all(b"POST /v1/classify HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap();
+        let req = conn.read_request(&quick_limits()).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/classify");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.body, b"abcd");
+
+        // Connection: close flips the default.
+        client
+            .write_all(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let req = conn.read_request(&quick_limits()).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(!req.keep_alive);
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn pipelined_requests_come_from_the_buffer() {
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        client
+            .write_all(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n")
+            .unwrap();
+        let a = conn.read_request(&quick_limits()).unwrap();
+        assert_eq!(a.path, "/a");
+        assert!(conn.has_buffered());
+        let b = conn.read_request(&quick_limits()).unwrap();
+        assert_eq!(b.path, "/b");
+        assert!(!conn.has_buffered());
+    }
+
+    #[test]
+    fn slow_client_trips_read_deadline_not_idle() {
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        // A drip-feed: the first byte arrives promptly, the rest never.
+        client.write_all(b"POST /x HT").unwrap();
+        let start = Instant::now();
+        let err = conn.read_request(&quick_limits()).unwrap_err();
+        assert!(matches!(err, ConnError::SlowClient), "got {err}");
+        assert!(start.elapsed() >= Duration::from_millis(150));
+    }
+
+    #[test]
+    fn idle_connection_times_out_quietly() {
+        let (_client, server) = pair();
+        let mut conn = Conn::new(server);
+        let err = conn.read_request(&quick_limits()).unwrap_err();
+        assert!(matches!(err, ConnError::IdleTimeout), "got {err}");
+    }
+
+    #[test]
+    fn eof_is_closed_everywhere() {
+        let (client, server) = pair();
+        let mut conn = Conn::new(server);
+        drop(client);
+        let err = conn.read_request(&quick_limits()).unwrap_err();
+        assert!(matches!(err, ConnError::Closed), "got {err}");
+    }
+
+    #[test]
+    fn budgets_and_malformed_inputs_are_typed() {
+        // Oversized declared body.
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        client
+            .write_all(b"POST /x HTTP/1.1\r\nContent-Length: 100000\r\n\r\n")
+            .unwrap();
+        assert!(matches!(
+            conn.read_request(&quick_limits()).unwrap_err(),
+            ConnError::BodyTooLarge
+        ));
+
+        // Oversized header section.
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        let huge = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(4096));
+        client.write_all(huge.as_bytes()).unwrap();
+        assert!(matches!(
+            conn.read_request(&quick_limits()).unwrap_err(),
+            ConnError::HeadersTooLarge
+        ));
+
+        // POST without content-length.
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        client.write_all(b"POST /x HTTP/1.1\r\n\r\n").unwrap();
+        assert!(matches!(
+            conn.read_request(&quick_limits()).unwrap_err(),
+            ConnError::LengthRequired
+        ));
+
+        // Garbage request line.
+        let (mut client, server) = pair();
+        let mut conn = Conn::new(server);
+        client.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        assert!(matches!(
+            conn.read_request(&quick_limits()).unwrap_err(),
+            ConnError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn response_writer_emits_well_formed_http() {
+        let (mut client, mut server) = pair();
+        write_response(&mut server, 429, &[("Retry-After", "1")], b"{}", false).unwrap();
+        drop(server);
+        let mut text = String::new();
+        client.read_to_string(&mut text).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -16,6 +16,18 @@
 //!   before executing (`us`/`ms`/`s` suffixes), emulating a heavy model
 //!   or a straggling accelerator.
 //!
+//! The HTTP front end adds three network-level injectors, keyed by the
+//! listener's fault label (`--listen` defaults it to `http`):
+//!
+//! * `stall_read:<label>:<dur>` — every connection-read cycle stalls
+//!   `<dur>` before touching the socket, emulating a saturated
+//!   accept/read path (drives the slowloris/idle machinery).
+//! * `slow_write:<label>:<dur>` — every HTTP response sleeps `<dur>`
+//!   before being written, emulating a congested egress.
+//! * `reset:<label>:<n>` — the `<n>`-th response (1-based, counted
+//!   process-wide for the label) is never written; the connection is
+//!   torn down instead, so clients see a clean reset mid-exchange.
+//!
 //! The env var is parsed once on first use; tests and benches inject
 //! rules programmatically through the `#[doc(hidden)]` [`force_faults`] /
 //! [`clear_faults`] hooks, which replace only the labels they mention —
@@ -37,6 +49,15 @@ struct LabelFaults {
     slow: Option<Duration>,
     /// Batches seen so far for this label.
     batches: u64,
+    /// Sleep applied before every connection read (HTTP front end).
+    stall_read: Option<Duration>,
+    /// Sleep applied before every HTTP response write.
+    slow_write: Option<Duration>,
+    /// Response ordinals (1-based, cumulative for the label) at which
+    /// the connection is torn down instead of written.
+    reset_at: Vec<u64>,
+    /// Responses seen so far for this label.
+    responses: u64,
 }
 
 fn plan() -> &'static Mutex<HashMap<String, LabelFaults>> {
@@ -106,6 +127,24 @@ fn merge_spec(map: &mut HashMap<String, LabelFaults>, spec: &str) {
                     "CLUSTERFORMER_FAULTS: bad duration {arg:?} (want e.g. 50ms)"
                 ),
             },
+            "stall_read" => match parse_duration(arg) {
+                Some(d) => lf.stall_read = Some(d),
+                None => crate::log_warn!(
+                    "CLUSTERFORMER_FAULTS: bad duration {arg:?} (want e.g. 50ms)"
+                ),
+            },
+            "slow_write" => match parse_duration(arg) {
+                Some(d) => lf.slow_write = Some(d),
+                None => crate::log_warn!(
+                    "CLUSTERFORMER_FAULTS: bad duration {arg:?} (want e.g. 50ms)"
+                ),
+            },
+            "reset" => match arg.parse::<u64>() {
+                Ok(n) if n >= 1 => lf.reset_at.push(n),
+                _ => crate::log_warn!(
+                    "CLUSTERFORMER_FAULTS: reset ordinal must be >= 1, got {arg:?}"
+                ),
+            },
             _ => crate::log_warn!(
                 "CLUSTERFORMER_FAULTS: unknown fault kind {kind:?} in {entry:?}"
             ),
@@ -130,6 +169,35 @@ pub(crate) fn before_batch(label: &str) {
     if do_panic {
         panic!("injected fault: panic at batch {ordinal} of {label}");
     }
+}
+
+/// Front-end hook, called once per connection-read cycle for the
+/// listener labelled `label`. Sleeps under a `stall_read` rule.
+pub(crate) fn before_conn_read(label: &str) {
+    let stall = {
+        let map = plan().lock().unwrap_or_else(|e| e.into_inner());
+        map.get(label).and_then(|lf| lf.stall_read)
+    };
+    if let Some(d) = stall {
+        std::thread::sleep(d);
+    }
+}
+
+/// Front-end hook, called once per HTTP response about to be written
+/// for the listener labelled `label`. Sleeps under a `slow_write`
+/// rule; returns `true` when this response's ordinal matches a `reset`
+/// rule — the caller must tear the connection down instead of writing.
+pub(crate) fn before_response_write(label: &str) -> bool {
+    let (slow, reset) = {
+        let mut map = plan().lock().unwrap_or_else(|e| e.into_inner());
+        let Some(lf) = map.get_mut(label) else { return false };
+        lf.responses += 1;
+        (lf.slow_write, lf.reset_at.contains(&lf.responses))
+    };
+    if let Some(d) = slow {
+        std::thread::sleep(d);
+    }
+    reset
 }
 
 /// Install fault rules programmatically (tests/benches). Only the labels
@@ -181,6 +249,25 @@ mod tests {
         // malformed entries are skipped without clearing valid ones
         merge_spec(&mut map, "panic:b/y,wat:b/y:1ms");
         assert_eq!(map["b/y"].slow, Some(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn net_injectors_parse_and_fire() {
+        let mut map = HashMap::new();
+        merge_spec(&mut map, "stall_read:net/x:5ms,slow_write:net/x:2ms,reset:net/x:2");
+        assert_eq!(map["net/x"].stall_read, Some(Duration::from_millis(5)));
+        assert_eq!(map["net/x"].slow_write, Some(Duration::from_millis(2)));
+        assert_eq!(map["net/x"].reset_at, vec![2]);
+
+        // Installed process-wide: the reset rule fires exactly at its
+        // response ordinal, and unknown labels stay inert.
+        force_faults("reset:faults-unit/net:2");
+        assert!(!before_response_write("faults-unit/net")); // response 1
+        assert!(before_response_write("faults-unit/net")); // response 2: reset
+        assert!(!before_response_write("faults-unit/net")); // response 3
+        assert!(!before_response_write("faults-unit/other"));
+        before_conn_read("faults-unit/net"); // no stall rule: instant
+        clear_faults("faults-unit/net");
     }
 
     #[test]

@@ -1,0 +1,620 @@
+//! HTTP/1.1 front end: the network edge of the serving stack.
+//!
+//! A dependency-free server on [`std::net::TcpListener`] with a
+//! bounded acceptor→connection thread model: one acceptor thread, one
+//! thread per live connection, never more than
+//! [`HttpConfig::max_conns`] of them — a connection beyond the bound is
+//! answered `503` on the accept path and closed, so load is shed
+//! before it can occupy a worker. Request bodies are parsed with the
+//! zero-copy [`crate::util::json::Lexer`] (no `Json` tree on the hot
+//! path), and every failure mode of the substrate maps to a typed
+//! status:
+//!
+//! | condition | status |
+//! |---|---|
+//! | malformed HTTP or JSON (with byte offset) | `400` |
+//! | unknown target | `404` |
+//! | slowloris / read deadline | `408` |
+//! | header or body budget breached | `413` |
+//! | shed by admission control | `429` + `Retry-After` |
+//! | worker dead / shutting down / request lost | `503` + `Retry-After` |
+//! | deadline expired, or no reply within budget | `504` |
+//!
+//! Shutdown drains gracefully: the acceptor stops, every connection's
+//! read side is half-closed (idle keep-alive conns see EOF and leave;
+//! in-flight handlers keep their write side), and handlers get
+//! [`HttpConfig::drain`] to flush their responses before stragglers
+//! are cut. Network chaos is injectable per listener label through
+//! [`super::faults`] (`stall_read:` / `slow_write:` / `reset:`); the
+//! `reset` ordinal counts handled requests, so protocol-error replies
+//! do not shift it.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::conn::{Conn, ConnError, ConnLimits, HttpRequest};
+use super::faults;
+use super::metrics::Metrics;
+use super::request::{ClassResponse, ReplyStatus, RequestId};
+use super::router::{ReplyWait, Router, SubmitError, SubmitOptions};
+use crate::tensor::Tensor;
+use crate::util::json::{Json, Lexer};
+
+/// Front-end configuration. Defaults are sized for an edge device:
+/// small header budget, a few MiB of body, hundreds of connections.
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks a free port).
+    pub listen: String,
+    /// Maximum simultaneous connections; beyond it, accept answers 503.
+    pub max_conns: usize,
+    /// Per-request total read budget (slowloris kill → 408).
+    pub read_timeout: Duration,
+    /// Socket write timeout for responses.
+    pub write_timeout: Duration,
+    /// Keep-alive idle reaper: a connection with no request bytes for
+    /// this long is closed quietly.
+    pub idle_timeout: Duration,
+    /// Header-section byte budget (413 on breach).
+    pub max_header_bytes: usize,
+    /// Body byte budget (413 on breach).
+    pub max_body_bytes: usize,
+    /// Image element budget for `/v1/classify` (caps the streamed
+    /// `f32` array independently of the raw body size).
+    pub max_image_elems: usize,
+    /// Extra wait past a request's own deadline before answering 504 —
+    /// covers batching and execution of a request dispatched right at
+    /// its deadline.
+    pub reply_grace: Duration,
+    /// Reply wait budget for requests that carry no deadline.
+    pub max_reply_wait: Duration,
+    /// Graceful-drain bound for `shutdown`.
+    pub drain: Duration,
+    /// Fault-injection label (`stall_read:<label>:…` etc.).
+    pub label: String,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".to_string(),
+            max_conns: 256,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(30),
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 4 * 1024 * 1024,
+            max_image_elems: 1 << 20,
+            reply_grace: Duration::from_secs(1),
+            max_reply_wait: Duration::from_secs(30),
+            drain: Duration::from_secs(2),
+            label: "http".to_string(),
+        }
+    }
+}
+
+/// State shared between the acceptor, connection threads, and the
+/// shutdown path.
+struct HttpShared {
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    cfg: HttpConfig,
+    shutting_down: AtomicBool,
+    /// Live connections: id → a `try_clone` of the stream, used to
+    /// half-close reads at drain start and force-close stragglers at
+    /// the drain deadline. `None` when the clone failed (the
+    /// connection still counts toward the bound).
+    conns: Mutex<HashMap<u64, Option<TcpStream>>>,
+    next_conn_id: AtomicU64,
+}
+
+impl HttpShared {
+    fn lock_conns(&self) -> MutexGuard<'_, HashMap<u64, Option<TcpStream>>> {
+        // Poisoning recovery: a panicking connection thread must not
+        // wedge the accept path; the map stays valid (guards remove
+        // their own entries).
+        self.conns.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn limits(&self) -> ConnLimits {
+        ConnLimits {
+            idle_timeout: self.cfg.idle_timeout,
+            read_timeout: self.cfg.read_timeout,
+            max_header_bytes: self.cfg.max_header_bytes,
+            max_body_bytes: self.cfg.max_body_bytes,
+        }
+    }
+}
+
+/// Removes this connection from the registry (and the open gauge) on
+/// every exit path, including a panicking handler.
+struct ConnGuard {
+    id: u64,
+    shared: Arc<HttpShared>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.shared.lock_conns().remove(&self.id);
+        self.shared.metrics.http_conn_closed();
+    }
+}
+
+/// The running front end. Dropping it without calling
+/// [`Self::shutdown`] leaks the acceptor thread for the process
+/// lifetime — always shut down explicitly.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shared: Arc<HttpShared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `cfg.listen` and start accepting.
+    pub fn start(router: Arc<Router>, metrics: Arc<Metrics>, cfg: HttpConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding http listener on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let shared = Arc::new(HttpShared {
+            router,
+            metrics,
+            cfg,
+            shutting_down: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+        });
+        let accept_shared = shared.clone();
+        // lint:allow(no-thread-spawn): acceptor lifecycle thread — one
+        // per listener, joined by shutdown(); it parks in accept(), so
+        // it cannot ride the kernel pool.
+        let acceptor = std::thread::Builder::new()
+            .name("http-acceptor".to_string())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawning http acceptor thread")?;
+        crate::log_info!("http front end listening on {addr}");
+        Ok(Self { addr, shared, acceptor: Some(acceptor) })
+    }
+
+    /// The bound address (resolves `:0` listens).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests flush
+    /// their responses, bound the whole thing by [`HttpConfig::drain`],
+    /// then force-close anything still open.
+    pub fn shutdown(self) {
+        let Self { addr, shared, acceptor } = self;
+        shared.shutting_down.store(true, Ordering::Release);
+        // Unblock the acceptor (it rechecks the flag per accept).
+        let _ = TcpStream::connect(addr);
+        if let Some(h) = acceptor {
+            let _ = h.join();
+        }
+        // Half-close every connection's read side: idle keep-alive
+        // readers see EOF and exit; in-flight handlers keep writing.
+        for stream in shared.lock_conns().values().flatten() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let deadline = Instant::now() + shared.cfg.drain;
+        loop {
+            let open = shared.lock_conns().len();
+            if open == 0 {
+                break;
+            }
+            if Instant::now() >= deadline {
+                crate::log_warn!(
+                    "http drain deadline hit with {open} connections open; forcing close"
+                );
+                for stream in shared.lock_conns().values().flatten() {
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        crate::log_info!(
+            "http front end drained ({} responses flushed during drain)",
+            shared.metrics.http_stats().drain_flushed
+        );
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<HttpShared>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(e) => {
+                if shared.shutting_down.load(Ordering::Acquire) {
+                    return;
+                }
+                crate::log_warn!("http accept error: {e}");
+                continue;
+            }
+        };
+        if shared.shutting_down.load(Ordering::Acquire) {
+            // Usually the self-connect from shutdown(); either way no
+            // new connections once draining.
+            return;
+        }
+        let id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        let admitted = {
+            let mut conns = shared.lock_conns();
+            if conns.len() >= shared.cfg.max_conns {
+                false
+            } else {
+                conns.insert(id, stream.try_clone().ok());
+                true
+            }
+        };
+        if !admitted {
+            shared.metrics.http_conn_rejected();
+            shared.metrics.record_http_status(503);
+            let mut stream = stream;
+            let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+            let _ = super::conn::write_response(
+                &mut stream,
+                503,
+                &[("Retry-After", "1")],
+                &err_body("connection limit reached"),
+                false,
+            );
+            continue;
+        }
+        shared.metrics.http_conn_opened();
+        let conn_shared = shared.clone();
+        // lint:allow(no-thread-spawn): per-connection lifecycle thread —
+        // bounded by max_conns, registered for drain, removed by
+        // ConnGuard; it parks in blocking socket reads, so it cannot
+        // occupy a kernel-pool lane.
+        let spawned = std::thread::Builder::new()
+            .name(format!("http-conn-{id}"))
+            .spawn(move || serve_conn(stream, id, conn_shared));
+        if let Err(e) = spawned {
+            crate::log_warn!("failed to spawn connection thread: {e}");
+            shared.lock_conns().remove(&id);
+            shared.metrics.http_conn_closed();
+        }
+    }
+}
+
+/// One connection's request/response loop (keep-alive until the client
+/// closes, an error ends it, or drain begins).
+fn serve_conn(stream: TcpStream, id: u64, shared: Arc<HttpShared>) {
+    let _guard = ConnGuard { id, shared: shared.clone() };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let limits = shared.limits();
+    let mut conn = Conn::new(stream);
+    loop {
+        faults::before_conn_read(&shared.cfg.label);
+        match conn.read_request(&limits) {
+            Ok(req) => {
+                let resp = handle_request(&shared, &req);
+                if faults::before_response_write(&shared.cfg.label) {
+                    // Injected reset: the peer sees a clean teardown
+                    // where its response would have been.
+                    conn.teardown();
+                    return;
+                }
+                let draining = shared.shutting_down.load(Ordering::Acquire);
+                let keep = req.keep_alive && !draining;
+                shared.metrics.record_http_status(resp.status);
+                if draining {
+                    shared.metrics.record_drain_flushed();
+                }
+                let headers: Vec<(&str, &str)> =
+                    resp.headers.iter().map(|(k, v)| (*k, v.as_str())).collect();
+                if conn.write(resp.status, &headers, &resp.body, keep).is_err() {
+                    return;
+                }
+                if !keep {
+                    return;
+                }
+            }
+            // Nobody left to answer (or nothing to answer for).
+            Err(ConnError::Closed) | Err(ConnError::IdleTimeout) => return,
+            Err(ConnError::Io(e)) => {
+                crate::log_debug!("http conn {id}: socket error: {e}");
+                return;
+            }
+            Err(ConnError::SlowClient) => {
+                shared.metrics.record_slow_client_kill();
+                respond_error(&mut conn, &shared, 408, "request did not complete within the read deadline");
+                return;
+            }
+            Err(ConnError::HeadersTooLarge) => {
+                respond_error(&mut conn, &shared, 413, "header section exceeds budget");
+                return;
+            }
+            Err(ConnError::BodyTooLarge) => {
+                respond_error(&mut conn, &shared, 413, "declared body exceeds budget");
+                return;
+            }
+            Err(ConnError::LengthRequired) => {
+                respond_error(&mut conn, &shared, 411, "content-length required");
+                return;
+            }
+            Err(ConnError::Malformed(msg)) => {
+                respond_error(&mut conn, &shared, 400, &msg);
+                return;
+            }
+        }
+    }
+}
+
+/// Write a protocol-error response (connection closes after it).
+fn respond_error(conn: &mut Conn, shared: &HttpShared, status: u16, msg: &str) {
+    shared.metrics.record_http_status(status);
+    let _ = conn.write(status, &[], &err_body(msg), false);
+}
+
+fn err_body(msg: &str) -> Vec<u8> {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+        .to_string_compact()
+        .into_bytes()
+}
+
+/// A response before serialization.
+struct Response {
+    status: u16,
+    headers: Vec<(&'static str, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn json(status: u16, j: Json) -> Self {
+        Self { status, headers: vec![], body: j.to_string_compact().into_bytes() }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        Self { status, headers: vec![], body: err_body(msg) }
+    }
+
+    fn retry(status: u16, after_s: u64, msg: &str) -> Self {
+        Self {
+            status,
+            headers: vec![("Retry-After", after_s.to_string())],
+            body: err_body(msg),
+        }
+    }
+}
+
+fn handle_request(shared: &Arc<HttpShared>, req: &HttpRequest) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("targets", Json::from_strs(shared.router.targets())),
+            ]),
+        ),
+        ("GET", "/stats") => stats_response(shared),
+        ("POST", "/v1/classify") => classify(shared, &req.body),
+        _ => Response::error(404, &format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+fn stats_response(shared: &Arc<HttpShared>) -> Response {
+    let snap = shared.metrics.snapshot();
+    let mut variants = crate::util::json::JsonObj::new();
+    let mut keys: Vec<_> = snap.per_variant.keys().cloned().collect();
+    keys.sort();
+    for k in keys {
+        let v = &snap.per_variant[&k];
+        variants.insert(
+            k.clone(),
+            Json::obj(vec![
+                ("requests", Json::Num(v.requests as f64)),
+                ("shed", Json::Num(v.shed as f64)),
+                ("timed_out", Json::Num(v.timed_out as f64)),
+                ("degraded", Json::Num(v.degraded as f64)),
+                ("failed", Json::Num(v.failed as f64)),
+                ("p50_ms", Json::Num(v.latency_us.percentile(0.5) / 1e3)),
+                ("p99_ms", Json::Num(v.latency_us.percentile(0.99) / 1e3)),
+            ]),
+        );
+    }
+    let h = snap.http;
+    Response::json(
+        200,
+        Json::obj(vec![
+            ("elapsed_s", Json::Num(snap.elapsed_s)),
+            (
+                "http",
+                Json::obj(vec![
+                    ("conns_open", Json::Num(h.conns_open as f64)),
+                    ("conns_accepted", Json::Num(h.conns_accepted as f64)),
+                    ("conns_rejected", Json::Num(h.conns_rejected as f64)),
+                    ("http_2xx", Json::Num(h.http_2xx as f64)),
+                    ("http_4xx", Json::Num(h.http_4xx as f64)),
+                    ("http_5xx", Json::Num(h.http_5xx as f64)),
+                    ("slow_client_kills", Json::Num(h.slow_client_kills as f64)),
+                    ("drain_flushed", Json::Num(h.drain_flushed as f64)),
+                ]),
+            ),
+            ("variants", Json::Obj(variants)),
+        ]),
+    )
+}
+
+/// Parsed `/v1/classify` body (streamed; no `Json` tree).
+struct ClassifyBody {
+    target: Option<String>,
+    shape: Vec<usize>,
+    image: Vec<f32>,
+    deadline_ms: Option<u64>,
+    accuracy_floor: Option<f64>,
+    allow_degrade: bool,
+}
+
+/// Walk the body object with the zero-copy lexer: known keys are
+/// pulled straight into typed fields (the `image` array streams into a
+/// `Vec<f32>`), unknown keys are skipped structurally. Any deviation
+/// is a position-carrying `JsonError` the caller turns into a 400.
+fn parse_classify(
+    body: &[u8],
+    max_elems: usize,
+) -> Result<ClassifyBody, crate::util::json::JsonError> {
+    let mut out = ClassifyBody {
+        target: None,
+        shape: Vec::new(),
+        image: Vec::new(),
+        deadline_ms: None,
+        accuracy_floor: None,
+        allow_degrade: true,
+    };
+    let mut lex = Lexer::new(body);
+    lex.skip_ws();
+    lex.require(b'{', "'{'")?;
+    lex.skip_ws();
+    if !lex.eat_if(b'}') {
+        loop {
+            lex.skip_ws();
+            let key = lex.string()?;
+            lex.skip_ws();
+            lex.require(b':', "':'")?;
+            match key.as_str() {
+                "target" => {
+                    lex.skip_ws();
+                    out.target = Some(lex.string()?.into_string());
+                }
+                "image" => lex.f32_array_into(&mut out.image, max_elems)?,
+                "shape" => lex.usize_array_into(&mut out.shape, 16)?,
+                "deadline_ms" => {
+                    lex.skip_ws();
+                    out.deadline_ms = Some(lex.f64()?.max(0.0) as u64);
+                }
+                "accuracy_floor" => {
+                    lex.skip_ws();
+                    out.accuracy_floor = Some(lex.f64()?);
+                }
+                "allow_degrade" => {
+                    lex.skip_ws();
+                    out.allow_degrade = lex.bool()?;
+                }
+                _ => lex.skip_value(0)?,
+            }
+            lex.skip_ws();
+            if lex.eat_if(b',') {
+                continue;
+            }
+            lex.require(b'}', "',' or '}'")?;
+            break;
+        }
+    }
+    lex.skip_ws();
+    if !lex.at_end() {
+        return Err(crate::util::json::JsonError {
+            pos: lex.pos(),
+            kind: crate::util::json::JsonErrorKind::Trailing,
+        });
+    }
+    Ok(out)
+}
+
+fn classify(shared: &Arc<HttpShared>, body: &[u8]) -> Response {
+    let parsed = match parse_classify(body, shared.cfg.max_image_elems) {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, &format!("invalid JSON body: {e}")),
+    };
+    let Some(target) = parsed.target else {
+        return Response::error(400, "missing \"target\"");
+    };
+    if parsed.image.is_empty() {
+        return Response::error(400, "missing or empty \"image\"");
+    }
+    let shape = if parsed.shape.is_empty() {
+        vec![parsed.image.len()]
+    } else {
+        parsed.shape
+    };
+    let elems: usize = shape.iter().product();
+    if elems != parsed.image.len() {
+        return Response::error(
+            400,
+            &format!(
+                "shape {:?} holds {} elements but \"image\" has {}",
+                shape,
+                elems,
+                parsed.image.len()
+            ),
+        );
+    }
+    let tensor = match Tensor::from_f32(shape, &parsed.image) {
+        Ok(t) => t,
+        Err(e) => return Response::error(400, &format!("bad image tensor: {e}")),
+    };
+
+    let deadline = parsed.deadline_ms.map(Duration::from_millis);
+    let budget = match deadline {
+        Some(d) => d + shared.cfg.reply_grace,
+        None => shared.cfg.max_reply_wait,
+    };
+    let opts = SubmitOptions {
+        deadline,
+        accuracy_floor: parsed.accuracy_floor,
+        allow_degrade: parsed.allow_degrade,
+    };
+    let (id, reply) = match shared.router.submit_opts(&target, tensor, opts) {
+        Ok(v) => v,
+        Err(SubmitError::UnknownTarget { target, known }) => {
+            let mut resp = Response::error(404, &format!("unknown target {target:?}"));
+            resp.body = Json::obj(vec![
+                ("error", Json::Str(format!("unknown target {target:?}"))),
+                ("known", Json::from_strs(known)),
+            ])
+            .to_string_compact()
+            .into_bytes();
+            return resp;
+        }
+        Err(SubmitError::Overloaded { target }) => {
+            return Response::retry(429, 1, &format!("{target} is overloaded"))
+        }
+        Err(SubmitError::ShuttingDown { target }) => {
+            return Response::retry(503, 2, &format!("{target} is unavailable"))
+        }
+    };
+    match reply.wait_until(Instant::now() + budget) {
+        ReplyWait::Reply(r) => reply_response(id, &r),
+        ReplyWait::Overdue => Response::error(
+            504,
+            &format!("request {id} still pending after {budget:?}"),
+        ),
+    }
+}
+
+/// Map a terminal reply onto its status code.
+fn reply_response(id: RequestId, r: &ClassResponse) -> Response {
+    match r.status {
+        ReplyStatus::Completed => Response::json(
+            200,
+            Json::obj(vec![
+                ("id", Json::Num(id as f64)),
+                ("predicted", Json::Num(r.predicted as f64)),
+                ("logits", Json::from_f64s(r.logits.iter().map(|&v| v as f64))),
+                ("served_by", Json::Str(r.served_by.clone())),
+                ("batch_size", Json::Num(r.batch_size as f64)),
+                ("latency_ms", Json::Num(r.latency_s * 1e3)),
+            ]),
+        ),
+        ReplyStatus::Timeout => Response::error(
+            504,
+            &format!("deadline expired before dispatch on {}", r.served_by),
+        ),
+        ReplyStatus::Overloaded => {
+            Response::retry(429, 1, "shed by admission control")
+        }
+        // Definitive loss (worker died with the request in flight):
+        // retryable, and distinct from 504's "may still be running".
+        ReplyStatus::Failed => {
+            Response::retry(503, 1, &format!("request lost: {}", r.served_by))
+        }
+    }
+}

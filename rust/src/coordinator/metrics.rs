@@ -16,6 +16,7 @@
 //! recover after a burst, so pressure could never "clear".
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -62,11 +63,70 @@ impl VariantMetrics {
     }
 }
 
+/// Front-end (HTTP) counters — server-wide rather than per-variant,
+/// since connections exist before a request names a target.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct HttpStats {
+    /// Connections currently open (gauge).
+    pub conns_open: u64,
+    /// Connections accepted over the server's lifetime.
+    pub conns_accepted: u64,
+    /// Connections refused at the `--max-conns` bound (immediate 503).
+    pub conns_rejected: u64,
+    pub http_2xx: u64,
+    pub http_4xx: u64,
+    pub http_5xx: u64,
+    /// Connections killed by the per-request read deadline (slowloris).
+    pub slow_client_kills: u64,
+    /// Responses flushed to in-flight requests during graceful drain.
+    pub drain_flushed: u64,
+}
+
+impl HttpStats {
+    /// Anything happened at all? Gates the markdown line so in-process
+    /// (non-HTTP) runs keep their old report shape.
+    pub fn any(&self) -> bool {
+        self.conns_accepted > 0 || self.conns_rejected > 0
+    }
+}
+
+/// Lock-free backing store for [`HttpStats`]: connection accounting
+/// sits on the accept path, where a mutex shared with multi-ms batch
+/// recording would be an unforced bottleneck.
+#[derive(Debug, Default)]
+struct HttpAtomics {
+    conns_open: AtomicU64,
+    conns_accepted: AtomicU64,
+    conns_rejected: AtomicU64,
+    http_2xx: AtomicU64,
+    http_4xx: AtomicU64,
+    http_5xx: AtomicU64,
+    slow_client_kills: AtomicU64,
+    drain_flushed: AtomicU64,
+}
+
+impl HttpAtomics {
+    fn load(&self) -> HttpStats {
+        HttpStats {
+            conns_open: self.conns_open.load(Ordering::Relaxed),
+            conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+            conns_rejected: self.conns_rejected.load(Ordering::Relaxed),
+            http_2xx: self.http_2xx.load(Ordering::Relaxed),
+            http_4xx: self.http_4xx.load(Ordering::Relaxed),
+            http_5xx: self.http_5xx.load(Ordering::Relaxed),
+            slow_client_kills: self.slow_client_kills.load(Ordering::Relaxed),
+            drain_flushed: self.drain_flushed.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// A snapshot for reporting.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
     pub per_variant: HashMap<String, VariantMetrics>,
     pub elapsed_s: f64,
+    /// HTTP front-end counters (all zero when serving in-process).
+    pub http: HttpStats,
 }
 
 impl MetricsSnapshot {
@@ -111,6 +171,20 @@ impl MetricsSnapshot {
             self.elapsed_s,
             self.throughput()
         ));
+        if self.http.any() {
+            let h = &self.http;
+            s.push_str(&format!(
+                "http: conns open {} / accepted {} / rejected {}, 2xx {}, 4xx {}, 5xx {}, slow-client kills {}, drain flushed {}\n",
+                h.conns_open,
+                h.conns_accepted,
+                h.conns_rejected,
+                h.http_2xx,
+                h.http_4xx,
+                h.http_5xx,
+                h.slow_client_kills,
+                h.drain_flushed,
+            ));
+        }
         s
     }
 }
@@ -167,6 +241,8 @@ pub struct Metrics {
     started: Instant,
     /// Width of the recent-latency window backing the SLO gauge.
     window: Duration,
+    /// HTTP front-end counters (atomics: bumped on the accept path).
+    http: HttpAtomics,
 }
 
 impl Default for Metrics {
@@ -185,6 +261,7 @@ impl Metrics {
             inner: Mutex::new(HashMap::new()),
             started: Instant::now(),
             window: window.max(Duration::from_millis(1)),
+            http: HttpAtomics::default(),
         }
     }
 
@@ -261,6 +338,53 @@ impl Metrics {
         }
     }
 
+    // ---- HTTP front-end counters (atomic; no mutex on the accept path) ----
+
+    pub fn http_conn_opened(&self) {
+        self.http.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.http.conns_open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn http_conn_closed(&self) {
+        // Saturating: a close without a paired open (can't happen, but a
+        // metrics gauge must never wrap to u64::MAX).
+        let _ = self.http.conns_open.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
+    }
+
+    pub fn http_conn_rejected(&self) {
+        self.http.conns_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a response by status class (2xx/4xx/5xx buckets; other
+    /// classes are not produced by this front end and are ignored).
+    pub fn record_http_status(&self, status: u16) {
+        match status {
+            200..=299 => self.http.http_2xx.fetch_add(1, Ordering::Relaxed),
+            400..=499 => self.http.http_4xx.fetch_add(1, Ordering::Relaxed),
+            500..=599 => self.http.http_5xx.fetch_add(1, Ordering::Relaxed),
+            _ => 0,
+        };
+    }
+
+    pub fn record_slow_client_kill(&self) {
+        self.http.slow_client_kills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_drain_flushed(&self) {
+        self.http.drain_flushed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current HTTP counter values (also embedded in [`snapshot`]).
+    ///
+    /// [`snapshot`]: Self::snapshot
+    pub fn http_stats(&self) -> HttpStats {
+        self.http.load()
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let now = Instant::now();
         let mut m = self.lock();
@@ -272,7 +396,11 @@ impl Metrics {
                 (k.clone(), out)
             })
             .collect();
-        MetricsSnapshot { per_variant, elapsed_s: self.started.elapsed().as_secs_f64() }
+        MetricsSnapshot {
+            per_variant,
+            elapsed_s: self.started.elapsed().as_secs_f64(),
+            http: self.http.load(),
+        }
     }
 }
 
@@ -334,6 +462,40 @@ mod tests {
         let s = m.snapshot();
         assert!(s.per_variant["v"].queue_us.percentile(0.95) > 5e4);
         assert_eq!(s.per_variant["v"].queue_p95_recent_us, 0.0);
+    }
+
+    #[test]
+    fn http_counters_roundtrip_into_snapshot() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert!(!s.http.any(), "fresh registry has no http activity");
+        assert!(!s.markdown().contains("http:"), "no http line when idle");
+
+        m.http_conn_opened();
+        m.http_conn_opened();
+        m.http_conn_closed();
+        m.http_conn_rejected();
+        m.record_http_status(200);
+        m.record_http_status(404);
+        m.record_http_status(429);
+        m.record_http_status(503);
+        m.record_slow_client_kill();
+        m.record_drain_flushed();
+        let h = m.snapshot().http;
+        assert_eq!(h.conns_open, 1);
+        assert_eq!(h.conns_accepted, 2);
+        assert_eq!(h.conns_rejected, 1);
+        assert_eq!(h.http_2xx, 1);
+        assert_eq!(h.http_4xx, 2);
+        assert_eq!(h.http_5xx, 1);
+        assert_eq!(h.slow_client_kills, 1);
+        assert_eq!(h.drain_flushed, 1);
+        assert!(m.snapshot().markdown().contains("http: conns open 1"));
+
+        // The gauge saturates instead of wrapping.
+        m.http_conn_closed();
+        m.http_conn_closed();
+        assert_eq!(m.http_stats().conns_open, 0);
     }
 
     #[test]

@@ -17,10 +17,18 @@
 //! admission tickets ([`request`]), the router sheds and degrades under
 //! SLO pressure ([`router`]), and [`faults`] provides deterministic
 //! fault injection to test all of it.
+//!
+//! The network edge is [`http`]: a dependency-free HTTP/1.1 front end
+//! ([`conn`] owns the wire format) that maps client deadlines onto
+//! [`router::SubmitOptions`] and every shedding/timeout/failure mode
+//! onto a typed status code, with graceful drain and injectable
+//! network faults.
 
 pub mod batcher;
+pub mod conn;
 pub mod eval;
 pub mod faults;
+pub mod http;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -28,7 +36,8 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, BatcherConfig, DynamicBatcher};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use http::{HttpConfig, HttpServer};
+pub use metrics::{HttpStats, Metrics, MetricsSnapshot};
 pub use request::{ClassRequest, ClassResponse, ReplyStatus, RequestId};
-pub use router::{PendingReply, Router, SubmitError, SubmitOptions};
+pub use router::{PendingReply, ReplyWait, Router, SubmitError, SubmitOptions};
 pub use server::{ResilienceConfig, Server, ServerConfig};

@@ -265,6 +265,45 @@ impl PendingReply {
         self.done.set(true);
         Ok(self.rx.recv().unwrap_or_else(|_| self.synthesize_failed()))
     }
+
+    /// Wait until `deadline` for the terminal reply, keeping the two
+    /// failure modes [`Self::recv_timeout`] folds together distinct for
+    /// serving boundaries: a dead worker surfaces as a synthesized
+    /// [`ReplyStatus::Failed`] reply (the HTTP front end answers `503`
+    /// — the request is definitively lost and retryable elsewhere),
+    /// while an exhausted wait budget is [`ReplyWait::Overdue`] (`504`
+    /// — the reply may still be in flight, retrying may duplicate
+    /// work). Without the distinction a worker death mid-request would
+    /// leave the client hanging until the full budget elapsed.
+    pub fn wait_until(&self, deadline: Instant) -> ReplyWait {
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.recv_timeout(left) {
+                Ok(resp) => return ReplyWait::Reply(resp),
+                Err(RecvTimeoutError::Timeout) => {
+                    if left.is_zero() {
+                        return ReplyWait::Overdue;
+                    }
+                    // Spurious early return from the channel wait; the
+                    // next iteration recomputes the remaining budget.
+                }
+                // Only reachable after the terminal reply was already
+                // delivered; nothing more will ever arrive.
+                Err(RecvTimeoutError::Disconnected) => return ReplyWait::Overdue,
+            }
+        }
+    }
+}
+
+/// Outcome of [`PendingReply::wait_until`].
+#[derive(Debug)]
+pub enum ReplyWait {
+    /// The terminal reply (worker loss arrives as `Failed`, never as a
+    /// hang).
+    Reply(ClassResponse),
+    /// The wait budget expired with the request still pending; the
+    /// reply may yet arrive and can be awaited again.
+    Overdue,
 }
 
 /// Routes requests to per-variant worker queues.

@@ -16,8 +16,8 @@ use anyhow::Result;
 
 use clusterformer::clustering::{ClusterScheme, Quantizer};
 use clusterformer::coordinator::{
-    eval::evaluate, BatchPolicy, BatcherConfig, ReplyStatus, ResilienceConfig, Server,
-    ServerConfig, SubmitError,
+    eval::evaluate, BatchPolicy, BatcherConfig, HttpConfig, HttpServer, ReplyStatus,
+    ResilienceConfig, Server, ServerConfig, SubmitError,
 };
 use clusterformer::hlo::{CostAnalysis, HloModule};
 use clusterformer::model::{Registry, VariantKey};
@@ -64,6 +64,10 @@ fn cli() -> Cli {
                 .opt("fallback", "", "cheaper variant to degrade to under SLO pressure (e.g. perlayer_16)")
                 .opt("queue-bound", "0", "per-variant in-flight admission bound (0 = unbounded)")
                 .opt("deadline-ms", "0", "per-request deadline in ms; expired requests time out (0 = none)")
+                .opt("listen", "", "serve HTTP on this address (e.g. 127.0.0.1:8080) instead of synthetic load")
+                .opt("max-conns", "256", "HTTP connection bound; beyond it accepts are answered 503")
+                .opt("read-timeout-ms", "5000", "per-request HTTP read budget; slow clients are killed with 408")
+                .opt("drain-ms", "2000", "graceful-drain bound for in-flight HTTP requests at shutdown")
                 .flag("no-fusion", "disable plan-time operator fusion (A/B the fused lowerings)")
                 .flag("no-plan-cache", "bind a fresh plan per shape instead of caching (A/B the cache)"),
         )
@@ -316,6 +320,43 @@ fn cmd_serve(args: &clusterformer::util::cli::Args) -> Result<()> {
         resilience,
     })?;
     log_info!("serving {target}");
+
+    // With --listen, expose the coordinator over HTTP instead of the
+    // synthetic in-process load: serve for --duration seconds (0 =
+    // until stdin closes), then drain gracefully and report.
+    let listen = args.str("listen")?;
+    if !listen.is_empty() {
+        let http = HttpServer::start(
+            server.router.clone(),
+            server.metrics.clone(),
+            HttpConfig {
+                listen: listen.to_string(),
+                max_conns: args.usize("max-conns")?,
+                read_timeout: Duration::from_millis(args.usize("read-timeout-ms")? as u64),
+                drain: Duration::from_millis(args.usize("drain-ms")? as u64),
+                ..HttpConfig::default()
+            },
+        )?;
+        let duration = args.f64("duration")?;
+        log_info!(
+            "POST /v1/classify on http://{} (GET /healthz, /stats); running {}",
+            http.addr(),
+            if duration > 0.0 { format!("for {duration}s") } else { "until stdin closes".to_string() }
+        );
+        if duration > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(duration));
+        } else {
+            // Block until stdin closes (the SIGTERM-equivalent for a
+            // process run under a supervisor or a shell pipeline).
+            let mut sink = String::new();
+            let _ = std::io::Read::read_to_string(&mut std::io::stdin(), &mut sink);
+        }
+        http.shutdown();
+        let snap = server.snapshot();
+        println!("\n{}", snap.markdown());
+        server.shutdown();
+        return Ok(());
+    }
 
     // Synthetic Poisson open-loop load from the validation set.
     let registry = Registry::load(args.str("artifacts")?)?;

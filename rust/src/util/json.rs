@@ -1,14 +1,21 @@
 //! Minimal JSON reader/writer (serde_json replacement).
 //!
-//! Supports the full JSON grammar minus exotic number forms; numbers are
-//! held as `f64` (adequate: the manifest and reports only carry counts,
-//! sizes and metrics). The writer is deterministic: object keys keep
-//! insertion order.
+//! Supports the full JSON grammar; numbers are held as `f64` (adequate:
+//! the manifest and reports only carry counts, sizes and metrics). The
+//! writer is deterministic: object keys keep insertion order.
+//!
+//! Parsing is built on [`Lexer`], a zero-copy byte iterator: strings
+//! borrow straight from the input when escape-free, numbers are scanned
+//! in place, and callers that know their schema (the HTTP front end)
+//! can pull typed values — [`Lexer::f32_array_into`] fills a `Vec<f32>`
+//! without ever building a [`Json`] tree. Every failure carries the
+//! byte offset it happened at ([`JsonError`]), so a malformed request
+//! body turns into a `400` that points at the problem.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -242,16 +249,580 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Parse a JSON document.
-pub fn parse(text: &str) -> Result<Json> {
-    let mut p = Parser { b: text.as_bytes(), i: 0 };
-    p.skip_ws();
-    let v = p.value()?;
-    p.skip_ws();
-    if p.i != p.b.len() {
-        bail!("trailing characters at offset {}", p.i);
+// ---- lexer ---------------------------------------------------------------
+
+/// Maximum nesting depth [`parse_bytes`] and [`Lexer::skip_value`]
+/// accept. Bounds recursion so a `[[[[…` depth bomb is a typed error,
+/// not a stack overflow.
+pub const MAX_DEPTH: usize = 128;
+
+/// What went wrong while lexing; paired with a byte offset in
+/// [`JsonError`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Input ended mid-document.
+    Eof,
+    /// A specific token was required; the payload names it.
+    Expected(&'static str),
+    /// A literal started like `true`/`false`/`null` but diverged.
+    BadLiteral,
+    /// Unknown `\x` escape in a string.
+    BadEscape,
+    /// Malformed `\uXXXX` escape or a lone surrogate.
+    BadUnicode,
+    /// Raw bytes that are not valid UTF-8.
+    BadUtf8,
+    /// Unescaped control character inside a string.
+    ControlChar,
+    /// Number that violates the JSON grammar or overflows `f64` to a
+    /// non-finite value.
+    BadNumber,
+    /// Nesting beyond [`MAX_DEPTH`].
+    TooDeep,
+    /// An array exceeded the caller-supplied element budget.
+    TooLarge,
+    /// Bytes left over after the top-level value.
+    Trailing,
+}
+
+impl JsonErrorKind {
+    fn describe(&self) -> String {
+        match self {
+            JsonErrorKind::Eof => "unexpected end of input".into(),
+            JsonErrorKind::Expected(what) => format!("expected {what}"),
+            JsonErrorKind::BadLiteral => "invalid literal".into(),
+            JsonErrorKind::BadEscape => "invalid string escape".into(),
+            JsonErrorKind::BadUnicode => "invalid \\u escape".into(),
+            JsonErrorKind::BadUtf8 => "invalid UTF-8".into(),
+            JsonErrorKind::ControlChar => {
+                "unescaped control character in string".into()
+            }
+            JsonErrorKind::BadNumber => "invalid or non-finite number".into(),
+            JsonErrorKind::TooDeep => {
+                format!("nesting deeper than {MAX_DEPTH}")
+            }
+            JsonErrorKind::TooLarge => "array exceeds element budget".into(),
+            JsonErrorKind::Trailing => "trailing characters".into(),
+        }
+    }
+}
+
+/// A parse failure at a specific byte offset of the input. Converts
+/// into `anyhow::Error` via `?` (it implements [`std::error::Error`]),
+/// and the HTTP front end surfaces `pos` in its `400` bodies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JsonError {
+    pub pos: usize,
+    pub kind: JsonErrorKind,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} at offset {}", self.kind.describe(), self.pos)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// A string pulled out of the input: borrowed straight from the source
+/// bytes when it contains no escapes (the hot path — request bodies
+/// are machine-generated and rarely escape anything), owned otherwise.
+#[derive(Debug, PartialEq, Eq)]
+pub enum JsonStr<'a> {
+    Borrowed(&'a str),
+    Owned(String),
+}
+
+impl JsonStr<'_> {
+    pub fn as_str(&self) -> &str {
+        match self {
+            JsonStr::Borrowed(s) => s,
+            JsonStr::Owned(s) => s,
+        }
+    }
+
+    pub fn into_string(self) -> String {
+        match self {
+            JsonStr::Borrowed(s) => s.to_string(),
+            JsonStr::Owned(s) => s,
+        }
+    }
+
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self, JsonStr::Borrowed(_))
+    }
+}
+
+/// Pull-based JSON lexer over raw bytes. Schema-aware callers walk the
+/// token stream directly (no intermediate tree); [`parse_bytes`] uses
+/// the same machinery to build a [`Json`] value for the general case.
+pub struct Lexer<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    /// Current byte offset (for error reporting / trailing checks).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// True once every input byte is consumed.
+    pub fn at_end(&self) -> bool {
+        self.pos >= self.b.len()
+    }
+
+    fn err(&self, kind: JsonErrorKind) -> JsonError {
+        JsonError { pos: self.pos, kind }
+    }
+
+    fn err_at(&self, pos: usize, kind: JsonErrorKind) -> JsonError {
+        JsonError { pos, kind }
+    }
+
+    pub fn skip_ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace()
+        {
+            self.pos += 1;
+        }
+    }
+
+    pub fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    /// Consume `c` if it is the next byte; report whether it was.
+    pub fn eat_if(&mut self, c: u8) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Require `c` as the next byte; `what` names it in the error.
+    pub fn require(&mut self, c: u8, what: &'static str) -> Result<(), JsonError> {
+        if self.eat_if(c) {
+            Ok(())
+        } else if self.at_end() {
+            Err(self.err(JsonErrorKind::Eof))
+        } else {
+            Err(self.err(JsonErrorKind::Expected(what)))
+        }
+    }
+
+    fn utf8_chunk(&self, start: usize, end: usize) -> Result<&'a str, JsonError> {
+        let b = self.b;
+        std::str::from_utf8(&b[start..end]).map_err(|e| {
+            self.err_at(start + e.valid_up_to(), JsonErrorKind::BadUtf8)
+        })
+    }
+
+    /// Parse a string token (leading `"` expected next). Borrows from
+    /// the input when no escape sequences occur.
+    pub fn string(&mut self) -> Result<JsonStr<'a>, JsonError> {
+        self.require(b'"', "'\"'")?;
+        let start = self.pos;
+        // Fast path: scan for the closing quote with no escapes.
+        let mut i = self.pos;
+        loop {
+            match self.b.get(i).copied() {
+                None => return Err(self.err_at(self.b.len(), JsonErrorKind::Eof)),
+                Some(b'"') => {
+                    let s = self.utf8_chunk(start, i)?;
+                    self.pos = i + 1;
+                    return Ok(JsonStr::Borrowed(s));
+                }
+                Some(b'\\') => break,
+                Some(c) if c < 0x20 => {
+                    return Err(self.err_at(i, JsonErrorKind::ControlChar))
+                }
+                Some(_) => i += 1,
+            }
+        }
+        // Slow path: escapes present, build an owned string.
+        let mut out = String::new();
+        out.push_str(self.utf8_chunk(start, i)?);
+        self.pos = i;
+        loop {
+            let at = self.pos;
+            match self.b.get(self.pos).copied() {
+                None => return Err(self.err(JsonErrorKind::Eof)),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(JsonStr::Owned(out));
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self
+                        .b
+                        .get(self.pos)
+                        .copied()
+                        .ok_or_else(|| self.err(JsonErrorKind::Eof))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let code = self.unicode_escape(at)?;
+                            out.push(code);
+                        }
+                        _ => {
+                            return Err(
+                                self.err_at(at, JsonErrorKind::BadEscape)
+                            )
+                        }
+                    }
+                }
+                Some(c) if c < 0x20 => {
+                    return Err(self.err_at(at, JsonErrorKind::ControlChar))
+                }
+                Some(_) => {
+                    // Raw run until the next quote/escape/control byte.
+                    let run_start = self.pos;
+                    while let Some(c) = self.b.get(self.pos).copied() {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    out.push_str(self.utf8_chunk(run_start, self.pos)?);
+                }
+            }
+        }
+    }
+
+    /// Decode the 4 hex digits after `\u` (already consumed), handling
+    /// surrogate pairs; `at` is the escape's offset for errors.
+    fn unicode_escape(&mut self, at: usize) -> Result<char, JsonError> {
+        let hi = self.hex4(at)?;
+        if (0xD800..=0xDBFF).contains(&hi) {
+            // High surrogate: a low surrogate escape must follow.
+            if self.b.get(self.pos) == Some(&b'\\')
+                && self.b.get(self.pos + 1) == Some(&b'u')
+            {
+                self.pos += 2;
+                let lo = self.hex4(at)?;
+                if (0xDC00..=0xDFFF).contains(&lo) {
+                    let code =
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                    return char::from_u32(code)
+                        .ok_or_else(|| self.err_at(at, JsonErrorKind::BadUnicode));
+                }
+            }
+            return Err(self.err_at(at, JsonErrorKind::BadUnicode));
+        }
+        char::from_u32(hi).ok_or_else(|| self.err_at(at, JsonErrorKind::BadUnicode))
+    }
+
+    fn hex4(&mut self, at: usize) -> Result<u32, JsonError> {
+        let hex = self
+            .b
+            .get(self.pos..self.pos + 4)
+            .ok_or_else(|| self.err_at(at, JsonErrorKind::BadUnicode))?;
+        let mut code = 0u32;
+        for &c in hex {
+            let digit = (c as char)
+                .to_digit(16)
+                .ok_or_else(|| self.err_at(at, JsonErrorKind::BadUnicode))?;
+            code = code * 16 + digit;
+        }
+        self.pos += 4;
+        Ok(code)
+    }
+
+    /// Scan a number token per the JSON grammar, returning the raw
+    /// byte slice (zero-copy; useful for exact reproduction).
+    pub fn number_slice(&mut self) -> Result<&'a [u8], JsonError> {
+        let b = self.b;
+        let start = self.pos;
+        self.eat_if(b'-');
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err(JsonErrorKind::Expected("digit"))),
+        }
+        if self.eat_if(b'.') {
+            let frac = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == frac {
+                return Err(self.err(JsonErrorKind::Expected("fraction digit")));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if !self.eat_if(b'+') {
+                self.eat_if(b'-');
+            }
+            let exp = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == exp {
+                return Err(self.err(JsonErrorKind::Expected("exponent digit")));
+            }
+        }
+        Ok(&b[start..self.pos])
+    }
+
+    /// Parse a number to a finite `f64`. Values the grammar admits but
+    /// `f64` cannot hold (e.g. `1e999`) are a typed [`BadNumber`] at
+    /// the number's offset, never `inf` smuggled into the pipeline.
+    ///
+    /// [`BadNumber`]: JsonErrorKind::BadNumber
+    pub fn f64(&mut self) -> Result<f64, JsonError> {
+        let start = self.pos;
+        let raw = self.number_slice()?;
+        let text = std::str::from_utf8(raw)
+            .map_err(|_| self.err_at(start, JsonErrorKind::BadNumber))?;
+        let v: f64 = text
+            .parse()
+            .map_err(|_| self.err_at(start, JsonErrorKind::BadNumber))?;
+        if !v.is_finite() {
+            return Err(self.err_at(start, JsonErrorKind::BadNumber));
+        }
+        Ok(v)
+    }
+
+    /// Parse a `true`/`false` literal.
+    pub fn bool(&mut self) -> Result<bool, JsonError> {
+        match self.peek() {
+            Some(b't') => {
+                self.literal(b"true")?;
+                Ok(true)
+            }
+            Some(b'f') => {
+                self.literal(b"false")?;
+                Ok(false)
+            }
+            None => Err(self.err(JsonErrorKind::Eof)),
+            Some(_) => Err(self.err(JsonErrorKind::Expected("boolean"))),
+        }
+    }
+
+    fn literal(&mut self, lit: &'static [u8]) -> Result<(), JsonError> {
+        if self.b[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(JsonErrorKind::BadLiteral))
+        }
+    }
+
+    /// Stream a JSON array of numbers straight into `out` as `f32`,
+    /// never materializing a tree. `max_len` bounds total elements
+    /// (counting what is already in `out`) so a hostile body cannot
+    /// balloon memory past the caller's budget.
+    pub fn f32_array_into(
+        &mut self,
+        out: &mut Vec<f32>,
+        max_len: usize,
+    ) -> Result<(), JsonError> {
+        self.skip_ws();
+        self.require(b'[', "'['")?;
+        self.skip_ws();
+        if self.eat_if(b']') {
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            if out.len() >= max_len {
+                return Err(self.err(JsonErrorKind::TooLarge));
+            }
+            out.push(self.f64()? as f32);
+            self.skip_ws();
+            if self.eat_if(b',') {
+                continue;
+            }
+            self.require(b']', "',' or ']'")?;
+            return Ok(());
+        }
+    }
+
+    /// Stream a JSON array of non-negative integers into `out`.
+    pub fn usize_array_into(
+        &mut self,
+        out: &mut Vec<usize>,
+        max_len: usize,
+    ) -> Result<(), JsonError> {
+        self.skip_ws();
+        self.require(b'[', "'['")?;
+        self.skip_ws();
+        if self.eat_if(b']') {
+            return Ok(());
+        }
+        loop {
+            self.skip_ws();
+            if out.len() >= max_len {
+                return Err(self.err(JsonErrorKind::TooLarge));
+            }
+            let at = self.pos;
+            let v = self.f64()?;
+            if v < 0.0 || v.fract() != 0.0 {
+                return Err(self.err_at(at, JsonErrorKind::BadNumber));
+            }
+            out.push(v as usize);
+            self.skip_ws();
+            if self.eat_if(b',') {
+                continue;
+            }
+            self.require(b']', "',' or ']'")?;
+            return Ok(());
+        }
+    }
+
+    /// Skip one complete value (any type) without building it — how
+    /// schema-aware callers step over unknown object keys.
+    pub fn skip_value(&mut self, depth: usize) -> Result<(), JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err(JsonErrorKind::TooDeep));
+        }
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err(JsonErrorKind::Eof)),
+            Some(b'{') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.eat_if(b'}') {
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.string()?;
+                    self.skip_ws();
+                    self.require(b':', "':'")?;
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    if self.eat_if(b',') {
+                        continue;
+                    }
+                    self.require(b'}', "',' or '}'")?;
+                    return Ok(());
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                self.skip_ws();
+                if self.eat_if(b']') {
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value(depth + 1)?;
+                    self.skip_ws();
+                    if self.eat_if(b',') {
+                        continue;
+                    }
+                    self.require(b']', "',' or ']'")?;
+                    return Ok(());
+                }
+            }
+            Some(b'"') => self.string().map(|_| ()),
+            Some(b't') => self.literal(b"true"),
+            Some(b'f') => self.literal(b"false"),
+            Some(b'n') => self.literal(b"null"),
+            Some(b'-' | b'0'..=b'9') => self.number_slice().map(|_| ()),
+            Some(_) => Err(self.err(JsonErrorKind::Expected("value"))),
+        }
+    }
+
+    /// Parse one complete value into a [`Json`] tree.
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err(JsonErrorKind::TooDeep));
+        }
+        self.skip_ws();
+        match self.peek() {
+            None => Err(self.err(JsonErrorKind::Eof)),
+            Some(b'{') => {
+                self.pos += 1;
+                let mut o = JsonObj::new();
+                self.skip_ws();
+                if self.eat_if(b'}') {
+                    return Ok(Json::Obj(o));
+                }
+                loop {
+                    self.skip_ws();
+                    let k = self.string()?.into_string();
+                    self.skip_ws();
+                    self.require(b':', "':'")?;
+                    let v = self.value(depth + 1)?;
+                    o.insert(k, v);
+                    self.skip_ws();
+                    if self.eat_if(b',') {
+                        continue;
+                    }
+                    self.require(b'}', "',' or '}'")?;
+                    return Ok(Json::Obj(o));
+                }
+            }
+            Some(b'[') => {
+                self.pos += 1;
+                let mut a = Vec::new();
+                self.skip_ws();
+                if self.eat_if(b']') {
+                    return Ok(Json::Arr(a));
+                }
+                loop {
+                    a.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    if self.eat_if(b',') {
+                        continue;
+                    }
+                    self.require(b']', "',' or ']'")?;
+                    return Ok(Json::Arr(a));
+                }
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?.into_string())),
+            Some(b't') => {
+                self.literal(b"true")?;
+                Ok(Json::Bool(true))
+            }
+            Some(b'f') => {
+                self.literal(b"false")?;
+                Ok(Json::Bool(false))
+            }
+            Some(b'n') => {
+                self.literal(b"null")?;
+                Ok(Json::Null)
+            }
+            Some(b'-' | b'0'..=b'9') => Ok(Json::Num(self.f64()?)),
+            Some(_) => Err(self.err(JsonErrorKind::Expected("value"))),
+        }
+    }
+}
+
+/// Parse a complete JSON document from raw bytes with a typed,
+/// position-carrying error.
+pub fn parse_bytes(b: &[u8]) -> Result<Json, JsonError> {
+    let mut lex = Lexer::new(b);
+    let v = lex.value(0)?;
+    lex.skip_ws();
+    if !lex.at_end() {
+        return Err(JsonError { pos: lex.pos(), kind: JsonErrorKind::Trailing });
     }
     Ok(v)
+}
+
+/// Parse a JSON document.
+pub fn parse(text: &str) -> Result<Json> {
+    parse_bytes(text.as_bytes()).map_err(Into::into)
 }
 
 /// Parse a JSON file.
@@ -260,177 +831,6 @@ pub fn parse_file(path: impl AsRef<std::path::Path>) -> Result<Json> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
     parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
-}
-
-struct Parser<'a> {
-    b: &'a [u8],
-    i: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn skip_ws(&mut self) {
-        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
-            self.i += 1;
-        }
-    }
-
-    fn peek(&self) -> Result<u8> {
-        self.b
-            .get(self.i)
-            .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
-    }
-
-    fn eat(&mut self, c: u8) -> Result<()> {
-        if self.peek()? != c {
-            bail!(
-                "expected {:?} at offset {}, found {:?}",
-                c as char,
-                self.i,
-                self.peek()? as char
-            );
-        }
-        self.i += 1;
-        Ok(())
-    }
-
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
-        if self.b[self.i..].starts_with(s.as_bytes()) {
-            self.i += s.len();
-            Ok(v)
-        } else {
-            bail!("invalid literal at offset {}", self.i)
-        }
-    }
-
-    fn value(&mut self) -> Result<Json> {
-        self.skip_ws();
-        match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
-            b'"' => Ok(Json::Str(self.string()?)),
-            b't' => self.lit("true", Json::Bool(true)),
-            b'f' => self.lit("false", Json::Bool(false)),
-            b'n' => self.lit("null", Json::Null),
-            _ => self.number(),
-        }
-    }
-
-    fn object(&mut self) -> Result<Json> {
-        self.eat(b'{')?;
-        let mut o = JsonObj::new();
-        self.skip_ws();
-        if self.peek()? == b'}' {
-            self.i += 1;
-            return Ok(Json::Obj(o));
-        }
-        loop {
-            self.skip_ws();
-            let k = self.string()?;
-            self.skip_ws();
-            self.eat(b':')?;
-            let v = self.value()?;
-            o.insert(k, v);
-            self.skip_ws();
-            match self.peek()? {
-                b',' => self.i += 1,
-                b'}' => {
-                    self.i += 1;
-                    return Ok(Json::Obj(o));
-                }
-                c => bail!("expected ',' or '}}', found {:?}", c as char),
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json> {
-        self.eat(b'[')?;
-        let mut a = Vec::new();
-        self.skip_ws();
-        if self.peek()? == b']' {
-            self.i += 1;
-            return Ok(Json::Arr(a));
-        }
-        loop {
-            a.push(self.value()?);
-            self.skip_ws();
-            match self.peek()? {
-                b',' => self.i += 1,
-                b']' => {
-                    self.i += 1;
-                    return Ok(Json::Arr(a));
-                }
-                c => bail!("expected ',' or ']', found {:?}", c as char),
-            }
-        }
-    }
-
-    fn string(&mut self) -> Result<String> {
-        self.eat(b'"')?;
-        let mut s = String::new();
-        loop {
-            let c = self.peek()?;
-            self.i += 1;
-            match c {
-                b'"' => return Ok(s),
-                b'\\' => {
-                    let e = self.peek()?;
-                    self.i += 1;
-                    match e {
-                        b'"' => s.push('"'),
-                        b'\\' => s.push('\\'),
-                        b'/' => s.push('/'),
-                        b'b' => s.push('\u{8}'),
-                        b'f' => s.push('\u{c}'),
-                        b'n' => s.push('\n'),
-                        b'r' => s.push('\r'),
-                        b't' => s.push('\t'),
-                        b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| anyhow!("truncated \\u escape"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex)?,
-                                16,
-                            )?;
-                            self.i += 4;
-                            // (surrogate pairs unsupported; the manifest is ASCII)
-                            s.push(
-                                char::from_u32(code)
-                                    .ok_or_else(|| anyhow!("bad \\u escape"))?,
-                            );
-                        }
-                        c => bail!("bad escape \\{}", c as char),
-                    }
-                }
-                c => {
-                    // re-sync to char boundary for multi-byte utf-8
-                    let start = self.i - 1;
-                    let mut end = self.i;
-                    while end < self.b.len() && (self.b[end] & 0xC0) == 0x80 {
-                        end += 1;
-                    }
-                    s.push_str(std::str::from_utf8(&self.b[start..end])?);
-                    self.i = end;
-                    let _ = c;
-                }
-            }
-        }
-    }
-
-    fn number(&mut self) -> Result<Json> {
-        let start = self.i;
-        while self.i < self.b.len()
-            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
-        {
-            self.i += 1;
-        }
-        let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>().map_err(|_| {
-            anyhow!("invalid number {s:?} at offset {start}")
-        })?))
-    }
 }
 
 #[cfg(test)]
@@ -482,5 +882,88 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(42.0).to_string_compact(), "42");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn escape_free_strings_borrow_from_input() {
+        let mut lex = Lexer::new(b"\"hello world\"");
+        let s = lex.string().unwrap();
+        assert!(s.is_borrowed());
+        assert_eq!(s.as_str(), "hello world");
+
+        let mut lex = Lexer::new(b"\"a\\nb\"");
+        let s = lex.string().unwrap();
+        assert!(!s.is_borrowed());
+        assert_eq!(s.as_str(), "a\nb");
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let v = parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{1F600}");
+        // Lone surrogate is a typed error at the escape's offset.
+        let err = parse_bytes(b"\"ab\\ud800\"").unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::BadUnicode);
+        assert_eq!(err.pos, 3);
+    }
+
+    #[test]
+    fn errors_carry_positions() {
+        let err = parse_bytes(b"[1, oops]").unwrap_err();
+        assert_eq!(err.pos, 4);
+        assert_eq!(err.kind, JsonErrorKind::Expected("value"));
+
+        let err = parse_bytes(b"{} x").unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::Trailing);
+        assert_eq!(err.pos, 3);
+    }
+
+    #[test]
+    fn f32_array_streams_without_tree() {
+        let mut lex = Lexer::new(b"[1, 2.5, -3e2]");
+        let mut out = Vec::new();
+        lex.f32_array_into(&mut out, 16).unwrap();
+        assert_eq!(out, vec![1.0, 2.5, -300.0]);
+        assert!(lex.at_end());
+
+        // Element budget is enforced mid-stream.
+        let mut lex = Lexer::new(b"[1, 2, 3, 4]");
+        let mut out = Vec::new();
+        let err = lex.f32_array_into(&mut out, 2).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooLarge);
+    }
+
+    #[test]
+    fn skip_value_steps_over_unknown_fields() {
+        let body = br#"{"junk": {"a": [1, {"b": null}]}, "keep": 7}"#;
+        let mut lex = Lexer::new(body);
+        lex.skip_ws();
+        lex.require(b'{', "'{'").unwrap();
+        let key = lex.string().unwrap();
+        assert_eq!(key.as_str(), "junk");
+        lex.skip_ws();
+        lex.require(b':', "':'").unwrap();
+        lex.skip_value(0).unwrap();
+        lex.skip_ws();
+        assert!(lex.eat_if(b','));
+        lex.skip_ws();
+        assert_eq!(lex.string().unwrap().as_str(), "keep");
+    }
+
+    #[test]
+    fn depth_bomb_is_a_typed_error() {
+        let bomb = "[".repeat(MAX_DEPTH * 4);
+        let err = parse_bytes(bomb.as_bytes()).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooDeep);
+    }
+
+    #[test]
+    fn huge_numbers_rejected_not_inf() {
+        for doc in ["1e999", "-1e999", "[1e400]"] {
+            let err = parse_bytes(doc.as_bytes()).unwrap_err();
+            assert_eq!(err.kind, JsonErrorKind::BadNumber, "{doc}");
+        }
+        // Near the edge but representable stays fine.
+        assert_eq!(parse("1e308").unwrap().as_f64().unwrap(), 1e308);
     }
 }

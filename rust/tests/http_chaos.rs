@@ -1,0 +1,641 @@
+//! Network chaos tests for the HTTP/1.1 front end: status-code mapping
+//! for every failure mode of the serving substrate, slowloris and
+//! budget enforcement, injected network faults (`stall_read` /
+//! `slow_write` / `reset`), connection backpressure on the accept
+//! path, and graceful drain.
+//!
+//! The invariant: **every accepted request gets exactly one terminal
+//! HTTP response, or a clean connection teardown** — never a hang,
+//! never two responses, and the worker-side exactly-once accounting
+//! still reconciles when the response path is torn.
+//!
+//! Fault rules are keyed by label process-wide, so each test uses its
+//! own model name and its own HTTP label.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use clusterformer::coordinator::{
+    faults, BatchPolicy, BatcherConfig, HttpConfig, HttpServer, ResilienceConfig, Server,
+    ServerConfig,
+};
+use clusterformer::model::VariantKey;
+use clusterformer::runtime::{BackendKind, ThreadBudget};
+use clusterformer::testing::synthetic::{SyntheticServing, CLASSES};
+use clusterformer::util::json::{self, Json};
+
+fn start_server(synth: &SyntheticServing, resilience: ResilienceConfig) -> Server {
+    Server::start(ServerConfig {
+        artifacts_dir: synth.dir.clone(),
+        targets: vec![(synth.model.clone(), VariantKey::Baseline)],
+        backend: BackendKind::Interp,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            policy: BatchPolicy::Adaptive,
+            queue_cap: 100_000,
+        },
+        threads: ThreadBudget::new(2),
+        resilience,
+    })
+    .expect("synthetic server must start")
+}
+
+fn start_http(server: &Server, cfg: HttpConfig) -> HttpServer {
+    HttpServer::start(server.router.clone(), server.metrics.clone(), cfg)
+        .expect("http front end must start")
+}
+
+/// One-shot raw exchange: write `raw`, read until the server closes.
+/// Returns the full response text (empty string = clean teardown with
+/// no bytes, i.e. an injected reset or torn connection).
+fn raw_roundtrip(addr: SocketAddr, raw: &[u8]) -> std::io::Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    s.write_all(raw)?;
+    let mut text = String::new();
+    s.read_to_string(&mut text)?;
+    Ok(text)
+}
+
+fn parse_response(text: &str) -> (u16, String) {
+    let status = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|t| t.parse::<u16>().ok())
+        .unwrap_or(0);
+    let body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let raw = format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let text = raw_roundtrip(addr, raw.as_bytes()).expect("roundtrip");
+    assert!(!text.is_empty(), "no response to {method} {path}");
+    parse_response(&text)
+}
+
+fn classify_body(target: &str, image: &[f32], extra: &str) -> String {
+    let vals: Vec<String> = image.iter().map(|v| format!("{v}")).collect();
+    format!(
+        "{{\"target\":\"{target}\",\"shape\":[2,2,3],\"image\":[{}]{extra}}}",
+        vals.join(",")
+    )
+}
+
+fn image_values(seed: u64) -> Vec<f32> {
+    SyntheticServing::image(seed).as_f32().expect("synthetic image is f32")
+}
+
+/// Happy path plus the whole 4xx validation surface, exercised through
+/// real sockets, with the counters reconciling at the end.
+#[test]
+fn routes_and_validation_map_to_typed_statuses() {
+    let synth = SyntheticServing::build("httpok");
+    let target = synth.baseline_target();
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httpok-fe".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    // Classification result matches the reference logits bit-for-bit
+    // modulo the decimal round trip.
+    let img = image_values(7);
+    let (status, body) = request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""));
+    assert_eq!(status, 200, "classify failed: {body}");
+    let parsed = json::parse(&body).expect("response body is JSON");
+    let logits = parsed.req_arr("logits").expect("logits present");
+    let want = synth.reference_logits(&SyntheticServing::image(7));
+    assert_eq!(logits.len(), CLASSES);
+    for (got, want) in logits.iter().zip(&want) {
+        let got = got.as_f64().expect("logit is a number");
+        assert!((got - *want as f64).abs() < 1e-4, "logit {got} vs {want}");
+    }
+
+    let (status, body) = request(addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains(&target), "healthz lists targets: {body}");
+
+    let (status, body) = request(addr, "GET", "/stats", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("conns_accepted") && body.contains("variants"), "stats: {body}");
+
+    let (status, _) = request(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    let (status, body) =
+        request(addr, "POST", "/v1/classify", &classify_body("no/such", &img, ""));
+    assert_eq!(status, 404);
+    assert!(body.contains("known"), "unknown-target reply lists known targets: {body}");
+
+    let (status, body) = request(addr, "POST", "/v1/classify", "{\"target\": oops}");
+    assert_eq!(status, 400);
+    assert!(body.contains("offset"), "JSON errors carry a byte offset: {body}");
+
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/v1/classify",
+        &format!("{{\"target\":\"{target}\",\"shape\":[5],\"image\":[1,2,3]}}"),
+    );
+    assert_eq!(status, 400);
+    assert!(body.contains("elements"), "shape mismatch is explained: {body}");
+
+    // POST with no Content-Length is 411, not a hang.
+    let text = raw_roundtrip(
+        addr,
+        b"POST /v1/classify HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n",
+    )
+    .expect("roundtrip");
+    assert_eq!(parse_response(&text).0, 411);
+
+    let h = server.snapshot().http;
+    assert!(h.http_2xx >= 3, "2xx counted: {h:?}");
+    assert!(h.http_4xx >= 4, "4xx counted: {h:?}");
+    assert_eq!(h.http_5xx, 0, "no 5xx in the happy-path test: {h:?}");
+
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// A client that sends a drip of header bytes and then stalls is killed
+/// with 408 once the read deadline lapses — the whole request must
+/// arrive within `read_timeout` from its first byte.
+#[test]
+fn slowloris_is_killed_with_408() {
+    let synth = SyntheticServing::build("httploris");
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig {
+            label: "httploris-fe".to_string(),
+            read_timeout: Duration::from_millis(150),
+            idle_timeout: Duration::from_millis(400),
+            ..HttpConfig::default()
+        },
+    );
+    let mut s = TcpStream::connect(http.addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    s.write_all(b"GET /healthz HTT").expect("partial header");
+    // Stall past the read deadline without closing.
+    let mut text = String::new();
+    s.read_to_string(&mut text).expect("read 408");
+    assert_eq!(parse_response(&text).0, 408, "slowloris reply: {text:?}");
+
+    let h = server.snapshot().http;
+    assert_eq!(h.slow_client_kills, 1, "{h:?}");
+
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Header and body budgets answer 413 instead of buffering without
+/// bound.
+#[test]
+fn oversized_requests_get_413() {
+    let synth = SyntheticServing::build("httpbig");
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig {
+            label: "httpbig-fe".to_string(),
+            max_header_bytes: 512,
+            max_body_bytes: 256,
+            ..HttpConfig::default()
+        },
+    );
+    let addr = http.addr();
+
+    // Declared body over budget: rejected from the Content-Length
+    // header alone, before any body bytes are read.
+    let text = raw_roundtrip(
+        addr,
+        b"POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: 100000\r\nConnection: close\r\n\r\n",
+    )
+    .expect("roundtrip");
+    assert_eq!(parse_response(&text).0, 413);
+
+    // Header section over budget.
+    let raw = format!(
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nX-Pad: {}\r\nConnection: close\r\n\r\n",
+        "a".repeat(2048)
+    );
+    let text = raw_roundtrip(addr, raw.as_bytes()).expect("roundtrip");
+    assert_eq!(parse_response(&text).0, 413);
+
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// A connection dropped mid-request costs nothing: the handler thread
+/// unwinds, the registry entry is removed, and the next request on a
+/// fresh connection is served normally.
+#[test]
+fn torn_request_leaves_server_healthy() {
+    let synth = SyntheticServing::build("httptorn");
+    let target = synth.baseline_target();
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httptorn-fe".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        s.write_all(b"POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: 50\r\n\r\n{\"tar")
+            .expect("torn write");
+        // Drop: the server sees EOF mid-body and unwinds quietly.
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    let img = image_values(3);
+    let (status, _) = request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""));
+    assert_eq!(status, 200);
+    // Both connections have closed (or are about to); nothing leaked.
+    let t0 = Instant::now();
+    while server.snapshot().http.conns_open > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "torn connection leaked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// The `max_conns` bound sheds on the accept path with 503 +
+/// `Retry-After` — a connection beyond the bound never occupies a
+/// handler thread.
+#[test]
+fn connection_cap_sheds_on_accept_path() {
+    let synth = SyntheticServing::build("httpcap");
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httpcap-fe".to_string(), max_conns: 1, ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    // Occupy the single slot with a keep-alive connection; reading the
+    // response guarantees it is registered before the second connect.
+    let mut held = TcpStream::connect(addr).expect("connect");
+    held.set_read_timeout(Some(Duration::from_secs(10))).expect("timeout");
+    held.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").expect("write");
+    let mut buf = [0u8; 4096];
+    let n = held.read(&mut buf).expect("healthz reply");
+    assert!(std::str::from_utf8(&buf[..n]).unwrap_or("").starts_with("HTTP/1.1 200"));
+
+    let text = raw_roundtrip(addr, b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").expect("second");
+    let (status, _) = parse_response(&text);
+    assert_eq!(status, 503, "over-cap connection is shed: {text:?}");
+    assert!(text.contains("Retry-After"), "shed reply is retryable: {text:?}");
+
+    let h = server.snapshot().http;
+    assert_eq!(h.conns_rejected, 1, "{h:?}");
+    assert_eq!(h.conns_open, 1, "{h:?}");
+
+    drop(held);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Admission-control shedding surfaces as 429: under a flood with a
+/// tiny queue bound and a slow worker, every request gets exactly one
+/// response and the mix is 200s plus 429s — nothing hangs, nothing
+/// gets answered twice.
+#[test]
+fn admission_shedding_maps_to_429() {
+    let synth = SyntheticServing::build("httpshed");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("slow:{target}:80ms"));
+    let server = start_server(
+        &synth,
+        ResilienceConfig { queue_bound: 2, ..ResilienceConfig::default() },
+    );
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httpshed-fe".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    let mut joins = Vec::new();
+    for i in 0..16u64 {
+        let target = target.clone();
+        joins.push(std::thread::spawn(move || {
+            let img = image_values(i + 1);
+            request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""))
+        }));
+    }
+    let mut ok = 0usize;
+    let mut shed = 0usize;
+    for j in joins {
+        let (status, body) = j.join().expect("client thread");
+        match status {
+            200 => ok += 1,
+            429 => shed += 1,
+            other => panic!("unexpected status {other}: {body}"),
+        }
+    }
+    assert_eq!(ok + shed, 16, "exactly one response per request");
+    assert!(ok >= 1, "some requests complete under the flood");
+    assert!(shed >= 1, "the tiny queue bound sheds under the flood");
+
+    faults::clear_faults(&target);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// A request whose client deadline expires while the worker is busy
+/// comes back 504 — the deadline propagated into `SubmitOptions` and
+/// the batcher reaped it before dispatch.
+#[test]
+fn expired_deadline_maps_to_504() {
+    let synth = SyntheticServing::build("httplate");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("slow:{target}:60ms"));
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httplate-fe".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    // Occupy the worker: a full batch dispatched and sleeping in the
+    // slow-executor fault by the time the deadline request arrives.
+    let router = server.router.clone();
+    let mut occupy = Vec::new();
+    for i in 0..4u64 {
+        occupy.push(
+            router
+                .submit(&target, SyntheticServing::image(100 + i))
+                .expect("occupying submit")
+                .1,
+        );
+    }
+    std::thread::sleep(Duration::from_millis(25));
+
+    let img = image_values(9);
+    let (status, body) = request(
+        addr,
+        "POST",
+        "/v1/classify",
+        &classify_body(&target, &img, ",\"deadline_ms\":1"),
+    );
+    assert_eq!(status, 504, "expired deadline: {body}");
+
+    for rx in &occupy {
+        let _ = rx.recv_timeout(Duration::from_secs(10));
+    }
+    faults::clear_faults(&target);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// A worker that dies with the request in flight answers 503 ("request
+/// lost", retryable), and once the target is permanently dead, new
+/// submissions answer 503 on the submit path — never a hung connection.
+#[test]
+fn dead_worker_maps_to_503() {
+    let synth = SyntheticServing::build("httpdead");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("panic:{target}:1"));
+    let server = start_server(
+        &synth,
+        ResilienceConfig { max_restarts: 0, ..ResilienceConfig::default() },
+    );
+    let http = start_http(
+        &server,
+        HttpConfig { label: "httpdead-fe".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    let img = image_values(5);
+    let (status, body) =
+        request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""));
+    assert_eq!(status, 503, "in-flight loss is 503: {body}");
+
+    // Restart budget is 0, so the target is now permanently dead.
+    let handle = server.router.handle(&target).expect("target exists");
+    let t0 = Instant::now();
+    while handle.state() != clusterformer::coordinator::router::WorkerState::Dead {
+        assert!(t0.elapsed() < Duration::from_secs(10), "worker never died");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (status, body) =
+        request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""));
+    assert_eq!(status, 503, "dead target is 503 on submit: {body}");
+
+    let h = server.snapshot().http;
+    assert!(h.http_5xx >= 2, "{h:?}");
+
+    faults::clear_faults(&target);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// An injected `reset` tears the connection cleanly where the response
+/// would have been — the client sees EOF, not garbage — and the
+/// worker-side accounting still shows every request executed exactly
+/// once.
+#[test]
+fn injected_reset_is_a_clean_teardown() {
+    let synth = SyntheticServing::build("httprst");
+    let target = synth.baseline_target();
+    let label = "httprst-fe";
+    faults::force_faults(&format!("reset:{label}:2"));
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: label.to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    let mut texts = Vec::new();
+    for i in 0..3u64 {
+        let img = image_values(20 + i);
+        let body = classify_body(&target, &img, "");
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        texts.push(raw_roundtrip(addr, raw.as_bytes()).expect("roundtrip"));
+    }
+    assert_eq!(parse_response(&texts[0]).0, 200, "request 1 served: {:?}", texts[0]);
+    assert!(texts[1].is_empty(), "request 2 sees a clean reset: {:?}", texts[1]);
+    assert_eq!(parse_response(&texts[2]).0, 200, "request 3 served: {:?}", texts[2]);
+
+    // All three executed server-side — the torn response did not lose
+    // or duplicate work.
+    let snap = server.snapshot();
+    let v = snap.per_variant.get(&target).expect("variant stats");
+    assert_eq!(v.requests, 3, "worker accounting reconciles");
+
+    faults::clear_faults(label);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// `stall_read` and `slow_write` injectors add latency on the network
+/// edge without corrupting anything: the request still completes with
+/// a valid 200.
+#[test]
+fn stall_and_slow_write_injectors_add_latency() {
+    let synth = SyntheticServing::build("httpstall");
+    let target = synth.baseline_target();
+    let label = "httpstall-fe";
+    faults::force_faults(&format!("stall_read:{label}:50ms,slow_write:{label}:40ms"));
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: label.to_string(), ..HttpConfig::default() },
+    );
+
+    let img = image_values(11);
+    let t0 = Instant::now();
+    let (status, body) =
+        request(http.addr(), "POST", "/v1/classify", &classify_body(&target, &img, ""));
+    let elapsed = t0.elapsed();
+    assert_eq!(status, 200, "{body}");
+    assert!(
+        elapsed >= Duration::from_millis(60),
+        "injectors add latency (elapsed {elapsed:?})"
+    );
+
+    faults::clear_faults(label);
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Graceful drain: shutdown mid-flight stops accepting but flushes
+/// every in-flight response — zero dropped requests — and afterwards
+/// the port no longer accepts.
+#[test]
+fn graceful_drain_flushes_in_flight() {
+    let synth = SyntheticServing::build("httpdrain");
+    let target = synth.baseline_target();
+    faults::force_faults(&format!("slow:{target}:50ms"));
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig {
+            label: "httpdrain-fe".to_string(),
+            drain: Duration::from_secs(10),
+            ..HttpConfig::default()
+        },
+    );
+    let addr = http.addr();
+
+    let mut joins = Vec::new();
+    for i in 0..4u64 {
+        let target = target.clone();
+        joins.push(std::thread::spawn(move || {
+            let img = image_values(30 + i);
+            request(addr, "POST", "/v1/classify", &classify_body(&target, &img, ""))
+        }));
+    }
+    // Let the requests reach the (slow) worker, then drain under them.
+    std::thread::sleep(Duration::from_millis(25));
+    http.shutdown();
+
+    for j in joins {
+        let (status, body) = j.join().expect("client thread");
+        assert_eq!(status, 200, "in-flight request flushed during drain: {body}");
+    }
+    let h = server.snapshot().http;
+    assert!(h.drain_flushed >= 1, "responses written during drain are counted: {h:?}");
+    assert_eq!(h.conns_open, 0, "drain leaves no connection open: {h:?}");
+
+    // The listener is gone: new connections are refused (or at best
+    // connect to nothing that answers).
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(mut s) => {
+            let _ = s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+            let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+            let mut text = String::new();
+            let n = s.read_to_string(&mut text).unwrap_or(0);
+            assert_eq!(n, 0, "no server behind the drained port: {text:?}");
+        }
+    }
+
+    faults::clear_faults(&target);
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Runs only under `CLUSTERFORMER_FAULTS` mentioning the `envhttp`
+/// label (the CI chaos step): with env-injected network faults live,
+/// every request still gets exactly one response or one clean reset,
+/// and the worker-side accounting reconciles.
+#[test]
+fn env_gated_network_faults_reconcile() {
+    let Some(spec) = faults::env_spec() else { return };
+    if !spec.contains("envhttp") {
+        return;
+    }
+    let synth = SyntheticServing::build("envhttpm");
+    let target = synth.baseline_target();
+    let server = start_server(&synth, ResilienceConfig::default());
+    let http = start_http(
+        &server,
+        HttpConfig { label: "envhttp".to_string(), ..HttpConfig::default() },
+    );
+    let addr = http.addr();
+
+    const N: u64 = 6;
+    let mut answered = 0u64;
+    let mut resets = 0u64;
+    for i in 0..N {
+        let img = image_values(40 + i);
+        let body = classify_body(&target, &img, "");
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        let text = raw_roundtrip(addr, raw.as_bytes()).expect("roundtrip");
+        if text.is_empty() {
+            resets += 1;
+        } else {
+            assert_eq!(parse_response(&text).0, 200, "served under env faults: {text:?}");
+            answered += 1;
+        }
+    }
+    assert_eq!(answered + resets, N, "one terminal outcome per request");
+    if spec.contains("reset:envhttp") {
+        assert!(resets >= 1, "the env reset injector fired");
+    }
+    let snap = server.snapshot();
+    let v = snap.per_variant.get(&target).expect("variant stats");
+    assert_eq!(v.requests, N, "accounting reconciles under env faults");
+
+    http.shutdown();
+    server.shutdown();
+    synth.cleanup();
+}
+
+/// Sanity for the helpers themselves: `Json::obj` bodies we assert
+/// against really are compact JSON.
+#[test]
+fn helper_bodies_are_json() {
+    let j = Json::obj(vec![("error", Json::Str("x".to_string()))]);
+    assert_eq!(j.to_string_compact(), "{\"error\":\"x\"}");
+}

@@ -1,0 +1,169 @@
+//! Malformed-input corpus for the zero-copy JSON lexer: truncated
+//! documents, nesting bombs, invalid UTF-8, non-finite numbers, bad
+//! escapes, and trailing garbage. Every entry must produce a **typed,
+//! position-carrying [`JsonError`]** — never a panic, never a hang,
+//! never `inf`/`NaN` smuggled into the pipeline.
+//!
+//! [`JsonError`]: clusterformer::util::json::JsonError
+
+use clusterformer::util::json::{
+    parse, parse_bytes, Json, JsonError, JsonErrorKind, Lexer, MAX_DEPTH,
+};
+
+fn kind_of(doc: &[u8]) -> JsonError {
+    parse_bytes(doc).expect_err("corpus entry must be rejected")
+}
+
+#[test]
+fn truncated_documents_are_typed_errors() {
+    // (doc, expected kind) — every truncation point in the grammar.
+    let corpus: &[(&[u8], JsonErrorKind)] = &[
+        (b"", JsonErrorKind::Eof),
+        (b"   ", JsonErrorKind::Eof),
+        (b"\"abc", JsonErrorKind::Eof),
+        (b"{", JsonErrorKind::Eof),
+        (b"{\"a\"", JsonErrorKind::Eof),
+        (b"{\"a\":", JsonErrorKind::Eof),
+        (b"{\"a\":1", JsonErrorKind::Eof),
+        (b"[", JsonErrorKind::Eof),
+        (b"[1,", JsonErrorKind::Eof),
+        (b"{\"a\": [1, 2", JsonErrorKind::Eof),
+        (b"\"end with backslash\\", JsonErrorKind::Eof),
+        (b"12.", JsonErrorKind::Expected("fraction digit")),
+        (b"1e", JsonErrorKind::Expected("exponent digit")),
+        (b"1e+", JsonErrorKind::Expected("exponent digit")),
+        (b"-", JsonErrorKind::Expected("digit")),
+        (b"tru", JsonErrorKind::BadLiteral),
+        (b"nul", JsonErrorKind::BadLiteral),
+        (b"falsy", JsonErrorKind::BadLiteral),
+    ];
+    for (doc, want) in corpus {
+        let err = kind_of(doc);
+        assert_eq!(
+            &err.kind,
+            want,
+            "doc {:?} → {err}",
+            String::from_utf8_lossy(doc)
+        );
+        assert!(err.pos <= doc.len(), "offset inside the document: {err}");
+    }
+}
+
+#[test]
+fn depth_bombs_are_bounded_not_a_stack_overflow() {
+    for bomb in [
+        "[".repeat(10_000),
+        "{\"a\":".repeat(10_000),
+        format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1)),
+    ] {
+        let err = kind_of(bomb.as_bytes());
+        assert_eq!(err.kind, JsonErrorKind::TooDeep, "bomb → {err}");
+    }
+    // Exactly at the bound still parses.
+    let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+    assert!(parse_bytes(ok.as_bytes()).is_ok(), "MAX_DEPTH itself is legal");
+}
+
+#[test]
+fn invalid_utf8_is_rejected_with_its_offset() {
+    let err = kind_of(b"\"\xff\xfe\"");
+    assert_eq!(err.kind, JsonErrorKind::BadUtf8);
+    assert_eq!(err.pos, 1, "offset points at the bad byte: {err}");
+    // Same rejection on the slow (escaped) path.
+    let err = kind_of(b"\"a\\n\xff\"");
+    assert_eq!(err.kind, JsonErrorKind::BadUtf8);
+}
+
+#[test]
+fn huge_numbers_never_become_inf() {
+    let four_hundred_digits = format!("1{}", "0".repeat(400));
+    for doc in ["1e999", "-1e309", "2e308", four_hundred_digits.as_str()] {
+        let err = kind_of(doc.as_bytes());
+        assert_eq!(err.kind, JsonErrorKind::BadNumber, "{doc} → {err}");
+        assert_eq!(err.pos, 0, "error anchored at the number start: {err}");
+    }
+    // Large but finite is fine.
+    assert!(parse_bytes(b"1e308").is_ok());
+}
+
+#[test]
+fn bad_escapes_and_control_chars() {
+    let err = kind_of(b"\"a\\q\"");
+    assert_eq!(err.kind, JsonErrorKind::BadEscape);
+    assert_eq!(err.pos, 2, "offset at the backslash: {err}");
+
+    assert_eq!(kind_of(b"\"\\u00\"").kind, JsonErrorKind::BadUnicode);
+    assert_eq!(kind_of(b"\"\\uzzzz\"").kind, JsonErrorKind::BadUnicode);
+    assert_eq!(kind_of(b"\"\\ud800\"").kind, JsonErrorKind::BadUnicode, "lone surrogate");
+    assert_eq!(kind_of(b"\"\\ud800\\u0041\"").kind, JsonErrorKind::BadUnicode);
+
+    let err = kind_of(b"\"a\x01b\"");
+    assert_eq!(err.kind, JsonErrorKind::ControlChar);
+    assert_eq!(err.pos, 2, "offset at the raw control byte: {err}");
+}
+
+#[test]
+fn trailing_garbage_and_strict_grammar() {
+    let err = kind_of(b"{} x");
+    assert_eq!(err.kind, JsonErrorKind::Trailing);
+    assert_eq!(err.pos, 3, "{err}");
+
+    assert_eq!(kind_of(b"1 2").kind, JsonErrorKind::Trailing);
+    assert_eq!(kind_of(b"[1,2] []").kind, JsonErrorKind::Trailing);
+    // Leading zeros are two tokens under the strict grammar.
+    assert_eq!(kind_of(b"01").kind, JsonErrorKind::Trailing);
+
+    assert_eq!(kind_of(b"+1").kind, JsonErrorKind::Expected("value"));
+    assert_eq!(kind_of(b".5").kind, JsonErrorKind::Expected("value"));
+    let err = kind_of(b"[1, oops]");
+    assert_eq!(err.kind, JsonErrorKind::Expected("value"));
+    assert_eq!(err.pos, 4, "{err}");
+}
+
+#[test]
+fn errors_render_with_offsets_through_anyhow() {
+    // The `&str` entry point chains the typed error into `anyhow` with
+    // the offset intact — this is what reaches logs and 400 bodies.
+    let msg = format!("{:#}", parse("{\"a\": }").expect_err("rejected"));
+    assert!(msg.contains("offset"), "rendered error carries the offset: {msg}");
+}
+
+#[test]
+fn streaming_arrays_enforce_budgets_without_panicking() {
+    let mut out = Vec::new();
+    let mut lex = Lexer::new(b"[1,2,3,4,5]");
+    let err = lex
+        .f32_array_into(&mut out, 3)
+        .expect_err("budget of 3 must reject 5 elements");
+    assert_eq!(err.kind, JsonErrorKind::TooLarge);
+
+    // usize arrays reject negatives and fractions (they would alias to
+    // nonsense shapes if truncated silently).
+    for doc in [&b"[-1]"[..], b"[1.5]", b"[1e999]"] {
+        let mut shape = Vec::new();
+        let mut lex = Lexer::new(doc);
+        assert!(
+            lex.usize_array_into(&mut shape, 16).is_err(),
+            "{:?} must be rejected as a usize array",
+            String::from_utf8_lossy(doc)
+        );
+    }
+}
+
+#[test]
+fn well_formed_documents_still_parse() {
+    // The corpus must not have made the lexer paranoid: a normal
+    // document round-trips, and escape-free strings borrow.
+    let doc = b"{\"a\": [1, 2.5, -3e2], \"s\": \"hi\", \"b\": true, \"n\": null}";
+    let v = parse_bytes(doc).expect("well-formed parses");
+    assert_eq!(v.get("s").as_str(), Some("hi"));
+    match v {
+        Json::Obj(_) => {}
+        other => panic!("expected object, got {other:?}"),
+    }
+
+    let mut lex = Lexer::new(b"\"plain\"");
+    assert!(lex.string().expect("parses").is_borrowed());
+    let mut lex = Lexer::new(b"\"esc\\n\"");
+    assert!(!lex.string().expect("parses").is_borrowed());
+}

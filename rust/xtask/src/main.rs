@@ -44,6 +44,8 @@ const HOT_PATH_FILES: &[&str] = &[
     "coordinator/router.rs",
     "coordinator/worker.rs",
     "coordinator/server.rs",
+    "coordinator/http.rs",
+    "coordinator/conn.rs",
 ];
 
 /// The one file allowed to spawn OS threads (the persistent pool).
